@@ -1,0 +1,68 @@
+//! Bring-your-own-AQL: write a query, see the optimized plan, the
+//! partition (paper Fig 1), and the generated accelerator configuration —
+//! then run it on the log corpus.
+//!
+//! ```sh
+//! cargo run --release --example custom_query
+//! ```
+
+use boost::coordinator::Engine;
+use boost::corpus::CorpusSpec;
+use boost::hwcompiler::compile_subgraph;
+use boost::partition::{partition, PartitionMode};
+
+fn main() -> anyhow::Result<()> {
+    // Error spike detection over machine logs.
+    let aql = r#"
+        create view Timestamp as
+          extract regex /\d{4}-\d{2}-\d{2}T\d{2}:\d{2}:\d{2}/ on d.text as ts
+          from Document d;
+
+        create view ErrorWord as
+          extract regex /ERROR|WARN/ on d.text as level from Document d;
+
+        create view Ip as
+          extract regex /\d{1,3}\.\d{1,3}\.\d{1,3}\.\d{1,3}/ on d.text as addr
+          from Document d;
+
+        create view ErrorEvent as
+          select t.ts as ts, e.level as level, i.addr as ip,
+                 CombineSpans(t.ts, i.addr) as line
+          from Timestamp t, ErrorWord e, Ip i
+          where FollowsTok(t.ts, e.level, 0, 3) and Follows(e.level, i.addr, 0, 40)
+          consolidate on line using 'ContainedWithin';
+
+        output view ErrorEvent;
+    "#;
+
+    let engine = Engine::compile_aql(aql)?;
+    println!("== optimized plan ==\n{}", engine.graph().dump());
+
+    let plan = partition(engine.graph(), PartitionMode::SingleSubgraph);
+    println!("== partition (Fig 1) ==");
+    println!("supergraph:\n{}", plan.supergraph.dump());
+    for sg in &plan.subgraphs {
+        println!("subgraph #{} body:\n{}", sg.id, sg.body.dump());
+        let cfg = compile_subgraph(sg)?;
+        println!(
+            "accelerator config: {} machines, geometry {}x{} states, artifact {}",
+            cfg.machines.len(),
+            cfg.geometry.0,
+            cfg.geometry.1,
+            cfg.artifact_key(16384).file_name()
+        );
+        for m in &cfg.machines {
+            println!("  machine for body node %{}: {:?} ({} states)", m.body_node, m.matcher, m.num_states);
+        }
+    }
+
+    let corpus = CorpusSpec::logs(200, 512).generate();
+    let report = engine.run_corpus(&corpus, 2);
+    println!(
+        "\nran {} log docs: {} error events, {:.2} MB/s",
+        report.docs,
+        report.tuples,
+        report.throughput() / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! End-to-end driver (EXPERIMENTS.md E5): the full system on a real small
+//! workload, proving all layers compose —
+//!
+//!   AQL → operator graph → optimizer → maximal-convex partition →
+//!   hardware compile (DFA tables) → AOT Pallas kernel via PJRT →
+//!   multi-threaded communication interface → annotations,
+//!
+//! with a software baseline run for correctness comparison and the
+//! paper-calibrated Eq. 1 estimate for the headline speedup.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use boost::coordinator::{Engine, EngineConfig};
+use boost::corpus::CorpusSpec;
+use boost::partition::{partition, PartitionMode};
+use boost::perfmodel::FpgaModel;
+use boost::runtime::EngineSpec;
+
+fn main() -> anyhow::Result<()> {
+    let q = boost::queries::builtin("t1").unwrap();
+    println!("== {} ({}) ==", q.name, q.title);
+
+    // 1. software baseline + profile
+    let corpus = CorpusSpec::news(400, 2048).generate();
+    let sw = Engine::compile_aql(&q.aql)?;
+    let sw_report = sw.run_corpus(&corpus, 1);
+    let profile = sw.profile();
+    println!(
+        "software:     {:7.1} ms, {:6.2} MB/s, {} tuples, extraction {:.0}%",
+        sw_report.wall.as_secs_f64() * 1e3,
+        sw_report.throughput() / 1e6,
+        sw_report.tuples,
+        profile.fraction_extraction() * 100.0
+    );
+
+    // 2. accelerated run through the real PJRT path (falls back to the
+    //    native engine when artifacts/ is missing)
+    let engine_spec = if std::path::Path::new("artifacts/dfa_m8_s256_b16384.hlo.txt").exists() {
+        EngineSpec::Pjrt {
+            artifacts_dir: "artifacts".into(),
+        }
+    } else {
+        eprintln!("NOTE: artifacts/ missing — using the native package engine");
+        EngineSpec::Native
+    };
+    let hw = Engine::with_config(
+        &q.aql,
+        EngineConfig::accelerated(PartitionMode::MultiSubgraph, engine_spec),
+    )?;
+    let hw_report = hw.run_corpus(&corpus, 4);
+    println!(
+        "accelerated:  {:7.1} ms, {:6.2} MB/s, {} tuples",
+        hw_report.wall.as_secs_f64() * 1e3,
+        hw_report.throughput() / 1e6,
+        hw_report.tuples,
+    );
+    let snap = hw.accel_snapshot().unwrap();
+    println!(
+        "accel detail: {} packages, {:.1} docs/package, {} hit events, modeled FPGA {:.0} MB/s",
+        snap.packages,
+        snap.docs_per_package(),
+        snap.hits,
+        snap.modeled_throughput() / 1e6,
+    );
+
+    // 3. correctness: identical annotation counts
+    assert_eq!(
+        sw_report.tuples, hw_report.tuples,
+        "accelerated path must produce identical annotations"
+    );
+    println!("correctness:  software and accelerated annotation sets agree ({} tuples)", sw_report.tuples);
+
+    // 4. the headline estimate (paper Fig 7 / §5): Eq. 1 with the measured
+    //    software baseline, the measured offload fraction, and the
+    //    paper-calibrated FPGA model.
+    let plan = partition(sw.graph(), PartitionMode::MultiSubgraph);
+    let offloaded: Vec<usize> = plan
+        .subgraphs
+        .iter()
+        .flat_map(|s| s.orig_nodes.iter().copied())
+        .collect();
+    let frac = profile.fraction_of_nodes(&offloaded);
+    let model = FpgaModel::paper();
+    let tp_sw = sw_report.throughput();
+    for (label, size) in [("256 B", 256usize), ("2048 B", 2048)] {
+        let est = model.estimate(tp_sw, frac, size, 16384, 1);
+        println!(
+            "Eq.1 estimate @ {label:>6}: {:6.1} MB/s  ({:.1}x over software)  [paper: T1 up to {}]",
+            est / 1e6,
+            est / tp_sw,
+            if size == 2048 { "16x" } else { "10x" },
+        );
+    }
+    hw.shutdown();
+    Ok(())
+}

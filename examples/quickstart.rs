@@ -1,0 +1,53 @@
+//! Quickstart: compile an AQL query, run it over a few documents, print
+//! the annotations.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use boost::coordinator::Engine;
+use boost::text::Document;
+
+fn main() -> anyhow::Result<()> {
+    // An information-extraction query in the AQL subset: find person
+    // mentions near organization mentions.
+    let aql = r#"
+        create dictionary Orgs as ('IBM', 'IBM Research', 'Columbia University');
+
+        create view Person as
+          extract regex /[A-Z][a-z]+ [A-Z][a-z]+/ on d.text as name
+          from Document d;
+
+        create view Org as
+          extract dictionary 'Orgs' on d.text as match from Document d;
+
+        create view PersonOrg as
+          select p.name as person, o.match as org,
+                 CombineSpans(p.name, o.match) as ctx
+          from Person p, Org o
+          where FollowsTok(p.name, o.match, 0, 5)
+          consolidate on ctx using 'ContainedWithin';
+
+        output view PersonOrg;
+    "#;
+
+    let engine = Engine::compile_aql(aql)?;
+    println!("compiled operator graph:\n{}", engine.graph().dump());
+
+    let docs = [
+        "Laura Chiticariu works at IBM Research in Almaden.",
+        "Eva Sitaridi joined Columbia University last fall; Peter Hofstee stayed at IBM.",
+        "No entities here, just plain text.",
+    ];
+    for (i, text) in docs.iter().enumerate() {
+        let doc = Document::new(i as u64, *text);
+        let out = engine.run_doc(&doc);
+        println!("doc {i}: {:?}", text);
+        for row in &out.views["PersonOrg"] {
+            let person = row[0].as_span().text(text);
+            let org = row[1].as_span().text(text);
+            println!("   person={person:?} org={org:?}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Small-document workload (the paper's Twitter/RSS scenario, §4.2):
+//! 256-byte messages streamed through the accelerated engine, showing the
+//! work-package combining behaviour that Fig 6 quantifies — many small
+//! documents per package, throughput well below the large-document peak.
+//!
+//! ```sh
+//! cargo run --release --example tweet_firehose
+//! ```
+
+use boost::coordinator::{Engine, EngineConfig};
+use boost::corpus::CorpusSpec;
+use boost::partition::PartitionMode;
+use boost::perfmodel::FpgaModel;
+use boost::runtime::EngineSpec;
+
+fn main() -> anyhow::Result<()> {
+    let q = boost::queries::builtin("t3").unwrap(); // brand sentiment
+    println!("== tweet firehose: {} over 256 B messages ==", q.title);
+
+    let model = FpgaModel::paper();
+    for &size in &[128usize, 256, 2048] {
+        let corpus = CorpusSpec::tweets(1200, size).generate();
+        let engine = Engine::with_config(
+            &q.aql,
+            EngineConfig::accelerated(PartitionMode::ExtractOnly, EngineSpec::Native),
+        )?;
+        let report = engine.run_corpus(&corpus, 4);
+        let snap = engine.accel_snapshot().unwrap();
+        println!(
+            "{size:5} B docs: {:6.2} MB/s wall | {} pkgs, {:5.1} docs/pkg | modeled FPGA {:5.0} MB/s (paper-shape: peak/{:.0})",
+            report.throughput() / 1e6,
+            snap.packages,
+            snap.docs_per_package(),
+            model.throughput(size, 16384) / 1e6,
+            model.peak / model.throughput(size, 16384),
+        );
+        engine.shutdown();
+    }
+    println!("\nthe >1000 B combining rule keeps small-doc throughput an order of");
+    println!("magnitude above per-document transfers, but still below the 2 kB peak");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+"""AOT: lower the L2 graph to HLO text artifacts for the rust runtime.
+
+One artifact per (machines, states, block) variant — the menu must match
+``GEOMETRIES``/``BLOCK_SIZES`` in ``rust/src/hwcompiler/mod.rs``. The rust
+runtime loads ``artifacts/dfa_m{M}_s{S}_b{B}.hlo.txt`` via
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+HLO *text* is the interchange format, not ``.serialize()``: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Python runs only here, at build time — never on the request path.
+``make artifacts`` re-runs this only when the python sources change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import extract_package
+
+# Keep in sync with rust/src/hwcompiler/mod.rs (GEOMETRIES, BLOCK_SIZES,
+# STREAMS). The rust side checks artifact presence by file name.
+GEOMETRIES = [(4, 64), (8, 128), (8, 256), (4, 1024)]
+BLOCK_SIZES = [4096, 16384]
+STREAMS = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(machines: int, states: int, block: int) -> str:
+    bytes_spec = jax.ShapeDtypeStruct((STREAMS, block), jnp.int32)
+    tables_spec = jax.ShapeDtypeStruct((machines, states, 256), jnp.int32)
+    accepts_spec = jax.ShapeDtypeStruct((machines, states), jnp.int32)
+    lowered = jax.jit(extract_package).lower(bytes_spec, tables_spec, accepts_spec)
+    return to_hlo_text(lowered)
+
+
+def artifact_name(machines: int, states: int, block: int) -> str:
+    return f"dfa_m{machines}_s{states}_b{block}.hlo.txt"
+
+
+def source_digest() -> str:
+    """Digest of the python sources that determine artifact content."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for rel in ("aot.py", "model.py", "kernels/dfa_scan.py"):
+        with open(os.path.join(here, rel), "rb") as f:
+            h.update(f.read())
+    h.update(jax.__version__.encode())
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    stamp_path = os.path.join(args.out_dir, "SOURCES.sha256")
+    digest = source_digest()
+    expected = [artifact_name(m, s, b) for (m, s) in GEOMETRIES for b in BLOCK_SIZES]
+    if not args.force and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if f.read().strip() == digest and all(
+                os.path.exists(os.path.join(args.out_dir, n)) for n in expected
+            ):
+                print(f"artifacts up to date ({len(expected)} variants)")
+                return 0
+
+    for (machines, states) in GEOMETRIES:
+        for block in BLOCK_SIZES:
+            name = artifact_name(machines, states, block)
+            path = os.path.join(args.out_dir, name)
+            text = lower_variant(machines, states, block)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text) / 1024:.0f} KiB)")
+    with open(stamp_path, "w") as f:
+        f.write(digest)
+    print(f"{len(expected)} artifacts in {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

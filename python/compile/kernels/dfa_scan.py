@@ -1,0 +1,126 @@
+"""L1: the multi-machine DFA byte-scan Pallas kernel.
+
+This is the accelerator datapath of the paper: a table-configured
+multi-pattern matcher streaming document bytes. On the Stratix IV each
+pattern machine was a BRAM-resident state table consuming one character
+per cycle per stream; here the per-byte recurrence is a sequential scan
+carrying the `[machines, streams]` state matrix, with the transition
+tables resident in VMEM.
+
+Layout contract (shared with `rust/src/hwcompiler`):
+
+* ``bytes``   int32[streams, block]   values 0..255; 0 = NUL is the
+  work-package document separator (every table row maps 0 -> START)
+* ``tables``  int32[machines, states, 256]  next-state tables
+  (state 0 = dead, 1 = start)
+* ``accepts`` int32[machines, states]  0/1 accept flags
+* output      int32[machines, streams, block]  state id if the state
+  reached *after* consuming byte [s, i] accepts, else 0
+
+Two kernels:
+
+* :func:`dfa_scan` — the production kernel: ONE grid step, the state
+  matrix vectorized over machines x streams, `lax.scan` along the byte
+  axis. Per-byte work is a 2-D gather from the VMEM-resident tables —
+  on TPU this maps to VPU lanes over the (machines, streams) tile; under
+  interpret=True it executes ~8x fewer sequential loop iterations than
+  the per-machine grid variant (see EXPERIMENTS.md §Perf L1).
+* :func:`dfa_scan_grid` — the per-machine grid variant whose BlockSpecs
+  express the HBM->VMEM tiling a real TPU would use when the combined
+  tables exceed VMEM (one machine's `[states, 256]` table per grid step).
+  Kept as a compile-only reference and cross-checked in pytest.
+
+Pallas is lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU performance is estimated from the
+VMEM footprint in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+START = 1
+
+
+def _dfa_scan_fused_kernel(bytes_ref, table_ref, accept_ref, out_ref):
+    """All machines and streams in one kernel instance.
+
+    bytes_ref:  [streams, block]
+    table_ref:  [machines, states, 256]
+    accept_ref: [machines, states]
+    out_ref:    [machines, streams, block]
+    """
+    machines = table_ref.shape[0]
+    streams = bytes_ref.shape[0]
+
+    table = table_ref[...]  # VMEM-resident for our geometries (<=4 MiB)
+    accept = accept_ref[...]
+    bytes_t = bytes_ref[...].T  # [block, streams]
+
+    m_idx = jnp.arange(machines, dtype=jnp.int32)[:, None]  # [M, 1]
+
+    def step(state, b):
+        # state: [machines, streams]; b: [streams]
+        next_state = table[m_idx, state, b[None, :]]
+        hit = jnp.where(accept[m_idx, next_state] > 0, next_state, 0)
+        return next_state, hit
+
+    init = jnp.full((machines, streams), START, jnp.int32)
+    _, hits = jax.lax.scan(step, init, bytes_t)  # hits: [block, M, streams]
+    out_ref[...] = jnp.transpose(hits, (1, 2, 0))
+
+
+def dfa_scan(bytes_i32, tables, accepts):
+    """Run every machine over the byte block (production kernel).
+
+    Args:
+      bytes_i32: int32[streams, block]
+      tables:    int32[machines, states, 256]
+      accepts:   int32[machines, states]
+
+    Returns:
+      int32[machines, streams, block] hit stream (accepting state or 0).
+    """
+    machines, _, _ = tables.shape
+    streams, block = bytes_i32.shape
+    return pl.pallas_call(
+        _dfa_scan_fused_kernel,
+        out_shape=jax.ShapeDtypeStruct((machines, streams, block), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(bytes_i32, tables, accepts)
+
+
+def _dfa_scan_grid_kernel(bytes_ref, table_ref, accept_ref, out_ref):
+    """One machine (grid step) over all streams — the TPU-tiling variant."""
+    streams = bytes_ref.shape[0]
+    block = bytes_ref.shape[1]
+
+    def step(i, state):
+        b = bytes_ref[:, i]  # [streams]
+        state = table_ref[state, b]
+        hit = jnp.where(accept_ref[state] > 0, state, 0)
+        out_ref[:, i] = hit
+        return state
+
+    jax.lax.fori_loop(0, block, step, jnp.full((streams,), START, jnp.int32))
+
+
+def dfa_scan_grid(bytes_i32, tables, accepts):
+    """Per-machine grid variant (BlockSpec tiling reference; slower under
+    interpret mode — see module docs)."""
+    machines, states, _ = tables.shape
+    streams, block = bytes_i32.shape
+    return pl.pallas_call(
+        _dfa_scan_grid_kernel,
+        grid=(machines,),
+        in_specs=[
+            pl.BlockSpec((streams, block), lambda m: (0, 0)),
+            pl.BlockSpec((None, states, 256), lambda m: (m, 0, 0)),
+            pl.BlockSpec((None, states), lambda m: (m, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, streams, block), lambda m: (m, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((machines, streams, block), jnp.int32),
+        interpret=True,
+    )(bytes_i32, tables, accepts)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the DFA scan kernel.
+
+Same contract as :func:`dfa_scan.dfa_scan`, implemented as a
+``lax.scan`` over byte positions with vectorized machine/stream state.
+This is the correctness reference every kernel change is tested against
+(and the "pure-jnp roofline" baseline for the L1 performance target).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+START = 1
+
+
+def dfa_scan_ref(bytes_i32, tables, accepts):
+    """Reference implementation.
+
+    Args:
+      bytes_i32: int32[streams, block]
+      tables:    int32[machines, states, 256]
+      accepts:   int32[machines, states]
+
+    Returns:
+      int32[machines, streams, block]
+    """
+    machines, _, _ = tables.shape
+    streams, _ = bytes_i32.shape
+
+    def step(state, b):
+        # state: [machines, streams]; b: [streams]
+        # next[m, s] = tables[m, state[m, s], b[s]]
+        rows = jnp.take_along_axis(tables, state[:, :, None], axis=1)  # [M, streams, 256]
+        cols = jnp.broadcast_to(b[None, :, None].astype(jnp.int32), (machines, streams, 1))
+        next_state = jnp.take_along_axis(rows, cols, axis=2)[:, :, 0]
+        acc = jnp.take_along_axis(accepts, next_state, axis=1)
+        hit = jnp.where(acc > 0, next_state, 0)
+        return next_state, hit
+
+    init = jnp.full((machines, streams), START, jnp.int32)
+    _, hits = jax.lax.scan(step, init, bytes_i32.T)  # scan over block axis
+    # hits: [block, machines, streams] -> [machines, streams, block]
+    return jnp.transpose(hits, (1, 2, 0))
+
+
+def dfa_scan_py(bytes_rows, table, accept):
+    """Plain-python single-machine scalar reference (for tiny cases and
+    debugging; exercised by the pytest suite against both jnp paths).
+
+    Args:
+      bytes_rows: list[list[int]]  per-stream byte values
+      table: list of S rows x 256 next-state entries
+      accept: list[int] of length S
+
+    Returns:
+      list[list[int]] hit stream per stream row.
+    """
+    out = []
+    for row in bytes_rows:
+        state = START
+        hits = []
+        for b in row:
+            state = table[state][b]
+            hits.append(state if accept[state] else 0)
+        out.append(hits)
+    return out

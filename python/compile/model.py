@@ -1,0 +1,39 @@
+"""L2: the accelerated-subgraph compute graph.
+
+The JAX function the rust runtime executes per work package: the Pallas
+DFA scan (L1) plus the reductions the coordinator wants alongside the raw
+hit stream — per-(machine, stream) hit counts, so the post-stage can skip
+machines/streams with no matches without touching the hit tensor.
+
+This is the whole of the paper's on-FPGA dataflow: extraction machines in
+parallel over the byte streams, followed by lightweight aggregation; the
+relational operators of an offloaded subgraph run in the accelerator
+service's post-stage at modeled hardware rates (see
+``rust/src/accel``/``rust/src/perfmodel``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.dfa_scan import dfa_scan
+
+
+def extract_package(bytes_i32, tables, accepts):
+    """Process one work package.
+
+    Args:
+      bytes_i32: int32[streams, block] byte values (0 = separator/padding)
+      tables:    int32[machines, states, 256]
+      accepts:   int32[machines, states]
+
+    Returns:
+      (hits, counts):
+        hits   int32[machines, streams, block] — accepting state or 0 at
+               every byte position (the FPGA's match-event stream);
+        counts int32[machines, streams] — number of hits, so the host can
+               skip empty (machine, stream) pairs without reading `hits`.
+    """
+    hits = dfa_scan(bytes_i32, tables, accepts)
+    counts = jnp.sum((hits > 0).astype(jnp.int32), axis=-1)
+    return hits, counts

@@ -1,0 +1,204 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas kernel (interpret mode), the pure-jnp scan reference, and a
+scalar python reference must agree bit-for-bit on the hit stream for
+arbitrary valid tables/inputs. Hypothesis sweeps shapes, table contents
+and byte streams.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dfa_scan import dfa_scan, START
+from compile.kernels.ref import dfa_scan_ref, dfa_scan_py
+
+
+def build_search_table(pattern: bytes, states_pad: int = 0):
+    """Dense search-DFA table for a literal pattern (start-closure folded):
+    mirrors the rust engine's Search DFA for a literal, written
+    independently so the test is not circular.
+    """
+    n = len(pattern)
+    S = n + 2  # dead, start, one per prefix consumed
+    if states_pad:
+        S = max(S, states_pad)
+    table = np.zeros((S, 256), np.int32)
+
+    def next_state(progress: int, byte: int) -> int:
+        # longest suffix of consumed+byte that is a prefix of pattern
+        consumed = pattern[:progress] + bytes([byte])
+        for k in range(min(len(consumed), n), -1, -1):
+            if k <= len(consumed) and consumed[-k:] == pattern[:k] and k <= n:
+                if k == 0:
+                    return 1
+                return 1 + k
+        return 1
+
+    for progress in range(n + 1):
+        s = 1 + progress
+        for b in range(1, 256):
+            table[s, b] = next_state(progress, b)
+    table[:, 0] = START  # NUL separator resets every state
+    table[0, 1:] = 0  # dead absorbs (unused for search tables)
+    table[0, 0] = START
+    accept = np.zeros(S, np.int32)
+    accept[1 + n] = 1
+    return table, accept
+
+
+def run_all(bytes_np, tables_np, accepts_np):
+    b = jnp.asarray(bytes_np, jnp.int32)
+    t = jnp.asarray(tables_np, jnp.int32)
+    a = jnp.asarray(accepts_np, jnp.int32)
+    k = np.asarray(dfa_scan(b, t, a))
+    r = np.asarray(dfa_scan_ref(b, t, a))
+    return k, r
+
+
+class TestLiteralPattern:
+    def test_simple_hits(self):
+        table, accept = build_search_table(b"ab")
+        text = b"xxabyyab"
+        bts = np.zeros((1, len(text)), np.int32)
+        bts[0] = np.frombuffer(text, np.uint8)
+        k, r = run_all(bts, table[None], accept[None])
+        assert (k == r).all()
+        ends = np.nonzero(k[0, 0])[0] + 1
+        assert list(ends) == [4, 8]
+
+    def test_nul_separator_blocks_match(self):
+        table, accept = build_search_table(b"ab")
+        text = b"a\x00b"
+        bts = np.frombuffer(text, np.uint8).astype(np.int32)[None, :]
+        k, _ = run_all(bts, table[None], accept[None])
+        assert (k == 0).all()
+
+    def test_multi_stream_independent(self):
+        table, accept = build_search_table(b"ab")
+        bts = np.zeros((4, 8), np.int32)
+        bts[0, :2] = [ord("a"), ord("b")]
+        bts[2, 3:5] = [ord("a"), ord("b")]
+        k, r = run_all(bts, table[None], accept[None])
+        assert (k == r).all()
+        assert k[0, 0, 1] > 0
+        assert k[0, 1].sum() == 0
+        assert k[0, 2, 4] > 0
+        assert k[0, 3].sum() == 0
+
+    def test_multi_machine_parallel(self):
+        t1, a1 = build_search_table(b"ab", states_pad=8)
+        t2, a2 = build_search_table(b"ba", states_pad=8)
+        tables = np.stack([t1, t2])
+        accepts = np.stack([a1, a2])
+        text = b"abba"
+        bts = np.frombuffer(text, np.uint8).astype(np.int32)[None, :]
+        k, r = run_all(bts, tables, accepts)
+        assert (k == r).all()
+        assert list(np.nonzero(k[0, 0])[0] + 1) == [2]  # 'ab' ends at 2
+        assert list(np.nonzero(k[1, 0])[0] + 1) == [4]  # 'ba' ends at 4
+
+    def test_padding_rows_inert(self):
+        table, accept = build_search_table(b"ab", states_pad=64)
+        text = b"abab"
+        bts = np.frombuffer(text, np.uint8).astype(np.int32)[None, :]
+        k, r = run_all(bts, table[None], accept[None])
+        assert (k == r).all()
+        assert (np.nonzero(k[0, 0])[0] + 1).tolist() == [2, 4]
+
+
+@st.composite
+def random_case(draw):
+    machines = draw(st.integers(1, 3))
+    states = draw(st.integers(2, 12))
+    streams = draw(st.integers(1, 4))
+    block = draw(st.integers(1, 64))
+    # valid random tables: every entry is a valid state id; NUL column
+    # resets to START per the layout contract
+    table = draw(
+        st.lists(
+            st.lists(st.integers(0, states - 1), min_size=256, max_size=256),
+            min_size=machines * states,
+            max_size=machines * states,
+        )
+    )
+    tables = np.array(table, np.int32).reshape(machines, states, 256)
+    tables[:, :, 0] = START
+    accepts = np.array(
+        draw(
+            st.lists(
+                st.integers(0, 1),
+                min_size=machines * states,
+                max_size=machines * states,
+            )
+        ),
+        np.int32,
+    ).reshape(machines, states)
+    bts = np.array(
+        draw(
+            st.lists(
+                st.integers(0, 255),
+                min_size=streams * block,
+                max_size=streams * block,
+            )
+        ),
+        np.int32,
+    ).reshape(streams, block)
+    return bts, tables, accepts
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_case())
+def test_kernel_equals_ref_random(case):
+    bts, tables, accepts = case
+    k, r = run_all(bts, tables, accepts)
+    assert (k == r).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_case())
+def test_fused_equals_grid_variant(case):
+    """The production (fused) kernel and the TPU-tiling grid variant must
+    agree bit-for-bit."""
+    from compile.kernels.dfa_scan import dfa_scan_grid
+
+    bts, tables, accepts = case
+    b = jnp.asarray(bts, jnp.int32)
+    t = jnp.asarray(tables, jnp.int32)
+    a = jnp.asarray(accepts, jnp.int32)
+    fused = np.asarray(dfa_scan(b, t, a))
+    grid = np.asarray(dfa_scan_grid(b, t, a))
+    assert (fused == grid).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(random_case())
+def test_kernel_equals_scalar_py(case):
+    bts, tables, accepts = case
+    k, _ = run_all(bts, tables, accepts)
+    for m in range(tables.shape[0]):
+        py = dfa_scan_py(bts.tolist(), tables[m].tolist(), accepts[m].tolist())
+        assert (k[m] == np.array(py, np.int32)).all()
+
+
+class TestShapes:
+    @pytest.mark.parametrize("machines,states", [(4, 64), (8, 128), (8, 256)])
+    def test_artifact_geometries(self, machines, states):
+        # every artifact geometry must run through the kernel
+        tables = np.zeros((machines, states, 256), np.int32)
+        tables[:, :, :] = START
+        tables[:, :, 0] = START
+        accepts = np.zeros((machines, states), np.int32)
+        bts = np.zeros((4, 128), np.int32)
+        k, r = run_all(bts, tables, accepts)
+        assert k.shape == (machines, 4, 128)
+        assert (k == r).all()
+
+    def test_hits_dtype_and_range(self):
+        table, accept = build_search_table(b"q")
+        bts = np.full((2, 32), ord("q"), np.int32)
+        k, _ = run_all(bts, table[None], accept[None])
+        assert k.dtype == np.int32
+        assert k.max() < table.shape[0]
+        assert (k >= 0).all()

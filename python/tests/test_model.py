@@ -1,0 +1,34 @@
+"""L2 model tests: the extract_package graph (kernel + count reduction)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.model import extract_package
+from tests.test_kernel import build_search_table
+
+
+def test_counts_match_hits():
+    table, accept = build_search_table(b"ab")
+    text = b"ababab"
+    bts = np.zeros((4, 16), np.int32)
+    bts[0, : len(text)] = np.frombuffer(text, np.uint8)
+    bts[3, : len(text)] = np.frombuffer(text, np.uint8)
+    hits, counts = extract_package(
+        jnp.asarray(bts), jnp.asarray(table[None]), jnp.asarray(accept[None])
+    )
+    hits, counts = np.asarray(hits), np.asarray(counts)
+    assert counts.shape == (1, 4)
+    assert counts[0, 0] == 3
+    assert counts[0, 1] == 0
+    assert counts[0, 3] == 3
+    assert (counts == (hits > 0).sum(-1)).all()
+
+
+def test_empty_package():
+    table, accept = build_search_table(b"xy")
+    bts = np.zeros((4, 8), np.int32)
+    hits, counts = extract_package(
+        jnp.asarray(bts), jnp.asarray(table[None]), jnp.asarray(accept[None])
+    )
+    assert np.asarray(hits).sum() == 0
+    assert np.asarray(counts).sum() == 0

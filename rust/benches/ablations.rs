@@ -1,0 +1,156 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! A1. work-package combining (the paper's >1000 B rule) vs one package
+//!     per document — the mechanism behind Fig 6's small-document penalty;
+//! A2. package block size (4096 vs 16384 bytes per stream), measured;
+//! A3. number of parallel hardware streams (the paper fixes 4);
+//! A4. multi-subgraph accounting: optimistic (paper's Fig 7 assumption,
+//!     one pass) vs pessimistic (one accelerator pass per subgraph).
+
+use std::sync::Arc;
+
+use boost::accel::{AccelOptions, AccelService};
+use boost::bench::{mbps, speedup, Table};
+use boost::coordinator::Engine;
+use boost::corpus::CorpusSpec;
+use boost::hwcompiler::compile_subgraph;
+use boost::partition::{partition, PartitionMode};
+use boost::perfmodel::FpgaModel;
+use boost::runtime::EngineSpec;
+use boost::text::TokenIndex;
+
+fn main() {
+    a1_combining();
+    a2_block_size();
+    a3_streams();
+    a4_multi_subgraph_accounting();
+}
+
+fn a1_combining() {
+    let m = FpgaModel::paper();
+    let mut t = Table::new(
+        "A1 — package combining vs per-document packages (modeled, MB/s)",
+        &["doc B", "combined", "uncombined", "gain"],
+    );
+    for &size in &[128usize, 256, 512, 1024, 2048, 4096] {
+        let c = m.throughput(size, 16384);
+        let u = m.throughput_uncombined(size);
+        t.row(&[
+            size.to_string(),
+            mbps(c),
+            mbps(u),
+            speedup(c / u),
+        ]);
+    }
+    t.print();
+    println!("  the >1000 B combining rule matters most for small documents");
+}
+
+fn a2_block_size() {
+    let q = boost::queries::builtin("t1").unwrap();
+    let g = boost::optimizer::optimize(&boost::aql::compile(&q.aql).unwrap());
+    let plan = partition(&g, PartitionMode::ExtractOnly);
+    let cfg = compile_subgraph(&plan.subgraphs[0]).unwrap();
+    let corpus = CorpusSpec::news(256, 1024).generate();
+
+    let mut t = Table::new(
+        "A2 — package block size (native engine, 256 docs x 1 KiB)",
+        &["block", "wall ms", "pkgs", "docs/pkg", "measured MB/s"],
+    );
+    for &block in boost::hwcompiler::BLOCK_SIZES {
+        let service = AccelService::start(
+            vec![cfg.clone()],
+            EngineSpec::Native,
+            AccelOptions {
+                block,
+                ..Default::default()
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= corpus.docs.len() {
+                        break;
+                    }
+                    let rx = service.submit(
+                        0,
+                        corpus.docs[i].clone(),
+                        Arc::new(TokenIndex::default()),
+                        vec![],
+                    );
+                    rx.recv().unwrap().unwrap();
+                });
+            }
+        });
+        let wall = t0.elapsed();
+        let snap = service.metrics().snapshot();
+        service.shutdown();
+        t.row(&[
+            block.to_string(),
+            format!("{:.1}", wall.as_secs_f64() * 1e3),
+            snap.packages.to_string(),
+            format!("{:.1}", snap.docs_per_package()),
+            mbps(corpus.total_bytes() as f64 / wall.as_secs_f64()),
+        ]);
+    }
+    t.print();
+}
+
+fn a3_streams() {
+    let mut t = Table::new(
+        "A3 — parallel hardware streams (modeled peak-constrained, 2 KiB docs)",
+        &["streams", "raw GB/s", "tp MB/s"],
+    );
+    for &streams in &[1usize, 2, 4, 8] {
+        let m = FpgaModel {
+            bw_raw: 0.25e9 * streams as f64, // 250 MHz x 1 B/cycle/stream
+            peak: (0.125e9 * streams as f64).min(2.5e9), // interface: raw/2
+            ..FpgaModel::paper()
+        };
+        t.row(&[
+            streams.to_string(),
+            format!("{:.2}", m.bw_raw / 1e9),
+            mbps(m.throughput(2048, 16384)),
+        ]);
+    }
+    t.print();
+    println!("  the paper's 4 streams saturate the measured 500 MB/s interface ceiling");
+}
+
+fn a4_multi_subgraph_accounting() {
+    let model = FpgaModel::paper();
+    let q = boost::queries::builtin("t5").unwrap();
+    let engine = Engine::compile_aql(&q.aql).expect("compile");
+    let corpus = CorpusSpec::news(200, 2048).generate();
+    let r = engine.run_corpus(&corpus, 1);
+    let tp_sw = r.throughput();
+    let profile = engine.profile();
+    let plan = partition(engine.graph(), PartitionMode::MultiSubgraph);
+    let offloaded: Vec<usize> = plan
+        .subgraphs
+        .iter()
+        .flat_map(|s| s.orig_nodes.iter().copied())
+        .collect();
+    let frac = profile.fraction_of_nodes(&offloaded);
+    let subgraphs = plan.subgraphs.len();
+
+    let mut t = Table::new(
+        "A4 — T5 multi-subgraph: optimistic vs pessimistic pass accounting",
+        &["accounting", "passes", "x2048B"],
+    );
+    t.row(&[
+        "optimistic (paper Fig 7)".into(),
+        "1".into(),
+        speedup(model.estimate(tp_sw, frac, 2048, 16384, 1) / tp_sw),
+    ]);
+    t.row(&[
+        "pessimistic (1/subgraph)".into(),
+        subgraphs.to_string(),
+        speedup(model.estimate(tp_sw, frac, 2048, 16384, subgraphs) / tp_sw),
+    ]);
+    t.print();
+    println!("  the paper notes its multi-subgraph estimate ignores the extra communication");
+}

@@ -1,0 +1,67 @@
+//! E4+E5 / paper Fig 7 and the headline claim: estimated overall system
+//! throughput via Eq. (1) for the three offload scenarios, at 256 B and
+//! 2048 B documents.
+//!
+//! `tp_SW` is this testbed's measured software throughput; `rt_SW` comes
+//! from the measured per-operator profile and the partition plan (exactly
+//! the paper's §5 method); `tp_HW` comes from the calibrated FPGA model.
+//! The reported numbers are *speedups over software*, the quantity the
+//! paper's bars convey. Paper: T1 ×10 at 256 B, ×16 at 2 kB (multi-
+//! subgraph); T5 gains little from extract-only but ~×3 from multiple
+//! subgraphs.
+
+use boost::bench::{speedup, Table};
+use boost::coordinator::Engine;
+use boost::corpus::CorpusSpec;
+use boost::partition::{partition, PartitionMode};
+use boost::perfmodel::FpgaModel;
+
+fn main() {
+    let model = FpgaModel::paper();
+    let block = 16384usize;
+
+    let mut table = Table::new(
+        "Fig 7 — Eq.1 estimated speedup over software (per query, per scenario)",
+        &[
+            "query", "sw MB/s", "scenario", "offload%", "x256B", "x2048B",
+        ],
+    );
+
+    for q in boost::queries::all() {
+        // software baseline + profile on the optimized graph
+        let engine = Engine::compile_aql(&q.aql).expect("compile");
+        let corpus = CorpusSpec::news(250, 2048).generate();
+        let report = engine.run_corpus(&corpus, 1);
+        let tp_sw = report.throughput();
+        let profile = engine.profile();
+
+        let g = engine.graph().clone();
+        for mode in [
+            PartitionMode::ExtractOnly,
+            PartitionMode::SingleSubgraph,
+            PartitionMode::MultiSubgraph,
+        ] {
+            let plan = partition(&g, mode);
+            let offloaded: Vec<usize> = plan
+                .subgraphs
+                .iter()
+                .flat_map(|s| s.orig_nodes.iter().copied())
+                .collect();
+            let frac = profile.fraction_of_nodes(&offloaded);
+            let est = |size: usize| -> f64 {
+                model.estimate(tp_sw, frac, size, block, 1) / tp_sw
+            };
+            table.row(&[
+                q.name.to_string(),
+                format!("{:.1}", tp_sw / 1e6),
+                mode.name().to_string(),
+                format!("{:.1}", frac * 100.0),
+                speedup(est(256)),
+                speedup(est(2048)),
+            ]);
+        }
+    }
+    table.print();
+    println!("\npaper claims: T1 up to 4.8x (extract-only), ~10x at 256 B and ~16x at 2 kB");
+    println!("              (multi-subgraph); T5 limited until multi-subgraph (~3x)");
+}

@@ -1,0 +1,201 @@
+//! Layer-level microbenchmarks — the profiling substrate for the §Perf
+//! pass in EXPERIMENTS.md: regex engine scan rate, dictionary scan rate,
+//! package engine latency (native vs PJRT), packing rate, consolidation.
+
+use boost::bench::{mbps, time_median, Table};
+use boost::corpus::CorpusSpec;
+use boost::dict::{CaseMode, Dictionary};
+use boost::hwcompiler::{compile_subgraph, STREAMS};
+use boost::partition::{partition, PartitionMode};
+use boost::runtime::{EngineSpec, PackageEngine, PackedPackage};
+use boost::text::span::{consolidate, ConsolidatePolicy};
+use boost::text::Span;
+
+fn big_text(bytes: usize) -> String {
+    let c = CorpusSpec::news(1, bytes).generate();
+    c.docs[0].text.to_string()
+}
+
+fn main() {
+    regex_scan();
+    dict_scan();
+    package_engines();
+    packing_rate();
+    consolidate_rate();
+}
+
+fn regex_scan() {
+    let text = big_text(1 << 20);
+    let mut t = Table::new(
+        "regex engine — software scan rate over 1 MiB of news text",
+        &["pattern", "matches", "MB/s"],
+    );
+    for pat in [
+        r"[A-Z][a-z]+ [A-Z][a-z]+",
+        r"\d{3}-\d{4}",
+        r"[a-z0-9_]+@[a-z0-9]+\.[a-z]{2,4}",
+        r"\$\d+(\.\d+)? million",
+        r"[A-Z][A-Z0-9]{1,4}",
+        r"http:\/\/[a-z0-9\.\/\-]+",
+    ] {
+        let re = boost::regex::compile(pat, false).unwrap();
+        let mut found = 0usize;
+        let d = time_median(
+            || {
+                found = re.find_all(&text).len();
+            },
+            1,
+            5,
+        );
+        t.row(&[
+            format!("/{pat}/"),
+            found.to_string(),
+            mbps(text.len() as f64 / d.as_secs_f64()),
+        ]);
+    }
+    t.print();
+}
+
+fn dict_scan() {
+    let text = big_text(1 << 20);
+    let mut t = Table::new(
+        "dictionary engine — Aho-Corasick scan rate over 1 MiB",
+        &["dictionary", "entries", "matches", "MB/s"],
+    );
+    for (name, pool, case) in [
+        ("orgs", boost::corpus::pools::ORGS, CaseMode::Insensitive),
+        ("locations", boost::corpus::pools::LOCATIONS, CaseMode::Insensitive),
+        ("sentiment", boost::corpus::pools::SENTIMENT, CaseMode::Exact),
+    ] {
+        let d = Dictionary::new(name, pool.iter().map(|s| s.to_string()).collect(), case);
+        let ac = d.compile();
+        let mut found = 0usize;
+        let dur = time_median(
+            || {
+                found = ac.find_token_matches(text.as_bytes()).len();
+            },
+            1,
+            5,
+        );
+        t.row(&[
+            name.to_string(),
+            d.entries.len().to_string(),
+            found.to_string(),
+            mbps(text.len() as f64 / dur.as_secs_f64()),
+        ]);
+    }
+    t.print();
+}
+
+fn package_engines() {
+    let q = boost::queries::builtin("t1").unwrap();
+    let g = boost::optimizer::optimize(&boost::aql::compile(&q.aql).unwrap());
+    let plan = partition(&g, PartitionMode::ExtractOnly);
+    let cfg = compile_subgraph(&plan.subgraphs[0]).unwrap();
+    let (tables, accepts) = cfg.pack_tables();
+
+    let mut t = Table::new(
+        "package engine — per-package latency (T1 extraction config, full block)",
+        &["engine", "block", "latency ms", "MB/s"],
+    );
+    for &block in boost::hwcompiler::BLOCK_SIZES {
+        let corpus = CorpusSpec::news(STREAMS, block).generate();
+        let mut bytes = vec![0i32; STREAMS * block];
+        for (s, doc) in corpus.docs.iter().enumerate() {
+            for (i, b) in doc.text.bytes().enumerate() {
+                bytes[s * block + i] = b as i32;
+            }
+        }
+        let pkg = PackedPackage {
+            bytes,
+            block,
+            tables: std::sync::Arc::new(tables.clone()),
+            accepts: std::sync::Arc::new(accepts.clone()),
+            machines: cfg.geometry.0,
+            states: cfg.geometry.1,
+        };
+        let key = cfg.artifact_key(block);
+        let specs: Vec<EngineSpec> = if std::path::Path::new("artifacts").exists() {
+            vec![
+                EngineSpec::Native,
+                EngineSpec::Pjrt {
+                    artifacts_dir: "artifacts".into(),
+                },
+            ]
+        } else {
+            vec![EngineSpec::Native]
+        };
+        for spec in specs {
+            let engine = spec.build().unwrap();
+            // warm the executable cache before timing
+            engine.run(key, &pkg).unwrap();
+            let d = time_median(
+                || {
+                    engine.run(key, &pkg).unwrap();
+                },
+                1,
+                5,
+            );
+            t.row(&[
+                spec.name().to_string(),
+                block.to_string(),
+                format!("{:.2}", d.as_secs_f64() * 1e3),
+                mbps((STREAMS * block) as f64 / d.as_secs_f64()),
+            ]);
+        }
+    }
+    t.print();
+}
+
+fn packing_rate() {
+    let corpus = CorpusSpec::tweets(4096, 256).generate();
+    let refs: Vec<&boost::text::Document> = corpus.docs.iter().collect();
+    let mut pkgs = 0usize;
+    let d = time_median(
+        || {
+            let (p, _) = boost::accel::pack_group(&refs, 16384);
+            pkgs = p.len();
+        },
+        1,
+        5,
+    );
+    let mut t = Table::new("work-package packing", &["docs", "pkgs", "docs/s"]);
+    t.row(&[
+        corpus.len().to_string(),
+        pkgs.to_string(),
+        format!("{:.0}", corpus.len() as f64 / d.as_secs_f64()),
+    ]);
+    t.print();
+}
+
+fn consolidate_rate() {
+    use boost::util::Prng;
+    let mut rng = Prng::new(5);
+    let spans: Vec<Span> = (0..10_000)
+        .map(|_| {
+            let b = rng.below(100_000) as u32;
+            Span::new(b, b + rng.range(1, 60) as u32)
+        })
+        .collect();
+    let mut t = Table::new("consolidation — 10k spans", &["policy", "kept", "ms"]);
+    for policy in [
+        ConsolidatePolicy::ContainedWithin,
+        ConsolidatePolicy::ExactMatch,
+        ConsolidatePolicy::LeftToRight,
+    ] {
+        let mut kept = 0usize;
+        let d = time_median(
+            || {
+                kept = consolidate(&spans, policy).len();
+            },
+            1,
+            5,
+        );
+        t.row(&[
+            policy.name().to_string(),
+            kept.to_string(),
+            format!("{:.2}", d.as_secs_f64() * 1e3),
+        ]);
+    }
+    t.print();
+}

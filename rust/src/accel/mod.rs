@@ -1,0 +1,635 @@
+//! The multi-threaded HW/SW communication interface (paper Fig 3).
+//!
+//! SystemT worker threads execute the supergraph document-per-thread; when
+//! one reaches a `SubgraphExec` operator it *submits* the document to the
+//! dedicated **communication thread** and sleeps on a reply channel. The
+//! communication thread drains pending submissions, combines them into a
+//! **work package** (four parallel byte streams, documents separated by
+//! NUL, per-document records), ships the package to the accelerator
+//! ([`crate::runtime::PackageEngine`] — the PJRT-executed Pallas kernel),
+//! reconstructs spans from the returned hit stream, evaluates the
+//! subgraph's relational body, and wakes the workers whose documents
+//! completed — exactly the paper's "status register + wake up the software
+//! threads that belong to this work package" protocol.
+
+pub mod packing;
+
+pub use packing::{pack_group, DocSlot, WorkPackage};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::aog::Tuple;
+use crate::exec::{Executor, Profiler, SubgraphRunner};
+use crate::hwcompiler::{AccelConfig, MatcherRef, BLOCK_SIZES};
+use crate::metrics::AccelMetrics;
+use crate::perfmodel::FpgaModel;
+use crate::runtime::{EngineSpec, PackageEngine, PackedPackage};
+use crate::text::{Document, TokenIndex};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct AccelOptions {
+    /// Maximum bytes per stream per package; must be one of
+    /// [`crate::hwcompiler::BLOCK_SIZES`].
+    pub block: usize,
+    /// Pick the smallest compiled block variant that fits each batch
+    /// (§Perf L3: small batches then scan a 4 KiB block instead of
+    /// 16 KiB). Disable to pin `block` for experiments.
+    pub adaptive_block: bool,
+    /// Dispatch as soon as this many payload bytes are pending (the
+    /// paper's ">1000 bytes" combining rule). The queue also flushes when
+    /// it drains, so latency stays bounded.
+    pub combine_min_bytes: usize,
+    /// Timing model used for the modeled-throughput metrics.
+    pub model: FpgaModel,
+}
+
+impl Default for AccelOptions {
+    fn default() -> Self {
+        AccelOptions {
+            block: 16384,
+            adaptive_block: true,
+            combine_min_bytes: 1000,
+            model: FpgaModel::paper(),
+        }
+    }
+}
+
+/// One queued request.
+struct Submission {
+    subgraph_id: usize,
+    doc: Document,
+    tokens: Arc<TokenIndex>,
+    ext: Vec<Vec<Tuple>>,
+    reply: Sender<Result<Arc<Vec<Vec<Tuple>>>, String>>,
+}
+
+/// A subgraph's pre-packed state, built once at service start.
+struct Prepared {
+    config: AccelConfig,
+    tables: Arc<Vec<i32>>,
+    accepts: Arc<Vec<i32>>,
+    body_exec: Executor,
+}
+
+/// The accelerator service: owns the communication thread.
+pub struct AccelService {
+    tx: Mutex<Option<Sender<Submission>>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    metrics: Arc<AccelMetrics>,
+    stop: Arc<AtomicBool>,
+    options: AccelOptions,
+}
+
+impl AccelService {
+    /// Start the service for a set of compiled subgraphs. The engine is
+    /// materialized from `spec` on the communication thread — the single
+    /// thread that drives the device (paper Fig 3).
+    pub fn start(
+        configs: Vec<AccelConfig>,
+        spec: EngineSpec,
+        options: AccelOptions,
+    ) -> Arc<AccelService> {
+        assert!(
+            BLOCK_SIZES.contains(&options.block),
+            "block {} has no compiled artifact (menu: {:?})",
+            options.block,
+            BLOCK_SIZES
+        );
+        let prepared: Vec<Prepared> = configs
+            .into_iter()
+            .map(|config| {
+                let (tables, accepts) = config.pack_tables();
+                let (tables, accepts) = (Arc::new(tables), Arc::new(accepts));
+                let body_exec = Executor::new(
+                    Arc::new((*config.body).clone()),
+                    Arc::new(Profiler::disabled()),
+                );
+                Prepared {
+                    config,
+                    tables,
+                    accepts,
+                    body_exec,
+                }
+            })
+            .collect();
+        let (tx, rx) = channel::<Submission>();
+        let metrics = Arc::new(AccelMetrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_metrics = metrics.clone();
+        let thread_stop = stop.clone();
+        let opts = options.clone();
+        let handle = std::thread::Builder::new()
+            .name("accel-comm".into())
+            .spawn(move || {
+                match spec.build() {
+                    Ok(engine) => {
+                        comm_thread(rx, prepared, engine, opts, thread_metrics, thread_stop)
+                    }
+                    Err(e) => {
+                        // engine failed to materialize: fail every
+                        // submission rather than hanging the workers
+                        let msg = format!("accelerator engine init failed: {e}");
+                        while let Ok(s) = rx.recv() {
+                            let _ = s.reply.send(Err(msg.clone()));
+                        }
+                    }
+                }
+            })
+            .expect("spawn communication thread");
+        Arc::new(AccelService {
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            metrics,
+            stop,
+            options,
+        })
+    }
+
+    /// Submit one document for subgraph `id`; returns the receiver the
+    /// worker blocks on (document-per-thread: the worker sleeps while the
+    /// accelerator works).
+    pub fn submit(
+        &self,
+        subgraph_id: usize,
+        doc: Document,
+        tokens: Arc<TokenIndex>,
+        ext: Vec<Vec<Tuple>>,
+    ) -> Receiver<Result<Arc<Vec<Vec<Tuple>>>, String>> {
+        let (reply, rx) = channel();
+        let guard = self.tx.lock().unwrap();
+        if let Some(tx) = guard.as_ref() {
+            let _ = tx.send(Submission {
+                subgraph_id,
+                doc,
+                tokens,
+                ext,
+                reply,
+            });
+        }
+        rx
+    }
+
+    /// The service's metrics.
+    pub fn metrics(&self) -> &Arc<AccelMetrics> {
+        &self.metrics
+    }
+
+    /// Service options (block size etc.).
+    pub fn options(&self) -> &AccelOptions {
+        &self.options
+    }
+
+    /// Stop the communication thread and wait for it.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.tx.lock().unwrap().take(); // close the channel
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AccelService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The communication thread main loop.
+fn comm_thread(
+    rx: Receiver<Submission>,
+    prepared: Vec<Prepared>,
+    engine: Box<dyn PackageEngine>,
+    options: AccelOptions,
+    metrics: Arc<AccelMetrics>,
+    stop: Arc<AtomicBool>,
+) {
+    // pending submissions per subgraph
+    let mut pending: Vec<Vec<Submission>> = (0..prepared.len()).map(|_| Vec::new()).collect();
+    let mut pending_bytes: Vec<usize> = vec![0; prepared.len()];
+    loop {
+        // Block for the first submission (or channel close), then drain
+        // whatever else is queued — "collects the data submitted by some of
+        // the worker threads".
+        match rx.recv() {
+            Ok(s) => {
+                let gi = s.subgraph_id;
+                pending_bytes[gi] += s.doc.len() + 1;
+                pending[gi].push(s);
+            }
+            Err(_) => break, // all senders gone
+        }
+        while let Ok(s) = rx.try_recv() {
+            let gi = s.subgraph_id;
+            pending_bytes[gi] += s.doc.len() + 1;
+            pending[gi].push(s);
+            // don't hoard unboundedly: dispatch eagerly when a group can
+            // fill a package
+            if pending_bytes[gi] >= crate::hwcompiler::STREAMS * options.block {
+                dispatch_group(
+                    &mut pending[gi],
+                    &prepared[gi],
+                    engine.as_ref(),
+                    &options,
+                    &metrics,
+                );
+                pending_bytes[gi] = 0;
+            }
+        }
+        // queue drained: flush every group with work (paper: "sends the
+        // data to the accelerator's work queue and starts again")
+        for gi in 0..prepared.len() {
+            if !pending[gi].is_empty() {
+                dispatch_group(
+                    &mut pending[gi],
+                    &prepared[gi],
+                    engine.as_ref(),
+                    &options,
+                    &metrics,
+                );
+                pending_bytes[gi] = 0;
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    // final flush on shutdown
+    for (gi, group) in pending.iter_mut().enumerate() {
+        if !group.is_empty() {
+            dispatch_group(group, &prepared[gi], engine.as_ref(), &options, &metrics);
+        }
+    }
+}
+
+/// Pack, execute and post-process one group of submissions (possibly as
+/// several packages if they exceed one package's capacity).
+fn dispatch_group(
+    group: &mut Vec<Submission>,
+    prep: &Prepared,
+    engine: &dyn PackageEngine,
+    options: &AccelOptions,
+    metrics: &AccelMetrics,
+) {
+    let subs = std::mem::take(group);
+    let docs: Vec<&Document> = subs.iter().map(|s| &s.doc).collect();
+    // adaptive block: smallest compiled variant that holds the batch
+    let block = if options.adaptive_block {
+        let max_len = docs.iter().map(|d| d.len()).max().unwrap_or(0);
+        let need = docs.iter().map(|d| d.len() + 1).sum::<usize>();
+        BLOCK_SIZES
+            .iter()
+            .copied()
+            .filter(|&b| b <= options.block && b >= max_len)
+            .find(|&b| need <= b * crate::hwcompiler::STREAMS)
+            .unwrap_or(options.block)
+    } else {
+        options.block
+    };
+    let (packages, oversized) = pack_group(&docs, block);
+    for di in oversized {
+        let _ = subs[di].reply.send(Err(format!(
+            "document {} is {} bytes, larger than the package block ({})",
+            subs[di].doc.id,
+            subs[di].doc.len(),
+            options.block
+        )));
+    }
+    for wp in packages {
+        let batch: Vec<&Submission> =
+            wp.slots.iter().map(|s| &subs[s.doc_index]).collect();
+        run_package(&wp, &batch, prep, engine, options, metrics);
+    }
+}
+
+/// Execute one packed work package and wake its workers.
+fn run_package(
+    wp: &WorkPackage,
+    batch: &[&Submission],
+    prep: &Prepared,
+    engine: &dyn PackageEngine,
+    options: &AccelOptions,
+    metrics: &AccelMetrics,
+) {
+    let (m_pad, s_pad) = prep.config.geometry;
+    let pkg = PackedPackage {
+        bytes: wp.bytes.clone(),
+        block: wp.block,
+        tables: prep.tables.clone(),
+        accepts: prep.accepts.clone(),
+        machines: m_pad,
+        states: s_pad,
+    };
+    let key = prep.config.artifact_key(wp.block);
+    let t0 = Instant::now();
+    let result = engine.run(key, &pkg);
+    let engine_ns = t0.elapsed().as_nanos() as u64;
+
+    let hits = match result {
+        Ok(h) => h,
+        Err(e) => {
+            let msg = format!("accelerator package failed: {e}");
+            for s in batch {
+                let _ = s.reply.send(Err(msg.clone()));
+            }
+            return;
+        }
+    };
+
+    let t1 = Instant::now();
+    // Group hits per (doc, machine): slots are sorted by (stream, offset).
+    let mut per_doc_machine: Vec<Vec<Vec<(usize, u32)>>> =
+        vec![vec![Vec::new(); prep.config.machines.len()]; batch.len()];
+    for &(m, stream, pos, state) in &hits.hits {
+        if m >= prep.config.machines.len() {
+            continue; // padding machine can never hit, but be defensive
+        }
+        // find the doc slot containing (stream, pos)
+        if let Some(di) = wp.slot_at(stream, pos) {
+            let slot = &wp.slots[di];
+            let local_end = pos + 1 - slot.offset;
+            per_doc_machine[di][m].push((local_end, state));
+        }
+    }
+
+    let mut total_hits = 0u64;
+    // replies are deferred until the metrics are recorded, so a caller
+    // that joins its workers observes complete counters
+    let mut replies: Vec<(
+        &Sender<Result<Arc<Vec<Vec<Tuple>>>, String>>,
+        Arc<Vec<Vec<Tuple>>>,
+    )> = Vec::with_capacity(batch.len());
+    for (di, sub) in batch.iter().enumerate() {
+        let mut overrides: HashMap<usize, Vec<Tuple>> = HashMap::new();
+        for (mi, machine) in prep.config.machines.iter().enumerate() {
+            let events = &per_doc_machine[di][mi];
+            total_hits += events.len() as u64;
+            let tuples: Vec<Tuple> = match &machine.matcher {
+                MatcherRef::Regex(re) => {
+                    let ends: Vec<usize> = events.iter().map(|&(e, _)| e).collect();
+                    re.from_hw_ends(&sub.doc.text, &ends)
+                        .into_iter()
+                        .map(|m| vec![crate::aog::Value::Span(m.span)])
+                        .collect()
+                }
+                MatcherRef::Dict(ac) => ac
+                    .from_hw_states(sub.doc.text.as_bytes(), events)
+                    .into_iter()
+                    .map(|m| vec![crate::aog::Value::Span(m.span)])
+                    .collect(),
+            };
+            overrides.insert(machine.body_node, tuples);
+        }
+        let ext_refs: Vec<&[Tuple]> = sub.ext.iter().map(|v| v.as_slice()).collect();
+        let out =
+            prep.body_exec
+                .run_doc_with(&sub.doc, &sub.tokens, &ext_refs, &overrides);
+        let outputs: Vec<Vec<Tuple>> = (0..prep.config.outputs.len())
+            .map(|k| out.views.get(&format!("out{k}")).cloned().unwrap_or_default())
+            .collect();
+        replies.push((&sub.reply, Arc::new(outputs)));
+    }
+    let post_ns = t1.elapsed().as_nanos() as u64;
+
+    let payload: usize = wp.slots.iter().map(|s| s.len).sum();
+    let modeled = options.model.package_time(payload, wp.slots.len());
+    metrics.record_package(
+        wp.slots.len() as u64,
+        payload as u64,
+        total_hits,
+        engine_ns,
+        post_ns,
+        (modeled * 1e9) as u64,
+    );
+    // status-register signal: wake the workers of this package
+    for (reply, outputs) in replies {
+        let _ = reply.send(Ok(outputs));
+    }
+}
+
+/// [`SubgraphRunner`] backed by the service: submits and sleeps, with a
+/// per-(doc, subgraph) result cache so multi-output subgraphs execute once.
+pub struct AccelSubgraphRunner {
+    service: Arc<AccelService>,
+    cache: Mutex<HashMap<(u64, usize), Arc<Vec<Vec<Tuple>>>>>,
+}
+
+impl AccelSubgraphRunner {
+    /// Wrap a running service.
+    pub fn new(service: Arc<AccelService>) -> AccelSubgraphRunner {
+        AccelSubgraphRunner {
+            service,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl SubgraphRunner for AccelSubgraphRunner {
+    fn run(
+        &self,
+        id: usize,
+        output_idx: usize,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&[Tuple]],
+    ) -> Vec<Tuple> {
+        let cache_key = (doc.id, id);
+        if let Some(r) = self.cache.lock().unwrap().get(&cache_key) {
+            return r.get(output_idx).cloned().unwrap_or_default();
+        }
+        let rx = self.service.submit(
+            id,
+            doc.clone(),
+            Arc::new(tokens.clone()),
+            ext.iter().map(|s| s.to_vec()).collect(),
+        );
+        // document-per-thread: sleep until the package completes
+        match rx.recv() {
+            Ok(Ok(outputs)) => {
+                let mut cache = self.cache.lock().unwrap();
+                if cache.len() > 4096 {
+                    cache.clear(); // workers only revisit the current doc
+                }
+                cache.insert(cache_key, outputs.clone());
+                outputs.get(output_idx).cloned().unwrap_or_default()
+            }
+            Ok(Err(e)) => panic!("accelerator error: {e}"),
+            Err(_) => panic!("accelerator service shut down while waiting"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwcompiler::compile_subgraph;
+    use crate::partition::{partition, PartitionMode, SoftwareSubgraphRunner};
+    use crate::runtime::EngineSpec;
+
+    const PERSON_ORG: &str = r#"
+        create dictionary Orgs as ('IBM', 'IBM Research', 'Columbia University');
+        create view Org as
+          extract dictionary 'Orgs' on d.text as match from Document d;
+        create view Person as
+          extract regex /[A-Z][a-z]+ [A-Z][a-z]+/ on d.text as name from Document d;
+        create view PersonOrg as
+          select p.name as person, o.match as org,
+                 CombineSpans(p.name, o.match) as ctx
+          from Person p, Org o
+          where FollowsTok(p.name, o.match, 0, 4)
+          consolidate on ctx using 'ContainedWithin';
+        output view PersonOrg;
+    "#;
+
+    fn rows(out: &crate::exec::DocOutput) -> Vec<Vec<String>> {
+        let mut rows: Vec<Vec<String>> = out
+            .views
+            .values()
+            .flat_map(|rows| rows.iter().map(|t| t.iter().map(|v| v.to_string()).collect()))
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    fn accel_vs_software(mode: PartitionMode, texts: &[&str]) {
+        let g = crate::optimizer::optimize(&crate::aql::compile(PERSON_ORG).unwrap());
+        let plan = partition(&g, mode);
+        let configs: Vec<AccelConfig> = plan
+            .subgraphs
+            .iter()
+            .map(|s| compile_subgraph(s).unwrap())
+            .collect();
+        let service = AccelService::start(
+            configs,
+            EngineSpec::Native,
+            AccelOptions::default(),
+        );
+        let accel_exec = Executor::new(
+            Arc::new(plan.supergraph.clone()),
+            Arc::new(Profiler::disabled()),
+        )
+        .with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(service.clone())));
+        let sw_exec = Executor::new(
+            Arc::new(plan.supergraph.clone()),
+            Arc::new(Profiler::disabled()),
+        )
+        .with_subgraph_runner(Arc::new(SoftwareSubgraphRunner::new(&plan)));
+
+        for (i, t) in texts.iter().enumerate() {
+            let doc = Document::new(i as u64, *t);
+            assert_eq!(
+                rows(&accel_exec.run_doc(&doc)),
+                rows(&sw_exec.run_doc(&doc)),
+                "mode {:?}, text {t:?}",
+                mode
+            );
+        }
+        let snap = service.metrics().snapshot();
+        assert!(snap.packages > 0);
+        assert!(snap.docs as usize >= texts.iter().filter(|t| !t.is_empty()).count());
+        service.shutdown();
+    }
+
+    const SAMPLES: &[&str] = &[
+        "Laura Chiticariu works at IBM Research in Almaden.",
+        "Fred Reiss and Huaiyu Zhu are at IBM Research today.",
+        "nothing in this one",
+        "Eva Sitaridi is at Columbia University. Peter Hofstee visits IBM.",
+        "",
+    ];
+
+    #[test]
+    fn accel_equals_software_extract_only() {
+        accel_vs_software(PartitionMode::ExtractOnly, SAMPLES);
+    }
+
+    #[test]
+    fn accel_equals_software_single_subgraph() {
+        accel_vs_software(PartitionMode::SingleSubgraph, SAMPLES);
+    }
+
+    #[test]
+    fn accel_equals_software_multi_subgraph() {
+        accel_vs_software(PartitionMode::MultiSubgraph, SAMPLES);
+    }
+
+    #[test]
+    fn concurrent_workers_get_combined_packages() {
+        let g = crate::optimizer::optimize(&crate::aql::compile(PERSON_ORG).unwrap());
+        let plan = partition(&g, PartitionMode::SingleSubgraph);
+        let configs: Vec<AccelConfig> = plan
+            .subgraphs
+            .iter()
+            .map(|s| compile_subgraph(s).unwrap())
+            .collect();
+        let service = AccelService::start(
+            configs,
+            EngineSpec::Native,
+            AccelOptions::default(),
+        );
+        let runner = Arc::new(AccelSubgraphRunner::new(service.clone()));
+        let exec = Arc::new(
+            Executor::new(
+                Arc::new(plan.supergraph.clone()),
+                Arc::new(Profiler::disabled()),
+            )
+            .with_subgraph_runner(runner),
+        );
+        let mut handles = Vec::new();
+        for w in 0..8 {
+            let exec = exec.clone();
+            handles.push(std::thread::spawn(move || {
+                for k in 0..16u64 {
+                    let doc = Document::new(
+                        w * 1000 + k,
+                        format!("Laura Chiticariu works at IBM Research (doc {k})."),
+                    );
+                    let out = exec.run_doc(&doc);
+                    assert_eq!(out.views["PersonOrg"].len(), 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = service.metrics().snapshot();
+        assert_eq!(snap.docs, 8 * 16);
+        // combining must happen: fewer packages than documents
+        assert!(
+            snap.packages < snap.docs,
+            "no combining: {} packages for {} docs",
+            snap.packages,
+            snap.docs
+        );
+        service.shutdown();
+    }
+
+    #[test]
+    fn oversized_document_is_rejected_cleanly() {
+        let g = crate::optimizer::optimize(&crate::aql::compile(PERSON_ORG).unwrap());
+        let plan = partition(&g, PartitionMode::ExtractOnly);
+        let configs: Vec<AccelConfig> = plan
+            .subgraphs
+            .iter()
+            .map(|s| compile_subgraph(s).unwrap())
+            .collect();
+        let service = AccelService::start(
+            configs,
+            EngineSpec::Native,
+            AccelOptions::default(),
+        );
+        let big = "x".repeat(17000); // exceeds block=16384
+        let doc = Document::new(0, big);
+        let rx = service.submit(0, doc, Arc::new(TokenIndex::default()), vec![]);
+        let res = rx.recv().unwrap();
+        assert!(res.is_err(), "oversized doc must fail, not hang");
+        service.shutdown();
+    }
+}

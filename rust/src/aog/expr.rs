@@ -1,0 +1,583 @@
+//! The scalar expression language used by Select/Project/Join predicates.
+//!
+//! AQL predicates over spans (`Follows`, `FollowsTok`, `Overlaps`,
+//! `Contains`, ...) and scalar functions (`GetLength`, `GetText`,
+//! `CombineSpans`, ...) are compiled into this small expression tree, which
+//! is type-checked against the input schema at query-compile time — all
+//! operator schemas are static, exactly as the paper requires for hardware
+//! generation.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::text::{Span, TokenIndex};
+
+use super::types::{FieldType, Schema, Tuple, Value};
+
+/// Built-in functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Func {
+    /// `GetBegin(span) -> int`
+    GetBegin,
+    /// `GetEnd(span) -> int`
+    GetEnd,
+    /// `GetLength(span) -> int` (bytes)
+    GetLength,
+    /// `GetText(span) -> str`
+    GetText,
+    /// `ToLowerCase(str) -> str`
+    ToLowerCase,
+    /// `Follows(a, b, min, max) -> bool`: b begins `min..=max` bytes after a ends
+    Follows,
+    /// `FollowsTok(a, b, min, max) -> bool`: token distance
+    FollowsTok,
+    /// `Overlaps(a, b) -> bool`
+    Overlaps,
+    /// `Contains(a, b) -> bool`: a contains b
+    Contains,
+    /// `ContainedWithin(a, b) -> bool`: a inside b
+    ContainedWithin,
+    /// `SpanEquals(a, b) -> bool`
+    SpanEquals,
+    /// `CombineSpans(a, b) -> span`
+    CombineSpans,
+    /// `SpanBetween(a, b) -> span`: the gap span from a.end to b.begin
+    SpanBetween,
+}
+
+impl Func {
+    /// Parse an AQL function name.
+    pub fn parse(name: &str) -> Option<Func> {
+        Some(match name {
+            "GetBegin" => Func::GetBegin,
+            "GetEnd" => Func::GetEnd,
+            "GetLength" => Func::GetLength,
+            "GetText" => Func::GetText,
+            "ToLowerCase" => Func::ToLowerCase,
+            "Follows" => Func::Follows,
+            "FollowsTok" => Func::FollowsTok,
+            "Overlaps" => Func::Overlaps,
+            "Contains" => Func::Contains,
+            "ContainedWithin" => Func::ContainedWithin,
+            "SpanEquals" => Func::SpanEquals,
+            "CombineSpans" => Func::CombineSpans,
+            "SpanBetween" => Func::SpanBetween,
+            _ => return None,
+        })
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Func::GetBegin => "GetBegin",
+            Func::GetEnd => "GetEnd",
+            Func::GetLength => "GetLength",
+            Func::GetText => "GetText",
+            Func::ToLowerCase => "ToLowerCase",
+            Func::Follows => "Follows",
+            Func::FollowsTok => "FollowsTok",
+            Func::Overlaps => "Overlaps",
+            Func::Contains => "Contains",
+            Func::ContainedWithin => "ContainedWithin",
+            Func::SpanEquals => "SpanEquals",
+            Func::CombineSpans => "CombineSpans",
+            Func::SpanBetween => "SpanBetween",
+        }
+    }
+
+    /// `(argument types, return type)`.
+    pub fn signature(&self) -> (&'static [FieldType], FieldType) {
+        use FieldType::*;
+        match self {
+            Func::GetBegin | Func::GetEnd | Func::GetLength => (&[Span], Int),
+            Func::GetText => (&[Span], Str),
+            Func::ToLowerCase => (&[Str], Str),
+            Func::Follows | Func::FollowsTok => (&[Span, Span, Int, Int], Bool),
+            Func::Overlaps
+            | Func::Contains
+            | Func::ContainedWithin
+            | Func::SpanEquals => (&[Span, Span], Bool),
+            Func::CombineSpans | Func::SpanBetween => (&[Span, Span], Span),
+        }
+    }
+
+    /// True if the accelerator's relational post-stage can evaluate this
+    /// function (used by the partitioner's hardware-support classification).
+    /// `GetText`/`ToLowerCase` require string materialization, which the
+    /// streaming datapath does not do.
+    pub fn hw_supported(&self) -> bool {
+        !matches!(self, Func::GetText | Func::ToLowerCase)
+    }
+}
+
+/// Comparison operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    /// AQL surface syntax.
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            CmpOp::Eq => "=",
+            CmpOp::Ne => "!=",
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+        }
+    }
+}
+
+/// An expression tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Input column by position.
+    Col(usize),
+    LitInt(i64),
+    LitStr(String),
+    LitBool(bool),
+    Cmp(Box<Expr>, CmpOp, Box<Expr>),
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+    Not(Box<Expr>),
+    Call(Func, Vec<Expr>),
+}
+
+/// Type error found during expression checking.
+#[derive(Debug, Clone)]
+pub struct TypeError(pub String);
+
+impl fmt::Display for TypeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "type error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TypeError {}
+
+/// Evaluation context: the document the tuple's spans point into.
+pub struct EvalCtx<'a> {
+    pub text: &'a str,
+    pub tokens: &'a TokenIndex,
+}
+
+impl Expr {
+    /// Infer the expression's type against `schema`, or fail.
+    pub fn infer_type(&self, schema: &Schema) -> Result<FieldType, TypeError> {
+        match self {
+            Expr::Col(i) => {
+                if *i >= schema.arity() {
+                    return Err(TypeError(format!(
+                        "column {} out of range for schema {}",
+                        i, schema
+                    )));
+                }
+                Ok(schema.type_at(*i))
+            }
+            Expr::LitInt(_) => Ok(FieldType::Int),
+            Expr::LitStr(_) => Ok(FieldType::Str),
+            Expr::LitBool(_) => Ok(FieldType::Bool),
+            Expr::Cmp(a, _, b) => {
+                let ta = a.infer_type(schema)?;
+                let tb = b.infer_type(schema)?;
+                if ta != tb {
+                    return Err(TypeError(format!(
+                        "comparison between {ta} and {tb}"
+                    )));
+                }
+                Ok(FieldType::Bool)
+            }
+            Expr::And(a, b) | Expr::Or(a, b) => {
+                for (side, e) in [("lhs", a), ("rhs", b)] {
+                    if e.infer_type(schema)? != FieldType::Bool {
+                        return Err(TypeError(format!("{side} of and/or is not boolean")));
+                    }
+                }
+                Ok(FieldType::Bool)
+            }
+            Expr::Not(a) => {
+                if a.infer_type(schema)? != FieldType::Bool {
+                    return Err(TypeError("operand of 'not' is not boolean".into()));
+                }
+                Ok(FieldType::Bool)
+            }
+            Expr::Call(f, args) => {
+                let (params, ret) = f.signature();
+                if args.len() != params.len() {
+                    return Err(TypeError(format!(
+                        "{} expects {} args, got {}",
+                        f.name(),
+                        params.len(),
+                        args.len()
+                    )));
+                }
+                for (i, (a, want)) in args.iter().zip(params).enumerate() {
+                    let got = a.infer_type(schema)?;
+                    if got != *want {
+                        return Err(TypeError(format!(
+                            "{} arg {} is {got}, expected {want}",
+                            f.name(),
+                            i
+                        )));
+                    }
+                }
+                Ok(ret)
+            }
+        }
+    }
+
+    /// Evaluate against a tuple. Expressions are type-checked at compile
+    /// time, so value-kind mismatches here panic (engine bug).
+    pub fn eval(&self, tuple: &Tuple, ctx: &EvalCtx<'_>) -> Value {
+        match self {
+            Expr::Col(i) => tuple[*i].clone(),
+            Expr::LitInt(v) => Value::Int(*v),
+            Expr::LitStr(s) => Value::Str(Arc::from(s.as_str())),
+            Expr::LitBool(b) => Value::Bool(*b),
+            Expr::Cmp(a, op, b) => {
+                let va = a.eval(tuple, ctx);
+                let vb = b.eval(tuple, ctx);
+                Value::Bool(compare(&va, *op, &vb))
+            }
+            Expr::And(a, b) => {
+                Value::Bool(a.eval(tuple, ctx).as_bool() && b.eval(tuple, ctx).as_bool())
+            }
+            Expr::Or(a, b) => {
+                Value::Bool(a.eval(tuple, ctx).as_bool() || b.eval(tuple, ctx).as_bool())
+            }
+            Expr::Not(a) => Value::Bool(!a.eval(tuple, ctx).as_bool()),
+            Expr::Call(f, args) => {
+                let vals: Vec<Value> = args.iter().map(|a| a.eval(tuple, ctx)).collect();
+                eval_func(*f, &vals, ctx)
+            }
+        }
+    }
+
+    /// Collect referenced column indices (for pushdown analysis).
+    pub fn columns(&self, out: &mut Vec<usize>) {
+        match self {
+            Expr::Col(i) => out.push(*i),
+            Expr::LitInt(_) | Expr::LitStr(_) | Expr::LitBool(_) => {}
+            Expr::Cmp(a, _, b) | Expr::And(a, b) | Expr::Or(a, b) => {
+                a.columns(out);
+                b.columns(out);
+            }
+            Expr::Not(a) => a.columns(out),
+            Expr::Call(_, args) => {
+                for a in args {
+                    a.columns(out);
+                }
+            }
+        }
+    }
+
+    /// Rewrite column indices through `map` (old index → new index).
+    pub fn remap_columns(&self, map: &dyn Fn(usize) -> usize) -> Expr {
+        match self {
+            Expr::Col(i) => Expr::Col(map(*i)),
+            Expr::LitInt(_) | Expr::LitStr(_) | Expr::LitBool(_) => self.clone(),
+            Expr::Cmp(a, op, b) => Expr::Cmp(
+                Box::new(a.remap_columns(map)),
+                *op,
+                Box::new(b.remap_columns(map)),
+            ),
+            Expr::And(a, b) => Expr::And(
+                Box::new(a.remap_columns(map)),
+                Box::new(b.remap_columns(map)),
+            ),
+            Expr::Or(a, b) => Expr::Or(
+                Box::new(a.remap_columns(map)),
+                Box::new(b.remap_columns(map)),
+            ),
+            Expr::Not(a) => Expr::Not(Box::new(a.remap_columns(map))),
+            Expr::Call(f, args) => {
+                Expr::Call(*f, args.iter().map(|a| a.remap_columns(map)).collect())
+            }
+        }
+    }
+
+    /// True if every function used is hardware-supported.
+    pub fn hw_supported(&self) -> bool {
+        match self {
+            Expr::Col(_) | Expr::LitInt(_) | Expr::LitStr(_) | Expr::LitBool(_) => true,
+            Expr::Cmp(a, _, b) | Expr::And(a, b) | Expr::Or(a, b) => {
+                a.hw_supported() && b.hw_supported()
+            }
+            Expr::Not(a) => a.hw_supported(),
+            Expr::Call(f, args) => f.hw_supported() && args.iter().all(|a| a.hw_supported()),
+        }
+    }
+}
+
+fn compare(a: &Value, op: CmpOp, b: &Value) -> bool {
+    use std::cmp::Ordering;
+    let ord = match (a, b) {
+        (Value::Int(x), Value::Int(y)) => x.cmp(y),
+        (Value::Str(x), Value::Str(y)) => x.cmp(y),
+        (Value::Bool(x), Value::Bool(y)) => x.cmp(y),
+        (Value::Span(x), Value::Span(y)) => x.cmp(y),
+        (Value::Float(x), Value::Float(y)) => {
+            x.partial_cmp(y).unwrap_or(Ordering::Equal)
+        }
+        _ => panic!("comparison of mismatched values {a:?} vs {b:?}"),
+    };
+    match op {
+        CmpOp::Eq => ord == Ordering::Equal,
+        CmpOp::Ne => ord != Ordering::Equal,
+        CmpOp::Lt => ord == Ordering::Less,
+        CmpOp::Le => ord != Ordering::Greater,
+        CmpOp::Gt => ord == Ordering::Greater,
+        CmpOp::Ge => ord != Ordering::Less,
+    }
+}
+
+fn eval_func(f: Func, vals: &[Value], ctx: &EvalCtx<'_>) -> Value {
+    match f {
+        Func::GetBegin => Value::Int(vals[0].as_span().begin as i64),
+        Func::GetEnd => Value::Int(vals[0].as_span().end as i64),
+        Func::GetLength => Value::Int(vals[0].as_span().len() as i64),
+        Func::GetText => Value::Str(Arc::from(vals[0].as_span().text(ctx.text))),
+        Func::ToLowerCase => Value::Str(Arc::from(vals[0].as_str().to_ascii_lowercase())),
+        Func::Follows => {
+            let (a, b) = (vals[0].as_span(), vals[1].as_span());
+            let (min, max) = (vals[2].as_int().max(0) as u32, vals[3].as_int().max(0) as u32);
+            Value::Bool(a.follows(&b, min, max))
+        }
+        Func::FollowsTok => {
+            let (a, b) = (vals[0].as_span(), vals[1].as_span());
+            let (min, max) = (vals[2].as_int().max(0), vals[3].as_int().max(0));
+            if b.begin < a.end {
+                return Value::Bool(false);
+            }
+            let d = ctx.tokens.tokens_between(a.end, b.begin) as i64;
+            Value::Bool(d >= min && d <= max)
+        }
+        Func::Overlaps => {
+            Value::Bool(vals[0].as_span().overlaps(&vals[1].as_span()))
+        }
+        Func::Contains => {
+            Value::Bool(vals[0].as_span().contains(&vals[1].as_span()))
+        }
+        Func::ContainedWithin => {
+            Value::Bool(vals[1].as_span().contains(&vals[0].as_span()))
+        }
+        Func::SpanEquals => Value::Bool(vals[0].as_span() == vals[1].as_span()),
+        Func::CombineSpans => Value::Span(vals[0].as_span().combine(&vals[1].as_span())),
+        Func::SpanBetween => {
+            let (a, b) = (vals[0].as_span(), vals[1].as_span());
+            let begin = a.end.min(b.begin);
+            let end = b.begin.max(a.end);
+            Value::Span(Span::new(begin, end))
+        }
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Col(i) => write!(f, "${i}"),
+            Expr::LitInt(v) => write!(f, "{v}"),
+            Expr::LitStr(s) => write!(f, "{s:?}"),
+            Expr::LitBool(b) => write!(f, "{b}"),
+            Expr::Cmp(a, op, b) => write!(f, "({a} {} {b})", op.symbol()),
+            Expr::And(a, b) => write!(f, "({a} and {b})"),
+            Expr::Or(a, b) => write!(f, "({a} or {b})"),
+            Expr::Not(a) => write!(f, "(not {a})"),
+            Expr::Call(func, args) => {
+                write!(f, "{}(", func.name())?;
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{a}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::Tokenizer;
+
+    fn ctx_for(text: &'static str) -> (EvalCtx<'static>, &'static TokenIndex) {
+        let tokens = Box::leak(Box::new(Tokenizer::standard().tokenize(text)));
+        (
+            EvalCtx {
+                text,
+                tokens,
+            },
+            tokens,
+        )
+    }
+
+    fn span_tuple(pairs: &[(u32, u32)]) -> Tuple {
+        pairs
+            .iter()
+            .map(|&(b, e)| Value::Span(Span::new(b, e)))
+            .collect()
+    }
+
+    #[test]
+    fn span_getters() {
+        let (ctx, _) = ctx_for("hello world");
+        let t = span_tuple(&[(6, 11)]);
+        let e = Expr::Call(Func::GetText, vec![Expr::Col(0)]);
+        assert_eq!(e.eval(&t, &ctx), Value::Str("world".into()));
+        let e = Expr::Call(Func::GetLength, vec![Expr::Col(0)]);
+        assert_eq!(e.eval(&t, &ctx), Value::Int(5));
+        let e = Expr::Call(Func::GetBegin, vec![Expr::Col(0)]);
+        assert_eq!(e.eval(&t, &ctx), Value::Int(6));
+    }
+
+    #[test]
+    fn follows_predicates() {
+        let (ctx, _) = ctx_for("aa bb cc dd");
+        let t = span_tuple(&[(0, 2), (6, 8)]); // "aa" and "cc"
+        let follows = Expr::Call(
+            Func::Follows,
+            vec![Expr::Col(0), Expr::Col(1), Expr::LitInt(0), Expr::LitInt(10)],
+        );
+        assert_eq!(follows.eval(&t, &ctx), Value::Bool(true));
+        let follows_tok = Expr::Call(
+            Func::FollowsTok,
+            vec![Expr::Col(0), Expr::Col(1), Expr::LitInt(1), Expr::LitInt(1)],
+        );
+        // exactly one token ("bb") between them
+        assert_eq!(follows_tok.eval(&t, &ctx), Value::Bool(true));
+        let follows_tok0 = Expr::Call(
+            Func::FollowsTok,
+            vec![Expr::Col(0), Expr::Col(1), Expr::LitInt(0), Expr::LitInt(0)],
+        );
+        assert_eq!(follows_tok0.eval(&t, &ctx), Value::Bool(false));
+    }
+
+    #[test]
+    fn span_relations() {
+        let (ctx, _) = ctx_for("abcdefghij");
+        let t = span_tuple(&[(0, 6), (2, 4)]);
+        for (f, want) in [
+            (Func::Contains, true),
+            (Func::ContainedWithin, false),
+            (Func::Overlaps, true),
+            (Func::SpanEquals, false),
+        ] {
+            let e = Expr::Call(f, vec![Expr::Col(0), Expr::Col(1)]);
+            assert_eq!(e.eval(&t, &ctx), Value::Bool(want), "{}", f.name());
+        }
+        let e = Expr::Call(Func::CombineSpans, vec![Expr::Col(1), Expr::Col(0)]);
+        assert_eq!(e.eval(&t, &ctx), Value::Span(Span::new(0, 6)));
+    }
+
+    #[test]
+    fn span_between_gap() {
+        let (ctx, _) = ctx_for("aa bb cc");
+        let t = span_tuple(&[(0, 2), (6, 8)]);
+        let e = Expr::Call(Func::SpanBetween, vec![Expr::Col(0), Expr::Col(1)]);
+        assert_eq!(e.eval(&t, &ctx), Value::Span(Span::new(2, 6)));
+    }
+
+    #[test]
+    fn boolean_logic_and_compare() {
+        let (ctx, _) = ctx_for("x");
+        let t: Tuple = vec![Value::Int(5)];
+        let e = Expr::And(
+            Box::new(Expr::Cmp(
+                Box::new(Expr::Col(0)),
+                CmpOp::Gt,
+                Box::new(Expr::LitInt(3)),
+            )),
+            Box::new(Expr::Not(Box::new(Expr::Cmp(
+                Box::new(Expr::Col(0)),
+                CmpOp::Eq,
+                Box::new(Expr::LitInt(9)),
+            )))),
+        );
+        assert_eq!(e.eval(&t, &ctx), Value::Bool(true));
+    }
+
+    #[test]
+    fn type_inference_ok_and_errors() {
+        let schema = Schema::of(&[("m", FieldType::Span), ("n", FieldType::Int)]);
+        let ok = Expr::Call(Func::GetLength, vec![Expr::Col(0)]);
+        assert_eq!(ok.infer_type(&schema).unwrap(), FieldType::Int);
+
+        let bad_arg = Expr::Call(Func::GetLength, vec![Expr::Col(1)]);
+        assert!(bad_arg.infer_type(&schema).is_err());
+
+        let bad_count = Expr::Call(Func::Overlaps, vec![Expr::Col(0)]);
+        assert!(bad_count.infer_type(&schema).is_err());
+
+        let bad_col = Expr::Col(7);
+        assert!(bad_col.infer_type(&schema).is_err());
+
+        let bad_cmp = Expr::Cmp(
+            Box::new(Expr::Col(0)),
+            CmpOp::Eq,
+            Box::new(Expr::LitInt(1)),
+        );
+        assert!(bad_cmp.infer_type(&schema).is_err());
+
+        let bad_and = Expr::And(Box::new(Expr::LitInt(1)), Box::new(Expr::LitBool(true)));
+        assert!(bad_and.infer_type(&schema).is_err());
+    }
+
+    #[test]
+    fn columns_and_remap() {
+        let e = Expr::Call(
+            Func::Follows,
+            vec![Expr::Col(0), Expr::Col(2), Expr::LitInt(0), Expr::LitInt(5)],
+        );
+        let mut cols = Vec::new();
+        e.columns(&mut cols);
+        assert_eq!(cols, vec![0, 2]);
+        let r = e.remap_columns(&|i| i + 10);
+        let mut cols2 = Vec::new();
+        r.columns(&mut cols2);
+        assert_eq!(cols2, vec![10, 12]);
+    }
+
+    #[test]
+    fn hw_support_classification() {
+        let ok = Expr::Call(Func::Overlaps, vec![Expr::Col(0), Expr::Col(1)]);
+        assert!(ok.hw_supported());
+        let no = Expr::Cmp(
+            Box::new(Expr::Call(Func::GetText, vec![Expr::Col(0)])),
+            CmpOp::Eq,
+            Box::new(Expr::LitStr("x".into())),
+        );
+        assert!(!no.hw_supported());
+    }
+
+    #[test]
+    fn func_parse_roundtrip() {
+        for f in [
+            Func::GetBegin,
+            Func::Follows,
+            Func::FollowsTok,
+            Func::CombineSpans,
+            Func::SpanBetween,
+        ] {
+            assert_eq!(Func::parse(f.name()), Some(f));
+        }
+        assert_eq!(Func::parse("Bogus"), None);
+    }
+
+    #[test]
+    fn display_roundtrippable_shape() {
+        let e = Expr::And(
+            Box::new(Expr::Call(Func::Overlaps, vec![Expr::Col(0), Expr::Col(1)])),
+            Box::new(Expr::LitBool(true)),
+        );
+        assert_eq!(e.to_string(), "(Overlaps($0, $1) and true)");
+    }
+}

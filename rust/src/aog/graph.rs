@@ -1,0 +1,674 @@
+//! Operator-graph structure: nodes, kinds, validation, and the text dump.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use crate::dict::{AhoCorasick, Dictionary};
+use crate::regex::CompiledRegex;
+use crate::text::span::ConsolidatePolicy;
+
+use super::expr::{Expr, TypeError};
+use super::types::{Field, FieldType, Schema};
+
+/// Node id — index into [`Graph::nodes`]. Construction keeps ids
+/// topological (inputs always have smaller ids), which the executor,
+/// partitioner and hardware compiler all rely on.
+pub type NodeId = usize;
+
+/// Operator kinds. Extraction operators read the document; relational
+/// operators transform tuple streams. `SubgraphExec` appears only after
+/// partitioning: it stands for a hardware-offloaded subgraph in the
+/// software supergraph (paper Fig 1b).
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    /// Emits one tuple per document: `(text: Span)` covering the whole doc.
+    DocScan,
+    /// Regex extraction over the document text.
+    RegexExtract {
+        regex: Arc<CompiledRegex>,
+        /// Output column name.
+        out: String,
+    },
+    /// Token-based dictionary extraction over the document text.
+    DictExtract {
+        dict: Arc<Dictionary>,
+        matcher: Arc<AhoCorasick>,
+        out: String,
+    },
+    /// Filter by predicate.
+    Select { pred: Expr },
+    /// Compute output columns (name, expr).
+    Project { cols: Vec<(String, Expr)> },
+    /// Binary nested-loop join with predicate over concatenated schema.
+    Join { pred: Expr },
+    /// Union of identically-shaped inputs.
+    Union,
+    /// Span consolidation on one column.
+    Consolidate {
+        col: usize,
+        policy: ConsolidatePolicy,
+    },
+    /// Set difference: tuples of input 0 not present in input 1
+    /// (SystemT's `minus`). Schemas must match.
+    Difference,
+    /// SystemT's BLOCK operator: group spans (column `col`, input sorted
+    /// by that column) into blocks when consecutive spans are at most
+    /// `max_gap` bytes apart; emit the covering span of each block with at
+    /// least `min_size` members. Output schema: one span column.
+    Block {
+        col: usize,
+        max_gap: u32,
+        min_size: usize,
+    },
+    /// Order by columns (ascending, span/int/str order).
+    Sort { keys: Vec<usize> },
+    /// First n tuples.
+    Limit { n: usize },
+    /// Post-partition placeholder in the *supergraph*: run accelerator
+    /// subgraph `subgraph_id` and emit the tuples of its `output_idx`-th
+    /// output. Input 0 is always the DocScan (the document stream the
+    /// accelerator consumes); inputs 1.. are software-computed tuple
+    /// streams feeding the subgraph's `ExtInput` slots.
+    SubgraphExec {
+        subgraph_id: usize,
+        output_idx: usize,
+        /// Schema of the offloaded output node (set by the partitioner).
+        schema: Schema,
+    },
+    /// Leaf inside a *subgraph body*: tuples injected by the runner from a
+    /// software-computed input stream (slot index into the injected list).
+    ExtInput { slot: usize, schema: Schema },
+}
+
+impl OpKind {
+    /// Short operator name for profiles and dumps. The profiler groups by
+    /// this (paper Fig 4 buckets: RegularExpression, Dictionary, relational
+    /// operator names).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::DocScan => "DocScan",
+            OpKind::RegexExtract { .. } => "RegularExpression",
+            OpKind::DictExtract { .. } => "Dictionary",
+            OpKind::Select { .. } => "Select",
+            OpKind::Project { .. } => "Project",
+            OpKind::Join { .. } => "Join",
+            OpKind::Union => "Union",
+            OpKind::Consolidate { .. } => "Consolidate",
+            OpKind::Difference => "Difference",
+            OpKind::Block { .. } => "Block",
+            OpKind::Sort { .. } => "Sort",
+            OpKind::Limit { .. } => "Limit",
+            OpKind::SubgraphExec { .. } => "SubgraphExec",
+            OpKind::ExtInput { .. } => "ExtInput",
+        }
+    }
+
+    /// True for the extraction operator family (the paper's
+    /// "RegularExpression & Dictionaries" profile bucket).
+    pub fn is_extraction(&self) -> bool {
+        matches!(
+            self,
+            OpKind::RegexExtract { .. } | OpKind::DictExtract { .. }
+        )
+    }
+}
+
+/// One graph node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: OpKind,
+    pub inputs: Vec<NodeId>,
+    pub schema: Schema,
+    /// View name, if this node is a named view's root.
+    pub view: Option<String>,
+}
+
+/// The operator graph: a DAG with topological node ids and named outputs.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// `output view X;` targets: (view name, node id).
+    pub outputs: Vec<(String, NodeId)>,
+}
+
+/// Graph construction/validation error.
+#[derive(Debug)]
+pub enum GraphError {
+    BadInput { node: NodeId, input: NodeId },
+    Type { node: NodeId, err: TypeError },
+    SchemaMismatch { node: NodeId, detail: String },
+    BadColumn { node: NodeId, col: usize },
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::BadInput { node, input } => {
+                write!(f, "node {node}: input {input} is not an earlier node")
+            }
+            GraphError::Type { node, err } => write!(f, "node {node}: {err}"),
+            GraphError::SchemaMismatch { node, detail } => {
+                write!(f, "node {node}: schema mismatch: {detail}")
+            }
+            GraphError::BadColumn { node, col } => {
+                write!(f, "node {node}: column {col} out of range")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+impl Graph {
+    /// Create an empty graph.
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    /// Append a node, computing its schema from the inputs. Inputs must
+    /// already exist (topological construction).
+    pub fn add(&mut self, kind: OpKind, inputs: Vec<NodeId>) -> Result<NodeId, GraphError> {
+        let id = self.nodes.len();
+        for &i in &inputs {
+            if i >= id {
+                return Err(GraphError::BadInput { node: id, input: i });
+            }
+        }
+        let schema = self.derive_schema(id, &kind, &inputs)?;
+        self.nodes.push(Node {
+            id,
+            kind,
+            inputs,
+            schema,
+            view: None,
+        });
+        Ok(id)
+    }
+
+    /// Mark `node` as the root of view `name`.
+    pub fn name_view(&mut self, node: NodeId, name: impl Into<String>) {
+        self.nodes[node].view = Some(name.into());
+    }
+
+    /// Register an output view.
+    pub fn add_output(&mut self, name: impl Into<String>, node: NodeId) {
+        let name = name.into();
+        self.nodes[node].view.get_or_insert_with(|| name.clone());
+        self.outputs.push((name, node));
+    }
+
+    /// Schema derivation (also the validator for operator/arity/type rules).
+    fn derive_schema(
+        &self,
+        id: NodeId,
+        kind: &OpKind,
+        inputs: &[NodeId],
+    ) -> Result<Schema, GraphError> {
+        let input_schema = |k: usize| -> &Schema { &self.nodes[inputs[k]].schema };
+        let expect_inputs = |n: usize| -> Result<(), GraphError> {
+            if inputs.len() != n {
+                Err(GraphError::SchemaMismatch {
+                    node: id,
+                    detail: format!("expected {n} inputs, got {}", inputs.len()),
+                })
+            } else {
+                Ok(())
+            }
+        };
+        match kind {
+            OpKind::DocScan => {
+                expect_inputs(0)?;
+                Ok(Schema::of(&[("text", FieldType::Span)]))
+            }
+            OpKind::RegexExtract { out, .. } | OpKind::DictExtract { out, .. } => {
+                expect_inputs(1)?;
+                // extraction reads the document; its input must expose a span
+                // column (the doc text) — output is a single span column.
+                if input_schema(0).fields.is_empty() {
+                    return Err(GraphError::SchemaMismatch {
+                        node: id,
+                        detail: "extraction over empty schema".into(),
+                    });
+                }
+                Ok(Schema {
+                    fields: vec![Field {
+                        name: out.clone(),
+                        ty: FieldType::Span,
+                    }],
+                })
+            }
+            OpKind::Select { pred } => {
+                expect_inputs(1)?;
+                let schema = input_schema(0);
+                match pred.infer_type(schema) {
+                    Ok(FieldType::Bool) => Ok(schema.clone()),
+                    Ok(t) => Err(GraphError::SchemaMismatch {
+                        node: id,
+                        detail: format!("select predicate has type {t}, want Boolean"),
+                    }),
+                    Err(err) => Err(GraphError::Type { node: id, err }),
+                }
+            }
+            OpKind::Project { cols } => {
+                expect_inputs(1)?;
+                let schema = input_schema(0);
+                let mut fields = Vec::with_capacity(cols.len());
+                for (name, e) in cols {
+                    let ty = e
+                        .infer_type(schema)
+                        .map_err(|err| GraphError::Type { node: id, err })?;
+                    fields.push(Field {
+                        name: name.clone(),
+                        ty,
+                    });
+                }
+                Ok(Schema { fields })
+            }
+            OpKind::Join { pred } => {
+                expect_inputs(2)?;
+                let joined = input_schema(0).concat(input_schema(1));
+                match pred.infer_type(&joined) {
+                    Ok(FieldType::Bool) => Ok(joined),
+                    Ok(t) => Err(GraphError::SchemaMismatch {
+                        node: id,
+                        detail: format!("join predicate has type {t}, want Boolean"),
+                    }),
+                    Err(err) => Err(GraphError::Type { node: id, err }),
+                }
+            }
+            OpKind::Union => {
+                if inputs.is_empty() {
+                    return Err(GraphError::SchemaMismatch {
+                        node: id,
+                        detail: "union needs at least one input".into(),
+                    });
+                }
+                let first = input_schema(0).clone();
+                for k in 1..inputs.len() {
+                    let s = input_schema(k);
+                    if s.arity() != first.arity()
+                        || s.fields
+                            .iter()
+                            .zip(&first.fields)
+                            .any(|(a, b)| a.ty != b.ty)
+                    {
+                        return Err(GraphError::SchemaMismatch {
+                            node: id,
+                            detail: format!(
+                                "union input {k} schema {s} incompatible with {first}"
+                            ),
+                        });
+                    }
+                }
+                Ok(first)
+            }
+            OpKind::Difference => {
+                expect_inputs(2)?;
+                let (a, b) = (input_schema(0), input_schema(1));
+                if a.arity() != b.arity()
+                    || a.fields.iter().zip(&b.fields).any(|(x, y)| x.ty != y.ty)
+                {
+                    return Err(GraphError::SchemaMismatch {
+                        node: id,
+                        detail: format!("minus inputs {a} vs {b}"),
+                    });
+                }
+                Ok(a.clone())
+            }
+            OpKind::Block { col, .. } => {
+                expect_inputs(1)?;
+                let schema = input_schema(0);
+                if *col >= schema.arity() {
+                    return Err(GraphError::BadColumn { node: id, col: *col });
+                }
+                if schema.type_at(*col) != FieldType::Span {
+                    return Err(GraphError::SchemaMismatch {
+                        node: id,
+                        detail: format!("block column {col} is not a span"),
+                    });
+                }
+                Ok(Schema::of(&[("block", FieldType::Span)]))
+            }
+            OpKind::Consolidate { col, .. } => {
+                expect_inputs(1)?;
+                let schema = input_schema(0);
+                if *col >= schema.arity() {
+                    return Err(GraphError::BadColumn { node: id, col: *col });
+                }
+                if schema.type_at(*col) != FieldType::Span {
+                    return Err(GraphError::SchemaMismatch {
+                        node: id,
+                        detail: format!("consolidate column {col} is not a span"),
+                    });
+                }
+                Ok(schema.clone())
+            }
+            OpKind::Sort { keys } => {
+                expect_inputs(1)?;
+                let schema = input_schema(0);
+                for &k in keys {
+                    if k >= schema.arity() {
+                        return Err(GraphError::BadColumn { node: id, col: k });
+                    }
+                }
+                Ok(schema.clone())
+            }
+            OpKind::Limit { .. } => {
+                expect_inputs(1)?;
+                Ok(input_schema(0).clone())
+            }
+            OpKind::SubgraphExec { schema, .. } => {
+                if inputs.is_empty() {
+                    return Err(GraphError::SchemaMismatch {
+                        node: id,
+                        detail: "SubgraphExec needs the DocScan as input 0".into(),
+                    });
+                }
+                Ok(schema.clone())
+            }
+            OpKind::ExtInput { schema, .. } => {
+                expect_inputs(0)?;
+                Ok(schema.clone())
+            }
+        }
+    }
+
+    /// Downstream consumers of each node.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Nodes reachable (upstream) from the outputs — dead-node analysis for
+    /// the optimizer.
+    pub fn live_nodes(&self) -> Vec<bool> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<NodeId> = self.outputs.iter().map(|(_, n)| *n).collect();
+        while let Some(n) = stack.pop() {
+            if live[n] {
+                continue;
+            }
+            live[n] = true;
+            stack.extend(&self.nodes[n].inputs);
+        }
+        live
+    }
+
+    /// Human-readable AOG dump (the paper's Fig 1-style view of the graph).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        let view_of: HashMap<NodeId, &str> = self
+            .nodes
+            .iter()
+            .filter_map(|n| n.view.as_deref().map(|v| (n.id, v)))
+            .collect();
+        for n in &self.nodes {
+            let _ = write!(s, "  %{:<3} = {}(", n.id, n.kind.name());
+            match &n.kind {
+                OpKind::RegexExtract { regex, .. } => {
+                    let _ = write!(s, "/{}/", regex.pattern.source);
+                }
+                OpKind::DictExtract { dict, .. } => {
+                    let _ = write!(s, "'{}' [{} entries]", dict.name, dict.entries.len());
+                }
+                OpKind::Select { pred } => {
+                    let _ = write!(s, "{pred}");
+                }
+                OpKind::Join { pred } => {
+                    let _ = write!(s, "{pred}");
+                }
+                OpKind::Project { cols } => {
+                    for (i, (name, e)) in cols.iter().enumerate() {
+                        if i > 0 {
+                            let _ = write!(s, ", ");
+                        }
+                        let _ = write!(s, "{name}={e}");
+                    }
+                }
+                OpKind::Consolidate { col, policy } => {
+                    let _ = write!(s, "${col} using {}", policy.name());
+                }
+                OpKind::Block { col, max_gap, min_size } => {
+                    let _ = write!(s, "${col} gap {max_gap} min {min_size}");
+                }
+                OpKind::Sort { keys } => {
+                    let _ = write!(s, "{keys:?}");
+                }
+                OpKind::Limit { n: k } => {
+                    let _ = write!(s, "{k}");
+                }
+                OpKind::SubgraphExec {
+                    subgraph_id,
+                    output_idx,
+                    ..
+                } => {
+                    let _ = write!(s, "#{subgraph_id}.{output_idx}");
+                }
+                OpKind::ExtInput { slot, .. } => {
+                    let _ = write!(s, "slot {slot}");
+                }
+                _ => {}
+            }
+            let _ = write!(s, ")");
+            if !n.inputs.is_empty() {
+                let _ = write!(
+                    s,
+                    " <- {}",
+                    n.inputs
+                        .iter()
+                        .map(|i| format!("%{i}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+            let _ = write!(s, "  :: {}", n.schema);
+            if let Some(v) = view_of.get(&n.id) {
+                let _ = write!(s, "  (view {v})");
+            }
+            let _ = writeln!(s);
+        }
+        for (name, node) in &self.outputs {
+            let _ = writeln!(s, "  output {name} = %{node}");
+        }
+        s
+    }
+
+    /// Count nodes by operator family — used in tests and by the profiler.
+    pub fn op_counts(&self) -> HashMap<&'static str, usize> {
+        let mut m = HashMap::new();
+        for n in &self.nodes {
+            *m.entry(n.kind.name()).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aog::expr::Func;
+    use crate::dict::CaseMode;
+
+    fn regex_node(pat: &str) -> OpKind {
+        OpKind::RegexExtract {
+            regex: Arc::new(crate::regex::compile(pat, false).unwrap()),
+            out: "match".into(),
+        }
+    }
+
+    fn dict_node(entries: &[&str]) -> OpKind {
+        let d = Dictionary::new(
+            "d",
+            entries.iter().map(|s| s.to_string()).collect(),
+            CaseMode::Insensitive,
+        );
+        let m = d.compile();
+        OpKind::DictExtract {
+            dict: Arc::new(d),
+            matcher: Arc::new(m),
+            out: "match".into(),
+        }
+    }
+
+    #[test]
+    fn build_simple_graph() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let re = g.add(regex_node(r"\d+"), vec![doc]).unwrap();
+        let sel = g
+            .add(
+                OpKind::Select {
+                    pred: Expr::Cmp(
+                        Box::new(Expr::Call(Func::GetLength, vec![Expr::Col(0)])),
+                        crate::aog::expr::CmpOp::Ge,
+                        Box::new(Expr::LitInt(3)),
+                    ),
+                },
+                vec![re],
+            )
+            .unwrap();
+        g.add_output("Numbers", sel);
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.nodes[sel].schema.arity(), 1);
+        assert!(g.dump().contains("RegularExpression"));
+    }
+
+    #[test]
+    fn join_schema_concat() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(regex_node("a+"), vec![doc]).unwrap();
+        let b = g.add(dict_node(&["bob"]), vec![doc]).unwrap();
+        let j = g
+            .add(
+                OpKind::Join {
+                    pred: Expr::Call(
+                        Func::Follows,
+                        vec![
+                            Expr::Col(0),
+                            Expr::Col(1),
+                            Expr::LitInt(0),
+                            Expr::LitInt(20),
+                        ],
+                    ),
+                },
+                vec![a, b],
+            )
+            .unwrap();
+        assert_eq!(g.nodes[j].schema.arity(), 2);
+    }
+
+    #[test]
+    fn union_schema_check() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(regex_node("a"), vec![doc]).unwrap();
+        let b = g.add(regex_node("b"), vec![doc]).unwrap();
+        let u = g.add(OpKind::Union, vec![a, b]).unwrap();
+        assert_eq!(g.nodes[u].schema.arity(), 1);
+
+        // incompatible union: project to int vs span
+        let p = g
+            .add(
+                OpKind::Project {
+                    cols: vec![(
+                        "len".into(),
+                        Expr::Call(Func::GetLength, vec![Expr::Col(0)]),
+                    )],
+                },
+                vec![a],
+            )
+            .unwrap();
+        assert!(g.add(OpKind::Union, vec![a, p]).is_err());
+    }
+
+    #[test]
+    fn bad_predicate_type_rejected() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(regex_node("a"), vec![doc]).unwrap();
+        let res = g.add(
+            OpKind::Select {
+                pred: Expr::LitInt(1),
+            },
+            vec![a],
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn consolidate_requires_span_column() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(regex_node("a"), vec![doc]).unwrap();
+        let p = g
+            .add(
+                OpKind::Project {
+                    cols: vec![(
+                        "len".into(),
+                        Expr::Call(Func::GetLength, vec![Expr::Col(0)]),
+                    )],
+                },
+                vec![a],
+            )
+            .unwrap();
+        assert!(g
+            .add(
+                OpKind::Consolidate {
+                    col: 0,
+                    policy: ConsolidatePolicy::ContainedWithin
+                },
+                vec![p]
+            )
+            .is_err());
+        assert!(g
+            .add(
+                OpKind::Consolidate {
+                    col: 0,
+                    policy: ConsolidatePolicy::ContainedWithin
+                },
+                vec![a]
+            )
+            .is_ok());
+    }
+
+    #[test]
+    fn topological_input_enforced() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        assert!(g.add(OpKind::Union, vec![doc, 99]).is_err());
+    }
+
+    #[test]
+    fn live_nodes_and_consumers() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(regex_node("a"), vec![doc]).unwrap();
+        let _dead = g.add(regex_node("b"), vec![doc]).unwrap();
+        g.add_output("A", a);
+        let live = g.live_nodes();
+        assert_eq!(live, vec![true, true, false]);
+        let cons = g.consumers();
+        assert_eq!(cons[doc].len(), 2);
+        assert!(cons[a].is_empty());
+    }
+
+    #[test]
+    fn dump_contains_outputs() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(dict_node(&["ibm", "research"]), vec![doc]).unwrap();
+        g.add_output("Orgs", a);
+        let d = g.dump();
+        assert!(d.contains("Dictionary"), "{d}");
+        assert!(d.contains("output Orgs"), "{d}");
+        assert!(d.contains("2 entries"), "{d}");
+    }
+}

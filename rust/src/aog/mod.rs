@@ -1,0 +1,20 @@
+//! The AOG — SystemT's operator graph, the IR of the whole system.
+//!
+//! An AQL query compiles into a DAG of operators ([`Graph`]): extraction
+//! operators (regex, dictionary) at the leaves reading the document, and
+//! relational operators (select, project, join, union, consolidate, sort,
+//! limit) above them. The optimizer rewrites the graph, the partitioner
+//! splits it into a software supergraph plus accelerator subgraphs (paper
+//! Fig 1), and both the software executor and the hardware compiler consume
+//! it.
+//!
+//! Tuples are rows of [`Value`]s described by a [`Schema`]; the span type
+//! and its 32-bit offsets follow the paper (§3).
+
+pub mod expr;
+pub mod graph;
+pub mod types;
+
+pub use expr::{EvalCtx, Expr, Func};
+pub use graph::{Graph, Node, NodeId, OpKind};
+pub use types::{Field, FieldType, Schema, Tuple, Value};

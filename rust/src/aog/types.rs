@@ -1,0 +1,230 @@
+//! Tuple values and schemas.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::text::Span;
+
+/// A runtime value. The type set mirrors the paper's §3: spans, integers,
+/// floats, booleans — plus strings (for `GetText` results) and null.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Span(Span),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(Arc<str>),
+    Null,
+}
+
+impl Value {
+    /// The value's type, or `None` for null.
+    pub fn field_type(&self) -> Option<FieldType> {
+        match self {
+            Value::Span(_) => Some(FieldType::Span),
+            Value::Int(_) => Some(FieldType::Int),
+            Value::Float(_) => Some(FieldType::Float),
+            Value::Bool(_) => Some(FieldType::Bool),
+            Value::Str(_) => Some(FieldType::Str),
+            Value::Null => None,
+        }
+    }
+
+    /// Unwrap a span (panics on type mismatch — the compiler type-checks
+    /// expressions before execution, so a mismatch is an engine bug).
+    #[inline]
+    pub fn as_span(&self) -> Span {
+        match self {
+            Value::Span(s) => *s,
+            other => panic!("expected span, got {other:?}"),
+        }
+    }
+
+    /// Unwrap an int.
+    #[inline]
+    pub fn as_int(&self) -> i64 {
+        match self {
+            Value::Int(i) => *i,
+            other => panic!("expected int, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a bool.
+    #[inline]
+    pub fn as_bool(&self) -> bool {
+        match self {
+            Value::Bool(b) => *b,
+            other => panic!("expected bool, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a string.
+    #[inline]
+    pub fn as_str(&self) -> &str {
+        match self {
+            Value::Str(s) => s,
+            other => panic!("expected str, got {other:?}"),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Span(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Null => write!(f, "null"),
+        }
+    }
+}
+
+/// Column types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FieldType {
+    Span,
+    Int,
+    Float,
+    Bool,
+    Str,
+}
+
+impl fmt::Display for FieldType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FieldType::Span => "Span",
+            FieldType::Int => "Integer",
+            FieldType::Float => "Float",
+            FieldType::Bool => "Boolean",
+            FieldType::Str => "Text",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A named, typed column.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    pub ty: FieldType,
+}
+
+/// An ordered list of fields. All operator input/output schemas are known
+/// at compile time (paper §3) — the hardware compiler depends on this.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Schema {
+    pub fields: Vec<Field>,
+}
+
+impl Schema {
+    /// Build from `(name, type)` pairs.
+    pub fn of(fields: &[(&str, FieldType)]) -> Schema {
+        Schema {
+            fields: fields
+                .iter()
+                .map(|(n, t)| Field {
+                    name: n.to_string(),
+                    ty: *t,
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of columns.
+    pub fn arity(&self) -> usize {
+        self.fields.len()
+    }
+
+    /// Index of column `name`.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fields.iter().position(|f| f.name == name)
+    }
+
+    /// Type of column `i`.
+    pub fn type_at(&self, i: usize) -> FieldType {
+        self.fields[i].ty
+    }
+
+    /// Concatenate (for joins): left columns then right columns; name
+    /// collisions get the right side prefixed.
+    pub fn concat(&self, right: &Schema) -> Schema {
+        let mut fields = self.fields.clone();
+        for f in &right.fields {
+            let name = if self.index_of(&f.name).is_some() {
+                format!("r_{}", f.name)
+            } else {
+                f.name.clone()
+            };
+            fields.push(Field {
+                name,
+                ty: f.ty,
+            });
+        }
+        Schema { fields }
+    }
+}
+
+impl fmt::Display for Schema {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, fld) in self.fields.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{} {}", fld.name, fld.ty)?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// A row. Plain vector — the executor's hot loops index positionally.
+pub type Tuple = Vec<Value>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_types() {
+        assert_eq!(Value::Int(3).field_type(), Some(FieldType::Int));
+        assert_eq!(Value::Null.field_type(), None);
+        assert_eq!(
+            Value::Span(Span::new(0, 1)).field_type(),
+            Some(FieldType::Span)
+        );
+    }
+
+    #[test]
+    fn unwraps() {
+        assert_eq!(Value::Span(Span::new(1, 2)).as_span(), Span::new(1, 2));
+        assert_eq!(Value::Int(-4).as_int(), -4);
+        assert!(Value::Bool(true).as_bool());
+        assert_eq!(Value::Str("x".into()).as_str(), "x");
+    }
+
+    #[test]
+    #[should_panic(expected = "expected span")]
+    fn wrong_unwrap_panics() {
+        Value::Int(1).as_span();
+    }
+
+    #[test]
+    fn schema_lookup_and_concat() {
+        let a = Schema::of(&[("m", FieldType::Span), ("n", FieldType::Int)]);
+        let b = Schema::of(&[("m", FieldType::Span)]);
+        assert_eq!(a.index_of("n"), Some(1));
+        assert_eq!(a.index_of("zz"), None);
+        let c = a.concat(&b);
+        assert_eq!(c.arity(), 3);
+        assert_eq!(c.fields[2].name, "r_m");
+    }
+
+    #[test]
+    fn display_forms() {
+        let s = Schema::of(&[("m", FieldType::Span)]);
+        assert_eq!(s.to_string(), "(m Span)");
+        assert_eq!(Value::Bool(false).to_string(), "false");
+    }
+}

@@ -1,0 +1,181 @@
+//! AQL surface syntax tree (what the parser produces, before semantic
+//! analysis and lowering to the operator graph).
+
+use crate::dict::CaseMode;
+use crate::text::span::ConsolidatePolicy;
+
+/// A whole program: ordered statements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub statements: Vec<Statement>,
+}
+
+/// Top-level statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Statement {
+    CreateDictionary {
+        name: String,
+        case: CaseMode,
+        entries: Vec<String>,
+    },
+    CreateDictionaryFromFile {
+        name: String,
+        case: CaseMode,
+        path: String,
+    },
+    CreateView {
+        name: String,
+        body: ViewBody,
+    },
+    OutputView {
+        name: String,
+    },
+}
+
+/// View bodies: a single select/extract, or a union of them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ViewBody {
+    Select(SelectStmt),
+    Extract(ExtractStmt),
+    Union(Vec<ViewBody>),
+    /// `lhs minus rhs` — set difference.
+    Minus(Box<ViewBody>, Box<ViewBody>),
+    /// SystemT's BLOCK statement.
+    Block(BlockStmt),
+}
+
+/// `block a.col with gap <n> min <m> from Source a`
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockStmt {
+    pub alias: String,
+    pub col: String,
+    pub gap: u32,
+    pub min_size: usize,
+    pub source: SourceRef,
+}
+
+/// `extract ... on <alias>.<col> as <name> from <source> <alias>`
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExtractStmt {
+    pub kind: ExtractKind,
+    pub input_alias: String,
+    pub input_col: String,
+    pub out_name: String,
+    pub source: SourceRef,
+}
+
+/// The two extraction primitives.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExtractKind {
+    Regex {
+        pattern: String,
+        case_insensitive: bool,
+    },
+    Dictionary {
+        dict_name: String,
+    },
+}
+
+/// `select items from sources [where preds] [consolidate ...] [order by] [limit]`
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectStmt {
+    pub items: Vec<SelectItem>,
+    pub sources: Vec<(SourceRef, String)>, // (source, alias)
+    pub preds: Vec<AqlExpr>,               // conjunction
+    pub consolidate: Option<(String, ConsolidatePolicy)>, // (output col name, policy)
+    pub order_by: Vec<String>,             // output col names
+    pub limit: Option<usize>,
+}
+
+/// One select-list item: an expression plus output name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectItem {
+    pub expr: AqlExpr,
+    pub name: String,
+}
+
+/// A `from` source.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SourceRef {
+    Document,
+    View(String),
+}
+
+/// Surface expressions (resolved to `aog::Expr` by the compiler).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AqlExpr {
+    /// `alias.column`
+    ColRef { alias: String, col: String },
+    Int(i64),
+    Str(String),
+    Bool(bool),
+    /// `Func(args...)`
+    Call { func: String, args: Vec<AqlExpr> },
+    Cmp {
+        lhs: Box<AqlExpr>,
+        op: crate::aog::expr::CmpOp,
+        rhs: Box<AqlExpr>,
+    },
+    And(Box<AqlExpr>, Box<AqlExpr>),
+    Or(Box<AqlExpr>, Box<AqlExpr>),
+    Not(Box<AqlExpr>),
+}
+
+impl AqlExpr {
+    /// Aliases referenced by this expression (for predicate pushdown at
+    /// compile time).
+    pub fn aliases(&self, out: &mut Vec<String>) {
+        match self {
+            AqlExpr::ColRef { alias, .. } => {
+                if !out.contains(alias) {
+                    out.push(alias.clone());
+                }
+            }
+            AqlExpr::Int(_) | AqlExpr::Str(_) | AqlExpr::Bool(_) => {}
+            AqlExpr::Call { args, .. } => {
+                for a in args {
+                    a.aliases(out);
+                }
+            }
+            AqlExpr::Cmp { lhs, rhs, .. } => {
+                lhs.aliases(out);
+                rhs.aliases(out);
+            }
+            AqlExpr::And(a, b) | AqlExpr::Or(a, b) => {
+                a.aliases(out);
+                b.aliases(out);
+            }
+            AqlExpr::Not(a) => a.aliases(out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aliases_collected_once() {
+        let e = AqlExpr::Call {
+            func: "Follows".into(),
+            args: vec![
+                AqlExpr::ColRef {
+                    alias: "p".into(),
+                    col: "name".into(),
+                },
+                AqlExpr::ColRef {
+                    alias: "o".into(),
+                    col: "m".into(),
+                },
+                AqlExpr::ColRef {
+                    alias: "p".into(),
+                    col: "name".into(),
+                },
+                AqlExpr::Int(3),
+            ],
+        };
+        let mut als = Vec::new();
+        e.aliases(&mut als);
+        assert_eq!(als, vec!["p".to_string(), "o".to_string()]);
+    }
+}

@@ -1,0 +1,588 @@
+//! Semantic analysis and lowering: AQL AST → operator graph.
+//!
+//! The lowering is deliberately naive — multi-source selects become
+//! left-deep *cross joins* with one big `Select` on top. The optimizer
+//! ([`crate::optimizer`]) then pushes predicates down and converts
+//! cross-join+filter into predicated joins, mirroring SystemT's split
+//! between rule translation and cost-based optimization.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Arc;
+
+use crate::aog::expr::{CmpOp, Expr, Func};
+use crate::aog::{Graph, NodeId, OpKind, Schema};
+use crate::dict::{AhoCorasick, Dictionary};
+
+use super::ast::*;
+
+/// Compilation error.
+#[derive(Debug)]
+pub enum CompileError {
+    Lex(String),
+    Parse(String),
+    UnknownView(String),
+    UnknownDictionary(String),
+    UnknownFunction(String),
+    UnknownAlias(String),
+    UnknownColumn { alias: String, col: String },
+    DuplicateName(String),
+    Regex(String),
+    Graph(String),
+    Unsupported(String),
+}
+
+impl fmt::Display for CompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CompileError::Lex(m) => write!(f, "{m}"),
+            CompileError::Parse(m) => write!(f, "{m}"),
+            CompileError::UnknownView(v) => write!(f, "unknown view '{v}'"),
+            CompileError::UnknownDictionary(d) => write!(f, "unknown dictionary '{d}'"),
+            CompileError::UnknownFunction(x) => write!(f, "unknown function '{x}'"),
+            CompileError::UnknownAlias(a) => write!(f, "unknown alias '{a}'"),
+            CompileError::UnknownColumn { alias, col } => {
+                write!(f, "unknown column '{alias}.{col}'")
+            }
+            CompileError::DuplicateName(n) => write!(f, "duplicate definition of '{n}'"),
+            CompileError::Regex(m) => write!(f, "{m}"),
+            CompileError::Graph(m) => write!(f, "{m}"),
+            CompileError::Unsupported(m) => write!(f, "unsupported: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Name-resolution state across statements.
+pub struct Catalog {
+    dicts: HashMap<String, (Arc<Dictionary>, Arc<AhoCorasick>)>,
+    views: HashMap<String, NodeId>,
+    doc_scan: Option<NodeId>,
+}
+
+impl Catalog {
+    /// Empty catalog.
+    pub fn new() -> Catalog {
+        Catalog {
+            dicts: HashMap::new(),
+            views: HashMap::new(),
+            doc_scan: None,
+        }
+    }
+
+    /// The shared DocScan node (created on first use).
+    fn doc_scan(&mut self, g: &mut Graph) -> NodeId {
+        if let Some(d) = self.doc_scan {
+            return d;
+        }
+        let d = g
+            .add(OpKind::DocScan, vec![])
+            .expect("DocScan cannot fail");
+        self.doc_scan = Some(d);
+        d
+    }
+}
+
+impl Default for Catalog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Compile a parsed program into an operator graph.
+pub fn compile_program(program: &Program) -> Result<Graph, CompileError> {
+    let mut g = Graph::new();
+    let mut cat = Catalog::new();
+    for stmt in &program.statements {
+        match stmt {
+            Statement::CreateDictionary {
+                name,
+                case,
+                entries,
+            } => {
+                if cat.dicts.contains_key(name) {
+                    return Err(CompileError::DuplicateName(name.clone()));
+                }
+                let d = Arc::new(Dictionary::new(name.clone(), entries.clone(), *case));
+                let m = Arc::new(d.compile());
+                cat.dicts.insert(name.clone(), (d, m));
+            }
+            Statement::CreateDictionaryFromFile { name, case, path } => {
+                if cat.dicts.contains_key(name) {
+                    return Err(CompileError::DuplicateName(name.clone()));
+                }
+                let content = std::fs::read_to_string(path).map_err(|e| {
+                    CompileError::Unsupported(format!("dictionary file {path}: {e}"))
+                })?;
+                let entries: Vec<String> = content
+                    .lines()
+                    .map(|l| l.trim().to_string())
+                    .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                    .collect();
+                let d = Arc::new(Dictionary::new(name.clone(), entries, *case));
+                let m = Arc::new(d.compile());
+                cat.dicts.insert(name.clone(), (d, m));
+            }
+            Statement::CreateView { name, body } => {
+                if cat.views.contains_key(name) {
+                    return Err(CompileError::DuplicateName(name.clone()));
+                }
+                let node = compile_body(body, &mut g, &mut cat)?;
+                g.name_view(node, name.clone());
+                cat.views.insert(name.clone(), node);
+            }
+            Statement::OutputView { name } => {
+                let node = *cat
+                    .views
+                    .get(name)
+                    .ok_or_else(|| CompileError::UnknownView(name.clone()))?;
+                g.add_output(name.clone(), node);
+            }
+        }
+    }
+    Ok(g)
+}
+
+fn compile_body(
+    body: &ViewBody,
+    g: &mut Graph,
+    cat: &mut Catalog,
+) -> Result<NodeId, CompileError> {
+    match body {
+        ViewBody::Extract(e) => compile_extract(e, g, cat),
+        ViewBody::Select(s) => compile_select(s, g, cat),
+        ViewBody::Union(parts) => {
+            let nodes = parts
+                .iter()
+                .map(|p| compile_body(p, g, cat))
+                .collect::<Result<Vec<_>, _>>()?;
+            g.add(OpKind::Union, nodes)
+                .map_err(|e| CompileError::Graph(e.to_string()))
+        }
+        ViewBody::Minus(lhs, rhs) => {
+            let l = compile_body(lhs, g, cat)?;
+            let r = compile_body(rhs, g, cat)?;
+            g.add(OpKind::Difference, vec![l, r])
+                .map_err(|e| CompileError::Graph(e.to_string()))
+        }
+        ViewBody::Block(b) => {
+            let node = match &b.source {
+                SourceRef::Document => {
+                    return Err(CompileError::Unsupported(
+                        "block over Document — block a view column".into(),
+                    ))
+                }
+                SourceRef::View(v) => *cat
+                    .views
+                    .get(v)
+                    .ok_or_else(|| CompileError::UnknownView(v.clone()))?,
+            };
+            let schema = &g.nodes[node].schema;
+            let col = schema.index_of(&b.col).ok_or_else(|| {
+                CompileError::UnknownColumn {
+                    alias: b.alias.clone(),
+                    col: b.col.clone(),
+                }
+            })?;
+            g.add(
+                OpKind::Block {
+                    col,
+                    max_gap: b.gap,
+                    min_size: b.min_size,
+                },
+                vec![node],
+            )
+            .map_err(|e| CompileError::Graph(e.to_string()))
+        }
+    }
+}
+
+fn compile_extract(
+    e: &ExtractStmt,
+    g: &mut Graph,
+    cat: &mut Catalog,
+) -> Result<NodeId, CompileError> {
+    match &e.source {
+        SourceRef::Document => {}
+        SourceRef::View(v) => {
+            return Err(CompileError::Unsupported(format!(
+                "extraction over view '{v}' — extraction operators read Document.text \
+                 (as in the paper's queries)"
+            )))
+        }
+    }
+    if e.input_col != "text" {
+        return Err(CompileError::UnknownColumn {
+            alias: e.input_alias.clone(),
+            col: e.input_col.clone(),
+        });
+    }
+    let doc = cat.doc_scan(g);
+    let kind = match &e.kind {
+        ExtractKind::Regex {
+            pattern,
+            case_insensitive,
+        } => {
+            let re = crate::regex::compile(pattern, *case_insensitive)
+                .map_err(|err| CompileError::Regex(err.to_string()))?;
+            OpKind::RegexExtract {
+                regex: Arc::new(re),
+                out: e.out_name.clone(),
+            }
+        }
+        ExtractKind::Dictionary { dict_name } => {
+            let (d, m) = cat
+                .dicts
+                .get(dict_name)
+                .ok_or_else(|| CompileError::UnknownDictionary(dict_name.clone()))?;
+            OpKind::DictExtract {
+                dict: d.clone(),
+                matcher: m.clone(),
+                out: e.out_name.clone(),
+            }
+        }
+    };
+    g.add(kind, vec![doc])
+        .map_err(|err| CompileError::Graph(err.to_string()))
+}
+
+/// Alias resolution table: alias → (column offset, schema).
+struct Scope {
+    entries: Vec<(String, usize, Schema)>,
+}
+
+impl Scope {
+    fn resolve(&self, alias: &str, col: &str) -> Result<usize, CompileError> {
+        for (a, off, schema) in &self.entries {
+            if a == alias {
+                return schema
+                    .index_of(col)
+                    .map(|i| off + i)
+                    .ok_or_else(|| CompileError::UnknownColumn {
+                        alias: alias.to_string(),
+                        col: col.to_string(),
+                    });
+            }
+        }
+        Err(CompileError::UnknownAlias(alias.to_string()))
+    }
+}
+
+fn compile_select(
+    s: &SelectStmt,
+    g: &mut Graph,
+    cat: &mut Catalog,
+) -> Result<NodeId, CompileError> {
+    if s.sources.is_empty() {
+        return Err(CompileError::Unsupported("select with no sources".into()));
+    }
+    // Resolve sources to nodes.
+    let mut scope = Scope { entries: Vec::new() };
+    let mut nodes = Vec::new();
+    let mut offset = 0usize;
+    for (src, alias) in &s.sources {
+        let node = match src {
+            SourceRef::Document => cat.doc_scan(g),
+            SourceRef::View(v) => *cat
+                .views
+                .get(v)
+                .ok_or_else(|| CompileError::UnknownView(v.clone()))?,
+        };
+        let schema = g.nodes[node].schema.clone();
+        if scope.entries.iter().any(|(a, _, _)| a == alias) {
+            return Err(CompileError::DuplicateName(alias.clone()));
+        }
+        scope.entries.push((alias.clone(), offset, schema.clone()));
+        offset += schema.arity();
+        nodes.push(node);
+    }
+
+    // Left-deep cross-join chain (optimizer rewrites into predicated joins).
+    let mut cur = nodes[0];
+    for &n in &nodes[1..] {
+        cur = g
+            .add(
+                OpKind::Join {
+                    pred: Expr::LitBool(true),
+                },
+                vec![cur, n],
+            )
+            .map_err(|e| CompileError::Graph(e.to_string()))?;
+    }
+
+    // Conjoin predicates into one Select.
+    if !s.preds.is_empty() {
+        let mut pred: Option<Expr> = None;
+        for p in &s.preds {
+            let e = resolve_expr(p, &scope)?;
+            pred = Some(match pred {
+                None => e,
+                Some(acc) => Expr::And(Box::new(acc), Box::new(e)),
+            });
+        }
+        cur = g
+            .add(
+                OpKind::Select {
+                    pred: pred.unwrap(),
+                },
+                vec![cur],
+            )
+            .map_err(|e| CompileError::Graph(e.to_string()))?;
+    }
+
+    // Projection.
+    let mut cols = Vec::with_capacity(s.items.len());
+    for item in &s.items {
+        cols.push((item.name.clone(), resolve_expr(&item.expr, &scope)?));
+    }
+    cur = g
+        .add(OpKind::Project { cols }, vec![cur])
+        .map_err(|e| CompileError::Graph(e.to_string()))?;
+
+    // Consolidation over an output column.
+    if let Some((col_name, policy)) = &s.consolidate {
+        let schema = &g.nodes[cur].schema;
+        let col = schema.index_of(col_name).ok_or_else(|| {
+            CompileError::UnknownColumn {
+                alias: "<output>".into(),
+                col: col_name.clone(),
+            }
+        })?;
+        cur = g
+            .add(
+                OpKind::Consolidate {
+                    col,
+                    policy: *policy,
+                },
+                vec![cur],
+            )
+            .map_err(|e| CompileError::Graph(e.to_string()))?;
+    }
+
+    // Order by / limit.
+    if !s.order_by.is_empty() {
+        let schema = &g.nodes[cur].schema;
+        let keys = s
+            .order_by
+            .iter()
+            .map(|n| {
+                schema.index_of(n).ok_or_else(|| CompileError::UnknownColumn {
+                    alias: "<output>".into(),
+                    col: n.clone(),
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        cur = g
+            .add(OpKind::Sort { keys }, vec![cur])
+            .map_err(|e| CompileError::Graph(e.to_string()))?;
+    }
+    if let Some(n) = s.limit {
+        cur = g
+            .add(OpKind::Limit { n }, vec![cur])
+            .map_err(|e| CompileError::Graph(e.to_string()))?;
+    }
+    Ok(cur)
+}
+
+fn resolve_expr(e: &AqlExpr, scope: &Scope) -> Result<Expr, CompileError> {
+    Ok(match e {
+        AqlExpr::ColRef { alias, col } => Expr::Col(scope.resolve(alias, col)?),
+        AqlExpr::Int(n) => Expr::LitInt(*n),
+        AqlExpr::Str(s) => Expr::LitStr(s.clone()),
+        AqlExpr::Bool(b) => Expr::LitBool(*b),
+        AqlExpr::Call { func, args } => {
+            let f = Func::parse(func)
+                .ok_or_else(|| CompileError::UnknownFunction(func.clone()))?;
+            let args = args
+                .iter()
+                .map(|a| resolve_expr(a, scope))
+                .collect::<Result<Vec<_>, _>>()?;
+            Expr::Call(f, args)
+        }
+        AqlExpr::Cmp { lhs, op, rhs } => Expr::Cmp(
+            Box::new(resolve_expr(lhs, scope)?),
+            *op,
+            Box::new(resolve_expr(rhs, scope)?),
+        ),
+        AqlExpr::And(a, b) => Expr::And(
+            Box::new(resolve_expr(a, scope)?),
+            Box::new(resolve_expr(b, scope)?),
+        ),
+        AqlExpr::Or(a, b) => Expr::Or(
+            Box::new(resolve_expr(a, scope)?),
+            Box::new(resolve_expr(b, scope)?),
+        ),
+        AqlExpr::Not(a) => Expr::Not(Box::new(resolve_expr(a, scope)?)),
+    })
+}
+
+// keep CmpOp referenced (used via parser AST)
+#[allow(unused)]
+fn _cmp_witness(op: CmpOp) -> CmpOp {
+    op
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aql::compile;
+
+    const BASIC: &str = r#"
+        create dictionary Orgs as ('IBM', 'IBM Research');
+        create view Org as
+          extract dictionary 'Orgs' on d.text as match from Document d;
+        create view Person as
+          extract regex /[A-Z][a-z]+/ on d.text as name from Document d;
+        create view PersonOrg as
+          select p.name as person, o.match as org,
+                 CombineSpans(p.name, o.match) as ctx
+          from Person p, Org o
+          where FollowsTok(p.name, o.match, 0, 5)
+          consolidate on ctx using 'ContainedWithin';
+        output view PersonOrg;
+    "#;
+
+    #[test]
+    fn compiles_basic_program() {
+        let g = compile(BASIC).unwrap();
+        assert_eq!(g.outputs.len(), 1);
+        let counts = g.op_counts();
+        assert_eq!(counts["Dictionary"], 1);
+        assert_eq!(counts["RegularExpression"], 1);
+        assert_eq!(counts["Join"], 1);
+        assert_eq!(counts["Select"], 1);
+        assert_eq!(counts["Project"], 1);
+        assert_eq!(counts["Consolidate"], 1);
+        // output schema: person, org, ctx — all spans
+        let (_, out) = &g.outputs[0];
+        assert_eq!(g.nodes[*out].schema.arity(), 3);
+    }
+
+    #[test]
+    fn doc_scan_is_shared() {
+        let g = compile(BASIC).unwrap();
+        assert_eq!(g.op_counts()["DocScan"], 1);
+    }
+
+    #[test]
+    fn union_compiles() {
+        let g = compile(
+            "create view V as \
+             (extract regex /a+/ on d.text as m from Document d) \
+             union all \
+             (extract regex /b+/ on d.text as m from Document d); \
+             output view V;",
+        )
+        .unwrap();
+        assert_eq!(g.op_counts()["Union"], 1);
+    }
+
+    #[test]
+    fn error_unknown_view() {
+        let err = compile("output view Nope;").unwrap_err();
+        assert!(matches!(err, CompileError::UnknownView(_)), "{err}");
+    }
+
+    #[test]
+    fn error_unknown_dictionary() {
+        let err = compile(
+            "create view V as extract dictionary 'X' on d.text as m from Document d;",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::UnknownDictionary(_)), "{err}");
+    }
+
+    #[test]
+    fn error_unknown_function() {
+        let err = compile(
+            "create view A as extract regex /a/ on d.text as m from Document d; \
+             create view V as select Zap(a.m) as z from A a;",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::UnknownFunction(_)), "{err}");
+    }
+
+    #[test]
+    fn error_unknown_column_and_alias() {
+        let err = compile(
+            "create view A as extract regex /a/ on d.text as m from Document d; \
+             create view V as select a.zzz from A a;",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::UnknownColumn { .. }), "{err}");
+
+        let err = compile(
+            "create view A as extract regex /a/ on d.text as m from Document d; \
+             create view V as select q.m from A a;",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::UnknownAlias(_)), "{err}");
+    }
+
+    #[test]
+    fn error_duplicate_view() {
+        let err = compile(
+            "create view A as extract regex /a/ on d.text as m from Document d; \
+             create view A as extract regex /b/ on d.text as m from Document d;",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::DuplicateName(_)), "{err}");
+    }
+
+    #[test]
+    fn error_bad_regex() {
+        let err = compile(
+            "create view A as extract regex /a{5,2}/ on d.text as m from Document d;",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::Regex(_)), "{err}");
+    }
+
+    #[test]
+    fn error_extract_over_view() {
+        let err = compile(
+            "create view A as extract regex /a/ on d.text as m from Document d; \
+             create view B as extract regex /b/ on a.m as m from A a;",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::Unsupported(_)), "{err}");
+    }
+
+    #[test]
+    fn select_from_document_direct() {
+        let g = compile(
+            "create view V as select d.text as t from Document d; output view V;",
+        )
+        .unwrap();
+        let (_, out) = &g.outputs[0];
+        assert_eq!(g.nodes[*out].schema.fields[0].name, "t");
+    }
+
+    #[test]
+    fn three_way_join_builds_left_deep() {
+        let g = compile(
+            "create view A as extract regex /a/ on d.text as m from Document d; \
+             create view B as extract regex /b/ on d.text as m from Document d; \
+             create view C as extract regex /c/ on d.text as m from Document d; \
+             create view V as select a.m as am, b.m as bm, c.m as cm \
+             from A a, B b, C c \
+             where Follows(a.m, b.m, 0, 9) and Follows(b.m, c.m, 0, 9); \
+             output view V;",
+        )
+        .unwrap();
+        assert_eq!(g.op_counts()["Join"], 2);
+    }
+
+    #[test]
+    fn order_by_and_limit_lower() {
+        let g = compile(
+            "create view A as extract regex /a/ on d.text as m from Document d; \
+             create view V as select a.m as m from A a order by m limit 5; \
+             output view V;",
+        )
+        .unwrap();
+        assert_eq!(g.op_counts()["Sort"], 1);
+        assert_eq!(g.op_counts()["Limit"], 1);
+    }
+}

@@ -1,0 +1,318 @@
+//! AQL lexer.
+//!
+//! Keywords are case-insensitive (SQL heritage); identifiers are
+//! case-sensitive. Regex literals are `/.../` with `\/` escaping; string
+//! literals are `'...'` with `''` escaping. `--` starts a line comment.
+
+use std::fmt;
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Keyword (stored lowercase).
+    Kw(String),
+    /// Identifier.
+    Ident(String),
+    /// 'string literal' (unescaped).
+    Str(String),
+    /// /regex literal/ (unescaped).
+    Regex(String),
+    /// Integer literal.
+    Int(i64),
+    /// Punctuation / operators.
+    LParen,
+    RParen,
+    Comma,
+    Semi,
+    Dot,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// A token with its source offset (for diagnostics).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub pos: usize,
+}
+
+/// Lex error.
+#[derive(Debug, Clone)]
+pub struct LexError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "AQL lex error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+const KEYWORDS: &[&str] = &[
+    "create", "view", "dictionary", "as", "extract", "regex", "on", "from", "select", "where",
+    "and", "or", "not", "output", "consolidate", "using", "union", "all", "with", "case",
+    "exact", "insensitive", "flags", "order", "by", "limit", "document", "true", "false", "minus", "block", "gap", "min", "file",
+];
+
+/// Tokenize an AQL source string.
+pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
+    let b = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            _ if c.is_ascii_whitespace() => i += 1,
+            b'-' if b.get(i + 1) == Some(&b'-') => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'(' => {
+                out.push(Token { kind: TokenKind::LParen, pos: i });
+                i += 1;
+            }
+            b')' => {
+                out.push(Token { kind: TokenKind::RParen, pos: i });
+                i += 1;
+            }
+            b',' => {
+                out.push(Token { kind: TokenKind::Comma, pos: i });
+                i += 1;
+            }
+            b';' => {
+                out.push(Token { kind: TokenKind::Semi, pos: i });
+                i += 1;
+            }
+            b'.' => {
+                out.push(Token { kind: TokenKind::Dot, pos: i });
+                i += 1;
+            }
+            b'=' => {
+                out.push(Token { kind: TokenKind::Eq, pos: i });
+                i += 1;
+            }
+            b'!' if b.get(i + 1) == Some(&b'=') => {
+                out.push(Token { kind: TokenKind::Ne, pos: i });
+                i += 2;
+            }
+            b'<' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Token { kind: TokenKind::Le, pos: i });
+                    i += 2;
+                } else {
+                    out.push(Token { kind: TokenKind::Lt, pos: i });
+                    i += 1;
+                }
+            }
+            b'>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Token { kind: TokenKind::Ge, pos: i });
+                    i += 2;
+                } else {
+                    out.push(Token { kind: TokenKind::Gt, pos: i });
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                let start = i;
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    match b.get(i) {
+                        None => {
+                            return Err(LexError {
+                                pos: start,
+                                msg: "unterminated string literal".into(),
+                            })
+                        }
+                        Some(b'\'') if b.get(i + 1) == Some(&b'\'') => {
+                            s.push('\'');
+                            i += 2;
+                        }
+                        Some(b'\'') => {
+                            i += 1;
+                            break;
+                        }
+                        Some(&c) => {
+                            s.push(c as char);
+                            i += 1;
+                        }
+                    }
+                }
+                out.push(Token { kind: TokenKind::Str(s), pos: start });
+            }
+            b'/' => {
+                let start = i;
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    match b.get(i) {
+                        None => {
+                            return Err(LexError {
+                                pos: start,
+                                msg: "unterminated regex literal".into(),
+                            })
+                        }
+                        Some(b'\\') if b.get(i + 1) == Some(&b'/') => {
+                            s.push('/');
+                            i += 2;
+                        }
+                        Some(b'\\') => {
+                            s.push('\\');
+                            if let Some(&c) = b.get(i + 1) {
+                                s.push(c as char);
+                            }
+                            i += 2;
+                        }
+                        Some(b'/') => {
+                            i += 1;
+                            break;
+                        }
+                        Some(&c) => {
+                            s.push(c as char);
+                            i += 1;
+                        }
+                    }
+                }
+                out.push(Token { kind: TokenKind::Regex(s), pos: start });
+            }
+            _ if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let n: i64 = src[start..i].parse().map_err(|_| LexError {
+                    pos: start,
+                    msg: "integer literal too large".into(),
+                })?;
+                out.push(Token { kind: TokenKind::Int(n), pos: start });
+            }
+            _ if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                let word = &src[start..i];
+                let lower = word.to_ascii_lowercase();
+                let kind = if KEYWORDS.contains(&lower.as_str()) {
+                    TokenKind::Kw(lower)
+                } else {
+                    TokenKind::Ident(word.to_string())
+                };
+                out.push(Token { kind, pos: start });
+            }
+            _ => {
+                return Err(LexError {
+                    pos: i,
+                    msg: format!("unexpected character {:?}", c as char),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        lex(src).unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn keywords_case_insensitive() {
+        assert_eq!(
+            kinds("CREATE View"),
+            vec![TokenKind::Kw("create".into()), TokenKind::Kw("view".into())]
+        );
+    }
+
+    #[test]
+    fn identifiers_case_sensitive() {
+        assert_eq!(kinds("Person"), vec![TokenKind::Ident("Person".into())]);
+    }
+
+    #[test]
+    fn string_with_escape() {
+        assert_eq!(
+            kinds("'it''s'"),
+            vec![TokenKind::Str("it's".into())]
+        );
+    }
+
+    #[test]
+    fn regex_literal_with_escaped_slash() {
+        assert_eq!(
+            kinds(r"/a\/b\d+/"),
+            vec![TokenKind::Regex(r"a/b\d+".into())]
+        );
+    }
+
+    #[test]
+    fn operators() {
+        assert_eq!(
+            kinds("= != < <= > >="),
+            vec![
+                TokenKind::Eq,
+                TokenKind::Ne,
+                TokenKind::Lt,
+                TokenKind::Le,
+                TokenKind::Gt,
+                TokenKind::Ge
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_skipped() {
+        assert_eq!(
+            kinds("a -- comment here\n b"),
+            vec![TokenKind::Ident("a".into()), TokenKind::Ident("b".into())]
+        );
+    }
+
+    #[test]
+    fn numbers_and_punct() {
+        assert_eq!(
+            kinds("f(x.y, 42);"),
+            vec![
+                TokenKind::Ident("f".into()),
+                TokenKind::LParen,
+                TokenKind::Ident("x".into()),
+                TokenKind::Dot,
+                TokenKind::Ident("y".into()),
+                TokenKind::Comma,
+                TokenKind::Int(42),
+                TokenKind::RParen,
+                TokenKind::Semi,
+            ]
+        );
+    }
+
+    #[test]
+    fn errors() {
+        assert!(lex("'oops").is_err());
+        assert!(lex("/oops").is_err());
+        assert!(lex("#").is_err());
+        assert!(lex("99999999999999999999").is_err());
+    }
+
+    #[test]
+    fn full_statement_lexes() {
+        let src = r#"
+            create view V as
+              extract regex /[A-Z][a-z]+/ on d.text as name from Document d;
+            output view V;
+        "#;
+        assert!(lex(src).unwrap().len() > 15);
+    }
+}

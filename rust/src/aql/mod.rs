@@ -1,0 +1,49 @@
+//! AQL — the Annotation Query Language (SystemT's declarative rule
+//! language), as a practical subset.
+//!
+//! A query is a sequence of statements:
+//!
+//! ```aql
+//! create dictionary OrgNames with case insensitive as
+//!   ('IBM', 'IBM Research', 'Columbia University');
+//!
+//! create view Org as
+//!   extract dictionary 'OrgNames' on d.text as match from Document d;
+//!
+//! create view Person as
+//!   extract regex /[A-Z][a-z]+ [A-Z][a-z]+/ on d.text as name
+//!   from Document d;
+//!
+//! create view PersonOrg as
+//!   select p.name as person, o.match as org,
+//!          CombineSpans(p.name, o.match) as ctx
+//!   from Person p, Org o
+//!   where FollowsTok(p.name, o.match, 0, 5)
+//!   consolidate on ctx using 'ContainedWithin';
+//!
+//! output view PersonOrg;
+//! ```
+//!
+//! The compiler lowers statements to an [`crate::aog::Graph`]: extraction
+//! statements become leaf extraction operators over the shared `DocScan`;
+//! select statements become cross-join + select + project chains that the
+//! optimizer then rewrites into proper join trees (cost-based rule
+//! optimization is SystemT's calling card and what makes the supergraph
+//! cheap enough to matter).
+
+pub mod ast;
+pub mod compiler;
+pub mod lexer;
+pub mod parser;
+
+pub use ast::{Program, Statement};
+pub use compiler::{compile_program, Catalog, CompileError};
+pub use lexer::{lex, LexError, Token, TokenKind};
+pub use parser::{parse_program, ParseErr};
+
+/// Parse + compile an AQL program into an operator graph.
+pub fn compile(src: &str) -> Result<crate::aog::Graph, CompileError> {
+    let tokens = lex(src).map_err(|e| CompileError::Lex(e.to_string()))?;
+    let program = parse_program(&tokens).map_err(|e| CompileError::Parse(e.to_string()))?;
+    compile_program(&program)
+}

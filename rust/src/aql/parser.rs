@@ -1,0 +1,713 @@
+//! Recursive-descent parser for the AQL subset.
+
+use std::fmt;
+
+use crate::aog::expr::CmpOp;
+use crate::dict::CaseMode;
+use crate::text::span::ConsolidatePolicy;
+
+use super::ast::*;
+use super::lexer::{Token, TokenKind};
+
+/// Parse error with source position.
+#[derive(Debug, Clone)]
+pub struct ParseErr {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseErr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "AQL parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseErr {}
+
+struct P<'a> {
+    toks: &'a [Token],
+    i: usize,
+}
+
+/// Parse a token stream into a [`Program`].
+pub fn parse_program(toks: &[Token]) -> Result<Program, ParseErr> {
+    let mut p = P { toks, i: 0 };
+    let mut statements = Vec::new();
+    while !p.at_end() {
+        statements.push(p.statement()?);
+    }
+    Ok(Program { statements })
+}
+
+impl<'a> P<'a> {
+    fn at_end(&self) -> bool {
+        self.i >= self.toks.len()
+    }
+
+    fn pos(&self) -> usize {
+        self.toks
+            .get(self.i)
+            .or_else(|| self.toks.last())
+            .map(|t| t.pos)
+            .unwrap_or(0)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseErr {
+        ParseErr {
+            pos: self.pos(),
+            msg: msg.into(),
+        }
+    }
+
+    fn peek(&self) -> Option<&TokenKind> {
+        self.toks.get(self.i).map(|t| &t.kind)
+    }
+
+    fn bump(&mut self) -> Option<&'a TokenKind> {
+        let t = self.toks.get(self.i).map(|t| &t.kind);
+        self.i += 1;
+        t
+    }
+
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if matches!(self.peek(), Some(TokenKind::Kw(k)) if k == kw) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<(), ParseErr> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{kw}'")))
+        }
+    }
+
+    fn eat(&mut self, kind: &TokenKind) -> bool {
+        if self.peek() == Some(kind) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, kind: &TokenKind, what: &str) -> Result<(), ParseErr> {
+        if self.eat(kind) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {what}")))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, ParseErr> {
+        match self.bump() {
+            Some(TokenKind::Ident(s)) => Ok(s.clone()),
+            _ => {
+                self.i -= 1;
+                Err(self.err("expected identifier"))
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, ParseErr> {
+        match self.bump() {
+            Some(TokenKind::Str(s)) => Ok(s.clone()),
+            _ => {
+                self.i -= 1;
+                Err(self.err("expected string literal"))
+            }
+        }
+    }
+
+    fn statement(&mut self) -> Result<Statement, ParseErr> {
+        if self.eat_kw("create") {
+            if self.eat_kw("dictionary") {
+                return self.create_dictionary();
+            }
+            if self.eat_kw("view") {
+                return self.create_view();
+            }
+            return Err(self.err("expected 'dictionary' or 'view' after 'create'"));
+        }
+        if self.eat_kw("output") {
+            self.expect_kw("view")?;
+            let name = self.ident()?;
+            self.expect(&TokenKind::Semi, "';'")?;
+            return Ok(Statement::OutputView { name });
+        }
+        Err(self.err("expected 'create' or 'output'"))
+    }
+
+    fn create_dictionary(&mut self) -> Result<Statement, ParseErr> {
+        let name = self.ident()?;
+        let mut case = CaseMode::Insensitive; // SystemT default folds case
+        if self.eat_kw("with") {
+            self.expect_kw("case")?;
+            if self.eat_kw("exact") {
+                case = CaseMode::Exact;
+            } else if self.eat_kw("insensitive") {
+                case = CaseMode::Insensitive;
+            } else {
+                return Err(self.err("expected 'exact' or 'insensitive'"));
+            }
+        }
+        if self.eat_kw("from") {
+            self.expect_kw("file")?;
+            let path = self.string()?;
+            self.expect(&TokenKind::Semi, "';'")?;
+            return Ok(Statement::CreateDictionaryFromFile { name, case, path });
+        }
+        self.expect_kw("as")?;
+        self.expect(&TokenKind::LParen, "'('")?;
+        let mut entries = Vec::new();
+        loop {
+            entries.push(self.string()?);
+            if !self.eat(&TokenKind::Comma) {
+                break;
+            }
+        }
+        self.expect(&TokenKind::RParen, "')'")?;
+        self.expect(&TokenKind::Semi, "';'")?;
+        Ok(Statement::CreateDictionary {
+            name,
+            case,
+            entries,
+        })
+    }
+
+    fn create_view(&mut self) -> Result<Statement, ParseErr> {
+        let name = self.ident()?;
+        self.expect_kw("as")?;
+        let body = self.view_body()?;
+        self.expect(&TokenKind::Semi, "';'")?;
+        Ok(Statement::CreateView { name, body })
+    }
+
+    fn view_body(&mut self) -> Result<ViewBody, ParseErr> {
+        let first = self.select_or_extract()?;
+        if matches!(self.peek(), Some(TokenKind::Kw(k)) if k == "union") {
+            let mut parts = vec![first];
+            while self.eat_kw("union") {
+                self.expect_kw("all")?;
+                parts.push(self.select_or_extract()?);
+            }
+            return Ok(ViewBody::Union(parts));
+        }
+        if self.eat_kw("minus") {
+            let rhs = self.view_body()?;
+            return Ok(ViewBody::Minus(Box::new(first), Box::new(rhs)));
+        }
+        Ok(first)
+    }
+
+    fn select_or_extract(&mut self) -> Result<ViewBody, ParseErr> {
+        // allow parenthesized bodies inside unions
+        if self.eat(&TokenKind::LParen) {
+            let inner = self.view_body()?;
+            self.expect(&TokenKind::RParen, "')'")?;
+            return Ok(inner);
+        }
+        if self.eat_kw("extract") {
+            return self.extract_stmt().map(ViewBody::Extract);
+        }
+        if self.eat_kw("select") {
+            return self.select_stmt().map(ViewBody::Select);
+        }
+        if self.eat_kw("block") {
+            return self.block_stmt().map(ViewBody::Block);
+        }
+        Err(self.err("expected 'select', 'extract' or 'block'"))
+    }
+
+    fn extract_stmt(&mut self) -> Result<ExtractStmt, ParseErr> {
+        let kind = if self.eat_kw("regex") {
+            let pattern = match self.bump() {
+                Some(TokenKind::Regex(r)) => r.clone(),
+                _ => {
+                    self.i -= 1;
+                    return Err(self.err("expected /regex/ literal"));
+                }
+            };
+            let mut ci = false;
+            if self.eat_kw("with") {
+                self.expect_kw("flags")?;
+                let flags = self.string()?;
+                ci = flags.contains('i') || flags.contains("CASE_INSENSITIVE");
+            }
+            ExtractKind::Regex {
+                pattern,
+                case_insensitive: ci,
+            }
+        } else if self.eat_kw("dictionary") {
+            let dict_name = self.string()?;
+            ExtractKind::Dictionary { dict_name }
+        } else {
+            return Err(self.err("expected 'regex' or 'dictionary' after 'extract'"));
+        };
+
+        self.expect_kw("on")?;
+        let input_alias = self.ident()?;
+        self.expect(&TokenKind::Dot, "'.'")?;
+        let input_col = self.ident_or_text()?;
+        self.expect_kw("as")?;
+        let out_name = self.ident()?;
+        self.expect_kw("from")?;
+        let source = self.source_ref()?;
+        let src_alias = self.ident()?;
+        if src_alias != input_alias {
+            return Err(self.err(format!(
+                "extract input alias '{input_alias}' does not match source alias '{src_alias}'"
+            )));
+        }
+        Ok(ExtractStmt {
+            kind,
+            input_alias,
+            input_col,
+            out_name,
+            source,
+        })
+    }
+
+    /// `text` lexes as identifier; allow both identifiers and the keyword
+    /// spelling for column names.
+    fn ident_or_text(&mut self) -> Result<String, ParseErr> {
+        match self.bump() {
+            Some(TokenKind::Ident(s)) => Ok(s.clone()),
+            Some(TokenKind::Kw(k)) => Ok(k.clone()),
+            _ => {
+                self.i -= 1;
+                Err(self.err("expected column name"))
+            }
+        }
+    }
+
+    fn source_ref(&mut self) -> Result<SourceRef, ParseErr> {
+        if self.eat_kw("document") {
+            return Ok(SourceRef::Document);
+        }
+        Ok(SourceRef::View(self.ident()?))
+    }
+
+    fn select_stmt(&mut self) -> Result<SelectStmt, ParseErr> {
+        let mut items = Vec::new();
+        loop {
+            let expr = self.expr()?;
+            let name = if self.eat_kw("as") {
+                self.ident()?
+            } else {
+                // default name: last path component of a column ref
+                match &expr {
+                    AqlExpr::ColRef { col, .. } => col.clone(),
+                    _ => format!("c{}", items.len()),
+                }
+            };
+            items.push(SelectItem { expr, name });
+            if !self.eat(&TokenKind::Comma) {
+                break;
+            }
+        }
+        self.expect_kw("from")?;
+        let mut sources = Vec::new();
+        loop {
+            let s = self.source_ref()?;
+            let alias = self.ident()?;
+            sources.push((s, alias));
+            if !self.eat(&TokenKind::Comma) {
+                break;
+            }
+        }
+        let mut preds = Vec::new();
+        if self.eat_kw("where") {
+            // parse one boolean expression, then flatten top-level ANDs into
+            // a conjunct list (the optimizer pushes conjuncts independently)
+            fn flatten(e: AqlExpr, out: &mut Vec<AqlExpr>) {
+                match e {
+                    AqlExpr::And(a, b) => {
+                        flatten(*a, out);
+                        flatten(*b, out);
+                    }
+                    other => out.push(other),
+                }
+            }
+            flatten(self.expr()?, &mut preds);
+        }
+        let mut consolidate = None;
+        if self.eat_kw("consolidate") {
+            self.expect_kw("on")?;
+            // the target is an *output column* name (post-projection)
+            let col = self.ident_or_text()?;
+            let mut policy = ConsolidatePolicy::ContainedWithin;
+            if self.eat_kw("using") {
+                let pname = self.string()?;
+                policy = ConsolidatePolicy::parse(&pname)
+                    .ok_or_else(|| self.err(format!("unknown consolidation policy '{pname}'")))?;
+            }
+            consolidate = Some((col, policy));
+        }
+        let mut order_by = Vec::new();
+        if self.eat_kw("order") {
+            self.expect_kw("by")?;
+            loop {
+                order_by.push(self.ident_or_text()?);
+                if !self.eat(&TokenKind::Comma) {
+                    break;
+                }
+            }
+        }
+        let mut limit = None;
+        if self.eat_kw("limit") {
+            match self.bump() {
+                Some(TokenKind::Int(n)) if *n >= 0 => limit = Some(*n as usize),
+                _ => {
+                    self.i -= 1;
+                    return Err(self.err("expected non-negative integer after 'limit'"));
+                }
+            }
+        }
+        Ok(SelectStmt {
+            items,
+            sources,
+            preds,
+            consolidate,
+            order_by,
+            limit,
+        })
+    }
+
+    /// `block <alias>.<col> with gap <n> min <m> from <source> <alias>`
+    fn block_stmt(&mut self) -> Result<BlockStmt, ParseErr> {
+        let alias = self.ident()?;
+        self.expect(&TokenKind::Dot, "'.'")?;
+        let col = self.ident_or_text()?;
+        self.expect_kw("with")?;
+        self.expect_kw("gap")?;
+        let gap = match self.bump() {
+            Some(TokenKind::Int(n)) if *n >= 0 => *n as u32,
+            _ => {
+                self.i -= 1;
+                return Err(self.err("expected gap bytes"));
+            }
+        };
+        self.expect_kw("min")?;
+        let min_size = match self.bump() {
+            Some(TokenKind::Int(n)) if *n >= 1 => *n as usize,
+            _ => {
+                self.i -= 1;
+                return Err(self.err("expected min block size >= 1"));
+            }
+        };
+        self.expect_kw("from")?;
+        let source = self.source_ref()?;
+        let src_alias = self.ident()?;
+        if src_alias != alias {
+            return Err(self.err(format!(
+                "block alias '{alias}' does not match source alias '{src_alias}'"
+            )));
+        }
+        Ok(BlockStmt {
+            alias,
+            col,
+            gap,
+            min_size,
+            source,
+        })
+    }
+
+    /// Expression grammar: or-expr > and-expr > not > cmp > primary.
+    fn expr(&mut self) -> Result<AqlExpr, ParseErr> {
+        let mut lhs = self.and_expr()?;
+        while self.eat_kw("or") {
+            let rhs = self.and_expr()?;
+            lhs = AqlExpr::Or(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<AqlExpr, ParseErr> {
+        let mut lhs = self.not_expr()?;
+        while self.eat_kw("and") {
+            let rhs = self.not_expr()?;
+            lhs = AqlExpr::And(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> Result<AqlExpr, ParseErr> {
+        if self.eat_kw("not") {
+            Ok(AqlExpr::Not(Box::new(self.not_expr()?)))
+        } else {
+            self.cmp_expr()
+        }
+    }
+
+    fn cmp_expr(&mut self) -> Result<AqlExpr, ParseErr> {
+        let lhs = self.primary()?;
+        let op = match self.peek() {
+            Some(TokenKind::Eq) => Some(CmpOp::Eq),
+            Some(TokenKind::Ne) => Some(CmpOp::Ne),
+            Some(TokenKind::Lt) => Some(CmpOp::Lt),
+            Some(TokenKind::Le) => Some(CmpOp::Le),
+            Some(TokenKind::Gt) => Some(CmpOp::Gt),
+            Some(TokenKind::Ge) => Some(CmpOp::Ge),
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.i += 1;
+            let rhs = self.primary()?;
+            return Ok(AqlExpr::Cmp {
+                lhs: Box::new(lhs),
+                op,
+                rhs: Box::new(rhs),
+            });
+        }
+        Ok(lhs)
+    }
+
+    fn primary(&mut self) -> Result<AqlExpr, ParseErr> {
+        match self.peek().cloned() {
+            Some(TokenKind::Int(n)) => {
+                self.i += 1;
+                Ok(AqlExpr::Int(n))
+            }
+            Some(TokenKind::Str(s)) => {
+                self.i += 1;
+                Ok(AqlExpr::Str(s))
+            }
+            Some(TokenKind::Kw(k)) if k == "true" || k == "false" => {
+                self.i += 1;
+                Ok(AqlExpr::Bool(k == "true"))
+            }
+            Some(TokenKind::LParen) => {
+                self.i += 1;
+                let inner = self.expr()?;
+                self.expect(&TokenKind::RParen, "')'")?;
+                Ok(inner)
+            }
+            Some(TokenKind::Ident(name)) => {
+                self.i += 1;
+                if self.eat(&TokenKind::Dot) {
+                    let col = self.ident_or_text()?;
+                    return Ok(AqlExpr::ColRef { alias: name, col });
+                }
+                if self.eat(&TokenKind::LParen) {
+                    let mut args = Vec::new();
+                    if self.peek() != Some(&TokenKind::RParen) {
+                        loop {
+                            args.push(self.expr()?);
+                            if !self.eat(&TokenKind::Comma) {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(&TokenKind::RParen, "')'")?;
+                    return Ok(AqlExpr::Call { func: name, args });
+                }
+                Err(self.err(format!(
+                    "bare identifier '{name}' — expected alias.column or Function(...)"
+                )))
+            }
+            _ => Err(self.err("expected expression")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aql::lexer::lex;
+
+    fn parse(src: &str) -> Program {
+        parse_program(&lex(src).unwrap()).unwrap()
+    }
+
+    fn parse_err(src: &str) -> ParseErr {
+        parse_program(&lex(src).unwrap()).unwrap_err()
+    }
+
+    #[test]
+    fn dictionary_statement() {
+        let p = parse("create dictionary D with case exact as ('a', 'b''c');");
+        match &p.statements[0] {
+            Statement::CreateDictionary { name, case, entries } => {
+                assert_eq!(name, "D");
+                assert_eq!(*case, CaseMode::Exact);
+                assert_eq!(entries, &vec!["a".to_string(), "b'c".to_string()]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn dictionary_default_case_insensitive() {
+        let p = parse("create dictionary D as ('x');");
+        match &p.statements[0] {
+            Statement::CreateDictionary { case, .. } => {
+                assert_eq!(*case, CaseMode::Insensitive)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn extract_regex_view() {
+        let p = parse(
+            r"create view V as extract regex /[A-Z]\w+/ on d.text as m from Document d;",
+        );
+        match &p.statements[0] {
+            Statement::CreateView { name, body } => {
+                assert_eq!(name, "V");
+                match body {
+                    ViewBody::Extract(e) => {
+                        assert_eq!(e.out_name, "m");
+                        assert_eq!(e.source, SourceRef::Document);
+                        assert!(matches!(&e.kind, ExtractKind::Regex { pattern, .. } if pattern == r"[A-Z]\w+"));
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn extract_regex_flags() {
+        let p = parse(
+            "create view V as extract regex /ibm/ with flags 'i' on d.text as m from Document d;",
+        );
+        match &p.statements[0] {
+            Statement::CreateView {
+                body: ViewBody::Extract(e),
+                ..
+            } => {
+                assert!(
+                    matches!(&e.kind, ExtractKind::Regex { case_insensitive: true, .. })
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn extract_dictionary_view() {
+        let p = parse(
+            "create view V as extract dictionary 'Orgs' on d.text as m from Document d;",
+        );
+        match &p.statements[0] {
+            Statement::CreateView {
+                body: ViewBody::Extract(e),
+                ..
+            } => {
+                assert!(matches!(&e.kind, ExtractKind::Dictionary { dict_name } if dict_name == "Orgs"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn select_with_everything() {
+        let p = parse(
+            "create view V as \
+             select p.name as person, CombineSpans(p.name, o.m) as ctx \
+             from P p, O o \
+             where FollowsTok(p.name, o.m, 0, 3) and GetLength(p.name) > 4 \
+             consolidate on ctx using 'ContainedWithin' \
+             order by ctx \
+             limit 10;",
+        );
+        match &p.statements[0] {
+            Statement::CreateView {
+                body: ViewBody::Select(s),
+                ..
+            } => {
+                assert_eq!(s.items.len(), 2);
+                assert_eq!(s.items[0].name, "person");
+                assert_eq!(s.sources.len(), 2);
+                assert_eq!(s.preds.len(), 2);
+                assert_eq!(
+                    s.consolidate,
+                    Some(("ctx".to_string(), ConsolidatePolicy::ContainedWithin))
+                );
+                assert_eq!(s.order_by, vec!["ctx".to_string()]);
+                assert_eq!(s.limit, Some(10));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn union_of_extracts() {
+        let p = parse(
+            "create view V as \
+             (extract regex /a+/ on d.text as m from Document d) \
+             union all \
+             (extract regex /b+/ on d.text as m from Document d);",
+        );
+        match &p.statements[0] {
+            Statement::CreateView {
+                body: ViewBody::Union(parts),
+                ..
+            } => assert_eq!(parts.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn output_statement() {
+        let p = parse("output view V;");
+        assert_eq!(
+            p.statements[0],
+            Statement::OutputView { name: "V".into() }
+        );
+    }
+
+    #[test]
+    fn default_item_names() {
+        let p = parse("create view V as select p.name, GetLength(p.name) from P p;");
+        match &p.statements[0] {
+            Statement::CreateView {
+                body: ViewBody::Select(s),
+                ..
+            } => {
+                assert_eq!(s.items[0].name, "name");
+                assert_eq!(s.items[1].name, "c1");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_have_positions() {
+        let e = parse_err("create view V as select from P p;");
+        assert!(e.pos > 0);
+        assert!(parse_program(&lex("create banana;").unwrap()).is_err());
+        assert!(parse_program(&lex("output view;").unwrap()).is_err());
+        assert!(parse_program(&lex(
+            "create view V as extract regex /a/ on d.text as m from Document x;"
+        )
+        .unwrap())
+        .is_err());
+    }
+
+    #[test]
+    fn boolean_expression_precedence() {
+        let p = parse(
+            "create view V as select p.m from P p \
+             where GetLength(p.m) > 1 or GetLength(p.m) < 5 and not SpanEquals(p.m, p.m);",
+        );
+        match &p.statements[0] {
+            Statement::CreateView {
+                body: ViewBody::Select(s),
+                ..
+            } => {
+                // or binds loosest: Or(cmp, And(cmp, Not(..)))
+                assert!(matches!(&s.preds[0], AqlExpr::Or(_, rhs)
+                    if matches!(**rhs, AqlExpr::And(_, _))));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Benches are `harness = false` binaries that print the same rows/series
+//! as the paper's tables and figures; `cargo bench` runs them all and the
+//! final numbers land in `bench_output.txt` / EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` once and return the elapsed wall time.
+pub fn time_once<F: FnOnce()>(f: F) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+/// Median wall time over `reps` runs after `warmup` runs.
+pub fn time_median<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> Duration {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = (0..reps.max(1)).map(|_| time_once(&mut f)).collect();
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+/// A printable, aligned results table.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringify everything up front).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let head: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:>w$}", h, w = widths[i]))
+            .collect();
+        println!("  {}", head.join("  "));
+        println!(
+            "  {}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", cells.join("  "));
+        }
+    }
+}
+
+/// Format bytes/s as MB/s with one decimal.
+pub fn mbps(x: f64) -> String {
+    format!("{:.1}", x / 1.0e6)
+}
+
+/// Format a speedup factor.
+pub fn speedup(x: f64) -> String {
+    format!("{x:.1}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_positive() {
+        let d = time_median(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            1,
+            3,
+        );
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke: must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(mbps(500.0e6), "500.0");
+        assert_eq!(speedup(16.04), "16.0x");
+    }
+}

@@ -1,0 +1,340 @@
+//! The engine facade: compile an AQL query, optionally partition it for
+//! the accelerator, and drive corpora through it with the paper's
+//! document-per-thread worker model.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::accel::{AccelOptions, AccelService, AccelSubgraphRunner};
+use crate::aog::Graph;
+use crate::corpus::Corpus;
+use crate::exec::{DocOutput, Executor, Profile, Profiler};
+use crate::hwcompiler::{compile_subgraph, AccelConfig};
+use crate::metrics::AccelSnapshot;
+use crate::partition::{partition, PartitionMode, PartitionPlan, SoftwareSubgraphRunner};
+use crate::runtime::EngineSpec;
+use crate::text::Document;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Offload scenario.
+    pub mode: PartitionMode,
+    /// Which accelerator backend executes packages (ignored for
+    /// [`PartitionMode::None`]).
+    pub engine: EngineSpec,
+    /// Communication-interface options.
+    pub accel: AccelOptions,
+    /// Collect per-operator profiles (Fig 4). Cheap; on by default.
+    pub profile: bool,
+    /// Run the optimizer (on by default; off exposes the naive plans).
+    pub optimize: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            mode: PartitionMode::None,
+            engine: EngineSpec::Native,
+            accel: AccelOptions::default(),
+            profile: true,
+            optimize: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Software-only configuration.
+    pub fn software() -> EngineConfig {
+        EngineConfig::default()
+    }
+
+    /// Accelerated configuration with the given mode and backend.
+    pub fn accelerated(mode: PartitionMode, engine: EngineSpec) -> EngineConfig {
+        EngineConfig {
+            mode,
+            engine,
+            ..Default::default()
+        }
+    }
+}
+
+/// A compiled, ready-to-run engine.
+pub struct Engine {
+    graph: Arc<Graph>,
+    plan: Option<PartitionPlan>,
+    executor: Arc<Executor>,
+    profiler: Arc<Profiler>,
+    service: Option<Arc<AccelService>>,
+    config: EngineConfig,
+}
+
+impl Engine {
+    /// Compile AQL with the default (software) configuration.
+    pub fn compile_aql(aql: &str) -> Result<Engine> {
+        Engine::with_config(aql, EngineConfig::default())
+    }
+
+    /// Compile AQL with an explicit configuration.
+    pub fn with_config(aql: &str, config: EngineConfig) -> Result<Engine> {
+        let g = crate::aql::compile(aql).map_err(|e| anyhow!("{e}"))?;
+        let g = if config.optimize {
+            crate::optimizer::optimize(&g)
+        } else {
+            g
+        };
+
+        let (exec_graph, plan, service): (Graph, Option<PartitionPlan>, Option<Arc<AccelService>>) =
+            if config.mode == PartitionMode::None {
+                (g.clone(), None, None)
+            } else {
+                let plan = partition(&g, config.mode);
+                let configs: Vec<AccelConfig> = plan
+                    .subgraphs
+                    .iter()
+                    .map(compile_subgraph)
+                    .collect::<Result<_, _>>()
+                    .map_err(|e| anyhow!("hardware compile failed: {e}"))?;
+                let service =
+                    AccelService::start(configs, config.engine.clone(), config.accel.clone());
+                (plan.supergraph.clone(), Some(plan), Some(service))
+            };
+
+        let profiler = Arc::new(if config.profile {
+            Profiler::for_graph(&exec_graph)
+        } else {
+            Profiler::disabled()
+        });
+        let exec_graph = Arc::new(exec_graph);
+        let mut executor = Executor::new(exec_graph.clone(), profiler.clone());
+        if let (Some(plan), Some(service)) = (&plan, &service) {
+            let _ = plan;
+            executor = executor
+                .with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(service.clone())));
+        }
+        Ok(Engine {
+            graph: Arc::new(g),
+            plan,
+            executor: Arc::new(executor),
+            profiler,
+            service,
+            config,
+        })
+    }
+
+    /// Compile with a partition plan but run subgraphs in *software*
+    /// (reference runner) — used by tests and ablations.
+    pub fn with_software_subgraphs(aql: &str, mode: PartitionMode) -> Result<Engine> {
+        let g = crate::optimizer::optimize(&crate::aql::compile(aql).map_err(|e| anyhow!("{e}"))?);
+        let plan = partition(&g, mode);
+        let profiler = Arc::new(Profiler::for_graph(&plan.supergraph));
+        let runner = Arc::new(SoftwareSubgraphRunner::new(&plan));
+        let executor = Arc::new(
+            Executor::new(Arc::new(plan.supergraph.clone()), profiler.clone())
+                .with_subgraph_runner(runner),
+        );
+        Ok(Engine {
+            graph: Arc::new(g),
+            plan: Some(plan),
+            executor,
+            profiler,
+            service: None,
+            config: EngineConfig {
+                mode,
+                ..Default::default()
+            },
+        })
+    }
+
+    /// The (optimized) logical graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The partition plan, if any.
+    pub fn plan(&self) -> Option<&PartitionPlan> {
+        self.plan.as_ref()
+    }
+
+    /// The engine configuration.
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Evaluate one document.
+    pub fn run_doc(&self, doc: &Document) -> DocOutput {
+        self.executor.run_doc(doc)
+    }
+
+    /// Snapshot the per-operator profile (over everything run so far).
+    pub fn profile(&self) -> Profile {
+        self.profiler.snapshot(self.executor.graph())
+    }
+
+    /// Reset profile counters.
+    pub fn reset_profile(&self) {
+        self.profiler.reset();
+    }
+
+    /// Accelerator metrics, when a service is attached.
+    pub fn accel_snapshot(&self) -> Option<AccelSnapshot> {
+        self.service.as_ref().map(|s| s.metrics().snapshot())
+    }
+
+    /// Drive a corpus with `threads` workers (document-per-thread, shared
+    /// work index — the paper's execution model).
+    pub fn run_corpus(&self, corpus: &Corpus, threads: usize) -> RunReport {
+        let threads = threads.max(1);
+        let next = AtomicUsize::new(0);
+        let tuples = AtomicUsize::new(0);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| {
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= corpus.docs.len() {
+                            break;
+                        }
+                        let out = self.executor.run_doc(&corpus.docs[i]);
+                        tuples.fetch_add(out.total_tuples(), Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed();
+        RunReport {
+            docs: corpus.docs.len(),
+            bytes: corpus.total_bytes(),
+            tuples: tuples.into_inner(),
+            wall,
+            threads,
+            accel: self.accel_snapshot(),
+        }
+    }
+
+    /// Shut down the accelerator service (also happens on drop).
+    pub fn shutdown(&self) {
+        if let Some(s) = &self.service {
+            s.shutdown();
+        }
+    }
+}
+
+/// Result of a corpus run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub docs: usize,
+    pub bytes: usize,
+    pub tuples: usize,
+    pub wall: Duration,
+    pub threads: usize,
+    pub accel: Option<AccelSnapshot>,
+}
+
+impl RunReport {
+    /// Measured wall-clock throughput in bytes/s.
+    pub fn throughput(&self) -> f64 {
+        self.bytes as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Documents per second.
+    pub fn docs_per_sec(&self) -> f64 {
+        self.docs as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusSpec;
+
+    fn t1_aql() -> String {
+        crate::queries::builtin("t1").unwrap().aql
+    }
+
+    #[test]
+    fn software_engine_runs_corpus() {
+        let engine = Engine::compile_aql(&t1_aql()).unwrap();
+        let corpus = CorpusSpec::news(12, 1024).generate();
+        let report = engine.run_corpus(&corpus, 4);
+        assert_eq!(report.docs, 12);
+        assert!(report.tuples > 0);
+        assert!(report.throughput() > 0.0);
+        let profile = engine.profile();
+        assert!(profile.total_ns() > 0);
+        assert!(profile.fraction_extraction() > 0.0);
+    }
+
+    #[test]
+    fn accelerated_engine_matches_software() {
+        let corpus = CorpusSpec::news(8, 512).generate();
+        let sw = Engine::compile_aql(&t1_aql()).unwrap();
+        let hw = Engine::with_config(
+            &t1_aql(),
+            EngineConfig::accelerated(PartitionMode::SingleSubgraph, EngineSpec::Native),
+        )
+        .unwrap();
+        for d in &corpus.docs {
+            let mut a: Vec<String> = sw
+                .run_doc(d)
+                .views
+                .iter()
+                .flat_map(|(v, rows)| rows.iter().map(move |t| format!("{v}:{t:?}")))
+                .collect();
+            let mut b: Vec<String> = hw
+                .run_doc(d)
+                .views
+                .iter()
+                .flat_map(|(v, rows)| rows.iter().map(move |t| format!("{v}:{t:?}")))
+                .collect();
+            a.sort();
+            b.sort();
+            assert_eq!(a, b);
+        }
+        assert!(hw.accel_snapshot().unwrap().packages > 0);
+        hw.shutdown();
+    }
+
+    #[test]
+    fn multithreaded_run_is_deterministic_in_counts() {
+        let engine = Engine::compile_aql(&t1_aql()).unwrap();
+        let corpus = CorpusSpec::news(20, 512).generate();
+        let r1 = engine.run_corpus(&corpus, 1);
+        let r8 = engine.run_corpus(&corpus, 8);
+        assert_eq!(r1.tuples, r8.tuples);
+    }
+
+    #[test]
+    fn software_subgraph_engine_equivalent() {
+        let corpus = CorpusSpec::news(6, 512).generate();
+        let plain = Engine::compile_aql(&t1_aql()).unwrap();
+        let swsg =
+            Engine::with_software_subgraphs(&t1_aql(), PartitionMode::MultiSubgraph).unwrap();
+        let a = plain.run_corpus(&corpus, 2);
+        let b = swsg.run_corpus(&corpus, 2);
+        assert_eq!(a.tuples, b.tuples);
+    }
+
+    #[test]
+    fn bad_aql_is_an_error() {
+        assert!(Engine::compile_aql("create banana;").is_err());
+    }
+
+    #[test]
+    fn report_math() {
+        let r = RunReport {
+            docs: 10,
+            bytes: 1_000_000,
+            tuples: 5,
+            wall: Duration::from_millis(100),
+            threads: 2,
+            accel: None,
+        };
+        assert!((r.throughput() - 1.0e7).abs() < 1.0);
+        assert!((r.docs_per_sec() - 100.0).abs() < 1e-6);
+    }
+}

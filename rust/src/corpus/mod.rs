@@ -1,0 +1,304 @@
+//! Synthetic document corpus generator.
+//!
+//! The paper evaluates on proprietary customer documents; we synthesize
+//! corpora with controlled size distributions (the experiments sweep
+//! document size: 128 B tweets/RSS items up to multi-kB news articles)
+//! and realistic entity densities, seeded from the same name/org/location
+//! pools the built-in queries' dictionaries use — so query selectivity is
+//! realistic by construction. Generation is deterministic per seed.
+
+pub mod pools;
+
+pub use crate::text::Document;
+
+use crate::util::Prng;
+
+/// Corpus flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusKind {
+    /// Multi-sentence articles with entities, amounts, dates, contacts.
+    News,
+    /// Short messages (the paper's "Twitter messages and RSS feeds").
+    Tweets,
+    /// Machine log lines (timestamps, levels, IPs) — semi-structured.
+    Logs,
+}
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub kind: CorpusKind,
+    pub docs: usize,
+    /// Target document size in bytes (actual sizes are exact: documents
+    /// are padded/trimmed to the target so throughput numbers are
+    /// directly comparable to the paper's fixed-size sweeps).
+    pub doc_size: usize,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    /// News corpus.
+    pub fn news(docs: usize, doc_size: usize) -> CorpusSpec {
+        CorpusSpec {
+            kind: CorpusKind::News,
+            docs,
+            doc_size,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Tweet-sized corpus.
+    pub fn tweets(docs: usize, doc_size: usize) -> CorpusSpec {
+        CorpusSpec {
+            kind: CorpusKind::Tweets,
+            docs,
+            doc_size,
+            seed: 0x7EE7,
+        }
+    }
+
+    /// Log corpus.
+    pub fn logs(docs: usize, doc_size: usize) -> CorpusSpec {
+        CorpusSpec {
+            kind: CorpusKind::Logs,
+            docs,
+            doc_size,
+            seed: 0x106,
+        }
+    }
+
+    /// Override the seed.
+    pub fn with_seed(mut self, seed: u64) -> CorpusSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// Generate the corpus.
+    pub fn generate(&self) -> Corpus {
+        let mut rng = Prng::new(self.seed);
+        let docs = (0..self.docs)
+            .map(|i| Document::new(i as u64, generate_text(self.kind, self.doc_size, &mut rng)))
+            .collect();
+        Corpus { docs }
+    }
+}
+
+/// A generated corpus.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub docs: Vec<Document>,
+}
+
+impl Corpus {
+    /// Total payload bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.docs.iter().map(|d| d.len()).sum()
+    }
+
+    /// Number of documents.
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+}
+
+/// Produce one document of exactly `size` bytes.
+fn generate_text(kind: CorpusKind, size: usize, rng: &mut Prng) -> String {
+    let mut s = String::with_capacity(size + 128);
+    while s.len() < size {
+        let sentence = match kind {
+            CorpusKind::News => news_sentence(rng),
+            CorpusKind::Tweets => tweet_fragment(rng),
+            CorpusKind::Logs => log_line(rng),
+        };
+        s.push_str(&sentence);
+        if !s.ends_with(' ') && !s.ends_with('\n') {
+            s.push(' ');
+        }
+    }
+    // plain ASCII, so byte-truncation to the exact target size is safe
+    s.truncate(size);
+    s
+}
+
+fn person(rng: &mut Prng) -> String {
+    format!(
+        "{} {}",
+        rng.pick(pools::FIRST_NAMES),
+        rng.pick(pools::LAST_NAMES)
+    )
+}
+
+fn news_sentence(rng: &mut Prng) -> String {
+    let p = person(rng);
+    let org = *rng.pick(pools::ORGS);
+    let loc = *rng.pick(pools::LOCATIONS);
+    let verb = *rng.pick(pools::VERBS);
+    let noun = *rng.pick(pools::NOUNS);
+    match rng.below(8) {
+        0 => format!("{p} of {org} {verb} the {noun} in {loc}."),
+        1 => format!(
+            "{org} announced a ${}.{} million {noun} on {}.",
+            rng.range(1, 500),
+            rng.below(10),
+            date(rng)
+        ),
+        2 => format!(
+            "\"The {noun} is significant,\" said {p}, reachable at {}.",
+            phone(rng)
+        ),
+        3 => format!("{p} joined {org} in {loc} last {}.", rng.pick(pools::MONTHS)),
+        4 => format!(
+            "Contact {} for details about the {noun} ({org}).",
+            email(rng)
+        ),
+        5 => format!(
+            "Shares of {org} ({}) {verb} {}% after the {noun}.",
+            ticker(rng),
+            rng.range(1, 30),
+        ),
+        6 => format!("In {loc}, {p} and {} discussed the {noun}.", person(rng)),
+        _ => format!(
+            "The {noun} report, published {}, cites {p} of {org}.",
+            date(rng)
+        ),
+    }
+}
+
+fn tweet_fragment(rng: &mut Prng) -> String {
+    let org = *rng.pick(pools::ORGS);
+    match rng.below(5) {
+        0 => format!("{} just visited {org}! #{}", person(rng), rng.pick(pools::TAGS)),
+        1 => format!(
+            "wow the {} from {org} is {} http://t.co/{}",
+            rng.pick(pools::NOUNS),
+            rng.pick(pools::SENTIMENT),
+            rng.string_over(b"abcdefghij0123456789", 8)
+        ),
+        2 => format!("call me at {} about {}", phone(rng), rng.pick(pools::NOUNS)),
+        3 => format!(
+            "{} {} in {} rn",
+            rng.pick(pools::SENTIMENT),
+            rng.pick(pools::NOUNS),
+            rng.pick(pools::LOCATIONS)
+        ),
+        _ => format!("@{} did you see the {org} news?", rng.string_over(b"abcdxyz", 6)),
+    }
+}
+
+fn log_line(rng: &mut Prng) -> String {
+    format!(
+        "2014-{:02}-{:02}T{:02}:{:02}:{:02} {} svc={} ip={}.{}.{}.{} msg=\"{} {}\"\n",
+        rng.range(1, 13),
+        rng.range(1, 29),
+        rng.below(24),
+        rng.below(60),
+        rng.below(60),
+        rng.pick(&["INFO", "WARN", "ERROR", "DEBUG"]),
+        rng.pick(pools::NOUNS),
+        rng.range(1, 255),
+        rng.below(256),
+        rng.below(256),
+        rng.below(256),
+        rng.pick(pools::VERBS),
+        rng.pick(pools::NOUNS),
+    )
+}
+
+fn phone(rng: &mut Prng) -> String {
+    if rng.chance(0.4) {
+        format!(
+            "({}) {}-{:04}",
+            rng.range(200, 999),
+            rng.range(200, 999),
+            rng.below(10000)
+        )
+    } else {
+        format!("{}-{:04}", rng.range(200, 999), rng.below(10000))
+    }
+}
+
+fn email(rng: &mut Prng) -> String {
+    let user_len = rng.range(3, 9);
+    let dom_len = rng.range(3, 7);
+    format!(
+        "{}@{}.com",
+        rng.string_over(b"abcdefghijklmnop", user_len),
+        rng.string_over(b"abcdefgh", dom_len)
+    )
+}
+
+fn date(rng: &mut Prng) -> String {
+    format!("2014-{:02}-{:02}", rng.range(1, 13), rng.range(1, 29))
+}
+
+fn ticker(rng: &mut Prng) -> String {
+    let len = rng.range(2, 5);
+    rng.string_over(b"ABCDEFGHIJKLMNOPQRSTUVWXYZ", len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_sizes_and_determinism() {
+        let spec = CorpusSpec::news(16, 2048);
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.len(), 16);
+        for d in &a.docs {
+            assert_eq!(d.len(), 2048);
+        }
+        for (x, y) in a.docs.iter().zip(&b.docs) {
+            assert_eq!(x.text, y.text, "generation must be deterministic");
+        }
+        assert_eq!(a.total_bytes(), 16 * 2048);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = CorpusSpec::news(4, 512).generate();
+        let b = CorpusSpec::news(4, 512).with_seed(999).generate();
+        assert_ne!(a.docs[0].text, b.docs[0].text);
+    }
+
+    #[test]
+    fn ascii_and_no_nul() {
+        for spec in [
+            CorpusSpec::news(8, 1024),
+            CorpusSpec::tweets(8, 128),
+            CorpusSpec::logs(8, 256),
+        ] {
+            for d in spec.generate().docs {
+                assert!(d.text.is_ascii());
+                assert!(!d.text.bytes().any(|b| b == 0), "NUL is reserved");
+            }
+        }
+    }
+
+    #[test]
+    fn news_contains_entities() {
+        let c = CorpusSpec::news(8, 4096).generate();
+        let all: String = c.docs.iter().map(|d| d.text.to_string()).collect();
+        assert!(pools::ORGS.iter().any(|o| all.contains(o)));
+        assert!(pools::LOCATIONS.iter().any(|l| all.contains(l)));
+        assert!(pools::FIRST_NAMES.iter().any(|n| all.contains(n)));
+    }
+
+    #[test]
+    fn tweets_are_small() {
+        let c = CorpusSpec::tweets(32, 128).generate();
+        assert!(c.docs.iter().all(|d| d.len() == 128));
+    }
+
+    #[test]
+    fn logs_look_like_logs() {
+        let c = CorpusSpec::logs(4, 512).generate();
+        assert!(c.docs[0].text.contains("svc="));
+    }
+}

@@ -1,0 +1,94 @@
+//! Shared entity pools: the corpus generator plants these and the built-in
+//! queries' dictionaries match them, giving realistic selectivity.
+
+/// Person first names (capitalized — the person regexes rely on shape).
+pub const FIRST_NAMES: &[&str] = &[
+    "Laura", "Raphael", "Kubilay", "Christoph", "Peter", "Frederick", "Eva", "Huaiyu",
+    "Alice", "Robert", "Maria", "James", "Wei", "Priya", "Carlos", "Anna", "David",
+    "Elena", "Thomas", "Grace", "Victor", "Nadia", "Oscar", "Irene",
+];
+
+/// Person last names.
+pub const LAST_NAMES: &[&str] = &[
+    "Polig", "Atasu", "Chiticariu", "Hagleitner", "Hofstee", "Reiss", "Sitaridi", "Zhu",
+    "Smith", "Garcia", "Chen", "Miller", "Patel", "Ivanov", "Novak", "Costa", "Brown",
+    "Keller", "Moreau", "Tanaka", "Singh", "Berg", "Rossi", "Haas",
+];
+
+/// Organizations (multi-token entries exercise phrase matching).
+pub const ORGS: &[&str] = &[
+    "IBM", "IBM Research", "Columbia University", "Acme Corp", "Globex", "Initech",
+    "Stark Industries", "Wayne Enterprises", "Hooli", "Vandelay Industries",
+    "Pied Piper", "Umbrella Corp", "Cyberdyne Systems", "Tyrell Corp", "Aperture Science",
+    "Gringotts Bank", "Oscorp", "Massive Dynamic",
+];
+
+/// Locations.
+pub const LOCATIONS: &[&str] = &[
+    "Zurich", "Almaden", "Austin", "New York", "San Jose", "Tokyo", "London", "Paris",
+    "Berlin", "Bangalore", "Sydney", "Toronto", "Singapore", "Dublin", "Haifa",
+    "Sao Paulo", "Nairobi", "Oslo",
+];
+
+/// Verbs for sentence templates.
+pub const VERBS: &[&str] = &[
+    "announced", "disputed", "acquired", "launched", "reviewed", "cancelled", "praised",
+    "rejected", "shipped", "delayed", "expanded", "restructured",
+];
+
+/// Nouns for sentence templates.
+pub const NOUNS: &[&str] = &[
+    "merger", "prototype", "quarterly report", "partnership", "layoff", "settlement",
+    "acquisition", "dividend", "pipeline", "benchmark", "patent", "outage", "rollout",
+    "audit", "forecast",
+];
+
+/// Months.
+pub const MONTHS: &[&str] = &[
+    "January", "February", "March", "April", "May", "June", "July", "August",
+    "September", "October", "November", "December",
+];
+
+/// Hashtag-ish tags for tweets.
+pub const TAGS: &[&str] = &[
+    "bigdata", "textanalytics", "fpga", "hardware", "nlp", "tech", "finance", "news",
+];
+
+/// Sentiment words (T3's dictionaries).
+pub const SENTIMENT: &[&str] = &[
+    "amazing", "terrible", "great", "awful", "fantastic", "disappointing", "excellent",
+    "broken", "impressive", "useless", "solid", "buggy",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_nonempty_and_ascii() {
+        for pool in [
+            FIRST_NAMES,
+            LAST_NAMES,
+            ORGS,
+            LOCATIONS,
+            VERBS,
+            NOUNS,
+            MONTHS,
+            TAGS,
+            SENTIMENT,
+        ] {
+            assert!(!pool.is_empty());
+            for e in pool {
+                assert!(e.is_ascii());
+                assert!(!e.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn person_names_capitalized() {
+        for n in FIRST_NAMES.iter().chain(LAST_NAMES) {
+            assert!(n.chars().next().unwrap().is_ascii_uppercase(), "{n}");
+        }
+    }
+}

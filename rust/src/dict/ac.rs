@@ -1,0 +1,349 @@
+//! From-scratch Aho–Corasick, DFA-ized to the shared dense-table layout.
+//!
+//! Construction is the textbook goto/fail/output build followed by fail-link
+//! resolution into a dense next-state table. State 0 is unused (dead, to
+//! match the regex DFA convention), state 1 is the root; byte 0 (NUL, the
+//! work-package separator) resets to the root from every state.
+
+use super::{CaseMode, DictMatch};
+use crate::text::Span;
+
+/// Aho–Corasick automaton over bytes.
+#[derive(Debug, Clone)]
+pub struct AhoCorasick {
+    /// Dense `num_states × 256` next-state table (state 0 dead, 1 root).
+    pub table: Vec<u32>,
+    /// Number of states including the dead state.
+    pub num_states: u32,
+    /// Per-state matched entries: `(entry_id, byte_len)` pairs. Indexed by
+    /// state. The accelerator returns accepting *state ids*, which the
+    /// post-stage maps through this to recover spans — the kernel itself
+    /// never needs entry identities.
+    pub outputs: Vec<Vec<(u32, u32)>>,
+    /// Case mode (input bytes are folded during scan when insensitive).
+    pub case: CaseMode,
+}
+
+const ROOT: u32 = 1;
+
+impl AhoCorasick {
+    /// Build from entries. Entries are folded to lowercase when
+    /// `case == Insensitive`; the scanner folds input bytes to match.
+    pub fn build(entries: &[String], case: CaseMode) -> AhoCorasick {
+        // Trie construction. next[state][byte] = state, 0 = absent.
+        let mut next: Vec<[u32; 256]> = vec![[0u32; 256], [0u32; 256]]; // dead + root
+        let mut outputs: Vec<Vec<(u32, u32)>> = vec![Vec::new(), Vec::new()];
+
+        for (id, entry) in entries.iter().enumerate() {
+            let folded: Vec<u8> = entry
+                .bytes()
+                .map(|b| match case {
+                    CaseMode::Exact => b,
+                    CaseMode::Insensitive => b.to_ascii_lowercase(),
+                })
+                .collect();
+            let mut cur = ROOT;
+            for &b in &folded {
+                let slot = next[cur as usize][b as usize];
+                cur = if slot == 0 {
+                    let id = next.len() as u32;
+                    next.push([0u32; 256]);
+                    outputs.push(Vec::new());
+                    next[cur as usize][b as usize] = id;
+                    id
+                } else {
+                    slot
+                };
+            }
+            outputs[cur as usize].push((id as u32, folded.len() as u32));
+        }
+
+        // BFS fail links; resolve into dense table.
+        let n = next.len();
+        let mut fail = vec![ROOT; n];
+        let mut queue = std::collections::VecDeque::new();
+        for b in 0..256usize {
+            let t = next[ROOT as usize][b];
+            if t != 0 {
+                fail[t as usize] = ROOT;
+                queue.push_back(t);
+            }
+        }
+        while let Some(s) = queue.pop_front() {
+            for b in 0..256usize {
+                let t = next[s as usize][b];
+                if t == 0 {
+                    continue;
+                }
+                // fail(t) = goto(fail(s), b) chased through fail links
+                let mut f = fail[s as usize];
+                loop {
+                    let g = next[f as usize][b];
+                    if g != 0 && g != t {
+                        fail[t as usize] = g;
+                        break;
+                    }
+                    if f == ROOT {
+                        if g == 0 || g == t {
+                            fail[t as usize] = ROOT;
+                        }
+                        break;
+                    }
+                    f = fail[f as usize];
+                }
+                // inherit outputs along the fail chain
+                let inherited = outputs[fail[t as usize] as usize].clone();
+                outputs[t as usize].extend(inherited);
+                queue.push_back(t);
+            }
+        }
+
+        // Dense DFA: delta(s, b) = goto(s,b) if present else delta(fail(s), b).
+        // Process in BFS order so parents are resolved first.
+        let mut table = vec![0u32; n * 256];
+        // root row
+        for b in 0..256usize {
+            let t = next[ROOT as usize][b];
+            table[ROOT as usize * 256 + b] = if t != 0 { t } else { ROOT };
+        }
+        // re-BFS for the rest
+        let mut queue = std::collections::VecDeque::new();
+        let mut visited = vec![false; n];
+        visited[ROOT as usize] = true;
+        for b in 0..256usize {
+            let t = next[ROOT as usize][b];
+            if t != 0 && !visited[t as usize] {
+                visited[t as usize] = true;
+                queue.push_back(t);
+            }
+        }
+        while let Some(s) = queue.pop_front() {
+            for b in 0..256usize {
+                let t = next[s as usize][b];
+                let resolved = if t != 0 {
+                    t
+                } else {
+                    table[fail[s as usize] as usize * 256 + b]
+                };
+                table[s as usize * 256 + b] = resolved;
+                if t != 0 && !visited[t as usize] {
+                    visited[t as usize] = true;
+                    queue.push_back(t);
+                }
+            }
+        }
+        // NUL resets everywhere (package separator), dead row stays dead→root.
+        for s in 0..n {
+            table[s * 256] = ROOT;
+        }
+
+        AhoCorasick {
+            table,
+            num_states: n as u32,
+            outputs,
+            case,
+        }
+    }
+
+    /// Step the DFA.
+    #[inline]
+    pub fn step(&self, state: u32, byte: u8) -> u32 {
+        let b = match self.case {
+            CaseMode::Exact => byte,
+            CaseMode::Insensitive => byte.to_ascii_lowercase(),
+        };
+        self.table[state as usize * 256 + b as usize]
+    }
+
+    /// True if the state has at least one output.
+    #[inline]
+    pub fn is_accept(&self, state: u32) -> bool {
+        !self.outputs[state as usize].is_empty()
+    }
+
+    /// Scan `text`, returning every entry occurrence (before token-boundary
+    /// filtering). Multiple entries ending at one position all fire.
+    pub fn find_all(&self, text: &[u8]) -> Vec<DictMatch> {
+        let mut out = Vec::new();
+        let mut state = ROOT;
+        for (i, &b) in text.iter().enumerate() {
+            state = self.step(state, b);
+            for &(entry, len) in &self.outputs[state as usize] {
+                let end = i + 1;
+                let begin = end - len as usize;
+                out.push(DictMatch {
+                    span: Span::new(begin as u32, end as u32),
+                    entry,
+                });
+            }
+        }
+        out
+    }
+
+    /// Matches whose spans lie on word boundaries — the token-based
+    /// semantics exposed to queries.
+    pub fn find_token_matches(&self, text: &[u8]) -> Vec<DictMatch> {
+        self.find_all(text)
+            .into_iter()
+            .filter(|m| {
+                super::on_word_boundaries(text, m.span.begin as usize, m.span.end as usize)
+            })
+            .collect()
+    }
+
+    /// Reconstruct matches from accelerator-reported `(position, state)`
+    /// pairs (position = exclusive end offset of the byte that produced
+    /// `state`). Must agree with [`AhoCorasick::find_token_matches`].
+    pub fn from_hw_states(&self, text: &[u8], hits: &[(usize, u32)]) -> Vec<DictMatch> {
+        let mut out = Vec::new();
+        for &(end, state) in hits {
+            for &(entry, len) in &self.outputs[state as usize] {
+                if (len as usize) <= end {
+                    let begin = end - len as usize;
+                    if super::on_word_boundaries(text, begin, end) {
+                        out.push(DictMatch {
+                            span: Span::new(begin as u32, end as u32),
+                            entry,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Table footprint in bytes (accelerator budget accounting).
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dict(entries: &[&str], case: CaseMode) -> AhoCorasick {
+        AhoCorasick::build(
+            &entries.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            case,
+        )
+    }
+
+    fn matches(ac: &AhoCorasick, text: &str) -> Vec<(u32, u32, u32)> {
+        ac.find_token_matches(text.as_bytes())
+            .iter()
+            .map(|m| (m.span.begin, m.span.end, m.entry))
+            .collect()
+    }
+
+    #[test]
+    fn single_entry() {
+        let ac = dict(&["ibm"], CaseMode::Exact);
+        assert_eq!(matches(&ac, "the ibm lab"), vec![(4, 7, 0)]);
+    }
+
+    #[test]
+    fn multiple_entries_and_occurrences() {
+        let ac = dict(&["he", "she", "his", "hers"], CaseMode::Exact);
+        // raw AC on "ushers": she, he, hers — token filtering kills all
+        // (inside the word "ushers")
+        assert_eq!(ac.find_all(b"ushers").len(), 3);
+        assert!(matches(&ac, "ushers").is_empty());
+        assert_eq!(matches(&ac, "he and she"), vec![(0, 2, 0), (7, 10, 1)]);
+    }
+
+    #[test]
+    fn overlapping_outputs_at_same_end() {
+        let ac = dict(&["search", "research"], CaseMode::Exact);
+        let got = matches(&ac, "research");
+        // "research" lies on boundaries; "search" inside it does not.
+        assert_eq!(got, vec![(0, 8, 1)]);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        let ac = dict(&["IBM Research"], CaseMode::Insensitive);
+        assert_eq!(matches(&ac, "ibm research rocks"), vec![(0, 12, 0)]);
+        assert_eq!(matches(&ac, "IBM RESEARCH"), vec![(0, 12, 0)]);
+    }
+
+    #[test]
+    fn multi_token_phrase() {
+        let ac = dict(&["New York", "York"], CaseMode::Exact);
+        let got = matches(&ac, "in New York City");
+        assert_eq!(got, vec![(3, 11, 0), (7, 11, 1)]);
+    }
+
+    #[test]
+    fn empty_dictionary() {
+        let ac = dict(&[], CaseMode::Exact);
+        assert!(matches(&ac, "anything").is_empty());
+    }
+
+    #[test]
+    fn nul_separator_resets() {
+        let ac = dict(&["ab"], CaseMode::Exact);
+        assert!(ac.find_all(b"a\0b").is_empty());
+        assert_eq!(ac.find_all(b"ab\0ab").len(), 2);
+    }
+
+    #[test]
+    fn hw_state_reconstruction_agrees() {
+        let ac = dict(&["he", "she", "hers", "his"], CaseMode::Exact);
+        for text in ["he and she said hers", "ushers", "h e r s", ""] {
+            // simulate the accelerator: record (end, state) at accepting steps
+            let mut hits = Vec::new();
+            let mut state = ROOT;
+            for (i, &b) in text.as_bytes().iter().enumerate() {
+                state = ac.step(state, b);
+                if ac.is_accept(state) {
+                    hits.push((i + 1, state));
+                }
+            }
+            let mut hw = ac.from_hw_states(text.as_bytes(), &hits);
+            let mut sw = ac.find_token_matches(text.as_bytes());
+            hw.sort_by_key(|m| (m.span.begin, m.span.end, m.entry));
+            sw.sort_by_key(|m| (m.span.begin, m.span.end, m.entry));
+            assert_eq!(hw, sw, "text {text:?}");
+        }
+    }
+
+    /// Differential test against the vendored aho-corasick crate (oracle).
+    #[test]
+    fn oracle_differential() {
+        use crate::util::Prng;
+        let entries = ["ab", "abc", "bca", "c", "cab"];
+        let mine = dict(&entries, CaseMode::Exact);
+        let oracle = aho_corasick::AhoCorasick::new(entries).unwrap();
+        let mut rng = Prng::new(5);
+        for _ in 0..300 {
+            let len = rng.below(50).max(1);
+            let t = rng.string_over(b"abc ", len);
+            let mut got: Vec<(usize, usize, usize)> = mine
+                .find_all(t.as_bytes())
+                .iter()
+                .map(|m| (m.span.begin as usize, m.span.end as usize, m.entry as usize))
+                .collect();
+            // oracle: overlapping all-matches
+            let mut want: Vec<(usize, usize, usize)> = oracle
+                .find_overlapping_iter(&t)
+                .map(|m| (m.start(), m.end(), m.pattern().as_usize()))
+                .collect();
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want, "text {t:?}");
+        }
+    }
+
+    #[test]
+    fn table_layout_conventions() {
+        let ac = dict(&["xy"], CaseMode::Exact);
+        // state 0 dead row exists, state 1 root; NUL resets everywhere
+        assert!(ac.num_states >= 3);
+        for s in 0..ac.num_states {
+            assert_eq!(ac.table[s as usize * 256], ROOT);
+        }
+        // root loops to itself on unrelated bytes
+        assert_eq!(ac.table[ROOT as usize * 256 + b'q' as usize], ROOT);
+    }
+}

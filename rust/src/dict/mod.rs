@@ -1,0 +1,135 @@
+//! Token-based dictionary matching — SystemT's second extraction primitive
+//! (paper ref [21]: "Token-based dictionary pattern matching for text
+//! analytics").
+//!
+//! A dictionary is a set of multi-token phrases. Matching finds every
+//! occurrence of every entry that lies on token boundaries. The engine is a
+//! from-scratch Aho–Corasick automaton, DFA-ized into the same dense
+//! `states × 256` transition-table layout as the regex DFAs — so the
+//! accelerator runs dictionaries and regexes with the *same* kernel, just
+//! different tables (exactly the paper's configurable-operator-module
+//! approach).
+
+pub mod ac;
+
+pub use ac::AhoCorasick;
+
+use crate::text::tokenizer::is_word_byte;
+use crate::text::Span;
+
+/// Case handling for a dictionary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CaseMode {
+    /// Entries match exactly.
+    Exact,
+    /// ASCII case-insensitive.
+    Insensitive,
+}
+
+/// A named dictionary: entries plus matching configuration.
+#[derive(Debug, Clone)]
+pub struct Dictionary {
+    pub name: String,
+    pub entries: Vec<String>,
+    pub case: CaseMode,
+}
+
+/// One dictionary match: the covered span and the entry index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DictMatch {
+    pub span: Span,
+    pub entry: u32,
+}
+
+impl Dictionary {
+    /// Create a dictionary; entries are trimmed, empties dropped,
+    /// duplicates (post case-fold) removed.
+    pub fn new(name: impl Into<String>, entries: Vec<String>, case: CaseMode) -> Self {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for e in entries {
+            let t = e.trim().to_string();
+            if t.is_empty() {
+                continue;
+            }
+            let key = match case {
+                CaseMode::Exact => t.clone(),
+                CaseMode::Insensitive => t.to_ascii_lowercase(),
+            };
+            if seen.insert(key) {
+                out.push(t);
+            }
+        }
+        Dictionary {
+            name: name.into(),
+            entries: out,
+            case,
+        }
+    }
+
+    /// Compile to an Aho–Corasick matcher.
+    pub fn compile(&self) -> AhoCorasick {
+        AhoCorasick::build(&self.entries, self.case)
+    }
+}
+
+/// Check that `[begin, end)` lies on word boundaries of `text`: the bytes
+/// just outside the span must not be word bytes (or the span must touch the
+/// document edge). This is the "whole token" condition of token-based
+/// matching, applied identically by the software operator and the
+/// accelerator post-stage.
+#[inline]
+pub fn on_word_boundaries(text: &[u8], begin: usize, end: usize) -> bool {
+    let left_ok = begin == 0 || !is_word_byte(text[begin - 1]) || !is_word_byte(text[begin]);
+    let right_ok = end == text.len() || !is_word_byte(text[end]) || !is_word_byte(text[end - 1]);
+    left_ok && right_ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_trim() {
+        let d = Dictionary::new(
+            "d",
+            vec![
+                " IBM ".into(),
+                "ibm".into(),
+                "".into(),
+                "Research".into(),
+                "IBM".into(),
+            ],
+            CaseMode::Insensitive,
+        );
+        assert_eq!(d.entries, vec!["IBM".to_string(), "Research".to_string()]);
+    }
+
+    #[test]
+    fn exact_keeps_both_cases() {
+        let d = Dictionary::new(
+            "d",
+            vec!["IBM".into(), "ibm".into()],
+            CaseMode::Exact,
+        );
+        assert_eq!(d.entries.len(), 2);
+    }
+
+    #[test]
+    fn word_boundary_checks() {
+        let t = b"the IBM lab";
+        assert!(on_word_boundaries(t, 4, 7)); // "IBM"
+        assert!(!on_word_boundaries(t, 4, 6)); // "IB|M"
+        assert!(!on_word_boundaries(t, 5, 7)); // "I|BM"
+        assert!(on_word_boundaries(t, 0, 3)); // doc start
+        assert!(on_word_boundaries(t, 8, 11)); // doc end
+    }
+
+    #[test]
+    fn punctuation_spans_are_boundary_free() {
+        let t = b"a-b";
+        // "-" at [1,2): neighbours are word bytes but the span itself is
+        // punctuation, so it still counts as whole-token.
+        assert!(on_word_boundaries(t, 1, 2));
+    }
+}

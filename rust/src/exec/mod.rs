@@ -1,0 +1,403 @@
+//! Software execution of operator graphs, document-per-thread, with the
+//! per-operator profiler that produces the paper's Fig 4.
+
+pub mod operators;
+pub mod profiler;
+
+pub use operators::{cmp_tuples, cmp_values};
+pub use profiler::{Profile, Profiler};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::aog::{EvalCtx, Graph, NodeId, OpKind, Tuple};
+use crate::text::{Document, TokenIndex, Tokenizer};
+
+/// Pluggable executor for `SubgraphExec` nodes (the hardware-offloaded
+/// subgraphs in a partitioned supergraph). The software fallback
+/// re-executes the subgraph body in software; the accelerator
+/// implementation ships the document through the communication interface.
+pub trait SubgraphRunner: Send + Sync {
+    /// Run subgraph `id` on `doc` with software-computed tuple streams
+    /// `ext` (one per `ExtInput` slot), returning the tuples of output
+    /// `output_idx`. Implementations should cache per-(doc, subgraph) so
+    /// multi-output subgraphs execute once per document.
+    fn run(
+        &self,
+        id: usize,
+        output_idx: usize,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&[Tuple]],
+    ) -> Vec<Tuple>;
+}
+
+/// Output of one document evaluation: tuples per output view.
+#[derive(Debug, Clone, Default)]
+pub struct DocOutput {
+    pub views: HashMap<String, Vec<Tuple>>,
+}
+
+impl DocOutput {
+    /// Total tuple count across views.
+    pub fn total_tuples(&self) -> usize {
+        self.views.values().map(|v| v.len()).sum()
+    }
+}
+
+/// Evaluates a graph over documents. Stateless w.r.t. documents, so one
+/// instance is shared by all worker threads.
+pub struct Executor {
+    graph: Arc<Graph>,
+    profiler: Arc<Profiler>,
+    subgraph_runner: Option<Arc<dyn SubgraphRunner>>,
+    live: Vec<bool>,
+}
+
+impl Executor {
+    /// Build an executor. `profiler` may be [`Profiler::disabled`].
+    pub fn new(graph: Arc<Graph>, profiler: Arc<Profiler>) -> Executor {
+        let live = graph.live_nodes();
+        Executor {
+            graph,
+            profiler,
+            subgraph_runner: None,
+            live,
+        }
+    }
+
+    /// Attach a subgraph runner (required if the graph contains
+    /// `SubgraphExec` nodes).
+    pub fn with_subgraph_runner(mut self, r: Arc<dyn SubgraphRunner>) -> Executor {
+        self.subgraph_runner = Some(r);
+        self
+    }
+
+    /// The graph being executed.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The attached profiler.
+    pub fn profiler(&self) -> &Arc<Profiler> {
+        &self.profiler
+    }
+
+    /// Evaluate all output views on one document.
+    pub fn run_doc(&self, doc: &Document) -> DocOutput {
+        let tokens = Tokenizer::standard().tokenize(&doc.text);
+        self.run_doc_with(doc, &tokens, &[], &HashMap::new())
+    }
+
+    /// Evaluate with injected external inputs (`ExtInput` slots) and node
+    /// overrides (node id → precomputed tuples; used by the accelerator
+    /// post-stage to splice hardware extraction results into a subgraph
+    /// body).
+    pub fn run_doc_with(
+        &self,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&[Tuple]],
+        overrides: &HashMap<NodeId, Vec<Tuple>>,
+    ) -> DocOutput {
+        let mut slots: Vec<Option<Vec<Tuple>>> = vec![None; self.graph.nodes.len()];
+        for node in &self.graph.nodes {
+            if !self.live[node.id] {
+                continue;
+            }
+            if let Some(t) = overrides.get(&node.id) {
+                slots[node.id] = Some(t.clone());
+                continue;
+            }
+            let t0 = self.profiler.start();
+            let out = self.eval_node(node.id, doc, &tokens, ext, &slots);
+            self.profiler.stop(node.id, t0);
+            slots[node.id] = Some(out);
+        }
+        let mut views = HashMap::new();
+        for (name, id) in &self.graph.outputs {
+            views.insert(name.clone(), slots[*id].clone().unwrap_or_default());
+        }
+        DocOutput { views }
+    }
+
+    fn eval_node(
+        &self,
+        id: NodeId,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&[Tuple]],
+        slots: &[Option<Vec<Tuple>>],
+    ) -> Vec<Tuple> {
+        let node = &self.graph.nodes[id];
+        let input = |k: usize| -> &[Tuple] {
+            slots[node.inputs[k]]
+                .as_deref()
+                .expect("topological order guarantees inputs are evaluated")
+        };
+        let ctx = EvalCtx {
+            text: &doc.text,
+            tokens,
+        };
+        match &node.kind {
+            OpKind::DocScan => operators::doc_scan(doc),
+            OpKind::RegexExtract { regex, .. } => operators::regex_extract(regex, doc),
+            OpKind::DictExtract { matcher, .. } => operators::dict_extract(matcher, doc),
+            OpKind::Select { pred } => operators::select(input(0), pred, &ctx),
+            OpKind::Project { cols } => operators::project(input(0), cols, &ctx),
+            OpKind::Join { pred } => {
+                let left_arity = self.graph.nodes[node.inputs[0]].schema.arity();
+                operators::join(input(0), input(1), pred, left_arity, &ctx)
+            }
+            OpKind::Union => {
+                let mut out = Vec::new();
+                for k in 0..node.inputs.len() {
+                    out.extend_from_slice(input(k));
+                }
+                out
+            }
+            OpKind::Consolidate { col, policy } => {
+                operators::consolidate(input(0), *col, *policy)
+            }
+            OpKind::Difference => operators::difference(input(0), input(1)),
+            OpKind::Block {
+                col,
+                max_gap,
+                min_size,
+            } => operators::block(input(0), *col, *max_gap, *min_size),
+            OpKind::Sort { keys } => operators::sort(input(0), keys),
+            OpKind::Limit { n } => input(0).iter().take(*n).cloned().collect(),
+            OpKind::SubgraphExec {
+                subgraph_id,
+                output_idx,
+                ..
+            } => match &self.subgraph_runner {
+                Some(r) => {
+                    // inputs 1.. are the software-computed tuple streams
+                    let streams: Vec<&[Tuple]> = (1..node.inputs.len())
+                        .map(|k| input(k))
+                        .collect();
+                    r.run(*subgraph_id, *output_idx, doc, tokens, &streams)
+                }
+                None => panic!(
+                    "graph contains SubgraphExec #{subgraph_id} but no runner is attached"
+                ),
+            },
+            OpKind::ExtInput { slot, .. } => ext
+                .get(*slot)
+                .map(|s| s.to_vec())
+                .unwrap_or_else(|| panic!("ExtInput slot {slot} not provided")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(aql: &str) -> Executor {
+        let g = crate::aql::compile(aql).unwrap();
+        let prof = Arc::new(Profiler::for_graph(&g));
+        Executor::new(Arc::new(g), prof)
+    }
+
+    fn doc(text: &str) -> Document {
+        Document::new(0, text)
+    }
+
+    const PERSON_ORG: &str = r#"
+        create dictionary Orgs as ('IBM', 'IBM Research', 'Columbia University');
+        create view Org as
+          extract dictionary 'Orgs' on d.text as match from Document d;
+        create view Person as
+          extract regex /[A-Z][a-z]+ [A-Z][a-z]+/ on d.text as name from Document d;
+        create view PersonOrg as
+          select p.name as person, o.match as org,
+                 CombineSpans(p.name, o.match) as ctx
+          from Person p, Org o
+          where FollowsTok(p.name, o.match, 0, 4)
+          consolidate on ctx using 'ContainedWithin';
+        output view PersonOrg;
+    "#;
+
+    #[test]
+    fn end_to_end_person_org() {
+        let ex = engine(PERSON_ORG);
+        let d = doc("Laura Chiticariu works at IBM Research in Almaden.");
+        let out = ex.run_doc(&d);
+        let rows = &out.views["PersonOrg"];
+        assert_eq!(rows.len(), 1, "{rows:?}");
+        let person = rows[0][0].as_span().text(&d.text);
+        let org = rows[0][1].as_span().text(&d.text);
+        assert_eq!(person, "Laura Chiticariu");
+        assert_eq!(org, "IBM Research");
+    }
+
+    #[test]
+    fn no_match_empty_output() {
+        let ex = engine(PERSON_ORG);
+        let out = ex.run_doc(&doc("nothing to see here"));
+        assert!(out.views["PersonOrg"].is_empty());
+        assert_eq!(out.total_tuples(), 0);
+    }
+
+    #[test]
+    fn consolidate_dedups_overlaps() {
+        // "IBM Research" contains "IBM": the dictionary fires on both, so
+        // the join yields two overlapping ctx spans for the same person and
+        // ContainedWithin keeps only the larger one.
+        let ex = engine(PERSON_ORG);
+        let d = doc("Fred Reiss and Huaiyu Zhu are at IBM Research today.");
+        let out = ex.run_doc(&d);
+        let rows = &out.views["PersonOrg"];
+        // "Fred Reiss" is 5 tokens away from IBM — outside FollowsTok(0,4);
+        // "Huaiyu Zhu" is 2 away; its ctx with "IBM" is inside its ctx with
+        // "IBM Research".
+        assert_eq!(rows.len(), 1, "{rows:?}");
+        assert_eq!(rows[0][0].as_span().text(&d.text), "Huaiyu Zhu");
+        assert_eq!(rows[0][1].as_span().text(&d.text), "IBM Research");
+    }
+
+    #[test]
+    fn union_view_executes() {
+        let ex = engine(
+            "create view V as \
+             (extract regex /cat/ on d.text as m from Document d) \
+             union all \
+             (extract regex /dog/ on d.text as m from Document d); \
+             output view V;",
+        );
+        let out = ex.run_doc(&doc("cat dog cat"));
+        assert_eq!(out.views["V"].len(), 3);
+    }
+
+    #[test]
+    fn sort_and_limit() {
+        let ex = engine(
+            "create view A as extract regex /[a-z]+/ on d.text as m from Document d; \
+             create view V as select a.m as m from A a order by m limit 2; \
+             output view V;",
+        );
+        let d = doc("zz yy xx ww");
+        let out = ex.run_doc(&d);
+        let rows = &out.views["V"];
+        assert_eq!(rows.len(), 2);
+        // sorted by span (begin asc): zz then yy
+        assert_eq!(rows[0][0].as_span().text(&d.text), "zz");
+    }
+
+    #[test]
+    fn profiler_accumulates_by_operator() {
+        let ex = engine(PERSON_ORG);
+        let d = doc("Laura Chiticariu works at IBM Research in Almaden.");
+        for _ in 0..10 {
+            ex.run_doc(&d);
+        }
+        let profile = ex.profiler().snapshot(ex.graph());
+        let total = profile.total_ns();
+        assert!(total > 0);
+        let frac = profile.fraction_extraction();
+        assert!(frac > 0.0 && frac <= 1.0, "extraction fraction {frac}");
+        // every named bucket fraction sums to ~1
+        let sum: f64 = profile.by_operator().values().map(|v| v.fraction).sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum {sum}");
+    }
+
+    #[test]
+    fn multiple_output_views() {
+        let ex = engine(
+            "create view A as extract regex /a+/ on d.text as m from Document d; \
+             create view B as extract regex /b+/ on d.text as m from Document d; \
+             output view A; output view B;",
+        );
+        let out = ex.run_doc(&doc("aa bb"));
+        assert_eq!(out.views.len(), 2);
+        assert_eq!(out.views["A"].len(), 1);
+        assert_eq!(out.views["B"].len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no runner is attached")]
+    fn subgraph_without_runner_panics() {
+        use crate::aog::{FieldType, Graph, OpKind, Schema};
+        let mut g = Graph::new();
+        let doc_n = g.add(OpKind::DocScan, vec![]).unwrap();
+        let sg = g
+            .add(
+                OpKind::SubgraphExec {
+                    subgraph_id: 0,
+                    output_idx: 0,
+                    schema: Schema::of(&[("m", FieldType::Span)]),
+                },
+                vec![doc_n],
+            )
+            .unwrap();
+        g.add_output("V", sg);
+        let ex = Executor::new(Arc::new(g), Arc::new(Profiler::disabled()));
+        ex.run_doc(&doc("x"));
+    }
+
+    #[test]
+    fn ext_input_injection() {
+        use crate::aog::{FieldType, Graph, OpKind, Schema, Value};
+        use crate::text::Span;
+        let mut g = Graph::new();
+        let e = g
+            .add(
+                OpKind::ExtInput {
+                    slot: 0,
+                    schema: Schema::of(&[("m", FieldType::Span)]),
+                },
+                vec![],
+            )
+            .unwrap();
+        g.add_output("V", e);
+        let ex = Executor::new(Arc::new(g), Arc::new(Profiler::disabled()));
+        let d = doc("hello");
+        let tokens = d.token_index();
+        let injected: Vec<Tuple> = vec![vec![Value::Span(Span::new(0, 5))]];
+        let out = ex.run_doc_with(&d, &tokens, &[&injected], &HashMap::new());
+        assert_eq!(out.views["V"], injected);
+    }
+
+    #[test]
+    fn override_replaces_node_output() {
+        use crate::aog::Value;
+        use crate::text::Span;
+        let ex = engine(
+            "create view A as extract regex /zzz/ on d.text as m from Document d; \
+             output view A;",
+        );
+        let d = doc("no matches here");
+        let tokens = d.token_index();
+        // node 1 is the regex node; override it with a fake match
+        let mut overrides = HashMap::new();
+        let fake: Vec<Tuple> = vec![vec![Value::Span(Span::new(0, 2))]];
+        overrides.insert(1usize, fake.clone());
+        let out = ex.run_doc_with(&d, &tokens, &[], &overrides);
+        assert_eq!(out.views["A"], fake);
+    }
+
+    #[test]
+    fn dead_views_not_computed() {
+        // A view that is never output should not contribute profile time.
+        let ex = engine(
+            "create view Dead as extract regex /x+/ on d.text as m from Document d; \
+             create view Live as extract regex /y+/ on d.text as m from Document d; \
+             output view Live;",
+        );
+        let out = ex.run_doc(&doc("xxx yyy"));
+        assert_eq!(out.views.len(), 1);
+        let profile = ex.profiler().snapshot(ex.graph());
+        // the dead regex node must have zero recorded time
+        let per_node = profile.per_node();
+        let dead_id = ex
+            .graph()
+            .nodes
+            .iter()
+            .find(|n| n.view.as_deref() == Some("Dead"))
+            .unwrap()
+            .id;
+        assert_eq!(per_node[dead_id], 0);
+    }
+}

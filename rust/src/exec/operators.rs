@@ -1,0 +1,371 @@
+//! Software implementations of the individual operators.
+//!
+//! These are the baselines the paper profiles (Fig 4): extraction operators
+//! scan the whole document and dominate; relational operators work on the
+//! (much smaller) extracted tuple sets.
+
+use std::cmp::Ordering;
+
+use crate::aog::{EvalCtx, Expr, Tuple, Value};
+use crate::dict::AhoCorasick;
+use crate::regex::CompiledRegex;
+use crate::text::span::{consolidate as consolidate_spans, ConsolidatePolicy};
+use crate::text::{Document, Span};
+
+/// `DocScan`: one tuple covering the whole document.
+pub fn doc_scan(doc: &Document) -> Vec<Tuple> {
+    vec![vec![Value::Span(Span::new(0, doc.len() as u32))]]
+}
+
+/// `RegularExpression`: all matches (leftmost-longest, non-overlapping).
+pub fn regex_extract(regex: &CompiledRegex, doc: &Document) -> Vec<Tuple> {
+    regex
+        .find_all(&doc.text)
+        .into_iter()
+        .map(|m| vec![Value::Span(m.span)])
+        .collect()
+}
+
+/// `Dictionary`: token-boundary dictionary matches.
+pub fn dict_extract(matcher: &AhoCorasick, doc: &Document) -> Vec<Tuple> {
+    matcher
+        .find_token_matches(doc.text.as_bytes())
+        .into_iter()
+        .map(|m| vec![Value::Span(m.span)])
+        .collect()
+}
+
+/// `Select`: predicate filter.
+pub fn select(input: &[Tuple], pred: &Expr, ctx: &EvalCtx<'_>) -> Vec<Tuple> {
+    input
+        .iter()
+        .filter(|t| pred.eval(t, ctx).as_bool())
+        .cloned()
+        .collect()
+}
+
+/// `Project`: compute output columns.
+pub fn project(input: &[Tuple], cols: &[(String, Expr)], ctx: &EvalCtx<'_>) -> Vec<Tuple> {
+    input
+        .iter()
+        .map(|t| cols.iter().map(|(_, e)| e.eval(t, ctx)).collect())
+        .collect()
+}
+
+/// `Join`: predicate join. A sort-based *band join* fast path handles the
+/// dominant span-adjacency predicates (`Follows`/`FollowsTok`) — SystemT's
+/// cost-based optimizer does exactly this, which is why its relational
+/// operators are cheap relative to extraction (paper Fig 4). Everything
+/// else falls back to a nested loop.
+pub fn join(
+    left: &[Tuple],
+    right: &[Tuple],
+    pred: &Expr,
+    left_arity: usize,
+    ctx: &EvalCtx<'_>,
+) -> Vec<Tuple> {
+    if let Some((lcol, rcol, band)) = band_window(pred, left_arity) {
+        return band_join(left, right, pred, lcol, rcol, band, ctx);
+    }
+    let mut out = Vec::new();
+    for l in left {
+        for r in right {
+            let mut combined = Vec::with_capacity(l.len() + r.len());
+            combined.extend_from_slice(l);
+            combined.extend_from_slice(r);
+            if pred.eval(&combined, ctx).as_bool() {
+                out.push(combined);
+            }
+        }
+    }
+    out
+}
+
+/// The candidate window for a band-joinable conjunct.
+enum Band {
+    /// `Follows(l, r, min, max)`: r.begin ∈ [l.end+min, l.end+max].
+    Chars { min: u32, max: u32 },
+    /// `FollowsTok(l, r, min, max)`: r.begin bounded via the token index.
+    Toks { max: i64 },
+}
+
+/// Detect a `Follows`/`FollowsTok(Col l, Col r, min, max)` conjunct with
+/// `l` from the left side and `r` from the right side of the join.
+fn band_window(pred: &Expr, left_arity: usize) -> Option<(usize, usize, Band)> {
+    // search conjuncts
+    match pred {
+        Expr::And(a, b) => band_window(a, left_arity).or_else(|| band_window(b, left_arity)),
+        Expr::Call(f @ (crate::aog::expr::Func::Follows | crate::aog::expr::Func::FollowsTok), args) => {
+            if let [Expr::Col(l), Expr::Col(r), Expr::LitInt(min), Expr::LitInt(max)] =
+                args.as_slice()
+            {
+                if *l < left_arity && *r >= left_arity {
+                    let band = match f {
+                        crate::aog::expr::Func::Follows => Band::Chars {
+                            min: (*min).max(0) as u32,
+                            max: (*max).max(0) as u32,
+                        },
+                        _ => Band::Toks { max: (*max).max(0) },
+                    };
+                    return Some((*l, *r - left_arity, band));
+                }
+            }
+            None
+        }
+        _ => None,
+    }
+}
+
+fn band_join(
+    left: &[Tuple],
+    right: &[Tuple],
+    pred: &Expr,
+    lcol: usize,
+    rcol: usize,
+    band: Band,
+    ctx: &EvalCtx<'_>,
+) -> Vec<Tuple> {
+    // sort right tuple indices by span begin at rcol
+    let mut order: Vec<usize> = (0..right.len()).collect();
+    order.sort_by_key(|&i| right[i][rcol].as_span().begin);
+    let begins: Vec<u32> = order.iter().map(|&i| right[i][rcol].as_span().begin).collect();
+
+    let mut out = Vec::new();
+    for l in left {
+        let a = l[lcol].as_span();
+        let (lo, hi) = match band {
+            Band::Chars { min, max } => {
+                (a.end.saturating_add(min), a.end.saturating_add(max))
+            }
+            Band::Toks { max } => {
+                // exact over-approximation: r.begin must lie at or before
+                // the end of the (max+1)-th token after a.end
+                let idx = ctx.tokens.first_token_at_or_after(a.end);
+                let upper = idx + max as usize + 1;
+                let bound = ctx
+                    .tokens
+                    .tokens()
+                    .get(upper)
+                    .map(|t| t.span.end)
+                    .unwrap_or(u32::MAX);
+                (a.end, bound)
+            }
+        };
+        let start = begins.partition_point(|&b| b < lo);
+        // candidates in original right-input order, so the output order is
+        // identical to the nested loop's (downstream Consolidate's
+        // first-tuple-wins rule must not depend on the join algorithm)
+        let mut cands: Vec<usize> = (start..begins.len())
+            .take_while(|&k| begins[k] <= hi)
+            .map(|k| order[k])
+            .collect();
+        cands.sort_unstable();
+        for ri in cands {
+            let r = &right[ri];
+            let mut combined = Vec::with_capacity(l.len() + r.len());
+            combined.extend_from_slice(l);
+            combined.extend_from_slice(r);
+            if pred.eval(&combined, ctx).as_bool() {
+                out.push(combined);
+            }
+        }
+    }
+    out
+}
+
+/// `Consolidate`: keep tuples whose span (at `col`) survives consolidation;
+/// one tuple per surviving span (first occurrence wins, as in SystemT).
+pub fn consolidate(input: &[Tuple], col: usize, policy: ConsolidatePolicy) -> Vec<Tuple> {
+    if input.is_empty() {
+        return Vec::new();
+    }
+    let spans: Vec<Span> = input.iter().map(|t| t[col].as_span()).collect();
+    let kept = consolidate_spans(&spans, policy);
+    let mut out = Vec::with_capacity(kept.len());
+    for k in kept {
+        if let Some(t) = input.iter().find(|t| t[col].as_span() == k) {
+            out.push(t.clone());
+        }
+    }
+    out
+}
+
+/// `Difference` (SystemT `minus`): tuples of `left` not present in
+/// `right` (set semantics on whole tuples; duplicates in `left` collapse).
+pub fn difference(left: &[Tuple], right: &[Tuple]) -> Vec<Tuple> {
+    let mut out: Vec<Tuple> = Vec::new();
+    for l in left {
+        if right.iter().any(|r| r == l) {
+            continue;
+        }
+        if out.iter().any(|o| o == l) {
+            continue;
+        }
+        out.push(l.clone());
+    }
+    out
+}
+
+/// `Block`: group spans within `max_gap` bytes of the previous span's end
+/// into blocks; emit the covering span of every block with at least
+/// `min_size` members. Input is sorted by the block column first
+/// (the operator is self-sorting, like SystemT's).
+pub fn block(input: &[Tuple], col: usize, max_gap: u32, min_size: usize) -> Vec<Tuple> {
+    let mut spans: Vec<Span> = input.iter().map(|t| t[col].as_span()).collect();
+    spans.sort();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < spans.len() {
+        let mut members = 1;
+        let mut cover = spans[i];
+        let mut j = i + 1;
+        while j < spans.len() {
+            let s = spans[j];
+            if s.begin >= cover.end && s.begin - cover.end > max_gap {
+                break;
+            }
+            cover = cover.combine(&s);
+            members += 1;
+            j += 1;
+        }
+        if members >= min_size {
+            out.push(vec![Value::Span(cover)]);
+        }
+        i = j;
+    }
+    out
+}
+
+/// Total order over values of the same type (used by Sort; null sorts last).
+pub fn cmp_values(a: &Value, b: &Value) -> Ordering {
+    match (a, b) {
+        (Value::Span(x), Value::Span(y)) => x.cmp(y),
+        (Value::Int(x), Value::Int(y)) => x.cmp(y),
+        (Value::Float(x), Value::Float(y)) => x.partial_cmp(y).unwrap_or(Ordering::Equal),
+        (Value::Bool(x), Value::Bool(y)) => x.cmp(y),
+        (Value::Str(x), Value::Str(y)) => x.cmp(y),
+        (Value::Null, Value::Null) => Ordering::Equal,
+        (Value::Null, _) => Ordering::Greater,
+        (_, Value::Null) => Ordering::Less,
+        _ => Ordering::Equal, // mixed types cannot occur in a typed column
+    }
+}
+
+/// Lexicographic tuple comparison over `keys`.
+pub fn cmp_tuples(a: &Tuple, b: &Tuple, keys: &[usize]) -> Ordering {
+    for &k in keys {
+        let o = cmp_values(&a[k], &b[k]);
+        if o != Ordering::Equal {
+            return o;
+        }
+    }
+    Ordering::Equal
+}
+
+/// `Sort`: stable sort by key columns.
+pub fn sort(input: &[Tuple], keys: &[usize]) -> Vec<Tuple> {
+    let mut out = input.to_vec();
+    out.sort_by(|a, b| cmp_tuples(a, b, keys));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aog::expr::{CmpOp, Func};
+    use crate::text::Tokenizer;
+
+    fn ctx(text: &'static str) -> EvalCtx<'static> {
+        let tokens = Box::leak(Box::new(Tokenizer::standard().tokenize(text)));
+        EvalCtx { text, tokens }
+    }
+
+    fn span_t(b: u32, e: u32) -> Tuple {
+        vec![Value::Span(Span::new(b, e))]
+    }
+
+    #[test]
+    fn doc_scan_covers_text() {
+        let d = Document::new(0, "hello");
+        assert_eq!(doc_scan(&d), vec![vec![Value::Span(Span::new(0, 5))]]);
+    }
+
+    #[test]
+    fn select_filters() {
+        let c = ctx("aaa bb c");
+        let input = vec![span_t(0, 3), span_t(4, 6), span_t(7, 8)];
+        let pred = Expr::Cmp(
+            Box::new(Expr::Call(Func::GetLength, vec![Expr::Col(0)])),
+            CmpOp::Ge,
+            Box::new(Expr::LitInt(2)),
+        );
+        let out = select(&input, &pred, &c);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn project_computes() {
+        let c = ctx("hello world");
+        let input = vec![span_t(0, 5)];
+        let cols = vec![
+            (
+                "len".to_string(),
+                Expr::Call(Func::GetLength, vec![Expr::Col(0)]),
+            ),
+            (
+                "txt".to_string(),
+                Expr::Call(Func::GetText, vec![Expr::Col(0)]),
+            ),
+        ];
+        let out = project(&input, &cols, &c);
+        assert_eq!(out[0][0], Value::Int(5));
+        assert_eq!(out[0][1], Value::Str("hello".into()));
+    }
+
+    #[test]
+    fn join_cross_and_pred() {
+        let c = ctx("aa bb cc dd");
+        let left = vec![span_t(0, 2), span_t(6, 8)];
+        let right = vec![span_t(3, 5), span_t(9, 11)];
+        let pred = Expr::Call(
+            Func::Follows,
+            vec![Expr::Col(0), Expr::Col(1), Expr::LitInt(0), Expr::LitInt(1)],
+        );
+        let out = join(&left, &right, &pred, 1, &c);
+        // (0,2)->(3,5) gap1 ok; (0,2)->(9,11) gap7 no; (6,8)->(9,11) gap1 ok;
+        // (6,8)->(3,5) not follows
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 2);
+    }
+
+    #[test]
+    fn consolidate_keeps_first_tuple_per_span() {
+        let input = vec![
+            vec![Value::Span(Span::new(0, 10)), Value::Int(1)],
+            vec![Value::Span(Span::new(2, 5)), Value::Int(2)],
+            vec![Value::Span(Span::new(0, 10)), Value::Int(3)],
+        ];
+        let out = consolidate(&input, 0, ConsolidatePolicy::ContainedWithin);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0][1], Value::Int(1)); // first wins
+    }
+
+    #[test]
+    fn sort_by_int_then_span() {
+        let input = vec![
+            vec![Value::Int(2), Value::Span(Span::new(5, 6))],
+            vec![Value::Int(1), Value::Span(Span::new(9, 10))],
+            vec![Value::Int(2), Value::Span(Span::new(1, 2))],
+        ];
+        let out = sort(&input, &[0, 1]);
+        assert_eq!(out[0][0], Value::Int(1));
+        assert_eq!(out[1][1], Value::Span(Span::new(1, 2)));
+    }
+
+    #[test]
+    fn cmp_values_null_last() {
+        assert_eq!(cmp_values(&Value::Null, &Value::Int(1)), Ordering::Greater);
+        assert_eq!(cmp_values(&Value::Int(1), &Value::Null), Ordering::Less);
+        assert_eq!(cmp_values(&Value::Null, &Value::Null), Ordering::Equal);
+    }
+}

@@ -1,0 +1,270 @@
+//! Per-operator wall-time profiler — the instrument behind the paper's
+//! Fig 4 ("relative time spent on executing different operators") and the
+//! `rt_SW` term of the Eq. 1 throughput estimate.
+//!
+//! Worker threads accumulate per-node nanoseconds into atomics; a snapshot
+//! groups them by operator family and computes the relative distribution.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::aog::Graph;
+
+/// Thread-safe accumulating profiler. One instance per engine run; cheap
+/// enough to leave on (two `Instant::now` calls per node per document).
+pub struct Profiler {
+    enabled: bool,
+    node_ns: Vec<AtomicU64>,
+}
+
+impl Profiler {
+    /// A disabled profiler: `start`/`stop` are no-ops.
+    pub fn disabled() -> Profiler {
+        Profiler {
+            enabled: false,
+            node_ns: Vec::new(),
+        }
+    }
+
+    /// An enabled profiler pre-sized for `graph`.
+    pub fn for_graph(graph: &Graph) -> Profiler {
+        Profiler {
+            enabled: true,
+            node_ns: (0..graph.nodes.len()).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Begin timing (None when disabled).
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Finish timing node `id`.
+    #[inline]
+    pub fn stop(&self, id: usize, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            let ns = t0.elapsed().as_nanos() as u64;
+            if let Some(slot) = self.node_ns.get(id) {
+                slot.fetch_add(ns, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Reset all counters.
+    pub fn reset(&self) {
+        for slot in &self.node_ns {
+            slot.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Take a profile snapshot grouped over `graph`.
+    pub fn snapshot(&self, graph: &Graph) -> Profile {
+        let per_node: Vec<u64> = (0..graph.nodes.len())
+            .map(|i| {
+                self.node_ns
+                    .get(i)
+                    .map(|a| a.load(Ordering::Relaxed))
+                    .unwrap_or(0)
+            })
+            .collect();
+        let total: u64 = per_node.iter().sum();
+        let mut by_op: BTreeMap<String, OpProfile> = BTreeMap::new();
+        for node in &graph.nodes {
+            let ns = per_node[node.id];
+            let e = by_op.entry(node.kind.name().to_string()).or_default();
+            e.ns += ns;
+            e.nodes += 1;
+        }
+        for e in by_op.values_mut() {
+            e.fraction = if total > 0 {
+                e.ns as f64 / total as f64
+            } else {
+                0.0
+            };
+        }
+        let extraction_ns: u64 = graph
+            .nodes
+            .iter()
+            .filter(|n| n.kind.is_extraction())
+            .map(|n| per_node[n.id])
+            .sum();
+        Profile {
+            per_node,
+            by_op,
+            total_ns: total,
+            extraction_ns,
+        }
+    }
+}
+
+/// Aggregate for one operator family.
+#[derive(Debug, Clone, Default)]
+pub struct OpProfile {
+    pub ns: u64,
+    pub nodes: usize,
+    pub fraction: f64,
+}
+
+/// A profile snapshot.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    per_node: Vec<u64>,
+    by_op: BTreeMap<String, OpProfile>,
+    total_ns: u64,
+    extraction_ns: u64,
+}
+
+impl Profile {
+    /// Total accumulated nanoseconds.
+    pub fn total_ns(&self) -> u64 {
+        self.total_ns
+    }
+
+    /// Per-node nanoseconds (indexed by node id).
+    pub fn per_node(&self) -> &[u64] {
+        &self.per_node
+    }
+
+    /// Grouped by operator family name.
+    pub fn by_operator(&self) -> &BTreeMap<String, OpProfile> {
+        &self.by_op
+    }
+
+    /// Fraction of time in extraction operators (regex + dictionary) —
+    /// the paper's "up to 82 %" observation, and the offloaded share in
+    /// the Eq. 1 estimate's first scenario.
+    pub fn fraction_extraction(&self) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            self.extraction_ns as f64 / self.total_ns as f64
+        }
+    }
+
+    /// Fraction of time spent in a set of nodes (e.g. one subgraph).
+    pub fn fraction_of_nodes(&self, nodes: &[usize]) -> f64 {
+        if self.total_ns == 0 {
+            return 0.0;
+        }
+        let ns: u64 = nodes.iter().map(|&i| self.per_node[i]).sum();
+        ns as f64 / self.total_ns as f64
+    }
+
+    /// Fig 4-style table: operator family → percent, sorted by the fixed
+    /// bucket order used in the paper's figure.
+    pub fn fig4_rows(&self) -> Vec<(String, f64)> {
+        let order = [
+            "RegularExpression",
+            "Dictionary",
+            "Join",
+            "Select",
+            "Consolidate",
+            "Project",
+            "Union",
+            "Sort",
+            "Limit",
+            "DocScan",
+            "SubgraphExec",
+        ];
+        let mut rows = Vec::new();
+        for name in order {
+            if let Some(p) = self.by_op.get(name) {
+                if p.ns > 0 {
+                    rows.push((name.to_string(), p.fraction * 100.0));
+                }
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn disabled_profiler_is_noop() {
+        let p = Profiler::disabled();
+        assert!(p.start().is_none());
+        p.stop(0, None);
+    }
+
+    #[test]
+    fn snapshot_fractions_sum_to_one() {
+        let g = crate::aql::compile(
+            "create view A as extract regex /a+/ on d.text as m from Document d; \
+             output view A;",
+        )
+        .unwrap();
+        let prof = Profiler::for_graph(&g);
+        // simulate recorded time
+        prof.node_ns[0].store(100, Ordering::Relaxed);
+        prof.node_ns[1].store(300, Ordering::Relaxed);
+        let snap = prof.snapshot(&g);
+        assert_eq!(snap.total_ns(), 400);
+        let sum: f64 = snap.by_operator().values().map(|v| v.fraction).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!((snap.fraction_extraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let g = crate::aql::compile(
+            "create view A as extract regex /a/ on d.text as m from Document d; \
+             output view A;",
+        )
+        .unwrap();
+        let prof = Profiler::for_graph(&g);
+        prof.node_ns[0].store(5, Ordering::Relaxed);
+        prof.reset();
+        assert_eq!(prof.snapshot(&g).total_ns(), 0);
+    }
+
+    #[test]
+    fn concurrent_accumulation() {
+        let g = crate::aql::compile(
+            "create view A as extract regex /a/ on d.text as m from Document d; \
+             output view A;",
+        )
+        .unwrap();
+        let prof = Arc::new(Profiler::for_graph(&g));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let p = prof.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    p.node_ns[1].fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(prof.snapshot(&g).per_node()[1], 8000);
+    }
+
+    #[test]
+    fn fig4_rows_ordering() {
+        let g = crate::aql::compile(
+            "create dictionary D as ('x'); \
+             create view A as extract dictionary 'D' on d.text as m from Document d; \
+             create view B as extract regex /y/ on d.text as m from Document d; \
+             output view A; output view B;",
+        )
+        .unwrap();
+        let prof = Profiler::for_graph(&g);
+        for (i, _) in g.nodes.iter().enumerate() {
+            prof.node_ns[i].store(10, Ordering::Relaxed);
+        }
+        let rows = prof.snapshot(&g).fig4_rows();
+        assert_eq!(rows[0].0, "RegularExpression");
+        assert_eq!(rows[1].0, "Dictionary");
+    }
+}

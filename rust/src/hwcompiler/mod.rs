@@ -1,0 +1,420 @@
+//! The hardware query compiler — the paper's TAPAS (ref [23]) analogue.
+//!
+//! Takes a partitioned subgraph and produces an [`AccelConfig`]: the set of
+//! *machines* (dense DFA transition tables — regex search DFAs and
+//! dictionary Aho–Corasick automata share one layout) plus the relational
+//! body that the accelerator's post-stage evaluates over the match streams.
+//!
+//! The paper generates a custom FPGA netlist per query; our reconfigurable
+//! device is a fixed AOT-compiled Pallas kernel whose transition tables are
+//! *inputs* (their ref [16]'s software-programmed-interface approach), so
+//! "compiling" a query means packing tables into the padded tensor layout
+//! of one of a small menu of artifact variants and validating that the
+//! hardware semantics reproduce the software semantics for every machine.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::aog::{Graph, NodeId, OpKind};
+use crate::dict::AhoCorasick;
+use crate::partition::SubgraphSpec;
+use crate::regex::CompiledRegex;
+use crate::util::Prng;
+
+/// Largest per-machine state budget any artifact variant provides; the
+/// partitioner refuses to offload patterns beyond this (the FPGA's BRAM
+/// budget, in the paper's terms).
+pub const MAX_HW_STATES: usize = 1024;
+
+/// Artifact menu: `(machines, states)` table-geometry variants. For each
+/// geometry, AOT produces one HLO per block size in [`BLOCK_SIZES`]. Kept
+/// in sync with `python/compile/aot.py` (`VARIANTS` there) by the
+/// `artifact_key` naming convention and checked at runtime load.
+pub const GEOMETRIES: &[(usize, usize)] = &[(4, 64), (8, 128), (8, 256), (4, 1024)];
+
+/// Work-package block sizes (bytes per stream) with compiled artifacts.
+pub const BLOCK_SIZES: &[usize] = &[4096, 16384];
+
+/// Number of parallel byte streams — fixed at the paper's four.
+pub const STREAMS: usize = 4;
+
+/// Identifies one compiled artifact variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub machines: usize,
+    pub states: usize,
+    pub block: usize,
+}
+
+impl ArtifactKey {
+    /// File name under `artifacts/` (the aot.py naming convention).
+    pub fn file_name(&self) -> String {
+        format!(
+            "dfa_m{}_s{}_b{}.hlo.txt",
+            self.machines, self.states, self.block
+        )
+    }
+}
+
+/// What a machine's hit stream means (how the post-stage reconstructs
+/// spans from reported `(offset, state)` pairs).
+#[derive(Clone)]
+pub enum MatcherRef {
+    Regex(Arc<CompiledRegex>),
+    Dict(Arc<AhoCorasick>),
+}
+
+impl fmt::Debug for MatcherRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MatcherRef::Regex(r) => write!(f, "Regex(/{}/)", r.pattern.source),
+            MatcherRef::Dict(d) => write!(f, "Dict({} states)", d.num_states),
+        }
+    }
+}
+
+/// One configured machine: a dense table in the shared layout.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    /// Node in the subgraph body whose output this machine produces.
+    pub body_node: NodeId,
+    pub matcher: MatcherRef,
+    /// `num_states × 256` table (state 0 dead, 1 start, NUL resets).
+    pub table: Vec<u32>,
+    pub num_states: usize,
+    /// Per-state accept flags.
+    pub accept: Vec<bool>,
+}
+
+/// A compiled accelerator configuration for one subgraph.
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    pub subgraph_id: usize,
+    pub machines: Vec<Machine>,
+    /// The subgraph body (extraction leaves + relational operators).
+    pub body: Arc<Graph>,
+    /// Body output node ids in `output_idx` order (from the spec).
+    pub outputs: Vec<NodeId>,
+    /// Number of ExtInput slots.
+    pub ext_inputs: usize,
+    /// Chosen table geometry (machines, states) — block is chosen by the
+    /// accelerator service per its package size.
+    pub geometry: (usize, usize),
+}
+
+/// Hardware compilation failure.
+#[derive(Debug)]
+pub enum HwCompileError {
+    /// Pattern's DFA exceeds every artifact geometry.
+    TooManyStates { node: NodeId, states: usize },
+    /// More extraction machines than any geometry provides.
+    TooManyMachines { machines: usize },
+    /// SW/HW semantics diverged on validation text (pattern rejected).
+    SemanticsDiverge { node: NodeId, pattern: String },
+}
+
+impl fmt::Display for HwCompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HwCompileError::TooManyStates { node, states } => write!(
+                f,
+                "node {node}: {states} DFA states exceed the largest artifact geometry"
+            ),
+            HwCompileError::TooManyMachines { machines } => {
+                write!(f, "{machines} machines exceed the largest artifact geometry")
+            }
+            HwCompileError::SemanticsDiverge { node, pattern } => write!(
+                f,
+                "node {node}: hardware semantics diverge from software for /{pattern}/"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for HwCompileError {}
+
+/// Compile a subgraph into an accelerator configuration.
+pub fn compile_subgraph(spec: &SubgraphSpec) -> Result<AccelConfig, HwCompileError> {
+    let mut machines = Vec::new();
+    for node in &spec.body.nodes {
+        match &node.kind {
+            OpKind::RegexExtract { regex, .. } => {
+                validate_regex_semantics(node.id, regex)?;
+                let dfa = &regex.search;
+                machines.push(Machine {
+                    body_node: node.id,
+                    matcher: MatcherRef::Regex(regex.clone()),
+                    table: dfa.table.clone(),
+                    num_states: dfa.num_states as usize,
+                    accept: dfa.accept.clone(),
+                });
+            }
+            OpKind::DictExtract { matcher, .. } => {
+                // The software scanner folds INPUT bytes for
+                // case-insensitive dictionaries (AhoCorasick::step); the
+                // kernel is a pure table walk, so the fold must be baked
+                // into the exported table: table'[s][b] = table[s][fold(b)].
+                let s_n = matcher.num_states as usize;
+                let fold = |b: usize| -> usize {
+                    match matcher.case {
+                        crate::dict::CaseMode::Exact => b,
+                        crate::dict::CaseMode::Insensitive => {
+                            (b as u8).to_ascii_lowercase() as usize
+                        }
+                    }
+                };
+                let mut table = vec![0u32; s_n * 256];
+                for s in 0..s_n {
+                    for b in 0..256 {
+                        table[s * 256 + b] = matcher.table[s * 256 + fold(b)];
+                    }
+                }
+                machines.push(Machine {
+                    body_node: node.id,
+                    matcher: MatcherRef::Dict(matcher.clone()),
+                    table,
+                    num_states: s_n,
+                    accept: (0..matcher.num_states)
+                        .map(|s| !matcher.outputs[s as usize].is_empty())
+                        .collect(),
+                });
+            }
+            _ => {}
+        }
+    }
+
+    let max_states = machines.iter().map(|m| m.num_states).max().unwrap_or(2);
+    let geometry = GEOMETRIES
+        .iter()
+        .copied()
+        .filter(|&(m, s)| m >= machines.len().max(1) && s >= max_states)
+        .min_by_key(|&(m, s)| m * s)
+        .ok_or({
+            if max_states > MAX_HW_STATES {
+                HwCompileError::TooManyStates {
+                    node: machines
+                        .iter()
+                        .find(|m| m.num_states == max_states)
+                        .map(|m| m.body_node)
+                        .unwrap_or(0),
+                    states: max_states,
+                }
+            } else {
+                HwCompileError::TooManyMachines {
+                    machines: machines.len(),
+                }
+            }
+        })?;
+
+    Ok(AccelConfig {
+        subgraph_id: spec.id,
+        machines,
+        body: Arc::new(spec.body.clone()),
+        outputs: spec.outputs.clone(),
+        ext_inputs: spec.ext_inputs,
+        geometry,
+    })
+}
+
+/// Validate on generated text that end-report + reverse-scan reconstruction
+/// equals the software matcher for this pattern (the contract documented in
+/// [`crate::regex::matcher`]). Deterministic: fixed seed.
+fn validate_regex_semantics(
+    node: NodeId,
+    regex: &CompiledRegex,
+) -> Result<(), HwCompileError> {
+    let alphabet = regex.pattern.alphabet_sample();
+    let mut rng = Prng::new(0xB005_7E11);
+    let fixed = [
+        "",
+        "Alice met Bob at IBM Research on 2014-06-30; call (408) 555-9876 x22.",
+        "aaa bbb aaa. aaab aab ab b a",
+        "$1,234.56 and 99% of http://example.com/x?y=z emails: a.b@c-d.org",
+    ];
+    for t in fixed {
+        if !regex.hw_semantics_agree(t) {
+            return Err(HwCompileError::SemanticsDiverge {
+                node,
+                pattern: regex.pattern.source.clone(),
+            });
+        }
+    }
+    for _ in 0..64 {
+        let len = rng.range(1, 160);
+        let t = rng.string_over(&alphabet, len);
+        if !regex.hw_semantics_agree(&t) {
+            return Err(HwCompileError::SemanticsDiverge {
+                node,
+                pattern: regex.pattern.source.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+impl AccelConfig {
+    /// Pick the artifact for a given block size.
+    pub fn artifact_key(&self, block: usize) -> ArtifactKey {
+        ArtifactKey {
+            machines: self.geometry.0,
+            states: self.geometry.1,
+            block,
+        }
+    }
+
+    /// Pack the machines into the padded `[M, S, 256]` transition-table
+    /// tensor and `[M, S]` accept tensor (row-major i32), matching the
+    /// kernel's expected layout exactly. Padding rows/machines are all
+    /// zeros (dead state, never accepting); every real row keeps the
+    /// NUL→START reset.
+    pub fn pack_tables(&self) -> (Vec<i32>, Vec<i32>) {
+        let (m_pad, s_pad) = self.geometry;
+        let mut tables = vec![0i32; m_pad * s_pad * 256];
+        let mut accepts = vec![0i32; m_pad * s_pad];
+        for (mi, m) in self.machines.iter().enumerate() {
+            for s in 0..m.num_states {
+                let src = s * 256;
+                let dst = (mi * s_pad + s) * 256;
+                for b in 0..256 {
+                    tables[dst + b] = m.table[src + b] as i32;
+                }
+                accepts[mi * s_pad + s] = i32::from(m.accept[s]);
+            }
+        }
+        (tables, accepts)
+    }
+
+    /// VMEM footprint estimate for the kernel working set at this geometry
+    /// (tables + accepts + one byte-block tile), in bytes. Used by the
+    /// DESIGN.md §Perf analysis, mirroring the paper's BRAM budgeting.
+    pub fn vmem_estimate(&self, block: usize) -> usize {
+        let (m, s) = self.geometry;
+        m * s * 256 * 4 + m * s * 4 + STREAMS * block * 4 + m * STREAMS * block * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::{partition, PartitionMode};
+
+    fn spec_for(aql: &str, mode: PartitionMode) -> Vec<SubgraphSpec> {
+        let g = crate::optimizer::optimize(&crate::aql::compile(aql).unwrap());
+        partition(&g, mode).subgraphs
+    }
+
+    const QUERY: &str = r#"
+        create dictionary Orgs as ('IBM', 'IBM Research');
+        create view Org as extract dictionary 'Orgs' on d.text as match from Document d;
+        create view Person as extract regex /[A-Z][a-z]+ [A-Z][a-z]+/ on d.text as name from Document d;
+        create view V as
+          select p.name as person, o.match as org
+          from Person p, Org o
+          where FollowsTok(p.name, o.match, 0, 4);
+        output view V;
+    "#;
+
+    #[test]
+    fn compiles_two_machines() {
+        let specs = spec_for(QUERY, PartitionMode::SingleSubgraph);
+        assert_eq!(specs.len(), 1);
+        let cfg = compile_subgraph(&specs[0]).unwrap();
+        assert_eq!(cfg.machines.len(), 2);
+        // one regex, one dict
+        assert!(matches!(cfg.machines[0].matcher, MatcherRef::Dict(_))
+            || matches!(cfg.machines[1].matcher, MatcherRef::Dict(_)));
+        // geometry fits both machine count and state budget
+        let (m, s) = cfg.geometry;
+        assert!(m >= 2);
+        assert!(s >= cfg.machines.iter().map(|x| x.num_states).max().unwrap());
+    }
+
+    #[test]
+    fn packed_layout_roundtrips() {
+        let specs = spec_for(QUERY, PartitionMode::ExtractOnly);
+        let cfg = compile_subgraph(&specs[0]).unwrap();
+        let (tables, accepts) = cfg.pack_tables();
+        let (m_pad, s_pad) = cfg.geometry;
+        assert_eq!(tables.len(), m_pad * s_pad * 256);
+        assert_eq!(accepts.len(), m_pad * s_pad);
+        // spot-check machine 0, state START(1): NUL resets to START
+        assert_eq!(tables[(0 * s_pad + 1) * 256 + 0], 1);
+        // padded machine rows are all zero
+        let last = m_pad - 1;
+        if last >= cfg.machines.len() {
+            let base = (last * s_pad) * 256;
+            assert!(tables[base..base + 256].iter().all(|&x| x == 0));
+        }
+        // accepts are 0/1
+        assert!(accepts.iter().all(|&a| a == 0 || a == 1));
+        // at least one accepting state exists per real machine
+        for (mi, m) in cfg.machines.iter().enumerate() {
+            let row = &accepts[mi * s_pad..mi * s_pad + m.num_states];
+            assert!(row.iter().any(|&a| a == 1), "machine {mi} never accepts");
+        }
+    }
+
+    #[test]
+    fn artifact_key_names() {
+        let k = ArtifactKey {
+            machines: 8,
+            states: 256,
+            block: 4096,
+        };
+        assert_eq!(k.file_name(), "dfa_m8_s256_b4096.hlo.txt");
+    }
+
+    #[test]
+    fn geometry_menu_is_sane() {
+        assert!(GEOMETRIES.iter().any(|&(_, s)| s == MAX_HW_STATES));
+        for &(m, s) in GEOMETRIES {
+            assert!(m >= 1 && s >= 2);
+        }
+    }
+
+    #[test]
+    fn too_many_machines_rejected() {
+        // 17 distinct regexes > max geometry machines (8)
+        let mut aql = String::new();
+        let max_m = GEOMETRIES.iter().map(|&(m, _)| m).max().unwrap();
+        for i in 0..=max_m {
+            aql.push_str(&format!(
+                "create view V{i} as extract regex /x{{{}}}y/ on d.text as m from Document d;\n",
+                i + 1
+            ));
+        }
+        for i in 0..=max_m {
+            aql.push_str(&format!("output view V{i};\n"));
+        }
+        let specs = spec_for(&aql, PartitionMode::ExtractOnly);
+        let err = compile_subgraph(&specs[0]).unwrap_err();
+        assert!(matches!(err, HwCompileError::TooManyMachines { .. }), "{err}");
+    }
+
+    #[test]
+    fn vmem_estimate_positive_and_monotone() {
+        let specs = spec_for(QUERY, PartitionMode::ExtractOnly);
+        let cfg = compile_subgraph(&specs[0]).unwrap();
+        assert!(cfg.vmem_estimate(4096) > 0);
+        assert!(cfg.vmem_estimate(16384) > cfg.vmem_estimate(4096));
+    }
+
+    #[test]
+    fn semantic_validation_accepts_extraction_patterns() {
+        // the realistic pattern families used by T1–T5 must all pass
+        for pat in [
+            r"[A-Z][a-z]+ [A-Z][a-z]+",
+            r"\d{3}-\d{4}",
+            r"(\(\d{3}\) )?\d{3}-\d{4}",
+            r"[a-z0-9_]+@[a-z0-9]+\.[a-z]{2,4}",
+            r"\$\d+(\.\d{2})?",
+            r"[A-Z]{2,5}",
+            r"\d{4}-\d{2}-\d{2}",
+            r"http:\/\/[a-z0-9\.\/\-]+",
+        ] {
+            let re = crate::regex::compile(pat, false).unwrap();
+            validate_regex_semantics(0, &re)
+                .unwrap_or_else(|e| panic!("pattern {pat} rejected: {e}"));
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! # boost — "Giving Text Analytics a Boost", reproduced
+//!
+//! A SystemT-like declarative text-analytics engine (AQL subset → operator
+//! graph → optimizer → multithreaded runtime) extended with the paper's
+//! contribution: partitioning the operator graph into a software supergraph
+//! and hardware-accelerated subgraphs (maximal convex subgraphs), a hardware
+//! query compiler that configures a streaming multi-pattern matcher, and a
+//! multi-threaded HW/SW communication interface that batches documents into
+//! work packages.
+//!
+//! The "reconfigurable device" of the paper (a Stratix IV FPGA) is realised
+//! as an AOT-compiled JAX/Pallas byte-stream DFA kernel executed through the
+//! PJRT C API (`xla` crate); reconfiguration is table-driven (transition
+//! tables are runtime inputs), and a calibrated performance model
+//! ([`perfmodel`]) reproduces the paper's FPGA timing for the figures.
+//!
+//! ## Layer map
+//! * L3 (this crate): coordination — everything under [`aql`], [`aog`],
+//!   [`exec`], [`partition`], [`hwcompiler`], [`accel`], [`coordinator`].
+//! * L2 (build time): `python/compile/model.py` — the accelerated subgraph
+//!   as a JAX function.
+//! * L1 (build time): `python/compile/kernels/dfa_scan.py` — the Pallas
+//!   multi-machine DFA scan kernel.
+
+pub mod accel;
+pub mod aog;
+pub mod aql;
+pub mod bench;
+pub mod coordinator;
+pub mod corpus;
+pub mod dict;
+pub mod exec;
+pub mod hwcompiler;
+pub mod metrics;
+pub mod optimizer;
+pub mod partition;
+pub mod perfmodel;
+pub mod queries;
+pub mod regex;
+pub mod runtime;
+pub mod text;
+pub mod util;
+
+/// Convenience re-exports for the common user-facing API surface.
+pub mod prelude {
+    pub use crate::aog::{Graph, Schema, Tuple, Value};
+    pub use crate::coordinator::{Engine, EngineConfig, RunReport};
+    pub use crate::corpus::{Corpus, CorpusSpec, Document};
+    pub use crate::exec::Profile;
+    pub use crate::partition::PartitionPlan;
+    pub use crate::perfmodel::FpgaModel;
+    pub use crate::text::Span;
+}

@@ -1,0 +1,262 @@
+//! `repro` — CLI for the text-analytics accelerator reproduction.
+//!
+//! Subcommands (no external arg-parsing crate in the offline vendor set;
+//! parsing is hand-rolled):
+//!
+//! ```text
+//! repro queries                         list built-in queries T1–T5
+//! repro explain   --query t1            dump the optimized operator graph + costs
+//! repro partition --query t1 --mode multi   show supergraph + subgraphs (Fig 1)
+//! repro profile   --query t1 [--docs N --doc-size B --threads T]   Fig 4 rows
+//! repro run       --query t1 --mode single --engine pjrt [...]     end-to-end
+//! ```
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use boost::coordinator::{Engine, EngineConfig};
+use boost::corpus::CorpusSpec;
+use boost::partition::{partition, PartitionMode};
+use boost::perfmodel::FpgaModel;
+use boost::runtime::EngineSpec;
+use boost::util::fmt_mbps;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "queries" => cmd_queries(),
+        "explain" => cmd_explain(&flags),
+        "partition" => cmd_partition(&flags),
+        "profile" => cmd_profile(&flags),
+        "run" => cmd_run(&flags),
+        "-h" | "--help" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "usage: repro <queries|explain|partition|profile|run> [flags]
+  --query <t1..t5>       built-in query (default t1)
+  --aql <file>           AQL file instead of a built-in
+  --mode <none|extract|single|multi>   offload scenario (default none)
+  --engine <native|pjrt> accelerator backend (default native)
+  --artifacts <dir>      artifacts directory (default ./artifacts)
+  --docs <n>             corpus size (default 200)
+  --doc-size <bytes>     document size (default 2048)
+  --kind <news|tweets|logs>  corpus kind (default news)
+  --threads <n>          worker threads (default 8)
+  --block <4096|16384>   package block bytes (default 16384)";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            m.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn load_aql(flags: &HashMap<String, String>) -> Result<(String, String), String> {
+    if let Some(path) = flags.get("aql") {
+        let aql = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        return Ok((path.clone(), aql));
+    }
+    let name = flags.get("query").map(|s| s.as_str()).unwrap_or("t1");
+    let q = boost::queries::builtin(name)
+        .ok_or_else(|| format!("unknown query '{name}' (try `repro queries`)"))?;
+    Ok((q.name.to_string(), q.aql))
+}
+
+fn corpus_for(flags: &HashMap<String, String>) -> CorpusSpec {
+    let docs: usize = flags
+        .get("docs")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let size: usize = flags
+        .get("doc-size")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2048);
+    match flags.get("kind").map(|s| s.as_str()).unwrap_or("news") {
+        "tweets" => CorpusSpec::tweets(docs, size),
+        "logs" => CorpusSpec::logs(docs, size),
+        _ => CorpusSpec::news(docs, size),
+    }
+}
+
+fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String> {
+    let mode = PartitionMode::parse(flags.get("mode").map(|s| s.as_str()).unwrap_or("none"))
+        .ok_or("bad --mode")?;
+    let engine = match flags.get("engine").map(|s| s.as_str()).unwrap_or("native") {
+        "native" => EngineSpec::Native,
+        "pjrt" => EngineSpec::Pjrt {
+            artifacts_dir: flags
+                .get("artifacts")
+                .cloned()
+                .unwrap_or_else(|| "artifacts".into())
+                .into(),
+        },
+        other => return Err(format!("bad --engine '{other}'")),
+    };
+    let mut cfg = EngineConfig::accelerated(mode, engine);
+    if let Some(b) = flags.get("block").and_then(|s| s.parse().ok()) {
+        cfg.accel.block = b;
+    }
+    Ok(cfg)
+}
+
+fn cmd_queries() -> Result<(), String> {
+    for q in boost::queries::all() {
+        println!("{:4}  {:26}  {}", q.name, q.title, q.profile_hint);
+    }
+    Ok(())
+}
+
+fn cmd_explain(flags: &HashMap<String, String>) -> Result<(), String> {
+    let (name, aql) = load_aql(flags)?;
+    let g = boost::aql::compile(&aql).map_err(|e| e.to_string())?;
+    let opt = boost::optimizer::optimize(&g);
+    println!("query {name}: {} nodes after optimization", opt.nodes.len());
+    println!("{}", opt.dump());
+    let cost = boost::optimizer::estimate(&opt, 2048);
+    println!("estimated cost (2048 B docs): {:.0} units", cost.total_cost);
+    Ok(())
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> Result<(), String> {
+    let (name, aql) = load_aql(flags)?;
+    let mode = PartitionMode::parse(flags.get("mode").map(|s| s.as_str()).unwrap_or("multi"))
+        .ok_or("bad --mode")?;
+    let g = boost::optimizer::optimize(&boost::aql::compile(&aql).map_err(|e| e.to_string())?);
+    let plan = partition(&g, mode);
+    println!("query {name}, mode {}:", mode.name());
+    println!("== supergraph ==\n{}", plan.supergraph.dump());
+    for sg in &plan.subgraphs {
+        println!(
+            "== subgraph #{} ({} nodes, {} ext inputs, {} outputs) ==",
+            sg.id,
+            sg.orig_nodes.len(),
+            sg.ext_inputs,
+            sg.outputs.len()
+        );
+        println!("{}", sg.body.dump());
+        match boost::hwcompiler::compile_subgraph(sg) {
+            Ok(cfg) => println!(
+                "   hw: {} machines, geometry {}x{}, artifact {} / {}, VMEM est {} KiB\n",
+                cfg.machines.len(),
+                cfg.geometry.0,
+                cfg.geometry.1,
+                cfg.artifact_key(4096).file_name(),
+                cfg.artifact_key(16384).file_name(),
+                cfg.vmem_estimate(16384) / 1024,
+            ),
+            Err(e) => println!("   hw compile FAILED: {e}\n"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_profile(flags: &HashMap<String, String>) -> Result<(), String> {
+    let (name, aql) = load_aql(flags)?;
+    let threads: usize = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let engine = Engine::compile_aql(&aql).map_err(|e| e.to_string())?;
+    let corpus = corpus_for(flags).generate();
+    let report = engine.run_corpus(&corpus, threads);
+    let profile = engine.profile();
+    println!(
+        "query {name}: {} docs x {} B, {} threads, {} tuples, {}",
+        report.docs,
+        corpus.docs.first().map(|d| d.len()).unwrap_or(0),
+        report.threads,
+        report.tuples,
+        fmt_mbps(report.throughput()),
+    );
+    println!("-- relative operator time (Fig 4) --");
+    for (op, pct) in profile.fig4_rows() {
+        println!("  {op:20} {pct:5.1}%  {}", bar(pct));
+    }
+    println!(
+        "  extraction fraction: {:.1}%",
+        profile.fraction_extraction() * 100.0
+    );
+    Ok(())
+}
+
+fn bar(pct: f64) -> String {
+    "#".repeat((pct / 2.0).round() as usize)
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
+    let (name, aql) = load_aql(flags)?;
+    let threads: usize = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let cfg = engine_config(flags)?;
+    let mode = cfg.mode;
+    let engine_name = cfg.engine.name();
+    let engine = Engine::with_config(&aql, cfg).map_err(|e| e.to_string())?;
+    let corpus = corpus_for(flags).generate();
+    let report = engine.run_corpus(&corpus, threads);
+    println!(
+        "query {name} | mode {} | engine {engine_name} | {} docs x {} B | {} threads",
+        mode.name(),
+        report.docs,
+        corpus.docs.first().map(|d| d.len()).unwrap_or(0),
+        report.threads,
+    );
+    println!(
+        "  wall {:8.1} ms   throughput {}   {} tuples",
+        report.wall.as_secs_f64() * 1e3,
+        fmt_mbps(report.throughput()),
+        report.tuples,
+    );
+    if let Some(a) = report.accel {
+        println!(
+            "  accel: {} packages, {:.1} docs/pkg, {} hits, engine {:.1} ms, post {:.1} ms",
+            a.packages,
+            a.docs_per_package(),
+            a.hits,
+            a.engine_wall_ns as f64 / 1e6,
+            a.post_wall_ns as f64 / 1e6,
+        );
+        println!(
+            "  modeled FPGA throughput: {}",
+            fmt_mbps(a.modeled_throughput())
+        );
+        let doc_size = corpus.docs.first().map(|d| d.len()).unwrap_or(2048);
+        let profile_frac = 0.97; // conservative hw-supported fraction
+        let est = FpgaModel::paper().estimate(
+            report.throughput(),
+            profile_frac,
+            doc_size,
+            engine.config().accel.block,
+            1,
+        );
+        println!("  Eq.1 system estimate at this SW baseline: {}", fmt_mbps(est));
+    }
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Lightweight counters for the accelerator service and end-to-end runs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Accumulated accelerator-side counters (one instance per service).
+#[derive(Debug, Default)]
+pub struct AccelMetrics {
+    /// Work packages dispatched.
+    pub packages: AtomicU64,
+    /// Documents processed.
+    pub docs: AtomicU64,
+    /// Payload bytes shipped (excluding padding).
+    pub bytes: AtomicU64,
+    /// Sparse hit events returned by the engine.
+    pub hits: AtomicU64,
+    /// Wall nanoseconds spent in engine execution.
+    pub engine_wall_ns: AtomicU64,
+    /// Wall nanoseconds spent in the post-stage (span reconstruction +
+    /// relational body).
+    pub post_wall_ns: AtomicU64,
+    /// Modeled FPGA nanoseconds (perfmodel package_time accumulation).
+    pub modeled_ns: AtomicU64,
+}
+
+/// A point-in-time copy of [`AccelMetrics`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AccelSnapshot {
+    pub packages: u64,
+    pub docs: u64,
+    pub bytes: u64,
+    pub hits: u64,
+    pub engine_wall_ns: u64,
+    pub post_wall_ns: u64,
+    pub modeled_ns: u64,
+}
+
+impl AccelMetrics {
+    /// Add one package's worth of counters.
+    pub fn record_package(
+        &self,
+        docs: u64,
+        bytes: u64,
+        hits: u64,
+        engine_wall_ns: u64,
+        post_wall_ns: u64,
+        modeled_ns: u64,
+    ) {
+        self.packages.fetch_add(1, Ordering::Relaxed);
+        self.docs.fetch_add(docs, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.hits.fetch_add(hits, Ordering::Relaxed);
+        self.engine_wall_ns.fetch_add(engine_wall_ns, Ordering::Relaxed);
+        self.post_wall_ns.fetch_add(post_wall_ns, Ordering::Relaxed);
+        self.modeled_ns.fetch_add(modeled_ns, Ordering::Relaxed);
+    }
+
+    /// Snapshot all counters.
+    pub fn snapshot(&self) -> AccelSnapshot {
+        AccelSnapshot {
+            packages: self.packages.load(Ordering::Relaxed),
+            docs: self.docs.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            engine_wall_ns: self.engine_wall_ns.load(Ordering::Relaxed),
+            post_wall_ns: self.post_wall_ns.load(Ordering::Relaxed),
+            modeled_ns: self.modeled_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl AccelSnapshot {
+    /// Modeled accelerator throughput over the run (bytes/s).
+    pub fn modeled_throughput(&self) -> f64 {
+        if self.modeled_ns == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / (self.modeled_ns as f64 / 1e9)
+        }
+    }
+
+    /// Average documents per package (the combining factor).
+    pub fn docs_per_package(&self) -> f64 {
+        if self.packages == 0 {
+            0.0
+        } else {
+            self.docs as f64 / self.packages as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = AccelMetrics::default();
+        m.record_package(8, 16384, 12, 1000, 500, 30_000);
+        m.record_package(4, 8192, 3, 900, 400, 20_000);
+        let s = m.snapshot();
+        assert_eq!(s.packages, 2);
+        assert_eq!(s.docs, 12);
+        assert_eq!(s.bytes, 24576);
+        assert_eq!(s.hits, 15);
+        assert_eq!(s.docs_per_package(), 6.0);
+        let tp = s.modeled_throughput();
+        assert!((tp - 24576.0 / 50e-6).abs() / tp < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_safe() {
+        let s = AccelMetrics::default().snapshot();
+        assert_eq!(s.modeled_throughput(), 0.0);
+        assert_eq!(s.docs_per_package(), 0.0);
+    }
+}

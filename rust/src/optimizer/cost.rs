@@ -1,0 +1,186 @@
+//! A simple cardinality/cost model for explain output and partitioner
+//! tie-breaking.
+//!
+//! Costs are unitless "work per document"; cardinalities are expected
+//! tuples per document. Both use fixed selectivity heuristics over an
+//! assumed document length — crude, but all the optimizer needs is
+//! relative ordering, and all the partitioner needs is a monotone proxy
+//! for "how much software time does this node account for".
+
+use crate::aog::{Graph, OpKind};
+
+/// Per-node cost estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeCost {
+    /// Expected output tuples per document.
+    pub rows: f64,
+    /// Unitless work per document.
+    pub cost: f64,
+}
+
+/// Whole-graph estimate.
+#[derive(Debug, Clone)]
+pub struct CostReport {
+    pub per_node: Vec<NodeCost>,
+    pub total_cost: f64,
+}
+
+impl CostReport {
+    /// Fraction of estimated cost attributable to `nodes`.
+    pub fn fraction_of(&self, nodes: &[usize]) -> f64 {
+        if self.total_cost <= 0.0 {
+            return 0.0;
+        }
+        nodes.iter().map(|&i| self.per_node[i].cost).sum::<f64>() / self.total_cost
+    }
+}
+
+/// Estimate costs for `g` assuming documents of `doc_len` bytes.
+pub fn estimate(g: &Graph, doc_len: usize) -> CostReport {
+    let n = doc_len as f64;
+    let mut per_node: Vec<NodeCost> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let in_rows = |k: usize| -> f64 { per_node[node.inputs[k]].rows };
+        let nc = match &node.kind {
+            OpKind::DocScan => NodeCost { rows: 1.0, cost: 1.0 },
+            OpKind::RegexExtract { regex, .. } => {
+                // software regex cost grows with pattern complexity (the
+                // anchored rescans); matches assumed sparse
+                let states = regex.anchored.num_states as f64;
+                NodeCost {
+                    rows: (n / 120.0).max(0.5),
+                    cost: n * (1.0 + states / 8.0),
+                }
+            }
+            OpKind::DictExtract { dict, .. } => NodeCost {
+                rows: (n / 150.0).max(0.5) * (1.0 + dict.entries.len() as f64 / 50.0),
+                cost: n,
+            },
+            OpKind::Select { .. } => NodeCost {
+                rows: in_rows(0) * 0.25,
+                cost: in_rows(0),
+            },
+            OpKind::Project { cols } => NodeCost {
+                rows: in_rows(0),
+                cost: in_rows(0) * cols.len() as f64 * 0.5,
+            },
+            OpKind::Join { .. } => {
+                let (l, r) = (in_rows(0), in_rows(1));
+                NodeCost {
+                    rows: (l * r * 0.05).max(0.1),
+                    cost: l * r,
+                }
+            }
+            OpKind::Union => {
+                let rows: f64 = (0..node.inputs.len()).map(in_rows).sum();
+                NodeCost { rows, cost: rows * 0.2 }
+            }
+            OpKind::Difference => {
+                let (l, r) = (in_rows(0), in_rows(1));
+                NodeCost { rows: (l - r * 0.5).max(0.1), cost: l + r }
+            }
+            OpKind::Block { .. } => NodeCost {
+                rows: in_rows(0) * 0.3,
+                cost: in_rows(0),
+            },
+            OpKind::Consolidate { .. } => NodeCost {
+                rows: in_rows(0) * 0.7,
+                cost: in_rows(0) * (in_rows(0).log2().max(1.0)),
+            },
+            OpKind::Sort { .. } => NodeCost {
+                rows: in_rows(0),
+                cost: in_rows(0) * (in_rows(0).log2().max(1.0)),
+            },
+            OpKind::Limit { n: k } => NodeCost {
+                rows: in_rows(0).min(*k as f64),
+                cost: 1.0,
+            },
+            OpKind::SubgraphExec { .. } => NodeCost {
+                // accounted separately by the accelerator model
+                rows: (n / 120.0).max(0.5),
+                cost: 0.0,
+            },
+            OpKind::ExtInput { .. } => NodeCost {
+                rows: (n / 120.0).max(0.5),
+                cost: 0.0,
+            },
+        };
+        per_node.push(nc);
+    }
+    let total_cost = per_node.iter().map(|c| c.cost).sum();
+    CostReport {
+        per_node,
+        total_cost,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(aql: &str) -> Graph {
+        crate::aql::compile(aql).unwrap()
+    }
+
+    #[test]
+    fn extraction_dominates_simple_query() {
+        let g = graph(
+            "create view A as extract regex /[A-Z][a-z]+/ on d.text as m from Document d;
+             create view V as select a.m as m from A a where GetLength(a.m) > 3;
+             output view V;",
+        );
+        let report = estimate(&g, 2048);
+        let extraction: Vec<usize> = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind.is_extraction())
+            .map(|n| n.id)
+            .collect();
+        assert!(report.fraction_of(&extraction) > 0.9);
+    }
+
+    #[test]
+    fn join_cost_scales_with_inputs() {
+        let g = graph(
+            "create view A as extract regex /a/ on d.text as m from Document d;
+             create view B as extract regex /b/ on d.text as m from Document d;
+             create view V as select a.m as am from A a, B b where Follows(a.m, b.m, 0, 9);
+             output view V;",
+        );
+        let small = estimate(&g, 256);
+        let large = estimate(&g, 8192);
+        assert!(large.total_cost > small.total_cost * 10.0);
+    }
+
+    #[test]
+    fn fraction_bounds() {
+        let g = graph(
+            "create view A as extract regex /a/ on d.text as m from Document d;
+             output view A;",
+        );
+        let r = estimate(&g, 1024);
+        let all: Vec<usize> = (0..g.nodes.len()).collect();
+        assert!((r.fraction_of(&all) - 1.0).abs() < 1e-9);
+        assert_eq!(r.fraction_of(&[]), 0.0);
+    }
+
+    #[test]
+    fn subgraph_exec_costs_nothing_in_sw() {
+        use crate::aog::{FieldType, Graph as G, OpKind, Schema};
+        let mut g = G::new();
+        let d = g.add(OpKind::DocScan, vec![]).unwrap();
+        let s = g
+            .add(
+                OpKind::SubgraphExec {
+                    subgraph_id: 0,
+                    output_idx: 0,
+                    schema: Schema::of(&[("m", FieldType::Span)]),
+                },
+                vec![d],
+            )
+            .unwrap();
+        g.add_output("V", s);
+        let r = estimate(&g, 2048);
+        assert_eq!(r.per_node[s].cost, 0.0);
+    }
+}

@@ -1,0 +1,481 @@
+//! Rule-based graph optimizer plus the cost model.
+//!
+//! SystemT pairs its rule language with "cost-based rule optimization that
+//! significantly improves extraction throughput" (paper §1). The compiler
+//! deliberately lowers multi-source selects to cross-join + big-filter; the
+//! optimizer then:
+//!
+//! 1. **dedups extraction operators** — identical regex/dictionary leaves
+//!    are merged so each pattern streams over the document once (this also
+//!    maximizes what a single accelerator pass can serve);
+//! 2. **pushes predicates down** — single-source conjuncts move below the
+//!    join; cross-source conjuncts become the join predicate (cross joins
+//!    disappear);
+//! 3. **prunes dead nodes** — views that are never output cost nothing.
+//!
+//! The cost model ([`estimate`]) is deliberately simple (selectivity
+//! heuristics over an assumed document size); it feeds `explain` output and
+//! the partitioner's tie-breaking, not correctness.
+
+pub mod cost;
+
+pub use cost::{estimate, CostReport, NodeCost};
+
+use crate::aog::{Expr, Graph, Node, NodeId, OpKind};
+
+/// Run all optimization passes.
+pub fn optimize(g: &Graph) -> Graph {
+    let g = dedup_extractions(g);
+    let g = push_predicates(&g);
+    prune_dead(&g)
+}
+
+/// Rebuild a graph keeping only nodes satisfying `keep`, remapping inputs.
+/// Panics if a kept node depends on a dropped one.
+fn rebuild_filtered(g: &Graph, keep: &[bool]) -> Graph {
+    let mut out = Graph::new();
+    let mut remap: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
+    for node in &g.nodes {
+        if !keep[node.id] {
+            continue;
+        }
+        let inputs: Vec<NodeId> = node
+            .inputs
+            .iter()
+            .map(|&i| remap[i].expect("kept node depends on dropped node"))
+            .collect();
+        let id = out
+            .add(node.kind.clone(), inputs)
+            .expect("rebuild preserves validity");
+        if let Some(v) = &node.view {
+            out.name_view(id, v.clone());
+        }
+        remap[node.id] = Some(id);
+    }
+    for (name, target) in &g.outputs {
+        out.add_output(name.clone(), remap[*target].expect("output node dropped"));
+    }
+    out
+}
+
+/// Pass 3: drop nodes not reachable from any output.
+pub fn prune_dead(g: &Graph) -> Graph {
+    let live = g.live_nodes();
+    rebuild_filtered(g, &live)
+}
+
+/// Pass 1: merge identical extraction leaves.
+pub fn dedup_extractions(g: &Graph) -> Graph {
+    use std::collections::HashMap;
+    // identity key for extraction nodes
+    fn key(node: &Node) -> Option<String> {
+        match &node.kind {
+            OpKind::RegexExtract { regex, .. } => Some(format!(
+                "re:{}:{}",
+                regex.pattern.source,
+                // case-insensitivity is folded into the pattern classes at
+                // parse time, so source+input suffices only with the flag:
+                regex.search.num_states // distinguishes folded variants
+            )),
+            OpKind::DictExtract { dict, .. } => {
+                Some(format!("dict:{}:{:?}", dict.name, dict.case))
+            }
+            _ => None,
+        }
+    }
+    let mut seen: HashMap<(NodeId, String), NodeId> = HashMap::new();
+    let mut alias: Vec<NodeId> = (0..g.nodes.len()).collect();
+    for node in &g.nodes {
+        if let Some(k) = key(node) {
+            let input = node.inputs[0];
+            match seen.get(&(input, k.clone())) {
+                Some(&first) => alias[node.id] = first,
+                None => {
+                    seen.insert((input, k), node.id);
+                }
+            }
+        }
+    }
+    // rebuild with inputs redirected through `alias`; duplicate nodes
+    // become dead and are dropped by a final prune.
+    let mut out = Graph::new();
+    let mut remap: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
+    for node in &g.nodes {
+        if alias[node.id] != node.id {
+            remap[node.id] = remap[alias[node.id]];
+            continue;
+        }
+        let inputs: Vec<NodeId> = node
+            .inputs
+            .iter()
+            .map(|&i| remap[alias[i]].expect("topological order"))
+            .collect();
+        let id = out.add(node.kind.clone(), inputs).expect("valid rebuild");
+        if let Some(v) = &node.view {
+            out.name_view(id, v.clone());
+        }
+        remap[node.id] = Some(id);
+    }
+    for (name, target) in &g.outputs {
+        out.add_output(name.clone(), remap[alias[*target]].expect("output"));
+    }
+    out
+}
+
+/// Flatten a conjunction into conjuncts.
+fn conjuncts(e: &Expr, out: &mut Vec<Expr>) {
+    match e {
+        Expr::And(a, b) => {
+            conjuncts(a, out);
+            conjuncts(b, out);
+        }
+        other => out.push(other.clone()),
+    }
+}
+
+/// Rebuild a conjunction (empty → `true`).
+fn conjoin(mut es: Vec<Expr>) -> Expr {
+    match es.len() {
+        0 => Expr::LitBool(true),
+        1 => es.pop().unwrap(),
+        _ => {
+            let mut it = es.into_iter();
+            let first = it.next().unwrap();
+            it.fold(first, |acc, e| Expr::And(Box::new(acc), Box::new(e)))
+        }
+    }
+}
+
+/// Pass 2: predicate pushdown and join-predicate formation.
+///
+/// Rewrites `Select(pred) ∘ Join(true)` trees: conjuncts that reference
+/// only left (resp. right) columns are pushed below the join as selects
+/// (recursively through left-deep cross-join chains); conjuncts spanning
+/// both sides become the join predicate.
+pub fn push_predicates(g: &Graph) -> Graph {
+    let consumers = g.consumers();
+    // joins that will be rewritten at their consuming Select
+    let mut deferred = vec![false; g.nodes.len()];
+    for node in &g.nodes {
+        if let OpKind::Select { .. } = node.kind {
+            let input = node.inputs[0];
+            if is_cross_join(g, input) && consumers[input].len() == 1 {
+                mark_deferred_chain(g, input, &consumers, &mut deferred);
+            }
+        }
+    }
+
+    let mut out = Graph::new();
+    let mut remap: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
+    for node in &g.nodes {
+        if deferred[node.id] {
+            continue; // emitted by the consuming Select
+        }
+        match &node.kind {
+            OpKind::Select { pred }
+                if deferred
+                    .get(node.inputs[0])
+                    .copied()
+                    .unwrap_or(false) =>
+            {
+                let mut cs = Vec::new();
+                conjuncts(pred, &mut cs);
+                let (new_id, residual) =
+                    emit_join_tree(g, node.inputs[0], cs, &mut out, &remap);
+                let final_id = if residual.is_empty() {
+                    new_id
+                } else {
+                    out.add(
+                        OpKind::Select {
+                            pred: conjoin(residual),
+                        },
+                        vec![new_id],
+                    )
+                    .expect("residual select")
+                };
+                if let Some(v) = &node.view {
+                    out.name_view(final_id, v.clone());
+                }
+                remap[node.id] = Some(final_id);
+            }
+            _ => {
+                let inputs: Vec<NodeId> = node
+                    .inputs
+                    .iter()
+                    .map(|&i| remap[i].expect("topological order"))
+                    .collect();
+                let id = out.add(node.kind.clone(), inputs).expect("valid rebuild");
+                if let Some(v) = &node.view {
+                    out.name_view(id, v.clone());
+                }
+                remap[node.id] = Some(id);
+            }
+        }
+    }
+    for (name, target) in &g.outputs {
+        out.add_output(name.clone(), remap[*target].expect("output"));
+    }
+    out
+}
+
+fn is_cross_join(g: &Graph, id: NodeId) -> bool {
+    matches!(&g.nodes[id].kind, OpKind::Join { pred } if *pred == Expr::LitBool(true))
+}
+
+/// Mark a left-deep chain of single-consumer cross joins as deferred.
+fn mark_deferred_chain(
+    g: &Graph,
+    id: NodeId,
+    consumers: &[Vec<NodeId>],
+    deferred: &mut [bool],
+) {
+    if !is_cross_join(g, id) || consumers[id].len() != 1 || deferred[id] {
+        return;
+    }
+    deferred[id] = true;
+    mark_deferred_chain(g, g.nodes[id].inputs[0], consumers, deferred);
+}
+
+/// Emit the rewritten join tree for deferred cross-join `id`, given the
+/// conjunct pool. Returns the new node id and the conjuncts that could not
+/// be attached anywhere below (to be applied as a residual select above).
+fn emit_join_tree(
+    g: &Graph,
+    id: NodeId,
+    conj: Vec<Expr>,
+    out: &mut Graph,
+    remap: &[Option<NodeId>],
+) -> (NodeId, Vec<Expr>) {
+    debug_assert!(is_cross_join(g, id));
+    let node = &g.nodes[id];
+    let (l, r) = (node.inputs[0], node.inputs[1]);
+    let left_arity = g.nodes[l].schema.arity();
+    let total_arity = node.schema.arity();
+
+    // split the pool by column footprint
+    let mut left_only = Vec::new();
+    let mut right_only = Vec::new();
+    let mut spanning = Vec::new();
+    let mut floating = Vec::new(); // no column refs: keep at top
+    for c in conj {
+        let mut cols = Vec::new();
+        c.columns(&mut cols);
+        if cols.is_empty() {
+            floating.push(c);
+        } else if cols.iter().all(|&i| i < left_arity) {
+            left_only.push(c);
+        } else if cols.iter().all(|&i| i >= left_arity && i < total_arity) {
+            right_only.push(c.remap_columns(&|i| i - left_arity));
+        } else {
+            spanning.push(c);
+        }
+    }
+
+    // left subtree: recurse through deferred chains, else plain select
+    let (new_l, mut leftover) = if is_cross_join(g, l) && remap[l].is_none() {
+        emit_join_tree(g, l, left_only, out, remap)
+    } else {
+        let base = remap[l].expect("left input emitted");
+        let id = if left_only.is_empty() {
+            base
+        } else {
+            out.add(
+                OpKind::Select {
+                    pred: conjoin(left_only),
+                },
+                vec![base],
+            )
+            .expect("left select")
+        };
+        (id, Vec::new())
+    };
+
+    // right subtree (always a plain node: compiler builds left-deep chains)
+    let base_r = remap[r].expect("right input emitted");
+    let new_r = if right_only.is_empty() {
+        base_r
+    } else {
+        out.add(
+            OpKind::Select {
+                pred: conjoin(right_only),
+            },
+            vec![base_r],
+        )
+        .expect("right select")
+    };
+
+    // leftover conjuncts from the left recursion re-enter at this level as
+    // spanning-or-left — they reference left columns only, so they can be
+    // applied right here above the join. Cheaper: merge into spanning.
+    spanning.append(&mut leftover);
+    let join_id = out
+        .add(
+            OpKind::Join {
+                pred: conjoin(spanning),
+            },
+            vec![new_l, new_r],
+        )
+        .expect("join emit");
+    (join_id, floating)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::exec::{Executor, Profiler};
+    use crate::text::Document;
+
+    const THREE_WAY: &str = "
+        create view A as extract regex /a+/ on d.text as m from Document d;
+        create view B as extract regex /b+/ on d.text as m from Document d;
+        create view C as extract regex /c+/ on d.text as m from Document d;
+        create view V as
+          select a.m as am, b.m as bm, c.m as cm
+          from A a, B b, C c
+          where Follows(a.m, b.m, 0, 5) and Follows(b.m, c.m, 0, 5)
+                and GetLength(a.m) >= 2;
+        output view V;
+    ";
+
+    fn run(g: &Graph, text: &str) -> Vec<Vec<String>> {
+        let ex = Executor::new(Arc::new(g.clone()), Arc::new(Profiler::disabled()));
+        let doc = Document::new(0, text);
+        let out = ex.run_doc(&doc);
+        let mut rows: Vec<Vec<String>> = out
+            .views
+            .values()
+            .flat_map(|rows| {
+                rows.iter().map(|t| {
+                    t.iter()
+                        .map(|v| format!("{v}"))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    #[test]
+    fn pushdown_forms_join_predicates() {
+        let g = crate::aql::compile(THREE_WAY).unwrap();
+        let opt = optimize(&g);
+        // no cross joins remain
+        for n in &opt.nodes {
+            if let OpKind::Join { pred } = &n.kind {
+                assert_ne!(*pred, Expr::LitBool(true), "cross join survived:\n{}", opt.dump());
+            }
+        }
+        // the single-source conjunct became a Select below the joins
+        let has_pushed_select = opt.nodes.iter().any(|n| {
+            matches!(&n.kind, OpKind::Select { .. })
+                && matches!(
+                    opt.nodes[n.inputs[0]].kind,
+                    OpKind::RegexExtract { .. }
+                )
+        });
+        assert!(has_pushed_select, "{}", opt.dump());
+    }
+
+    #[test]
+    fn optimized_graph_is_equivalent() {
+        let g = crate::aql::compile(THREE_WAY).unwrap();
+        let opt = optimize(&g);
+        for text in [
+            "aa b c",
+            "aa bb cc aa b c",
+            "c b aa",
+            "",
+            "aaa   bbb   ccc",
+            "aabbcc aab bcc",
+        ] {
+            assert_eq!(run(&g, text), run(&opt, text), "text {text:?}");
+        }
+    }
+
+    #[test]
+    fn dedup_merges_identical_regexes() {
+        let g = crate::aql::compile(
+            "create view A as extract regex /x+/ on d.text as m from Document d;
+             create view B as extract regex /x+/ on d.text as n from Document d;
+             create view U as
+               (select a.m as s from A a) union all (select b.n as s from B b);
+             output view U;",
+        )
+        .unwrap();
+        assert_eq!(g.op_counts()["RegularExpression"], 2);
+        let opt = optimize(&g);
+        assert_eq!(opt.op_counts()["RegularExpression"], 1, "{}", opt.dump());
+        // still correct
+        assert_eq!(run(&opt, "xx yy xx").len(), 4); // 2 matches × 2 branches
+    }
+
+    #[test]
+    fn dedup_keeps_different_patterns() {
+        let g = crate::aql::compile(
+            "create view A as extract regex /x+/ on d.text as m from Document d;
+             create view B as extract regex /y+/ on d.text as m from Document d;
+             output view A; output view B;",
+        )
+        .unwrap();
+        let opt = optimize(&g);
+        assert_eq!(opt.op_counts()["RegularExpression"], 2);
+    }
+
+    #[test]
+    fn dedup_merges_same_dictionary() {
+        let g = crate::aql::compile(
+            "create dictionary D as ('ibm');
+             create view A as extract dictionary 'D' on d.text as m from Document d;
+             create view B as extract dictionary 'D' on d.text as n from Document d;
+             output view A; output view B;",
+        )
+        .unwrap();
+        assert_eq!(g.op_counts()["Dictionary"], 2);
+        let opt = optimize(&g);
+        assert_eq!(opt.op_counts()["Dictionary"], 1);
+    }
+
+    #[test]
+    fn dead_views_pruned() {
+        let g = crate::aql::compile(
+            "create view Dead as extract regex /zzz/ on d.text as m from Document d;
+             create view Live as extract regex /y/ on d.text as m from Document d;
+             output view Live;",
+        )
+        .unwrap();
+        let opt = optimize(&g);
+        assert_eq!(opt.op_counts().get("RegularExpression"), Some(&1));
+        assert!(opt.nodes.iter().all(|n| n.view.as_deref() != Some("Dead")));
+    }
+
+    #[test]
+    fn optimize_preserves_simple_selects() {
+        // single-source select: no joins, pushdown is a no-op
+        let g = crate::aql::compile(
+            "create view A as extract regex /[a-z]+/ on d.text as m from Document d;
+             create view V as select a.m as m from A a where GetLength(a.m) > 2;
+             output view V;",
+        )
+        .unwrap();
+        let opt = optimize(&g);
+        assert_eq!(run(&g, "ab abc abcd"), run(&opt, "ab abc abcd"));
+    }
+
+    #[test]
+    fn floating_conjuncts_survive() {
+        // predicate with no column refs must not be lost
+        let g = crate::aql::compile(
+            "create view A as extract regex /a/ on d.text as m from Document d;
+             create view B as extract regex /b/ on d.text as m from Document d;
+             create view V as select a.m as am from A a, B b
+               where Follows(a.m, b.m, 0, 9) and 1 = 2;
+             output view V;",
+        )
+        .unwrap();
+        let opt = optimize(&g);
+        assert!(run(&opt, "a b").is_empty());
+    }
+}

@@ -1,0 +1,599 @@
+//! Operator-graph partitioning: supergraph + hardware subgraphs (Fig 1).
+//!
+//! The paper identifies offloadable regions as **maximal convex subgraphs**
+//! (their ref [22]) over the set of hardware-supported operators: a subgraph
+//! is *convex* when no path between two of its members passes through a
+//! non-member, so it can execute atomically on the accelerator without a
+//! software round-trip.
+//!
+//! Three offload scenarios are modeled, matching the paper's Fig 7 series:
+//! * [`PartitionMode::ExtractOnly`] — only the extraction operators move
+//!   (one accelerator pass, all patterns as parallel machines);
+//! * [`PartitionMode::SingleSubgraph`] — one maximal convex subgraph
+//!   containing the extraction operators plus as many supported relational
+//!   operators as possible;
+//! * [`PartitionMode::MultiSubgraph`] — every maximal convex subgraph of
+//!   supported operators (additional subgraphs may consume software tuples
+//!   through `ExtInput` slots).
+
+pub mod convex;
+
+pub use convex::{is_convex, maximal_convex_components};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::aog::{Graph, NodeId, OpKind, Schema, Tuple};
+use crate::exec::{Executor, Profiler, SubgraphRunner};
+use crate::text::{Document, TokenIndex};
+
+/// Offload scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionMode {
+    /// Nothing offloaded (pure software baseline).
+    None,
+    /// Extraction operators only (paper Fig 7 series 2).
+    ExtractOnly,
+    /// One maximal convex subgraph (series 3).
+    SingleSubgraph,
+    /// All maximal convex subgraphs (series 4).
+    MultiSubgraph,
+}
+
+impl PartitionMode {
+    /// Parse a CLI-style name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" | "sw" => Some(Self::None),
+            "extract" | "extract-only" => Some(Self::ExtractOnly),
+            "single" | "single-subgraph" => Some(Self::SingleSubgraph),
+            "multi" | "multi-subgraph" => Some(Self::MultiSubgraph),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::ExtractOnly => "extract-only",
+            Self::SingleSubgraph => "single-subgraph",
+            Self::MultiSubgraph => "multi-subgraph",
+        }
+    }
+}
+
+/// One offloaded subgraph, in standalone executable form.
+#[derive(Debug, Clone)]
+pub struct SubgraphSpec {
+    pub id: usize,
+    /// Standalone body: `DocScan` + `ExtInput` leaves + the member
+    /// operators; outputs registered as `out0`, `out1`, ...
+    pub body: Graph,
+    /// Body node ids of the subgraph outputs, in `output_idx` order.
+    pub outputs: Vec<NodeId>,
+    /// Number of `ExtInput` slots (software tuple streams it consumes).
+    pub ext_inputs: usize,
+    /// Member node ids in the ORIGINAL graph (for profile attribution).
+    pub orig_nodes: Vec<NodeId>,
+}
+
+/// The partition result.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub mode: PartitionMode,
+    /// The software supergraph (with `SubgraphExec` placeholders).
+    pub supergraph: Graph,
+    pub subgraphs: Vec<SubgraphSpec>,
+}
+
+/// Is this operator implementable by the streaming accelerator?
+/// (paper §3: extraction operators, and relational operators whose
+/// predicates avoid string materialization; blocking operators — sort,
+/// limit — stay in software.)
+pub fn hw_supported(kind: &OpKind) -> bool {
+    match kind {
+        OpKind::RegexExtract { regex, .. } => {
+            // must fit the largest artifact state budget
+            regex.search.num_states as usize <= crate::hwcompiler::MAX_HW_STATES
+        }
+        OpKind::DictExtract { matcher, .. } => {
+            matcher.num_states as usize <= crate::hwcompiler::MAX_HW_STATES
+        }
+        OpKind::Select { pred } => pred.hw_supported(),
+        OpKind::Project { cols } => cols.iter().all(|(_, e)| e.hw_supported()),
+        OpKind::Join { pred } => pred.hw_supported(),
+        OpKind::Union
+        | OpKind::Consolidate { .. }
+        | OpKind::Difference
+        | OpKind::Block { .. } => true,
+        OpKind::DocScan
+        | OpKind::Sort { .. }
+        | OpKind::Limit { .. }
+        | OpKind::SubgraphExec { .. }
+        | OpKind::ExtInput { .. } => false,
+    }
+}
+
+/// Partition `g` under `mode`.
+pub fn partition(g: &Graph, mode: PartitionMode) -> PartitionPlan {
+    let supported: Vec<bool> = g.nodes.iter().map(|n| hw_supported(&n.kind)).collect();
+    let groups: Vec<Vec<NodeId>> = match mode {
+        PartitionMode::None => Vec::new(),
+        PartitionMode::ExtractOnly => {
+            // all extraction ops as ONE accelerator pass (parallel machines)
+            let ex: Vec<NodeId> = g
+                .nodes
+                .iter()
+                .filter(|n| n.kind.is_extraction() && supported[n.id])
+                .map(|n| n.id)
+                .collect();
+            if ex.is_empty() {
+                Vec::new()
+            } else {
+                vec![ex]
+            }
+        }
+        PartitionMode::SingleSubgraph => {
+            let comps = maximal_convex_components(g, &supported);
+            // pick the component covering the largest estimated cost; the
+            // paper's choice is "all extraction operators plus as many
+            // supported operators as possible", which is the extraction-
+            // heavy component — cost fraction is the faithful proxy.
+            let cost = crate::optimizer::estimate(g, 2048);
+            comps
+                .into_iter()
+                .max_by(|a, b| {
+                    cost.fraction_of(a)
+                        .partial_cmp(&cost.fraction_of(b))
+                        .unwrap()
+                })
+                .map(|c| vec![c])
+                .unwrap_or_default()
+        }
+        PartitionMode::MultiSubgraph => maximal_convex_components(g, &supported),
+    };
+
+    build_plan(g, mode, groups)
+}
+
+/// Rewrite: extract each group into a [`SubgraphSpec`] and replace its
+/// members in the supergraph with `SubgraphExec` placeholders.
+fn build_plan(g: &Graph, mode: PartitionMode, groups: Vec<Vec<NodeId>>) -> PartitionPlan {
+    let consumers = g.consumers();
+    let mut member_of: Vec<Option<usize>> = vec![None; g.nodes.len()];
+    for (gi, group) in groups.iter().enumerate() {
+        for &n in group {
+            member_of[n] = Some(gi);
+        }
+    }
+    let output_names: HashMap<NodeId, bool> = g
+        .outputs
+        .iter()
+        .map(|(_, n)| (*n, true))
+        .collect();
+
+    // Determine each group's external outputs (consumed outside, or query
+    // outputs) and external tuple inputs (non-DocScan inputs from outside).
+    let mut specs: Vec<SubgraphSpec> = Vec::new();
+    // per group: (original ids of outputs, original ids feeding ext slots)
+    let mut side: Vec<(Vec<NodeId>, Vec<NodeId>)> = Vec::new();
+    for (gi, group) in groups.iter().enumerate() {
+        let mut body = Graph::new();
+        let mut local: HashMap<NodeId, NodeId> = HashMap::new();
+        let mut ext_slots: Vec<NodeId> = Vec::new(); // original ids feeding slots
+        let doc_local = body.add(OpKind::DocScan, vec![]).expect("docscan");
+        // group is in topological order (components preserve node order)
+        for &n in group {
+            let node = &g.nodes[n];
+            let mut inputs_local = Vec::new();
+            for &i in &node.inputs {
+                let li = if let Some(&l) = local.get(&i) {
+                    l
+                } else if matches!(g.nodes[i].kind, OpKind::DocScan) {
+                    doc_local
+                } else {
+                    // external tuple stream → ExtInput slot
+                    let slot = ext_slots.iter().position(|&e| e == i).unwrap_or_else(|| {
+                        ext_slots.push(i);
+                        ext_slots.len() - 1
+                    });
+                    let schema = g.nodes[i].schema.clone();
+                    // reuse the ExtInput node if the slot already exists
+                    match body.nodes.iter().find(|bn| {
+                        matches!(&bn.kind, OpKind::ExtInput { slot: s, .. } if *s == slot)
+                    }) {
+                        Some(bn) => bn.id,
+                        None => body
+                            .add(OpKind::ExtInput { slot, schema }, vec![])
+                            .expect("ext input"),
+                    }
+                };
+                inputs_local.push(li);
+            }
+            let l = body
+                .add(node.kind.clone(), inputs_local)
+                .expect("subgraph body build");
+            local.insert(n, l);
+        }
+        // outputs: members consumed outside the group or output views
+        let mut outputs_orig: Vec<NodeId> = group
+            .iter()
+            .copied()
+            .filter(|&n| {
+                output_names.contains_key(&n)
+                    || consumers[n]
+                        .iter()
+                        .any(|&c| member_of[c] != Some(gi))
+            })
+            .collect();
+        outputs_orig.sort_unstable();
+        let outputs: Vec<NodeId> = outputs_orig.iter().map(|n| local[n]).collect();
+        for (k, &l) in outputs.iter().enumerate() {
+            body.add_output(format!("out{k}"), l);
+        }
+        specs.push(SubgraphSpec {
+            id: gi,
+            body,
+            outputs,
+            ext_inputs: ext_slots.len(),
+            orig_nodes: group.clone(),
+        });
+        side.push((outputs_orig, ext_slots));
+    }
+
+    // Rebuild the supergraph: members are replaced by SubgraphExec nodes.
+    //
+    // A group executes atomically, so the SubgraphExec nodes of group `gi`
+    // depend on ALL of the group's ext-input sources — which may sit
+    // *after* some member in the original topological order. Emission is
+    // therefore dependency-driven (Kahn over "units": one unit per SW node
+    // and one per group). Group-level dependencies are acyclic because a
+    // software path from one member to another would violate convexity.
+    let mut sup = Graph::new();
+    let mut remap: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
+    let mut doc_sup: Option<NodeId> = None;
+    let mut group_emitted = vec![false; groups.len()];
+    let total_units = g.nodes.len();
+    let mut emitted_nodes = vec![false; total_units];
+
+    let mut progress = true;
+    while progress {
+        progress = false;
+        for node in &g.nodes {
+            if emitted_nodes[node.id] {
+                continue;
+            }
+            match member_of[node.id] {
+                None => {
+                    // SW node: ready when every input is remapped
+                    if !node.inputs.iter().all(|&i| remap[i].is_some()) {
+                        continue;
+                    }
+                    if matches!(node.kind, OpKind::DocScan) {
+                        let id = sup.add(OpKind::DocScan, vec![]).expect("docscan");
+                        doc_sup = Some(id);
+                        remap[node.id] = Some(id);
+                        emitted_nodes[node.id] = true;
+                        progress = true;
+                        continue;
+                    }
+                    let inputs: Vec<NodeId> =
+                        node.inputs.iter().map(|&i| remap[i].unwrap()).collect();
+                    let id = sup
+                        .add(node.kind.clone(), inputs)
+                        .expect("supergraph rebuild");
+                    if let Some(v) = &node.view {
+                        sup.name_view(id, v.clone());
+                    }
+                    remap[node.id] = Some(id);
+                    emitted_nodes[node.id] = true;
+                    progress = true;
+                }
+                Some(gi) => {
+                    if group_emitted[gi] {
+                        emitted_nodes[node.id] = true;
+                        progress = true;
+                        continue;
+                    }
+                    // group ready when all ext sources are remapped
+                    let (outputs_orig, ext_slots) = &side[gi];
+                    if !ext_slots.iter().all(|&s| remap[s].is_some()) {
+                        continue;
+                    }
+                    let doc = doc_sup
+                        .get_or_insert_with(|| {
+                            sup.add(OpKind::DocScan, vec![]).expect("docscan")
+                        })
+                        .to_owned();
+                    for (output_idx, &out_orig) in outputs_orig.iter().enumerate() {
+                        let mut inputs = vec![doc];
+                        for &src in ext_slots {
+                            inputs.push(remap[src].unwrap());
+                        }
+                        let out_node = &g.nodes[out_orig];
+                        let id = sup
+                            .add(
+                                OpKind::SubgraphExec {
+                                    subgraph_id: gi,
+                                    output_idx,
+                                    schema: out_node.schema.clone(),
+                                },
+                                inputs,
+                            )
+                            .expect("subgraph exec node");
+                        if let Some(v) = &out_node.view {
+                            sup.name_view(id, v.clone());
+                        }
+                        remap[out_orig] = Some(id);
+                    }
+                    group_emitted[gi] = true;
+                    emitted_nodes[node.id] = true;
+                    progress = true;
+                }
+            }
+        }
+    }
+    debug_assert!(
+        emitted_nodes.iter().all(|&e| e),
+        "partition produced a cyclic supergraph (convexity bug)"
+    );
+    for (name, target) in &g.outputs {
+        sup.add_output(
+            name.clone(),
+            remap[*target].expect("output view must be an external output"),
+        );
+    }
+
+    PartitionPlan {
+        mode,
+        supergraph: sup,
+        subgraphs: specs,
+    }
+}
+
+/// Software reference implementation of [`SubgraphRunner`]: executes the
+/// subgraph bodies in software. Used to validate partition correctness
+/// (partitioned + this runner ≡ original graph) and as the fallback when no
+/// accelerator is configured.
+pub struct SoftwareSubgraphRunner {
+    executors: Vec<Executor>,
+}
+
+impl SoftwareSubgraphRunner {
+    /// Build from a plan.
+    pub fn new(plan: &PartitionPlan) -> SoftwareSubgraphRunner {
+        let executors = plan
+            .subgraphs
+            .iter()
+            .map(|s| {
+                Executor::new(Arc::new(s.body.clone()), Arc::new(Profiler::disabled()))
+            })
+            .collect();
+        SoftwareSubgraphRunner { executors }
+    }
+}
+
+impl SubgraphRunner for SoftwareSubgraphRunner {
+    fn run(
+        &self,
+        id: usize,
+        output_idx: usize,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&[Tuple]],
+    ) -> Vec<Tuple> {
+        let out = self.executors[id].run_doc_with(doc, tokens, ext, &HashMap::new());
+        out.views
+            .get(&format!("out{output_idx}"))
+            .cloned()
+            .unwrap_or_default()
+    }
+}
+
+/// Convenience: make a schema available for tests.
+pub fn subgraph_output_schema(spec: &SubgraphSpec, idx: usize) -> &Schema {
+    &spec.body.nodes[spec.outputs[idx]].schema
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PERSON_ORG: &str = r#"
+        create dictionary Orgs as ('IBM', 'IBM Research', 'Columbia University');
+        create view Org as
+          extract dictionary 'Orgs' on d.text as match from Document d;
+        create view Person as
+          extract regex /[A-Z][a-z]+ [A-Z][a-z]+/ on d.text as name from Document d;
+        create view PersonOrg as
+          select p.name as person, o.match as org,
+                 CombineSpans(p.name, o.match) as ctx
+          from Person p, Org o
+          where FollowsTok(p.name, o.match, 0, 4)
+          consolidate on ctx using 'ContainedWithin';
+        output view PersonOrg;
+    "#;
+
+    fn graph() -> Graph {
+        crate::optimizer::optimize(&crate::aql::compile(PERSON_ORG).unwrap())
+    }
+
+    fn run_plan(plan: &PartitionPlan, text: &str) -> Vec<Vec<String>> {
+        let runner = Arc::new(SoftwareSubgraphRunner::new(plan));
+        let ex = Executor::new(
+            Arc::new(plan.supergraph.clone()),
+            Arc::new(Profiler::disabled()),
+        )
+        .with_subgraph_runner(runner);
+        let out = ex.run_doc(&Document::new(0, text));
+        let mut rows: Vec<Vec<String>> = out
+            .views
+            .values()
+            .flat_map(|rows| rows.iter().map(|t| t.iter().map(|v| v.to_string()).collect()))
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    fn run_sw(g: &Graph, text: &str) -> Vec<Vec<String>> {
+        let ex = Executor::new(Arc::new(g.clone()), Arc::new(Profiler::disabled()));
+        let out = ex.run_doc(&Document::new(0, text));
+        let mut rows: Vec<Vec<String>> = out
+            .views
+            .values()
+            .flat_map(|rows| rows.iter().map(|t| t.iter().map(|v| v.to_string()).collect()))
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    const SAMPLES: &[&str] = &[
+        "Laura Chiticariu works at IBM Research in Almaden.",
+        "Fred Reiss and Huaiyu Zhu are at IBM Research today.",
+        "nothing here",
+        "",
+        "Eva Sitaridi is at Columbia University. Peter Hofstee visits IBM.",
+    ];
+
+    #[test]
+    fn extract_only_offloads_extraction() {
+        let g = graph();
+        let plan = partition(&g, PartitionMode::ExtractOnly);
+        assert_eq!(plan.subgraphs.len(), 1);
+        let sg = &plan.subgraphs[0];
+        assert_eq!(sg.orig_nodes.len(), 2); // regex + dict
+        assert_eq!(sg.ext_inputs, 0);
+        assert_eq!(sg.outputs.len(), 2); // both consumed by the join
+        // supergraph has no extraction operators left
+        assert_eq!(plan.supergraph.op_counts().get("RegularExpression"), None);
+        assert_eq!(plan.supergraph.op_counts().get("Dictionary"), None);
+        assert_eq!(plan.supergraph.op_counts()["SubgraphExec"], 2);
+    }
+
+    #[test]
+    fn extract_only_is_equivalent() {
+        let g = graph();
+        let plan = partition(&g, PartitionMode::ExtractOnly);
+        for t in SAMPLES {
+            assert_eq!(run_plan(&plan, t), run_sw(&g, t), "text {t:?}");
+        }
+    }
+
+    #[test]
+    fn single_subgraph_takes_relational_ops_too() {
+        let g = graph();
+        let plan = partition(&g, PartitionMode::SingleSubgraph);
+        assert_eq!(plan.subgraphs.len(), 1);
+        let sg = &plan.subgraphs[0];
+        // regex, dict, join, select(merged into join by optimizer),
+        // project, consolidate are all supported and convex here
+        assert!(sg.orig_nodes.len() >= 4, "{:?}", sg.orig_nodes);
+        // whole query offloaded → single output, no relational ops in sup
+        assert_eq!(plan.supergraph.op_counts().get("Join"), None);
+    }
+
+    #[test]
+    fn single_subgraph_is_equivalent() {
+        let g = graph();
+        let plan = partition(&g, PartitionMode::SingleSubgraph);
+        for t in SAMPLES {
+            assert_eq!(run_plan(&plan, t), run_sw(&g, t), "text {t:?}");
+        }
+    }
+
+    #[test]
+    fn multi_subgraph_is_equivalent() {
+        let g = graph();
+        let plan = partition(&g, PartitionMode::MultiSubgraph);
+        for t in SAMPLES {
+            assert_eq!(run_plan(&plan, t), run_sw(&g, t), "text {t:?}");
+        }
+    }
+
+    #[test]
+    fn none_mode_is_identity() {
+        let g = graph();
+        let plan = partition(&g, PartitionMode::None);
+        assert!(plan.subgraphs.is_empty());
+        for t in SAMPLES {
+            assert_eq!(run_plan(&plan, t), run_sw(&g, t));
+        }
+    }
+
+    #[test]
+    fn sort_stays_in_software() {
+        let g = crate::optimizer::optimize(
+            &crate::aql::compile(
+                "create view A as extract regex /[a-z]+/ on d.text as m from Document d;
+                 create view V as select a.m as m from A a order by m limit 3;
+                 output view V;",
+            )
+            .unwrap(),
+        );
+        let plan = partition(&g, PartitionMode::MultiSubgraph);
+        assert!(plan.supergraph.op_counts()["Sort"] == 1);
+        assert!(plan.supergraph.op_counts()["Limit"] == 1);
+        for t in SAMPLES {
+            assert_eq!(run_plan(&plan, t), run_sw(&g, t));
+        }
+    }
+
+    #[test]
+    fn unsupported_pred_splits_subgraph() {
+        // GetText predicate is not hw-supported: the select must stay in
+        // software while extraction still offloads.
+        let g = crate::optimizer::optimize(
+            &crate::aql::compile(
+                "create view A as extract regex /[a-z]+/ on d.text as m from Document d;
+                 create view V as select a.m as m from A a
+                   where GetText(a.m) = 'hello';
+                 output view V;",
+            )
+            .unwrap(),
+        );
+        let plan = partition(&g, PartitionMode::MultiSubgraph);
+        assert_eq!(plan.supergraph.op_counts()["Select"], 1);
+        for t in ["hello world hello", "abc"] {
+            assert_eq!(run_plan(&plan, t), run_sw(&g, t));
+        }
+    }
+
+    #[test]
+    fn ext_input_flows_into_downstream_subgraph() {
+        // sup1 → unsupported (GetText select) → sup2 (consolidate):
+        // multi-subgraph mode must create a second subgraph consuming the
+        // software stream via ExtInput.
+        let g = crate::optimizer::optimize(
+            &crate::aql::compile(
+                "create view A as extract regex /[a-z]+/ on d.text as m from Document d;
+                 create view F as select a.m as m from A a where GetText(a.m) != 'skip';
+                 create view V as select f.m as m from F f consolidate on m using 'ContainedWithin';
+                 output view V;",
+            )
+            .unwrap(),
+        );
+        let plan = partition(&g, PartitionMode::MultiSubgraph);
+        assert!(
+            plan.subgraphs.iter().any(|s| s.ext_inputs > 0),
+            "expected a tuple-fed subgraph: {:?}",
+            plan.subgraphs.iter().map(|s| s.ext_inputs).collect::<Vec<_>>()
+        );
+        for t in ["abc skip def", "skip", ""] {
+            assert_eq!(run_plan(&plan, t), run_sw(&g, t), "text {t:?}");
+        }
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [
+            PartitionMode::None,
+            PartitionMode::ExtractOnly,
+            PartitionMode::SingleSubgraph,
+            PartitionMode::MultiSubgraph,
+        ] {
+            assert_eq!(PartitionMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PartitionMode::parse("bogus"), None);
+    }
+}

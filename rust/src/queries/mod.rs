@@ -1,0 +1,388 @@
+//! The five built-in evaluation queries T1–T5.
+//!
+//! The paper evaluates five proprietary customer queries; it reports only
+//! their per-operator time profiles (Fig 4): T1–T4 are dominated by
+//! extraction operators (up to 82 % regex+dictionary), T5 spends more than
+//! 80 % in relational operators. These queries are engineered to land in
+//! the same profile bands on the synthetic news corpus — EXPERIMENTS.md E1
+//! verifies the achieved distributions.
+//!
+//! Dictionaries are generated from [`crate::corpus::pools`], the same
+//! pools the corpus generator plants, so selectivities are realistic.
+
+use crate::corpus::pools;
+
+/// A named built-in query.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub name: &'static str,
+    pub title: &'static str,
+    /// What the paper's profile says this query should look like.
+    pub profile_hint: &'static str,
+    pub aql: String,
+}
+
+fn dict_entries(pool: &[&str]) -> String {
+    pool.iter()
+        .map(|e| format!("'{e}'"))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+fn t1() -> Query {
+    let aql = format!(
+        r#"
+-- T1: named-entity extraction (persons, organizations, locations, dates)
+create dictionary OrgDict as ({orgs});
+create dictionary LocDict as ({locs});
+create dictionary MonthDict as ({months});
+
+create view Person as
+  extract regex /[A-Z][a-z]+ ([A-Z]\. )?[A-Z][a-z]+([\-'][A-Z][a-z]+)?/
+  on d.text as name from Document d;
+create view Acronym as
+  extract regex /[A-Z][A-Z0-9]{{1,4}}/ on d.text as sym from Document d;
+create view Org as
+  extract dictionary 'OrgDict' on d.text as match from Document d;
+create view Loc as
+  extract dictionary 'LocDict' on d.text as match from Document d;
+create view Month as
+  extract dictionary 'MonthDict' on d.text as m from Document d;
+create view DateM as
+  extract regex /\d{{4}}-\d{{2}}-\d{{2}}|\d{{1,2}}\/\d{{1,2}}\/\d{{2,4}}/
+  on d.text as m from Document d;
+create view Url as
+  extract regex /http:\/\/[a-z0-9\.\/\-]+/ on d.text as u from Document d;
+
+create view PersonOrg as
+  select p.name as person, o.match as org, CombineSpans(p.name, o.match) as ctx
+  from Person p, Org o
+  where FollowsTok(p.name, o.match, 0, 6)
+  consolidate on ctx using 'ContainedWithin';
+
+create view AcroClean as
+  select a.sym as sym from Acronym a
+  where GetText(a.sym) != 'AAAAA';
+
+create view Entities as
+  (select p.name as span from Person p)
+  union all
+  (select o.match as span from Org o)
+  union all
+  (select l.match as span from Loc l)
+  union all
+  (select a.sym as span from AcroClean a)
+  union all
+  (select m.m as span from Month m)
+  union all
+  (select u.u as span from Url u)
+  union all
+  (select dd.m as span from DateM dd);
+
+create view EntitiesClean as
+  select e.span as span from Entities e
+  consolidate on span using 'ContainedWithin';
+
+output view PersonOrg;
+output view EntitiesClean;
+"#,
+        orgs = dict_entries(pools::ORGS),
+        locs = dict_entries(pools::LOCATIONS),
+        months = dict_entries(pools::MONTHS),
+    );
+    Query {
+        name: "t1",
+        title: "Named entities",
+        profile_hint: "extraction-dominated (regex + dictionaries)",
+        aql,
+    }
+}
+
+fn t2() -> Query {
+    let aql = r#"
+-- T2: contact information (phones, emails, URLs) near person mentions
+create view Person as
+  extract regex /[A-Z][a-z]+ [A-Z][a-z]+/ on d.text as name from Document d;
+create view Phone as
+  extract regex /(\(\d{3}\) )?\d{3}-\d{4}/ on d.text as num from Document d;
+create view Email as
+  extract regex /[a-z0-9_]+@[a-z0-9]+\.[a-z]{2,4}/ on d.text as addr from Document d;
+create view Url as
+  extract regex /http:\/\/[a-z0-9\.\/\-]+/ on d.text as url from Document d;
+
+create view PersonPhone as
+  select p.name as person, ph.num as phone, CombineSpans(p.name, ph.num) as ctx
+  from Person p, Phone ph
+  where FollowsTok(p.name, ph.num, 0, 8)
+  consolidate on ctx using 'ContainedWithin';
+
+create view Contacts as
+  (select ph.num as span from Phone ph)
+  union all
+  (select e.addr as span from Email e)
+  union all
+  (select u.url as span from Url u);
+
+create view PersonPhoneText as
+  select GetText(pp.person) as who, GetText(pp.phone) as num
+  from PersonPhone pp;
+
+output view PersonPhone;
+output view PersonPhoneText;
+output view Contacts;
+"#
+    .to_string();
+    Query {
+        name: "t2",
+        title: "Contact information",
+        profile_hint: "extraction-dominated (regex-heavy)",
+        aql,
+    }
+}
+
+fn t3() -> Query {
+    let aql = format!(
+        r#"
+-- T3: brand sentiment (dictionary-heavy)
+create dictionary OrgDict as ({orgs});
+create dictionary SentimentDict as ({sent});
+create dictionary TopicDict as ({nouns});
+
+create view Brand as
+  extract dictionary 'OrgDict' on d.text as match from Document d;
+create view Sentiment as
+  extract dictionary 'SentimentDict' on d.text as word from Document d;
+create view Topic as
+  extract dictionary 'TopicDict' on d.text as topic from Document d;
+
+create view BrandSentiment as
+  select b.match as brand, s.word as sentiment,
+         CombineSpans(b.match, s.word) as ctx
+  from Brand b, Sentiment s
+  where Follows(b.match, s.word, 0, 60)
+  consolidate on ctx using 'ContainedWithin';
+
+create view BrandTopic as
+  select b.match as brand, t.topic as topic
+  from Brand b, Topic t
+  where FollowsTok(b.match, t.topic, 0, 10);
+
+output view BrandSentiment;
+output view BrandTopic;
+"#,
+        orgs = dict_entries(pools::ORGS),
+        sent = dict_entries(pools::SENTIMENT),
+        nouns = dict_entries(pools::NOUNS),
+    );
+    Query {
+        name: "t3",
+        title: "Brand sentiment",
+        profile_hint: "extraction-dominated (dictionary-heavy)",
+        aql,
+    }
+}
+
+fn t4() -> Query {
+    let aql = format!(
+        r#"
+-- T4: financial events (amounts, tickers, dates near organizations)
+create dictionary OrgDict as ({orgs});
+
+create view Money as
+  extract regex /\$\d+(\.\d+)? million/ on d.text as amount from Document d;
+create view Ticker as
+  extract regex /\([A-Z]{{2,5}}\)/ on d.text as sym from Document d;
+create view DateM as
+  extract regex /\d{{4}}-\d{{2}}-\d{{2}}/ on d.text as m from Document d;
+create view Org as
+  extract dictionary 'OrgDict' on d.text as match from Document d;
+
+create view Deal as
+  select o.match as org, m.amount as amount, CombineSpans(o.match, m.amount) as ctx
+  from Org o, Money m
+  where FollowsTok(o.match, m.amount, 0, 6)
+  consolidate on ctx using 'ContainedWithin';
+
+create view DatedDeal as
+  select dl.org as org, dl.amount as amount, dt.m as on_date
+  from Deal dl, DateM dt
+  where Follows(dl.amount, dt.m, 0, 40);
+
+output view Deal;
+output view DatedDeal;
+"#,
+        orgs = dict_entries(pools::ORGS),
+    );
+    Query {
+        name: "t4",
+        title: "Financial events",
+        profile_hint: "extraction-dominated (mixed regex + dictionary)",
+        aql,
+    }
+}
+
+fn t5() -> Query {
+    let aql = format!(
+        r#"
+-- T5: co-occurrence analytics — deliberately join-heavy: one cheap,
+-- high-yield extractor feeding multi-way span joins (the paper's T5
+-- spends >80% of its time in relational operators)
+create dictionary OrgDict as ({orgs});
+
+create view Cap as
+  extract regex /[A-Z][a-z]+/ on d.text as w from Document d;
+create view Org as
+  extract dictionary 'OrgDict' on d.text as match from Document d;
+
+create view CapPair as
+  select a.w as w1, b.w as w2, CombineSpans(a.w, b.w) as pair
+  from Cap a, Cap b
+  where Follows(a.w, b.w, 0, 10);
+
+create view PairNearOrg as
+  select p.pair as pair, o.match as org, CombineSpans(p.pair, o.match) as ctx
+  from CapPair p, Org o
+  where Follows(p.pair, o.match, 0, 50)
+  consolidate on ctx using 'ContainedWithin';
+
+-- overlap analysis: deliberately NOT a band-joinable predicate, so it
+-- exercises the general nested-loop join exactly like the paper's
+-- relational-heavy analytics
+create view Conflicts as
+  select x.ctx as a, y.ctx as b
+  from PairNearOrg x, PairNearOrg y
+  where Overlaps(x.ctx, y.ctx) and GetText(x.org) = GetText(y.org)
+        and GetBegin(x.ctx) < GetBegin(y.ctx);
+
+create view Cooc as
+  select x.ctx as ctx, GetLength(x.ctx) as len
+  from PairNearOrg x
+  where GetLength(x.ctx) > 12;
+
+output view Cooc;
+output view Conflicts;
+"#,
+        orgs = dict_entries(pools::ORGS),
+    );
+    Query {
+        name: "t5",
+        title: "Co-occurrence analytics",
+        profile_hint: "relational-dominated (>80% joins/selects)",
+        aql,
+    }
+}
+
+/// All built-in queries in paper order.
+pub fn all() -> Vec<Query> {
+    vec![t1(), t2(), t3(), t4(), t5()]
+}
+
+/// Look up a built-in query by name (`t1`..`t5`).
+pub fn builtin(name: &str) -> Option<Query> {
+    all().into_iter().find(|q| q.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::{partition, PartitionMode};
+
+    #[test]
+    fn all_queries_compile_and_optimize() {
+        for q in all() {
+            let g = crate::aql::compile(&q.aql)
+                .unwrap_or_else(|e| panic!("{} failed to compile: {e}", q.name));
+            let opt = crate::optimizer::optimize(&g);
+            assert!(!opt.outputs.is_empty(), "{}", q.name);
+        }
+    }
+
+    #[test]
+    fn all_queries_partition_and_hw_compile() {
+        for q in all() {
+            let g = crate::optimizer::optimize(&crate::aql::compile(&q.aql).unwrap());
+            for mode in [
+                PartitionMode::ExtractOnly,
+                PartitionMode::SingleSubgraph,
+                PartitionMode::MultiSubgraph,
+            ] {
+                let plan = partition(&g, mode);
+                assert!(
+                    !plan.subgraphs.is_empty(),
+                    "{} produced no subgraphs under {mode:?}",
+                    q.name
+                );
+                for s in &plan.subgraphs {
+                    crate::hwcompiler::compile_subgraph(s).unwrap_or_else(|e| {
+                        panic!("{} subgraph hw-compile failed ({mode:?}): {e}", q.name)
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn queries_produce_annotations_on_news() {
+        use crate::exec::{Executor, Profiler};
+        use std::sync::Arc;
+        let corpus = crate::corpus::CorpusSpec::news(6, 2048).generate();
+        for q in all() {
+            let g = crate::optimizer::optimize(&crate::aql::compile(&q.aql).unwrap());
+            let prof = Arc::new(Profiler::for_graph(&g));
+            let ex = Executor::new(Arc::new(g), prof);
+            let total: usize = corpus
+                .docs
+                .iter()
+                .map(|d| ex.run_doc(d).total_tuples())
+                .sum();
+            assert!(total > 0, "{} produced no annotations", q.name);
+        }
+    }
+
+    #[test]
+    fn t5_is_relational_dominated() {
+        use crate::exec::{Executor, Profiler};
+        use std::sync::Arc;
+        let corpus = crate::corpus::CorpusSpec::news(8, 2048).generate();
+        let q = builtin("t5").unwrap();
+        let g = crate::optimizer::optimize(&crate::aql::compile(&q.aql).unwrap());
+        let prof = Arc::new(Profiler::for_graph(&g));
+        let ex = Executor::new(Arc::new(g), prof.clone());
+        for d in &corpus.docs {
+            ex.run_doc(d);
+        }
+        let p = prof.snapshot(ex.graph());
+        let extraction = p.fraction_extraction();
+        assert!(
+            extraction < 0.5,
+            "t5 extraction fraction {extraction} — should be relational-dominated"
+        );
+    }
+
+    #[test]
+    fn t1_is_extraction_dominated() {
+        use crate::exec::{Executor, Profiler};
+        use std::sync::Arc;
+        let corpus = crate::corpus::CorpusSpec::news(8, 2048).generate();
+        let q = builtin("t1").unwrap();
+        let g = crate::optimizer::optimize(&crate::aql::compile(&q.aql).unwrap());
+        let prof = Arc::new(Profiler::for_graph(&g));
+        let ex = Executor::new(Arc::new(g), prof.clone());
+        for d in &corpus.docs {
+            ex.run_doc(d);
+        }
+        let p = prof.snapshot(ex.graph());
+        assert!(
+            p.fraction_extraction() > 0.5,
+            "t1 extraction fraction {} — should be extraction-dominated",
+            p.fraction_extraction()
+        );
+    }
+
+    #[test]
+    fn builtin_lookup() {
+        assert!(builtin("t3").is_some());
+        assert!(builtin("t9").is_none());
+        assert_eq!(all().len(), 5);
+    }
+}

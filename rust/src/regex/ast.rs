@@ -1,0 +1,651 @@
+//! Pattern syntax, byte classes, and the recursive-descent parser.
+//!
+//! Supported syntax (a practical subset sufficient for information
+//! extraction rules — phone numbers, emails, capitalized words, amounts):
+//!
+//! ```text
+//! pattern   := alt
+//! alt       := concat ('|' concat)*
+//! concat    := repeat*
+//! repeat    := atom ('*' | '+' | '?' | '{m}' | '{m,}' | '{m,n}')?
+//! atom      := literal | '.' | class | '(' alt ')' | '(?:' alt ')' | escape
+//! class     := '[' '^'? item+ ']'      item := byte | byte '-' byte | escape-class
+//! escape    := '\d' '\D' '\w' '\W' '\s' '\S' | '\' punct
+//! anchors   := '^' at pattern start, '$' at pattern end only
+//! ```
+//!
+//! Patterns are byte-oriented (ASCII); the corpus generator never emits
+//! non-ASCII, matching the paper's "sequence of ASCII characters".
+
+use std::fmt;
+
+/// A set of bytes, stored as a 256-bit bitmap.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct ByteClass(pub [u64; 4]);
+
+impl ByteClass {
+    /// The empty class.
+    pub fn empty() -> Self {
+        ByteClass([0; 4])
+    }
+
+    /// Class containing a single byte.
+    pub fn single(b: u8) -> Self {
+        let mut c = Self::empty();
+        c.insert(b);
+        c
+    }
+
+    /// Class containing every byte except NUL (NUL is reserved as the
+    /// accelerator's work-package separator, so `.` never matches it).
+    pub fn dot() -> Self {
+        let mut c = ByteClass([!0; 4]);
+        c.remove(0);
+        // `.` also conventionally excludes newline
+        c.remove(b'\n');
+        c
+    }
+
+    /// Add a byte.
+    pub fn insert(&mut self, b: u8) {
+        self.0[(b >> 6) as usize] |= 1u64 << (b & 63);
+    }
+
+    /// Remove a byte.
+    pub fn remove(&mut self, b: u8) {
+        self.0[(b >> 6) as usize] &= !(1u64 << (b & 63));
+    }
+
+    /// Add an inclusive byte range.
+    pub fn insert_range(&mut self, lo: u8, hi: u8) {
+        for b in lo..=hi {
+            self.insert(b);
+        }
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, b: u8) -> bool {
+        self.0[(b >> 6) as usize] & (1u64 << (b & 63)) != 0
+    }
+
+    /// Complement (NUL stays excluded — see [`ByteClass::dot`]).
+    pub fn negate(&self) -> Self {
+        let mut c = ByteClass([!self.0[0], !self.0[1], !self.0[2], !self.0[3]]);
+        c.remove(0);
+        c
+    }
+
+    /// Union.
+    pub fn union(&self, other: &Self) -> Self {
+        ByteClass([
+            self.0[0] | other.0[0],
+            self.0[1] | other.0[1],
+            self.0[2] | other.0[2],
+            self.0[3] | other.0[3],
+        ])
+    }
+
+    /// ASCII case-fold: for each letter present, add the other case.
+    pub fn case_fold(&self) -> Self {
+        let mut c = *self;
+        for b in b'a'..=b'z' {
+            if self.contains(b) {
+                c.insert(b - 32);
+            }
+        }
+        for b in b'A'..=b'Z' {
+            if self.contains(b) {
+                c.insert(b + 32);
+            }
+        }
+        c
+    }
+
+    /// `\d`
+    pub fn digit() -> Self {
+        let mut c = Self::empty();
+        c.insert_range(b'0', b'9');
+        c
+    }
+
+    /// `\w`
+    pub fn word() -> Self {
+        let mut c = Self::digit();
+        c.insert_range(b'a', b'z');
+        c.insert_range(b'A', b'Z');
+        c.insert(b'_');
+        c
+    }
+
+    /// `\s`
+    pub fn space() -> Self {
+        let mut c = Self::empty();
+        for b in [b' ', b'\t', b'\n', b'\r', 0x0b, 0x0c] {
+            c.insert(b);
+        }
+        c
+    }
+
+    /// Iterate over member bytes.
+    pub fn iter(&self) -> impl Iterator<Item = u8> + '_ {
+        (0u16..256).filter_map(move |b| {
+            let b = b as u8;
+            self.contains(b).then_some(b)
+        })
+    }
+}
+
+impl fmt::Debug for ByteClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ByteClass[")?;
+        let mut n = 0;
+        for b in self.iter() {
+            if n > 8 {
+                write!(f, "…")?;
+                break;
+            }
+            if b.is_ascii_graphic() {
+                write!(f, "{}", b as char)?;
+            } else {
+                write!(f, "\\x{b:02x}")?;
+            }
+            n += 1;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Abstract syntax tree of a pattern body (anchors live on [`Pattern`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Ast {
+    /// Matches the empty string.
+    Empty,
+    /// One byte from the class.
+    Class(ByteClass),
+    /// Sequence.
+    Concat(Vec<Ast>),
+    /// Alternation.
+    Alt(Vec<Ast>),
+    /// `node{min, max}`; `max == None` means unbounded.
+    Repeat {
+        node: Box<Ast>,
+        min: u32,
+        max: Option<u32>,
+    },
+}
+
+/// A parsed pattern: body plus top-level anchors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pattern {
+    pub ast: Ast,
+    pub anchored_start: bool,
+    pub anchored_end: bool,
+    /// Original source, retained for diagnostics and AOG dumps.
+    pub source: String,
+}
+
+impl Pattern {
+    /// A sample of bytes the pattern can consume (up to a few per class),
+    /// plus common separators — used by the hardware compiler to generate
+    /// adversarial validation text for the SW/HW semantics check.
+    pub fn alphabet_sample(&self) -> Vec<u8> {
+        fn walk(ast: &Ast, out: &mut Vec<u8>) {
+            match ast {
+                Ast::Empty => {}
+                Ast::Class(c) => {
+                    for (k, b) in c.iter().enumerate() {
+                        if k >= 6 {
+                            break;
+                        }
+                        out.push(b);
+                    }
+                }
+                Ast::Concat(v) | Ast::Alt(v) => {
+                    for a in v {
+                        walk(a, out);
+                    }
+                }
+                Ast::Repeat { node, .. } => walk(node, out),
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.ast, &mut out);
+        out.extend_from_slice(b" .,x1");
+        out.sort_unstable();
+        out.dedup();
+        out.retain(|&b| b != 0); // NUL is the package separator
+        out
+    }
+}
+
+/// Parse failure with byte position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "regex parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Maximum expansion for bounded repeats, to keep NFAs small.
+const MAX_BOUNDED_REPEAT: u32 = 64;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    fold: bool,
+}
+
+/// Parse `pattern`; `case_insensitive` folds ASCII case into classes.
+pub fn parse(pattern: &str, case_insensitive: bool) -> Result<Pattern, ParseError> {
+    let mut p = Parser {
+        bytes: pattern.as_bytes(),
+        pos: 0,
+        fold: case_insensitive,
+    };
+    let anchored_start = p.eat(b'^');
+    let ast = p.parse_alt()?;
+    // `$` must be the final byte if present
+    let anchored_end = p.eat(b'$');
+    if p.pos != p.bytes.len() {
+        return Err(p.err("unexpected trailing input (unbalanced ')'?)"));
+    }
+    Ok(Pattern {
+        ast,
+        anchored_start,
+        anchored_end,
+        source: pattern.to_string(),
+    })
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError {
+            pos: self.pos,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn parse_alt(&mut self) -> Result<Ast, ParseError> {
+        let mut branches = vec![self.parse_concat()?];
+        while self.eat(b'|') {
+            branches.push(self.parse_concat()?);
+        }
+        Ok(if branches.len() == 1 {
+            branches.pop().unwrap()
+        } else {
+            Ast::Alt(branches)
+        })
+    }
+
+    fn parse_concat(&mut self) -> Result<Ast, ParseError> {
+        let mut items = Vec::new();
+        loop {
+            match self.peek() {
+                None | Some(b'|') | Some(b')') => break,
+                Some(b'$') if self.pos + 1 == self.bytes.len() => break,
+                _ => items.push(self.parse_repeat()?),
+            }
+        }
+        Ok(match items.len() {
+            0 => Ast::Empty,
+            1 => items.pop().unwrap(),
+            _ => Ast::Concat(items),
+        })
+    }
+
+    fn parse_repeat(&mut self) -> Result<Ast, ParseError> {
+        let atom = self.parse_atom()?;
+        let (min, max) = match self.peek() {
+            Some(b'*') => {
+                self.pos += 1;
+                (0, None)
+            }
+            Some(b'+') => {
+                self.pos += 1;
+                (1, None)
+            }
+            Some(b'?') => {
+                self.pos += 1;
+                (0, Some(1))
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let min = self.parse_number()?;
+                let max = if self.eat(b',') {
+                    if self.peek() == Some(b'}') {
+                        None
+                    } else {
+                        Some(self.parse_number()?)
+                    }
+                } else {
+                    Some(min)
+                };
+                if !self.eat(b'}') {
+                    return Err(self.err("expected '}' in repetition"));
+                }
+                if let Some(m) = max {
+                    if m < min {
+                        return Err(self.err("repetition max < min"));
+                    }
+                    if m > MAX_BOUNDED_REPEAT {
+                        return Err(self.err("bounded repetition too large (max 64)"));
+                    }
+                } else if min > MAX_BOUNDED_REPEAT {
+                    return Err(self.err("bounded repetition too large (max 64)"));
+                }
+                (min, max)
+            }
+            _ => return Ok(atom),
+        };
+        // reject double quantifiers like a**
+        if matches!(self.peek(), Some(b'*') | Some(b'+') | Some(b'?')) {
+            return Err(self.err("nested quantifier"));
+        }
+        Ok(Ast::Repeat {
+            node: Box::new(atom),
+            min,
+            max,
+        })
+    }
+
+    fn parse_number(&mut self) -> Result<u32, ParseError> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b) if b.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err("expected number"));
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .unwrap()
+            .parse()
+            .map_err(|_| self.err("number too large"))
+    }
+
+    fn parse_atom(&mut self) -> Result<Ast, ParseError> {
+        match self.bump() {
+            None => Err(self.err("unexpected end of pattern")),
+            Some(b'(') => {
+                // (?: ... ) and ( ... ) both mean grouping — we do not
+                // support capture semantics (SystemT extracts whole-match
+                // spans; group extraction is future work).
+                if self.peek() == Some(b'?') {
+                    self.pos += 1;
+                    if !self.eat(b':') {
+                        return Err(self.err("only (?: ) groups are supported"));
+                    }
+                }
+                let inner = self.parse_alt()?;
+                if !self.eat(b')') {
+                    return Err(self.err("expected ')'"));
+                }
+                Ok(inner)
+            }
+            Some(b'[') => self.parse_class().map(Ast::Class),
+            Some(b'.') => Ok(Ast::Class(ByteClass::dot())),
+            Some(b'\\') => self.parse_escape().map(Ast::Class),
+            Some(b @ (b'*' | b'+' | b'?')) => {
+                self.pos -= 1;
+                let _ = b;
+                Err(self.err("quantifier with nothing to repeat"))
+            }
+            Some(b'^') => Err(self.err("'^' only supported at pattern start")),
+            Some(b'$') => Err(self.err("'$' only supported at pattern end")),
+            Some(b) => {
+                let cls = ByteClass::single(b);
+                Ok(Ast::Class(if self.fold { cls.case_fold() } else { cls }))
+            }
+        }
+    }
+
+    fn parse_escape(&mut self) -> Result<ByteClass, ParseError> {
+        match self.bump() {
+            None => Err(self.err("dangling '\\'")),
+            Some(b'd') => Ok(ByteClass::digit()),
+            Some(b'D') => Ok(ByteClass::digit().negate()),
+            Some(b'w') => Ok(ByteClass::word()),
+            Some(b'W') => Ok(ByteClass::word().negate()),
+            Some(b's') => Ok(ByteClass::space()),
+            Some(b'S') => Ok(ByteClass::space().negate()),
+            Some(b'n') => Ok(ByteClass::single(b'\n')),
+            Some(b't') => Ok(ByteClass::single(b'\t')),
+            Some(b'r') => Ok(ByteClass::single(b'\r')),
+            Some(b) if b.is_ascii_punctuation() => Ok(ByteClass::single(b)),
+            Some(_) => Err(self.err("unsupported escape")),
+        }
+    }
+
+    fn parse_class(&mut self) -> Result<ByteClass, ParseError> {
+        let negated = self.eat(b'^');
+        let mut cls = ByteClass::empty();
+        let mut first = true;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated character class")),
+                Some(b']') if !first => {
+                    self.pos += 1;
+                    break;
+                }
+                _ => {}
+            }
+            first = false;
+            let lo = match self.bump().unwrap() {
+                b'\\' => {
+                    let sub = self.parse_escape()?;
+                    // escape-classes can't form ranges
+                    cls = cls.union(&sub);
+                    continue;
+                }
+                b => b,
+            };
+            if self.peek() == Some(b'-')
+                && self.bytes.get(self.pos + 1).is_some_and(|&b| b != b']')
+            {
+                self.pos += 1; // '-'
+                let hi = match self.bump().unwrap() {
+                    b'\\' => return Err(self.err("escape not allowed as range end")),
+                    b => b,
+                };
+                if hi < lo {
+                    return Err(self.err("invalid range (hi < lo)"));
+                }
+                cls.insert_range(lo, hi);
+            } else {
+                cls.insert(lo);
+            }
+        }
+        if self.fold {
+            cls = cls.case_fold();
+        }
+        Ok(if negated { cls.negate() } else { cls })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_concat() {
+        let p = parse("abc", false).unwrap();
+        match p.ast {
+            Ast::Concat(v) => assert_eq!(v.len(), 3),
+            other => panic!("expected concat, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn alternation() {
+        let p = parse("a|b|c", false).unwrap();
+        match p.ast {
+            Ast::Alt(v) => assert_eq!(v.len(), 3),
+            other => panic!("expected alt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn quantifiers() {
+        for (pat, min, max) in [
+            ("a*", 0, None),
+            ("a+", 1, None),
+            ("a?", 0, Some(1)),
+            ("a{3}", 3, Some(3)),
+            ("a{2,}", 2, None),
+            ("a{2,5}", 2, Some(5)),
+        ] {
+            let p = parse(pat, false).unwrap();
+            match p.ast {
+                Ast::Repeat { min: m, max: x, .. } => {
+                    assert_eq!((m, x), (min, max), "pattern {pat}");
+                }
+                other => panic!("expected repeat for {pat}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn anchors() {
+        let p = parse("^ab$", false).unwrap();
+        assert!(p.anchored_start && p.anchored_end);
+        let p = parse("ab", false).unwrap();
+        assert!(!p.anchored_start && !p.anchored_end);
+    }
+
+    #[test]
+    fn classes() {
+        let p = parse("[a-cx]", false).unwrap();
+        if let Ast::Class(c) = p.ast {
+            assert!(c.contains(b'a') && c.contains(b'b') && c.contains(b'c'));
+            assert!(c.contains(b'x'));
+            assert!(!c.contains(b'd'));
+        } else {
+            panic!("expected class");
+        }
+    }
+
+    #[test]
+    fn negated_class_excludes_nul() {
+        let p = parse("[^a]", false).unwrap();
+        if let Ast::Class(c) = p.ast {
+            assert!(!c.contains(b'a'));
+            assert!(c.contains(b'b'));
+            assert!(!c.contains(0), "NUL is the package separator");
+        } else {
+            panic!("expected class");
+        }
+    }
+
+    #[test]
+    fn class_with_escapes_and_literal_dash() {
+        let p = parse(r"[\d\-x-]", false).unwrap();
+        if let Ast::Class(c) = p.ast {
+            assert!(c.contains(b'5') && c.contains(b'-') && c.contains(b'x'));
+            assert!(!c.contains(b'a'));
+        } else {
+            panic!("expected class");
+        }
+    }
+
+    #[test]
+    fn dot_excludes_newline_and_nul() {
+        let c = ByteClass::dot();
+        assert!(c.contains(b'a') && c.contains(b' '));
+        assert!(!c.contains(b'\n') && !c.contains(0));
+    }
+
+    #[test]
+    fn escapes() {
+        for (pat, yes, no) in [
+            (r"\d", b'7', b'a'),
+            (r"\w", b'_', b'-'),
+            (r"\s", b' ', b'x'),
+            (r"\.", b'.', b'a'),
+        ] {
+            let p = parse(pat, false).unwrap();
+            if let Ast::Class(c) = p.ast {
+                assert!(c.contains(yes), "{pat} should match {yes}");
+                assert!(!c.contains(no), "{pat} should not match {no}");
+            } else {
+                panic!("expected class for {pat}");
+            }
+        }
+    }
+
+    #[test]
+    fn case_fold() {
+        let p = parse("ab", true).unwrap();
+        if let Ast::Concat(v) = p.ast {
+            if let Ast::Class(c) = &v[0] {
+                assert!(c.contains(b'a') && c.contains(b'A'));
+            } else {
+                panic!();
+            }
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn group_nonbinding() {
+        let p = parse("(?:ab)+", false).unwrap();
+        assert!(matches!(p.ast, Ast::Repeat { .. }));
+        let p = parse("(ab)+", false).unwrap();
+        assert!(matches!(p.ast, Ast::Repeat { .. }));
+    }
+
+    #[test]
+    fn parse_errors() {
+        for pat in [
+            "(", ")", "a)", "[", "[]", "a{2", "a{5,2}", "*", "a**", r"\q", "a{99}",
+            "a^b", "a$b",
+        ] {
+            assert!(parse(pat, false).is_err(), "{pat} should fail");
+        }
+    }
+
+    #[test]
+    fn empty_pattern_ok() {
+        assert_eq!(parse("", false).unwrap().ast, Ast::Empty);
+        assert!(matches!(parse("a|", false).unwrap().ast, Ast::Alt(_)));
+    }
+
+    #[test]
+    fn byteclass_ops() {
+        let mut c = ByteClass::empty();
+        c.insert(b'a');
+        assert!(c.contains(b'a'));
+        c.remove(b'a');
+        assert!(!c.contains(b'a'));
+        let d = ByteClass::digit();
+        let w = ByteClass::word();
+        assert_eq!(d.union(&w), w);
+        assert_eq!(d.iter().count(), 10);
+    }
+}

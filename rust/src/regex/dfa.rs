@@ -1,0 +1,370 @@
+//! Subset-construction DFAs with dense byte-transition tables.
+//!
+//! The table layout is the contract with the accelerator: `table[s * 256 + b]`
+//! is the next state, state [`DEAD`]` = 0` is absorbing, state
+//! [`START`]` = 1` is initial, and `accept[s]` flags accepting states. The
+//! Pallas kernel (`python/compile/kernels/dfa_scan.py`) consumes exactly
+//! this layout, padded to the artifact's state budget — the FPGA analogy is
+//! the BRAM-resident state-transition table of the paper's regex engine
+//! (their ref [20]).
+//!
+//! Three kinds are built from one NFA:
+//! * `Anchored` — matches must begin at the scan position (software
+//!   matcher's inner loop);
+//! * `Search` — implicit unanchored prefix: the start closure is folded
+//!   into every state, so accepting states mark *match ends* anywhere in
+//!   the stream. This is what streams on the accelerator.
+//! * `Reverse` — anchored DFA of the mirrored pattern; scanning backwards
+//!   from a match end yields the match *start* (longest = leftmost).
+//!
+//! Byte 0 (NUL) is the work-package document separator: every state maps
+//! NUL back to [`START`] and no class ever contains it, so state never
+//! leaks across document boundaries within a package.
+
+use std::collections::HashMap;
+
+use super::ast::Pattern;
+use super::nfa::{Nfa, StateId};
+
+/// Absorbing dead state.
+pub const DEAD: u32 = 0;
+/// Initial state.
+pub const START: u32 = 1;
+
+/// Construction cap — queries whose patterns blow past this are rejected at
+/// compile time, mirroring the FPGA's finite state-table budget.
+pub const MAX_DFA_STATES: usize = 1024;
+
+/// Which DFA flavour to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DfaKind {
+    Anchored,
+    Search,
+    Reverse,
+}
+
+/// A dense-table DFA.
+#[derive(Debug, Clone)]
+pub struct Dfa {
+    /// Number of states (including dead and start).
+    pub num_states: u32,
+    /// Row-major `num_states × 256` next-state table.
+    pub table: Vec<u32>,
+    /// Per-state accept flag.
+    pub accept: Vec<bool>,
+    /// Flavour, retained for diagnostics.
+    pub kind: DfaKind,
+}
+
+/// DFA construction error (state explosion).
+#[derive(Debug, Clone)]
+pub struct DfaTooLarge {
+    pub states: usize,
+}
+
+impl std::fmt::Display for DfaTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "DFA exceeds {MAX_DFA_STATES} states ({} reached) — simplify the pattern",
+            self.states
+        )
+    }
+}
+
+impl std::error::Error for DfaTooLarge {}
+
+impl Dfa {
+    /// Build a DFA of the requested kind for `pattern`.
+    pub fn build(pattern: &Pattern, kind: DfaKind) -> Result<Dfa, DfaTooLarge> {
+        let nfa = Nfa::build(pattern, kind == DfaKind::Reverse);
+        let unanchored = kind == DfaKind::Search && !pattern.anchored_start;
+
+        let mut start_set = vec![nfa.start];
+        nfa.eps_closure(&mut start_set);
+        let base = start_set.clone();
+
+        // Subset construction. Sets are canonical (sorted/deduped) vectors.
+        let mut ids: HashMap<Vec<StateId>, u32> = HashMap::new();
+        let mut sets: Vec<Vec<StateId>> = Vec::new();
+
+        // state 0 = dead (empty set), state 1 = start closure
+        ids.insert(Vec::new(), DEAD);
+        sets.push(Vec::new());
+        ids.insert(start_set.clone(), START);
+        sets.push(start_set);
+
+        let mut table: Vec<u32> = Vec::new();
+        let mut accept: Vec<bool> = Vec::new();
+        let mut next_unprocessed = 0usize;
+
+        while next_unprocessed < sets.len() {
+            let set = sets[next_unprocessed].clone();
+            next_unprocessed += 1;
+            accept.push(nfa.any_accept(&set));
+            let trans = nfa.byte_transitions(&set);
+            let mut row = [DEAD; 256];
+            // For each byte, gather targets across all class transitions.
+            // Byte classes are typically few per set; iterate classes and
+            // scatter into the row via per-byte target accumulation.
+            let mut targets: Vec<Vec<StateId>> = vec![Vec::new(); 256];
+            for (cls, t) in &trans {
+                for b in cls.iter() {
+                    targets[b as usize].push(*t);
+                }
+            }
+            // Memoize per-row target-set → state id to avoid 256 closures
+            // when many bytes share a target set.
+            let mut row_memo: HashMap<Vec<StateId>, u32> = HashMap::new();
+            for b in 0..256usize {
+                if b == 0 {
+                    // NUL: package separator resets the machine.
+                    row[b] = START;
+                    continue;
+                }
+                let mut tgt = std::mem::take(&mut targets[b]);
+                tgt.sort_unstable();
+                tgt.dedup();
+                if tgt.is_empty() && !unanchored {
+                    row[b] = DEAD;
+                    continue;
+                }
+                if let Some(&id) = row_memo.get(&tgt) {
+                    row[b] = id;
+                    continue;
+                }
+                let key = tgt.clone();
+                let mut closed = tgt;
+                nfa.eps_closure(&mut closed);
+                if unanchored {
+                    // fold the start closure in: matches may begin anywhere
+                    closed.extend_from_slice(&base);
+                    closed.sort_unstable();
+                    closed.dedup();
+                }
+                let id = match ids.get(&closed) {
+                    Some(&id) => id,
+                    None => {
+                        let id = sets.len() as u32;
+                        if sets.len() >= MAX_DFA_STATES {
+                            return Err(DfaTooLarge { states: sets.len() });
+                        }
+                        ids.insert(closed.clone(), id);
+                        sets.push(closed);
+                        id
+                    }
+                };
+                row_memo.insert(key, id);
+                row[b] = id;
+            }
+            table.extend_from_slice(&row);
+        }
+
+        Ok(Dfa {
+            num_states: sets.len() as u32,
+            table,
+            accept,
+            kind,
+        })
+    }
+
+    /// Next state.
+    #[inline]
+    pub fn step(&self, state: u32, byte: u8) -> u32 {
+        self.table[state as usize * 256 + byte as usize]
+    }
+
+    /// Accept flag for `state`.
+    #[inline]
+    pub fn is_accept(&self, state: u32) -> bool {
+        self.accept[state as usize]
+    }
+
+    /// Longest match length starting at `pos` (anchored semantics), or
+    /// `None`. Empty matches are reported as `Some(0)` only if the start
+    /// state accepts.
+    pub fn longest_from(&self, bytes: &[u8], pos: usize) -> Option<usize> {
+        debug_assert_eq!(self.kind, DfaKind::Anchored);
+        let mut state = START;
+        let mut best: Option<usize> = self.is_accept(state).then_some(0);
+        for (i, &b) in bytes[pos..].iter().enumerate() {
+            state = self.step(state, b);
+            if state == DEAD {
+                break;
+            }
+            if self.is_accept(state) {
+                best = Some(i + 1);
+            }
+        }
+        best
+    }
+
+    /// Scan the whole buffer with a Search DFA, invoking `on_end(pos)` for
+    /// each position `pos` (exclusive end offset) where a match ends.
+    /// This is the software mirror of the accelerator's streaming pass.
+    pub fn scan_ends(&self, bytes: &[u8], mut on_end: impl FnMut(usize)) {
+        debug_assert_eq!(self.kind, DfaKind::Search);
+        let mut state = START;
+        for (i, &b) in bytes.iter().enumerate() {
+            state = self.step(state, b);
+            if self.is_accept(state) {
+                on_end(i + 1);
+            }
+        }
+    }
+
+    /// With a Reverse DFA: longest match length going backwards from
+    /// byte offset `end` (exclusive). Returns the match start offset.
+    pub fn longest_backward_from(&self, bytes: &[u8], end: usize) -> Option<usize> {
+        self.longest_backward_bounded(bytes, end, 0)
+    }
+
+    /// Like [`Dfa::longest_backward_from`], but only starts `>= lo` count —
+    /// i.e. the smallest start in `[lo, end)` of a match ending at `end`.
+    /// The match-reconstruction proof in [`crate::regex::matcher`] needs
+    /// this bounded form.
+    pub fn longest_backward_bounded(&self, bytes: &[u8], end: usize, lo: usize) -> Option<usize> {
+        debug_assert_eq!(self.kind, DfaKind::Reverse);
+        let mut state = START;
+        let mut best: Option<usize> = self.is_accept(state).then_some(end);
+        for i in (lo..end).rev() {
+            state = self.step(state, bytes[i]);
+            if state == DEAD {
+                break;
+            }
+            if self.is_accept(state) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Approximate memory footprint of the table in bytes — used by the
+    /// hardware compiler to budget machines per artifact variant (the FPGA
+    /// analogue is BRAM consumption).
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * 4 + self.accept.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::ast::parse;
+
+    fn build(pat: &str, kind: DfaKind) -> Dfa {
+        Dfa::build(&parse(pat, false).unwrap(), kind).unwrap()
+    }
+
+    #[test]
+    fn anchored_longest() {
+        let d = build("ab+", DfaKind::Anchored);
+        assert_eq!(d.longest_from(b"abbbx", 0), Some(4));
+        assert_eq!(d.longest_from(b"abbbx", 1), None);
+        assert_eq!(d.longest_from(b"xab", 1), Some(2));
+        assert_eq!(d.longest_from(b"", 0), None);
+    }
+
+    #[test]
+    fn anchored_alternation_longest() {
+        let d = build("a|ab|abc", DfaKind::Anchored);
+        assert_eq!(d.longest_from(b"abcd", 0), Some(3));
+        assert_eq!(d.longest_from(b"abd", 0), Some(2));
+        assert_eq!(d.longest_from(b"ad", 0), Some(1));
+    }
+
+    #[test]
+    fn search_finds_ends() {
+        let d = build("ab", DfaKind::Search);
+        let mut ends = Vec::new();
+        d.scan_ends(b"xxabyyab", |e| ends.push(e));
+        assert_eq!(ends, vec![4, 8]);
+    }
+
+    #[test]
+    fn search_overlapping_ends() {
+        let d = build("aa", DfaKind::Search);
+        let mut ends = Vec::new();
+        d.scan_ends(b"aaaa", |e| ends.push(e));
+        assert_eq!(ends, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn reverse_recovers_start() {
+        let d = build("ab+c", DfaKind::Reverse);
+        // text: "zzabbbczz", match is [2, 7)
+        assert_eq!(d.longest_backward_from(b"zzabbbczz", 7), Some(2));
+        assert_eq!(d.longest_backward_from(b"zzabbbczz", 6), None);
+    }
+
+    #[test]
+    fn nul_resets_to_start() {
+        let d = build("ab", DfaKind::Search);
+        // a NUL between 'a' and 'b' must break the match
+        let mut ends = Vec::new();
+        d.scan_ends(b"a\0b", |e| ends.push(e));
+        assert!(ends.is_empty());
+        // and matching resumes fresh after the separator
+        let mut ends2 = Vec::new();
+        d.scan_ends(b"ab\0ab", |e| ends2.push(e));
+        assert_eq!(ends2, vec![2, 5]);
+    }
+
+    #[test]
+    fn dead_state_is_absorbing() {
+        let d = build("abc", DfaKind::Anchored);
+        let mut s = START;
+        s = d.step(s, b'x');
+        assert_eq!(s, DEAD);
+        for b in 1..=255u8 {
+            assert_eq!(d.step(DEAD, b), DEAD);
+        }
+        // except NUL which resets
+        assert_eq!(d.step(DEAD, 0), START);
+    }
+
+    #[test]
+    fn search_never_dies() {
+        let d = build("abc", DfaKind::Search);
+        let mut state = START;
+        for &b in b"xyzzyabqqq" {
+            state = d.step(state, b);
+            assert_ne!(state, DEAD, "search DFA must keep the start closure live");
+        }
+    }
+
+    #[test]
+    fn state_count_reasonable() {
+        let d = build(r"[A-Z][a-z]+", DfaKind::Search);
+        assert!(d.num_states < 16, "got {}", d.num_states);
+        assert_eq!(d.table.len(), d.num_states as usize * 256);
+        assert_eq!(d.accept.len(), d.num_states as usize);
+    }
+
+    #[test]
+    fn explosion_is_caught() {
+        // (a|b)^k .{k} style patterns explode; use a{60}[ab]{60} variants —
+        // bounded by parser at 64, craft something that exceeds 1024 states:
+        // ".{0,60}a.{60}" has ~2^60 DFA states in theory; subset construction
+        // will hit the cap quickly.
+        let pat = parse(".{0,60}a.{60}", false).unwrap();
+        assert!(Dfa::build(&pat, DfaKind::Search).is_err());
+    }
+
+    #[test]
+    fn empty_match_from_start() {
+        let d = build("a*", DfaKind::Anchored);
+        assert_eq!(d.longest_from(b"bbb", 0), Some(0));
+        assert_eq!(d.longest_from(b"aab", 0), Some(2));
+    }
+
+    #[test]
+    fn anchored_end_handled_by_caller() {
+        // '$' handling lives in the matcher (it trims candidates); the DFA
+        // for the body is the same.
+        let p = parse("abc$", false).unwrap();
+        assert!(p.anchored_end);
+        let d = Dfa::build(&p, DfaKind::Anchored).unwrap();
+        assert_eq!(d.longest_from(b"abc", 0), Some(3));
+    }
+}

@@ -1,0 +1,358 @@
+//! Match semantics: the software all-matches scan and the hardware
+//! candidate reconstruction, which must agree.
+//!
+//! **Contract.** `find_all` returns non-overlapping matches, chosen
+//! leftmost-first and longest-at-each-start, restarting after each match
+//! end — SystemT's regex-extraction semantics. `from_hw_ends` reconstructs
+//! the same set from a Search-DFA end-position stream (what the
+//! accelerator reports) using the Reverse DFA for start recovery and a
+//! greedy left-to-right selection. The equivalence of the two paths is
+//! enforced by tests here and revalidated per query pattern at
+//! hardware-compile time ([`crate::hwcompiler`]).
+
+use crate::text::Span;
+
+use super::ast::{ParseError, Pattern};
+use super::dfa::{Dfa, DfaKind, DfaTooLarge};
+
+/// One regex match.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Match {
+    pub span: Span,
+}
+
+/// A pattern compiled to all three DFAs.
+#[derive(Debug, Clone)]
+pub struct CompiledRegex {
+    pub pattern: Pattern,
+    /// Anchored DFA — software scan inner loop.
+    pub anchored: Dfa,
+    /// Search DFA — the table that streams on the accelerator.
+    pub search: Dfa,
+    /// Reverse DFA — match-start recovery from hardware end reports.
+    pub reverse: Dfa,
+}
+
+impl CompiledRegex {
+    /// Compile a parsed pattern (builds three DFAs).
+    pub fn from_pattern(pattern: Pattern) -> Result<Self, ParseError> {
+        let lift = |e: DfaTooLarge| ParseError {
+            pos: 0,
+            msg: e.to_string(),
+        };
+        // Hopcroft-minimized tables: smaller uploads and more patterns fit
+        // the artifact state budgets (the FPGA's BRAM, in paper terms).
+        let anchored =
+            super::minimize::minimize(&Dfa::build(&pattern, DfaKind::Anchored).map_err(lift)?);
+        let search =
+            super::minimize::minimize(&Dfa::build(&pattern, DfaKind::Search).map_err(lift)?);
+        let reverse =
+            super::minimize::minimize(&Dfa::build(&pattern, DfaKind::Reverse).map_err(lift)?);
+        Ok(CompiledRegex {
+            pattern,
+            anchored,
+            search,
+            reverse,
+        })
+    }
+
+    /// Software semantics: scan left to right; at each position take the
+    /// longest match, emit it, and continue from its end (non-overlapping).
+    /// Empty matches are skipped (SystemT never emits zero-length spans).
+    pub fn find_all(&self, text: &str) -> Vec<Match> {
+        let bytes = text.as_bytes();
+        let mut out = Vec::new();
+        let mut pos = 0usize;
+        let start_bound = if self.pattern.anchored_start { 1 } else { bytes.len() + 1 };
+        while pos < bytes.len() && pos < start_bound {
+            match self.anchored.longest_from(bytes, pos) {
+                Some(len) if len > 0 => {
+                    let end = pos + len;
+                    if !self.pattern.anchored_end || end == bytes.len() {
+                        out.push(Match {
+                            span: Span::new(pos as u32, end as u32),
+                        });
+                        pos = end;
+                        continue;
+                    }
+                    // end-anchored and this end isn't the doc end: try to
+                    // find a shorter/longer fit — with our subset (top-level
+                    // `$` only), only the doc-end match counts; advance.
+                    pos += 1;
+                }
+                _ => pos += 1,
+            }
+        }
+        out
+    }
+
+    /// Hardware-path reconstruction. `ends` are exclusive end offsets where
+    /// the Search DFA accepted (as streamed back by the accelerator), in
+    /// increasing order. Reproduces [`CompiledRegex::find_all`] exactly.
+    ///
+    /// **Why this is correct.** The software semantics picks, from cursor
+    /// `c`, the match with the smallest start `s ≥ c` (longest end at that
+    /// start), then sets `c` to its end. For each reported end `e`, let
+    /// `s(e, c)` be the smallest start in `[c, e)` of a match ending at `e`
+    /// (computed by the Reverse DFA bounded backward scan). Let `s*` be the
+    /// software pick's start and `E` its end. Then (i) the candidate
+    /// `(s(E,c), E)` has `s(E,c) = s*` — a match `(s', E)` with
+    /// `c ≤ s' < s*` would contradict minimality of `s*`, and `(s*, E)`
+    /// itself bounds `s(E,c) ≤ s*`; and (ii) no candidate has a smaller
+    /// start (its start is also a match start `≥ c`) and none with start
+    /// `s*` has a larger end (that would contradict `E` being the longest
+    /// end from `s*`). So "min start, then max end" over per-end bounded
+    /// candidates equals the software pick, round by round.
+    pub fn from_hw_ends(&self, text: &str, ends: &[usize]) -> Vec<Match> {
+        let bytes = text.as_bytes();
+        let ends: Vec<usize> = ends
+            .iter()
+            .copied()
+            .filter(|&e| !self.pattern.anchored_end || e == bytes.len())
+            .collect();
+        let mut out: Vec<Match> = Vec::new();
+        let mut cursor = 0usize;
+        let mut lo = 0usize; // index of first end still usable
+        loop {
+            let mut best: Option<(usize, usize)> = None;
+            for (idx, &e) in ends.iter().enumerate().skip(lo) {
+                if e <= cursor {
+                    lo = idx + 1;
+                    continue;
+                }
+                if let Some(s) = self.reverse.longest_backward_bounded(bytes, e, cursor) {
+                    if self.pattern.anchored_start && s != 0 {
+                        continue;
+                    }
+                    if e <= s {
+                        continue; // empty match — never emitted
+                    }
+                    best = match best {
+                        None => Some((s, e)),
+                        Some((bs, be)) if s < bs || (s == bs && e > be) => Some((s, e)),
+                        b => b,
+                    };
+                }
+            }
+            match best {
+                Some((s, e)) => {
+                    out.push(Match {
+                        span: Span::new(s as u32, e as u32),
+                    });
+                    cursor = e;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Run the Search DFA in software and reconstruct — this is the oracle
+    /// the hardware path is tested against end-to-end, and doubles as a
+    /// fallback when no accelerator is configured.
+    pub fn find_all_via_ends(&self, text: &str) -> Vec<Match> {
+        let mut ends = Vec::new();
+        self.search.scan_ends(text.as_bytes(), |e| ends.push(e));
+        self.from_hw_ends(text, &ends)
+    }
+
+    /// Verify on `text` that the hardware path equals the software path.
+    /// The hardware compiler calls this on generated sample text before
+    /// accepting a pattern for offload.
+    pub fn hw_semantics_agree(&self, text: &str) -> bool {
+        self.find_all(text) == self.find_all_via_ends(text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::regex::compile;
+
+    fn spans(pat: &str, text: &str) -> Vec<(u32, u32)> {
+        compile(pat, false)
+            .unwrap()
+            .find_all(text)
+            .iter()
+            .map(|m| (m.span.begin, m.span.end))
+            .collect()
+    }
+
+    #[test]
+    fn simple_all_matches() {
+        assert_eq!(spans("ab", "abxxab"), vec![(0, 2), (4, 6)]);
+    }
+
+    #[test]
+    fn longest_at_start() {
+        assert_eq!(spans("a+", "aaab"), vec![(0, 3)]);
+        assert_eq!(spans("a|ab", "ab"), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn non_overlapping_restart() {
+        assert_eq!(spans("aa", "aaaa"), vec![(0, 2), (2, 4)]);
+        assert_eq!(spans("aa", "aaa"), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn no_empty_matches() {
+        assert_eq!(spans("a*", "bbb"), Vec::<(u32, u32)>::new());
+        assert_eq!(spans("a*", "bab"), vec![(1, 2)]);
+    }
+
+    #[test]
+    fn anchored_start() {
+        assert_eq!(spans("^ab", "abab"), vec![(0, 2)]);
+        assert_eq!(spans("^ab", "xab"), Vec::<(u32, u32)>::new());
+    }
+
+    #[test]
+    fn anchored_end() {
+        assert_eq!(spans("ab$", "abab"), vec![(2, 4)]);
+        assert_eq!(spans("ab$", "abx"), Vec::<(u32, u32)>::new());
+    }
+
+    #[test]
+    fn realistic_phone() {
+        let t = "Call 555-1234, or (408) 555-9876 x22.";
+        assert_eq!(
+            spans(r"(\(\d{3}\) )?\d{3}-\d{4}", t),
+            vec![(5, 13), (18, 32)]
+        );
+    }
+
+    #[test]
+    fn hw_path_equals_sw_path_basic() {
+        for (pat, text) in [
+            ("ab", "abxxabab"),
+            ("a+", "aaabaaa"),
+            ("aa", "aaaaa"),
+            ("a|ab", "ababab"),
+            ("aa|ab", "aab"),
+            (r"\d{3}-\d{4}", "x 555-1234 555-99999"),
+            (r"[A-Z][a-z]+", "Alice met Bob at IBM Research"),
+            ("(ab|ba)+", "abbaabx"),
+        ] {
+            let re = compile(pat, false).unwrap();
+            assert_eq!(
+                re.find_all(text),
+                re.find_all_via_ends(text),
+                "divergence for /{pat}/ on {text:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn hw_path_equals_sw_path_property() {
+        use crate::util::{prop, Prng};
+        // Patterns chosen to cover classes, repeats, alternation — the
+        // shapes real extraction rules use.
+        let pats = [
+            r"[ab]+",
+            r"a[ab]{2}b",
+            r"ab|ba",
+            r"a+b+",
+            r"(a|b)(a|b)",
+            r"\d+",
+            r"[a-c]{2,4}",
+        ];
+        for pat in pats {
+            let re = compile(pat, false).unwrap();
+            prop::check(
+                1234,
+                300,
+                |r: &mut Prng| {
+                    let len = r.below(40).max(1);
+                    r.string_over(b"abc d1", len)
+                },
+                |text| re.find_all(text) == re.find_all_via_ends(text),
+            );
+        }
+    }
+
+    #[test]
+    fn agree_helper() {
+        let re = compile(r"[A-Z][a-z]+", false).unwrap();
+        assert!(re.hw_semantics_agree("Alice and Bob went to Zurich."));
+    }
+
+    #[test]
+    fn case_insensitive_end_to_end() {
+        let re = compile("ibm research", true).unwrap();
+        let t = "IBM Research and ibm research";
+        assert_eq!(re.find_all(t).len(), 2);
+        assert_eq!(re.find_all(t), re.find_all_via_ends(t));
+    }
+
+    #[test]
+    fn matches_across_nul_are_broken() {
+        // NUL simulates the package separator: no match may cross it.
+        let re = compile("ab", false).unwrap();
+        let text_with_sep = "a\0b";
+        assert_eq!(re.find_all_via_ends(text_with_sep).len(), 0);
+    }
+}
+
+/// Differential tests against the vendored `regex` crate (dev-dependency;
+/// test oracle only — the engine itself never uses it).
+#[cfg(test)]
+mod oracle_tests {
+    use crate::regex::compile;
+    // (no items from super needed — the oracle is the vendored regex crate)
+
+    /// Oracle semantics: regex crate find_iter is leftmost-first (not
+    /// longest-alternation), so restrict to patterns where the two agree
+    /// (no ambiguous alternations).
+    fn check_against_oracle(pat: &str, texts: &[&str]) {
+        let mine = compile(pat, false).unwrap();
+        let oracle = regex::Regex::new(pat).unwrap();
+        for t in texts {
+            let got: Vec<(usize, usize)> = mine
+                .find_all(t)
+                .iter()
+                .map(|m| (m.span.begin as usize, m.span.end as usize))
+                .collect();
+            let want: Vec<(usize, usize)> =
+                oracle.find_iter(t).map(|m| (m.start(), m.end())).collect();
+            assert_eq!(got, want, "pattern /{pat}/ on {t:?}");
+        }
+    }
+
+    #[test]
+    fn oracle_simple() {
+        check_against_oracle("ab", &["", "ab", "abab", "xxabxx", "aab"]);
+        check_against_oracle("a+", &["aaa", "baaab", "ab a ab"]);
+        check_against_oracle(r"\d{3}-\d{4}", &["555-1234", "x555-12345y", "12-3456"]);
+        check_against_oracle(r"[A-Z][a-z]+", &["Alice met Bob", "IBM", "aA bB Cc"]);
+    }
+
+    #[test]
+    fn oracle_repeats_and_classes() {
+        check_against_oracle("a{2,4}", &["a", "aa", "aaaaa", "aaaaaaaa"]);
+        check_against_oracle(r"[abc]+d", &["abcd", "dd", "cabdab"]);
+        check_against_oracle(r"x[0-9]*y", &["xy", "x123y", "x12z"]);
+    }
+
+    #[test]
+    fn oracle_random_texts() {
+        use crate::util::Prng;
+        let mut rng = Prng::new(99);
+        let pats = [r"a+b", r"[ab]c", r"ab*c", r"(?:ab){1,3}", r"\w+@\w+"];
+        for pat in pats {
+            let mine = compile(pat, false).unwrap();
+            let oracle = regex::Regex::new(pat).unwrap();
+            for _ in 0..200 {
+                let len = rng.below(60).max(1);
+                let t = rng.string_over(b"abc@x ", len);
+                let got: Vec<(usize, usize)> = mine
+                    .find_all(&t)
+                    .iter()
+                    .map(|m| (m.span.begin as usize, m.span.end as usize))
+                    .collect();
+                let want: Vec<(usize, usize)> =
+                    oracle.find_iter(&t).map(|m| (m.start(), m.end())).collect();
+                assert_eq!(got, want, "pattern /{pat}/ on {t:?}");
+            }
+        }
+    }
+}

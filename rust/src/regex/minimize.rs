@@ -1,0 +1,210 @@
+//! Hopcroft DFA minimization.
+//!
+//! The FPGA's BRAM (our artifact geometries) bounds the per-machine state
+//! budget; minimizing the search DFA before export lets more complex
+//! patterns fit a given geometry and shrinks the table upload. Subset
+//! construction output is often non-minimal (especially for unanchored
+//! search DFAs where the start closure is folded into every state).
+//!
+//! The dead state (0) and start-state id (1) conventions of
+//! [`crate::regex::dfa`] are preserved by remapping after partitioning.
+
+use super::dfa::{Dfa, DEAD, START};
+
+/// Minimize `dfa`, preserving the state-id conventions (0 = dead,
+/// 1 = start). Returns a DFA accepting exactly the same language with the
+/// minimal number of states.
+pub fn minimize(dfa: &Dfa) -> Dfa {
+    let n = dfa.num_states as usize;
+    if n <= 2 {
+        return dfa.clone();
+    }
+
+    // --- Hopcroft partition refinement ---
+    // initial partition: accepting vs non-accepting (dead kept separate so
+    // its absorbing identity survives; it is non-accepting anyway)
+    let mut block_of: Vec<u32> = (0..n)
+        .map(|s| if dfa.accept[s] { 1 } else { 0 })
+        .collect();
+    let mut num_blocks = 2u32;
+    // handle degenerate cases: all accepting or none
+    if !dfa.accept.iter().any(|&a| a) || dfa.accept.iter().all(|&a| a) {
+        // single block — still refine below (transitions differ)
+        for b in block_of.iter_mut() {
+            *b = 0;
+        }
+        num_blocks = 1;
+    }
+
+    // iterative refinement to fixpoint (simple Moore algorithm — O(n²·Σ)
+    // worst case, fine for our ≤1024-state tables; Hopcroft's worklist
+    // optimization is unnecessary at this scale)
+    loop {
+        let mut changed = false;
+        // signature of a state: (its block, blocks of its 256 successors)
+        use std::collections::HashMap;
+        let mut sig_to_new: HashMap<(u32, Vec<u32>), u32> = HashMap::new();
+        let mut new_block_of = vec![0u32; n];
+        let mut next_block = 0u32;
+        for s in 0..n {
+            let sig: Vec<u32> = (0..256)
+                .map(|b| block_of[dfa.table[s * 256 + b] as usize])
+                .collect();
+            let key = (block_of[s], sig);
+            let id = *sig_to_new.entry(key).or_insert_with(|| {
+                let id = next_block;
+                next_block += 1;
+                id
+            });
+            new_block_of[s] = id;
+        }
+        if next_block != num_blocks {
+            changed = true;
+        }
+        block_of = new_block_of;
+        num_blocks = next_block;
+        if !changed {
+            break;
+        }
+    }
+
+    // --- rebuild with conventions: dead block -> 0, start block -> 1 ---
+    let dead_block = block_of[DEAD as usize];
+    let start_block = block_of[START as usize];
+    let mut remap: Vec<Option<u32>> = vec![None; num_blocks as usize];
+    remap[dead_block as usize] = Some(DEAD);
+    let mut next_id = if start_block == dead_block {
+        // pathological (empty language): start ≡ dead; keep two states to
+        // satisfy the layout conventions
+        1
+    } else {
+        remap[start_block as usize] = Some(START);
+        2
+    };
+    for s in 0..n {
+        let b = block_of[s] as usize;
+        if remap[b].is_none() {
+            remap[b] = Some(next_id);
+            next_id += 1;
+        }
+    }
+    let new_n = next_id.max(2) as usize;
+
+    let mut table = vec![DEAD; new_n * 256];
+    let mut accept = vec![false; new_n];
+    // NUL resets to START everywhere, even in padding rows
+    for row in table.chunks_mut(256) {
+        row[0] = START;
+    }
+    for s in 0..n {
+        let ns = remap[block_of[s] as usize].unwrap() as usize;
+        accept[ns] = dfa.accept[s];
+        for b in 0..256 {
+            let t = dfa.table[s * 256 + b] as usize;
+            table[ns * 256 + b] = remap[block_of[t] as usize].unwrap();
+        }
+    }
+
+    Dfa {
+        num_states: new_n as u32,
+        table,
+        accept,
+        kind: dfa.kind,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::ast::parse;
+    use crate::regex::dfa::DfaKind;
+
+    fn build(pat: &str, kind: DfaKind) -> Dfa {
+        Dfa::build(&parse(pat, false).unwrap(), kind).unwrap()
+    }
+
+    /// Language equivalence check by scanning random and structured text.
+    fn same_ends(a: &Dfa, b: &Dfa, text: &[u8]) -> bool {
+        let mut ea = Vec::new();
+        let mut eb = Vec::new();
+        a.scan_ends(text, |e| ea.push(e));
+        b.scan_ends(text, |e| eb.push(e));
+        ea == eb
+    }
+
+    #[test]
+    fn minimization_preserves_language() {
+        use crate::util::Prng;
+        let mut rng = Prng::new(42);
+        for pat in [
+            "abc",
+            "a+b*c?",
+            "(ab|ba)+",
+            r"[A-Z][a-z]+ [A-Z][a-z]+",
+            r"\d{3}-\d{4}",
+            r"(a|b)(a|b)(a|b)",
+            r"x|xy|xyz",
+        ] {
+            let d = build(pat, DfaKind::Search);
+            let m = minimize(&d);
+            assert!(m.num_states <= d.num_states, "{pat}");
+            for _ in 0..100 {
+                let len = rng.below(80);
+                let text = rng.string_over(b"abcxyzABC dXY019-", len.max(1));
+                assert!(
+                    same_ends(&d, &m, text.as_bytes()),
+                    "language changed for /{pat}/ on {text:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn minimization_shrinks_redundant_dfas() {
+        // x|xy|xyz: subset construction makes distinct accept states that
+        // minimization can merge
+        let d = build("abc|abd|abe", DfaKind::Search);
+        let m = minimize(&d);
+        assert!(m.num_states < d.num_states, "{} vs {}", m.num_states, d.num_states);
+    }
+
+    #[test]
+    fn conventions_preserved() {
+        // NUL resets everywhere; state 0 non-accepting (it is only truly
+        // absorbing in ANCHORED DFAs — search DFAs fold the start closure
+        // into every row, including the unreachable state 0).
+        let m = minimize(&build("ab", DfaKind::Search));
+        for s in 0..m.num_states {
+            assert_eq!(m.step(s, 0), START);
+        }
+        assert!(!m.is_accept(DEAD));
+
+        let a = minimize(&build("ab", DfaKind::Anchored));
+        for b in 1..=255u8 {
+            assert_eq!(a.step(DEAD, b), DEAD, "anchored dead must absorb");
+        }
+        assert_eq!(a.step(DEAD, 0), START);
+    }
+
+    #[test]
+    fn anchored_and_reverse_also_minimize() {
+        for kind in [DfaKind::Anchored, DfaKind::Reverse] {
+            let d = build("(ab|cd){1,3}", kind);
+            let m = minimize(&d);
+            assert!(m.num_states <= d.num_states);
+            // anchored longest semantics preserved
+            if kind == DfaKind::Anchored {
+                for text in [&b"ababab"[..], b"cdab", b"x", b""] {
+                    assert_eq!(d.longest_from(text, 0), m.longest_from(text, 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_dfas_pass_through() {
+        let d = build("", DfaKind::Search);
+        let m = minimize(&d);
+        assert!(m.num_states >= 2);
+    }
+}

@@ -1,0 +1,62 @@
+//! From-scratch regular-expression engine.
+//!
+//! SystemT's dominant extraction primitive is the regular expression
+//! (paper Fig 4: up to 82 % of query runtime), and the paper's FPGA regex
+//! matcher (their ref [20]) is a table-configured state machine streaming
+//! one character per cycle. This module provides everything both execution
+//! paths need, from scratch:
+//!
+//! * [`ast`] — the pattern syntax and parser (a practical subset: literals,
+//!   classes, escapes, alternation, grouping, bounded/unbounded repetition,
+//!   top-level anchors, case-insensitive flag);
+//! * [`nfa`] — Thompson construction;
+//! * [`dfa`] — subset construction to a dense byte-transition table, in two
+//!   flavours: *anchored* (software matcher) and *search* (implicit `.*`
+//!   prefix — the hardware match-end detector), plus the *reverse* DFA used
+//!   to recover match starts from hardware-reported ends;
+//! * [`matcher`] — the software all-matches semantics (leftmost-longest,
+//!   non-overlapping) and the hardware-candidate reconstruction that must
+//!   agree with it.
+//!
+//! The DFA transition tables are shared verbatim with the accelerator: the
+//! Pallas kernel consumes exactly [`dfa::Dfa::table`] (padded), which is
+//! what makes "reconfiguration" a data upload instead of a bitstream.
+
+pub mod ast;
+pub mod dfa;
+pub mod matcher;
+pub mod minimize;
+pub mod nfa;
+
+pub use ast::{parse, Ast, ByteClass, ParseError, Pattern};
+pub use dfa::{Dfa, DfaKind, DEAD, START};
+pub use matcher::{CompiledRegex, Match};
+pub use minimize::minimize;
+
+/// Compile a pattern string into a [`CompiledRegex`] (all three DFAs).
+///
+/// `case_insensitive` folds ASCII letters at parse time, matching SystemT's
+/// `with flags 'CASE_INSENSITIVE'`.
+pub fn compile(pattern: &str, case_insensitive: bool) -> Result<CompiledRegex, ParseError> {
+    let pat = parse(pattern, case_insensitive)?;
+    CompiledRegex::from_pattern(pat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_compile_and_match() {
+        let re = compile(r"[0-9]{3}-[0-9]{4}", false).unwrap();
+        let ms = re.find_all("call 555-1234 or 555-9876.");
+        assert_eq!(ms.len(), 2);
+        assert_eq!(ms[0].span.text("call 555-1234 or 555-9876."), "555-1234");
+    }
+
+    #[test]
+    fn case_insensitive_flag() {
+        let re = compile("ibm", true).unwrap();
+        assert_eq!(re.find_all("IBM and ibm and IbM").len(), 3);
+    }
+}

@@ -1,0 +1,296 @@
+//! Thompson NFA construction.
+//!
+//! States carry at most one byte-class transition plus epsilon edges; the
+//! construction is the classic one, with bounded repetition expanded (the
+//! parser caps `{m,n}` at 64 so expansion stays small). The NFA is an
+//! intermediate form only — both execution paths run DFAs.
+
+use super::ast::{Ast, ByteClass, Pattern};
+
+/// NFA state id.
+pub type StateId = u32;
+
+/// One NFA state.
+#[derive(Debug, Clone)]
+pub struct NfaState {
+    /// Byte transition, if any.
+    pub on_byte: Option<(ByteClass, StateId)>,
+    /// Epsilon successors.
+    pub eps: Vec<StateId>,
+    /// Accepting?
+    pub accept: bool,
+}
+
+/// A Thompson NFA with a single start state and explicit accept flags.
+#[derive(Debug, Clone)]
+pub struct Nfa {
+    pub states: Vec<NfaState>,
+    pub start: StateId,
+}
+
+impl Nfa {
+    fn push(&mut self) -> StateId {
+        self.states.push(NfaState {
+            on_byte: None,
+            eps: Vec::new(),
+            accept: false,
+        });
+        (self.states.len() - 1) as StateId
+    }
+
+    /// Build the NFA for a pattern body. If `reverse` is set, the AST is
+    /// mirrored first (concatenations reversed, recursively) — the reverse
+    /// NFA/DFA recovers match *starts* by scanning backwards from a
+    /// hardware-reported match end.
+    pub fn build(pattern: &Pattern, reverse: bool) -> Nfa {
+        let ast = if reverse {
+            reverse_ast(&pattern.ast)
+        } else {
+            pattern.ast.clone()
+        };
+        let mut nfa = Nfa {
+            states: Vec::new(),
+            start: 0,
+        };
+        let start = nfa.push();
+        let accept = nfa.push();
+        nfa.states[accept as usize].accept = true;
+        nfa.start = start;
+        nfa.compile(&ast, start, accept);
+        nfa
+    }
+
+    /// Wire `ast` between `from` and `to`.
+    fn compile(&mut self, ast: &Ast, from: StateId, to: StateId) {
+        match ast {
+            Ast::Empty => self.states[from as usize].eps.push(to),
+            Ast::Class(c) => {
+                // A state can hold only one byte transition; if `from`
+                // already has one, interpose an epsilon hop.
+                let src = if self.states[from as usize].on_byte.is_some() {
+                    let mid = self.push();
+                    self.states[from as usize].eps.push(mid);
+                    mid
+                } else {
+                    from
+                };
+                self.states[src as usize].on_byte = Some((*c, to));
+            }
+            Ast::Concat(items) => {
+                let mut cur = from;
+                for (i, item) in items.iter().enumerate() {
+                    let next = if i + 1 == items.len() {
+                        to
+                    } else {
+                        self.push()
+                    };
+                    self.compile(item, cur, next);
+                    cur = next;
+                }
+                if items.is_empty() {
+                    self.states[from as usize].eps.push(to);
+                }
+            }
+            Ast::Alt(branches) => {
+                for b in branches {
+                    let s = self.push();
+                    let e = self.push();
+                    self.states[from as usize].eps.push(s);
+                    self.states[e as usize].eps.push(to);
+                    self.compile(b, s, e);
+                }
+            }
+            Ast::Repeat { node, min, max } => {
+                // Expand: min mandatory copies, then either (max-min)
+                // optional copies or a Kleene loop.
+                let mut cur = from;
+                for _ in 0..*min {
+                    let next = self.push();
+                    self.compile(node, cur, next);
+                    cur = next;
+                }
+                match max {
+                    Some(m) => {
+                        // optional tail copies, each can short-circuit to `to`
+                        for _ in *min..*m {
+                            self.states[cur as usize].eps.push(to);
+                            let next = self.push();
+                            self.compile(node, cur, next);
+                            cur = next;
+                        }
+                        self.states[cur as usize].eps.push(to);
+                    }
+                    None => {
+                        // Kleene star on the remainder
+                        let loop_entry = self.push();
+                        self.states[cur as usize].eps.push(loop_entry);
+                        self.states[loop_entry as usize].eps.push(to);
+                        let body_end = self.push();
+                        self.compile(node, loop_entry, body_end);
+                        self.states[body_end as usize].eps.push(loop_entry);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Epsilon-closure of a set of states (ids, sorted, deduped).
+    pub fn eps_closure(&self, set: &mut Vec<StateId>) {
+        let mut stack: Vec<StateId> = set.clone();
+        let mut seen = vec![false; self.states.len()];
+        for &s in set.iter() {
+            seen[s as usize] = true;
+        }
+        while let Some(s) = stack.pop() {
+            for &e in &self.states[s as usize].eps {
+                if !seen[e as usize] {
+                    seen[e as usize] = true;
+                    set.push(e);
+                    stack.push(e);
+                }
+            }
+        }
+        set.sort_unstable();
+        set.dedup();
+    }
+
+    /// True if any state in `set` accepts.
+    pub fn any_accept(&self, set: &[StateId]) -> bool {
+        set.iter().any(|&s| self.states[s as usize].accept)
+    }
+
+    /// All `(class, target)` byte transitions out of `set`.
+    pub fn byte_transitions(&self, set: &[StateId]) -> Vec<(ByteClass, StateId)> {
+        set.iter()
+            .filter_map(|&s| self.states[s as usize].on_byte)
+            .collect()
+    }
+}
+
+/// Mirror an AST for reverse matching.
+fn reverse_ast(ast: &Ast) -> Ast {
+    match ast {
+        Ast::Empty | Ast::Class(_) => ast.clone(),
+        Ast::Concat(items) => Ast::Concat(items.iter().rev().map(reverse_ast).collect()),
+        Ast::Alt(branches) => Ast::Alt(branches.iter().map(reverse_ast).collect()),
+        Ast::Repeat { node, min, max } => Ast::Repeat {
+            node: Box::new(reverse_ast(node)),
+            min: *min,
+            max: *max,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regex::ast::parse;
+
+    /// Direct NFA simulation, used to sanity-check construction before the
+    /// DFA layer exists.
+    fn nfa_matches(nfa: &Nfa, input: &[u8]) -> bool {
+        let mut cur = vec![nfa.start];
+        nfa.eps_closure(&mut cur);
+        for &b in input {
+            let mut next = Vec::new();
+            for &s in &cur {
+                if let Some((cls, t)) = nfa.states[s as usize].on_byte {
+                    if cls.contains(b) {
+                        next.push(t);
+                    }
+                }
+            }
+            nfa.eps_closure(&mut next);
+            cur = next;
+            if cur.is_empty() {
+                return false;
+            }
+        }
+        nfa.any_accept(&cur)
+    }
+
+    fn accepts(pat: &str, input: &str) -> bool {
+        let p = parse(pat, false).unwrap();
+        let nfa = Nfa::build(&p, false);
+        nfa_matches(&nfa, input.as_bytes())
+    }
+
+    #[test]
+    fn literals() {
+        assert!(accepts("abc", "abc"));
+        assert!(!accepts("abc", "abd"));
+        assert!(!accepts("abc", "ab"));
+        assert!(!accepts("abc", "abcd")); // anchored full-input simulation
+    }
+
+    #[test]
+    fn alternation() {
+        assert!(accepts("cat|dog", "cat"));
+        assert!(accepts("cat|dog", "dog"));
+        assert!(!accepts("cat|dog", "cow"));
+    }
+
+    #[test]
+    fn star_plus_question() {
+        assert!(accepts("ab*c", "ac"));
+        assert!(accepts("ab*c", "abbbc"));
+        assert!(accepts("ab+c", "abc"));
+        assert!(!accepts("ab+c", "ac"));
+        assert!(accepts("ab?c", "ac"));
+        assert!(accepts("ab?c", "abc"));
+        assert!(!accepts("ab?c", "abbc"));
+    }
+
+    #[test]
+    fn bounded_repeats() {
+        assert!(accepts("a{3}", "aaa"));
+        assert!(!accepts("a{3}", "aa"));
+        assert!(!accepts("a{3}", "aaaa"));
+        assert!(accepts("a{2,4}", "aa"));
+        assert!(accepts("a{2,4}", "aaaa"));
+        assert!(!accepts("a{2,4}", "aaaaa"));
+        assert!(accepts("a{2,}", "aaaaaaa"));
+        assert!(!accepts("a{2,}", "a"));
+    }
+
+    #[test]
+    fn nested() {
+        assert!(accepts("(ab|cd)+e", "ababcde"));
+        assert!(!accepts("(ab|cd)+e", "e"));
+        assert!(accepts("(a|b)*", ""));
+        assert!(accepts("(a|b)*", "abba"));
+    }
+
+    #[test]
+    fn empty_pattern_accepts_empty() {
+        assert!(accepts("", ""));
+        assert!(!accepts("", "a"));
+    }
+
+    #[test]
+    fn reverse_matches_reversed_input() {
+        let p = parse("abc", false).unwrap();
+        let rev = Nfa::build(&p, true);
+        assert!(nfa_matches(&rev, b"cba"));
+        assert!(!nfa_matches(&rev, b"abc"));
+    }
+
+    #[test]
+    fn reverse_of_complex() {
+        let p = parse(r"\d{2}-[a-z]+", false).unwrap();
+        let rev = Nfa::build(&p, true);
+        assert!(nfa_matches(&rev, b"zyx-42"));
+        assert!(!nfa_matches(&rev, b"42-xyz"));
+    }
+
+    #[test]
+    fn class_transitions_collected() {
+        let p = parse("[ab][cd]", false).unwrap();
+        let nfa = Nfa::build(&p, false);
+        let mut start = vec![nfa.start];
+        nfa.eps_closure(&mut start);
+        let trans = nfa.byte_transitions(&start);
+        assert_eq!(trans.len(), 1);
+        assert!(trans[0].0.contains(b'a') && trans[0].0.contains(b'b'));
+    }
+}

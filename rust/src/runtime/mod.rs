@@ -1,0 +1,342 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute work packages.
+//!
+//! This is the only place the `xla` crate is touched. Artifacts are the
+//! HLO-text files produced by `python/compile/aot.py` (`make artifacts`);
+//! one [`xla::PjRtLoadedExecutable`] is compiled and cached per
+//! [`ArtifactKey`] variant. Python never runs here — the binary is
+//! self-contained once `artifacts/` exists.
+//!
+//! Two [`PackageEngine`] implementations exist:
+//! * [`PjrtPackageEngine`] — the real path: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → `execute`;
+//! * [`NativePackageEngine`] — a pure-Rust table scan with identical
+//!   semantics, used as a differential oracle in tests and as a fallback
+//!   when `artifacts/` has not been built.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::hwcompiler::{ArtifactKey, STREAMS};
+
+/// A work package's dense inputs, already padded to an artifact geometry.
+pub struct PackedPackage {
+    /// `STREAMS × block` byte values (0 = separator/padding).
+    pub bytes: Vec<i32>,
+    pub block: usize,
+    /// `M × S × 256` transition tables (shared across packages — up to a
+    /// few MiB, so cloning per package would dominate small payloads).
+    pub tables: std::sync::Arc<Vec<i32>>,
+    /// `M × S` accept flags.
+    pub accepts: std::sync::Arc<Vec<i32>>,
+    pub machines: usize,
+    pub states: usize,
+}
+
+/// A package execution result.
+pub struct PackageHits {
+    /// Sparse hits: `(machine, stream, position, state)`, position is the
+    /// 0-based index of the byte that produced the accepting state.
+    pub hits: Vec<(usize, usize, usize, u32)>,
+    /// Per-(machine, stream) hit counts (from the L2 reduction).
+    pub counts: Vec<i32>,
+}
+
+/// Executes packed packages.
+///
+/// Deliberately NOT `Send`/`Sync`: the `xla` crate's PJRT client is
+/// `Rc`-based, and the architecture confines the accelerator to the single
+/// communication thread anyway (the paper's model — one thread drives the
+/// device). Construct engines via [`EngineSpec`] on the thread that uses
+/// them.
+pub trait PackageEngine {
+    /// Run one package.
+    fn run(&self, key: ArtifactKey, pkg: &PackedPackage) -> Result<PackageHits>;
+    /// Engine name for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// A buildable engine description (Send), materialized on the communication
+/// thread.
+#[derive(Debug, Clone)]
+pub enum EngineSpec {
+    /// Pure-Rust table scan (no artifacts required).
+    Native,
+    /// PJRT CPU client over `artifacts/`.
+    Pjrt { artifacts_dir: PathBuf },
+}
+
+impl EngineSpec {
+    /// Materialize the engine (call on the thread that will use it).
+    pub fn build(&self) -> Result<Box<dyn PackageEngine>> {
+        Ok(match self {
+            EngineSpec::Native => Box::new(NativePackageEngine),
+            EngineSpec::Pjrt { artifacts_dir } => {
+                Box::new(PjrtPackageEngine::new(artifacts_dir.clone())?)
+            }
+        })
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineSpec::Native => "native",
+            EngineSpec::Pjrt { .. } => "pjrt",
+        }
+    }
+}
+
+/// The real PJRT-backed engine.
+pub struct PjrtPackageEngine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<ArtifactKey, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtPackageEngine {
+    /// Create a CPU PJRT client reading artifacts from `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client init failed: {e:?}"))?;
+        Ok(PjrtPackageEngine {
+            client,
+            artifacts_dir: dir.into(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Platform string (for the CLI banner).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load(&self, key: ArtifactKey) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(key.file_name());
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            anyhow!(
+                "failed to load artifact {} (run `make artifacts`?): {e:?}",
+                path.display()
+            )
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("PJRT compile of {} failed: {e:?}", key.file_name()))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl PackageEngine for PjrtPackageEngine {
+    fn run(&self, key: ArtifactKey, pkg: &PackedPackage) -> Result<PackageHits> {
+        debug_assert_eq!(pkg.machines, key.machines);
+        debug_assert_eq!(pkg.states, key.states);
+        debug_assert_eq!(pkg.block, key.block);
+        let exe = self.load(key)?;
+        let bytes = xla::Literal::vec1(&pkg.bytes)
+            .reshape(&[STREAMS as i64, pkg.block as i64])
+            .context("reshape bytes")?;
+        let tables = xla::Literal::vec1(&pkg.tables)
+            .reshape(&[pkg.machines as i64, pkg.states as i64, 256])
+            .context("reshape tables")?;
+        let accepts = xla::Literal::vec1(&pkg.accepts)
+            .reshape(&[pkg.machines as i64, pkg.states as i64])
+            .context("reshape accepts")?;
+        let result = exe
+            .execute::<xla::Literal>(&[bytes, tables, accepts])
+            .map_err(|e| anyhow!("PJRT execute failed: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device→host transfer failed: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: (hits, counts)
+        let (hits_lit, counts_lit) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("expected 2-tuple output: {e:?}"))?;
+        let hits_dense: Vec<i32> = hits_lit
+            .to_vec()
+            .map_err(|e| anyhow!("hits to_vec: {e:?}"))?;
+        let counts: Vec<i32> = counts_lit
+            .to_vec()
+            .map_err(|e| anyhow!("counts to_vec: {e:?}"))?;
+        Ok(PackageHits {
+            hits: sparsify(&hits_dense, &counts, pkg.machines, pkg.block),
+            counts,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Convert the dense `[M, STREAMS, block]` hit tensor to sparse events,
+/// using the counts to skip empty (machine, stream) rows without scanning
+/// them.
+fn sparsify(
+    hits: &[i32],
+    counts: &[i32],
+    machines: usize,
+    block: usize,
+) -> Vec<(usize, usize, usize, u32)> {
+    let mut out = Vec::new();
+    for m in 0..machines {
+        for s in 0..STREAMS {
+            if counts[m * STREAMS + s] == 0 {
+                continue;
+            }
+            let base = (m * STREAMS + s) * block;
+            for (i, &v) in hits[base..base + block].iter().enumerate() {
+                if v > 0 {
+                    out.push((m, s, i, v as u32));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pure-Rust engine with identical semantics: steps the packed tables
+/// directly. Differential oracle for the PJRT path and fallback when no
+/// artifacts are present.
+pub struct NativePackageEngine;
+
+impl PackageEngine for NativePackageEngine {
+    fn run(&self, key: ArtifactKey, pkg: &PackedPackage) -> Result<PackageHits> {
+        debug_assert_eq!(pkg.block, key.block);
+        let (m_n, s_n, block) = (pkg.machines, pkg.states, pkg.block);
+        let mut hits = Vec::new();
+        let mut counts = vec![0i32; m_n * STREAMS];
+        for m in 0..m_n {
+            let table = &pkg.tables[m * s_n * 256..(m + 1) * s_n * 256];
+            let accept = &pkg.accepts[m * s_n..(m + 1) * s_n];
+            for s in 0..STREAMS {
+                let row = &pkg.bytes[s * block..(s + 1) * block];
+                let mut state = 1i32; // START
+                for (i, &b) in row.iter().enumerate() {
+                    state = table[(state as usize) * 256 + b as usize];
+                    if accept[state as usize] > 0 {
+                        hits.push((m, s, i, state as u32));
+                        counts[m * STREAMS + s] += 1;
+                    }
+                }
+            }
+        }
+        Ok(PackageHits { hits, counts })
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwcompiler::{compile_subgraph, ArtifactKey};
+    use crate::partition::{partition, PartitionMode};
+
+    fn packed_for(aql: &str, texts: &[&str], block: usize) -> (ArtifactKey, PackedPackage) {
+        let g = crate::optimizer::optimize(&crate::aql::compile(aql).unwrap());
+        let plan = partition(&g, PartitionMode::ExtractOnly);
+        let cfg = compile_subgraph(&plan.subgraphs[0]).unwrap();
+        let (tables, accepts) = cfg.pack_tables();
+        let mut bytes = vec![0i32; STREAMS * block];
+        for (s, t) in texts.iter().enumerate().take(STREAMS) {
+            for (i, b) in t.bytes().enumerate() {
+                bytes[s * block + i] = b as i32;
+            }
+        }
+        let key = cfg.artifact_key(block);
+        (
+            key,
+            PackedPackage {
+                bytes,
+                block,
+                tables: std::sync::Arc::new(tables),
+                accepts: std::sync::Arc::new(accepts),
+                machines: cfg.geometry.0,
+                states: cfg.geometry.1,
+            },
+        )
+    }
+
+    const Q: &str = "create view V as extract regex /ab+/ on d.text as m from Document d; \
+                     output view V;";
+
+    #[test]
+    fn native_engine_finds_ends() {
+        let (key, pkg) = packed_for(Q, &["xxabbby", "", "ab", "ba"], 4096);
+        let out = NativePackageEngine.run(key, &pkg).unwrap();
+        // stream 0: 'ab','abb','abbb' end-hits at byte idx 3,4,5; stream 2 at 1
+        let s0: Vec<usize> = out
+            .hits
+            .iter()
+            .filter(|(m, s, _, _)| *m == 0 && *s == 0)
+            .map(|(_, _, i, _)| *i)
+            .collect();
+        assert_eq!(s0, vec![3, 4, 5]);
+        let s2: Vec<usize> = out
+            .hits
+            .iter()
+            .filter(|(_, s, _, _)| *s == 2)
+            .map(|(_, _, i, _)| *i)
+            .collect();
+        assert_eq!(s2, vec![1]);
+        assert_eq!(out.counts[0], 3);
+        assert_eq!(out.counts[2], 1);
+        assert_eq!(out.counts[3], 0);
+    }
+
+    #[test]
+    fn native_engine_separator_isolation() {
+        // two docs packed in one stream with a NUL between them
+        let g = crate::optimizer::optimize(&crate::aql::compile(Q).unwrap());
+        let plan = partition(&g, PartitionMode::ExtractOnly);
+        let cfg = compile_subgraph(&plan.subgraphs[0]).unwrap();
+        let (tables, accepts) = cfg.pack_tables();
+        let block = 4096;
+        let mut bytes = vec![0i32; STREAMS * block];
+        let payload = b"ab\0ab";
+        for (i, &b) in payload.iter().enumerate() {
+            bytes[i] = b as i32;
+        }
+        let pkg = PackedPackage {
+            bytes,
+            block,
+            tables: std::sync::Arc::new(tables),
+            accepts: std::sync::Arc::new(accepts),
+            machines: cfg.geometry.0,
+            states: cfg.geometry.1,
+        };
+        let out = NativePackageEngine
+            .run(cfg.artifact_key(block), &pkg)
+            .unwrap();
+        let ends: Vec<usize> = out.hits.iter().map(|(_, _, i, _)| *i).collect();
+        assert_eq!(ends, vec![1, 4]); // one hit per doc, none across the NUL
+    }
+
+    // PJRT round-trip tests live in rust/tests/pjrt_roundtrip.rs (they need
+    // the artifacts directory built by `make artifacts`).
+
+    #[test]
+    fn sparsify_respects_counts() {
+        let machines = 1;
+        let block = 4;
+        let hits = vec![0, 2, 0, 3, /* stream1 */ 9, 9, 9, 9, 0, 0, 0, 0, 0, 0, 0, 0];
+        // counts claim stream 1 is empty — sparsify must skip it entirely
+        let counts = vec![2, 0, 0, 0];
+        let out = sparsify(&hits, &counts, machines, block);
+        assert_eq!(out, vec![(0, 0, 1, 2), (0, 0, 3, 3)]);
+    }
+}

@@ -1,0 +1,76 @@
+//! Documents: the unit of work of the document-per-thread execution model.
+
+use std::sync::Arc;
+
+use super::tokenizer::{TokenIndex, Tokenizer};
+
+/// An input document. Text is reference-counted so worker threads, the
+/// communication thread, and result tuples can share it without copies —
+/// the document is the only variable-length structure that crosses the
+/// HW/SW interface (paper §3).
+#[derive(Debug, Clone)]
+pub struct Document {
+    /// Stable identifier (position in the corpus).
+    pub id: u64,
+    /// The document text. ASCII in our synthetic corpora; the engine treats
+    /// it as bytes with spans as byte offsets, like the paper's
+    /// "sequence of ASCII characters".
+    pub text: Arc<str>,
+}
+
+impl Document {
+    /// Create a document from owned text.
+    pub fn new(id: u64, text: impl Into<Arc<str>>) -> Self {
+        Document {
+            id,
+            text: text.into(),
+        }
+    }
+
+    /// Byte length.
+    pub fn len(&self) -> usize {
+        self.text.len()
+    }
+
+    /// True if the text is empty.
+    pub fn is_empty(&self) -> bool {
+        self.text.is_empty()
+    }
+
+    /// Tokenize with the standard tokenizer; cached per call site (the
+    /// executor caches one index per document evaluation).
+    pub fn token_index(&self) -> TokenIndex {
+        Tokenizer::standard().tokenize(&self.text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_len() {
+        let d = Document::new(7, "hello world");
+        assert_eq!(d.id, 7);
+        assert_eq!(d.len(), 11);
+        assert!(!d.is_empty());
+        assert!(Document::new(0, "").is_empty());
+    }
+
+    #[test]
+    fn shared_text_is_cheap() {
+        let d = Document::new(1, "abc".repeat(1000));
+        let d2 = d.clone();
+        assert!(Arc::ptr_eq(
+            &(d.text.clone() as Arc<str>),
+            &(d2.text.clone() as Arc<str>)
+        ));
+    }
+
+    #[test]
+    fn token_index_works() {
+        let d = Document::new(2, "Alpha beta, gamma.");
+        let idx = d.token_index();
+        assert_eq!(idx.token_count(), 5); // Alpha beta , gamma .
+    }
+}

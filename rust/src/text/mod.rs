@@ -1,0 +1,16 @@
+//! Text substrate: documents, spans, and the tokenizer.
+//!
+//! SystemT's central data structure is the *span* — a `[begin, end)` offset
+//! pair into the document text (§3 of the paper: "a span is composed of a
+//! start and an end offset, both of which are represented as 32-bit
+//! integers"). All extraction and relational operators produce and consume
+//! spans; the tokenizer provides the token index needed by token-distance
+//! predicates (`FollowsTok`) and token-based dictionary matching.
+
+pub mod document;
+pub mod span;
+pub mod tokenizer;
+
+pub use document::Document;
+pub use span::Span;
+pub use tokenizer::{Token, TokenIndex, Tokenizer};

@@ -1,0 +1,336 @@
+//! The span type and its interval algebra.
+
+use std::fmt;
+
+/// A half-open `[begin, end)` byte-offset interval into a document's text.
+///
+/// Offsets are `u32` exactly as in the paper ("both of which are represented
+/// as 32-bit integers"); documents are bounded to 4 GiB which is far beyond
+/// any realistic annotation unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Span {
+    pub begin: u32,
+    pub end: u32,
+}
+
+impl Span {
+    /// Construct a span; `begin <= end` is required.
+    #[inline]
+    pub fn new(begin: u32, end: u32) -> Self {
+        debug_assert!(begin <= end, "span begin {begin} > end {end}");
+        Span { begin, end }
+    }
+
+    /// Length in bytes.
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.end - self.begin
+    }
+
+    /// True if the span covers zero bytes.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.begin == self.end
+    }
+
+    /// The covered text.
+    #[inline]
+    pub fn text<'a>(&self, doc_text: &'a str) -> &'a str {
+        &doc_text[self.begin as usize..self.end as usize]
+    }
+
+    /// True if `self` and `other` share at least one byte.
+    #[inline]
+    pub fn overlaps(&self, other: &Span) -> bool {
+        self.begin < other.end && other.begin < self.end
+    }
+
+    /// True if `self` fully contains `other` (boundaries may coincide).
+    #[inline]
+    pub fn contains(&self, other: &Span) -> bool {
+        self.begin <= other.begin && other.end <= self.end
+    }
+
+    /// True if `other` starts after `self` ends, with a gap of
+    /// `min..=max` bytes — the AQL `Follows` predicate.
+    #[inline]
+    pub fn follows(&self, other: &Span, min: u32, max: u32) -> bool {
+        other.begin >= self.end && {
+            let gap = other.begin - self.end;
+            gap >= min && gap <= max
+        }
+    }
+
+    /// Smallest span covering both — the AQL `CombineSpans` function.
+    #[inline]
+    pub fn combine(&self, other: &Span) -> Span {
+        Span::new(self.begin.min(other.begin), self.end.max(other.end))
+    }
+
+    /// Intersection, if non-empty overlap exists.
+    pub fn intersect(&self, other: &Span) -> Option<Span> {
+        if self.overlaps(other) {
+            Some(Span::new(
+                self.begin.max(other.begin),
+                self.end.min(other.end),
+            ))
+        } else {
+            None
+        }
+    }
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}, {})", self.begin, self.end)
+    }
+}
+
+/// Consolidation policies — SystemT's `consolidate on ... using '...'`.
+///
+/// Consolidation removes redundant overlapping annotations; it is one of the
+/// relational operators the paper offloads to hardware.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConsolidatePolicy {
+    /// Discard spans contained inside another span (keep the longest).
+    ContainedWithin,
+    /// Keep only spans NOT containing another span (keep the shortest).
+    NotContainedWithin,
+    /// Collapse exact duplicates.
+    ExactMatch,
+    /// Greedy left-to-right non-overlap: sort by begin, keep a span if it
+    /// does not overlap the previously kept one.
+    LeftToRight,
+}
+
+impl ConsolidatePolicy {
+    /// Parse the AQL policy-name string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ContainedWithin" => Some(Self::ContainedWithin),
+            "NotContainedWithin" => Some(Self::NotContainedWithin),
+            "ExactMatch" => Some(Self::ExactMatch),
+            "LeftToRight" => Some(Self::LeftToRight),
+            _ => None,
+        }
+    }
+
+    /// Canonical AQL name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::ContainedWithin => "ContainedWithin",
+            Self::NotContainedWithin => "NotContainedWithin",
+            Self::ExactMatch => "ExactMatch",
+            Self::LeftToRight => "LeftToRight",
+        }
+    }
+}
+
+/// Consolidate a set of spans under `policy`. Used by both the software
+/// operator and the accelerator's relational post-stage; kept here so the
+/// two share one implementation (and one set of tests).
+pub fn consolidate(spans: &[Span], policy: ConsolidatePolicy) -> Vec<Span> {
+    let mut sorted: Vec<Span> = spans.to_vec();
+    // Order: by begin asc, then end DESC so containers precede containees.
+    sorted.sort_by(|a, b| a.begin.cmp(&b.begin).then(b.end.cmp(&a.end)));
+    match policy {
+        ConsolidatePolicy::ExactMatch => {
+            sorted.dedup();
+            sorted
+        }
+        ConsolidatePolicy::ContainedWithin => {
+            // Under (begin asc, end desc) order every kept span has
+            // begin ≤ s.begin, so s is contained in some kept span iff the
+            // running max end ≥ s.end; exact duplicates fall out the same
+            // way. Single O(n) pass (this operator runs on the hot path of
+            // every entity query).
+            let mut out: Vec<Span> = Vec::new();
+            let mut max_end: Option<u32> = None;
+            for s in sorted {
+                match max_end {
+                    Some(me) if me >= s.end => {} // contained or duplicate
+                    _ => {
+                        out.push(s);
+                        max_end = Some(s.end);
+                    }
+                }
+            }
+            out
+        }
+        ConsolidatePolicy::NotContainedWithin => {
+            let mut out = Vec::new();
+            for (i, s) in sorted.iter().enumerate() {
+                let contains_other = sorted
+                    .iter()
+                    .enumerate()
+                    .any(|(j, t)| i != j && s.contains(t) && s != t);
+                if !contains_other && out.last() != Some(s) {
+                    out.push(*s);
+                }
+            }
+            out
+        }
+        ConsolidatePolicy::LeftToRight => {
+            let mut out: Vec<Span> = Vec::new();
+            for s in sorted {
+                match out.last() {
+                    Some(last) if last.overlaps(&s) => {}
+                    _ => out.push(s),
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(b: u32, e: u32) -> Span {
+        Span::new(b, e)
+    }
+
+    #[test]
+    fn len_and_empty() {
+        assert_eq!(s(3, 7).len(), 4);
+        assert!(s(5, 5).is_empty());
+        assert!(!s(5, 6).is_empty());
+    }
+
+    #[test]
+    fn overlap_cases() {
+        assert!(s(0, 5).overlaps(&s(4, 9)));
+        assert!(s(4, 9).overlaps(&s(0, 5)));
+        assert!(!s(0, 5).overlaps(&s(5, 9))); // touching is not overlap
+        assert!(!s(0, 5).overlaps(&s(7, 9)));
+        assert!(s(2, 3).overlaps(&s(0, 10)));
+    }
+
+    #[test]
+    fn contains_cases() {
+        assert!(s(0, 10).contains(&s(3, 7)));
+        assert!(s(0, 10).contains(&s(0, 10)));
+        assert!(!s(3, 7).contains(&s(0, 10)));
+        assert!(!s(0, 5).contains(&s(4, 6)));
+    }
+
+    #[test]
+    fn follows_gap() {
+        assert!(s(0, 5).follows(&s(5, 8), 0, 0));
+        assert!(s(0, 5).follows(&s(7, 8), 0, 5));
+        assert!(!s(0, 5).follows(&s(7, 8), 0, 1));
+        assert!(!s(0, 5).follows(&s(3, 8), 0, 100)); // overlapping: not follows
+        assert!(!s(5, 8).follows(&s(0, 5), 0, 100)); // order matters
+    }
+
+    #[test]
+    fn combine_covers() {
+        assert_eq!(s(2, 5).combine(&s(7, 9)), s(2, 9));
+        assert_eq!(s(7, 9).combine(&s(2, 5)), s(2, 9));
+    }
+
+    #[test]
+    fn intersect_cases() {
+        assert_eq!(s(0, 5).intersect(&s(3, 9)), Some(s(3, 5)));
+        assert_eq!(s(0, 5).intersect(&s(5, 9)), None);
+    }
+
+    #[test]
+    fn text_slicing() {
+        let t = "hello world";
+        assert_eq!(s(6, 11).text(t), "world");
+    }
+
+    #[test]
+    fn consolidate_contained_within() {
+        let spans = [s(0, 10), s(2, 5), s(12, 14), s(0, 10)];
+        let out = consolidate(&spans, ConsolidatePolicy::ContainedWithin);
+        assert_eq!(out, vec![s(0, 10), s(12, 14)]);
+    }
+
+    #[test]
+    fn consolidate_not_contained_within() {
+        let spans = [s(0, 10), s(2, 5), s(12, 14)];
+        let out = consolidate(&spans, ConsolidatePolicy::NotContainedWithin);
+        assert_eq!(out, vec![s(2, 5), s(12, 14)]);
+    }
+
+    #[test]
+    fn consolidate_exact() {
+        let spans = [s(1, 4), s(1, 4), s(2, 4)];
+        let out = consolidate(&spans, ConsolidatePolicy::ExactMatch);
+        assert_eq!(out, vec![s(1, 4), s(2, 4)]);
+    }
+
+    #[test]
+    fn consolidate_left_to_right() {
+        let spans = [s(0, 5), s(3, 8), s(6, 9)];
+        let out = consolidate(&spans, ConsolidatePolicy::LeftToRight);
+        assert_eq!(out, vec![s(0, 5), s(6, 9)]);
+    }
+
+    #[test]
+    fn consolidate_empty() {
+        assert!(consolidate(&[], ConsolidatePolicy::ContainedWithin).is_empty());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            ConsolidatePolicy::ContainedWithin,
+            ConsolidatePolicy::NotContainedWithin,
+            ConsolidatePolicy::ExactMatch,
+            ConsolidatePolicy::LeftToRight,
+        ] {
+            assert_eq!(ConsolidatePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(ConsolidatePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn prop_consolidate_subset_and_sorted() {
+        use crate::util::{prop, Prng};
+        prop::check(
+            77,
+            200,
+            |r: &mut Prng| {
+                let n = r.below(20);
+                (0..n)
+                    .map(|_| {
+                        let b = r.below(50) as u32;
+                        let l = r.below(10) as u32 + 1;
+                        (b as usize, (b + l) as usize)
+                    })
+                    .collect::<Vec<(usize, usize)>>()
+            },
+            |pairs| {
+                let spans: Vec<Span> = pairs
+                    .iter()
+                    .map(|&(b, e)| s(b as u32, e as u32))
+                    .collect();
+                for policy in [
+                    ConsolidatePolicy::ContainedWithin,
+                    ConsolidatePolicy::NotContainedWithin,
+                    ConsolidatePolicy::ExactMatch,
+                    ConsolidatePolicy::LeftToRight,
+                ] {
+                    let out = consolidate(&spans, policy);
+                    // output ⊆ input
+                    if !out.iter().all(|o| spans.contains(o)) {
+                        return false;
+                    }
+                    // sorted by begin
+                    if !out.windows(2).all(|w| w[0].begin <= w[1].begin) {
+                        return false;
+                    }
+                    // idempotent
+                    if consolidate(&out, policy) != out {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}

@@ -1,0 +1,276 @@
+//! The standard tokenizer and the per-document token index.
+//!
+//! SystemT's extraction primitives are token-aware: dictionaries match
+//! whole-token phrases and the `FollowsTok` predicate measures distance in
+//! tokens. The tokenizer here mirrors SystemT's "standard" tokenizer on
+//! ASCII text: maximal alphanumeric runs are word tokens, every other
+//! non-whitespace character is a single-character token, whitespace
+//! separates tokens.
+
+use super::span::Span;
+
+/// Kind of a token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// `[A-Za-z0-9_]+` run.
+    Word,
+    /// Single non-word, non-whitespace character.
+    Punct,
+}
+
+/// One token: a span plus its kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Token {
+    pub span: Span,
+    pub kind: TokenKind,
+}
+
+/// The tokenizer. Only the standard configuration is currently exposed;
+/// the struct exists so alternate tokenizers (e.g. whitespace-only) can be
+/// added without touching call sites.
+#[derive(Debug, Clone, Copy)]
+pub struct Tokenizer {
+    split_punct: bool,
+}
+
+#[inline]
+pub(crate) fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+impl Tokenizer {
+    /// SystemT-like standard tokenizer.
+    pub fn standard() -> Self {
+        Tokenizer { split_punct: true }
+    }
+
+    /// Whitespace-only tokenizer (punctuation glued to words).
+    pub fn whitespace() -> Self {
+        Tokenizer { split_punct: false }
+    }
+
+    /// Tokenize `text` into a [`TokenIndex`].
+    pub fn tokenize(&self, text: &str) -> TokenIndex {
+        let bytes = text.as_bytes();
+        let mut tokens = Vec::with_capacity(bytes.len() / 5 + 1);
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let b = bytes[i];
+            if b.is_ascii_whitespace() {
+                i += 1;
+            } else if is_word_byte(b) || !self.split_punct {
+                let start = i;
+                if self.split_punct {
+                    while i < bytes.len() && is_word_byte(bytes[i]) {
+                        i += 1;
+                    }
+                } else {
+                    while i < bytes.len() && !bytes[i].is_ascii_whitespace() {
+                        i += 1;
+                    }
+                }
+                tokens.push(Token {
+                    span: Span::new(start as u32, i as u32),
+                    kind: TokenKind::Word,
+                });
+            } else {
+                tokens.push(Token {
+                    span: Span::new(i as u32, (i + 1) as u32),
+                    kind: TokenKind::Punct,
+                });
+                i += 1;
+            }
+        }
+        TokenIndex { tokens }
+    }
+}
+
+/// Sorted token list for one document, with offset→token lookups used by
+/// token-distance predicates and token-boundary checks.
+#[derive(Debug, Clone, Default)]
+pub struct TokenIndex {
+    tokens: Vec<Token>,
+}
+
+impl TokenIndex {
+    /// All tokens in document order.
+    pub fn tokens(&self) -> &[Token] {
+        &self.tokens
+    }
+
+    /// Number of tokens.
+    pub fn token_count(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Index of the first token whose span begins at or after `offset`.
+    pub fn first_token_at_or_after(&self, offset: u32) -> usize {
+        self.tokens.partition_point(|t| t.span.begin < offset)
+    }
+
+    /// Index of the last token whose span ends at or before `offset`,
+    /// or `None` if no token ends by `offset`.
+    pub fn last_token_ending_by(&self, offset: u32) -> Option<usize> {
+        let n = self.tokens.partition_point(|t| t.span.end <= offset);
+        n.checked_sub(1)
+    }
+
+    /// Number of whole tokens strictly between byte offsets `a_end` and
+    /// `b_begin` — the distance used by `FollowsTok(a, b, min, max)`.
+    pub fn tokens_between(&self, a_end: u32, b_begin: u32) -> usize {
+        if b_begin <= a_end {
+            return 0;
+        }
+        let lo = self.first_token_at_or_after(a_end);
+        let hi = self.tokens.partition_point(|t| t.span.end <= b_begin);
+        hi.saturating_sub(lo)
+    }
+
+    /// True if `[begin, end)` lies exactly on token boundaries: `begin`
+    /// starts a token and `end` ends a token. Token-based dictionary
+    /// matches must satisfy this.
+    pub fn on_token_boundaries(&self, begin: u32, end: u32) -> bool {
+        let starts = self
+            .tokens
+            .binary_search_by(|t| t.span.begin.cmp(&begin))
+            .is_ok();
+        let ends = self
+            .tokens
+            .binary_search_by(|t| {
+                // search by end; ends are non-decreasing for our tokenizers
+                t.span.end.cmp(&end)
+            })
+            .is_ok();
+        starts && ends
+    }
+
+    /// Span covering tokens `[from, to)` (token indices).
+    pub fn cover(&self, from: usize, to: usize) -> Option<Span> {
+        if from >= to || to > self.tokens.len() {
+            return None;
+        }
+        Some(Span::new(
+            self.tokens[from].span.begin,
+            self.tokens[to - 1].span.end,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(text: &str) -> Vec<(String, TokenKind)> {
+        Tokenizer::standard()
+            .tokenize(text)
+            .tokens()
+            .iter()
+            .map(|t| (t.span.text(text).to_string(), t.kind))
+            .collect()
+    }
+
+    #[test]
+    fn basic_words() {
+        let t = toks("hello world");
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, "hello");
+        assert_eq!(t[1].0, "world");
+    }
+
+    #[test]
+    fn punct_split() {
+        let t = toks("Hi, there!");
+        let words: Vec<&str> = t.iter().map(|(s, _)| s.as_str()).collect();
+        assert_eq!(words, vec!["Hi", ",", "there", "!"]);
+        assert_eq!(t[1].1, TokenKind::Punct);
+    }
+
+    #[test]
+    fn digits_and_underscore_are_words() {
+        let t = toks("foo_bar 123 a1b2");
+        let words: Vec<&str> = t.iter().map(|(s, _)| s.as_str()).collect();
+        assert_eq!(words, vec!["foo_bar", "123", "a1b2"]);
+    }
+
+    #[test]
+    fn empty_and_whitespace() {
+        assert_eq!(toks("").len(), 0);
+        assert_eq!(toks("   \t\n ").len(), 0);
+    }
+
+    #[test]
+    fn whitespace_tokenizer_keeps_punct() {
+        let idx = Tokenizer::whitespace().tokenize("Hi, there!");
+        let words: Vec<&str> = idx
+            .tokens()
+            .iter()
+            .map(|t| t.span.text("Hi, there!"))
+            .collect();
+        assert_eq!(words, vec!["Hi,", "there!"]);
+    }
+
+    #[test]
+    fn tokens_between_counts() {
+        let text = "a b c d e";
+        let idx = Tokenizer::standard().tokenize(text);
+        // span of "a" is [0,1), span of "e" is [8,9)
+        assert_eq!(idx.tokens_between(1, 8), 3); // b c d
+        assert_eq!(idx.tokens_between(1, 2), 0);
+        assert_eq!(idx.tokens_between(1, 4), 1); // b
+        assert_eq!(idx.tokens_between(5, 5), 0);
+    }
+
+    #[test]
+    fn token_boundaries() {
+        let text = "alpha beta";
+        let idx = Tokenizer::standard().tokenize(text);
+        assert!(idx.on_token_boundaries(0, 5));
+        assert!(idx.on_token_boundaries(6, 10));
+        assert!(idx.on_token_boundaries(0, 10)); // spans multiple tokens
+        assert!(!idx.on_token_boundaries(1, 5));
+        assert!(!idx.on_token_boundaries(0, 4));
+    }
+
+    #[test]
+    fn cover_range() {
+        let text = "a bb ccc";
+        let idx = Tokenizer::standard().tokenize(text);
+        assert_eq!(idx.cover(0, 2), Some(Span::new(0, 4)));
+        assert_eq!(idx.cover(1, 2), Some(Span::new(2, 4)));
+        assert_eq!(idx.cover(2, 2), None);
+        assert_eq!(idx.cover(0, 9), None);
+    }
+
+    #[test]
+    fn prop_tokens_cover_only_nonspace_and_sorted() {
+        use crate::util::{prop, Prng};
+        prop::check(
+            31,
+            300,
+            |r: &mut Prng| prop::ascii_string(r, 120),
+            |s| {
+                let idx = Tokenizer::standard().tokenize(s);
+                let toks = idx.tokens();
+                // sorted, non-overlapping
+                for w in toks.windows(2) {
+                    if w[0].span.end > w[1].span.begin {
+                        return false;
+                    }
+                }
+                // each token non-empty, within bounds, no whitespace inside
+                for t in toks {
+                    if t.span.is_empty() || t.span.end as usize > s.len() {
+                        return false;
+                    }
+                    if t.span.text(s).bytes().any(|b| b.is_ascii_whitespace()) {
+                        return false;
+                    }
+                }
+                // every non-whitespace byte is covered by exactly one token
+                let covered: usize = toks.iter().map(|t| t.span.len() as usize).sum();
+                let nonspace = s.bytes().filter(|b| !b.is_ascii_whitespace()).count();
+                covered == nonspace
+            },
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Small shared utilities: a deterministic PRNG (no `rand` available in the
+//! offline vendor set), a minimal property-testing harness standing in for
+//! `proptest`, and misc helpers.
+
+pub mod prng;
+pub mod prop;
+
+pub use prng::Prng;
+
+/// Format a byte-throughput as a human-readable string (MB/s).
+pub fn fmt_mbps(bytes_per_sec: f64) -> String {
+    format!("{:8.1} MB/s", bytes_per_sec / 1.0e6)
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn fmt_mbps_shape() {
+        assert!(fmt_mbps(500.0e6).contains("500.0 MB/s"));
+    }
+}

@@ -1,0 +1,168 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! The offline vendor set has no `rand` crate, and determinism is a feature
+//! here anyway: corpora, property tests and benchmarks must be reproducible
+//! run-to-run so that EXPERIMENTS.md numbers can be regenerated.
+
+/// A xorshift64* generator. Not cryptographic; statistically fine for
+/// corpus synthesis and property testing.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Create a generator from a non-zero seed (zero is mapped to a fixed
+    /// odd constant; xorshift has an all-zero fixed point).
+    pub fn new(seed: u64) -> Self {
+        Prng {
+            state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi)` (half-open). `hi` must be > `lo`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform float in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniformly random element of a non-empty slice.
+    #[inline]
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Random lowercase ASCII letter.
+    #[inline]
+    pub fn lower(&mut self) -> char {
+        (b'a' + self.below(26) as u8) as char
+    }
+
+    /// Random ASCII digit.
+    #[inline]
+    pub fn digit(&mut self) -> char {
+        (b'0' + self.below(10) as u8) as char
+    }
+
+    /// Random printable ASCII byte (0x20..=0x7E).
+    #[inline]
+    pub fn printable(&mut self) -> u8 {
+        0x20 + self.below(0x5F) as u8
+    }
+
+    /// Random ASCII string of length `len` over the given alphabet.
+    pub fn string_over(&mut self, alphabet: &[u8], len: usize) -> String {
+        (0..len)
+            .map(|_| *self.pick(alphabet) as char)
+            .collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_ok() {
+        let mut p = Prng::new(0);
+        let v: Vec<u64> = (0..4).map(|_| p.next_u64()).collect();
+        assert!(v.iter().any(|&x| x != 0));
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut p = Prng::new(7);
+        for _ in 0..1000 {
+            let x = p.below(13);
+            assert!(x < 13);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut p = Prng::new(9);
+        for _ in 0..1000 {
+            let x = p.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut p = Prng::new(11);
+        for _ in 0..1000 {
+            let x = p.range(5, 10);
+            assert!((5..10).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(3);
+        let mut v: Vec<usize> = (0..32).collect();
+        p.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn distribution_roughly_uniform() {
+        let mut p = Prng::new(123);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            counts[p.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "bucket count {c} out of range");
+        }
+    }
+}

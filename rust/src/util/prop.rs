@@ -1,0 +1,199 @@
+//! Minimal property-testing harness.
+//!
+//! `proptest` is not in the offline vendor set, so this module provides the
+//! subset we need: run a property over many PRNG-generated cases, and on
+//! failure greedily shrink the input before reporting. Generators are plain
+//! closures over [`Prng`]; shrinking is type-directed via the [`Shrink`]
+//! trait.
+
+use super::prng::Prng;
+
+/// Number of cases per property unless overridden.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Types that can propose smaller versions of themselves for shrinking.
+pub trait Shrink: Sized + Clone {
+    /// Candidate strictly-smaller values, most aggressive first.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for String {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.chars().count();
+        if n == 0 {
+            return out;
+        }
+        // halves
+        let chars: Vec<char> = self.chars().collect();
+        out.push(chars[..n / 2].iter().collect());
+        out.push(chars[n / 2..].iter().collect());
+        // drop one char at a few positions
+        for i in [0, n / 2, n - 1] {
+            let mut c = chars.clone();
+            c.remove(i.min(n - 1));
+            out.push(c.into_iter().collect());
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        out.push(self[..n / 2].to_vec());
+        out.push(self[n / 2..].to_vec());
+        for i in [0, n / 2, n - 1] {
+            let mut v = self.clone();
+            v.remove(i.min(n - 1));
+            out.push(v);
+        }
+        // element-wise shrink of the first element
+        if let Some(shrunk) = self[0].shrink().into_iter().next() {
+            let mut v = self.clone();
+            v[0] = shrunk;
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` over `cases` inputs drawn from `gen`; on failure, shrink and
+/// panic with the minimal counterexample. `seed` keeps runs reproducible.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink + std::fmt::Debug,
+    G: FnMut(&mut Prng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Prng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_failure(input, &mut prop);
+            panic!(
+                "property failed (seed={seed}, case={case}); minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] with [`DEFAULT_CASES`].
+pub fn check_default<T, G, P>(seed: u64, gen: G, prop: P)
+where
+    T: Shrink + std::fmt::Debug,
+    G: FnMut(&mut Prng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    check(seed, DEFAULT_CASES, gen, prop)
+}
+
+fn shrink_failure<T: Shrink, P: FnMut(&T) -> bool>(mut worst: T, prop: &mut P) -> T {
+    // Greedy descent: keep taking the first still-failing shrink candidate.
+    let mut budget = 1000usize;
+    'outer: while budget > 0 {
+        for cand in worst.shrink() {
+            budget -= 1;
+            if !prop(&cand) {
+                worst = cand;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    worst
+}
+
+/// Generate a random ASCII string (printable subset) of length `< max_len`.
+pub fn ascii_string(rng: &mut Prng, max_len: usize) -> String {
+    let len = rng.below(max_len.max(1));
+    (0..len).map(|_| rng.printable() as char).collect()
+}
+
+/// Generate a random lowercase word of length in `[1, max_len]`.
+pub fn word(rng: &mut Prng, max_len: usize) -> String {
+    let len = rng.range(1, max_len + 1);
+    (0..len).map(|_| rng.lower()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 64, |r| ascii_string(r, 32), |s| s.len() < 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        // Property "no 'x' anywhere" fails and should shrink towards a short
+        // string still containing 'x'.
+        check(
+            2,
+            512,
+            |r| {
+                let mut s = ascii_string(r, 16);
+                if r.chance(0.2) {
+                    s.push('x');
+                }
+                s
+            },
+            |s| !s.contains('x'),
+        );
+    }
+
+    #[test]
+    fn shrink_string_smaller() {
+        let s = "hello".to_string();
+        for c in s.shrink() {
+            assert!(c.len() < s.len());
+        }
+    }
+
+    #[test]
+    fn shrink_usize_terminates() {
+        let mut v = 1000usize;
+        let mut steps = 0;
+        while let Some(next) = v.shrink().into_iter().next() {
+            v = next;
+            steps += 1;
+            assert!(steps < 10_000);
+            if v == 0 {
+                break;
+            }
+        }
+        assert_eq!(v, 0);
+    }
+}

@@ -1,0 +1,264 @@
+//! End-to-end integration: every built-in query × every offload scenario ×
+//! both package engines must produce identical annotations to the pure
+//! software path, on realistic corpora — plus failure-injection and
+//! concurrency tests of the full engine.
+
+use boost::coordinator::{Engine, EngineConfig};
+use boost::corpus::CorpusSpec;
+use boost::partition::PartitionMode;
+use boost::runtime::EngineSpec;
+use boost::text::Document;
+
+fn doc_rows(engine: &Engine, doc: &Document) -> Vec<String> {
+    let mut rows: Vec<String> = engine
+        .run_doc(doc)
+        .views
+        .iter()
+        .flat_map(|(v, rows)| rows.iter().map(move |t| format!("{v}:{t:?}")))
+        .collect();
+    rows.sort();
+    rows
+}
+
+#[test]
+fn all_queries_all_modes_equal_software_native() {
+    let corpus = CorpusSpec::news(10, 1024).generate();
+    for q in boost::queries::all() {
+        let sw = Engine::compile_aql(&q.aql).unwrap();
+        for mode in [
+            PartitionMode::ExtractOnly,
+            PartitionMode::SingleSubgraph,
+            PartitionMode::MultiSubgraph,
+        ] {
+            let hw = Engine::with_config(
+                &q.aql,
+                EngineConfig::accelerated(mode, EngineSpec::Native),
+            )
+            .unwrap();
+            for d in &corpus.docs {
+                assert_eq!(
+                    doc_rows(&sw, d),
+                    doc_rows(&hw, d),
+                    "query {} mode {:?} doc {}",
+                    q.name,
+                    mode,
+                    d.id
+                );
+            }
+            hw.shutdown();
+        }
+    }
+}
+
+#[test]
+fn t1_pjrt_equals_software_on_corpus() {
+    if !std::path::Path::new("artifacts/dfa_m8_s256_b16384.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let q = boost::queries::builtin("t1").unwrap();
+    let corpus = CorpusSpec::news(12, 2048).generate();
+    let sw = Engine::compile_aql(&q.aql).unwrap();
+    let hw = Engine::with_config(
+        &q.aql,
+        EngineConfig::accelerated(
+            PartitionMode::MultiSubgraph,
+            EngineSpec::Pjrt {
+                artifacts_dir: "artifacts".into(),
+            },
+        ),
+    )
+    .unwrap();
+    let a = sw.run_corpus(&corpus, 1);
+    let b = hw.run_corpus(&corpus, 4);
+    assert_eq!(a.tuples, b.tuples);
+    let snap = hw.accel_snapshot().unwrap();
+    assert!(snap.packages > 0);
+    hw.shutdown();
+}
+
+#[test]
+fn tweets_and_logs_corpora_run_clean() {
+    for (q, corpus) in [
+        ("t3", CorpusSpec::tweets(40, 256).generate()),
+        ("t2", CorpusSpec::logs(40, 512).generate()),
+    ] {
+        let q = boost::queries::builtin(q).unwrap();
+        let sw = Engine::compile_aql(&q.aql).unwrap();
+        let hw = Engine::with_config(
+            &q.aql,
+            EngineConfig::accelerated(PartitionMode::ExtractOnly, EngineSpec::Native),
+        )
+        .unwrap();
+        let a = sw.run_corpus(&corpus, 2);
+        let b = hw.run_corpus(&corpus, 2);
+        assert_eq!(a.tuples, b.tuples, "{}", q.name);
+        hw.shutdown();
+    }
+}
+
+#[test]
+fn engine_failure_missing_artifacts_surfaces_as_panic_not_hang() {
+    // PJRT engine pointed at a bogus directory: the communication thread
+    // fails the submissions; the worker observes a panic (not a deadlock).
+    let q = boost::queries::builtin("t1").unwrap();
+    let hw = Engine::with_config(
+        &q.aql,
+        EngineConfig::accelerated(
+            PartitionMode::ExtractOnly,
+            EngineSpec::Pjrt {
+                artifacts_dir: "/nonexistent/path".into(),
+            },
+        ),
+    )
+    .unwrap();
+    let corpus = CorpusSpec::news(2, 256).generate();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        hw.run_doc(&corpus.docs[0]);
+    }));
+    assert!(res.is_err(), "expected an accelerator error panic");
+    hw.shutdown();
+}
+
+#[test]
+fn unoptimized_engine_matches_optimized() {
+    let q = boost::queries::builtin("t4").unwrap();
+    let corpus = CorpusSpec::news(8, 1024).generate();
+    let opt = Engine::compile_aql(&q.aql).unwrap();
+    let mut cfg = EngineConfig::software();
+    cfg.optimize = false;
+    let naive = Engine::with_config(&q.aql, cfg).unwrap();
+    for d in &corpus.docs {
+        assert_eq!(doc_rows(&opt, d), doc_rows(&naive, d), "doc {}", d.id);
+    }
+}
+
+#[test]
+fn concurrent_mixed_corpus_stress() {
+    // 8 oversubscribed workers × accelerated engine × mixed doc sizes:
+    // exercises combining, package splits, and the wake-up protocol.
+    let q = boost::queries::builtin("t1").unwrap();
+    let hw = Engine::with_config(
+        &q.aql,
+        EngineConfig::accelerated(PartitionMode::SingleSubgraph, EngineSpec::Native),
+    )
+    .unwrap();
+    let sw = Engine::compile_aql(&q.aql).unwrap();
+    let mut docs = Vec::new();
+    for (i, size) in [128usize, 2048, 256, 4096, 512]
+        .iter()
+        .cycle()
+        .take(60)
+        .enumerate()
+    {
+        let d = CorpusSpec::news(1, *size)
+            .with_seed(i as u64 + 1)
+            .generate()
+            .docs
+            .remove(0);
+        // document ids must be unique per run (the accelerator runner
+        // caches per (doc id, subgraph))
+        docs.push(Document::new(i as u64, d.text.to_string()));
+    }
+    let corpus = boost::corpus::Corpus { docs };
+    let a = hw.run_corpus(&corpus, 8);
+    let b = sw.run_corpus(&corpus, 2);
+    assert_eq!(a.tuples, b.tuples);
+    let snap = hw.accel_snapshot().unwrap();
+    assert_eq!(snap.docs as usize, corpus.len());
+    hw.shutdown();
+}
+
+#[test]
+fn aql_from_file_flow() {
+    // mirrors the CLI --aql path: write a query file, compile, run
+    let dir = std::env::temp_dir().join("boost_e2e_aql");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("q.aql");
+    std::fs::write(
+        &path,
+        "create view Caps as extract regex /[A-Z][a-z]+/ on d.text as w from Document d;\n\
+         output view Caps;\n",
+    )
+    .unwrap();
+    let aql = std::fs::read_to_string(&path).unwrap();
+    let engine = Engine::compile_aql(&aql).unwrap();
+    let out = engine.run_doc(&Document::new(0, "Alice met Bob"));
+    assert_eq!(out.views["Caps"].len(), 2); // Alice, Bob
+}
+
+#[test]
+fn minus_and_block_operators() {
+    // minus: capitalized words that are NOT org names; block: clusters of
+    // number mentions.
+    let aql = r#"
+        create dictionary Orgs as ('IBM', 'Globex');
+        create view Caps as
+          extract regex /[A-Z][a-z]*/ on d.text as w from Document d;
+        create view OrgM as
+          extract dictionary 'Orgs' on d.text as w from Document d;
+        create view NonOrgCaps as
+          (select c.w as w from Caps c) minus (select o.w as w from OrgM o);
+        create view Num as
+          extract regex /\d+/ on d.text as n from Document d;
+        create view NumCluster as
+          block n.n with gap 4 min 2 from Num n;
+        output view NonOrgCaps;
+        output view NumCluster;
+    "#;
+    let engine = Engine::compile_aql(aql).unwrap();
+    let text = "Alice at IBM saw 10 11 12 and then 99 alone; Globex and Bob.";
+    let out = engine.run_doc(&Document::new(0, text));
+    let caps: Vec<&str> = out.views["NonOrgCaps"]
+        .iter()
+        .map(|t| t[0].as_span().text(text))
+        .collect();
+    assert!(caps.contains(&"Alice") && caps.contains(&"Bob"));
+    assert!(!caps.contains(&"IBM") && !caps.contains(&"Globex"));
+    // 10 11 12 cluster (gaps of 1 char); 99 is alone (min 2)
+    let clusters = &out.views["NumCluster"];
+    assert_eq!(clusters.len(), 1, "{clusters:?}");
+    assert_eq!(clusters[0][0].as_span().text(text), "10 11 12");
+
+    // accelerated path must agree (both ops are hw-supported)
+    let hw = Engine::with_config(
+        aql,
+        EngineConfig::accelerated(PartitionMode::MultiSubgraph, EngineSpec::Native),
+    )
+    .unwrap();
+    assert_eq!(
+        doc_rows(&engine, &Document::new(0, text)),
+        doc_rows(&hw, &Document::new(0, text))
+    );
+    hw.shutdown();
+}
+
+#[test]
+fn dictionary_from_file() {
+    let dir = std::env::temp_dir().join("boost_dict_file");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("orgs.dict");
+    std::fs::write(&path, "# comment line\nIBM\nIBM Research\n\n  Globex  \n").unwrap();
+    let aql = format!(
+        "create dictionary Orgs from file '{}';\n\
+         create view O as extract dictionary 'Orgs' on d.text as m from Document d;\n\
+         output view O;",
+        path.display()
+    );
+    let engine = Engine::compile_aql(&aql).unwrap();
+    let text = "Globex bought IBM Research.";
+    let out = engine.run_doc(&Document::new(0, text));
+    let hits: Vec<&str> = out.views["O"]
+        .iter()
+        .map(|t| t[0].as_span().text(text))
+        .collect();
+    assert!(hits.contains(&"Globex"));
+    assert!(hits.contains(&"IBM Research"));
+    // missing file is a clean error
+    assert!(Engine::compile_aql(
+        "create dictionary D from file '/no/such/file'; \
+         create view V as extract dictionary 'D' on d.text as m from Document d; \
+         output view V;"
+    )
+    .is_err());
+}

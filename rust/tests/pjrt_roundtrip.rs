@@ -1,0 +1,175 @@
+//! Integration: the full AOT bridge — python-lowered HLO artifacts loaded
+//! and executed through PJRT, differentially tested against the pure-Rust
+//! engine and against the software matchers.
+//!
+//! Requires `artifacts/` (run `make artifacts` first). Tests are skipped
+//! gracefully if the directory is missing so `cargo test` works in a fresh
+//! checkout, but CI/Make always builds artifacts first.
+
+use std::sync::Arc;
+
+use boost::accel::{AccelOptions, AccelService, AccelSubgraphRunner};
+use boost::exec::{Executor, Profiler};
+use boost::hwcompiler::{compile_subgraph, AccelConfig, STREAMS};
+use boost::partition::{partition, PartitionMode};
+use boost::runtime::{
+    EngineSpec, NativePackageEngine, PackageEngine, PackedPackage, PjrtPackageEngine,
+};
+use boost::text::Document;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("dfa_m4_s64_b4096.hlo.txt").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+const QUERY: &str = r#"
+    create dictionary Orgs as ('IBM', 'IBM Research', 'Columbia University');
+    create view Org as
+      extract dictionary 'Orgs' on d.text as match from Document d;
+    create view Person as
+      extract regex /[A-Z][a-z]+ [A-Z][a-z]+/ on d.text as name from Document d;
+    create view PersonOrg as
+      select p.name as person, o.match as org,
+             CombineSpans(p.name, o.match) as ctx
+      from Person p, Org o
+      where FollowsTok(p.name, o.match, 0, 4)
+      consolidate on ctx using 'ContainedWithin';
+    output view PersonOrg;
+"#;
+
+fn config() -> AccelConfig {
+    let g = boost::optimizer::optimize(&boost::aql::compile(QUERY).unwrap());
+    let plan = partition(&g, PartitionMode::SingleSubgraph);
+    compile_subgraph(&plan.subgraphs[0]).unwrap()
+}
+
+#[test]
+fn pjrt_equals_native_engine_on_packages() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = config();
+    let (tables, accepts) = cfg.pack_tables();
+    let pjrt = PjrtPackageEngine::new(&dir).expect("pjrt client");
+    let native = NativePackageEngine;
+
+    let texts = [
+        "Laura Chiticariu works at IBM Research in Almaden.",
+        "Eva Sitaridi is at Columbia University; Peter Hofstee visits IBM.",
+        "nothing relevant here at all",
+        "",
+    ];
+    let block = 4096usize;
+    let mut bytes = vec![0i32; STREAMS * block];
+    for (s, t) in texts.iter().enumerate() {
+        for (i, b) in t.bytes().enumerate() {
+            bytes[s * block + i] = b as i32;
+        }
+    }
+    let pkg = PackedPackage {
+        bytes,
+        block,
+        tables: std::sync::Arc::new(tables),
+        accepts: std::sync::Arc::new(accepts),
+        machines: cfg.geometry.0,
+        states: cfg.geometry.1,
+    };
+    let key = cfg.artifact_key(block);
+    let a = pjrt.run(key, &pkg).expect("pjrt run");
+    let b = native.run(key, &pkg).expect("native run");
+    assert_eq!(a.hits, b.hits, "sparse hits must match exactly");
+    assert_eq!(a.counts, b.counts);
+    assert!(!a.hits.is_empty(), "expected some hits on this text");
+    // executable cache: second run must reuse the compiled artifact
+    let _ = pjrt.run(key, &pkg).unwrap();
+    assert_eq!(pjrt.cached_executables(), 1);
+}
+
+#[test]
+fn pjrt_backed_service_equals_pure_software() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = boost::optimizer::optimize(&boost::aql::compile(QUERY).unwrap());
+    let plan = partition(&g, PartitionMode::SingleSubgraph);
+    let configs: Vec<AccelConfig> = plan
+        .subgraphs
+        .iter()
+        .map(|s| compile_subgraph(s).unwrap())
+        .collect();
+    let service = AccelService::start(
+        configs,
+        EngineSpec::Pjrt {
+            artifacts_dir: dir,
+        },
+        AccelOptions::default(),
+    );
+    let accel_exec = Executor::new(
+        Arc::new(plan.supergraph.clone()),
+        Arc::new(Profiler::disabled()),
+    )
+    .with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(service.clone())));
+    // pure-software reference on the ORIGINAL graph
+    let sw_exec = Executor::new(Arc::new(g.clone()), Arc::new(Profiler::disabled()));
+
+    let texts = [
+        "Laura Chiticariu works at IBM Research in Almaden.",
+        "Fred Reiss and Huaiyu Zhu are at IBM Research today.",
+        "Eva Sitaridi is at Columbia University. Kubilay Atasu visits IBM.",
+        "no entities in this sentence",
+    ];
+    for (i, t) in texts.iter().enumerate() {
+        let doc = Document::new(i as u64, *t);
+        let mut a: Vec<String> = accel_exec.run_doc(&doc).views["PersonOrg"]
+            .iter()
+            .map(|t| format!("{t:?}"))
+            .collect();
+        let mut b: Vec<String> = sw_exec.run_doc(&doc).views["PersonOrg"]
+            .iter()
+            .map(|t| format!("{t:?}"))
+            .collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "text {t:?}");
+    }
+    let snap = service.metrics().snapshot();
+    assert!(snap.packages > 0 && snap.docs >= 4);
+    service.shutdown();
+}
+
+#[test]
+fn all_artifact_variants_load_and_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtPackageEngine::new(&dir).expect("pjrt client");
+    for &(machines, states) in boost::hwcompiler::GEOMETRIES {
+        for &block in boost::hwcompiler::BLOCK_SIZES {
+            let key = boost::hwcompiler::ArtifactKey {
+                machines,
+                states,
+                block,
+            };
+            // trivial tables: everything loops on START, nothing accepts
+            let mut tables = vec![0i32; machines * states * 256];
+            for m in 0..machines {
+                for s in 0..states {
+                    for b in 0..256 {
+                        tables[(m * states + s) * 256 + b] = 1;
+                    }
+                }
+            }
+            let pkg = PackedPackage {
+                bytes: vec![7i32; STREAMS * block],
+                block,
+                tables: std::sync::Arc::new(tables),
+                accepts: std::sync::Arc::new(vec![0i32; machines * states]),
+                machines,
+                states,
+            };
+            let out = pjrt
+                .run(key, &pkg)
+                .unwrap_or_else(|e| panic!("variant {key:?} failed: {e}"));
+            assert!(out.hits.is_empty(), "variant {key:?} produced spurious hits");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Robustness: no input may panic the compiler chain — malformed AQL,
+//! hostile regex patterns, adversarial documents. Errors must be returned,
+//! never thrown.
+
+use boost::coordinator::Engine;
+use boost::text::Document;
+use boost::util::{prop, Prng};
+
+#[test]
+fn aql_random_token_soup_never_panics() {
+    let vocab = [
+        "create", "view", "dictionary", "as", "extract", "regex", "on", "from", "select",
+        "where", "and", "or", "not", "output", "consolidate", "using", "union", "all",
+        "Document", "d", "x", ".", ",", ";", "(", ")", "'a'", "/a+/", "42", "=", "<",
+        "GetLength", "Follows", "text", "match",
+    ];
+    let mut rng = Prng::new(0xF422);
+    for case in 0..400 {
+        let n = rng.range(1, 30);
+        let src: String = (0..n)
+            .map(|_| *rng.pick(&vocab))
+            .collect::<Vec<_>>()
+            .join(" ");
+        // must not panic — Err is fine, Ok is fine
+        let _ = std::panic::catch_unwind(|| boost::aql::compile(&src))
+            .unwrap_or_else(|_| panic!("panicked on case {case}: {src}"));
+    }
+}
+
+#[test]
+fn aql_random_bytes_never_panic() {
+    let mut rng = Prng::new(0xBEEF);
+    for _ in 0..400 {
+        let len = rng.below(80);
+        let src: String = (0..len).map(|_| rng.printable() as char).collect();
+        let _ = boost::aql::compile(&src); // Err is expected; panics are not
+    }
+}
+
+#[test]
+fn regex_random_patterns_never_panic() {
+    let mut rng = Prng::new(0x9E9E);
+    for _ in 0..600 {
+        let len = rng.below(24);
+        let pat: String = (0..len)
+            .map(|_| *rng.pick(b"ab[]()*+?{}|\\dws-^$.,0159") as char)
+            .collect();
+        match boost::regex::compile(&pat, rng.chance(0.5)) {
+            Ok(re) => {
+                // compiled patterns must also scan arbitrary text safely
+                let text: String = (0..rng.below(60)).map(|_| rng.printable() as char).collect();
+                let _ = re.find_all(&text);
+                let _ = re.find_all_via_ends(&text);
+            }
+            Err(_) => {}
+        }
+    }
+}
+
+#[test]
+fn engine_handles_adversarial_documents() {
+    let q = boost::queries::builtin("t1").unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    let adversarial = [
+        String::new(),
+        " ".repeat(5000),
+        "A".repeat(5000),
+        "Aa ".repeat(2000),                     // dense person-regex prefixes
+        "IBM ".repeat(1500),                    // dense dictionary hits
+        "2014-01-01 ".repeat(400),              // dense date hits
+        (0u8..=127).map(|b| b.max(1) as char).collect::<String>().repeat(40),
+        "\n\n\n\t\t\t".repeat(500),
+    ];
+    for (i, text) in adversarial.iter().enumerate() {
+        let doc = Document::new(i as u64, text.as_str());
+        let _ = engine.run_doc(&doc); // must not panic, whatever the yield
+    }
+}
+
+#[test]
+fn prop_engine_output_spans_in_bounds() {
+    let q = boost::queries::builtin("t2").unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    prop::check(
+        0x5EED,
+        150,
+        |r: &mut Prng| {
+            let len = r.below(400);
+            (0..len)
+                .map(|_| *r.pick(b"Aa bB(4) 5-190.x@ \n") as char)
+                .collect::<String>()
+        },
+        |text| {
+            let doc = Document::new(0, text.as_str());
+            let out = engine.run_doc(&doc);
+            out.views.values().flatten().all(|t| {
+                t.iter().all(|v| match v {
+                    boost::aog::Value::Span(s) => {
+                        s.begin <= s.end && s.end as usize <= text.len()
+                    }
+                    _ => true,
+                })
+            })
+        },
+    );
+}
+
+#[test]
+fn tokenizer_never_panics_on_any_bytes() {
+    let mut rng = Prng::new(7);
+    for _ in 0..300 {
+        let len = rng.below(200);
+        // arbitrary ASCII including control chars (but valid UTF-8)
+        let s: String = (0..len).map(|_| (rng.below(127) as u8 + 1) as char).collect();
+        let idx = boost::text::Tokenizer::standard().tokenize(&s);
+        let _ = idx.token_count();
+    }
+}
