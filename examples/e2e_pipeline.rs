@@ -6,7 +6,9 @@
 //!   multi-threaded communication interface → annotations,
 //!
 //! with a software baseline run for correctness comparison and the
-//! paper-calibrated Eq. 1 estimate for the headline speedup.
+//! paper-calibrated Eq. 1 estimate for the headline speedup. Both runs
+//! stream through the `Session` pipeline, so the software workers and the
+//! accelerator submissions share the bounded-queue scheduler.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_pipeline
@@ -22,10 +24,14 @@ fn main() -> anyhow::Result<()> {
     let q = boost::queries::builtin("t1").unwrap();
     println!("== {} ({}) ==", q.name, q.title);
 
-    // 1. software baseline + profile
+    // 1. software baseline + profile, streamed through a single-worker
+    //    session (the Session is the only run surface — run_corpus is a
+    //    convenience wrapper over the same pipeline)
     let corpus = CorpusSpec::news(400, 2048).generate();
     let sw = Engine::compile_aql(&q.aql)?;
-    let sw_report = sw.run_corpus(&corpus, 1);
+    let mut sw_session = sw.session().threads(1).queue_depth(2).start();
+    sw_session.push_batch(corpus.docs.iter().cloned())?;
+    let sw_report = sw_session.finish();
     let profile = sw.profile();
     println!(
         "software:     {:7.1} ms, {:6.2} MB/s, {} tuples, extraction {:.0}%",
@@ -49,7 +55,9 @@ fn main() -> anyhow::Result<()> {
         &q.aql,
         EngineConfig::accelerated(PartitionMode::MultiSubgraph, engine_spec),
     )?;
-    let hw_report = hw.run_corpus(&corpus, 4);
+    let mut hw_session = hw.session().threads(4).queue_depth(8).start();
+    hw_session.push_batch(corpus.docs.iter().cloned())?;
+    let hw_report = hw_session.finish();
     println!(
         "accelerated:  {:7.1} ms, {:6.2} MB/s, {} tuples",
         hw_report.wall.as_secs_f64() * 1e3,

@@ -1,12 +1,14 @@
-//! Quickstart: compile an AQL query, run it over a few documents, print
-//! the annotations.
+//! Quickstart: compile an AQL query, resolve a typed view handle, and
+//! stream documents through a `Session` — the push-based pipeline that
+//! replaces one-shot corpus runs.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use boost::coordinator::Engine;
-use boost::text::Document;
+use std::sync::Arc;
+
+use boost::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     // An information-extraction query in the AQL subset: find person
@@ -34,20 +36,63 @@ fn main() -> anyhow::Result<()> {
     let engine = Engine::compile_aql(aql)?;
     println!("compiled operator graph:\n{}", engine.graph().dump());
 
+    // Resolve the output view ONCE into a typed handle: no stringly-typed
+    // lookups on the hot path, and the schema travels with it.
+    let person_org: ViewHandle = engine.view("PersonOrg")?;
+    println!(
+        "view {:?} has columns: {:?}",
+        person_org.name(),
+        person_org
+            .schema()
+            .fields
+            .iter()
+            .map(|f| f.name.as_str())
+            .collect::<Vec<_>>()
+    );
+
+    // One-off, synchronous evaluation still works:
+    let doc = Document::new(0, "Laura Chiticariu works at IBM Research in Almaden.");
+    let result = engine.run_doc(&doc);
+    println!("sync run: {} PersonOrg rows", result[&person_org].len());
+
+    // The streaming path: a Session with a worker pool behind a bounded
+    // queue. push() blocks when the pipeline is full (backpressure), and
+    // every per-document result is delivered to the sink as it completes.
+    let sink = Arc::new(CollectSink::default());
+    let mut session = engine
+        .session()
+        .threads(2)
+        .queue_depth(4)
+        .sink(sink.clone())
+        .start();
+
     let docs = [
         "Laura Chiticariu works at IBM Research in Almaden.",
         "Eva Sitaridi joined Columbia University last fall; Peter Hofstee stayed at IBM.",
         "No entities here, just plain text.",
     ];
     for (i, text) in docs.iter().enumerate() {
-        let doc = Document::new(i as u64, *text);
-        let out = engine.run_doc(&doc);
-        println!("doc {i}: {:?}", text);
-        for row in &out.views["PersonOrg"] {
-            let person = row[0].as_span().text(text);
-            let org = row[1].as_span().text(text);
+        session.push(Document::new(i as u64, *text))?;
+    }
+    let report = session.finish();
+
+    // workers race, so collected results arrive in completion order —
+    // sort by document id for a stable printout
+    let mut collected = sink.take();
+    collected.sort_by_key(|(doc, _)| doc.id);
+    for (doc, result) in collected {
+        println!("doc {}: {:?}", doc.id, &*doc.text);
+        for row in &result[&person_org] {
+            let person = row[0].as_span().text(&doc.text);
+            let org = row[1].as_span().text(&doc.text);
             println!("   person={person:?} org={org:?}");
         }
     }
+    println!(
+        "{} docs, {} tuples, {:.2} ms",
+        report.docs,
+        report.tuples,
+        report.wall.as_secs_f64() * 1e3
+    );
     Ok(())
 }

@@ -11,6 +11,14 @@
 //! subgraph's relational body, and wakes the workers whose documents
 //! completed — exactly the paper's "status register + wake up the software
 //! threads that belong to this work package" protocol.
+//!
+//! Submissions travel through the same bounded-queue machinery
+//! ([`crate::runtime::queue`]) that feeds [`Session`] worker pools, so the
+//! HW and SW paths share one scheduler primitive: when the communication
+//! thread falls behind, `submit` blocks the worker (backpressure) instead
+//! of buffering unboundedly.
+//!
+//! [`Session`]: crate::coordinator::Session
 
 pub mod packing;
 
@@ -27,8 +35,10 @@ use anyhow::Result;
 use crate::aog::Tuple;
 use crate::exec::{Executor, Profiler, SubgraphRunner};
 use crate::hwcompiler::{AccelConfig, MatcherRef, BLOCK_SIZES};
-use crate::metrics::AccelMetrics;
+use crate::metrics::{AccelMetrics, QueueSnapshot, QueueStats};
+use crate::partition::PartitionPlan;
 use crate::perfmodel::FpgaModel;
+use crate::runtime::queue::{self, QueueRx, QueueTx};
 use crate::runtime::{EngineSpec, PackageEngine, PackedPackage};
 use crate::text::{Document, TokenIndex};
 
@@ -46,6 +56,11 @@ pub struct AccelOptions {
     /// paper's ">1000 bytes" combining rule). The queue also flushes when
     /// it drains, so latency stays bounded.
     pub combine_min_bytes: usize,
+    /// Bounded depth of the submission queue feeding the communication
+    /// thread. When it fills (the accelerator falls behind), `submit`
+    /// blocks the calling worker — the same backpressure rule as a
+    /// [`Session`](crate::coordinator::Session) ingress queue.
+    pub queue_depth: usize,
     /// Timing model used for the modeled-throughput metrics.
     pub model: FpgaModel,
 }
@@ -56,6 +71,7 @@ impl Default for AccelOptions {
             block: 16384,
             adaptive_block: true,
             combine_min_bytes: 1000,
+            queue_depth: 256,
             model: FpgaModel::paper(),
         }
     }
@@ -80,9 +96,10 @@ struct Prepared {
 
 /// The accelerator service: owns the communication thread.
 pub struct AccelService {
-    tx: Mutex<Option<Sender<Submission>>>,
+    tx: Mutex<Option<QueueTx<Submission>>>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
     metrics: Arc<AccelMetrics>,
+    queue_stats: Arc<QueueStats>,
     stop: Arc<AtomicBool>,
     options: AccelOptions,
 }
@@ -119,7 +136,8 @@ impl AccelService {
                 }
             })
             .collect();
-        let (tx, rx) = channel::<Submission>();
+        let (tx, rx) = queue::bounded::<Submission>(options.queue_depth);
+        let queue_stats = tx.stats().clone();
         let metrics = Arc::new(AccelMetrics::default());
         let stop = Arc::new(AtomicBool::new(false));
         let thread_metrics = metrics.clone();
@@ -136,7 +154,7 @@ impl AccelService {
                         // engine failed to materialize: fail every
                         // submission rather than hanging the workers
                         let msg = format!("accelerator engine init failed: {e}");
-                        while let Ok(s) = rx.recv() {
+                        while let Some(s) = rx.pop() {
                             let _ = s.reply.send(Err(msg.clone()));
                         }
                     }
@@ -147,6 +165,7 @@ impl AccelService {
             tx: Mutex::new(Some(tx)),
             handle: Mutex::new(Some(handle)),
             metrics,
+            queue_stats,
             stop,
             options,
         })
@@ -154,7 +173,8 @@ impl AccelService {
 
     /// Submit one document for subgraph `id`; returns the receiver the
     /// worker blocks on (document-per-thread: the worker sleeps while the
-    /// accelerator works).
+    /// accelerator works). Blocks while the bounded submission queue is
+    /// full — backpressure on the worker, per the shared scheduler rule.
     pub fn submit(
         &self,
         subgraph_id: usize,
@@ -163,9 +183,13 @@ impl AccelService {
         ext: Vec<Vec<Tuple>>,
     ) -> Receiver<Result<Arc<Vec<Vec<Tuple>>>, String>> {
         let (reply, rx) = channel();
-        let guard = self.tx.lock().unwrap();
-        if let Some(tx) = guard.as_ref() {
-            let _ = tx.send(Submission {
+        // clone the producer handle out of the lock so a full queue blocks
+        // only this worker, not everyone behind the mutex
+        let tx = self.tx.lock().unwrap().clone();
+        if let Some(tx) = tx {
+            // a push error means the service shut down; dropping the
+            // submission drops `reply`, and the worker's recv fails cleanly
+            let _ = tx.push(Submission {
                 subgraph_id,
                 doc,
                 tokens,
@@ -179,6 +203,11 @@ impl AccelService {
     /// The service's metrics.
     pub fn metrics(&self) -> &Arc<AccelMetrics> {
         &self.metrics
+    }
+
+    /// Gauges of the bounded submission queue (depth, high-water, stalls).
+    pub fn queue_snapshot(&self) -> QueueSnapshot {
+        self.queue_stats.snapshot()
     }
 
     /// Service options (block size etc.).
@@ -204,7 +233,7 @@ impl Drop for AccelService {
 
 /// The communication thread main loop.
 fn comm_thread(
-    rx: Receiver<Submission>,
+    rx: QueueRx<Submission>,
     prepared: Vec<Prepared>,
     engine: Box<dyn PackageEngine>,
     options: AccelOptions,
@@ -215,18 +244,18 @@ fn comm_thread(
     let mut pending: Vec<Vec<Submission>> = (0..prepared.len()).map(|_| Vec::new()).collect();
     let mut pending_bytes: Vec<usize> = vec![0; prepared.len()];
     loop {
-        // Block for the first submission (or channel close), then drain
+        // Block for the first submission (or queue close), then drain
         // whatever else is queued — "collects the data submitted by some of
         // the worker threads".
-        match rx.recv() {
-            Ok(s) => {
+        match rx.pop() {
+            Some(s) => {
                 let gi = s.subgraph_id;
                 pending_bytes[gi] += s.doc.len() + 1;
                 pending[gi].push(s);
             }
-            Err(_) => break, // all senders gone
+            None => break, // all producers gone
         }
-        while let Ok(s) = rx.try_recv() {
+        while let Some(s) = rx.try_pop() {
             let gi = s.subgraph_id;
             pending_bytes[gi] += s.doc.len() + 1;
             pending[gi].push(s);
@@ -391,8 +420,10 @@ fn run_package(
         let out =
             prep.body_exec
                 .run_doc_with(&sub.doc, &sub.tokens, &ext_refs, &overrides);
+        // body outputs are registered positionally (`out0`, `out1`, …), so
+        // the typed result's view order IS the output_idx order
         let outputs: Vec<Vec<Tuple>> = (0..prep.config.outputs.len())
-            .map(|k| out.views.get(&format!("out{k}")).cloned().unwrap_or_default())
+            .map(|k| out.views().get(k).cloned().unwrap_or_default())
             .collect();
         replies.push((&sub.reply, Arc::new(outputs)));
     }
@@ -416,16 +447,27 @@ fn run_package(
 
 /// [`SubgraphRunner`] backed by the service: submits and sleeps, with a
 /// per-(doc, subgraph) result cache so multi-output subgraphs execute once.
+///
+/// Construction takes the [`PartitionPlan`] the service was compiled from,
+/// so every `SubgraphExec` reference is validated against the plan's
+/// subgraph/output shape instead of silently yielding empty tuples on a
+/// miswired graph.
 pub struct AccelSubgraphRunner {
     service: Arc<AccelService>,
-    cache: Mutex<HashMap<(u64, usize), Arc<Vec<Vec<Tuple>>>>>,
+    /// Output count per subgraph id, from the plan.
+    subgraph_outputs: Vec<usize>,
+    /// Keyed by (doc id, doc text allocation, subgraph id): the Session
+    /// API accepts arbitrary caller-built documents, so ids alone are not
+    /// unique and must not alias cache entries across different texts.
+    cache: Mutex<HashMap<(u64, usize, usize), Arc<Vec<Vec<Tuple>>>>>,
 }
 
 impl AccelSubgraphRunner {
-    /// Wrap a running service.
-    pub fn new(service: Arc<AccelService>) -> AccelSubgraphRunner {
+    /// Wrap a running service compiled from `plan`.
+    pub fn new(service: Arc<AccelService>, plan: &PartitionPlan) -> AccelSubgraphRunner {
         AccelSubgraphRunner {
             service,
+            subgraph_outputs: plan.subgraphs.iter().map(|s| s.outputs.len()).collect(),
             cache: Mutex::new(HashMap::new()),
         }
     }
@@ -440,9 +482,19 @@ impl SubgraphRunner for AccelSubgraphRunner {
         tokens: &TokenIndex,
         ext: &[&[Tuple]],
     ) -> Vec<Tuple> {
-        let cache_key = (doc.id, id);
+        assert!(
+            id < self.subgraph_outputs.len(),
+            "graph references subgraph #{id} but the plan compiled only {}",
+            self.subgraph_outputs.len()
+        );
+        assert!(
+            output_idx < self.subgraph_outputs[id],
+            "subgraph #{id} has {} outputs, output_idx {output_idx} is out of range",
+            self.subgraph_outputs[id]
+        );
+        let cache_key = (doc.id, Arc::as_ptr(&doc.text) as *const u8 as usize, id);
         if let Some(r) = self.cache.lock().unwrap().get(&cache_key) {
-            return r.get(output_idx).cloned().unwrap_or_default();
+            return r[output_idx].clone();
         }
         let rx = self.service.submit(
             id,
@@ -458,7 +510,7 @@ impl SubgraphRunner for AccelSubgraphRunner {
                     cache.clear(); // workers only revisit the current doc
                 }
                 cache.insert(cache_key, outputs.clone());
-                outputs.get(output_idx).cloned().unwrap_or_default()
+                outputs[output_idx].clone()
             }
             Ok(Err(e)) => panic!("accelerator error: {e}"),
             Err(_) => panic!("accelerator service shut down while waiting"),
@@ -488,10 +540,10 @@ mod tests {
         output view PersonOrg;
     "#;
 
-    fn rows(out: &crate::exec::DocOutput) -> Vec<Vec<String>> {
+    fn rows(out: &crate::exec::DocResult) -> Vec<Vec<String>> {
         let mut rows: Vec<Vec<String>> = out
-            .views
-            .values()
+            .views()
+            .iter()
             .flat_map(|rows| rows.iter().map(|t| t.iter().map(|v| v.to_string()).collect()))
             .collect();
         rows.sort();
@@ -515,7 +567,7 @@ mod tests {
             Arc::new(plan.supergraph.clone()),
             Arc::new(Profiler::disabled()),
         )
-        .with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(service.clone())));
+        .with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(service.clone(), &plan)));
         let sw_exec = Executor::new(
             Arc::new(plan.supergraph.clone()),
             Arc::new(Profiler::disabled()),
@@ -574,7 +626,7 @@ mod tests {
             EngineSpec::Native,
             AccelOptions::default(),
         );
-        let runner = Arc::new(AccelSubgraphRunner::new(service.clone()));
+        let runner = Arc::new(AccelSubgraphRunner::new(service.clone(), &plan));
         let exec = Arc::new(
             Executor::new(
                 Arc::new(plan.supergraph.clone()),
@@ -592,7 +644,7 @@ mod tests {
                         format!("Laura Chiticariu works at IBM Research (doc {k})."),
                     );
                     let out = exec.run_doc(&doc);
-                    assert_eq!(out.views["PersonOrg"].len(), 1);
+                    assert_eq!(out["PersonOrg"].len(), 1);
                 }
             }));
         }

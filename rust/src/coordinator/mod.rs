@@ -1,19 +1,26 @@
 //! The engine facade: compile an AQL query, optionally partition it for
-//! the accelerator, and drive corpora through it with the paper's
+//! the accelerator, and stream documents through it with the paper's
 //! document-per-thread worker model.
+//!
+//! The primary run surface is the push-based [`Session`] pipeline
+//! ([`Engine::session`]); [`Engine::run_corpus`] and [`Engine::run_doc`]
+//! are thin conveniences over the same machinery.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+pub mod session;
+
+pub use session::{CallbackSink, CollectSink, CountingSink, ResultSink, Session, SessionBuilder};
+
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::accel::{AccelOptions, AccelService, AccelSubgraphRunner};
 use crate::aog::Graph;
 use crate::corpus::Corpus;
-use crate::exec::{DocOutput, Executor, Profile, Profiler};
+use crate::exec::{DocResult, Executor, Profile, Profiler, ViewHandle};
 use crate::hwcompiler::{compile_subgraph, AccelConfig};
-use crate::metrics::AccelSnapshot;
+use crate::metrics::{AccelSnapshot, QueueSnapshot};
 use crate::partition::{partition, PartitionMode, PartitionPlan, SoftwareSubgraphRunner};
 use crate::runtime::EngineSpec;
 use crate::text::Document;
@@ -111,9 +118,10 @@ impl Engine {
         let exec_graph = Arc::new(exec_graph);
         let mut executor = Executor::new(exec_graph.clone(), profiler.clone());
         if let (Some(plan), Some(service)) = (&plan, &service) {
-            let _ = plan;
-            executor = executor
-                .with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(service.clone())));
+            executor = executor.with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(
+                service.clone(),
+                plan,
+            )));
         }
         Ok(Engine {
             graph: Arc::new(g),
@@ -164,9 +172,36 @@ impl Engine {
         &self.config
     }
 
-    /// Evaluate one document.
-    pub fn run_doc(&self, doc: &Document) -> DocOutput {
+    /// Resolve a typed handle for output view `name` — the compile-time
+    /// replacement for stringly-typed result lookups.
+    pub fn view(&self, name: &str) -> Result<ViewHandle> {
+        self.executor.catalog().resolve(name).cloned().ok_or_else(|| {
+            anyhow!(
+                "no output view named '{name}' (outputs: {})",
+                self.views()
+                    .iter()
+                    .map(|h| h.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    /// All output views of this engine, in output order.
+    pub fn views(&self) -> &[ViewHandle] {
+        self.executor.catalog().handles()
+    }
+
+    /// Evaluate one document synchronously on the calling thread.
+    pub fn run_doc(&self, doc: &Document) -> DocResult {
         self.executor.run_doc(doc)
+    }
+
+    /// Open a streaming [`Session`] builder: configure worker threads,
+    /// bounded queue depth, a [`ResultSink`] and per-view subscriptions,
+    /// then `start()` and `push` documents with backpressure.
+    pub fn session(&self) -> SessionBuilder {
+        SessionBuilder::new(self.executor.clone(), self.service.clone())
     }
 
     /// Snapshot the per-operator profile (over everything run so far).
@@ -184,36 +219,30 @@ impl Engine {
         self.service.as_ref().map(|s| s.metrics().snapshot())
     }
 
-    /// Drive a corpus with `threads` workers (document-per-thread, shared
-    /// work index — the paper's execution model).
+    /// Gauges of the accelerator's bounded submission queue, when a
+    /// service is attached.
+    pub fn accel_queue_snapshot(&self) -> Option<QueueSnapshot> {
+        self.service.as_ref().map(|s| s.queue_snapshot())
+    }
+
+    /// Drive a fully-materialized corpus with `threads` workers — a thin
+    /// wrapper over [`Engine::session`] (document-per-thread over the
+    /// bounded queue, the paper's execution model). Streaming producers
+    /// should use the session directly.
     pub fn run_corpus(&self, corpus: &Corpus, threads: usize) -> RunReport {
         let threads = threads.max(1);
-        let next = AtomicUsize::new(0);
-        let tuples = AtomicUsize::new(0);
-        let t0 = Instant::now();
-        std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(|| {
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= corpus.docs.len() {
-                            break;
-                        }
-                        let out = self.executor.run_doc(&corpus.docs[i]);
-                        tuples.fetch_add(out.total_tuples(), Ordering::Relaxed);
-                    }
-                });
-            }
-        });
-        let wall = t0.elapsed();
-        RunReport {
-            docs: corpus.docs.len(),
-            bytes: corpus.total_bytes(),
-            tuples: tuples.into_inner(),
-            wall,
-            threads,
-            accel: self.accel_snapshot(),
+        let mut session = self
+            .session()
+            .threads(threads)
+            .queue_depth(2 * threads)
+            .start();
+        for doc in &corpus.docs {
+            // Document text is Arc'd, so this clone is a refcount bump
+            session
+                .push(doc.clone())
+                .expect("session worker pool died mid-corpus");
         }
+        session.finish()
     }
 
     /// Shut down the accelerator service (also happens on drop).
@@ -281,15 +310,17 @@ mod tests {
         for d in &corpus.docs {
             let mut a: Vec<String> = sw
                 .run_doc(d)
-                .views
                 .iter()
-                .flat_map(|(v, rows)| rows.iter().map(move |t| format!("{v}:{t:?}")))
+                .flat_map(|(h, rows)| {
+                    rows.iter().map(move |t| format!("{}:{t:?}", h.name()))
+                })
                 .collect();
             let mut b: Vec<String> = hw
                 .run_doc(d)
-                .views
                 .iter()
-                .flat_map(|(v, rows)| rows.iter().map(move |t| format!("{v}:{t:?}")))
+                .flat_map(|(h, rows)| {
+                    rows.iter().map(move |t| format!("{}:{t:?}", h.name()))
+                })
                 .collect();
             a.sort();
             b.sort();
@@ -322,6 +353,45 @@ mod tests {
     #[test]
     fn bad_aql_is_an_error() {
         assert!(Engine::compile_aql("create banana;").is_err());
+    }
+
+    #[test]
+    fn session_smoke_collect_and_subscribe() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        let engine = Engine::compile_aql(&t1_aql()).unwrap();
+        let person_org = engine.view("PersonOrg").unwrap();
+        assert!(engine.view("NoSuchView").is_err());
+
+        let collected = Arc::new(CollectSink::default());
+        let seen = Arc::new(AtomicUsize::new(0));
+        let seen2 = seen.clone();
+        let mut session = engine
+            .session()
+            .threads(2)
+            .queue_depth(4)
+            .sink(collected.clone())
+            .subscribe(&person_org, move |_doc, _rows| {
+                seen2.fetch_add(1, Ordering::Relaxed);
+            })
+            .start();
+        let corpus = CorpusSpec::news(10, 512).generate();
+        let pushed = session.push_batch(corpus.docs.iter().cloned()).unwrap();
+        assert_eq!(pushed, 10);
+        let report = session.finish();
+        assert_eq!(report.docs, 10);
+        assert_eq!(collected.len(), 10);
+        // the subscription fires once per document, match or not
+        assert_eq!(seen.load(Ordering::Relaxed), 10);
+        // collected results agree with synchronous evaluation
+        for (doc, result) in collected.take() {
+            assert_eq!(
+                result.total_tuples(),
+                engine.run_doc(&doc).total_tuples(),
+                "doc {}",
+                doc.id
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! The streaming `Session` API: a push-based document pipeline with
+//! bounded buffering and pluggable result delivery.
+//!
+//! [`Engine::run_corpus`] needs the whole corpus in RAM and only returns
+//! aggregate counts; a [`Session`] instead accepts documents one at a time
+//! (`push`), runs a worker pool over a bounded queue, and delivers every
+//! per-document [`DocResult`] to a [`ResultSink`] as it completes. When
+//! producers outrun the workers the queue fills and `push` blocks — the
+//! producer gets *backpressure* instead of unbounded memory growth, which
+//! is what lets the engine sit behind a firehose.
+//!
+//! In-flight bound: with queue depth `Q` and `T` worker threads, at most
+//! `Q + T` documents exist inside the pipeline at any instant (`Q` queued
+//! plus one in each worker's hands). `run_corpus`, the CLI, the benches
+//! and the examples are all thin layers over this type, so the software
+//! and accelerated paths share one scheduler.
+//!
+//! ```text
+//! push(doc) ─▶ [bounded queue, ≤ Q] ─▶ worker 0..T ─▶ ResultSink
+//!      ▲                                   │
+//!      └────────── blocks when full ◀──────┘   finish() → RunReport
+//! ```
+//!
+//! [`Engine::run_corpus`]: super::Engine::run_corpus
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::accel::AccelService;
+use crate::exec::{DocResult, Executor, ViewHandle};
+use crate::metrics::QueueSnapshot;
+use crate::runtime::queue::{self, QueueTx};
+use crate::text::Document;
+
+use super::RunReport;
+
+/// Receives per-document results from a [`Session`]'s worker threads.
+///
+/// `on_result` is called exactly once per pushed document, from whichever
+/// worker finished it (so implementations must be thread-safe); with one
+/// worker thread, calls arrive in push order. `on_finish` is called
+/// exactly once, after the last `on_result`, from the thread that calls
+/// [`Session::finish`].
+pub trait ResultSink: Send + Sync {
+    /// One document completed.
+    fn on_result(&self, doc: &Document, result: &DocResult);
+
+    /// The session drained and is shutting down.
+    fn on_finish(&self, report: &RunReport) {
+        let _ = report;
+    }
+}
+
+/// Drops results; the session's aggregate counters (docs, bytes, tuples)
+/// are maintained regardless. The default sink — what `run_corpus` and the
+/// benches use.
+#[derive(Debug, Default)]
+pub struct CountingSink;
+
+impl ResultSink for CountingSink {
+    fn on_result(&self, _doc: &Document, _result: &DocResult) {}
+}
+
+/// Clones every `(document, result)` pair into memory. For tests and
+/// small batches — a firehose should prefer [`CallbackSink`] or a custom
+/// sink that retires results incrementally.
+#[derive(Debug, Default)]
+pub struct CollectSink {
+    results: Mutex<Vec<(Document, DocResult)>>,
+}
+
+impl CollectSink {
+    /// Take everything collected so far.
+    pub fn take(&self) -> Vec<(Document, DocResult)> {
+        std::mem::take(&mut *self.results.lock().unwrap())
+    }
+
+    /// Number of results currently held.
+    pub fn len(&self) -> usize {
+        self.results.lock().unwrap().len()
+    }
+
+    /// True when nothing has been collected (or everything was taken).
+    pub fn is_empty(&self) -> bool {
+        self.results.lock().unwrap().is_empty()
+    }
+}
+
+impl ResultSink for CollectSink {
+    fn on_result(&self, doc: &Document, result: &DocResult) {
+        self.results
+            .lock()
+            .unwrap()
+            .push((doc.clone(), result.clone()));
+    }
+}
+
+/// Adapts a closure into a [`ResultSink`].
+pub struct CallbackSink<F: Fn(&Document, &DocResult) + Send + Sync> {
+    f: F,
+}
+
+impl<F: Fn(&Document, &DocResult) + Send + Sync> CallbackSink<F> {
+    /// Wrap `f`; it runs on worker threads, once per document.
+    pub fn new(f: F) -> CallbackSink<F> {
+        CallbackSink { f }
+    }
+}
+
+impl<F: Fn(&Document, &DocResult) + Send + Sync> ResultSink for CallbackSink<F> {
+    fn on_result(&self, doc: &Document, result: &DocResult) {
+        (self.f)(doc, result)
+    }
+}
+
+type ViewCallback = Box<dyn Fn(&Document, &[crate::aog::Tuple]) + Send + Sync>;
+
+/// Configures and starts a [`Session`]. Created by
+/// [`Engine::session`](super::Engine::session).
+pub struct SessionBuilder {
+    executor: Arc<Executor>,
+    service: Option<Arc<AccelService>>,
+    threads: usize,
+    queue_depth: Option<usize>,
+    sink: Arc<dyn ResultSink>,
+    subscriptions: Vec<(ViewHandle, ViewCallback)>,
+}
+
+impl SessionBuilder {
+    pub(super) fn new(
+        executor: Arc<Executor>,
+        service: Option<Arc<AccelService>>,
+    ) -> SessionBuilder {
+        SessionBuilder {
+            executor,
+            service,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(8),
+            queue_depth: None,
+            sink: Arc::new(CountingSink),
+            subscriptions: Vec::new(),
+        }
+    }
+
+    /// Worker-thread count (default: available parallelism).
+    pub fn threads(mut self, n: usize) -> SessionBuilder {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Bounded ingress-queue depth (default: `2 × threads`). With depth
+    /// `Q` and `T` threads, at most `Q + T` documents are in flight;
+    /// `push` blocks beyond that.
+    pub fn queue_depth(mut self, q: usize) -> SessionBuilder {
+        self.queue_depth = Some(q.max(1));
+        self
+    }
+
+    /// Replace the default [`CountingSink`].
+    pub fn sink(mut self, sink: Arc<dyn ResultSink>) -> SessionBuilder {
+        self.sink = sink;
+        self
+    }
+
+    /// Subscribe to one view: `f` runs on a worker thread once per
+    /// document with that document's tuples for the view (possibly
+    /// empty), before the sink sees the full result.
+    ///
+    /// Panics immediately (not per-document in a worker) if `view` was
+    /// resolved from a different engine.
+    pub fn subscribe<F>(mut self, view: &ViewHandle, f: F) -> SessionBuilder
+    where
+        F: Fn(&Document, &[crate::aog::Tuple]) + Send + Sync + 'static,
+    {
+        let own = self.executor.catalog().handles().get(view.index());
+        assert!(
+            own.is_some_and(|o| o.name() == view.name() && o.schema() == view.schema()),
+            "view handle '{}' does not belong to this engine",
+            view.name()
+        );
+        self.subscriptions.push((view.clone(), Box::new(f)));
+        self
+    }
+
+    /// Spawn the worker pool and start accepting documents.
+    pub fn start(self) -> Session {
+        let threads = self.threads;
+        let depth = self.queue_depth.unwrap_or(2 * threads).max(1);
+        let (tx, rx) = queue::bounded::<Document>(depth);
+        let rx = Arc::new(rx);
+        let shared = Arc::new(Shared::default());
+        let subscriptions = Arc::new(self.subscriptions);
+        let mut workers = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let rx = rx.clone();
+            let shared = shared.clone();
+            let sink = self.sink.clone();
+            let executor = self.executor.clone();
+            let subscriptions = subscriptions.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("session-worker-{w}"))
+                .spawn(move || {
+                    while let Some(doc) = rx.pop() {
+                        let result = executor.run_doc(&doc);
+                        shared.docs.fetch_add(1, Ordering::Relaxed);
+                        shared.bytes.fetch_add(doc.len() as u64, Ordering::Relaxed);
+                        shared
+                            .tuples
+                            .fetch_add(result.total_tuples() as u64, Ordering::Relaxed);
+                        for (view, f) in subscriptions.iter() {
+                            f(&doc, result.view(view));
+                        }
+                        sink.on_result(&doc, &result);
+                        shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    }
+                })
+                .expect("spawn session worker");
+            workers.push(handle);
+        }
+        Session {
+            tx: Some(tx),
+            workers,
+            shared,
+            sink: self.sink,
+            service: self.service,
+            threads,
+            queue_depth: depth,
+            started: Instant::now(),
+            pushed: 0,
+        }
+    }
+}
+
+/// Counters shared between the session handle and its workers.
+#[derive(Debug, Default)]
+struct Shared {
+    docs: AtomicU64,
+    bytes: AtomicU64,
+    tuples: AtomicU64,
+    /// Documents inside the pipeline (queued or being processed).
+    in_flight: AtomicI64,
+    max_in_flight: AtomicI64,
+}
+
+/// A running push-based pipeline. Feed it with [`Session::push`] /
+/// [`Session::push_batch`]; close it with [`Session::finish`] to join the
+/// workers and collect the [`RunReport`].
+pub struct Session {
+    tx: Option<QueueTx<Document>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    sink: Arc<dyn ResultSink>,
+    service: Option<Arc<AccelService>>,
+    threads: usize,
+    queue_depth: usize,
+    started: Instant,
+    pushed: u64,
+}
+
+impl Session {
+    /// Push one document, blocking while the pipeline is full
+    /// (backpressure). Fails only if the worker pool died (a worker
+    /// panicked on a poisoned document).
+    pub fn push(&mut self, doc: Document) -> Result<()> {
+        let tx = self
+            .tx
+            .as_ref()
+            .expect("push after finish — the session is closed");
+        tx.push(doc)
+            .map_err(|_| anyhow!("session worker pool shut down (worker panic?)"))?;
+        self.pushed += 1;
+        // counted after the queue accepts it: a blocked push is NOT in
+        // flight, so the Q + T bound is exact
+        let now = self.shared.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.shared.max_in_flight.fetch_max(now, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Push a batch; returns how many documents were accepted.
+    pub fn push_batch(&mut self, docs: impl IntoIterator<Item = Document>) -> Result<usize> {
+        let mut n = 0;
+        for doc in docs {
+            self.push(doc)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Documents pushed so far.
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Documents fully processed so far.
+    pub fn completed(&self) -> u64 {
+        self.shared.docs.load(Ordering::Relaxed)
+    }
+
+    /// Documents currently inside the pipeline (queued + in workers).
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::Relaxed).max(0) as usize
+    }
+
+    /// High-water mark of [`Session::in_flight`] — bounded by
+    /// `queue_depth + threads` by construction.
+    pub fn max_in_flight(&self) -> usize {
+        self.shared.max_in_flight.load(Ordering::Relaxed).max(0) as usize
+    }
+
+    /// Worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Configured ingress-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Gauges of the ingress queue (depth, high-water, producer stalls).
+    pub fn queue_snapshot(&self) -> QueueSnapshot {
+        self.tx
+            .as_ref()
+            .map(|tx| tx.snapshot())
+            .unwrap_or_default()
+    }
+
+    /// Close the intake, drain the pipeline, join the workers, notify the
+    /// sink, and return the aggregate report.
+    pub fn finish(mut self) -> RunReport {
+        let (report, worker_panic) = self.drain_and_report();
+        if worker_panic {
+            panic!(
+                "session finished with panicked worker(s): {} of {} docs completed",
+                report.docs, self.pushed
+            );
+        }
+        report
+    }
+
+    /// Shared shutdown path for `finish` and `Drop`: close the queue, join
+    /// the workers, build the report, and fire `on_finish` exactly once.
+    fn drain_and_report(&mut self) -> (RunReport, bool) {
+        self.tx = None; // close the queue: workers drain and exit
+        let mut worker_panic = false;
+        for h in self.workers.drain(..) {
+            worker_panic |= h.join().is_err();
+        }
+        let report = RunReport {
+            docs: self.shared.docs.load(Ordering::Relaxed) as usize,
+            bytes: self.shared.bytes.load(Ordering::Relaxed) as usize,
+            tuples: self.shared.tuples.load(Ordering::Relaxed) as usize,
+            wall: self.started.elapsed(),
+            threads: self.threads,
+            accel: self.service.as_ref().map(|s| s.metrics().snapshot()),
+        };
+        self.sink.on_finish(&report);
+        (report, worker_panic)
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // abandoning a session without finish(): still drain the queue,
+        // join the workers (no detached thread outlives the engine) and
+        // deliver the sink's exactly-once on_finish. A session that went
+        // through finish() has no workers left and skips all of this.
+        if !self.workers.is_empty() {
+            let _ = self.drain_and_report();
+        }
+    }
+}

@@ -1,5 +1,7 @@
 //! Software execution of operator graphs, document-per-thread, with the
-//! per-operator profiler that produces the paper's Fig 4.
+//! per-operator profiler that produces the paper's Fig 4 — and the typed
+//! result surface ([`ViewHandle`], [`ViewCatalog`], [`DocResult`]) that
+//! the streaming [`Session`](crate::coordinator::Session) API is built on.
 
 pub mod operators;
 pub mod profiler;
@@ -8,9 +10,10 @@ pub use operators::{cmp_tuples, cmp_values};
 pub use profiler::{Profile, Profiler};
 
 use std::collections::HashMap;
+use std::ops::Index;
 use std::sync::Arc;
 
-use crate::aog::{EvalCtx, Graph, NodeId, OpKind, Tuple};
+use crate::aog::{EvalCtx, Graph, NodeId, OpKind, Schema, Tuple};
 use crate::text::{Document, TokenIndex, Tokenizer};
 
 /// Pluggable executor for `SubgraphExec` nodes (the hardware-offloaded
@@ -32,12 +35,209 @@ pub trait SubgraphRunner: Send + Sync {
     ) -> Vec<Tuple>;
 }
 
-/// Output of one document evaluation: tuples per output view.
+/// A compile-time-resolved reference to one output view: stable index into
+/// the executed graph's output list, plus the view's name and schema.
+///
+/// Handles are resolved once (via [`ViewCatalog::resolve`] or
+/// [`Engine::view`](crate::coordinator::Engine::view)) and then used for
+/// O(1), typo-proof access into every [`DocResult`] the same engine
+/// produces — replacing the stringly-typed `DocOutput.views` HashMap.
+#[derive(Debug, Clone)]
+pub struct ViewHandle {
+    index: usize,
+    name: Arc<str>,
+    schema: Schema,
+}
+
+impl ViewHandle {
+    /// The view's name as written in the AQL `output view` statement.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The view's tuple schema (column names and types).
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Positional index of this view in the engine's output list.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+}
+
+/// The output views of one compiled graph, in output order. Built once per
+/// [`Executor`]; every [`DocResult`] carries a shared reference.
+#[derive(Debug)]
+pub struct ViewCatalog {
+    views: Vec<ViewHandle>,
+}
+
+impl ViewCatalog {
+    /// Build the catalog from a graph's registered outputs.
+    pub fn for_graph(g: &Graph) -> ViewCatalog {
+        ViewCatalog {
+            views: g
+                .outputs
+                .iter()
+                .enumerate()
+                .map(|(index, (name, node))| ViewHandle {
+                    index,
+                    name: name.as_str().into(),
+                    schema: g.nodes[*node].schema.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Resolve a view by name.
+    pub fn resolve(&self, name: &str) -> Option<&ViewHandle> {
+        self.views.iter().find(|h| &*h.name == name)
+    }
+
+    /// All view handles, in output order.
+    pub fn handles(&self) -> &[ViewHandle] {
+        &self.views
+    }
+
+    /// Number of output views.
+    pub fn len(&self) -> usize {
+        self.views.len()
+    }
+
+    /// True when the graph registers no output views.
+    pub fn is_empty(&self) -> bool {
+        self.views.is_empty()
+    }
+
+    /// Comma-separated view names (for error messages).
+    fn names(&self) -> String {
+        self.views
+            .iter()
+            .map(|h| &*h.name)
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// Output of one document evaluation: tuples per output view, positionally
+/// indexed and paired with the shared [`ViewCatalog`].
+///
+/// Access patterns, strongest first:
+/// * `result[&handle]` / [`DocResult::view`] — O(1) via a [`ViewHandle`];
+/// * `result["ViewName"]` — by name, panicking on unknown names;
+/// * [`DocResult::by_name`] — by name, `None` on unknown names.
+#[derive(Debug, Clone)]
+pub struct DocResult {
+    doc_id: u64,
+    catalog: Arc<ViewCatalog>,
+    views: Vec<Vec<Tuple>>,
+}
+
+impl DocResult {
+    /// Id of the document this result belongs to.
+    pub fn doc_id(&self) -> u64 {
+        self.doc_id
+    }
+
+    /// Tuples of the view behind `handle`.
+    ///
+    /// Panics if the handle was resolved from a *different* engine whose
+    /// output list does not match — same name AND schema at the same
+    /// position (handles are engine-specific).
+    pub fn view(&self, handle: &ViewHandle) -> &Vec<Tuple> {
+        match self.catalog.views.get(handle.index) {
+            Some(own) if own.name == handle.name && own.schema == handle.schema => {
+                &self.views[handle.index]
+            }
+            _ => panic!(
+                "view handle '{}' does not belong to this engine (outputs: {})",
+                handle.name,
+                self.catalog.names()
+            ),
+        }
+    }
+
+    /// Tuples of the view named `name`, if it exists.
+    pub fn by_name(&self, name: &str) -> Option<&Vec<Tuple>> {
+        self.catalog.resolve(name).map(|h| &self.views[h.index])
+    }
+
+    /// Raw per-view tuple vectors, in output (catalog) order.
+    pub fn views(&self) -> &[Vec<Tuple>] {
+        &self.views
+    }
+
+    /// Iterate `(handle, tuples)` pairs in output order.
+    pub fn iter(&self) -> impl Iterator<Item = (&ViewHandle, &Vec<Tuple>)> {
+        self.catalog.views.iter().zip(self.views.iter())
+    }
+
+    /// The catalog describing the views of this result.
+    pub fn catalog(&self) -> &ViewCatalog {
+        &self.catalog
+    }
+
+    /// Number of output views.
+    pub fn num_views(&self) -> usize {
+        self.views.len()
+    }
+
+    /// Total tuple count across views.
+    pub fn total_tuples(&self) -> usize {
+        self.views.iter().map(|v| v.len()).sum()
+    }
+
+    /// Convert into the legacy stringly-typed [`DocOutput`] (allocates one
+    /// `HashMap` entry per view). Migration shim only.
+    #[allow(deprecated)]
+    pub fn into_output(self) -> DocOutput {
+        let DocResult { catalog, views, .. } = self;
+        DocOutput {
+            views: catalog
+                .views
+                .iter()
+                .map(|h| h.name.to_string())
+                .zip(views)
+                .collect(),
+        }
+    }
+}
+
+impl Index<&ViewHandle> for DocResult {
+    type Output = Vec<Tuple>;
+
+    fn index(&self, handle: &ViewHandle) -> &Vec<Tuple> {
+        self.view(handle)
+    }
+}
+
+impl Index<&str> for DocResult {
+    type Output = Vec<Tuple>;
+
+    fn index(&self, name: &str) -> &Vec<Tuple> {
+        match self.by_name(name) {
+            Some(t) => t,
+            None => panic!(
+                "no output view named '{name}' (outputs: {})",
+                self.catalog.names()
+            ),
+        }
+    }
+}
+
+/// Legacy output of one document evaluation: tuples per output view, keyed
+/// by view name.
+#[deprecated(
+    note = "stringly-typed result surface; use DocResult with ViewHandle \
+            (resolve handles via Engine::view / ViewCatalog::resolve)"
+)]
 #[derive(Debug, Clone, Default)]
 pub struct DocOutput {
     pub views: HashMap<String, Vec<Tuple>>,
 }
 
+#[allow(deprecated)]
 impl DocOutput {
     /// Total tuple count across views.
     pub fn total_tuples(&self) -> usize {
@@ -52,17 +252,20 @@ pub struct Executor {
     profiler: Arc<Profiler>,
     subgraph_runner: Option<Arc<dyn SubgraphRunner>>,
     live: Vec<bool>,
+    catalog: Arc<ViewCatalog>,
 }
 
 impl Executor {
     /// Build an executor. `profiler` may be [`Profiler::disabled`].
     pub fn new(graph: Arc<Graph>, profiler: Arc<Profiler>) -> Executor {
         let live = graph.live_nodes();
+        let catalog = Arc::new(ViewCatalog::for_graph(&graph));
         Executor {
             graph,
             profiler,
             subgraph_runner: None,
             live,
+            catalog,
         }
     }
 
@@ -83,8 +286,13 @@ impl Executor {
         &self.profiler
     }
 
+    /// The output-view catalog of the executed graph.
+    pub fn catalog(&self) -> &Arc<ViewCatalog> {
+        &self.catalog
+    }
+
     /// Evaluate all output views on one document.
-    pub fn run_doc(&self, doc: &Document) -> DocOutput {
+    pub fn run_doc(&self, doc: &Document) -> DocResult {
         let tokens = Tokenizer::standard().tokenize(&doc.text);
         self.run_doc_with(doc, &tokens, &[], &HashMap::new())
     }
@@ -99,7 +307,7 @@ impl Executor {
         tokens: &TokenIndex,
         ext: &[&[Tuple]],
         overrides: &HashMap<NodeId, Vec<Tuple>>,
-    ) -> DocOutput {
+    ) -> DocResult {
         let mut slots: Vec<Option<Vec<Tuple>>> = vec![None; self.graph.nodes.len()];
         for node in &self.graph.nodes {
             if !self.live[node.id] {
@@ -114,11 +322,17 @@ impl Executor {
             self.profiler.stop(node.id, t0);
             slots[node.id] = Some(out);
         }
-        let mut views = HashMap::new();
-        for (name, id) in &self.graph.outputs {
-            views.insert(name.clone(), slots[*id].clone().unwrap_or_default());
+        let views = self
+            .graph
+            .outputs
+            .iter()
+            .map(|(_, id)| slots[*id].clone().unwrap_or_default())
+            .collect();
+        DocResult {
+            doc_id: doc.id,
+            catalog: self.catalog.clone(),
+            views,
         }
-        DocOutput { views }
     }
 
     fn eval_node(
@@ -225,7 +439,7 @@ mod tests {
         let ex = engine(PERSON_ORG);
         let d = doc("Laura Chiticariu works at IBM Research in Almaden.");
         let out = ex.run_doc(&d);
-        let rows = &out.views["PersonOrg"];
+        let rows = &out["PersonOrg"];
         assert_eq!(rows.len(), 1, "{rows:?}");
         let person = rows[0][0].as_span().text(&d.text);
         let org = rows[0][1].as_span().text(&d.text);
@@ -237,7 +451,7 @@ mod tests {
     fn no_match_empty_output() {
         let ex = engine(PERSON_ORG);
         let out = ex.run_doc(&doc("nothing to see here"));
-        assert!(out.views["PersonOrg"].is_empty());
+        assert!(out["PersonOrg"].is_empty());
         assert_eq!(out.total_tuples(), 0);
     }
 
@@ -249,7 +463,7 @@ mod tests {
         let ex = engine(PERSON_ORG);
         let d = doc("Fred Reiss and Huaiyu Zhu are at IBM Research today.");
         let out = ex.run_doc(&d);
-        let rows = &out.views["PersonOrg"];
+        let rows = &out["PersonOrg"];
         // "Fred Reiss" is 5 tokens away from IBM — outside FollowsTok(0,4);
         // "Huaiyu Zhu" is 2 away; its ctx with "IBM" is inside its ctx with
         // "IBM Research".
@@ -268,7 +482,7 @@ mod tests {
              output view V;",
         );
         let out = ex.run_doc(&doc("cat dog cat"));
-        assert_eq!(out.views["V"].len(), 3);
+        assert_eq!(out["V"].len(), 3);
     }
 
     #[test]
@@ -280,7 +494,7 @@ mod tests {
         );
         let d = doc("zz yy xx ww");
         let out = ex.run_doc(&d);
-        let rows = &out.views["V"];
+        let rows = &out["V"];
         assert_eq!(rows.len(), 2);
         // sorted by span (begin asc): zz then yy
         assert_eq!(rows[0][0].as_span().text(&d.text), "zz");
@@ -311,9 +525,9 @@ mod tests {
              output view A; output view B;",
         );
         let out = ex.run_doc(&doc("aa bb"));
-        assert_eq!(out.views.len(), 2);
-        assert_eq!(out.views["A"].len(), 1);
-        assert_eq!(out.views["B"].len(), 1);
+        assert_eq!(out.num_views(), 2);
+        assert_eq!(out["A"].len(), 1);
+        assert_eq!(out["B"].len(), 1);
     }
 
     #[test]
@@ -357,7 +571,7 @@ mod tests {
         let tokens = d.token_index();
         let injected: Vec<Tuple> = vec![vec![Value::Span(Span::new(0, 5))]];
         let out = ex.run_doc_with(&d, &tokens, &[&injected], &HashMap::new());
-        assert_eq!(out.views["V"], injected);
+        assert_eq!(out["V"], injected);
     }
 
     #[test]
@@ -375,7 +589,58 @@ mod tests {
         let fake: Vec<Tuple> = vec![vec![Value::Span(Span::new(0, 2))]];
         overrides.insert(1usize, fake.clone());
         let out = ex.run_doc_with(&d, &tokens, &[], &overrides);
-        assert_eq!(out.views["A"], fake);
+        assert_eq!(out["A"], fake);
+    }
+
+    #[test]
+    fn view_handles_resolve_with_schema() {
+        let ex = engine(PERSON_ORG);
+        let h = ex.catalog().resolve("PersonOrg").expect("view exists");
+        assert_eq!(h.name(), "PersonOrg");
+        assert_eq!(h.schema().arity(), 3);
+        assert_eq!(h.schema().index_of("person"), Some(0));
+        assert_eq!(h.schema().index_of("org"), Some(1));
+        assert!(ex.catalog().resolve("Nope").is_none());
+
+        let d = doc("Laura Chiticariu works at IBM Research in Almaden.");
+        let out = ex.run_doc(&d);
+        // handle-indexed and name-indexed access agree
+        assert_eq!(out[h], out["PersonOrg"]);
+        assert_eq!(out.view(h).len(), 1);
+        assert_eq!(out.doc_id(), d.id);
+    }
+
+    #[test]
+    #[should_panic(expected = "no output view named 'Wrong'")]
+    fn unknown_view_name_panics_with_available_views() {
+        let ex = engine(PERSON_ORG);
+        let out = ex.run_doc(&doc("x"));
+        let _ = &out["Wrong"];
+    }
+
+    #[test]
+    #[should_panic(expected = "does not belong to this engine")]
+    fn foreign_view_handle_panics() {
+        let a = engine(PERSON_ORG);
+        let b = engine(
+            "create view Other as extract regex /x/ on d.text as m from Document d; \
+             output view Other;",
+        );
+        let h = b.catalog().resolve("Other").unwrap().clone();
+        let out = a.run_doc(&doc("x"));
+        let _ = out.view(&h);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_doc_output_shim() {
+        let ex = engine(PERSON_ORG);
+        let d = doc("Laura Chiticariu works at IBM Research in Almaden.");
+        let typed = ex.run_doc(&d);
+        let total = typed.total_tuples();
+        let legacy = typed.into_output();
+        assert_eq!(legacy.total_tuples(), total);
+        assert_eq!(legacy.views["PersonOrg"].len(), 1);
     }
 
     #[test]
@@ -387,7 +652,7 @@ mod tests {
              output view Live;",
         );
         let out = ex.run_doc(&doc("xxx yyy"));
-        assert_eq!(out.views.len(), 1);
+        assert_eq!(out.num_views(), 1);
         let profile = ex.profiler().snapshot(ex.graph());
         // the dead regex node must have zero recorded time
         let per_node = profile.per_node();

@@ -8,11 +8,71 @@
 //! multi-threaded HW/SW communication interface that batches documents into
 //! work packages.
 //!
+//! ## The streaming `Session` API
+//!
+//! The user-facing surface is a push-based pipeline: compile a query into
+//! an [`Engine`](coordinator::Engine), resolve typed
+//! [`ViewHandle`](exec::ViewHandle)s for the output views you care about,
+//! open a [`Session`](coordinator::Session), and push documents as they
+//! arrive. A bounded queue feeds the worker pool, so a producer that
+//! outruns the engine blocks (`push` applies backpressure) instead of
+//! exhausting memory — with queue depth `Q` and `T` threads, at most
+//! `Q + T` documents are ever in flight. Results are delivered per
+//! document through a [`ResultSink`](coordinator::ResultSink) (count-only,
+//! collect, or callback) and per-view subscriptions:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use boost::prelude::*;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let engine = Engine::compile_aql(
+//!     "create view Caps as extract regex /[A-Z][a-z]+/ on d.text as w \
+//!      from Document d; output view Caps;",
+//! )?;
+//! let caps = engine.view("Caps")?; // typed handle, resolved once
+//!
+//! let sink = Arc::new(CollectSink::default());
+//! let mut session = engine
+//!     .session()
+//!     .threads(4)
+//!     .queue_depth(8) // ≤ 8 queued + 4 in workers, then push blocks
+//!     .sink(sink.clone())
+//!     .start();
+//! for (i, text) in ["Alice met Bob", "nothing here"].iter().enumerate() {
+//!     session.push(Document::new(i as u64, *text))?;
+//! }
+//! let report = session.finish();
+//! for (_doc, result) in sink.take() {
+//!     println!("{} tuples: {:?}", result.total_tuples(), result[&caps]);
+//! }
+//! println!("{} docs at {:.1} MB/s", report.docs, report.throughput() / 1e6);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! One-off evaluation ([`Engine::run_doc`](coordinator::Engine::run_doc))
+//! and whole-corpus runs ([`Engine::run_corpus`](coordinator::Engine::run_corpus))
+//! are thin layers over the same machinery, and the accelerator's package
+//! submissions flow through the same bounded-queue scheduler
+//! ([`runtime::queue`]).
+//!
+//! ### Migrating from `DocOutput.views`
+//!
+//! The stringly-typed `DocOutput { views: HashMap<String, Vec<Tuple>> }`
+//! surface is deprecated. `run_doc` now returns a typed
+//! [`DocResult`](exec::DocResult): index it with a `ViewHandle`
+//! (`result[&handle]`), by name (`result["Caps"]`, panicking, or
+//! `result.by_name("Caps")`, fallible), or iterate `result.iter()`.
+//! Code that genuinely needs the old shape can call
+//! `DocResult::into_output()` during the transition.
+//!
 //! The "reconfigurable device" of the paper (a Stratix IV FPGA) is realised
 //! as an AOT-compiled JAX/Pallas byte-stream DFA kernel executed through the
-//! PJRT C API (`xla` crate); reconfiguration is table-driven (transition
-//! tables are runtime inputs), and a calibrated performance model
-//! ([`perfmodel`]) reproduces the paper's FPGA timing for the figures.
+//! PJRT C API (`xla` crate, behind the `pjrt` cargo feature);
+//! reconfiguration is table-driven (transition tables are runtime inputs),
+//! and a calibrated performance model ([`perfmodel`]) reproduces the
+//! paper's FPGA timing for the figures.
 //!
 //! ## Layer map
 //! * L3 (this crate): coordination — everything under [`aql`], [`aog`],
@@ -44,9 +104,12 @@ pub mod util;
 /// Convenience re-exports for the common user-facing API surface.
 pub mod prelude {
     pub use crate::aog::{Graph, Schema, Tuple, Value};
-    pub use crate::coordinator::{Engine, EngineConfig, RunReport};
+    pub use crate::coordinator::{
+        CallbackSink, CollectSink, CountingSink, Engine, EngineConfig, ResultSink, RunReport,
+        Session, SessionBuilder,
+    };
     pub use crate::corpus::{Corpus, CorpusSpec, Document};
-    pub use crate::exec::Profile;
+    pub use crate::exec::{DocResult, Profile, ViewCatalog, ViewHandle};
     pub use crate::partition::PartitionPlan;
     pub use crate::perfmodel::FpgaModel;
     pub use crate::text::Span;

@@ -9,16 +9,19 @@
 //! repro partition --query t1 --mode multi   show supergraph + subgraphs (Fig 1)
 //! repro profile   --query t1 [--docs N --doc-size B --threads T]   Fig 4 rows
 //! repro run       --query t1 --mode single --engine pjrt [...]     end-to-end
+//! repro stream    --query t1 [--threads T --queue Q --per-doc]     stdin firehose
 //! ```
 
 use std::collections::HashMap;
+use std::io::BufRead;
 use std::process::ExitCode;
 
-use boost::coordinator::{Engine, EngineConfig};
+use boost::coordinator::{CallbackSink, Engine, EngineConfig};
 use boost::corpus::CorpusSpec;
 use boost::partition::{partition, PartitionMode};
 use boost::perfmodel::FpgaModel;
 use boost::runtime::EngineSpec;
+use boost::text::Document;
 use boost::util::fmt_mbps;
 
 fn main() -> ExitCode {
@@ -34,6 +37,7 @@ fn main() -> ExitCode {
         "partition" => cmd_partition(&flags),
         "profile" => cmd_profile(&flags),
         "run" => cmd_run(&flags),
+        "stream" => cmd_stream(&flags),
         "-h" | "--help" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -49,7 +53,7 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: repro <queries|explain|partition|profile|run> [flags]
+const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream> [flags]
   --query <t1..t5>       built-in query (default t1)
   --aql <file>           AQL file instead of a built-in
   --mode <none|extract|single|multi>   offload scenario (default none)
@@ -59,16 +63,29 @@ const USAGE: &str = "usage: repro <queries|explain|partition|profile|run> [flags
   --doc-size <bytes>     document size (default 2048)
   --kind <news|tweets|logs>  corpus kind (default news)
   --threads <n>          worker threads (default 8)
-  --block <4096|16384>   package block bytes (default 16384)";
+  --queue <n>            session queue depth (default 2x threads)
+  --block <4096|16384>   package block bytes (default 16384)
+stream reads one document per stdin line through a Session, e.g.:
+  journalctl -f | repro stream --query t2 --threads 4 --per-doc
+  --per-doc              print per-document tuple counts as they complete
+  --view <name>          print each match of this output view";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            m.insert(key.to_string(), val);
-            i += 2;
+            // boolean flags (next token absent or another --flag) get ""
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    m.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    m.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            }
         } else {
             i += 1;
         }
@@ -214,12 +231,26 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         .get("threads")
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
+    let queue: usize = flags
+        .get("queue")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2 * threads.max(1));
     let cfg = engine_config(flags)?;
     let mode = cfg.mode;
     let engine_name = cfg.engine.name();
     let engine = Engine::with_config(&aql, cfg).map_err(|e| e.to_string())?;
     let corpus = corpus_for(flags).generate();
-    let report = engine.run_corpus(&corpus, threads);
+    let mut session = engine
+        .session()
+        .threads(threads)
+        .queue_depth(queue)
+        .start();
+    for doc in corpus.docs.iter().cloned() {
+        session
+            .push(doc)
+            .map_err(|e| format!("session push failed: {e}"))?;
+    }
+    let report = session.finish();
     println!(
         "query {name} | mode {} | engine {engine_name} | {} docs x {} B | {} threads",
         mode.name(),
@@ -256,6 +287,93 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
             1,
         );
         println!("  Eq.1 system estimate at this SW baseline: {}", fmt_mbps(est));
+    }
+    engine.shutdown();
+    Ok(())
+}
+
+/// `repro stream`: the firehose scenario end-to-end — one document per
+/// stdin line, pushed through a bounded [`Session`] so a fast producer is
+/// throttled instead of exhausting memory.
+///
+/// [`Session`]: boost::coordinator::Session
+fn cmd_stream(flags: &HashMap<String, String>) -> Result<(), String> {
+    let (name, aql) = load_aql(flags)?;
+    let threads: usize = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let queue: usize = flags
+        .get("queue")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2 * threads.max(1));
+    let per_doc = flags.contains_key("per-doc");
+    let cfg = engine_config(flags)?;
+    let mode = cfg.mode;
+    let engine_name = cfg.engine.name();
+    let engine = Engine::with_config(&aql, cfg).map_err(|e| e.to_string())?;
+
+    let mut builder = engine.session().threads(threads).queue_depth(queue);
+    if per_doc {
+        builder = builder.sink(std::sync::Arc::new(CallbackSink::new(|doc, result| {
+            println!("doc {}: {} tuples", doc.id, result.total_tuples());
+        })));
+    }
+    if let Some(view_name) = flags.get("view") {
+        let handle = engine.view(view_name).map_err(|e| e.to_string())?;
+        let view_name = view_name.clone();
+        builder = builder.subscribe(&handle, move |doc, rows| {
+            for t in rows {
+                let cells: Vec<String> = t
+                    .iter()
+                    .map(|v| match v {
+                        boost::aog::Value::Span(s) => {
+                            format!("{:?}", s.text(&doc.text))
+                        }
+                        other => other.to_string(),
+                    })
+                    .collect();
+                println!("{view_name} doc {}: {}", doc.id, cells.join(" | "));
+            }
+        });
+    }
+    let mut session = builder.start();
+
+    eprintln!(
+        "streaming stdin through {name} | mode {} | engine {engine_name} | {threads} threads, queue {queue}",
+        mode.name()
+    );
+    let stdin = std::io::stdin();
+    for (i, line) in stdin.lock().lines().enumerate() {
+        let line = line.map_err(|e| format!("stdin read failed: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        session
+            .push(Document::new(i as u64, line))
+            .map_err(|e| format!("session push failed: {e}"))?;
+    }
+    let queue_snap = session.queue_snapshot();
+    let report = session.finish();
+    eprintln!(
+        "{} docs, {} tuples, {:.1} ms, {} | backpressure stalls: {}, queue high-water: {}",
+        report.docs,
+        report.tuples,
+        report.wall.as_secs_f64() * 1e3,
+        fmt_mbps(report.throughput()),
+        queue_snap.stalls,
+        queue_snap.high_water,
+    );
+    if let Some(a) = report.accel {
+        eprintln!(
+            "accel: {} packages, {:.1} docs/pkg, submit-queue stalls {}",
+            a.packages,
+            a.docs_per_package(),
+            engine
+                .accel_queue_snapshot()
+                .map(|q| q.stalls)
+                .unwrap_or(0),
+        );
     }
     engine.shutdown();
     Ok(())

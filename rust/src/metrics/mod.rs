@@ -1,6 +1,63 @@
-//! Lightweight counters for the accelerator service and end-to-end runs.
+//! Lightweight counters for the accelerator service, bounded queues, and
+//! end-to-end runs.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Gauges for one bounded queue (a session's document-ingress queue or the
+/// accelerator's submission queue). Shared by the producer and consumer
+/// halves of [`crate::runtime::queue`]; all updates are relaxed — these
+/// are observability counters, not synchronization.
+#[derive(Debug, Default)]
+pub struct QueueStats {
+    /// Items accepted into the queue over its lifetime.
+    pub pushed: AtomicU64,
+    /// Pushes that found the queue full and had to block (backpressure
+    /// events on the producer side).
+    pub stalls: AtomicU64,
+    /// Items currently queued (may transiently read negative under
+    /// producer/consumer races; clamped to zero in snapshots).
+    depth: AtomicI64,
+    /// Maximum observed queue depth.
+    high_water: AtomicI64,
+}
+
+impl QueueStats {
+    /// Record one accepted push.
+    pub fn on_push(&self) {
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.high_water.fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// Record one producer stall (queue was full).
+    pub fn on_stall(&self) {
+        self.stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one pop.
+    pub fn on_pop(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy.
+    pub fn snapshot(&self) -> QueueSnapshot {
+        QueueSnapshot {
+            pushed: self.pushed.load(Ordering::Relaxed),
+            stalls: self.stalls.load(Ordering::Relaxed),
+            depth: self.depth.load(Ordering::Relaxed).max(0) as u64,
+            high_water: self.high_water.load(Ordering::Relaxed).max(0) as u64,
+        }
+    }
+}
+
+/// A point-in-time copy of [`QueueStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueSnapshot {
+    pub pushed: u64,
+    pub stalls: u64,
+    pub depth: u64,
+    pub high_water: u64,
+}
 
 /// Accumulated accelerator-side counters (one instance per service).
 #[derive(Debug, Default)]
@@ -112,5 +169,31 @@ mod tests {
         let s = AccelMetrics::default().snapshot();
         assert_eq!(s.modeled_throughput(), 0.0);
         assert_eq!(s.docs_per_package(), 0.0);
+    }
+
+    #[test]
+    fn queue_stats_track_depth_and_high_water() {
+        let q = QueueStats::default();
+        q.on_push();
+        q.on_push();
+        q.on_push();
+        q.on_pop();
+        q.on_stall();
+        let s = q.snapshot();
+        assert_eq!(s.pushed, 3);
+        assert_eq!(s.depth, 2);
+        assert_eq!(s.high_water, 3);
+        assert_eq!(s.stalls, 1);
+    }
+
+    #[test]
+    fn queue_stats_negative_depth_clamped() {
+        // a pop can be recorded before its push under producer/consumer
+        // races; snapshots must clamp, not wrap
+        let q = QueueStats::default();
+        q.on_pop();
+        let s = q.snapshot();
+        assert_eq!(s.depth, 0);
+        assert_eq!(s.high_water, 0);
     }
 }

@@ -344,8 +344,8 @@ mod tests {
         let doc = Document::new(0, text);
         let out = ex.run_doc(&doc);
         let mut rows: Vec<Vec<String>> = out
-            .views
-            .values()
+            .views()
+            .iter()
             .flat_map(|rows| {
                 rows.iter().map(|t| {
                     t.iter()

@@ -384,10 +384,15 @@ impl SubgraphRunner for SoftwareSubgraphRunner {
         ext: &[&[Tuple]],
     ) -> Vec<Tuple> {
         let out = self.executors[id].run_doc_with(doc, tokens, ext, &HashMap::new());
-        out.views
-            .get(&format!("out{output_idx}"))
-            .cloned()
-            .unwrap_or_default()
+        // body outputs are registered positionally (`out0`, `out1`, …), so
+        // output_idx indexes the typed result directly; a miswired graph
+        // must fail loudly here, matching AccelSubgraphRunner
+        assert!(
+            output_idx < out.num_views(),
+            "subgraph #{id} has {} outputs, output_idx {output_idx} is out of range",
+            out.num_views()
+        );
+        out.views()[output_idx].clone()
     }
 }
 
@@ -428,8 +433,8 @@ mod tests {
         .with_subgraph_runner(runner);
         let out = ex.run_doc(&Document::new(0, text));
         let mut rows: Vec<Vec<String>> = out
-            .views
-            .values()
+            .views()
+            .iter()
             .flat_map(|rows| rows.iter().map(|t| t.iter().map(|v| v.to_string()).collect()))
             .collect();
         rows.sort();
@@ -440,8 +445,8 @@ mod tests {
         let ex = Executor::new(Arc::new(g.clone()), Arc::new(Profiler::disabled()));
         let out = ex.run_doc(&Document::new(0, text));
         let mut rows: Vec<Vec<String>> = out
-            .views
-            .values()
+            .views()
+            .iter()
             .flat_map(|rows| rows.iter().map(|t| t.iter().map(|v| v.to_string()).collect()))
             .collect();
         rows.sort();

@@ -1,23 +1,32 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute work packages.
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute work packages
+//! — plus the bounded work [`queue`] shared by the SW and HW schedulers.
 //!
-//! This is the only place the `xla` crate is touched. Artifacts are the
-//! HLO-text files produced by `python/compile/aot.py` (`make artifacts`);
-//! one [`xla::PjRtLoadedExecutable`] is compiled and cached per
-//! [`ArtifactKey`] variant. Python never runs here — the binary is
-//! self-contained once `artifacts/` exists.
+//! This is the only place the `xla` crate is touched, and only when the
+//! `pjrt` cargo feature is enabled. Artifacts are the HLO-text files
+//! produced by `python/compile/aot.py` (`make artifacts`); one
+//! `PjRtLoadedExecutable` is compiled and cached per [`ArtifactKey`]
+//! variant. Python never runs here — the binary is self-contained once
+//! `artifacts/` exists.
 //!
 //! Two [`PackageEngine`] implementations exist:
-//! * [`PjrtPackageEngine`] — the real path: `PjRtClient::cpu()` →
-//!   `HloModuleProto::from_text_file` → `compile` → `execute`;
+//! * `PjrtPackageEngine` (feature `pjrt`) — the real path:
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//!   `execute`;
 //! * [`NativePackageEngine`] — a pure-Rust table scan with identical
 //!   semantics, used as a differential oracle in tests and as a fallback
-//!   when `artifacts/` has not been built.
+//!   when `artifacts/` has not been built (or the feature is off).
 
+pub mod queue;
+
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
 
 use crate::hwcompiler::{ArtifactKey, STREAMS};
 
@@ -73,8 +82,15 @@ impl EngineSpec {
     pub fn build(&self) -> Result<Box<dyn PackageEngine>> {
         Ok(match self {
             EngineSpec::Native => Box::new(NativePackageEngine),
+            #[cfg(feature = "pjrt")]
             EngineSpec::Pjrt { artifacts_dir } => {
                 Box::new(PjrtPackageEngine::new(artifacts_dir.clone())?)
+            }
+            #[cfg(not(feature = "pjrt"))]
+            EngineSpec::Pjrt { .. } => {
+                return Err(anyhow::anyhow!(
+                    "this build has no PJRT support (rebuild with `--features pjrt`)"
+                ))
             }
         })
     }
@@ -89,12 +105,14 @@ impl EngineSpec {
 }
 
 /// The real PJRT-backed engine.
+#[cfg(feature = "pjrt")]
 pub struct PjrtPackageEngine {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
     cache: Mutex<HashMap<ArtifactKey, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtPackageEngine {
     /// Create a CPU PJRT client reading artifacts from `dir`.
     pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
@@ -139,6 +157,7 @@ impl PjrtPackageEngine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl PackageEngine for PjrtPackageEngine {
     fn run(&self, key: ArtifactKey, pkg: &PackedPackage) -> Result<PackageHits> {
         debug_assert_eq!(pkg.machines, key.machines);
@@ -182,7 +201,9 @@ impl PackageEngine for PjrtPackageEngine {
 
 /// Convert the dense `[M, STREAMS, block]` hit tensor to sparse events,
 /// using the counts to skip empty (machine, stream) rows without scanning
-/// them.
+/// them. (Only the PJRT path returns dense tensors; the native engine
+/// emits sparse hits directly — hence unused without the feature.)
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn sparsify(
     hits: &[i32],
     counts: &[i32],

@@ -1,0 +1,200 @@
+//! Bounded MPMC work queue — the one scheduler primitive shared by the
+//! software and hardware paths.
+//!
+//! A [`Session`](crate::coordinator::Session) feeds its worker pool through
+//! one of these, and [`AccelService`](crate::accel::AccelService) receives
+//! package submissions through another, so producers on either path get
+//! the same behaviour: a full queue *blocks the producer* (backpressure)
+//! instead of buffering unboundedly, and every queue exports the same
+//! [`QueueStats`] gauges (depth, high-water, stall count).
+//!
+//! Built on [`std::sync::mpsc::sync_channel`]; the receiver half is
+//! mutex-wrapped so a pool of consumers can share it (workers queue on the
+//! mutex while one blocks in `recv`, which is equivalent to all of them
+//! blocking on the channel).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::{QueueSnapshot, QueueStats};
+
+/// Producer half. Cloneable; all clones feed the same queue.
+pub struct QueueTx<T> {
+    tx: SyncSender<T>,
+    stats: Arc<QueueStats>,
+}
+
+impl<T> Clone for QueueTx<T> {
+    fn clone(&self) -> Self {
+        QueueTx {
+            tx: self.tx.clone(),
+            stats: self.stats.clone(),
+        }
+    }
+}
+
+/// Consumer half. Shareable across a worker pool via `Arc`.
+pub struct QueueRx<T> {
+    rx: Mutex<Receiver<T>>,
+    stats: Arc<QueueStats>,
+}
+
+/// Create a bounded queue holding at most `depth` items (≥ 1).
+pub fn bounded<T>(depth: usize) -> (QueueTx<T>, QueueRx<T>) {
+    let (tx, rx) = sync_channel(depth.max(1));
+    let stats = Arc::new(QueueStats::default());
+    (
+        QueueTx {
+            tx,
+            stats: stats.clone(),
+        },
+        QueueRx {
+            rx: Mutex::new(rx),
+            stats,
+        },
+    )
+}
+
+impl<T> QueueTx<T> {
+    /// Push one item, blocking while the queue is full (backpressure).
+    /// Returns the item back when every consumer is gone.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        match self.tx.try_send(item) {
+            Ok(()) => {
+                self.stats.on_push();
+                Ok(())
+            }
+            Err(TrySendError::Full(item)) => {
+                self.stats.on_stall();
+                match self.tx.send(item) {
+                    Ok(()) => {
+                        self.stats.on_push();
+                        Ok(())
+                    }
+                    Err(e) => Err(e.0),
+                }
+            }
+            Err(TrySendError::Disconnected(item)) => Err(item),
+        }
+    }
+
+    /// The queue's gauges (shared with the consumer half).
+    pub fn stats(&self) -> &Arc<QueueStats> {
+        &self.stats
+    }
+
+    /// Snapshot the gauges.
+    pub fn snapshot(&self) -> QueueSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+impl<T> QueueRx<T> {
+    /// Pop one item, blocking while the queue is empty. Returns `None`
+    /// once every producer is gone and the queue has drained — the
+    /// consumer's termination signal.
+    pub fn pop(&self) -> Option<T> {
+        let item = self.rx.lock().unwrap().recv().ok();
+        if item.is_some() {
+            self.stats.on_pop();
+        }
+        item
+    }
+
+    /// Pop without blocking; `None` when the queue is currently empty or
+    /// closed.
+    pub fn try_pop(&self) -> Option<T> {
+        match self.rx.lock().unwrap().try_recv() {
+            Ok(item) => {
+                self.stats.on_pop();
+                Some(item)
+            }
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// The queue's gauges (shared with the producer half).
+    pub fn stats(&self) -> &Arc<QueueStats> {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_single_producer_consumer() {
+        let (tx, rx) = bounded::<u32>(4);
+        for i in 0..4 {
+            tx.push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(rx.pop(), Some(i));
+        }
+        assert_eq!(rx.try_pop(), None);
+    }
+
+    #[test]
+    fn pop_returns_none_after_producers_drop() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.push(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.pop(), Some(7));
+        assert_eq!(rx.pop(), None);
+    }
+
+    #[test]
+    fn push_fails_after_consumer_drops() {
+        let (tx, rx) = bounded::<u32>(2);
+        drop(rx);
+        assert_eq!(tx.push(1), Err(1));
+    }
+
+    #[test]
+    fn full_queue_blocks_and_counts_stalls() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.push(0).unwrap();
+        let unblocked = Arc::new(AtomicUsize::new(0));
+        let flag = unblocked.clone();
+        let t = std::thread::spawn(move || {
+            tx.push(1).unwrap(); // must block until the pop below
+            flag.store(1, Ordering::SeqCst);
+            tx.snapshot()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(unblocked.load(Ordering::SeqCst), 0, "push must block on a full queue");
+        assert_eq!(rx.pop(), Some(0));
+        let snap = t.join().unwrap();
+        assert_eq!(unblocked.load(Ordering::SeqCst), 1);
+        assert!(snap.stalls >= 1, "the blocked push must be counted as a stall");
+        assert_eq!(snap.pushed, 2);
+    }
+
+    #[test]
+    fn shared_consumers_drain_everything_once() {
+        let (tx, rx) = bounded::<usize>(8);
+        let rx = Arc::new(rx);
+        let seen = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let rx = rx.clone();
+            let seen = seen.clone();
+            handles.push(std::thread::spawn(move || {
+                while rx.pop().is_some() {
+                    seen.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for i in 0..100 {
+            tx.push(i).unwrap();
+        }
+        drop(tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(seen.load(Ordering::Relaxed), 100);
+    }
+}

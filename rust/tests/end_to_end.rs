@@ -12,9 +12,8 @@ use boost::text::Document;
 fn doc_rows(engine: &Engine, doc: &Document) -> Vec<String> {
     let mut rows: Vec<String> = engine
         .run_doc(doc)
-        .views
         .iter()
-        .flat_map(|(v, rows)| rows.iter().map(move |t| format!("{v}:{t:?}")))
+        .flat_map(|(h, rows)| rows.iter().map(move |t| format!("{}:{t:?}", h.name())))
         .collect();
     rows.sort();
     rows
@@ -184,7 +183,7 @@ fn aql_from_file_flow() {
     let aql = std::fs::read_to_string(&path).unwrap();
     let engine = Engine::compile_aql(&aql).unwrap();
     let out = engine.run_doc(&Document::new(0, "Alice met Bob"));
-    assert_eq!(out.views["Caps"].len(), 2); // Alice, Bob
+    assert_eq!(out["Caps"].len(), 2); // Alice, Bob
 }
 
 #[test]
@@ -209,14 +208,14 @@ fn minus_and_block_operators() {
     let engine = Engine::compile_aql(aql).unwrap();
     let text = "Alice at IBM saw 10 11 12 and then 99 alone; Globex and Bob.";
     let out = engine.run_doc(&Document::new(0, text));
-    let caps: Vec<&str> = out.views["NonOrgCaps"]
+    let caps: Vec<&str> = out["NonOrgCaps"]
         .iter()
         .map(|t| t[0].as_span().text(text))
         .collect();
     assert!(caps.contains(&"Alice") && caps.contains(&"Bob"));
     assert!(!caps.contains(&"IBM") && !caps.contains(&"Globex"));
     // 10 11 12 cluster (gaps of 1 char); 99 is alone (min 2)
-    let clusters = &out.views["NumCluster"];
+    let clusters = &out["NumCluster"];
     assert_eq!(clusters.len(), 1, "{clusters:?}");
     assert_eq!(clusters[0][0].as_span().text(text), "10 11 12");
 
@@ -248,7 +247,7 @@ fn dictionary_from_file() {
     let engine = Engine::compile_aql(&aql).unwrap();
     let text = "Globex bought IBM Research.";
     let out = engine.run_doc(&Document::new(0, text));
-    let hits: Vec<&str> = out.views["O"]
+    let hits: Vec<&str> = out["O"]
         .iter()
         .map(|t| t[0].as_span().text(text))
         .collect();

@@ -2,9 +2,12 @@
 //! and executed through PJRT, differentially tested against the pure-Rust
 //! engine and against the software matchers.
 //!
-//! Requires `artifacts/` (run `make artifacts` first). Tests are skipped
-//! gracefully if the directory is missing so `cargo test` works in a fresh
-//! checkout, but CI/Make always builds artifacts first.
+//! Requires the `pjrt` cargo feature (the whole file is compiled out
+//! otherwise) and `artifacts/` (run `make artifacts` first). Tests are
+//! skipped gracefully if the directory is missing so `cargo test` works in
+//! a fresh checkout, but CI/Make always builds artifacts first.
+
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 
@@ -109,7 +112,7 @@ fn pjrt_backed_service_equals_pure_software() {
         Arc::new(plan.supergraph.clone()),
         Arc::new(Profiler::disabled()),
     )
-    .with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(service.clone())));
+    .with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(service.clone(), &plan)));
     // pure-software reference on the ORIGINAL graph
     let sw_exec = Executor::new(Arc::new(g.clone()), Arc::new(Profiler::disabled()));
 
@@ -121,11 +124,11 @@ fn pjrt_backed_service_equals_pure_software() {
     ];
     for (i, t) in texts.iter().enumerate() {
         let doc = Document::new(i as u64, *t);
-        let mut a: Vec<String> = accel_exec.run_doc(&doc).views["PersonOrg"]
+        let mut a: Vec<String> = accel_exec.run_doc(&doc)["PersonOrg"]
             .iter()
             .map(|t| format!("{t:?}"))
             .collect();
-        let mut b: Vec<String> = sw_exec.run_doc(&doc).views["PersonOrg"]
+        let mut b: Vec<String> = sw_exec.run_doc(&doc)["PersonOrg"]
             .iter()
             .map(|t| format!("{t:?}"))
             .collect();

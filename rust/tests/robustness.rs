@@ -93,7 +93,7 @@ fn prop_engine_output_spans_in_bounds() {
         |text| {
             let doc = Document::new(0, text.as_str());
             let out = engine.run_doc(&doc);
-            out.views.values().flatten().all(|t| {
+            out.views().iter().flatten().all(|t| {
                 t.iter().all(|v| match v {
                     boost::aog::Value::Span(s) => {
                         s.begin <= s.end && s.end as usize <= text.len()

@@ -1,0 +1,269 @@
+//! Integration tests for the streaming `Session` API: equivalence with
+//! the corpus facade on every built-in query, the backpressure bound
+//! (queue depth Q + T threads documents in flight, no more), sink
+//! ordering/termination guarantees, and byte-identical per-document view
+//! tuples between the streamed path and `Engine::run_doc`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use boost::coordinator::{
+    CallbackSink, CollectSink, Engine, EngineConfig, ResultSink, RunReport,
+};
+use boost::corpus::CorpusSpec;
+use boost::exec::DocResult;
+use boost::partition::PartitionMode;
+use boost::runtime::EngineSpec;
+use boost::text::Document;
+
+#[test]
+fn session_matches_run_corpus_on_all_builtin_queries() {
+    // T1–T5: pushing one document at a time through a session must count
+    // exactly what the corpus facade (and per-document evaluation) counts.
+    let corpus = CorpusSpec::news(12, 1024).generate();
+    for q in boost::queries::all() {
+        let engine = Engine::compile_aql(&q.aql).unwrap();
+        let expected: usize = corpus
+            .docs
+            .iter()
+            .map(|d| engine.run_doc(d).total_tuples())
+            .sum();
+
+        let corpus_report = engine.run_corpus(&corpus, 4);
+        assert_eq!(corpus_report.tuples, expected, "{} run_corpus", q.name);
+
+        let mut session = engine.session().threads(4).queue_depth(2).start();
+        for d in &corpus.docs {
+            session.push(d.clone()).unwrap();
+        }
+        let report = session.finish();
+        assert_eq!(report.docs, corpus.docs.len(), "{}", q.name);
+        assert_eq!(report.bytes, corpus.total_bytes(), "{}", q.name);
+        assert_eq!(report.tuples, expected, "{} session", q.name);
+    }
+}
+
+#[test]
+fn streamed_t1_views_byte_identical_to_run_doc() {
+    // Acceptance criterion: a streamed run of T1 over the news corpus
+    // produces byte-identical view tuples to Engine::run_doc, document by
+    // document.
+    let q = boost::queries::builtin("t1").unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    let corpus = CorpusSpec::news(20, 1024).generate();
+
+    let sink = Arc::new(CollectSink::default());
+    let mut session = engine
+        .session()
+        .threads(4)
+        .queue_depth(4)
+        .sink(sink.clone())
+        .start();
+    for d in &corpus.docs {
+        session.push(d.clone()).unwrap();
+    }
+    session.finish();
+
+    let collected = sink.take();
+    assert_eq!(collected.len(), corpus.docs.len());
+    let by_id: HashMap<u64, DocResult> = collected
+        .into_iter()
+        .map(|(doc, result)| (doc.id, result))
+        .collect();
+    for d in &corpus.docs {
+        let streamed = &by_id[&d.id];
+        let sync = engine.run_doc(d);
+        // same views in the same order, tuple-for-tuple (Value equality
+        // covers spans byte-for-byte)
+        assert_eq!(streamed.views(), sync.views(), "doc {}", d.id);
+        for (h, rows) in sync.iter() {
+            assert_eq!(&streamed[h], rows, "doc {} view {}", d.id, h.name());
+        }
+    }
+}
+
+/// Sink that tracks concurrent `on_result` calls and (doc id, order).
+#[derive(Default)]
+struct ProbeSink {
+    order: Mutex<Vec<u64>>,
+    finishes: AtomicUsize,
+    finish_saw_all: AtomicBool,
+    finish_report_docs: AtomicUsize,
+}
+
+impl ResultSink for ProbeSink {
+    fn on_result(&self, doc: &Document, result: &DocResult) {
+        assert_eq!(doc.id, result.doc_id());
+        self.order.lock().unwrap().push(doc.id);
+    }
+
+    fn on_finish(&self, report: &RunReport) {
+        // on_finish must run exactly once, after every on_result
+        self.finishes.fetch_add(1, Ordering::SeqCst);
+        self.finish_saw_all.store(
+            self.order.lock().unwrap().len() == report.docs,
+            Ordering::SeqCst,
+        );
+        self.finish_report_docs.store(report.docs, Ordering::SeqCst);
+    }
+}
+
+#[test]
+fn callback_order_is_push_order_with_one_worker() {
+    let q = boost::queries::builtin("t1").unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    let sink = Arc::new(ProbeSink::default());
+    let mut session = engine
+        .session()
+        .threads(1)
+        .queue_depth(3)
+        .sink(sink.clone())
+        .start();
+    let corpus = CorpusSpec::news(24, 256).generate();
+    for d in &corpus.docs {
+        session.push(d.clone()).unwrap();
+    }
+    let report = session.finish();
+    assert_eq!(report.docs, 24);
+    let order = sink.order.lock().unwrap().clone();
+    assert_eq!(
+        order,
+        (0..24u64).collect::<Vec<_>>(),
+        "single-worker sessions must deliver results in push order"
+    );
+    assert_eq!(sink.finishes.load(Ordering::SeqCst), 1);
+    assert!(sink.finish_saw_all.load(Ordering::SeqCst));
+    assert_eq!(sink.finish_report_docs.load(Ordering::SeqCst), 24);
+}
+
+#[test]
+fn sink_sees_each_doc_once_and_terminates_with_many_workers() {
+    let q = boost::queries::builtin("t3").unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    let sink = Arc::new(ProbeSink::default());
+    let mut session = engine
+        .session()
+        .threads(4)
+        .queue_depth(2)
+        .sink(sink.clone())
+        .start();
+    let corpus = CorpusSpec::tweets(50, 128).generate();
+    for d in &corpus.docs {
+        session.push(d.clone()).unwrap();
+    }
+    session.finish();
+    let mut order = sink.order.lock().unwrap().clone();
+    order.sort_unstable();
+    assert_eq!(order, (0..50u64).collect::<Vec<_>>(), "each doc exactly once");
+    assert_eq!(sink.finishes.load(Ordering::SeqCst), 1);
+    assert!(sink.finish_saw_all.load(Ordering::SeqCst));
+}
+
+#[test]
+fn backpressure_bounds_in_flight_to_queue_plus_threads() {
+    // Acceptance criterion: with queue depth Q and T worker threads, at
+    // most Q + T documents are in flight. A slow sink forces the producer
+    // against the bound.
+    const Q: usize = 1;
+    const T: usize = 4;
+    const DOCS: usize = 64;
+
+    let q = boost::queries::builtin("t1").unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    // track processing concurrency independently of the session's counter
+    let concurrent = Arc::new(AtomicI64::new(0));
+    let max_concurrent = Arc::new(AtomicI64::new(0));
+    let (c, m) = (concurrent.clone(), max_concurrent.clone());
+    let slow_sink = Arc::new(CallbackSink::new(move |_doc: &Document, _r: &DocResult| {
+        let now = c.fetch_add(1, Ordering::SeqCst) + 1;
+        m.fetch_max(now, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(2));
+        c.fetch_sub(1, Ordering::SeqCst);
+    }));
+    let mut session = engine
+        .session()
+        .threads(T)
+        .queue_depth(Q)
+        .sink(slow_sink)
+        .start();
+    let corpus = CorpusSpec::news(DOCS, 256).generate();
+    let mut max_seen = 0;
+    for d in &corpus.docs {
+        session.push(d.clone()).unwrap();
+        max_seen = max_seen.max(session.in_flight());
+    }
+    // the producer outran the slow workers, so the queue must have filled
+    let queue = session.queue_snapshot();
+    let high_water = session.max_in_flight();
+    let report = session.finish();
+
+    assert_eq!(report.docs, DOCS);
+    assert!(
+        high_water <= Q + T,
+        "in-flight high water {high_water} exceeds queue({Q}) + threads({T})"
+    );
+    assert!(max_seen <= Q + T, "observed in-flight {max_seen} over bound");
+    assert!(
+        high_water > Q,
+        "with a saturated producer the pipeline should fill past the queue \
+         (high water {high_water} <= {Q})"
+    );
+    assert!(
+        queue.stalls > 0,
+        "queue depth {Q} with a slow sink must stall the producer at least once"
+    );
+    assert!(
+        max_concurrent.load(Ordering::SeqCst) <= T as i64,
+        "no more than {T} documents may be processed concurrently"
+    );
+}
+
+#[test]
+fn accelerated_session_equals_software_session() {
+    // HW and SW paths share the bounded-queue scheduler: a session over a
+    // partitioned engine (native package engine) must count exactly what
+    // the pure-software session counts.
+    let q = boost::queries::builtin("t1").unwrap();
+    let corpus = CorpusSpec::news(16, 512).generate();
+    let sw = Engine::compile_aql(&q.aql).unwrap();
+    let hw = Engine::with_config(
+        &q.aql,
+        EngineConfig::accelerated(PartitionMode::SingleSubgraph, EngineSpec::Native),
+    )
+    .unwrap();
+
+    let run = |engine: &Engine| {
+        let mut session = engine.session().threads(4).queue_depth(2).start();
+        for d in &corpus.docs {
+            session.push(d.clone()).unwrap();
+        }
+        session.finish()
+    };
+    let a = run(&sw);
+    let b = run(&hw);
+    assert_eq!(a.tuples, b.tuples);
+    assert_eq!(b.docs, corpus.docs.len());
+    let snap = hw.accel_snapshot().unwrap();
+    assert!(snap.packages > 0, "accelerator must have been exercised");
+    // the submission queue's gauges come from the same machinery
+    let accel_queue = hw.accel_queue_snapshot().unwrap();
+    assert_eq!(accel_queue.pushed, snap.docs);
+    hw.shutdown();
+}
+
+#[test]
+fn push_batch_and_counters() {
+    let q = boost::queries::builtin("t2").unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    let corpus = CorpusSpec::logs(30, 256).generate();
+    let mut session = engine.session().threads(2).queue_depth(4).start();
+    let n = session.push_batch(corpus.docs.iter().cloned()).unwrap();
+    assert_eq!(n, 30);
+    assert_eq!(session.pushed(), 30);
+    let report = session.finish();
+    assert_eq!(report.docs, 30);
+    assert_eq!(report.threads, 2);
+    assert!(report.wall > Duration::ZERO);
+}
