@@ -373,10 +373,20 @@ fn run_package(
     };
 
     let t1 = Instant::now();
+    // Normalize the hit stream before reconstruction: the transport layer
+    // may deliver records duplicated or out of order (the simulator's
+    // fault-injection hooks model exactly this), and span reconstruction
+    // requires per-document ends in increasing order with no repeats.
+    // Sorting by (machine, stream, position, state) and deduping makes the
+    // stream canonical whatever the device did.
+    let mut events = hits.hits;
+    events.sort_unstable();
+    events.dedup();
+
     // Group hits per (doc, machine): slots are sorted by (stream, offset).
     let mut per_doc_machine: Vec<Vec<Vec<(usize, u32)>>> =
         vec![vec![Vec::new(); prep.config.machines.len()]; batch.len()];
-    for &(m, stream, pos, state) in &hits.hits {
+    for &(m, stream, pos, state) in &events {
         if m >= prep.config.machines.len() {
             continue; // padding machine can never hit, but be defensive
         }
@@ -430,7 +440,10 @@ fn run_package(
     let post_ns = t1.elapsed().as_nanos() as u64;
 
     let payload: usize = wp.slots.iter().map(|s| s.len).sum();
-    let modeled = options.model.package_time(payload, wp.slots.len());
+    // every engine reports the fixed-size block scan it performs
+    // (PackageHits::cycles is always the full-block figure), so the
+    // modeled time charges cycles, not payload bytes
+    let modeled = options.model.package_time_cycles(hits.cycles, wp.slots.len());
     metrics.record_package(
         wp.slots.len() as u64,
         payload as u64,
@@ -438,6 +451,7 @@ fn run_package(
         engine_ns,
         post_ns,
         (modeled * 1e9) as u64,
+        hits.cycles,
     );
     // status-register signal: wake the workers of this package
     for (reply, outputs) in replies {

@@ -45,7 +45,9 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             mode: PartitionMode::None,
-            engine: EngineSpec::Native,
+            // the deterministic simulator is the default backend: every
+            // build (no XLA toolchain required) exercises the full HW path
+            engine: EngineSpec::default(),
             accel: AccelOptions::default(),
             profile: true,
             optimize: true,
@@ -66,6 +68,12 @@ impl EngineConfig {
             engine,
             ..Default::default()
         }
+    }
+
+    /// Accelerated configuration over the deterministic simulator — the
+    /// default hardware path when `pjrt` is off.
+    pub fn simulated(mode: PartitionMode) -> EngineConfig {
+        EngineConfig::accelerated(mode, EngineSpec::default())
     }
 }
 
@@ -225,6 +233,12 @@ impl Engine {
         self.service.as_ref().map(|s| s.queue_snapshot())
     }
 
+    /// The simulator's counters (packages, cycles, injected faults), when
+    /// this engine runs over [`EngineSpec::Sim`].
+    pub fn sim_snapshot(&self) -> Option<crate::runtime::SimSnapshot> {
+        self.config.engine.sim_stats().map(|s| s.snapshot())
+    }
+
     /// Drive a fully-materialized corpus with `threads` workers — a thin
     /// wrapper over [`Engine::session`] (document-per-thread over the
     /// bounded queue, the paper's execution model). Streaming producers
@@ -327,6 +341,35 @@ mod tests {
             assert_eq!(a, b);
         }
         assert!(hw.accel_snapshot().unwrap().packages > 0);
+        hw.shutdown();
+    }
+
+    #[test]
+    fn simulated_engine_matches_software_and_reports_sim_stats() {
+        let corpus = CorpusSpec::news(6, 512).generate();
+        let sw = Engine::compile_aql(&t1_aql()).unwrap();
+        let hw = Engine::with_config(
+            &t1_aql(),
+            EngineConfig::simulated(PartitionMode::SingleSubgraph),
+        )
+        .unwrap();
+        for d in &corpus.docs {
+            assert_eq!(
+                sw.run_doc(d).total_tuples(),
+                hw.run_doc(d).total_tuples(),
+                "doc {}",
+                d.id
+            );
+        }
+        let sim = hw.sim_snapshot().expect("simulated engine has sim stats");
+        assert!(sim.packages > 0, "the simulator must have scanned packages");
+        assert!(sim.cycles > 0);
+        assert_eq!(sim.faults, 0);
+        let accel = hw.accel_snapshot().unwrap();
+        assert_eq!(accel.packages, sim.packages);
+        assert_eq!(accel.cycles, sim.cycles);
+        // a software-only engine never runs the simulator
+        assert_eq!(sw.sim_snapshot().map(|s| s.packages), Some(0));
         hw.shutdown();
     }
 

@@ -308,7 +308,10 @@ mod tests {
         }
     }
 
-    /// Differential test against the vendored aho-corasick crate (oracle).
+    /// Differential test against the third-party aho-corasick crate
+    /// (oracle). Gated like the regex oracle tests — the offline build has
+    /// no external dev-dependencies (see Cargo.toml `oracle-tests`).
+    #[cfg(feature = "oracle-tests")]
     #[test]
     fn oracle_differential() {
         use crate::util::Prng;

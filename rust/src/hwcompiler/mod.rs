@@ -54,6 +54,19 @@ impl ArtifactKey {
             self.machines, self.states, self.block
         )
     }
+
+    /// Expected dense tensor lengths for this variant:
+    /// `(byte_lane_values, table_entries, accept_entries)`. Package
+    /// engines validate incoming [`crate::runtime::PackedPackage`]s
+    /// against these — a mismatch means a truncated or mis-packed
+    /// transfer.
+    pub fn tensor_sizes(&self) -> (usize, usize, usize) {
+        (
+            STREAMS * self.block,
+            self.machines * self.states * 256,
+            self.machines * self.states,
+        )
+    }
 }
 
 /// What a machine's hit stream means (how the post-stage reconstructs
@@ -362,6 +375,11 @@ mod tests {
             block: 4096,
         };
         assert_eq!(k.file_name(), "dfa_m8_s256_b4096.hlo.txt");
+        assert_eq!(
+            k.tensor_sizes(),
+            (4 * 4096, 8 * 256 * 256, 8 * 256),
+            "tensor sizes must match the kernel layout"
+        );
     }
 
     #[test]

@@ -74,6 +74,28 @@
 //! and a calibrated performance model ([`perfmodel`]) reproduces the
 //! paper's FPGA timing for the figures.
 //!
+//! ## The accelerator simulator and the differential test strategy
+//!
+//! When `pjrt` is off (the default build), the accelerator is the
+//! **deterministic simulator** [`runtime::sim::SimPackageEngine`]: it
+//! interprets the hwcompiler's compiled artifacts directly over packed
+//! work packages and emits the exact hit-stream encoding the Pallas
+//! kernel produces, plus device modelling the kernel can't give you in
+//! CI — package validation (truncated transfers are rejected, not
+//! scanned), cycle accounting (fed to [`perfmodel`] for modeled
+//! throughput), configurable per-package latency (backpressure tests),
+//! and deterministic fault injection (duplicated/reordered hit records,
+//! failing packages) to drive the robustness path.
+//!
+//! Correctness rests on a three-route differential harness
+//! (`rust/tests/differential.rs`): pure-software execution, the full
+//! `Session` + `AccelService` pipeline over the simulator, and
+//! synchronous `run_doc` on the simulated engine must produce
+//! byte-identical views on randomized corpora. Golden-view snapshots
+//! (`rust/tests/golden_views.rs`) pin the bundled queries' output shapes
+//! over a committed corpus. See `TESTING.md` at the repo root for how to
+//! switch engines, bless snapshots, and add golden queries.
+//!
 //! ## Layer map
 //! * L3 (this crate): coordination — everything under [`aql`], [`aog`],
 //!   [`exec`], [`partition`], [`hwcompiler`], [`accel`], [`coordinator`].
@@ -112,5 +134,6 @@ pub mod prelude {
     pub use crate::exec::{DocResult, Profile, ViewCatalog, ViewHandle};
     pub use crate::partition::PartitionPlan;
     pub use crate::perfmodel::FpgaModel;
+    pub use crate::runtime::{EngineSpec, FaultPlan, SimSpec};
     pub use crate::text::Span;
 }

@@ -57,7 +57,10 @@ const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream>
   --query <t1..t5>       built-in query (default t1)
   --aql <file>           AQL file instead of a built-in
   --mode <none|extract|single|multi>   offload scenario (default none)
-  --engine <native|pjrt> accelerator backend (default native)
+  --engine <sim|native|pjrt>  accelerator backend (default sim — the
+                         deterministic simulator; native is the minimal
+                         reference scan; pjrt needs --features pjrt)
+  --sim-latency-us <n>   simulator per-package latency (default 0)
   --artifacts <dir>      artifacts directory (default ./artifacts)
   --docs <n>             corpus size (default 200)
   --doc-size <bytes>     document size (default 2048)
@@ -123,7 +126,17 @@ fn corpus_for(flags: &HashMap<String, String>) -> CorpusSpec {
 fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String> {
     let mode = PartitionMode::parse(flags.get("mode").map(|s| s.as_str()).unwrap_or("none"))
         .ok_or("bad --mode")?;
-    let engine = match flags.get("engine").map(|s| s.as_str()).unwrap_or("native") {
+    let engine = match flags.get("engine").map(|s| s.as_str()).unwrap_or("sim") {
+        "sim" => {
+            let mut spec = boost::runtime::SimSpec::default();
+            if let Some(v) = flags.get("sim-latency-us") {
+                let us: u64 = v
+                    .parse()
+                    .map_err(|_| format!("bad --sim-latency-us '{v}' (expected microseconds)"))?;
+                spec = spec.with_latency(std::time::Duration::from_micros(us));
+            }
+            EngineSpec::Sim(spec)
+        }
         "native" => EngineSpec::Native,
         "pjrt" => EngineSpec::Pjrt {
             artifacts_dir: flags
@@ -134,6 +147,9 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
         },
         other => return Err(format!("bad --engine '{other}'")),
     };
+    if flags.contains_key("sim-latency-us") && !matches!(engine, EngineSpec::Sim(_)) {
+        return Err("--sim-latency-us only applies to --engine sim".into());
+    }
     let mut cfg = EngineConfig::accelerated(mode, engine);
     if let Some(b) = flags.get("block").and_then(|s| s.parse().ok()) {
         cfg.accel.block = b;
@@ -277,6 +293,12 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
             "  modeled FPGA throughput: {}",
             fmt_mbps(a.modeled_throughput())
         );
+        if let Some(sim) = engine.sim_snapshot() {
+            println!(
+                "  sim: {} packages, {} device cycles, {} faults injected",
+                sim.packages, sim.cycles, sim.faults
+            );
+        }
         let doc_size = corpus.docs.first().map(|d| d.len()).unwrap_or(2048);
         let profile_frac = 0.97; // conservative hw-supported fraction
         let est = FpgaModel::paper().estimate(

@@ -14,6 +14,9 @@ pub struct QueueStats {
     /// Pushes that found the queue full and had to block (backpressure
     /// events on the producer side).
     pub stalls: AtomicU64,
+    /// Total wall nanoseconds producers spent blocked on a full queue —
+    /// the backpressure *time*, complementing the stall *count*.
+    pub blocked_ns: AtomicU64,
     /// Items currently queued (may transiently read negative under
     /// producer/consumer races; clamped to zero in snapshots).
     depth: AtomicI64,
@@ -34,6 +37,11 @@ impl QueueStats {
         self.stalls.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record how long a stalled producer stayed blocked.
+    pub fn on_blocked(&self, ns: u64) {
+        self.blocked_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
     /// Record one pop.
     pub fn on_pop(&self) {
         self.depth.fetch_sub(1, Ordering::Relaxed);
@@ -44,6 +52,7 @@ impl QueueStats {
         QueueSnapshot {
             pushed: self.pushed.load(Ordering::Relaxed),
             stalls: self.stalls.load(Ordering::Relaxed),
+            blocked_ns: self.blocked_ns.load(Ordering::Relaxed),
             depth: self.depth.load(Ordering::Relaxed).max(0) as u64,
             high_water: self.high_water.load(Ordering::Relaxed).max(0) as u64,
         }
@@ -55,6 +64,8 @@ impl QueueStats {
 pub struct QueueSnapshot {
     pub pushed: u64,
     pub stalls: u64,
+    /// Total producer-blocked wall time, ns.
+    pub blocked_ns: u64,
     pub depth: u64,
     pub high_water: u64,
 }
@@ -77,6 +88,9 @@ pub struct AccelMetrics {
     pub post_wall_ns: AtomicU64,
     /// Modeled FPGA nanoseconds (perfmodel package_time accumulation).
     pub modeled_ns: AtomicU64,
+    /// Simulated device cycles reported by the package engine (zero when
+    /// the engine has no cycle model).
+    pub cycles: AtomicU64,
 }
 
 /// A point-in-time copy of [`AccelMetrics`].
@@ -89,10 +103,12 @@ pub struct AccelSnapshot {
     pub engine_wall_ns: u64,
     pub post_wall_ns: u64,
     pub modeled_ns: u64,
+    pub cycles: u64,
 }
 
 impl AccelMetrics {
     /// Add one package's worth of counters.
+    #[allow(clippy::too_many_arguments)]
     pub fn record_package(
         &self,
         docs: u64,
@@ -101,6 +117,7 @@ impl AccelMetrics {
         engine_wall_ns: u64,
         post_wall_ns: u64,
         modeled_ns: u64,
+        cycles: u64,
     ) {
         self.packages.fetch_add(1, Ordering::Relaxed);
         self.docs.fetch_add(docs, Ordering::Relaxed);
@@ -109,6 +126,7 @@ impl AccelMetrics {
         self.engine_wall_ns.fetch_add(engine_wall_ns, Ordering::Relaxed);
         self.post_wall_ns.fetch_add(post_wall_ns, Ordering::Relaxed);
         self.modeled_ns.fetch_add(modeled_ns, Ordering::Relaxed);
+        self.cycles.fetch_add(cycles, Ordering::Relaxed);
     }
 
     /// Snapshot all counters.
@@ -121,6 +139,7 @@ impl AccelMetrics {
             engine_wall_ns: self.engine_wall_ns.load(Ordering::Relaxed),
             post_wall_ns: self.post_wall_ns.load(Ordering::Relaxed),
             modeled_ns: self.modeled_ns.load(Ordering::Relaxed),
+            cycles: self.cycles.load(Ordering::Relaxed),
         }
     }
 }
@@ -152,13 +171,14 @@ mod tests {
     #[test]
     fn record_and_snapshot() {
         let m = AccelMetrics::default();
-        m.record_package(8, 16384, 12, 1000, 500, 30_000);
-        m.record_package(4, 8192, 3, 900, 400, 20_000);
+        m.record_package(8, 16384, 12, 1000, 500, 30_000, 16384);
+        m.record_package(4, 8192, 3, 900, 400, 20_000, 4096);
         let s = m.snapshot();
         assert_eq!(s.packages, 2);
         assert_eq!(s.docs, 12);
         assert_eq!(s.bytes, 24576);
         assert_eq!(s.hits, 15);
+        assert_eq!(s.cycles, 16384 + 4096);
         assert_eq!(s.docs_per_package(), 6.0);
         let tp = s.modeled_throughput();
         assert!((tp - 24576.0 / 50e-6).abs() / tp < 1e-9);
@@ -179,11 +199,14 @@ mod tests {
         q.on_push();
         q.on_pop();
         q.on_stall();
+        q.on_blocked(1_500);
+        q.on_blocked(500);
         let s = q.snapshot();
         assert_eq!(s.pushed, 3);
         assert_eq!(s.depth, 2);
         assert_eq!(s.high_water, 3);
         assert_eq!(s.stalls, 1);
+        assert_eq!(s.blocked_ns, 2_000);
     }
 
     #[test]

@@ -63,6 +63,22 @@ impl FpgaModel {
         self.t_pkg + n_docs as f64 * self.t_doc + stream.max(dma)
     }
 
+    /// The device clock implied by the model's raw bandwidth (4 streams at
+    /// one byte per cycle per stream → `bw_raw / STREAMS` Hz; 250 MHz with
+    /// the paper constants).
+    pub fn clock_hz(&self) -> f64 {
+        self.bw_raw / crate::hwcompiler::STREAMS as f64
+    }
+
+    /// Modeled package time from a *cycle count* reported by a simulated
+    /// scan ([`crate::runtime::PackageHits::cycles`]) instead of payload
+    /// bytes. A full package (payload = 4 × block) gives exactly
+    /// [`FpgaModel::package_time`]; partial packages honestly charge the
+    /// fixed-size block scan the device actually performs.
+    pub fn package_time_cycles(&self, cycles: u64, n_docs: usize) -> f64 {
+        self.t_pkg + n_docs as f64 * self.t_doc + cycles as f64 / self.clock_hz()
+    }
+
     /// Sustained accelerator throughput (bytes/s) for uniform documents of
     /// `doc_size` bytes combined into packages of `pkg_bytes` — Fig 6.
     pub fn throughput(&self, doc_size: usize, pkg_bytes: usize) -> f64 {
@@ -210,6 +226,24 @@ mod tests {
         // DMA cap engages only when bus slower than stream — never with
         // paper constants
         assert!(m.bw_bus > m.bw_raw);
+    }
+
+    #[test]
+    fn cycle_model_agrees_with_byte_model_on_full_packages() {
+        let m = FpgaModel::paper();
+        assert!((m.clock_hz() - 250.0e6).abs() < 1.0);
+        for &block in crate::hwcompiler::BLOCK_SIZES {
+            // a full package streams 4 × block payload bytes in `block`
+            // cycles — the two accountings must coincide
+            let by_bytes = m.package_time(4 * block, 8);
+            let by_cycles = m.package_time_cycles(block as u64, 8);
+            assert!(
+                (by_bytes - by_cycles).abs() < 1e-12,
+                "block {block}: {by_bytes} vs {by_cycles}"
+            );
+            // a half-full package still pays the full block scan
+            assert!(m.package_time_cycles(block as u64, 4) > m.package_time(2 * block, 4));
+        }
     }
 
     #[test]

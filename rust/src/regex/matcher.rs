@@ -293,9 +293,11 @@ mod tests {
     }
 }
 
-/// Differential tests against the vendored `regex` crate (dev-dependency;
-/// test oracle only — the engine itself never uses it).
-#[cfg(test)]
+/// Differential tests against the third-party `regex` crate (test oracle
+/// only — the engine itself never uses it). Gated behind the
+/// `oracle-tests` feature because the offline build carries no external
+/// dev-dependencies; see Cargo.toml for how to enable.
+#[cfg(all(test, feature = "oracle-tests"))]
 mod oracle_tests {
     use crate::regex::compile;
     // (no items from super needed — the oracle is the vendored regex crate)

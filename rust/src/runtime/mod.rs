@@ -8,15 +8,22 @@
 //! variant. Python never runs here — the binary is self-contained once
 //! `artifacts/` exists.
 //!
-//! Two [`PackageEngine`] implementations exist:
+//! Three [`PackageEngine`] implementations exist:
 //! * `PjrtPackageEngine` (feature `pjrt`) — the real path:
 //!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
 //!   `execute`;
-//! * [`NativePackageEngine`] — a pure-Rust table scan with identical
-//!   semantics, used as a differential oracle in tests and as a fallback
-//!   when `artifacts/` has not been built (or the feature is off).
+//! * [`SimPackageEngine`](sim::SimPackageEngine) — the deterministic
+//!   accelerator simulator (package validation, cycle accounting,
+//!   configurable latency, fault injection). The **default** backend when
+//!   `pjrt` is off, and the engine the differential test harness drives;
+//! * [`NativePackageEngine`] — a minimal pure-Rust table scan with
+//!   identical semantics, kept as an independent reference implementation
+//!   the simulator is differentially tested against.
 
 pub mod queue;
+pub mod sim;
+
+pub use sim::{FaultPlan, SimPackageEngine, SimSnapshot, SimSpec, SimStats};
 
 #[cfg(feature = "pjrt")]
 use std::collections::HashMap;
@@ -51,6 +58,12 @@ pub struct PackageHits {
     pub hits: Vec<(usize, usize, usize, u32)>,
     /// Per-(machine, stream) hit counts (from the L2 reduction).
     pub counts: Vec<i32>,
+    /// Device cycles spent scanning this package (one byte per stream per
+    /// cycle → `block` cycles; machines run in parallel). Every engine
+    /// reports this full-block figure — the scan is fixed-size whatever
+    /// the payload — and [`crate::perfmodel::FpgaModel::package_time_cycles`]
+    /// turns it into modeled seconds for the metrics.
+    pub cycles: u64,
 }
 
 /// Executes packed packages.
@@ -71,16 +84,32 @@ pub trait PackageEngine {
 /// thread.
 #[derive(Debug, Clone)]
 pub enum EngineSpec {
-    /// Pure-Rust table scan (no artifacts required).
+    /// Deterministic accelerator simulator (validation, latency, fault
+    /// injection, cycle stats). The default backend when `pjrt` is off.
+    Sim(SimSpec),
+    /// Pure-Rust table scan (no artifacts required) — the minimal
+    /// reference implementation the simulator is tested against.
     Native,
     /// PJRT CPU client over `artifacts/`.
     Pjrt { artifacts_dir: PathBuf },
 }
 
+impl Default for EngineSpec {
+    fn default() -> Self {
+        EngineSpec::sim()
+    }
+}
+
 impl EngineSpec {
+    /// A fresh default-configured simulator spec (no latency, no faults).
+    pub fn sim() -> EngineSpec {
+        EngineSpec::Sim(SimSpec::default())
+    }
+
     /// Materialize the engine (call on the thread that will use it).
     pub fn build(&self) -> Result<Box<dyn PackageEngine>> {
         Ok(match self {
+            EngineSpec::Sim(spec) => Box::new(SimPackageEngine::new(spec.clone())),
             EngineSpec::Native => Box::new(NativePackageEngine),
             #[cfg(feature = "pjrt")]
             EngineSpec::Pjrt { artifacts_dir } => {
@@ -98,8 +127,17 @@ impl EngineSpec {
     /// Short name for reports.
     pub fn name(&self) -> &'static str {
         match self {
+            EngineSpec::Sim(_) => "sim",
             EngineSpec::Native => "native",
             EngineSpec::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// The simulator's shared counters, when this spec is a simulator.
+    pub fn sim_stats(&self) -> Option<&std::sync::Arc<SimStats>> {
+        match self {
+            EngineSpec::Sim(spec) => Some(&spec.stats),
+            _ => None,
         }
     }
 }
@@ -191,6 +229,7 @@ impl PackageEngine for PjrtPackageEngine {
         Ok(PackageHits {
             hits: sparsify(&hits_dense, &counts, pkg.machines, pkg.block),
             counts,
+            cycles: pkg.block as u64,
         })
     }
 
@@ -201,10 +240,9 @@ impl PackageEngine for PjrtPackageEngine {
 
 /// Convert the dense `[M, STREAMS, block]` hit tensor to sparse events,
 /// using the counts to skip empty (machine, stream) rows without scanning
-/// them. (Only the PJRT path returns dense tensors; the native engine
-/// emits sparse hits directly — hence unused without the feature.)
-#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
-fn sparsify(
+/// them. Shared by the PJRT path (device output is dense) and the
+/// simulator (which reproduces the kernel's dense encoding exactly).
+pub(crate) fn sparsify(
     hits: &[i32],
     counts: &[i32],
     machines: usize,
@@ -253,7 +291,11 @@ impl PackageEngine for NativePackageEngine {
                 }
             }
         }
-        Ok(PackageHits { hits, counts })
+        Ok(PackageHits {
+            hits,
+            counts,
+            cycles: pkg.block as u64,
+        })
     }
 
     fn name(&self) -> &'static str {

@@ -66,7 +66,10 @@ impl<T> QueueTx<T> {
             }
             Err(TrySendError::Full(item)) => {
                 self.stats.on_stall();
-                match self.tx.send(item) {
+                let t0 = std::time::Instant::now();
+                let pushed = self.tx.send(item);
+                self.stats.on_blocked(t0.elapsed().as_nanos() as u64);
+                match pushed {
                     Ok(()) => {
                         self.stats.on_push();
                         Ok(())
@@ -170,6 +173,10 @@ mod tests {
         let snap = t.join().unwrap();
         assert_eq!(unblocked.load(Ordering::SeqCst), 1);
         assert!(snap.stalls >= 1, "the blocked push must be counted as a stall");
+        assert!(
+            snap.blocked_ns > 0,
+            "a push that waited ~50 ms must report nonzero blocked time"
+        );
         assert_eq!(snap.pushed, 2);
     }
 

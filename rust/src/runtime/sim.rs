@@ -1,0 +1,463 @@
+//! Deterministic accelerator simulator — the default [`PackageEngine`]
+//! when the `pjrt` feature is off, and the correctness oracle the
+//! differential test harness (`rust/tests/differential.rs`) drives.
+//!
+//! [`SimPackageEngine`] interprets the hwcompiler's compiled artifacts
+//! (padded DFA transition tables, Aho–Corasick automata, every
+//! [`BLOCK_SIZES`](crate::hwcompiler::BLOCK_SIZES) variant) directly over
+//! [`PackedPackage`] byte streams and emits exactly the hit-stream
+//! encoding the Pallas kernel produces: a dense `[M, STREAMS, block]`
+//! accepting-state tensor plus per-`(machine, stream)` counts, sparsified
+//! the same way the PJRT path sparsifies device output. Unlike
+//! [`NativePackageEngine`](super::NativePackageEngine) (the minimal
+//! independent reference scan), the simulator also models the *device*:
+//!
+//! * **validation** — malformed packages (truncated byte lanes, tables
+//!   that don't match the artifact geometry, out-of-range bytes, corrupt
+//!   transitions) are rejected with an error instead of a panic, the way
+//!   real hardware raises a status-register fault;
+//! * **timing** — a configurable per-package latency (a slow device for
+//!   backpressure tests) and a cycle counter (one byte per stream per
+//!   cycle, machines in parallel — the paper's 250 MHz × 4 streams), which
+//!   [`crate::perfmodel::FpgaModel::package_time_cycles`] converts to
+//!   modeled seconds;
+//! * **fault injection** — deterministic duplication/reordering of hit
+//!   records and every-Nth package failures, driving the robustness path
+//!   (the post-stage must normalize the hit stream; the service must fail
+//!   submissions cleanly rather than hang workers).
+//!
+//! Everything is deterministic: faults derive from a seeded [`Prng`], and
+//! the scan itself is a pure function of the package.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::hwcompiler::{ArtifactKey, STREAMS};
+use crate::util::Prng;
+
+use super::{sparsify, PackageEngine, PackageHits, PackedPackage};
+
+/// Which faults the simulator injects. Deterministic given the spec seed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Fail every Nth package with an error (0 disables). `1` fails every
+    /// package — the "device bricked" scenario.
+    pub fail_every: usize,
+    /// Emit every hit record twice (a transport-layer duplication bug the
+    /// post-stage must dedup).
+    pub duplicate_hits: bool,
+    /// Shuffle the hit-record stream (records may arrive out of
+    /// `(machine, stream, position)` order; the post-stage must sort).
+    pub reorder_hits: bool,
+}
+
+impl FaultPlan {
+    /// No faults — the clean device.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when no fault is configured.
+    pub fn is_none(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+/// Simulator counters. Shared via `Arc` so tests keep a handle while the
+/// engine itself lives on the communication thread.
+#[derive(Debug, Default)]
+pub struct SimStats {
+    /// Packages scanned successfully.
+    pub packages: AtomicU64,
+    /// Simulated device cycles (block bytes per stream, streams and
+    /// machines in parallel → `block` cycles per package).
+    pub cycles: AtomicU64,
+    /// Clean (pre-fault-injection) hit records produced.
+    pub hits: AtomicU64,
+    /// Faults injected (failed packages + packages with mutated hits).
+    pub faults: AtomicU64,
+}
+
+impl SimStats {
+    /// Point-in-time copy.
+    pub fn snapshot(&self) -> SimSnapshot {
+        SimSnapshot {
+            packages: self.packages.load(Ordering::Relaxed),
+            cycles: self.cycles.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            faults: self.faults.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of [`SimStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimSnapshot {
+    pub packages: u64,
+    pub cycles: u64,
+    pub hits: u64,
+    pub faults: u64,
+}
+
+/// Buildable simulator description (`Send + Clone`), carried by
+/// [`EngineSpec::Sim`](super::EngineSpec::Sim) and materialized on the
+/// communication thread. Cloning shares the stats handle, so the spec a
+/// caller keeps observes the engine the service runs.
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    /// Artificial per-package device latency (zero by default). A few
+    /// milliseconds here turns the simulator into the "slow accelerator"
+    /// that exercises submission-queue backpressure.
+    pub latency: Duration,
+    /// Fault-injection plan.
+    pub fault: FaultPlan,
+    /// Seed for the fault-injection PRNG (reorders are deterministic).
+    pub seed: u64,
+    /// Shared counters.
+    pub stats: Arc<SimStats>,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            latency: Duration::ZERO,
+            fault: FaultPlan::none(),
+            seed: 0x51D_ECA2,
+            stats: Arc::new(SimStats::default()),
+        }
+    }
+}
+
+impl SimSpec {
+    /// Set the per-package latency.
+    pub fn with_latency(mut self, latency: Duration) -> SimSpec {
+        self.latency = latency;
+        self
+    }
+
+    /// Set the fault plan.
+    pub fn with_fault(mut self, fault: FaultPlan) -> SimSpec {
+        self.fault = fault;
+        self
+    }
+
+    /// Set the fault-injection seed.
+    pub fn with_seed(mut self, seed: u64) -> SimSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// Snapshot the shared counters.
+    pub fn snapshot(&self) -> SimSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+/// The simulator engine. Confined to the communication thread like every
+/// [`PackageEngine`]; observable from outside through the shared
+/// [`SimStats`].
+pub struct SimPackageEngine {
+    spec: SimSpec,
+    prng: RefCell<Prng>,
+    seen: Cell<u64>,
+}
+
+impl SimPackageEngine {
+    /// Build from a spec (shares the spec's stats handle).
+    pub fn new(spec: SimSpec) -> SimPackageEngine {
+        let prng = RefCell::new(Prng::new(spec.seed));
+        SimPackageEngine {
+            spec,
+            prng,
+            seen: Cell::new(0),
+        }
+    }
+
+    /// The engine's stats handle.
+    pub fn stats(&self) -> &Arc<SimStats> {
+        &self.spec.stats
+    }
+
+    /// Reject packages whose tensors don't match the artifact geometry —
+    /// the simulator's stand-in for the device's status-register fault on
+    /// a truncated or corrupt DMA transfer.
+    fn validate(&self, key: ArtifactKey, pkg: &PackedPackage) -> Result<()> {
+        if pkg.machines != key.machines || pkg.states != key.states || pkg.block != key.block {
+            bail!(
+                "package geometry (m={}, s={}, b={}) does not match artifact {}",
+                pkg.machines,
+                pkg.states,
+                pkg.block,
+                key.file_name()
+            );
+        }
+        let (want_bytes, want_tables, want_accepts) = key.tensor_sizes();
+        if pkg.bytes.len() != want_bytes {
+            bail!(
+                "truncated package: {} byte-lane values, artifact {} expects {}",
+                pkg.bytes.len(),
+                key.file_name(),
+                want_bytes
+            );
+        }
+        if pkg.tables.len() != want_tables {
+            bail!(
+                "truncated tables: {} entries, artifact {} expects {}",
+                pkg.tables.len(),
+                key.file_name(),
+                want_tables
+            );
+        }
+        if pkg.accepts.len() != want_accepts {
+            bail!(
+                "truncated accepts: {} entries, artifact {} expects {}",
+                pkg.accepts.len(),
+                key.file_name(),
+                want_accepts
+            );
+        }
+        if let Some(&b) = pkg.bytes.iter().find(|&&b| !(0..256).contains(&b)) {
+            bail!("byte lane value {b} outside 0..256 (corrupt package)");
+        }
+        Ok(())
+    }
+}
+
+impl PackageEngine for SimPackageEngine {
+    fn run(&self, key: ArtifactKey, pkg: &PackedPackage) -> Result<PackageHits> {
+        self.validate(key, pkg)?;
+
+        if !self.spec.latency.is_zero() {
+            std::thread::sleep(self.spec.latency);
+        }
+
+        let n = self.seen.get() + 1;
+        self.seen.set(n);
+        let fault = self.spec.fault;
+        if fault.fail_every > 0 && n % fault.fail_every as u64 == 0 {
+            self.spec.stats.faults.fetch_add(1, Ordering::Relaxed);
+            bail!("injected device fault on package #{n}");
+        }
+
+        // The kernel's two-phase output: a dense [M, STREAMS, block] tensor
+        // holding the accepting state id at each position (0 elsewhere),
+        // plus the L2-reduced per-(machine, stream) counts.
+        let (m_n, s_n, block) = (pkg.machines, pkg.states, pkg.block);
+        let mut dense = vec![0i32; m_n * STREAMS * block];
+        let mut counts = vec![0i32; m_n * STREAMS];
+        for m in 0..m_n {
+            let table = &pkg.tables[m * s_n * 256..(m + 1) * s_n * 256];
+            let accept = &pkg.accepts[m * s_n..(m + 1) * s_n];
+            for s in 0..STREAMS {
+                let row = &pkg.bytes[s * block..(s + 1) * block];
+                let out = &mut dense[(m * STREAMS + s) * block..(m * STREAMS + s + 1) * block];
+                let mut state = 1usize; // START
+                for (i, &b) in row.iter().enumerate() {
+                    let next = table[state * 256 + b as usize];
+                    if !(0..s_n as i32).contains(&next) {
+                        bail!(
+                            "corrupt transition: machine {m} state {state} byte {b} -> {next} \
+                             (artifact has {s_n} states)"
+                        );
+                    }
+                    state = next as usize;
+                    if accept[state] > 0 {
+                        out[i] = state as i32;
+                        counts[m * STREAMS + s] += 1;
+                    }
+                }
+            }
+        }
+        let mut hits = sparsify(&dense, &counts, m_n, block);
+
+        self.spec.stats.packages.fetch_add(1, Ordering::Relaxed);
+        // One byte per stream per cycle, streams and machines in parallel:
+        // a package costs `block` cycles regardless of payload.
+        self.spec.stats.cycles.fetch_add(block as u64, Ordering::Relaxed);
+        self.spec
+            .stats
+            .hits
+            .fetch_add(hits.len() as u64, Ordering::Relaxed);
+
+        if fault.duplicate_hits || fault.reorder_hits {
+            self.spec.stats.faults.fetch_add(1, Ordering::Relaxed);
+            if fault.duplicate_hits {
+                let copy = hits.clone();
+                hits.extend(copy);
+            }
+            if fault.reorder_hits {
+                self.prng.borrow_mut().shuffle(&mut hits);
+            }
+        }
+
+        Ok(PackageHits {
+            hits,
+            counts,
+            cycles: block as u64,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwcompiler::compile_subgraph;
+    use crate::partition::{partition, PartitionMode};
+    use crate::runtime::NativePackageEngine;
+
+    const Q: &str = "create view V as extract regex /ab+/ on d.text as m from Document d; \
+                     output view V;";
+
+    fn packed(texts: &[&str], block: usize) -> (ArtifactKey, PackedPackage) {
+        let g = crate::optimizer::optimize(&crate::aql::compile(Q).unwrap());
+        let plan = partition(&g, PartitionMode::ExtractOnly);
+        let cfg = compile_subgraph(&plan.subgraphs[0]).unwrap();
+        let (tables, accepts) = cfg.pack_tables();
+        let mut bytes = vec![0i32; STREAMS * block];
+        for (s, t) in texts.iter().enumerate().take(STREAMS) {
+            for (i, b) in t.bytes().enumerate() {
+                bytes[s * block + i] = b as i32;
+            }
+        }
+        (
+            cfg.artifact_key(block),
+            PackedPackage {
+                bytes,
+                block,
+                tables: Arc::new(tables),
+                accepts: Arc::new(accepts),
+                machines: cfg.geometry.0,
+                states: cfg.geometry.1,
+            },
+        )
+    }
+
+    #[test]
+    fn sim_equals_native_engine() {
+        let (key, pkg) = packed(&["xxabbby", "", "ab", "ba\0abb"], 4096);
+        let sim = SimPackageEngine::new(SimSpec::default());
+        let a = sim.run(key, &pkg).unwrap();
+        let b = NativePackageEngine.run(key, &pkg).unwrap();
+        assert_eq!(a.hits, b.hits, "sim and native must agree exactly");
+        assert_eq!(a.counts, b.counts);
+        assert!(!a.hits.is_empty());
+        let snap = sim.stats().snapshot();
+        assert_eq!(snap.packages, 1);
+        assert_eq!(snap.cycles, 4096);
+        assert_eq!(snap.hits, a.hits.len() as u64);
+        assert_eq!(snap.faults, 0);
+    }
+
+    #[test]
+    fn truncated_package_is_rejected() {
+        let (key, mut pkg) = packed(&["ab"], 4096);
+        pkg.bytes.truncate(100);
+        let sim = SimPackageEngine::new(SimSpec::default());
+        let err = sim.run(key, &pkg).unwrap_err().to_string();
+        assert!(err.contains("truncated package"), "{err}");
+        assert_eq!(sim.stats().snapshot().packages, 0);
+    }
+
+    #[test]
+    fn geometry_mismatch_is_rejected() {
+        let (mut key, pkg) = packed(&["ab"], 4096);
+        key.block = 16384;
+        let sim = SimPackageEngine::new(SimSpec::default());
+        let err = sim.run(key, &pkg).unwrap_err().to_string();
+        assert!(err.contains("does not match artifact"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_byte_is_rejected() {
+        let (key, mut pkg) = packed(&["ab"], 4096);
+        pkg.bytes[7] = 300;
+        let sim = SimPackageEngine::new(SimSpec::default());
+        let err = sim.run(key, &pkg).unwrap_err().to_string();
+        assert!(err.contains("outside 0..256"), "{err}");
+    }
+
+    #[test]
+    fn truncated_tables_are_rejected() {
+        let (key, mut pkg) = packed(&["ab"], 4096);
+        let mut t = (*pkg.tables).clone();
+        t.truncate(t.len() - 256);
+        pkg.tables = Arc::new(t);
+        let sim = SimPackageEngine::new(SimSpec::default());
+        let err = sim.run(key, &pkg).unwrap_err().to_string();
+        assert!(err.contains("truncated tables"), "{err}");
+    }
+
+    #[test]
+    fn fail_every_nth_package() {
+        let (key, pkg) = packed(&["ab"], 4096);
+        let sim = SimPackageEngine::new(SimSpec::default().with_fault(FaultPlan {
+            fail_every: 2,
+            ..FaultPlan::none()
+        }));
+        assert!(sim.run(key, &pkg).is_ok());
+        assert!(sim.run(key, &pkg).is_err());
+        assert!(sim.run(key, &pkg).is_ok());
+        assert!(sim.run(key, &pkg).is_err());
+        let snap = sim.stats().snapshot();
+        assert_eq!(snap.packages, 2);
+        assert_eq!(snap.faults, 2);
+    }
+
+    #[test]
+    fn duplicate_and_reorder_faults_mutate_only_the_stream() {
+        let (key, pkg) = packed(&["xxabbby", "ab", "abab", ""], 4096);
+        let clean = SimPackageEngine::new(SimSpec::default())
+            .run(key, &pkg)
+            .unwrap();
+        let faulty = SimPackageEngine::new(SimSpec::default().with_fault(FaultPlan {
+            fail_every: 0,
+            duplicate_hits: true,
+            reorder_hits: true,
+        }))
+        .run(key, &pkg)
+        .unwrap();
+        assert_eq!(faulty.hits.len(), 2 * clean.hits.len());
+        // sorted + deduped, the faulty stream recovers the clean one — the
+        // exact normalization the accel post-stage applies
+        let mut norm = faulty.hits.clone();
+        norm.sort_unstable();
+        norm.dedup();
+        assert_eq!(norm, clean.hits);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (key, pkg) = packed(&["xxabbby", "ab", "abab", "bbb"], 4096);
+        let spec = SimSpec::default().with_fault(FaultPlan {
+            fail_every: 0,
+            duplicate_hits: false,
+            reorder_hits: true,
+        });
+        let a = SimPackageEngine::new(spec.clone()).run(key, &pkg).unwrap();
+        let b = SimPackageEngine::new(SimSpec {
+            stats: Arc::new(SimStats::default()),
+            ..spec
+        })
+        .run(key, &pkg)
+        .unwrap();
+        assert_eq!(a.hits, b.hits, "same seed, same shuffle");
+    }
+
+    #[test]
+    fn latency_is_applied() {
+        let (key, pkg) = packed(&["ab"], 4096);
+        let sim =
+            SimPackageEngine::new(SimSpec::default().with_latency(Duration::from_millis(5)));
+        let t0 = std::time::Instant::now();
+        sim.run(key, &pkg).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+}

@@ -134,6 +134,36 @@ fn shrink_failure<T: Shrink, P: FnMut(&T) -> bool>(mut worst: T, prop: &mut P) -
     worst
 }
 
+/// Document texts for work-package round-trip properties: lengths biased
+/// toward the cases that break packing — empty documents, single bytes,
+/// exact block fits, and one-short-of-block (the NUL-separator edge: an
+/// exact fit leaves no room for the separator byte) — over a small,
+/// matcher-relevant alphabet. NUL never appears (it is the package
+/// separator, reserved by the corpus contract).
+pub fn packing_corpus(
+    rng: &mut Prng,
+    max_docs: usize,
+    block: usize,
+    alphabet: &[u8],
+) -> Vec<String> {
+    debug_assert!(block >= 2);
+    debug_assert!(alphabet.iter().all(|&b| b != 0), "NUL is reserved");
+    // range() is half-open, so +1 keeps max_docs reachable
+    let n = rng.range(1, max_docs.max(1) + 1);
+    (0..n)
+        .map(|_| {
+            let len = match rng.below(10) {
+                0 => 0,
+                1 => 1,
+                2 => block,
+                3 => block - 1,
+                _ => rng.below((block / 8).clamp(2, 128)),
+            };
+            rng.string_over(alphabet, len)
+        })
+        .collect()
+}
+
 /// Generate a random ASCII string (printable subset) of length `< max_len`.
 pub fn ascii_string(rng: &mut Prng, max_len: usize) -> String {
     let len = rng.below(max_len.max(1));
@@ -172,6 +202,23 @@ mod tests {
             },
             |s| !s.contains('x'),
         );
+    }
+
+    #[test]
+    fn packing_corpus_profile() {
+        let mut rng = Prng::new(3);
+        let mut saw_empty = false;
+        let mut saw_boundary = false;
+        for _ in 0..200 {
+            for t in packing_corpus(&mut rng, 8, 64, b"ab c") {
+                assert!(t.len() <= 64);
+                assert!(!t.bytes().any(|b| b == 0));
+                saw_empty |= t.is_empty();
+                saw_boundary |= t.len() >= 63;
+            }
+        }
+        assert!(saw_empty, "the edge-case mix must include empty documents");
+        assert!(saw_boundary, "the mix must include block-boundary documents");
     }
 
     #[test]

@@ -1,0 +1,463 @@
+//! The differential test harness for the hardware path (ISSUE 2 tentpole).
+//!
+//! Randomized corpora are pushed through three routes —
+//!
+//!   A. the pure-software executor (`Engine::run_doc` on an unpartitioned
+//!      engine),
+//!   B. the full streaming pipeline: `Session` + `AccelService` over the
+//!      deterministic simulator (packing → communication thread →
+//!      simulated scan → hit-stream decoding → span reconstruction →
+//!      relational post-stage),
+//!   C. synchronous `run_doc` on the simulated-accelerator engine —
+//!
+//! and every route must produce byte-identical views, document by
+//! document. On top of that: a property-based `pack_group` → simulated
+//! scan → span-reconstruction round-trip across every compiled block
+//! size, fault-injection runs (duplicated/reordered hit records, failing
+//! devices) driving the robustness path, and backpressure under a slow
+//! simulated device.
+//!
+//! The corpus seed is fixed (reproducible CI) but overridable through the
+//! `BOOST_DIFF_SEED` environment variable for fuzzing sessions.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use boost::accel::{pack_group, AccelOptions, AccelService};
+use boost::coordinator::{CollectSink, Engine, EngineConfig};
+use boost::corpus::CorpusSpec;
+use boost::exec::DocResult;
+use boost::hwcompiler::{compile_subgraph, AccelConfig, MatcherRef, BLOCK_SIZES};
+use boost::partition::{partition, PartitionMode, PartitionPlan};
+use boost::runtime::{
+    EngineSpec, FaultPlan, PackageEngine, PackedPackage, SimPackageEngine, SimSpec,
+};
+use boost::text::{Document, TokenIndex};
+use boost::util::{prop, Prng};
+
+/// Fixed default seed; override with BOOST_DIFF_SEED=<u64> to fuzz.
+fn seed() -> u64 {
+    std::env::var("BOOST_DIFF_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1FF_2026)
+}
+
+/// Byte-exact rendering of every view tuple of one document. Lines are
+/// sorted so the comparison is insensitive to tuple order within a view
+/// (the content itself — spans, offsets, texts — must match byte for
+/// byte).
+fn render(doc: &Document, result: &DocResult) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    for (h, rows) in result.iter() {
+        for t in rows {
+            let mut line = format!("{}|{}|", doc.id, h.name());
+            for v in t {
+                match v {
+                    boost::aog::Value::Span(s) => {
+                        line.push_str(&format!("[{},{})={:?};", s.begin, s.end, s.text(&doc.text)))
+                    }
+                    other => line.push_str(&format!("{other};")),
+                }
+            }
+            lines.push(line);
+        }
+    }
+    lines.sort();
+    lines.join("\n")
+}
+
+/// Compile T1's subgraph configs for service-level tests (the same path
+/// `Engine::with_config` takes internally).
+fn t1_service_parts(mode: PartitionMode) -> (Vec<AccelConfig>, PartitionPlan) {
+    let q = boost::queries::builtin("t1").unwrap();
+    let g = boost::optimizer::optimize(&boost::aql::compile(&q.aql).unwrap());
+    let plan = partition(&g, mode);
+    let configs = plan
+        .subgraphs
+        .iter()
+        .map(|s| compile_subgraph(s).unwrap())
+        .collect();
+    (configs, plan)
+}
+
+#[test]
+fn three_routes_byte_identical_on_randomized_corpus() {
+    let q = boost::queries::builtin("t1").unwrap();
+    let sw = Engine::compile_aql(&q.aql).unwrap();
+    let hw = Engine::with_config(
+        &q.aql,
+        EngineConfig::simulated(PartitionMode::SingleSubgraph),
+    )
+    .unwrap();
+
+    // ≥ 200 randomized documents across all three corpus flavours, plus
+    // handcrafted edge documents (empty, whitespace, dense entities)
+    let mut rng = Prng::new(seed());
+    let mut texts: Vec<String> = Vec::new();
+    for d in CorpusSpec::news(120, 256).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::tweets(60, 128).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::logs(30, 320).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for e in [
+        "",
+        " ",
+        "IBM",
+        "Laura Chiticariu works at IBM Research in Almaden.",
+        "IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM",
+    ] {
+        texts.push(e.to_string());
+    }
+    let docs: Vec<Document> = texts
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| Document::new(i as u64, t))
+        .collect();
+    assert!(docs.len() >= 200, "acceptance floor: {} docs", docs.len());
+
+    // route A: pure-software executor
+    let route_a: Vec<String> = docs.iter().map(|d| render(d, &sw.run_doc(d))).collect();
+
+    // route B: Session + AccelService over the simulator
+    let sink = Arc::new(CollectSink::default());
+    let mut session = hw
+        .session()
+        .threads(4)
+        .queue_depth(4)
+        .sink(sink.clone())
+        .start();
+    for d in &docs {
+        session.push(d.clone()).unwrap();
+    }
+    let report = session.finish();
+    assert_eq!(report.docs, docs.len());
+    let by_id: HashMap<u64, DocResult> = sink
+        .take()
+        .into_iter()
+        .map(|(d, r)| (d.id, r))
+        .collect();
+
+    // route C: synchronous run_doc on a FRESH simulated engine — the
+    // engine route B ran would serve every document from the
+    // AccelSubgraphRunner's per-(doc, text, subgraph) cache, which would
+    // make this route a replay of route B instead of an uncombined
+    // re-execution of the whole pipeline
+    let hw_sync = Engine::with_config(
+        &q.aql,
+        EngineConfig::simulated(PartitionMode::SingleSubgraph),
+    )
+    .unwrap();
+    for (i, d) in docs.iter().enumerate() {
+        let b = render(d, &by_id[&d.id]);
+        assert_eq!(
+            route_a[i], b,
+            "route A (software) vs B (session over sim) diverged on doc {}: {:?}",
+            d.id, d.text
+        );
+        let c = render(d, &hw_sync.run_doc(d));
+        assert_eq!(
+            route_a[i], c,
+            "route A (software) vs C (sim run_doc) diverged on doc {}: {:?}",
+            d.id, d.text
+        );
+    }
+    let sim_sync = hw_sync.sim_snapshot().unwrap();
+    assert!(
+        sim_sync.packages >= docs.len() as u64,
+        "route C must have re-scanned every document (uncombined), got {} packages",
+        sim_sync.packages
+    );
+    hw_sync.shutdown();
+
+    let sim = hw.sim_snapshot().expect("simulated engine exposes sim stats");
+    assert!(sim.packages > 0, "the simulator must have scanned packages");
+    assert_eq!(sim.faults, 0);
+    let accel = hw.accel_snapshot().unwrap();
+    assert!(accel.docs >= docs.len() as u64, "every doc crossed the HW path");
+    assert!(accel.cycles > 0, "cycle accounting must flow into metrics");
+    hw.shutdown();
+}
+
+#[test]
+fn every_query_and_mode_agrees_with_software_under_the_simulator() {
+    let corpus = CorpusSpec::news(8, 512).generate();
+    for q in boost::queries::all() {
+        let sw = Engine::compile_aql(&q.aql).unwrap();
+        for mode in [
+            PartitionMode::ExtractOnly,
+            PartitionMode::SingleSubgraph,
+            PartitionMode::MultiSubgraph,
+        ] {
+            let hw = Engine::with_config(&q.aql, EngineConfig::simulated(mode)).unwrap();
+            for d in &corpus.docs {
+                assert_eq!(
+                    render(d, &sw.run_doc(d)),
+                    render(d, &hw.run_doc(d)),
+                    "query {} mode {:?} doc {}",
+                    q.name,
+                    mode,
+                    d.id
+                );
+            }
+            hw.shutdown();
+        }
+    }
+}
+
+#[test]
+fn packing_roundtrip_recovers_reference_spans_across_block_sizes() {
+    // pack_group → simulated scan → span reconstruction must recover
+    // exactly the spans of a direct reference scan, for every compiled
+    // block size, including empty documents and NUL-adjacent placements
+    // (exact block fits leave no room for the separator byte).
+    const Q: &str = "create dictionary D as ('abc', 'cab', 'b');\n\
+                     create view R as extract regex /ab+/ on d.text as m from Document d;\n\
+                     create view W as extract dictionary 'D' on d.text as m from Document d;\n\
+                     output view R; output view W;";
+    let g = boost::optimizer::optimize(&boost::aql::compile(Q).unwrap());
+    let plan = partition(&g, PartitionMode::ExtractOnly);
+    let cfg = compile_subgraph(&plan.subgraphs[0]).unwrap();
+    let (tables, accepts) = cfg.pack_tables();
+    let (tables, accepts) = (Arc::new(tables), Arc::new(accepts));
+
+    for &block in BLOCK_SIZES {
+        let sim = SimPackageEngine::new(SimSpec::default());
+        prop::check(
+            seed() ^ block as u64,
+            40,
+            |r: &mut Prng| prop::packing_corpus(r, 10, block, b"abc "),
+            |texts| {
+                let docs: Vec<Document> = texts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| Document::new(i as u64, t.as_str()))
+                    .collect();
+                let refs: Vec<&Document> = docs.iter().collect();
+                let (pkgs, oversized) = pack_group(&refs, block);
+                if !oversized.is_empty() {
+                    return false; // nothing in the generator exceeds block
+                }
+                // decode: per-document, per-machine (local_end, state)
+                let mut per_doc: Vec<Vec<Vec<(usize, u32)>>> =
+                    vec![vec![Vec::new(); cfg.machines.len()]; docs.len()];
+                for wp in &pkgs {
+                    let pkg = PackedPackage {
+                        bytes: wp.bytes.clone(),
+                        block,
+                        tables: tables.clone(),
+                        accepts: accepts.clone(),
+                        machines: cfg.geometry.0,
+                        states: cfg.geometry.1,
+                    };
+                    let out = match sim.run(cfg.artifact_key(block), &pkg) {
+                        Ok(o) => o,
+                        Err(_) => return false,
+                    };
+                    for (m, stream, pos, state) in out.hits {
+                        if m >= cfg.machines.len() {
+                            return false; // padding machines never hit
+                        }
+                        match wp.slot_at(stream, pos) {
+                            Some(si) => {
+                                let slot = wp.slots[si];
+                                per_doc[slot.doc_index][m].push((pos + 1 - slot.offset, state));
+                            }
+                            // a hit on a separator or padding byte would be
+                            // a NUL-isolation bug
+                            None => return false,
+                        }
+                    }
+                }
+                // reconstruct and compare against direct reference scans
+                for (di, d) in docs.iter().enumerate() {
+                    for (mi, machine) in cfg.machines.iter().enumerate() {
+                        match &machine.matcher {
+                            MatcherRef::Regex(re) => {
+                                let ends: Vec<usize> =
+                                    per_doc[di][mi].iter().map(|&(e, _)| e).collect();
+                                if re.from_hw_ends(&d.text, &ends) != re.find_all(&d.text) {
+                                    return false;
+                                }
+                            }
+                            MatcherRef::Dict(ac) => {
+                                let mut hw = ac.from_hw_states(d.text.as_bytes(), &per_doc[di][mi]);
+                                let mut sw = ac.find_token_matches(d.text.as_bytes());
+                                hw.sort_by_key(|m| (m.span.begin, m.span.end, m.entry));
+                                sw.sort_by_key(|m| (m.span.begin, m.span.end, m.entry));
+                                if hw != sw {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+}
+
+#[test]
+fn duplicated_and_reordered_hit_records_are_normalized_by_the_post_stage() {
+    // transport-layer corruption the post-stage must absorb: every hit
+    // record duplicated AND the stream shuffled — views still byte-
+    // identical to software
+    let q = boost::queries::builtin("t1").unwrap();
+    let sw = Engine::compile_aql(&q.aql).unwrap();
+    let spec = SimSpec::default().with_fault(FaultPlan {
+        fail_every: 0,
+        duplicate_hits: true,
+        reorder_hits: true,
+    });
+    let hw = Engine::with_config(
+        &q.aql,
+        EngineConfig::accelerated(PartitionMode::SingleSubgraph, EngineSpec::Sim(spec)),
+    )
+    .unwrap();
+    let corpus = CorpusSpec::news(20, 512).generate();
+    for d in &corpus.docs {
+        assert_eq!(
+            render(d, &sw.run_doc(d)),
+            render(d, &hw.run_doc(d)),
+            "corrupted hit stream leaked into views on doc {}",
+            d.id
+        );
+    }
+    let sim = hw.sim_snapshot().unwrap();
+    assert!(sim.faults > 0, "fault injection must actually have fired");
+    hw.shutdown();
+}
+
+#[test]
+fn injected_package_failures_fail_submissions_cleanly() {
+    // a bricked device (every package errors) must fail the waiting
+    // worker's submission with an error — never hang it
+    let (configs, _plan) = t1_service_parts(PartitionMode::ExtractOnly);
+    let spec = SimSpec::default().with_fault(FaultPlan {
+        fail_every: 1,
+        duplicate_hits: false,
+        reorder_hits: false,
+    });
+    let service = AccelService::start(
+        configs,
+        EngineSpec::Sim(spec.clone()),
+        AccelOptions::default(),
+    );
+    let doc = Document::new(0, "Laura Chiticariu works at IBM Research.");
+    let rx = service.submit(0, doc, Arc::new(TokenIndex::default()), vec![]);
+    let res = rx.recv().expect("a reply must arrive even on device failure");
+    let err = res.expect_err("the injected fault must surface as an error");
+    assert!(err.contains("injected device fault"), "{err}");
+    assert!(spec.snapshot().faults >= 1);
+    service.shutdown();
+}
+
+#[test]
+fn bricked_simulator_surfaces_as_panic_not_hang() {
+    // engine-level counterpart: run_doc over a failing device panics the
+    // worker (the documented contract) instead of deadlocking
+    let q = boost::queries::builtin("t1").unwrap();
+    let spec = SimSpec::default().with_fault(FaultPlan {
+        fail_every: 1,
+        duplicate_hits: false,
+        reorder_hits: false,
+    });
+    let hw = Engine::with_config(
+        &q.aql,
+        EngineConfig::accelerated(PartitionMode::ExtractOnly, EngineSpec::Sim(spec)),
+    )
+    .unwrap();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        hw.run_doc(&Document::new(0, "Alice met Bob at IBM."));
+    }));
+    assert!(res.is_err(), "expected an accelerator error panic");
+    hw.shutdown();
+}
+
+#[test]
+fn slow_simulator_backpressure_bounds_the_submission_queue() {
+    // a slow device (40 ms per package) against a depth-2 submission
+    // queue: producers must block (stall count + nonzero blocked time)
+    // and the queue must never exceed its bound
+    let (configs, _plan) = t1_service_parts(PartitionMode::ExtractOnly);
+    let spec = SimSpec::default().with_latency(Duration::from_millis(40));
+    let service = AccelService::start(
+        configs,
+        EngineSpec::Sim(spec.clone()),
+        AccelOptions {
+            queue_depth: 2,
+            ..AccelOptions::default()
+        },
+    );
+    let text = "Laura Chiticariu works at IBM Research in Almaden.";
+    let mut waiters = vec![service.submit(
+        0,
+        Document::new(0, text),
+        Arc::new(TokenIndex::default()),
+        vec![],
+    )];
+    // let the communication thread drain the first submission and enter
+    // the 40 ms simulated scan
+    std::thread::sleep(Duration::from_millis(10));
+    for i in 1..=5u64 {
+        // queue depth 2: the third of these pushes must block until the
+        // device finishes its scan
+        waiters.push(service.submit(
+            i,
+            Document::new(i, text),
+            Arc::new(TokenIndex::default()),
+            vec![],
+        ));
+    }
+    for rx in waiters {
+        rx.recv().expect("reply").expect("scan must succeed");
+    }
+    let q = service.queue_snapshot();
+    assert_eq!(q.pushed, 6);
+    assert!(
+        q.stalls > 0,
+        "queue depth 2 against a 40 ms/package device must stall the producer"
+    );
+    assert!(
+        q.blocked_ns > 0,
+        "stalled pushes must accumulate nonzero blocked time"
+    );
+    assert!(
+        q.high_water <= 3,
+        "bounded queue exceeded its depth: high water {}",
+        q.high_water
+    );
+    assert!(spec.snapshot().packages > 0);
+    service.shutdown();
+}
+
+#[test]
+fn truncated_packages_are_rejected_not_scanned() {
+    // hand-build a package with a truncated byte lane and a mismatched
+    // geometry: the simulator must reject both with a readable error
+    let (configs, _plan) = t1_service_parts(PartitionMode::ExtractOnly);
+    let cfg = &configs[0];
+    let (tables, accepts) = cfg.pack_tables();
+    let block = 4096;
+    let sim = SimPackageEngine::new(SimSpec::default());
+    let pkg = PackedPackage {
+        bytes: vec![0i32; 100], // truncated: should be STREAMS * block
+        block,
+        tables: Arc::new(tables),
+        accepts: Arc::new(accepts),
+        machines: cfg.geometry.0,
+        states: cfg.geometry.1,
+    };
+    let err = sim
+        .run(cfg.artifact_key(block), &pkg)
+        .expect_err("truncated package must be rejected")
+        .to_string();
+    assert!(err.contains("truncated package"), "{err}");
+    assert_eq!(sim.stats().snapshot().packages, 0);
+}

@@ -1,0 +1,179 @@
+//! Golden-view snapshot tests: every bundled query (T1–T5) over the
+//! small hand-written corpus in `tests/golden/corpus.txt`, rendered in a
+//! stable line format and compared against committed `tests/golden/
+//! <query>.golden` snapshots. A view-shape regression (different spans,
+//! different tuple content, a view appearing/disappearing) fails with a
+//! readable first-divergence diff and writes the full actual rendering to
+//! `<query>.actual` so CI can upload it.
+//!
+//! Blessing workflow (see TESTING.md): when a snapshot file is missing, or
+//! `UPDATE_GOLDEN=1` is set, the test writes the snapshot and passes —
+//! commit the generated `.golden` files to pin the behaviour.
+
+use std::path::PathBuf;
+
+use boost::coordinator::Engine;
+use boost::text::Document;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn corpus() -> Vec<Document> {
+    let text = std::fs::read_to_string(golden_dir().join("corpus.txt"))
+        .expect("tests/golden/corpus.txt is committed");
+    text.lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .enumerate()
+        .map(|(i, l)| Document::new(i as u64, l))
+        .collect()
+}
+
+/// Stable rendering: one line per tuple, `doc <id> <view>: <cells>`, with
+/// spans as `[begin,end)="text"` so a diff reads without tooling.
+fn render(engine: &Engine, docs: &[Document]) -> String {
+    let mut out = String::new();
+    for doc in docs {
+        let result = engine.run_doc(doc);
+        for (h, rows) in result.iter() {
+            for t in rows {
+                out.push_str(&format!("doc {:2} {}:", doc.id, h.name()));
+                for v in t {
+                    match v {
+                        boost::aog::Value::Span(s) => out.push_str(&format!(
+                            " [{},{})={:?}",
+                            s.begin,
+                            s.end,
+                            s.text(&doc.text)
+                        )),
+                        other => out.push_str(&format!(" {other}")),
+                    }
+                }
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+/// First line where two renderings diverge, with context — the "readable
+/// diff" the snapshot failure prints.
+fn first_divergence(want: &str, got: &str) -> String {
+    let (mut wl, mut gl) = (want.lines(), got.lines());
+    let mut line_no = 1;
+    loop {
+        match (wl.next(), gl.next()) {
+            (Some(w), Some(g)) if w == g => line_no += 1,
+            (w, g) => {
+                return format!(
+                    "first divergence at line {line_no}:\n  golden: {}\n  actual: {}",
+                    w.unwrap_or("<end of golden>"),
+                    g.unwrap_or("<end of actual>")
+                )
+            }
+        }
+    }
+}
+
+fn check_golden(query: &str) {
+    let q = boost::queries::builtin(query).unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    let docs = corpus();
+    let got = render(&engine, &docs);
+
+    // snapshots must themselves be deterministic before they can pin
+    // anything
+    assert_eq!(got, render(&engine, &docs), "{query}: rendering not deterministic");
+
+    let path = golden_dir().join(format!("{query}.golden"));
+    let bless = std::env::var("UPDATE_GOLDEN").is_ok_and(|v| v == "1");
+    if bless || !path.exists() {
+        // REQUIRE_GOLDEN=1 (set in CI once snapshots are committed) turns
+        // a missing snapshot into a hard failure instead of a silent
+        // bless — otherwise a deleted .golden would make the suite
+        // vacuous forever
+        assert!(
+            bless || !std::env::var("REQUIRE_GOLDEN").is_ok_and(|v| v == "1"),
+            "{query}: golden snapshot {} is missing and REQUIRE_GOLDEN=1 forbids \
+             blessing — restore the committed snapshot or re-bless locally",
+            path.display()
+        );
+        std::fs::write(&path, &got).expect("write golden snapshot");
+        eprintln!(
+            "{query}: blessed {} ({} lines) — commit it to pin the views",
+            path.display(),
+            got.lines().count()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden snapshot");
+    if want != got {
+        let actual = golden_dir().join(format!("{query}.actual"));
+        std::fs::write(&actual, &got).expect("write actual snapshot");
+        panic!(
+            "{query}: view snapshot regressed ({} golden lines, {} actual — full \
+             actual written to {}).\n{}\nIf the change is intentional, re-bless \
+             with UPDATE_GOLDEN=1 and commit the new snapshot.",
+            want.lines().count(),
+            got.lines().count(),
+            actual.display(),
+            first_divergence(&want, &got),
+        );
+    }
+}
+
+#[test]
+fn golden_t1() {
+    check_golden("t1");
+}
+
+#[test]
+fn golden_t2() {
+    check_golden("t2");
+}
+
+#[test]
+fn golden_t3() {
+    check_golden("t3");
+}
+
+#[test]
+fn golden_t4() {
+    check_golden("t4");
+}
+
+#[test]
+fn golden_t5() {
+    check_golden("t5");
+}
+
+#[test]
+fn golden_corpus_yields_annotations_for_every_query() {
+    // the snapshot must never be vacuous: each bundled query extracts
+    // something from the committed corpus
+    let docs = corpus();
+    assert!(docs.len() >= 10, "committed corpus shrank to {}", docs.len());
+    for q in boost::queries::all() {
+        let engine = Engine::compile_aql(&q.aql).unwrap();
+        let total: usize = docs.iter().map(|d| engine.run_doc(d).total_tuples()).sum();
+        assert!(total > 0, "{} extracted nothing from the golden corpus", q.name);
+    }
+}
+
+#[test]
+fn golden_views_identical_under_the_simulated_accelerator() {
+    // the snapshot pins the SW path; the simulated HW path must render the
+    // exact same bytes (ties the golden suite to the differential one)
+    use boost::coordinator::EngineConfig;
+    use boost::partition::PartitionMode;
+    let docs = corpus();
+    let q = boost::queries::builtin("t1").unwrap();
+    let sw = Engine::compile_aql(&q.aql).unwrap();
+    let hw = Engine::with_config(
+        &q.aql,
+        EngineConfig::simulated(PartitionMode::SingleSubgraph),
+    )
+    .unwrap();
+    assert_eq!(render(&sw, &docs), render(&hw, &docs));
+    hw.shutdown();
+}
