@@ -1,9 +1,11 @@
 //! End-to-end driver (EXPERIMENTS.md E5): the full system on a real small
 //! workload, proving all layers compose —
 //!
-//!   AQL → operator graph → optimizer → maximal-convex partition →
-//!   hardware compile (DFA tables) → AOT Pallas kernel via PJRT →
-//!   multi-threaded communication interface → annotations,
+//!   T1–T5 registered in ONE catalog → merged AOG supergraph (interned
+//!   extraction leaves) → optimizer → maximal-convex partition →
+//!   hardware compile (one shared DFA-table image) → AOT Pallas kernel
+//!   via PJRT → multi-threaded communication interface → per-query
+//!   annotations, all in a single pass per document,
 //!
 //! with a software baseline run for correctness comparison and the
 //! paper-calibrated Eq. 1 estimate for the headline speedup. Both runs
@@ -14,21 +16,43 @@
 //! make artifacts && cargo run --release --example e2e_pipeline
 //! ```
 
-use boost::coordinator::{Engine, EngineConfig};
+use boost::coordinator::{CatalogBuilder, Engine, EngineConfig};
 use boost::corpus::CorpusSpec;
 use boost::partition::{partition, PartitionMode};
 use boost::perfmodel::FpgaModel;
 use boost::runtime::EngineSpec;
 
-fn main() -> anyhow::Result<()> {
-    let q = boost::queries::builtin("t1").unwrap();
-    println!("== {} ({}) ==", q.name, q.title);
+const QUERIES: [&str; 5] = ["t1", "t2", "t3", "t4", "t5"];
 
-    // 1. software baseline + profile, streamed through a single-worker
-    //    session (the Session is the only run surface — run_corpus is a
-    //    convenience wrapper over the same pipeline)
+fn catalog() -> CatalogBuilder {
+    let mut b = Engine::builder();
+    for q in QUERIES {
+        b = b.register_builtin(q);
+    }
+    b
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== T1-T5 as one catalog: one engine, one image, one pass ==");
+
+    // 1. software baseline + profile: every query evaluated per document
+    //    in a single pass over the merged supergraph
     let corpus = CorpusSpec::news(400, 2048).generate();
-    let sw = Engine::compile_aql(&q.aql)?;
+    let sw = catalog().build()?;
+    let single_leaves: usize = QUERIES
+        .iter()
+        .map(|q| {
+            Engine::compile_aql(&boost::queries::builtin(q).unwrap().aql)
+                .map(|e| e.graph().extraction_leaves())
+        })
+        .sum::<Result<usize, _>>()?;
+    println!(
+        "catalog:      {} queries, {} extraction leaves merged from {} ({} interned away)",
+        sw.queries().len(),
+        sw.graph().extraction_leaves(),
+        single_leaves,
+        single_leaves - sw.graph().extraction_leaves(),
+    );
     let mut sw_session = sw.session().threads(1).queue_depth(2).start();
     sw_session.push_batch(corpus.docs.iter().cloned())?;
     let sw_report = sw_session.finish();
@@ -43,7 +67,7 @@ fn main() -> anyhow::Result<()> {
 
     // 2. accelerated run through the real PJRT path (falls back to the
     //    native engine when artifacts/ is missing)
-    let engine_spec = if std::path::Path::new("artifacts/dfa_m8_s256_b16384.hlo.txt").exists() {
+    let engine_spec = if std::path::Path::new("artifacts/dfa_m16_s256_b16384.hlo.txt").exists() {
         EngineSpec::Pjrt {
             artifacts_dir: "artifacts".into(),
         }
@@ -51,10 +75,21 @@ fn main() -> anyhow::Result<()> {
         eprintln!("NOTE: artifacts/ missing — using the native package engine");
         EngineSpec::Native
     };
-    let hw = Engine::with_config(
-        &q.aql,
-        EngineConfig::accelerated(PartitionMode::MultiSubgraph, engine_spec),
-    )?;
+    let hw = catalog()
+        .config(EngineConfig::accelerated(
+            PartitionMode::ExtractOnly,
+            engine_spec,
+        ))
+        .build()?;
+    println!(
+        "hw image:     {} subgraph(s), shared artifact set [{}]",
+        hw.plan().map(|p| p.subgraphs.len()).unwrap_or(0),
+        hw.artifact_keys()
+            .iter()
+            .map(|k| k.file_name())
+            .collect::<Vec<_>>()
+            .join(", "),
+    );
     let mut hw_session = hw.session().threads(4).queue_depth(8).start();
     hw_session.push_batch(corpus.docs.iter().cloned())?;
     let hw_report = hw_session.finish();
@@ -73,12 +108,27 @@ fn main() -> anyhow::Result<()> {
         snap.modeled_throughput() / 1e6,
     );
 
-    // 3. correctness: identical annotation counts
+    // 3. correctness: identical per-query annotation counts (one shared
+    //    device pass must serve every query exactly)
+    let probe = &corpus.docs[0];
+    let (sw_result, hw_result) = (sw.run_doc(probe), hw.run_doc(probe));
+    for q in QUERIES {
+        let (a, b) = (sw.query(q)?, hw.query(q)?);
+        assert_eq!(
+            a.total_tuples(&sw_result),
+            b.total_tuples(&hw_result),
+            "query {q} diverged between software and accelerated catalog"
+        );
+    }
     assert_eq!(
         sw_report.tuples, hw_report.tuples,
         "accelerated path must produce identical annotations"
     );
-    println!("correctness:  software and accelerated annotation sets agree ({} tuples)", sw_report.tuples);
+    println!(
+        "correctness:  software and accelerated annotation sets agree ({} tuples, all {} queries)",
+        sw_report.tuples,
+        QUERIES.len(),
+    );
 
     // 4. the headline estimate (paper Fig 7 / §5): Eq. 1 with the measured
     //    software baseline, the measured offload fraction, and the

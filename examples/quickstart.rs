@@ -1,6 +1,6 @@
-//! Quickstart: compile an AQL query, resolve a typed view handle, and
-//! stream documents through a `Session` — the push-based pipeline that
-//! replaces one-shot corpus runs.
+//! Quickstart: register AQL queries in a **catalog**, build one engine
+//! that evaluates all of them in a single per-document pass, resolve
+//! namespaced view handles, and stream documents through a `Session`.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -11,9 +11,11 @@ use std::sync::Arc;
 use boost::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    // An information-extraction query in the AQL subset: find person
-    // mentions near organization mentions.
-    let aql = r#"
+    // Two independent analyses over the same document stream: person-near-
+    // organization extraction, and a simple date scan. In the paper's
+    // deployment model they share one engine (and, when accelerated, one
+    // device image) instead of running as two engines with two passes.
+    let people_aql = r#"
         create dictionary Orgs as ('IBM', 'IBM Research', 'Columbia University');
 
         create view Person as
@@ -32,15 +34,32 @@ fn main() -> anyhow::Result<()> {
 
         output view PersonOrg;
     "#;
+    let dates_aql = r#"
+        create view DateIso as
+          extract regex /\d{4}-\d{2}-\d{2}/ on d.text as day from Document d;
+        output view DateIso;
+    "#;
 
-    let engine = Engine::compile_aql(aql)?;
-    println!("compiled operator graph:\n{}", engine.graph().dump());
+    // One builder, many programs: each registered name becomes the
+    // namespace of that query's views ("people.PersonOrg"). The graphs
+    // are merged over a shared DocScan, identical extraction patterns are
+    // interned, and the optimizer runs once over the merged supergraph.
+    let engine = Engine::builder()
+        .register("people", people_aql)
+        .register("dates", dates_aql)
+        .build()?;
+    println!("merged operator graph:\n{}", engine.graph().dump());
 
-    // Resolve the output view ONCE into a typed handle: no stringly-typed
-    // lookups on the hot path, and the schema travels with it.
-    let person_org: ViewHandle = engine.view("PersonOrg")?;
+    // Resolve output views ONCE into typed handles via the query handles:
+    // no stringly-typed lookups on the hot path, and the schema travels
+    // with the handle.
+    let people: QueryHandle = engine.query("people")?;
+    let person_org: ViewHandle = people.view("PersonOrg")?;
+    let date_iso: ViewHandle = engine.query("dates")?.view("DateIso")?;
     println!(
-        "view {:?} has columns: {:?}",
+        "query {:?} outputs {:?}; view {:?} has columns {:?}",
+        people.name(),
+        people.view_names(),
         person_org.name(),
         person_org
             .schema()
@@ -50,10 +69,14 @@ fn main() -> anyhow::Result<()> {
             .collect::<Vec<_>>()
     );
 
-    // One-off, synchronous evaluation still works:
-    let doc = Document::new(0, "Laura Chiticariu works at IBM Research in Almaden.");
+    // One-off, synchronous evaluation runs EVERY registered query:
+    let doc = Document::new(0, "Laura Chiticariu works at IBM Research since 2014-06-30.");
     let result = engine.run_doc(&doc);
-    println!("sync run: {} PersonOrg rows", result[&person_org].len());
+    println!(
+        "sync run: {} PersonOrg rows, {} dates",
+        result[&person_org].len(),
+        result[&date_iso].len()
+    );
 
     // The streaming path: a Session with a worker pool behind a bounded
     // queue. push() blocks when the pipeline is full (backpressure), and
@@ -68,7 +91,7 @@ fn main() -> anyhow::Result<()> {
 
     let docs = [
         "Laura Chiticariu works at IBM Research in Almaden.",
-        "Eva Sitaridi joined Columbia University last fall; Peter Hofstee stayed at IBM.",
+        "Eva Sitaridi joined Columbia University on 2019-09-01; Peter Hofstee stayed at IBM.",
         "No entities here, just plain text.",
     ];
     for (i, text) in docs.iter().enumerate() {
@@ -87,9 +110,12 @@ fn main() -> anyhow::Result<()> {
             let org = row[1].as_span().text(&doc.text);
             println!("   person={person:?} org={org:?}");
         }
+        for row in &result[&date_iso] {
+            println!("   date={:?}", row[0].as_span().text(&doc.text));
+        }
     }
     println!(
-        "{} docs, {} tuples, {:.2} ms",
+        "{} docs, {} tuples across both queries, {:.2} ms",
         report.docs,
         report.tuples,
         report.wall.as_secs_f64() * 1e3

@@ -22,10 +22,15 @@ fn main() -> anyhow::Result<()> {
     let model = FpgaModel::paper();
     for &size in &[128usize, 256, 2048] {
         let corpus = CorpusSpec::tweets(1200, size).generate();
-        let engine = Engine::with_config(
-            &q.aql,
-            EngineConfig::accelerated(PartitionMode::ExtractOnly, EngineSpec::Native),
-        )?;
+        // a one-entry catalog: the same builder that registers T1–T5
+        // together serves the single-tenant case too
+        let engine = Engine::builder()
+            .register_builtin("t3")
+            .config(EngineConfig::accelerated(
+                PartitionMode::ExtractOnly,
+                EngineSpec::Native,
+            ))
+            .build()?;
         // A deliberately small queue: the producer below is far faster
         // than the workers, so push() throttles it (check the stall
         // counter in the output) while memory stays bounded at

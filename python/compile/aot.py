@@ -29,7 +29,9 @@ from .model import extract_package
 
 # Keep in sync with rust/src/hwcompiler/mod.rs (GEOMETRIES, BLOCK_SIZES,
 # STREAMS). The rust side checks artifact presence by file name.
-GEOMETRIES = [(4, 64), (8, 128), (8, 256), (4, 1024)]
+# The wide (16/32-machine) variants serve the multi-query catalog: all
+# deployed queries' deduplicated extraction leaves fold into one image.
+GEOMETRIES = [(4, 64), (8, 128), (8, 256), (4, 1024), (16, 256), (16, 1024), (32, 1024)]
 BLOCK_SIZES = [4096, 16384]
 STREAMS = 4
 

@@ -375,6 +375,55 @@ impl Graph {
         }
     }
 
+    /// Merge `other` into this graph, appending its nodes (topological
+    /// order is preserved) and its outputs, and **unifying `DocScan`**:
+    /// `other`'s document scan maps onto this graph's existing one (or a
+    /// fresh one if this graph has none), so every merged program reads
+    /// the document stream through a single shared leaf — the first step
+    /// of folding many queries into one supergraph. Identical extraction
+    /// leaves are *not* interned here; that is the optimizer's
+    /// [`dedup_extractions`](crate::optimizer::dedup_extractions) pass,
+    /// which runs after all programs are merged.
+    ///
+    /// Returns the node remapping (`other` id → merged id).
+    pub fn merge_from(&mut self, other: &Graph) -> Vec<NodeId> {
+        let mut doc: Option<NodeId> = self
+            .nodes
+            .iter()
+            .find(|n| matches!(n.kind, OpKind::DocScan))
+            .map(|n| n.id);
+        let mut remap: Vec<NodeId> = Vec::with_capacity(other.nodes.len());
+        for node in &other.nodes {
+            let id = if matches!(node.kind, OpKind::DocScan) {
+                *doc.get_or_insert_with(|| {
+                    self.add(OpKind::DocScan, vec![]).expect("DocScan cannot fail")
+                })
+            } else {
+                let inputs: Vec<NodeId> = node.inputs.iter().map(|&i| remap[i]).collect();
+                let id = self
+                    .add(node.kind.clone(), inputs)
+                    .expect("merging a valid graph preserves validity");
+                if let Some(v) = &node.view {
+                    self.name_view(id, v.clone());
+                }
+                id
+            };
+            remap.push(id);
+        }
+        for (name, target) in &other.outputs {
+            self.add_output(name.clone(), remap[*target]);
+        }
+        remap
+    }
+
+    /// Number of extraction leaves (regex + dictionary operators) — the
+    /// machine count a hardware image for this graph needs. Catalog tests
+    /// assert that the merged supergraph's leaf count is *less* than the
+    /// sum over independently compiled queries (shared patterns intern).
+    pub fn extraction_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind.is_extraction()).count()
+    }
+
     /// Downstream consumers of each node.
     pub fn consumers(&self) -> Vec<Vec<NodeId>> {
         let mut out = vec![Vec::new(); self.nodes.len()];
@@ -658,6 +707,44 @@ mod tests {
         let cons = g.consumers();
         assert_eq!(cons[doc].len(), 2);
         assert!(cons[a].is_empty());
+    }
+
+    #[test]
+    fn merge_unifies_doc_scan_and_appends_outputs() {
+        let mut a = Graph::new();
+        let doc_a = a.add(OpKind::DocScan, vec![]).unwrap();
+        let ra = a.add(regex_node("a+"), vec![doc_a]).unwrap();
+        a.add_output("A", ra);
+
+        let mut b = Graph::new();
+        let doc_b = b.add(OpKind::DocScan, vec![]).unwrap();
+        let rb = b.add(regex_node("b+"), vec![doc_b]).unwrap();
+        b.add_output("B", rb);
+
+        let remap = a.merge_from(&b);
+        // exactly one DocScan survives; b's maps onto a's
+        assert_eq!(a.op_counts()["DocScan"], 1);
+        assert_eq!(remap[doc_b], doc_a);
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(a.outputs[1].0, "B");
+        assert_eq!(a.extraction_leaves(), 2);
+        // merged graph stays valid: the merged regex's input is the
+        // shared DocScan
+        assert_eq!(a.nodes[remap[rb]].inputs, vec![doc_a]);
+    }
+
+    #[test]
+    fn merge_into_empty_graph_creates_doc_scan() {
+        let mut b = Graph::new();
+        let doc_b = b.add(OpKind::DocScan, vec![]).unwrap();
+        let rb = b.add(regex_node("x"), vec![doc_b]).unwrap();
+        b.add_output("X", rb);
+
+        let mut a = Graph::new();
+        let remap = a.merge_from(&b);
+        assert_eq!(a.op_counts()["DocScan"], 1);
+        assert_eq!(a.outputs.len(), 1);
+        assert_eq!(a.nodes[remap[rb]].schema.arity(), 1);
     }
 
     #[test]

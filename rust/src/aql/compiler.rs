@@ -92,6 +92,29 @@ impl Default for Catalog {
 
 /// Compile a parsed program into an operator graph.
 pub fn compile_program(program: &Program) -> Result<Graph, CompileError> {
+    compile_program_ns(program, None)
+}
+
+/// Compile a parsed program into an operator graph under an optional
+/// **namespace** — the catalog-compilation entry point.
+///
+/// With `namespace = Some("t1")`, every view root and every registered
+/// output is qualified as `t1.<View>`, while name resolution *inside* the
+/// program stays unqualified (each registered program keeps its own
+/// view/dictionary scope — two catalog entries may both define `Person`
+/// without colliding). The [`CatalogBuilder`](crate::coordinator::CatalogBuilder)
+/// compiles each registered program this way and merges the graphs with
+/// [`Graph::merge_from`](crate::aog::Graph::merge_from).
+pub fn compile_program_ns(
+    program: &Program,
+    namespace: Option<&str>,
+) -> Result<Graph, CompileError> {
+    let qualify = |name: &str| -> String {
+        match namespace {
+            Some(ns) => format!("{ns}.{name}"),
+            None => name.to_string(),
+        }
+    };
     let mut g = Graph::new();
     let mut cat = Catalog::new();
     for stmt in &program.statements {
@@ -129,7 +152,7 @@ pub fn compile_program(program: &Program) -> Result<Graph, CompileError> {
                     return Err(CompileError::DuplicateName(name.clone()));
                 }
                 let node = compile_body(body, &mut g, &mut cat)?;
-                g.name_view(node, name.clone());
+                g.name_view(node, qualify(name));
                 cat.views.insert(name.clone(), node);
             }
             Statement::OutputView { name } => {
@@ -137,7 +160,7 @@ pub fn compile_program(program: &Program) -> Result<Graph, CompileError> {
                     .views
                     .get(name)
                     .ok_or_else(|| CompileError::UnknownView(name.clone()))?;
-                g.add_output(name.clone(), node);
+                g.add_output(qualify(name), node);
             }
         }
     }
@@ -572,6 +595,22 @@ mod tests {
         )
         .unwrap();
         assert_eq!(g.op_counts()["Join"], 2);
+    }
+
+    #[test]
+    fn namespaced_compile_qualifies_views_and_outputs() {
+        let program = crate::aql::parse(BASIC).unwrap();
+        let g = compile_program_ns(&program, Some("q7")).unwrap();
+        assert_eq!(g.outputs.len(), 1);
+        assert_eq!(g.outputs[0].0, "q7.PersonOrg");
+        // view roots are qualified too (for dumps and profile attribution)
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| n.view.as_deref() == Some("q7.Person")));
+        // ...but in-program resolution stayed unqualified: the same source
+        // compiles under any namespace
+        assert!(compile_program_ns(&program, Some("other")).is_ok());
     }
 
     #[test]

@@ -37,13 +37,25 @@ pub mod lexer;
 pub mod parser;
 
 pub use ast::{Program, Statement};
-pub use compiler::{compile_program, Catalog, CompileError};
+pub use compiler::{compile_program, compile_program_ns, Catalog, CompileError};
 pub use lexer::{lex, LexError, Token, TokenKind};
 pub use parser::{parse_program, ParseErr};
 
+/// Parse an AQL program (lex + parse, no lowering).
+pub fn parse(src: &str) -> Result<Program, CompileError> {
+    let tokens = lex(src).map_err(|e| CompileError::Lex(e.to_string()))?;
+    parse_program(&tokens).map_err(|e| CompileError::Parse(e.to_string()))
+}
+
 /// Parse + compile an AQL program into an operator graph.
 pub fn compile(src: &str) -> Result<crate::aog::Graph, CompileError> {
-    let tokens = lex(src).map_err(|e| CompileError::Lex(e.to_string()))?;
-    let program = parse_program(&tokens).map_err(|e| CompileError::Parse(e.to_string()))?;
-    compile_program(&program)
+    compile_program(&parse(src)?)
+}
+
+/// Parse + compile under a namespace: view roots and outputs become
+/// `<ns>.<View>` while in-program name resolution stays unqualified. This
+/// is what [`crate::coordinator::CatalogBuilder`] runs per registered
+/// query before merging the graphs into the shared supergraph.
+pub fn compile_ns(src: &str, namespace: &str) -> Result<crate::aog::Graph, CompileError> {
+    compile_program_ns(&parse(src)?, Some(namespace))
 }

@@ -1,6 +1,27 @@
-//! The engine facade: compile an AQL query, optionally partition it for
-//! the accelerator, and stream documents through it with the paper's
-//! document-per-thread worker model.
+//! The engine facade: register one or many AQL programs in a **query
+//! catalog**, compile them into a single shared supergraph, optionally
+//! partition it for the accelerator, and stream documents through it with
+//! the paper's document-per-thread worker model.
+//!
+//! The paper's deployment model is *not* one accelerator per query:
+//! SystemT's extended compilation flow folds the extraction operators of
+//! **all** deployed queries into a single FPGA image, shared by every
+//! query's document stream (§III–IV). [`CatalogBuilder`]
+//! (`Engine::builder().register("t1", aql)….build()`) reproduces that
+//! shape: each registered program is compiled under its own namespace,
+//! the graphs are merged over one shared `DocScan`, identical extraction
+//! leaves are interned (one machine per distinct pattern, catalog-wide),
+//! and the optimizer + partitioner run **once** over the merged graph so
+//! hardware/software placement is decided globally. One
+//! [`AccelService`], one partition plan, one artifact set — and every
+//! document pushed through a [`Session`] is evaluated against *all*
+//! registered queries in a single pass.
+//!
+//! Results are addressed through namespaced handles:
+//! [`Engine::query`]`("t1")?` → [`QueryHandle`] →
+//! [`QueryHandle::view`]`("Entities")?` → [`ViewHandle`].
+//! [`Engine::compile_aql`] remains the one-entry convenience wrapper and
+//! resolves unqualified view names exactly as before.
 //!
 //! The primary run surface is the push-based [`Session`] pipeline
 //! ([`Engine::session`]); [`Engine::run_corpus`] and [`Engine::run_doc`]
@@ -16,10 +37,10 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::accel::{AccelOptions, AccelService, AccelSubgraphRunner};
-use crate::aog::Graph;
+use crate::aog::{Graph, Tuple};
 use crate::corpus::Corpus;
 use crate::exec::{DocResult, Executor, Profile, Profiler, ViewHandle};
-use crate::hwcompiler::{compile_subgraph, AccelConfig};
+use crate::hwcompiler::{compile_subgraph, AccelConfig, ArtifactKey, BLOCK_SIZES};
 use crate::metrics::{AccelSnapshot, QueueSnapshot};
 use crate::partition::{partition, PartitionMode, PartitionPlan, SoftwareSubgraphRunner};
 use crate::runtime::EngineSpec;
@@ -77,6 +98,197 @@ impl EngineConfig {
     }
 }
 
+/// A resolved reference to one registered query of an [`Engine`]: its
+/// name, its namespace prefix, and typed [`ViewHandle`]s for each of its
+/// output views. Obtained from [`Engine::query`]; cheap to clone.
+#[derive(Debug, Clone)]
+pub struct QueryHandle {
+    name: Arc<str>,
+    /// Namespace prefix of this query's view names (`"t1."`, or `""` for
+    /// engines compiled through [`Engine::compile_aql`]).
+    prefix: Arc<str>,
+    /// Global handles of this query's output views, in output order.
+    views: Arc<[ViewHandle]>,
+}
+
+impl QueryHandle {
+    /// The query's registered name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// This query's output views (global handles; their
+    /// [`ViewHandle::name`]s carry the namespace prefix).
+    pub fn views(&self) -> &[ViewHandle] {
+        &self.views
+    }
+
+    /// Resolve one of this query's output views by its **unqualified**
+    /// name, as written in the query's `output view` statement.
+    pub fn view(&self, name: &str) -> Result<ViewHandle> {
+        self.views
+            .iter()
+            .find(|h| {
+                h.name()
+                    .strip_prefix(&*self.prefix)
+                    .is_some_and(|n| n == name)
+            })
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "query '{}' has no output view named '{name}' (outputs: {})",
+                    self.name,
+                    self.view_names().join(", ")
+                )
+            })
+    }
+
+    /// Unqualified names of this query's output views, in output order.
+    pub fn view_names(&self) -> Vec<&str> {
+        self.views
+            .iter()
+            .map(|h| h.name().strip_prefix(&*self.prefix).unwrap_or(h.name()))
+            .collect()
+    }
+
+    /// Iterate this query's `(handle, tuples)` pairs in a document result
+    /// produced by the same engine.
+    pub fn iter<'a>(
+        &'a self,
+        result: &'a DocResult,
+    ) -> impl Iterator<Item = (&'a ViewHandle, &'a Vec<Tuple>)> {
+        self.views.iter().map(move |h| (h, result.view(h)))
+    }
+
+    /// Total tuples this query produced for one document.
+    pub fn total_tuples(&self, result: &DocResult) -> usize {
+        self.iter(result).map(|(_, rows)| rows.len()).sum()
+    }
+}
+
+/// Internal: which slice of the merged graph's output list belongs to
+/// which registered query.
+struct QuerySpec {
+    name: String,
+    prefix: String,
+    outputs: std::ops::Range<usize>,
+}
+
+/// How a catalog entry's AQL is obtained at build time.
+enum EntrySource {
+    Aql(String),
+    Builtin,
+}
+
+/// Builds an [`Engine`] from a **catalog** of named AQL programs — the
+/// paper's many-queries-one-image deployment. Create via
+/// [`Engine::builder`], add entries with [`CatalogBuilder::register`] /
+/// [`CatalogBuilder::register_builtin`], then [`CatalogBuilder::build`].
+///
+/// ```no_run
+/// use boost::coordinator::Engine;
+/// # fn main() -> anyhow::Result<()> {
+/// let engine = Engine::builder()
+///     .register_builtin("t1")
+///     .register("caps", "create view Caps as extract regex /[A-Z]+/ \
+///                        on d.text as w from Document d; output view Caps;")
+///     .build()?;
+/// let entities = engine.query("t1")?.view("EntitiesClean")?;
+/// let caps = engine.query("caps")?.view("Caps")?;
+/// # let _ = (entities, caps); Ok(())
+/// # }
+/// ```
+pub struct CatalogBuilder {
+    entries: Vec<(String, EntrySource)>,
+    config: EngineConfig,
+}
+
+impl CatalogBuilder {
+    /// Empty catalog with the default (software) configuration.
+    pub fn new() -> CatalogBuilder {
+        CatalogBuilder {
+            entries: Vec::new(),
+            config: EngineConfig::default(),
+        }
+    }
+
+    /// Register a query under `name`. Names must be unique within the
+    /// catalog and become the namespace of the query's views
+    /// (`<name>.<View>` in the merged graph).
+    pub fn register(mut self, name: impl Into<String>, aql: impl Into<String>) -> CatalogBuilder {
+        self.entries.push((name.into(), EntrySource::Aql(aql.into())));
+        self
+    }
+
+    /// Register one of the built-in evaluation queries
+    /// ([`crate::queries::builtin`]: `t1`‥`t5`) under its own name.
+    /// Unknown names error at [`CatalogBuilder::build`].
+    pub fn register_builtin(mut self, name: impl Into<String>) -> CatalogBuilder {
+        self.entries.push((name.into(), EntrySource::Builtin));
+        self
+    }
+
+    /// Replace the default [`EngineConfig`] (offload mode, backend,
+    /// communication-interface options).
+    pub fn config(mut self, config: EngineConfig) -> CatalogBuilder {
+        self.config = config;
+        self
+    }
+
+    /// Parse every registered program, merge them into one shared
+    /// supergraph (common `DocScan`, interned extraction leaves), and run
+    /// the optimizer, partitioner and hardware compiler **once** over the
+    /// merged graph.
+    pub fn build(self) -> Result<Engine> {
+        if self.entries.is_empty() {
+            return Err(anyhow!("catalog is empty — register at least one query"));
+        }
+        let mut merged = Graph::new();
+        let mut specs: Vec<QuerySpec> = Vec::new();
+        for (name, source) in &self.entries {
+            if name.is_empty()
+                || !name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return Err(anyhow!(
+                    "bad query name '{name}': use ASCII letters, digits, '_' or '-' \
+                     (the name becomes the view namespace '<name>.<View>')"
+                ));
+            }
+            if specs.iter().any(|s| s.name == *name) {
+                return Err(anyhow!("duplicate query name '{name}' in catalog"));
+            }
+            let aql = match source {
+                EntrySource::Aql(src) => src.clone(),
+                EntrySource::Builtin => {
+                    crate::queries::builtin(name)
+                        .ok_or_else(|| {
+                            anyhow!("unknown built-in query '{name}' (try `repro queries`)")
+                        })?
+                        .aql
+                }
+            };
+            let g = crate::aql::compile_ns(&aql, name)
+                .map_err(|e| anyhow!("query '{name}': {e}"))?;
+            let start = merged.outputs.len();
+            merged.merge_from(&g);
+            specs.push(QuerySpec {
+                name: name.clone(),
+                prefix: format!("{name}."),
+                outputs: start..merged.outputs.len(),
+            });
+        }
+        Engine::from_parts(merged, specs, self.config)
+    }
+}
+
+impl Default for CatalogBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// A compiled, ready-to-run engine.
 pub struct Engine {
     graph: Arc<Graph>,
@@ -85,38 +297,72 @@ pub struct Engine {
     profiler: Arc<Profiler>,
     service: Option<Arc<AccelService>>,
     config: EngineConfig,
+    queries: Vec<QueryHandle>,
+    /// Deduplicated artifact variants the hardware compiler selected for
+    /// this engine (empty for software-only engines).
+    artifacts: Vec<ArtifactKey>,
 }
 
 impl Engine {
-    /// Compile AQL with the default (software) configuration.
+    /// Start a multi-query [`CatalogBuilder`] — one engine, many AQL
+    /// programs, one shared accelerator image.
+    pub fn builder() -> CatalogBuilder {
+        CatalogBuilder::new()
+    }
+
+    /// Compile a single AQL program with the default (software)
+    /// configuration — the one-entry convenience wrapper over the catalog
+    /// path. View names stay unqualified.
     pub fn compile_aql(aql: &str) -> Result<Engine> {
         Engine::with_config(aql, EngineConfig::default())
     }
 
-    /// Compile AQL with an explicit configuration.
+    /// Compile a single AQL program with an explicit configuration.
     pub fn with_config(aql: &str, config: EngineConfig) -> Result<Engine> {
         let g = crate::aql::compile(aql).map_err(|e| anyhow!("{e}"))?;
+        let specs = vec![QuerySpec {
+            name: "default".into(),
+            prefix: String::new(),
+            outputs: 0..g.outputs.len(),
+        }];
+        Engine::from_parts(g, specs, config)
+    }
+
+    /// Shared construction path: optimize the (merged) graph, partition
+    /// it, compile the hardware subgraphs, start the one [`AccelService`],
+    /// and resolve the per-query handle table.
+    fn from_parts(g: Graph, specs: Vec<QuerySpec>, config: EngineConfig) -> Result<Engine> {
         let g = if config.optimize {
             crate::optimizer::optimize(&g)
         } else {
             g
         };
 
-        let (exec_graph, plan, service): (Graph, Option<PartitionPlan>, Option<Arc<AccelService>>) =
-            if config.mode == PartitionMode::None {
-                (g.clone(), None, None)
-            } else {
-                let plan = partition(&g, config.mode);
-                let configs: Vec<AccelConfig> = plan
-                    .subgraphs
-                    .iter()
-                    .map(compile_subgraph)
-                    .collect::<Result<_, _>>()
-                    .map_err(|e| anyhow!("hardware compile failed: {e}"))?;
-                let service =
-                    AccelService::start(configs, config.engine.clone(), config.accel.clone());
-                (plan.supergraph.clone(), Some(plan), Some(service))
-            };
+        let (exec_graph, plan, service, artifacts): (
+            Graph,
+            Option<PartitionPlan>,
+            Option<Arc<AccelService>>,
+            Vec<ArtifactKey>,
+        ) = if config.mode == PartitionMode::None {
+            (g.clone(), None, None, Vec::new())
+        } else {
+            let plan = partition(&g, config.mode);
+            let configs: Vec<AccelConfig> = plan
+                .subgraphs
+                .iter()
+                .map(compile_subgraph)
+                .collect::<Result<_, _>>()
+                .map_err(|e| anyhow!("hardware compile failed: {e}"))?;
+            let mut artifacts: Vec<ArtifactKey> = configs
+                .iter()
+                .flat_map(|c| BLOCK_SIZES.iter().map(move |&b| c.artifact_key(b)))
+                .collect();
+            artifacts.sort_by_key(|k| (k.machines, k.states, k.block));
+            artifacts.dedup();
+            let service =
+                AccelService::start(configs, config.engine.clone(), config.accel.clone());
+            (plan.supergraph.clone(), Some(plan), Some(service), artifacts)
+        };
 
         let profiler = Arc::new(if config.profile {
             Profiler::for_graph(&exec_graph)
@@ -131,6 +377,7 @@ impl Engine {
                 plan,
             )));
         }
+        let queries = Engine::resolve_queries(&executor, &specs);
         Ok(Engine {
             graph: Arc::new(g),
             plan,
@@ -138,7 +385,35 @@ impl Engine {
             profiler,
             service,
             config,
+            queries,
+            artifacts,
         })
+    }
+
+    /// Turn the output ranges recorded at registration time into handle
+    /// tables over the executor's view catalog. The optimizer and the
+    /// partitioner both preserve output count and order, so the ranges
+    /// survive every rewrite — asserted here.
+    fn resolve_queries(executor: &Executor, specs: &[QuerySpec]) -> Vec<QueryHandle> {
+        let handles = executor.catalog().handles();
+        specs
+            .iter()
+            .map(|s| {
+                assert!(
+                    s.outputs.end <= handles.len(),
+                    "query '{}' outputs {:?} exceed the {} compiled views \
+                     (optimizer/partitioner dropped an output?)",
+                    s.name,
+                    s.outputs,
+                    handles.len()
+                );
+                QueryHandle {
+                    name: s.name.as_str().into(),
+                    prefix: s.prefix.as_str().into(),
+                    views: handles[s.outputs.clone()].to_vec().into(),
+                }
+            })
+            .collect()
     }
 
     /// Compile with a partition plan but run subgraphs in *software*
@@ -148,20 +423,26 @@ impl Engine {
         let plan = partition(&g, mode);
         let profiler = Arc::new(Profiler::for_graph(&plan.supergraph));
         let runner = Arc::new(SoftwareSubgraphRunner::new(&plan));
-        let executor = Arc::new(
-            Executor::new(Arc::new(plan.supergraph.clone()), profiler.clone())
-                .with_subgraph_runner(runner),
-        );
+        let executor = Executor::new(Arc::new(plan.supergraph.clone()), profiler.clone())
+            .with_subgraph_runner(runner);
+        let specs = vec![QuerySpec {
+            name: "default".into(),
+            prefix: String::new(),
+            outputs: 0..plan.supergraph.outputs.len(),
+        }];
+        let queries = Engine::resolve_queries(&executor, &specs);
         Ok(Engine {
             graph: Arc::new(g),
             plan: Some(plan),
-            executor,
+            executor: Arc::new(executor),
             profiler,
             service: None,
             config: EngineConfig {
                 mode,
                 ..Default::default()
             },
+            queries,
+            artifacts: Vec::new(),
         })
     }
 
@@ -182,17 +463,73 @@ impl Engine {
 
     /// Resolve a typed handle for output view `name` — the compile-time
     /// replacement for stringly-typed result lookups.
+    ///
+    /// Accepts the view's full (possibly qualified) name as it appears in
+    /// the merged graph (`"t1.Entities"`), or — when exactly one
+    /// registered query outputs a view of that unqualified name — the
+    /// bare name (`"Entities"`). An unqualified name shared by several
+    /// queries is an error naming the qualified candidates; disambiguate
+    /// through [`Engine::query`].
     pub fn view(&self, name: &str) -> Result<ViewHandle> {
-        self.executor.catalog().resolve(name).cloned().ok_or_else(|| {
-            anyhow!(
+        if let Some(h) = self.executor.catalog().resolve(name) {
+            return Ok(h.clone());
+        }
+        let mut candidates: Vec<ViewHandle> = self
+            .queries
+            .iter()
+            .filter_map(|q| q.view(name).ok())
+            .collect();
+        match candidates.len() {
+            1 => Ok(candidates.pop().expect("len checked")),
+            0 => Err(anyhow!(
                 "no output view named '{name}' (outputs: {})",
                 self.views()
                     .iter()
                     .map(|h| h.name())
                     .collect::<Vec<_>>()
                     .join(", ")
-            )
-        })
+            )),
+            _ => Err(anyhow!(
+                "view name '{name}' is ambiguous across the catalog — use one of: {}",
+                candidates
+                    .iter()
+                    .map(|h| h.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )),
+        }
+    }
+
+    /// Resolve a registered query by name.
+    pub fn query(&self, name: &str) -> Result<QueryHandle> {
+        self.queries
+            .iter()
+            .find(|q| &*q.name == name)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no registered query named '{name}' (catalog: {})",
+                    self.queries
+                        .iter()
+                        .map(|q| q.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// All registered queries, in registration order. Engines compiled
+    /// through [`Engine::compile_aql`] have a single entry named
+    /// `default` with an empty namespace.
+    pub fn queries(&self) -> &[QueryHandle] {
+        &self.queries
+    }
+
+    /// The deduplicated artifact variants this engine's hardware compiler
+    /// selected — the catalog's **shared image menu**. Empty for
+    /// software-only engines.
+    pub fn artifact_keys(&self) -> &[ArtifactKey] {
+        &self.artifacts
     }
 
     /// All output views of this engine, in output order.
@@ -435,6 +772,182 @@ mod tests {
                 doc.id
             );
         }
+    }
+
+    #[test]
+    fn catalog_builds_namespaced_handles() {
+        let engine = Engine::builder()
+            .register_builtin("t1")
+            .register_builtin("t2")
+            .build()
+            .unwrap();
+        assert_eq!(engine.queries().len(), 2);
+        assert!(engine.query("t9").is_err());
+
+        let t1 = engine.query("t1").unwrap();
+        let h = t1.view("PersonOrg").unwrap();
+        assert_eq!(h.name(), "t1.PersonOrg");
+        assert!(t1.view("Contacts").is_err(), "Contacts belongs to t2");
+        assert_eq!(t1.view_names(), vec!["PersonOrg", "EntitiesClean"]);
+
+        // Engine::view accepts qualified names, and unqualified names when
+        // they are unambiguous across the catalog
+        assert_eq!(engine.view("t2.Contacts").unwrap().name(), "t2.Contacts");
+        assert_eq!(engine.view("Contacts").unwrap().name(), "t2.Contacts");
+        assert!(engine.view("Nope").is_err());
+    }
+
+    #[test]
+    fn catalog_namespaces_isolate_same_named_views() {
+        let engine = Engine::builder()
+            .register(
+                "qa",
+                "create view V as extract regex /a+/ on d.text as m from Document d; \
+                 output view V;",
+            )
+            .register(
+                "qb",
+                "create view V as extract regex /b+/ on d.text as m from Document d; \
+                 output view V;",
+            )
+            .build()
+            .unwrap();
+        // both queries define V: unqualified resolution is ambiguous…
+        let err = engine.view("V").unwrap_err().to_string();
+        assert!(err.contains("ambiguous"), "{err}");
+        // …but each query's own handle sees only its V
+        let va = engine.query("qa").unwrap().view("V").unwrap();
+        let vb = engine.query("qb").unwrap().view("V").unwrap();
+        let r = engine.run_doc(&Document::new(0, "aaa b"));
+        assert_eq!(r[&va].len(), 1);
+        assert_eq!(r[&vb].len(), 1);
+        let qa = engine.query("qa").unwrap();
+        assert_eq!(qa.total_tuples(&r), 1);
+        assert_eq!(qa.iter(&r).count(), 1);
+    }
+
+    #[test]
+    fn catalog_rejects_bad_registrations() {
+        assert!(Engine::builder().build().is_err(), "empty catalog");
+        assert!(Engine::builder()
+            .register_builtin("t1")
+            .register_builtin("t1")
+            .build()
+            .is_err());
+        assert!(Engine::builder().register_builtin("t99").build().is_err());
+        assert!(Engine::builder()
+            .register("bad.name", "output view X;")
+            .build()
+            .is_err());
+        assert!(Engine::builder()
+            .register("q", "create banana;")
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn catalog_interns_shared_extraction_leaves() {
+        // t1 and t2 share the Url regex; t3/t4/t5 share t1's OrgDict
+        let merged = Engine::builder()
+            .register_builtin("t1")
+            .register_builtin("t2")
+            .build()
+            .unwrap();
+        let singles: usize = ["t1", "t2"]
+            .iter()
+            .map(|q| {
+                Engine::compile_aql(&crate::queries::builtin(q).unwrap().aql)
+                    .unwrap()
+                    .graph()
+                    .extraction_leaves()
+            })
+            .sum();
+        let merged_leaves = merged.graph().extraction_leaves();
+        assert!(
+            merged_leaves < singles,
+            "no interning: merged {merged_leaves} vs per-query sum {singles}"
+        );
+    }
+
+    #[test]
+    fn catalog_merged_results_match_single_query_engines() {
+        let engine = Engine::builder()
+            .register_builtin("t1")
+            .register_builtin("t2")
+            .register_builtin("t3")
+            .register_builtin("t4")
+            .register_builtin("t5")
+            .config(EngineConfig::simulated(PartitionMode::ExtractOnly))
+            .build()
+            .unwrap();
+        // extract-only folds every deduplicated leaf into ONE image: one
+        // plan, one subgraph, one artifact set
+        let plan = engine.plan().expect("accelerated engine has a plan");
+        assert_eq!(plan.subgraphs.len(), 1);
+        assert!(!engine.artifact_keys().is_empty());
+
+        let d = Document::new(
+            0,
+            "Laura Chiticariu works at IBM Research in Zurich. \
+             Call (408) 555-9876 or visit http://example.org/x on 2014-06-30.",
+        );
+        let merged_result = engine.run_doc(&d);
+        for q in ["t1", "t2", "t3", "t4", "t5"] {
+            let single =
+                Engine::compile_aql(&crate::queries::builtin(q).unwrap().aql).unwrap();
+            let qh = engine.query(q).unwrap();
+            assert_eq!(
+                qh.total_tuples(&merged_result),
+                single.run_doc(&d).total_tuples(),
+                "query {q} diverged between merged catalog and single engine"
+            );
+        }
+        assert!(engine.sim_snapshot().unwrap().packages > 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn session_subscribe_query_fires_per_document() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        let engine = Engine::builder()
+            .register_builtin("t1")
+            .register_builtin("t5")
+            .build()
+            .unwrap();
+        let t1 = engine.query("t1").unwrap();
+        let docs_seen = Arc::new(AtomicUsize::new(0));
+        let tuples_seen = Arc::new(AtomicUsize::new(0));
+        let (d2, t2) = (docs_seen.clone(), tuples_seen.clone());
+        let mut session = engine
+            .session()
+            .threads(2)
+            .queue_depth(4)
+            .subscribe_query(&t1, move |_doc, qh, result| {
+                d2.fetch_add(1, Ordering::Relaxed);
+                t2.fetch_add(qh.total_tuples(result), Ordering::Relaxed);
+            })
+            .start();
+        let corpus = CorpusSpec::news(8, 512).generate();
+        session.push_batch(corpus.docs.iter().cloned()).unwrap();
+        session.finish();
+        assert_eq!(docs_seen.load(Ordering::Relaxed), 8);
+        let expect: usize = corpus
+            .docs
+            .iter()
+            .map(|d| t1.total_tuples(&engine.run_doc(d)))
+            .sum();
+        assert_eq!(tuples_seen.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn compile_aql_engine_has_default_query() {
+        let engine = Engine::compile_aql(&t1_aql()).unwrap();
+        assert_eq!(engine.queries().len(), 1);
+        let q = engine.query("default").unwrap();
+        // empty namespace: unqualified handles, identical to Engine::view
+        assert_eq!(q.view("PersonOrg").unwrap().name(), "PersonOrg");
+        assert!(engine.artifact_keys().is_empty(), "software engine");
     }
 
     #[test]

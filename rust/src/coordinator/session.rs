@@ -36,7 +36,7 @@ use crate::metrics::QueueSnapshot;
 use crate::runtime::queue::{self, QueueTx};
 use crate::text::Document;
 
-use super::RunReport;
+use super::{QueryHandle, RunReport};
 
 /// Receives per-document results from a [`Session`]'s worker threads.
 ///
@@ -118,6 +118,7 @@ impl<F: Fn(&Document, &DocResult) + Send + Sync> ResultSink for CallbackSink<F> 
 }
 
 type ViewCallback = Box<dyn Fn(&Document, &[crate::aog::Tuple]) + Send + Sync>;
+type QueryCallback = Box<dyn Fn(&Document, &QueryHandle, &DocResult) + Send + Sync>;
 
 /// Configures and starts a [`Session`]. Created by
 /// [`Engine::session`](super::Engine::session).
@@ -128,6 +129,7 @@ pub struct SessionBuilder {
     queue_depth: Option<usize>,
     sink: Arc<dyn ResultSink>,
     subscriptions: Vec<(ViewHandle, ViewCallback)>,
+    query_subscriptions: Vec<(QueryHandle, QueryCallback)>,
 }
 
 impl SessionBuilder {
@@ -144,6 +146,7 @@ impl SessionBuilder {
             queue_depth: None,
             sink: Arc::new(CountingSink),
             subscriptions: Vec::new(),
+            query_subscriptions: Vec::new(),
         }
     }
 
@@ -187,6 +190,32 @@ impl SessionBuilder {
         self
     }
 
+    /// Subscribe to one registered query of a multi-query catalog: `f`
+    /// runs on a worker thread once per document with the full
+    /// [`DocResult`] and the query's handle — iterate the query's views
+    /// with [`QueryHandle::iter`]. Fires before the sink sees the result.
+    ///
+    /// Panics immediately if `query`'s views were resolved from a
+    /// different engine.
+    pub fn subscribe_query<F>(mut self, query: &QueryHandle, f: F) -> SessionBuilder
+    where
+        F: Fn(&Document, &QueryHandle, &DocResult) + Send + Sync + 'static,
+    {
+        let catalog = self.executor.catalog();
+        assert!(
+            query.views().iter().all(|v| {
+                catalog
+                    .handles()
+                    .get(v.index())
+                    .is_some_and(|o| o.name() == v.name() && o.schema() == v.schema())
+            }),
+            "query handle '{}' does not belong to this engine",
+            query.name()
+        );
+        self.query_subscriptions.push((query.clone(), Box::new(f)));
+        self
+    }
+
     /// Spawn the worker pool and start accepting documents.
     pub fn start(self) -> Session {
         let threads = self.threads;
@@ -195,6 +224,7 @@ impl SessionBuilder {
         let rx = Arc::new(rx);
         let shared = Arc::new(Shared::default());
         let subscriptions = Arc::new(self.subscriptions);
+        let query_subscriptions = Arc::new(self.query_subscriptions);
         let mut workers = Vec::with_capacity(threads);
         for w in 0..threads {
             let rx = rx.clone();
@@ -202,6 +232,7 @@ impl SessionBuilder {
             let sink = self.sink.clone();
             let executor = self.executor.clone();
             let subscriptions = subscriptions.clone();
+            let query_subscriptions = query_subscriptions.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("session-worker-{w}"))
                 .spawn(move || {
@@ -214,6 +245,9 @@ impl SessionBuilder {
                             .fetch_add(result.total_tuples() as u64, Ordering::Relaxed);
                         for (view, f) in subscriptions.iter() {
                             f(&doc, result.view(view));
+                        }
+                        for (query, f) in query_subscriptions.iter() {
+                            f(&doc, query, &result);
                         }
                         sink.on_result(&doc, &result);
                         shared.in_flight.fetch_sub(1, Ordering::Relaxed);

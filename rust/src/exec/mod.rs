@@ -318,7 +318,7 @@ impl Executor {
                 continue;
             }
             let t0 = self.profiler.start();
-            let out = self.eval_node(node.id, doc, &tokens, ext, &slots);
+            let out = self.eval_node(node.id, doc, tokens, ext, &slots);
             self.profiler.stop(node.id, t0);
             slots[node.id] = Some(out);
         }

@@ -28,9 +28,22 @@ pub const MAX_HW_STATES: usize = 1024;
 
 /// Artifact menu: `(machines, states)` table-geometry variants. For each
 /// geometry, AOT produces one HLO per block size in [`BLOCK_SIZES`]. Kept
-/// in sync with `python/compile/aot.py` (`VARIANTS` there) by the
+/// in sync with `python/compile/aot.py` (`GEOMETRIES` there) by the
 /// `artifact_key` naming convention and checked at runtime load.
-pub const GEOMETRIES: &[(usize, usize)] = &[(4, 64), (8, 128), (8, 256), (4, 1024)];
+///
+/// The wide variants (16 and 32 machines) exist for the **multi-query
+/// catalog**: folding T1–T5's deduplicated extraction leaves into one
+/// shared image needs ~16 machines, the paper's single-FPGA-image
+/// deployment shape (§III–IV).
+pub const GEOMETRIES: &[(usize, usize)] = &[
+    (4, 64),
+    (8, 128),
+    (8, 256),
+    (4, 1024),
+    (16, 256),
+    (16, 1024),
+    (32, 1024),
+];
 
 /// Work-package block sizes (bytes per stream) with compiled artifacts.
 pub const BLOCK_SIZES: &[usize] = &[4096, 16384];

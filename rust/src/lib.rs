@@ -8,29 +8,42 @@
 //! multi-threaded HW/SW communication interface that batches documents into
 //! work packages.
 //!
-//! ## The streaming `Session` API
+//! ## The query catalog: one engine, many AQL programs
 //!
-//! The user-facing surface is a push-based pipeline: compile a query into
-//! an [`Engine`](coordinator::Engine), resolve typed
-//! [`ViewHandle`](exec::ViewHandle)s for the output views you care about,
-//! open a [`Session`](coordinator::Session), and push documents as they
-//! arrive. A bounded queue feeds the worker pool, so a producer that
-//! outruns the engine blocks (`push` applies backpressure) instead of
-//! exhausting memory — with queue depth `Q` and `T` threads, at most
-//! `Q + T` documents are ever in flight. Results are delivered per
-//! document through a [`ResultSink`](coordinator::ResultSink) (count-only,
-//! collect, or callback) and per-view subscriptions:
+//! The paper's deployment is *not* one accelerator per query: SystemT's
+//! extended compilation flow folds the regex and dictionary extraction
+//! operators of **all** deployed queries into a single FPGA image, shared
+//! by every query's document stream (§III–IV). The user-facing surface
+//! mirrors that: register any number of AQL programs in a
+//! [`CatalogBuilder`](coordinator::CatalogBuilder), and the engine merges
+//! them into one shared operator supergraph — common `DocScan`,
+//! structurally-interned extraction leaves (identical patterns across
+//! queries compile to **one** machine) — then optimizes, partitions, and
+//! hardware-compiles the merged graph **once**. Every pushed document is
+//! evaluated against all registered queries in a single pass; results are
+//! addressed through namespaced handles
+//! ([`QueryHandle`](coordinator::QueryHandle) →
+//! [`ViewHandle`](exec::ViewHandle)):
 //!
 //! ```no_run
 //! use std::sync::Arc;
 //! use boost::prelude::*;
 //!
 //! # fn main() -> anyhow::Result<()> {
-//! let engine = Engine::compile_aql(
-//!     "create view Caps as extract regex /[A-Z][a-z]+/ on d.text as w \
-//!      from Document d; output view Caps;",
-//! )?;
-//! let caps = engine.view("Caps")?; // typed handle, resolved once
+//! let engine = Engine::builder()
+//!     .register_builtin("t1") // named entities
+//!     .register_builtin("t2") // contact information
+//!     .register(
+//!         "caps",
+//!         "create view Caps as extract regex /[A-Z][a-z]+/ on d.text as w \
+//!          from Document d; output view Caps;",
+//!     )
+//!     .config(EngineConfig::simulated(PartitionMode::ExtractOnly))
+//!     .build()?; // ONE plan, ONE artifact set, ONE AccelService
+//!
+//! // namespaced, typed handles — resolved once
+//! let entities = engine.query("t1")?.view("EntitiesClean")?;
+//! let caps = engine.query("caps")?.view("Caps")?;
 //!
 //! let sink = Arc::new(CollectSink::default());
 //! let mut session = engine
@@ -39,17 +52,28 @@
 //!     .queue_depth(8) // ≤ 8 queued + 4 in workers, then push blocks
 //!     .sink(sink.clone())
 //!     .start();
-//! for (i, text) in ["Alice met Bob", "nothing here"].iter().enumerate() {
+//! for (i, text) in ["Alice met Bob at IBM", "nothing here"].iter().enumerate() {
 //!     session.push(Document::new(i as u64, *text))?;
 //! }
 //! let report = session.finish();
 //! for (_doc, result) in sink.take() {
-//!     println!("{} tuples: {:?}", result.total_tuples(), result[&caps]);
+//!     // one evaluation pass produced every query's views
+//!     println!("{} entities, {} caps", result[&entities].len(), result[&caps].len());
 //! }
 //! println!("{} docs at {:.1} MB/s", report.docs, report.throughput() / 1e6);
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! A bounded queue feeds the worker pool, so a producer that outruns the
+//! engine blocks (`push` applies backpressure) instead of exhausting
+//! memory — with queue depth `Q` and `T` threads, at most `Q + T`
+//! documents are ever in flight. Results are delivered per document
+//! through a [`ResultSink`](coordinator::ResultSink) (count-only,
+//! collect, or callback), per-view subscriptions
+//! ([`SessionBuilder::subscribe`](coordinator::SessionBuilder::subscribe)),
+//! and per-query subscriptions
+//! ([`SessionBuilder::subscribe_query`](coordinator::SessionBuilder::subscribe_query)).
 //!
 //! One-off evaluation ([`Engine::run_doc`](coordinator::Engine::run_doc))
 //! and whole-corpus runs ([`Engine::run_corpus`](coordinator::Engine::run_corpus))
@@ -57,10 +81,21 @@
 //! submissions flow through the same bounded-queue scheduler
 //! ([`runtime::queue`]).
 //!
+//! ### Migrating from single-query `compile_aql`
+//!
+//! [`Engine::compile_aql`](coordinator::Engine::compile_aql) remains as
+//! the one-entry convenience wrapper: view names stay unqualified,
+//! existing [`ViewHandle`](exec::ViewHandle)s stay valid, and
+//! `engine.view("Caps")` resolves exactly as before. In a multi-query
+//! catalog, views are namespaced (`"t1.Entities"`);
+//! [`Engine::view`](coordinator::Engine::view) still accepts the bare
+//! name when it is unambiguous across the catalog, and errors with the
+//! qualified candidates when it is not.
+//!
 //! ### Migrating from `DocOutput.views`
 //!
 //! The stringly-typed `DocOutput { views: HashMap<String, Vec<Tuple>> }`
-//! surface is deprecated. `run_doc` now returns a typed
+//! surface is deprecated. `run_doc` returns a typed
 //! [`DocResult`](exec::DocResult): index it with a `ViewHandle`
 //! (`result[&handle]`), by name (`result["Caps"]`, panicking, or
 //! `result.by_name("Caps")`, fallible), or iterate `result.iter()`.
@@ -127,12 +162,12 @@ pub mod util;
 pub mod prelude {
     pub use crate::aog::{Graph, Schema, Tuple, Value};
     pub use crate::coordinator::{
-        CallbackSink, CollectSink, CountingSink, Engine, EngineConfig, ResultSink, RunReport,
-        Session, SessionBuilder,
+        CallbackSink, CatalogBuilder, CollectSink, CountingSink, Engine, EngineConfig,
+        QueryHandle, ResultSink, RunReport, Session, SessionBuilder,
     };
     pub use crate::corpus::{Corpus, CorpusSpec, Document};
     pub use crate::exec::{DocResult, Profile, ViewCatalog, ViewHandle};
-    pub use crate::partition::PartitionPlan;
+    pub use crate::partition::{PartitionMode, PartitionPlan};
     pub use crate::perfmodel::FpgaModel;
     pub use crate::runtime::{EngineSpec, FaultPlan, SimSpec};
     pub use crate::text::Span;

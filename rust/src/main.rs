@@ -6,17 +6,22 @@
 //! ```text
 //! repro queries                         list built-in queries T1–T5
 //! repro explain   --query t1            dump the optimized operator graph + costs
+//! repro explain   --merged [--queries t1,t2]  dump the merged catalog supergraph
 //! repro partition --query t1 --mode multi   show supergraph + subgraphs (Fig 1)
 //! repro profile   --query t1 [--docs N --doc-size B --threads T]   Fig 4 rows
 //! repro run       --query t1 --mode single --engine pjrt [...]     end-to-end
+//! repro run       --queries t1,t2,t3 [...]  one engine, many queries, one pass
 //! repro stream    --query t1 [--threads T --queue Q --per-doc]     stdin firehose
+//! repro bench     [--json FILE]         perf trajectory rows → BENCH_3.json
 //! ```
 
 use std::collections::HashMap;
 use std::io::BufRead;
 use std::process::ExitCode;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
-use boost::coordinator::{CallbackSink, Engine, EngineConfig};
+use boost::coordinator::{CallbackSink, Engine, EngineConfig, RunReport};
 use boost::corpus::CorpusSpec;
 use boost::partition::{partition, PartitionMode};
 use boost::perfmodel::FpgaModel;
@@ -38,6 +43,7 @@ fn main() -> ExitCode {
         "profile" => cmd_profile(&flags),
         "run" => cmd_run(&flags),
         "stream" => cmd_stream(&flags),
+        "bench" => cmd_bench(&flags),
         "-h" | "--help" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -53,8 +59,12 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream> [flags]
+const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream|bench> [flags]
   --query <t1..t5>       built-in query (default t1)
+  --queries <t1,t2,...>  register several built-ins in ONE catalog engine
+                         (merged supergraph, one partition plan, one
+                         accelerator image; run/explain)
+  --merged               explain: dump the merged catalog (default: all five)
   --aql <file>           AQL file instead of a built-in
   --mode <none|extract|single|multi>   offload scenario (default none)
   --engine <sim|native|pjrt>  accelerator backend (default sim — the
@@ -71,7 +81,10 @@ const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream>
 stream reads one document per stdin line through a Session, e.g.:
   journalctl -f | repro stream --query t2 --threads 4 --per-doc
   --per-doc              print per-document tuple counts as they complete
-  --view <name>          print each match of this output view";
+  --view <name>          print each match of this output view
+bench measures software vs sim-accelerated, single-query vs merged catalog,
+and always writes the machine-readable rows to BENCH_3.json:
+  --json <file>          override the output path";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
@@ -107,6 +120,35 @@ fn load_aql(flags: &HashMap<String, String>) -> Result<(String, String), String>
     Ok((q.name.to_string(), q.aql))
 }
 
+/// Parse `--queries t1,t2,...` into catalog entry names.
+fn catalog_names(flags: &HashMap<String, String>) -> Option<Vec<String>> {
+    flags.get("queries").map(|s| {
+        s.split(',')
+            .map(|q| q.trim().to_string())
+            .filter(|q| !q.is_empty())
+            .collect()
+    })
+}
+
+/// Register `names` (built-ins) in one catalog engine.
+fn build_catalog(names: &[String], config: EngineConfig) -> Result<Engine, String> {
+    let mut b = Engine::builder().config(config);
+    for n in names {
+        b = b.register_builtin(n.clone());
+    }
+    b.build().map_err(|e| e.to_string())
+}
+
+/// The corpus kind actually used (unknown `--kind` values fall back to
+/// news) — single source of truth for [`corpus_for`] and the bench JSON.
+fn corpus_kind(flags: &HashMap<String, String>) -> &'static str {
+    match flags.get("kind").map(|s| s.as_str()) {
+        Some("tweets") => "tweets",
+        Some("logs") => "logs",
+        _ => "news",
+    }
+}
+
 fn corpus_for(flags: &HashMap<String, String>) -> CorpusSpec {
     let docs: usize = flags
         .get("docs")
@@ -116,7 +158,7 @@ fn corpus_for(flags: &HashMap<String, String>) -> CorpusSpec {
         .get("doc-size")
         .and_then(|s| s.parse().ok())
         .unwrap_or(2048);
-    match flags.get("kind").map(|s| s.as_str()).unwrap_or("news") {
+    match corpus_kind(flags) {
         "tweets" => CorpusSpec::tweets(docs, size),
         "logs" => CorpusSpec::logs(docs, size),
         _ => CorpusSpec::news(docs, size),
@@ -165,12 +207,57 @@ fn cmd_queries() -> Result<(), String> {
 }
 
 fn cmd_explain(flags: &HashMap<String, String>) -> Result<(), String> {
+    if flags.contains_key("merged") || flags.contains_key("queries") {
+        return cmd_explain_merged(flags);
+    }
     let (name, aql) = load_aql(flags)?;
     let g = boost::aql::compile(&aql).map_err(|e| e.to_string())?;
     let opt = boost::optimizer::optimize(&g);
     println!("query {name}: {} nodes after optimization", opt.nodes.len());
     println!("{}", opt.dump());
     let cost = boost::optimizer::estimate(&opt, 2048);
+    println!("estimated cost (2048 B docs): {:.0} units", cost.total_cost);
+    Ok(())
+}
+
+/// `repro explain --merged [--queries t1,t2]`: the catalog supergraph —
+/// how many extraction leaves the merge interned, the shared plan, and
+/// each query's namespaced views.
+fn cmd_explain_merged(flags: &HashMap<String, String>) -> Result<(), String> {
+    let names: Vec<String> = catalog_names(flags).unwrap_or_else(|| {
+        boost::queries::all()
+            .iter()
+            .map(|q| q.name.to_string())
+            .collect()
+    });
+    let mut single_leaves = 0usize;
+    for n in &names {
+        let q = boost::queries::builtin(n)
+            .ok_or_else(|| format!("unknown query '{n}' (try `repro queries`)"))?;
+        let g = boost::optimizer::optimize(
+            &boost::aql::compile(&q.aql).map_err(|e| e.to_string())?,
+        );
+        single_leaves += g.extraction_leaves();
+    }
+    let engine = build_catalog(&names, EngineConfig::default())?;
+    let g = engine.graph();
+    println!(
+        "merged catalog [{}]: {} nodes, {} output views",
+        names.join(","),
+        g.nodes.len(),
+        g.outputs.len()
+    );
+    println!(
+        "extraction leaves: {} merged vs {} across independent engines ({} interned away)",
+        g.extraction_leaves(),
+        single_leaves,
+        single_leaves - g.extraction_leaves()
+    );
+    for q in engine.queries() {
+        println!("  query {}: views {}", q.name(), q.view_names().join(", "));
+    }
+    println!("{}", g.dump());
+    let cost = boost::optimizer::estimate(g, 2048);
     println!("estimated cost (2048 B docs): {:.0} units", cost.total_cost);
     Ok(())
 }
@@ -242,6 +329,9 @@ fn bar(pct: f64) -> String {
 }
 
 fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
+    if let Some(names) = catalog_names(flags) {
+        return cmd_run_catalog(&names, flags);
+    }
     let (name, aql) = load_aql(flags)?;
     let threads: usize = flags
         .get("threads")
@@ -311,6 +401,215 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         println!("  Eq.1 system estimate at this SW baseline: {}", fmt_mbps(est));
     }
     engine.shutdown();
+    Ok(())
+}
+
+/// `repro run --queries t1,t2,...`: the paper's deployment shape — one
+/// engine serving every registered query from a single merged supergraph,
+/// one partition plan, one accelerator image, one pass over the corpus.
+fn cmd_run_catalog(names: &[String], flags: &HashMap<String, String>) -> Result<(), String> {
+    let threads: usize = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let queue: usize = flags
+        .get("queue")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2 * threads.max(1));
+    let cfg = engine_config(flags)?;
+    let mode = cfg.mode;
+    let engine_name = cfg.engine.name();
+    let engine = build_catalog(names, cfg)?;
+    let corpus = corpus_for(flags).generate();
+
+    // per-query tuple counters through query subscriptions
+    let counters: Vec<Arc<AtomicUsize>> = engine
+        .queries()
+        .iter()
+        .map(|_| Arc::new(AtomicUsize::new(0)))
+        .collect();
+    let mut builder = engine.session().threads(threads).queue_depth(queue);
+    for (q, c) in engine.queries().iter().zip(&counters) {
+        let c = c.clone();
+        builder = builder.subscribe_query(q, move |_doc, qh, result| {
+            c.fetch_add(qh.total_tuples(result), Ordering::Relaxed);
+        });
+    }
+    let mut session = builder.start();
+    for doc in corpus.docs.iter().cloned() {
+        session
+            .push(doc)
+            .map_err(|e| format!("session push failed: {e}"))?;
+    }
+    let report = session.finish();
+    println!(
+        "catalog [{}] | mode {} | engine {engine_name} | {} docs x {} B | {} threads | ONE pass",
+        names.join(","),
+        mode.name(),
+        report.docs,
+        corpus.docs.first().map(|d| d.len()).unwrap_or(0),
+        report.threads,
+    );
+    println!(
+        "  wall {:8.1} ms   throughput {}   {} tuples total",
+        report.wall.as_secs_f64() * 1e3,
+        fmt_mbps(report.throughput()),
+        report.tuples,
+    );
+    for (q, c) in engine.queries().iter().zip(&counters) {
+        println!("    {:8} {:8} tuples", q.name(), c.load(Ordering::Relaxed));
+    }
+    if let Some(plan) = engine.plan() {
+        println!(
+            "  one partition plan: {} hw subgraph(s) | shared artifact set: {}",
+            plan.subgraphs.len(),
+            engine
+                .artifact_keys()
+                .iter()
+                .map(|k| k.file_name())
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+    }
+    if let Some(a) = report.accel {
+        println!(
+            "  accel: {} packages, {:.1} docs/pkg, {} hits, engine {:.1} ms, post {:.1} ms",
+            a.packages,
+            a.docs_per_package(),
+            a.hits,
+            a.engine_wall_ns as f64 / 1e6,
+            a.post_wall_ns as f64 / 1e6,
+        );
+        if let Some(sim) = engine.sim_snapshot() {
+            println!(
+                "  sim: {} packages, {} device cycles, {} faults injected",
+                sim.packages, sim.cycles, sim.faults
+            );
+        }
+    }
+    engine.shutdown();
+    Ok(())
+}
+
+/// `repro bench`: the perf-trajectory rows — docs/sec and MB/s for
+/// software vs sim-accelerated execution, each query alone vs the merged
+/// T1–T5 catalog — serialized to `BENCH_3.json` (override with
+/// `--json <file>`).
+fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
+    let threads: usize = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let corpus = corpus_for(flags).generate();
+    let doc_size = corpus.docs.first().map(|d| d.len()).unwrap_or(0);
+    let kind = corpus_kind(flags);
+    let names: Vec<String> = boost::queries::all()
+        .iter()
+        .map(|q| q.name.to_string())
+        .collect();
+    let sim_mode = PartitionMode::ExtractOnly;
+
+    let mut rows: Vec<(String, &'static str, RunReport)> = Vec::new();
+    for n in &names {
+        let q = boost::queries::builtin(n).unwrap();
+        let sw = Engine::compile_aql(&q.aql).map_err(|e| e.to_string())?;
+        rows.push((n.clone(), "software", sw.run_corpus(&corpus, threads)));
+        let hw = Engine::with_config(&q.aql, EngineConfig::simulated(sim_mode))
+            .map_err(|e| e.to_string())?;
+        rows.push((n.clone(), "sim", hw.run_corpus(&corpus, threads)));
+        hw.shutdown();
+    }
+    let merged_name = "merged-t1..t5".to_string();
+    let sw = build_catalog(&names, EngineConfig::default())?;
+    rows.push((merged_name.clone(), "software", sw.run_corpus(&corpus, threads)));
+    let hw = build_catalog(&names, EngineConfig::simulated(sim_mode))?;
+    rows.push((merged_name.clone(), "sim", hw.run_corpus(&corpus, threads)));
+    hw.shutdown();
+
+    println!(
+        "bench: {} docs x {doc_size} B, {threads} threads, sim mode {}",
+        corpus.docs.len(),
+        sim_mode.name()
+    );
+    println!(
+        "  {:14} {:9} {:>10} {:>9} {:>10} {:>9}",
+        "config", "engine", "docs/s", "MB/s", "tuples", "wall ms"
+    );
+    for (config, engine, r) in &rows {
+        println!(
+            "  {:14} {:9} {:>10.0} {:>9.2} {:>10} {:>9.1}",
+            config,
+            engine,
+            r.docs_per_sec(),
+            r.throughput() / 1e6,
+            r.tuples,
+            r.wall.as_secs_f64() * 1e3,
+        );
+    }
+    let total_wall = |eng: &str| -> f64 {
+        rows.iter()
+            .filter(|(c, e, _)| *e == eng && !c.starts_with("merged"))
+            .map(|(_, _, r)| r.wall.as_secs_f64())
+            .sum()
+    };
+    let merged_wall = |eng: &str| -> f64 {
+        rows.iter()
+            .find(|(c, e, _)| *e == eng && c.starts_with("merged"))
+            .map(|(_, _, r)| r.wall.as_secs_f64())
+            .unwrap_or(f64::NAN)
+    };
+    let (sw_single, sw_merged) = (total_wall("software"), merged_wall("software"));
+    let (sim_single, sim_merged) = (total_wall("sim"), merged_wall("sim"));
+    println!(
+        "  five passes vs one: software {:.1} ms -> {:.1} ms ({:.2}x), sim {:.1} ms -> {:.1} ms ({:.2}x)",
+        sw_single * 1e3,
+        sw_merged * 1e3,
+        sw_single / sw_merged,
+        sim_single * 1e3,
+        sim_merged * 1e3,
+        sim_single / sim_merged,
+    );
+
+    // machine-readable trajectory point
+    let path = match flags.get("json") {
+        Some(p) if !p.is_empty() => p.as_str(),
+        _ => "BENCH_3.json",
+    };
+    let mut json = String::new();
+    json.push_str("{\n  \"schema\": \"boost-bench-v1\",\n");
+    json.push_str(&format!(
+        "  \"corpus\": {{\"docs\": {}, \"doc_size\": {doc_size}, \"kind\": \"{kind}\"}},\n",
+        corpus.docs.len(),
+    ));
+    json.push_str(&format!(
+        "  \"threads\": {threads},\n  \"sim_mode\": \"{}\",\n  \"runs\": [\n",
+        sim_mode.name()
+    ));
+    for (i, (config, engine, r)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"config\": \"{config}\", \"engine\": \"{engine}\", \
+             \"wall_s\": {:.6}, \"docs_per_sec\": {:.3}, \"mb_per_sec\": {:.6}, \
+             \"tuples\": {}}}{}\n",
+            r.wall.as_secs_f64(),
+            r.docs_per_sec(),
+            r.throughput() / 1e6,
+            r.tuples,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"summary\": {{\"single_software_wall_s\": {sw_single:.6}, \
+         \"merged_software_wall_s\": {sw_merged:.6}, \
+         \"merged_vs_single_software_speedup\": {:.4}, \
+         \"single_sim_wall_s\": {sim_single:.6}, \
+         \"merged_sim_wall_s\": {sim_merged:.6}, \
+         \"merged_vs_single_sim_speedup\": {:.4}}}\n}}\n",
+        sw_single / sw_merged,
+        sim_single / sim_merged,
+    ));
+    std::fs::write(path, json).map_err(|e| format!("write {path}: {e}"))?;
+    println!("  wrote {path}");
     Ok(())
 }
 

@@ -78,8 +78,30 @@ pub fn dedup_extractions(g: &Graph) -> Graph {
                 regex.search.num_states // distinguishes folded variants
             )),
             OpKind::DictExtract { dict, .. } => {
-                Some(format!("dict:{}:{:?}", dict.name, dict.case))
+                // STRUCTURAL key, not the dictionary's name: two catalog
+                // queries each declaring their own `OrgDict` with the same
+                // entries must intern to one machine, while two same-named
+                // dictionaries with different entries must not merge.
+                // Entries cannot contain '\x01' (AQL string literals), so
+                // the join is collision-free.
+                Some(format!(
+                    "dict:{:?}:{}",
+                    dict.case,
+                    dict.entries.join("\x01")
+                ))
             }
+            _ => None,
+        }
+    }
+    // the extraction's output column name is NOT part of the structural
+    // key (the scan is identical either way), but it IS part of the
+    // node's schema — aliased nodes with a different column name get a
+    // rename projection so downstream schemas stay byte-identical to an
+    // unmerged compilation (catalog queries are authored independently
+    // and must not adopt each other's column names)
+    fn out_of(kind: &OpKind) -> Option<&String> {
+        match kind {
+            OpKind::RegexExtract { out, .. } | OpKind::DictExtract { out, .. } => Some(out),
             _ => None,
         }
     }
@@ -100,15 +122,45 @@ pub fn dedup_extractions(g: &Graph) -> Graph {
     // become dead and are dropped by a final prune.
     let mut out = Graph::new();
     let mut remap: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
+    // rename projections are themselves interned by (rep, column name)
+    let mut renames: HashMap<(NodeId, String), NodeId> = HashMap::new();
     for node in &g.nodes {
         if alias[node.id] != node.id {
-            remap[node.id] = remap[alias[node.id]];
+            let rep = remap[alias[node.id]].expect("representative emitted first");
+            if out_of(&node.kind) == out_of(&g.nodes[alias[node.id]].kind) {
+                remap[node.id] = Some(rep);
+            } else {
+                // same scan, different column name: share the machine,
+                // rename on top
+                let my_out = out_of(&node.kind)
+                    .expect("only extraction nodes are aliased")
+                    .clone();
+                let id = *renames
+                    .entry((rep, my_out.clone()))
+                    .or_insert_with(|| {
+                        out.add(
+                            OpKind::Project {
+                                cols: vec![(my_out, Expr::Col(0))],
+                            },
+                            vec![rep],
+                        )
+                        .expect("rename projection over a span column")
+                    });
+                if let Some(v) = &node.view {
+                    out.name_view(id, v.clone());
+                }
+                remap[node.id] = Some(id);
+            }
             continue;
         }
+        // consumers and outputs route through each node's OWN remap entry
+        // (rep, or its rename projection) — never through `alias`
+        // directly, which would bypass the rename and leak the
+        // representative's column name into this node's consumers
         let inputs: Vec<NodeId> = node
             .inputs
             .iter()
-            .map(|&i| remap[alias[i]].expect("topological order"))
+            .map(|&i| remap[i].expect("topological order"))
             .collect();
         let id = out.add(node.kind.clone(), inputs).expect("valid rebuild");
         if let Some(v) = &node.view {
@@ -117,7 +169,7 @@ pub fn dedup_extractions(g: &Graph) -> Graph {
         remap[node.id] = Some(id);
     }
     for (name, target) in &g.outputs {
-        out.add_output(name.clone(), remap[alias[*target]].expect("output"));
+        out.add_output(name.clone(), remap[*target].expect("output"));
     }
     out
 }
@@ -436,6 +488,51 @@ mod tests {
         assert_eq!(g.op_counts()["Dictionary"], 2);
         let opt = optimize(&g);
         assert_eq!(opt.op_counts()["Dictionary"], 1);
+    }
+
+    #[test]
+    fn dedup_rename_keeps_each_views_column_names() {
+        // identical scans with different output column names: one machine,
+        // but each view's schema keeps ITS OWN column name (a catalog
+        // query must never adopt another query's column names)
+        let g = crate::aql::compile(
+            "create view A as extract regex /x+/ on d.text as m from Document d;
+             create view B as extract regex /x+/ on d.text as n from Document d;
+             output view A; output view B;",
+        )
+        .unwrap();
+        let opt = optimize(&g);
+        assert_eq!(opt.op_counts()["RegularExpression"], 1, "{}", opt.dump());
+        let (_, a) = &opt.outputs[0];
+        let (_, b) = &opt.outputs[1];
+        assert_eq!(opt.nodes[*a].schema.fields[0].name, "m");
+        assert_eq!(opt.nodes[*b].schema.fields[0].name, "n");
+    }
+
+    #[test]
+    fn dedup_is_structural_over_dictionary_entries() {
+        // same entries under different names: one machine (the catalog
+        // case — every query declares its own OrgDict)
+        let g = crate::aql::compile(
+            "create dictionary D1 as ('ibm', 'acme');
+             create dictionary D2 as ('ibm', 'acme');
+             create view A as extract dictionary 'D1' on d.text as m from Document d;
+             create view B as extract dictionary 'D2' on d.text as n from Document d;
+             output view A; output view B;",
+        )
+        .unwrap();
+        assert_eq!(optimize(&g).op_counts()["Dictionary"], 1);
+
+        // same name shape, different entries: must NOT merge
+        let g = crate::aql::compile(
+            "create dictionary D1 as ('ibm');
+             create dictionary D2 as ('acme');
+             create view A as extract dictionary 'D1' on d.text as m from Document d;
+             create view B as extract dictionary 'D2' on d.text as n from Document d;
+             output view A; output view B;",
+        )
+        .unwrap();
+        assert_eq!(optimize(&g).op_counts()["Dictionary"], 2);
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Multi-query catalog differential tests (ISSUE 3 tentpole).
+//!
+//! The acceptance bar: registering T1–T5 in ONE catalog engine must be
+//! observationally identical to running five independently compiled
+//! engines — byte-identical per-query views, document by document, across
+//! every `PartitionMode` — while sharing one partition plan, one
+//! accelerator artifact set, and interned extraction leaves.
+//!
+//! The corpus seed is fixed (reproducible CI) but overridable through
+//! `BOOST_DIFF_SEED`, like `differential.rs`.
+
+use boost::aog::Value;
+use boost::coordinator::{CollectSink, Engine, EngineConfig, QueryHandle};
+use boost::corpus::CorpusSpec;
+use boost::exec::DocResult;
+use boost::partition::PartitionMode;
+use boost::text::Document;
+
+const QUERIES: [&str; 5] = ["t1", "t2", "t3", "t4", "t5"];
+
+fn seed() -> u64 {
+    std::env::var("BOOST_DIFF_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xCA7A_1063)
+}
+
+/// Randomized corpus across all three flavours plus handcrafted edge
+/// documents that light up every query's extractors.
+fn corpus() -> Vec<Document> {
+    let mut texts: Vec<String> = Vec::new();
+    for d in CorpusSpec::news(20, 512).with_seed(seed()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::tweets(10, 160)
+        .with_seed(seed() ^ 1)
+        .generate()
+        .docs
+    {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::logs(8, 320).with_seed(seed() ^ 2).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for e in [
+        "",
+        " ",
+        "IBM",
+        "Laura Chiticariu works at IBM Research in Zurich. Call (408) 555-9876 \
+         or mail a.b@c.org; see http://example.org/x on 2014-06-30.",
+        "Acme Corp announced a $3.50 million deal (NYSE) on 2020-01-02. \
+         Acme Corp was amazing, said Peter Hofstee.",
+        "IBM IBM IBM Research IBM IBM Research IBM",
+    ] {
+        texts.push(e.to_string());
+    }
+    texts
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| Document::new(i as u64, t))
+        .collect()
+}
+
+/// Byte-exact rendering of ONE query's views for one document, with
+/// namespace-stripped view names so merged-catalog and single-engine
+/// renderings are directly comparable. Lines sorted (insensitive to tuple
+/// order within a view, byte-exact in content).
+fn render_query(doc: &Document, qh: &QueryHandle, result: &DocResult) -> String {
+    let names = qh.view_names();
+    let mut lines: Vec<String> = Vec::new();
+    for ((_, rows), name) in qh.iter(result).zip(names) {
+        for t in rows {
+            let mut line = format!("{}|{}|", doc.id, name);
+            for v in t {
+                match v {
+                    Value::Span(s) => {
+                        line.push_str(&format!("[{},{})={:?};", s.begin, s.end, s.text(&doc.text)))
+                    }
+                    other => line.push_str(&format!("{other};")),
+                }
+            }
+            lines.push(line);
+        }
+    }
+    lines.sort();
+    lines.join("\n")
+}
+
+fn config_for(mode: PartitionMode) -> EngineConfig {
+    if mode == PartitionMode::None {
+        EngineConfig::default()
+    } else {
+        EngineConfig::simulated(mode)
+    }
+}
+
+fn merged_engine(mode: PartitionMode) -> Engine {
+    let mut b = Engine::builder().config(config_for(mode));
+    for q in QUERIES {
+        b = b.register_builtin(q);
+    }
+    b.build().expect("catalog compiles under every mode")
+}
+
+#[test]
+fn merged_catalog_matches_independent_engines_across_modes() {
+    let docs = corpus();
+    for mode in [
+        PartitionMode::None,
+        PartitionMode::ExtractOnly,
+        PartitionMode::SingleSubgraph,
+        PartitionMode::MultiSubgraph,
+    ] {
+        let merged = merged_engine(mode);
+        let singles: Vec<Engine> = QUERIES
+            .iter()
+            .map(|q| {
+                Engine::with_config(
+                    &boost::queries::builtin(q).unwrap().aql,
+                    config_for(mode),
+                )
+                .unwrap()
+            })
+            .collect();
+        // schemas must survive the merge too: interned leaves must not
+        // leak one query's column names into another's views
+        for (q, single) in QUERIES.iter().zip(&singles) {
+            let qh = merged.query(q).unwrap();
+            for (mh, sh) in qh.views().iter().zip(single.views()) {
+                assert_eq!(
+                    mh.schema(),
+                    sh.schema(),
+                    "mode {:?}: schema of {q}.{} diverged from the single engine",
+                    mode,
+                    sh.name()
+                );
+            }
+        }
+        for doc in &docs {
+            let merged_result = merged.run_doc(doc);
+            for (q, single) in QUERIES.iter().zip(&singles) {
+                let qh = merged.query(q).unwrap();
+                let sh = single.query("default").unwrap();
+                let single_result = single.run_doc(doc);
+                assert_eq!(
+                    render_query(doc, &qh, &merged_result),
+                    render_query(doc, &sh, &single_result),
+                    "mode {:?}, query {q}, doc {} diverged between the merged \
+                     catalog and an independent engine",
+                    mode,
+                    doc.id
+                );
+            }
+        }
+        merged.shutdown();
+        for s in singles {
+            s.shutdown();
+        }
+    }
+}
+
+#[test]
+fn merged_catalog_has_one_plan_one_artifact_set_and_interned_leaves() {
+    let merged = merged_engine(PartitionMode::ExtractOnly);
+
+    // ONE partition plan; extract-only folds every deduplicated leaf into
+    // ONE hardware subgraph — the paper's single shared FPGA image
+    let plan = merged.plan().expect("accelerated catalog has a plan");
+    assert_eq!(
+        plan.subgraphs.len(),
+        1,
+        "extract-only must produce a single shared subgraph"
+    );
+
+    // interning: merged leaf count < sum of per-query leaf counts
+    let merged_leaves = merged.graph().extraction_leaves();
+    let single_sum: usize = QUERIES
+        .iter()
+        .map(|q| {
+            Engine::compile_aql(&boost::queries::builtin(q).unwrap().aql)
+                .unwrap()
+                .graph()
+                .extraction_leaves()
+        })
+        .sum();
+    assert!(
+        merged_leaves < single_sum,
+        "no leaf interning: merged {merged_leaves} vs per-query sum {single_sum}"
+    );
+    // the shared subgraph carries exactly the merged (deduplicated) leaves
+    assert_eq!(plan.subgraphs[0].body.extraction_leaves(), merged_leaves);
+
+    // ONE artifact set, versus one per engine when compiled independently
+    let merged_artifacts = merged.artifact_keys().len();
+    assert!(merged_artifacts > 0);
+    let independent_artifacts: usize = QUERIES
+        .iter()
+        .map(|q| {
+            let e = Engine::with_config(
+                &boost::queries::builtin(q).unwrap().aql,
+                EngineConfig::simulated(PartitionMode::ExtractOnly),
+            )
+            .unwrap();
+            let n = e.artifact_keys().len();
+            e.shutdown();
+            n
+        })
+        .sum();
+    assert!(
+        merged_artifacts < independent_artifacts,
+        "catalog must not multiply artifact sets: merged {merged_artifacts} \
+         vs {independent_artifacts} across five engines"
+    );
+    merged.shutdown();
+}
+
+#[test]
+fn merged_catalog_session_matches_run_doc() {
+    use std::sync::Arc;
+
+    let merged = merged_engine(PartitionMode::ExtractOnly);
+    let docs: Vec<Document> = corpus().into_iter().take(20).collect();
+    let sink = Arc::new(CollectSink::default());
+    let mut session = merged
+        .session()
+        .threads(4)
+        .queue_depth(4)
+        .sink(sink.clone())
+        .start();
+    session.push_batch(docs.iter().cloned()).unwrap();
+    session.finish();
+    let collected = sink.take();
+    assert_eq!(collected.len(), docs.len());
+    for (doc, streamed) in collected {
+        let sync = merged.run_doc(&doc);
+        for q in QUERIES {
+            let qh = merged.query(q).unwrap();
+            assert_eq!(
+                render_query(&doc, &qh, &streamed),
+                render_query(&doc, &qh, &sync),
+                "query {q}, doc {}: streamed result diverged from run_doc",
+                doc.id
+            );
+        }
+    }
+    merged.shutdown();
+}
