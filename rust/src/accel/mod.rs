@@ -32,8 +32,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::aog::Tuple;
-use crate::exec::{Executor, Profiler, SubgraphRunner};
+use crate::aog::{Schema, Tuple};
+use crate::exec::{Executor, Profiler, SubgraphRunner, TupleBatch};
 use crate::hwcompiler::{AccelConfig, MatcherRef, BLOCK_SIZES};
 use crate::metrics::{AccelMetrics, QueueSnapshot, QueueStats};
 use crate::partition::PartitionPlan;
@@ -77,13 +77,15 @@ impl Default for AccelOptions {
     }
 }
 
-/// One queued request.
+/// One queued request. External tuple streams travel columnar end to end
+/// ([`TupleBatch`]), so the communication thread never touches row-shaped
+/// tuples.
 struct Submission {
     subgraph_id: usize,
     doc: Document,
     tokens: Arc<TokenIndex>,
-    ext: Vec<Vec<Tuple>>,
-    reply: Sender<Result<Arc<Vec<Vec<Tuple>>>, String>>,
+    ext: Vec<TupleBatch>,
+    reply: Sender<Result<Arc<Vec<TupleBatch>>, String>>,
 }
 
 /// A subgraph's pre-packed state, built once at service start.
@@ -180,8 +182,8 @@ impl AccelService {
         subgraph_id: usize,
         doc: Document,
         tokens: Arc<TokenIndex>,
-        ext: Vec<Vec<Tuple>>,
-    ) -> Receiver<Result<Arc<Vec<Vec<Tuple>>>, String>> {
+        ext: Vec<TupleBatch>,
+    ) -> Receiver<Result<Arc<Vec<TupleBatch>>, String>> {
         let (reply, rx) = channel();
         // clone the producer handle out of the lock so a full queue blocks
         // only this worker, not everyone behind the mutex
@@ -402,39 +404,40 @@ fn run_package(
     // replies are deferred until the metrics are recorded, so a caller
     // that joins its workers observes complete counters
     let mut replies: Vec<(
-        &Sender<Result<Arc<Vec<Vec<Tuple>>>, String>>,
-        Arc<Vec<Vec<Tuple>>>,
+        &Sender<Result<Arc<Vec<TupleBatch>>, String>>,
+        Arc<Vec<TupleBatch>>,
     )> = Vec::with_capacity(batch.len());
     for (di, sub) in batch.iter().enumerate() {
-        let mut overrides: HashMap<usize, Vec<Tuple>> = HashMap::new();
+        let mut overrides: HashMap<usize, TupleBatch> = HashMap::new();
         for (mi, machine) in prep.config.machines.iter().enumerate() {
             let events = &per_doc_machine[di][mi];
             total_hits += events.len() as u64;
-            let tuples: Vec<Tuple> = match &machine.matcher {
+            // reconstruction emits spans straight into an arena-backed
+            // span column — the hit stream never becomes row tuples
+            let mut spans = TupleBatch::single_span();
+            match &machine.matcher {
                 MatcherRef::Regex(re) => {
                     let ends: Vec<usize> = events.iter().map(|&(e, _)| e).collect();
-                    re.from_hw_ends(&sub.doc.text, &ends)
-                        .into_iter()
-                        .map(|m| vec![crate::aog::Value::Span(m.span)])
-                        .collect()
+                    spans.fill_spans(|out| {
+                        re.from_hw_ends_spans_into(&sub.doc.text, &ends, out)
+                    });
                 }
-                MatcherRef::Dict(ac) => ac
-                    .from_hw_states(sub.doc.text.as_bytes(), events)
-                    .into_iter()
-                    .map(|m| vec![crate::aog::Value::Span(m.span)])
-                    .collect(),
-            };
-            overrides.insert(machine.body_node, tuples);
+                MatcherRef::Dict(ac) => {
+                    spans.fill_spans(|out| {
+                        ac.from_hw_states_spans_into(sub.doc.text.as_bytes(), events, out)
+                    });
+                }
+            }
+            overrides.insert(machine.body_node, spans);
         }
-        let ext_refs: Vec<&[Tuple]> = sub.ext.iter().map(|v| v.as_slice()).collect();
+        let ext_refs: Vec<&TupleBatch> = sub.ext.iter().collect();
         let out =
             prep.body_exec
-                .run_doc_with(&sub.doc, &sub.tokens, &ext_refs, &overrides);
+                .run_doc_batched(&sub.doc, &sub.tokens, &ext_refs, &overrides);
         // body outputs are registered positionally (`out0`, `out1`, …), so
         // the typed result's view order IS the output_idx order
-        let outputs: Vec<Vec<Tuple>> = (0..prep.config.outputs.len())
-            .map(|k| out.views().get(k).cloned().unwrap_or_default())
-            .collect();
+        let mut outputs = out.into_batches();
+        outputs.truncate(prep.config.outputs.len());
         replies.push((&sub.reply, Arc::new(outputs)));
     }
     let post_ns = t1.elapsed().as_nanos() as u64;
@@ -470,19 +473,83 @@ pub struct AccelSubgraphRunner {
     service: Arc<AccelService>,
     /// Output count per subgraph id, from the plan.
     subgraph_outputs: Vec<usize>,
+    /// `ExtInput` slot schemas per subgraph id, from the plan — used to
+    /// type row-shaped injections at the legacy `run` boundary
+    /// ([`Graph::ext_input_schemas`](crate::aog::Graph::ext_input_schemas)
+    /// semantics: `None` slots get an empty placeholder, matching the
+    /// executor's own boundary).
+    ext_schemas: Vec<Vec<Option<Schema>>>,
     /// Keyed by (doc id, doc text allocation, subgraph id): the Session
     /// API accepts arbitrary caller-built documents, so ids alone are not
     /// unique and must not alias cache entries across different texts.
-    cache: Mutex<HashMap<(u64, usize, usize), Arc<Vec<Vec<Tuple>>>>>,
+    cache: Mutex<HashMap<(u64, usize, usize), Arc<Vec<TupleBatch>>>>,
 }
 
 impl AccelSubgraphRunner {
     /// Wrap a running service compiled from `plan`.
     pub fn new(service: Arc<AccelService>, plan: &PartitionPlan) -> AccelSubgraphRunner {
+        let ext_schemas = plan
+            .subgraphs
+            .iter()
+            .map(|s| s.body.ext_input_schemas())
+            .collect();
         AccelSubgraphRunner {
             service,
             subgraph_outputs: plan.subgraphs.iter().map(|s| s.outputs.len()).collect(),
+            ext_schemas,
             cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn cache_key(doc: &Document, id: usize) -> (u64, usize, usize) {
+        (doc.id, Arc::as_ptr(&doc.text) as *const u8 as usize, id)
+    }
+
+    /// Validate the reference and consult the cache — called *before* any
+    /// ext-stream conversion, so cache hits (every output after the first
+    /// of a multi-output subgraph) do zero copying.
+    fn cached(&self, id: usize, output_idx: usize, doc: &Document) -> Option<Arc<Vec<TupleBatch>>> {
+        assert!(
+            id < self.subgraph_outputs.len(),
+            "graph references subgraph #{id} but the plan compiled only {}",
+            self.subgraph_outputs.len()
+        );
+        assert!(
+            output_idx < self.subgraph_outputs[id],
+            "subgraph #{id} has {} outputs, output_idx {output_idx} is out of range",
+            self.subgraph_outputs[id]
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .get(&Self::cache_key(doc, id))
+            .cloned()
+    }
+
+    /// Submit-and-sleep, filling the per-(doc, subgraph) cache — shared by
+    /// the row and batch entry points (which check [`Self::cached`] first).
+    fn fetch(
+        &self,
+        id: usize,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: Vec<TupleBatch>,
+    ) -> Arc<Vec<TupleBatch>> {
+        let rx = self
+            .service
+            .submit(id, doc.clone(), Arc::new(tokens.clone()), ext);
+        // document-per-thread: sleep until the package completes
+        match rx.recv() {
+            Ok(Ok(outputs)) => {
+                let mut cache = self.cache.lock().unwrap();
+                if cache.len() > 4096 {
+                    cache.clear(); // workers only revisit the current doc
+                }
+                cache.insert(Self::cache_key(doc, id), outputs.clone());
+                outputs
+            }
+            Ok(Err(e)) => panic!("accelerator error: {e}"),
+            Err(_) => panic!("accelerator service shut down while waiting"),
         }
     }
 }
@@ -496,39 +563,34 @@ impl SubgraphRunner for AccelSubgraphRunner {
         tokens: &TokenIndex,
         ext: &[&[Tuple]],
     ) -> Vec<Tuple> {
-        assert!(
-            id < self.subgraph_outputs.len(),
-            "graph references subgraph #{id} but the plan compiled only {}",
-            self.subgraph_outputs.len()
-        );
-        assert!(
-            output_idx < self.subgraph_outputs[id],
-            "subgraph #{id} has {} outputs, output_idx {output_idx} is out of range",
-            self.subgraph_outputs[id]
-        );
-        let cache_key = (doc.id, Arc::as_ptr(&doc.text) as *const u8 as usize, id);
-        if let Some(r) = self.cache.lock().unwrap().get(&cache_key) {
+        if let Some(r) = self.cached(id, output_idx, doc) {
+            return r[output_idx].to_tuples();
+        }
+        let ext_batches: Vec<TupleBatch> = ext
+            .iter()
+            .enumerate()
+            .map(|(slot, rows)| match self.ext_schemas[id].get(slot) {
+                Some(Some(schema)) => TupleBatch::from_rows(schema, rows),
+                _ => TupleBatch::empty(),
+            })
+            .collect();
+        self.fetch(id, doc, tokens, ext_batches)[output_idx].to_tuples()
+    }
+
+    fn run_batch(
+        &self,
+        id: usize,
+        output_idx: usize,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&TupleBatch],
+        _schema: &Schema,
+    ) -> TupleBatch {
+        if let Some(r) = self.cached(id, output_idx, doc) {
             return r[output_idx].clone();
         }
-        let rx = self.service.submit(
-            id,
-            doc.clone(),
-            Arc::new(tokens.clone()),
-            ext.iter().map(|s| s.to_vec()).collect(),
-        );
-        // document-per-thread: sleep until the package completes
-        match rx.recv() {
-            Ok(Ok(outputs)) => {
-                let mut cache = self.cache.lock().unwrap();
-                if cache.len() > 4096 {
-                    cache.clear(); // workers only revisit the current doc
-                }
-                cache.insert(cache_key, outputs.clone());
-                outputs[output_idx].clone()
-            }
-            Ok(Err(e)) => panic!("accelerator error: {e}"),
-            Err(_) => panic!("accelerator service shut down while waiting"),
-        }
+        let ext_batches: Vec<TupleBatch> = ext.iter().map(|b| (*b).clone()).collect();
+        self.fetch(id, doc, tokens, ext_batches)[output_idx].clone()
     }
 }
 

@@ -141,7 +141,9 @@ pub enum Expr {
     /// Input column by position.
     Col(usize),
     LitInt(i64),
-    LitStr(String),
+    /// String literal, interned once at compile time so evaluation is a
+    /// refcount bump instead of a per-row allocation.
+    LitStr(Arc<str>),
     LitBool(bool),
     Cmp(Box<Expr>, CmpOp, Box<Expr>),
     And(Box<Expr>, Box<Expr>),
@@ -167,6 +169,35 @@ pub struct EvalCtx<'a> {
     pub text: &'a str,
     pub tokens: &'a TokenIndex,
 }
+
+/// Positional row access for expression evaluation. Implemented by the
+/// legacy [`Tuple`] (a row of owned values) and by the columnar cursors
+/// ([`TupleRef`](crate::exec::batch::TupleRef) /
+/// [`JoinRow`](crate::exec::batch::JoinRow)), so a single evaluator serves
+/// both storage layouts.
+pub trait RowAccess {
+    /// The value of column `i` (owned; spans/ints copy, strings bump a
+    /// refcount).
+    fn value_at(&self, i: usize) -> Value;
+}
+
+impl RowAccess for Tuple {
+    #[inline]
+    fn value_at(&self, i: usize) -> Value {
+        self[i].clone()
+    }
+}
+
+impl<R: RowAccess + ?Sized> RowAccess for &R {
+    #[inline]
+    fn value_at(&self, i: usize) -> Value {
+        (**self).value_at(i)
+    }
+}
+
+/// Largest builtin-function arity ([`Func::signature`]); lets `Call`
+/// evaluation stage its arguments on the stack instead of a per-row `Vec`.
+const MAX_FUNC_ARGS: usize = 4;
 
 impl Expr {
     /// Infer the expression's type against `schema`, or fail.
@@ -233,29 +264,41 @@ impl Expr {
         }
     }
 
-    /// Evaluate against a tuple. Expressions are type-checked at compile
-    /// time, so value-kind mismatches here panic (engine bug).
-    pub fn eval(&self, tuple: &Tuple, ctx: &EvalCtx<'_>) -> Value {
+    /// Evaluate against a row (legacy [`Tuple`] or a columnar cursor —
+    /// anything implementing [`RowAccess`]). Expressions are type-checked
+    /// at compile time, so value-kind mismatches here panic (engine bug).
+    pub fn eval<R: RowAccess>(&self, row: &R, ctx: &EvalCtx<'_>) -> Value {
         match self {
-            Expr::Col(i) => tuple[*i].clone(),
+            Expr::Col(i) => row.value_at(*i),
             Expr::LitInt(v) => Value::Int(*v),
-            Expr::LitStr(s) => Value::Str(Arc::from(s.as_str())),
+            Expr::LitStr(s) => Value::Str(s.clone()),
             Expr::LitBool(b) => Value::Bool(*b),
             Expr::Cmp(a, op, b) => {
-                let va = a.eval(tuple, ctx);
-                let vb = b.eval(tuple, ctx);
+                let va = a.eval(row, ctx);
+                let vb = b.eval(row, ctx);
                 Value::Bool(compare(&va, *op, &vb))
             }
             Expr::And(a, b) => {
-                Value::Bool(a.eval(tuple, ctx).as_bool() && b.eval(tuple, ctx).as_bool())
+                Value::Bool(a.eval(row, ctx).as_bool() && b.eval(row, ctx).as_bool())
             }
             Expr::Or(a, b) => {
-                Value::Bool(a.eval(tuple, ctx).as_bool() || b.eval(tuple, ctx).as_bool())
+                Value::Bool(a.eval(row, ctx).as_bool() || b.eval(row, ctx).as_bool())
             }
-            Expr::Not(a) => Value::Bool(!a.eval(tuple, ctx).as_bool()),
+            Expr::Not(a) => Value::Bool(!a.eval(row, ctx).as_bool()),
             Expr::Call(f, args) => {
-                let vals: Vec<Value> = args.iter().map(|a| a.eval(tuple, ctx)).collect();
-                eval_func(*f, &vals, ctx)
+                // arguments staged on the stack: this runs once per row on
+                // the executor's hot path and must not touch the allocator
+                if args.len() <= MAX_FUNC_ARGS {
+                    let mut vals: [Value; MAX_FUNC_ARGS] =
+                        [Value::Null, Value::Null, Value::Null, Value::Null];
+                    for (i, a) in args.iter().enumerate() {
+                        vals[i] = a.eval(row, ctx);
+                    }
+                    eval_func(*f, &vals[..args.len()], ctx)
+                } else {
+                    let vals: Vec<Value> = args.iter().map(|a| a.eval(row, ctx)).collect();
+                    eval_func(*f, &vals, ctx)
+                }
             }
         }
     }

@@ -424,6 +424,23 @@ impl Graph {
         self.nodes.iter().filter(|n| n.kind.is_extraction()).count()
     }
 
+    /// `ExtInput` slot → schema (`None` for slots no node references) —
+    /// the single source of truth for every boundary that types
+    /// row-shaped external injections (the executor's legacy entry, the
+    /// accelerator runner), so placeholder semantics cannot drift.
+    pub fn ext_input_schemas(&self) -> Vec<Option<Schema>> {
+        let mut out: Vec<Option<Schema>> = Vec::new();
+        for n in &self.nodes {
+            if let OpKind::ExtInput { slot, schema } = &n.kind {
+                if *slot >= out.len() {
+                    out.resize(*slot + 1, None);
+                }
+                out[*slot] = Some(schema.clone());
+            }
+        }
+        out
+    }
+
     /// Downstream consumers of each node.
     pub fn consumers(&self) -> Vec<Vec<NodeId>> {
         let mut out = vec![Vec::new(); self.nodes.len()];

@@ -412,7 +412,7 @@ fn resolve_expr(e: &AqlExpr, scope: &Scope) -> Result<Expr, CompileError> {
     Ok(match e {
         AqlExpr::ColRef { alias, col } => Expr::Col(scope.resolve(alias, col)?),
         AqlExpr::Int(n) => Expr::LitInt(*n),
-        AqlExpr::Str(s) => Expr::LitStr(s.clone()),
+        AqlExpr::Str(s) => Expr::LitStr(s.as_str().into()),
         AqlExpr::Bool(b) => Expr::LitBool(*b),
         AqlExpr::Call { func, args } => {
             let f = Func::parse(func)

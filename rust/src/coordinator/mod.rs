@@ -39,7 +39,7 @@ use anyhow::{anyhow, Result};
 use crate::accel::{AccelOptions, AccelService, AccelSubgraphRunner};
 use crate::aog::{Graph, Tuple};
 use crate::corpus::Corpus;
-use crate::exec::{DocResult, Executor, Profile, Profiler, ViewHandle};
+use crate::exec::{DocResult, ExecStrategy, Executor, Profile, Profiler, ViewHandle};
 use crate::hwcompiler::{compile_subgraph, AccelConfig, ArtifactKey, BLOCK_SIZES};
 use crate::metrics::{AccelSnapshot, QueueSnapshot};
 use crate::partition::{partition, PartitionMode, PartitionPlan, SoftwareSubgraphRunner};
@@ -60,6 +60,11 @@ pub struct EngineConfig {
     pub profile: bool,
     /// Run the optimizer (on by default; off exposes the naive plans).
     pub optimize: bool,
+    /// Which software-executor pipeline to run: columnar `TupleBatch`
+    /// execution (default) or the seed's row-at-a-time `Vec<Tuple>`
+    /// baseline ([`ExecStrategy::LegacyRows`] — differential tests and
+    /// old-vs-new benches only).
+    pub strategy: ExecStrategy,
 }
 
 impl Default for EngineConfig {
@@ -72,6 +77,7 @@ impl Default for EngineConfig {
             accel: AccelOptions::default(),
             profile: true,
             optimize: true,
+            strategy: ExecStrategy::Columnar,
         }
     }
 }
@@ -80,6 +86,15 @@ impl EngineConfig {
     /// Software-only configuration.
     pub fn software() -> EngineConfig {
         EngineConfig::default()
+    }
+
+    /// Software-only configuration on the legacy row-at-a-time pipeline —
+    /// the pre-columnar baseline `repro bench` measures "old" against.
+    pub fn legacy_rows() -> EngineConfig {
+        EngineConfig {
+            strategy: ExecStrategy::LegacyRows,
+            ..Default::default()
+        }
     }
 
     /// Accelerated configuration with the given mode and backend.
@@ -160,9 +175,11 @@ impl QueryHandle {
         self.views.iter().map(move |h| (h, result.view(h)))
     }
 
-    /// Total tuples this query produced for one document.
+    /// Total tuples this query produced for one document. Counts from
+    /// whichever result layout exists ([`DocResult::view_len`]) — no row
+    /// materialization.
     pub fn total_tuples(&self, result: &DocResult) -> usize {
-        self.iter(result).map(|(_, rows)| rows.len()).sum()
+        self.views.iter().map(|h| result.view_len(h)).sum()
     }
 }
 
@@ -370,7 +387,8 @@ impl Engine {
             Profiler::disabled()
         });
         let exec_graph = Arc::new(exec_graph);
-        let mut executor = Executor::new(exec_graph.clone(), profiler.clone());
+        let mut executor =
+            Executor::new(exec_graph.clone(), profiler.clone()).with_strategy(config.strategy);
         if let (Some(plan), Some(service)) = (&plan, &service) {
             executor = executor.with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(
                 service.clone(),
@@ -948,6 +966,21 @@ mod tests {
         // empty namespace: unqualified handles, identical to Engine::view
         assert_eq!(q.view("PersonOrg").unwrap().name(), "PersonOrg");
         assert!(engine.artifact_keys().is_empty(), "software engine");
+    }
+
+    #[test]
+    fn legacy_rows_engine_matches_columnar() {
+        let corpus = CorpusSpec::news(6, 512).generate();
+        let col = Engine::compile_aql(&t1_aql()).unwrap();
+        let leg = Engine::with_config(&t1_aql(), EngineConfig::legacy_rows()).unwrap();
+        for d in &corpus.docs {
+            assert_eq!(
+                col.run_doc(d).views(),
+                leg.run_doc(d).views(),
+                "doc {}",
+                d.id
+            );
+        }
     }
 
     #[test]

@@ -174,6 +174,12 @@ impl SessionBuilder {
     /// document with that document's tuples for the view (possibly
     /// empty), before the sink sees the full result.
     ///
+    /// Execution is columnar internally; the row-shaped `&[Tuple]` handed
+    /// to `f` is materialized lazily from the document's
+    /// [`TupleBatch`](crate::exec::TupleBatch)es on first subscription
+    /// delivery (sessions without subscriptions never build rows —
+    /// counting sinks stay fully columnar).
+    ///
     /// Panics immediately (not per-document in a worker) if `view` was
     /// resolved from a different engine.
     pub fn subscribe<F>(mut self, view: &ViewHandle, f: F) -> SessionBuilder

@@ -58,77 +58,38 @@ impl AhoCorasick {
             outputs[cur as usize].push((id as u32, folded.len() as u32));
         }
 
-        // BFS fail links; resolve into dense table.
+        // Single-pass BFS: fail links AND the dense table in one sweep,
+        // O(states × 256) total. The invariant is the classic one — when
+        // state `s` is popped, `fail(s)` lies at a strictly smaller depth,
+        // so its table row is already final and `fail(t) = delta(fail(s),
+        // b)` is a single table read instead of a fail-chain walk (the
+        // chain chase made construction superlinear, which started to hurt
+        // once the catalog began interning merged-query dictionaries).
         let n = next.len();
         let mut fail = vec![ROOT; n];
+        let mut table = vec![0u32; n * 256];
         let mut queue = std::collections::VecDeque::new();
         for b in 0..256usize {
             let t = next[ROOT as usize][b];
+            table[ROOT as usize * 256 + b] = if t != 0 { t } else { ROOT };
             if t != 0 {
                 fail[t as usize] = ROOT;
                 queue.push_back(t);
             }
         }
         while let Some(s) = queue.pop_front() {
+            let fail_s = fail[s as usize] as usize;
             for b in 0..256usize {
                 let t = next[s as usize][b];
-                if t == 0 {
-                    continue;
-                }
-                // fail(t) = goto(fail(s), b) chased through fail links
-                let mut f = fail[s as usize];
-                loop {
-                    let g = next[f as usize][b];
-                    if g != 0 && g != t {
-                        fail[t as usize] = g;
-                        break;
-                    }
-                    if f == ROOT {
-                        if g == 0 || g == t {
-                            fail[t as usize] = ROOT;
-                        }
-                        break;
-                    }
-                    f = fail[f as usize];
-                }
-                // inherit outputs along the fail chain
-                let inherited = outputs[fail[t as usize] as usize].clone();
-                outputs[t as usize].extend(inherited);
-                queue.push_back(t);
-            }
-        }
-
-        // Dense DFA: delta(s, b) = goto(s,b) if present else delta(fail(s), b).
-        // Process in BFS order so parents are resolved first.
-        let mut table = vec![0u32; n * 256];
-        // root row
-        for b in 0..256usize {
-            let t = next[ROOT as usize][b];
-            table[ROOT as usize * 256 + b] = if t != 0 { t } else { ROOT };
-        }
-        // re-BFS for the rest
-        let mut queue = std::collections::VecDeque::new();
-        let mut visited = vec![false; n];
-        visited[ROOT as usize] = true;
-        for b in 0..256usize {
-            let t = next[ROOT as usize][b];
-            if t != 0 && !visited[t as usize] {
-                visited[t as usize] = true;
-                queue.push_back(t);
-            }
-        }
-        while let Some(s) = queue.pop_front() {
-            for b in 0..256usize {
-                let t = next[s as usize][b];
-                let resolved = if t != 0 {
-                    t
-                } else {
-                    table[fail[s as usize] as usize * 256 + b]
-                };
-                table[s as usize * 256 + b] = resolved;
-                if t != 0 && !visited[t as usize] {
-                    visited[t as usize] = true;
+                if t != 0 {
+                    table[s as usize * 256 + b] = t;
+                    fail[t as usize] = table[fail_s * 256 + b];
+                    // inherit outputs along the (already final) fail chain
+                    let inherited = outputs[fail[t as usize] as usize].clone();
+                    outputs[t as usize].extend(inherited);
                     queue.push_back(t);
+                } else {
+                    table[s as usize * 256 + b] = table[fail_s * 256 + b];
                 }
             }
         }
@@ -161,47 +122,68 @@ impl AhoCorasick {
         !self.outputs[state as usize].is_empty()
     }
 
-    /// Scan `text`, returning every entry occurrence (before token-boundary
-    /// filtering). Multiple entries ending at one position all fire.
-    pub fn find_all(&self, text: &[u8]) -> Vec<DictMatch> {
-        let mut out = Vec::new();
+    /// The scan core: every entry occurrence, in scan order, handed to
+    /// `emit` (before token-boundary filtering). Multiple entries ending
+    /// at one position all fire.
+    fn scan_all(&self, text: &[u8], mut emit: impl FnMut(DictMatch)) {
         let mut state = ROOT;
         for (i, &b) in text.iter().enumerate() {
             state = self.step(state, b);
             for &(entry, len) in &self.outputs[state as usize] {
                 let end = i + 1;
                 let begin = end - len as usize;
-                out.push(DictMatch {
+                emit(DictMatch {
                     span: Span::new(begin as u32, end as u32),
                     entry,
                 });
             }
         }
+    }
+
+    /// Scan `text`, returning every entry occurrence (before token-boundary
+    /// filtering).
+    pub fn find_all(&self, text: &[u8]) -> Vec<DictMatch> {
+        let mut out = Vec::new();
+        self.scan_all(text, |m| out.push(m));
         out
     }
 
     /// Matches whose spans lie on word boundaries — the token-based
     /// semantics exposed to queries.
     pub fn find_token_matches(&self, text: &[u8]) -> Vec<DictMatch> {
-        self.find_all(text)
-            .into_iter()
-            .filter(|m| {
-                super::on_word_boundaries(text, m.span.begin as usize, m.span.end as usize)
-            })
-            .collect()
+        let mut out = Vec::new();
+        self.scan_all(text, |m| {
+            if super::on_word_boundaries(text, m.span.begin as usize, m.span.end as usize) {
+                out.push(m);
+            }
+        });
+        out
     }
 
-    /// Reconstruct matches from accelerator-reported `(position, state)`
-    /// pairs (position = exclusive end offset of the byte that produced
-    /// `state`). Must agree with [`AhoCorasick::find_token_matches`].
-    pub fn from_hw_states(&self, text: &[u8], hits: &[(usize, u32)]) -> Vec<DictMatch> {
-        let mut out = Vec::new();
+    /// [`AhoCorasick::find_token_matches`] appending spans to `out` — the
+    /// columnar extraction path writes matches straight into an
+    /// arena-backed span column, with no intermediate `DictMatch` vector.
+    pub fn find_token_spans_into(&self, text: &[u8], out: &mut Vec<Span>) {
+        self.scan_all(text, |m| {
+            if super::on_word_boundaries(text, m.span.begin as usize, m.span.end as usize) {
+                out.push(m.span);
+            }
+        });
+    }
+
+    /// The reconstruction core shared by both emit shapes.
+    fn hw_states_each(
+        &self,
+        text: &[u8],
+        hits: &[(usize, u32)],
+        mut emit: impl FnMut(DictMatch),
+    ) {
         for &(end, state) in hits {
             for &(entry, len) in &self.outputs[state as usize] {
                 if (len as usize) <= end {
                     let begin = end - len as usize;
                     if super::on_word_boundaries(text, begin, end) {
-                        out.push(DictMatch {
+                        emit(DictMatch {
                             span: Span::new(begin as u32, end as u32),
                             entry,
                         });
@@ -209,7 +191,27 @@ impl AhoCorasick {
                 }
             }
         }
+    }
+
+    /// Reconstruct matches from accelerator-reported `(position, state)`
+    /// pairs (position = exclusive end offset of the byte that produced
+    /// `state`). Must agree with [`AhoCorasick::find_token_matches`].
+    pub fn from_hw_states(&self, text: &[u8], hits: &[(usize, u32)]) -> Vec<DictMatch> {
+        let mut out = Vec::new();
+        self.hw_states_each(text, hits, |m| out.push(m));
         out
+    }
+
+    /// [`AhoCorasick::from_hw_states`] appending spans to `out` — the
+    /// accelerator post-stage reconstructs straight into an arena-backed
+    /// span column.
+    pub fn from_hw_states_spans_into(
+        &self,
+        text: &[u8],
+        hits: &[(usize, u32)],
+        out: &mut Vec<Span>,
+    ) {
+        self.hw_states_each(text, hits, |m| out.push(m.span));
     }
 
     /// Table footprint in bytes (accelerator budget accounting).
@@ -336,6 +338,51 @@ mod tests {
             want.sort_unstable();
             assert_eq!(got, want, "text {t:?}");
         }
+    }
+
+    #[test]
+    fn spans_into_agrees_with_match_form() {
+        let ac = dict(&["he", "she", "hers", "New York", "York"], CaseMode::Exact);
+        for text in ["he and she said hers", "in New York City", "ushers", ""] {
+            let mut spans = Vec::new();
+            ac.find_token_spans_into(text.as_bytes(), &mut spans);
+            let want: Vec<_> = ac
+                .find_token_matches(text.as_bytes())
+                .iter()
+                .map(|m| m.span)
+                .collect();
+            assert_eq!(spans, want, "text {text:?}");
+        }
+    }
+
+    /// The single-pass BFS build must produce exactly the textbook DFA:
+    /// delta(s, b) = goto(s, b) if present, else delta(fail(s), b) with
+    /// fail links resolved by chain-walking (the construction the rewrite
+    /// replaced). Checked by stepping both on random-ish text.
+    #[test]
+    fn dense_table_matches_chain_walk_reference() {
+        let entries = ["he", "she", "his", "hers", "a", "ab", "abab", "bab"];
+        let ac = dict(&entries, CaseMode::Exact);
+        // reference scan: walk the raw trie with explicit fail chasing
+        let text = b"ushershishehehersabababbababa he she";
+        let mut got = ac.find_all(text);
+        // reference matcher: check every (start, entry) pair directly
+        let mut want = Vec::new();
+        for (id, e) in entries.iter().enumerate() {
+            let eb = e.as_bytes();
+            for start in 0..text.len().saturating_sub(eb.len() - 1) {
+                if &text[start..start + eb.len()] == eb {
+                    want.push(DictMatch {
+                        span: Span::new(start as u32, (start + eb.len()) as u32),
+                        entry: id as u32,
+                    });
+                }
+            }
+        }
+        let key = |m: &DictMatch| (m.span.begin, m.span.end, m.entry);
+        got.sort_by_key(key);
+        want.sort_by_key(key);
+        assert_eq!(got, want);
     }
 
     #[test]

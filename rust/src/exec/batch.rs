@@ -1,0 +1,946 @@
+//! Columnar tuple batches and the per-thread buffer arena — the storage
+//! layer of the software executor's hot path.
+//!
+//! The seed executor materialized every operator output as `Vec<Tuple>`
+//! with `Tuple = Vec<Value>`: one heap allocation per tuple per operator
+//! per document, through a 16-byte-tagged enum even when a column is pure
+//! spans. The paper's software baseline is supposed to be memory-bandwidth
+//! bound, not allocator bound, so this module replaces that layout with:
+//!
+//! * [`TupleBatch`] — one buffer per *column*, typed ([`ColumnData`]:
+//!   spans, ints, floats, bools, strings) plus a lazily-materialized null
+//!   bitmap ([`NullMask`], absent in the common all-valid case). A batch
+//!   of `n` span tuples is a single `Vec<Span>` instead of `n` boxed rows.
+//! * [`BatchArena`] — a per-thread pool of recycled column buffers.
+//!   Buffers are checked out when an operator builds its output batch and
+//!   returned (cleared, **not** freed) when the batch drops, so a worker
+//!   thread reaches a steady state of near-zero allocations per document.
+//! * [`TupleRef`] — a cursor over one row of a batch, implementing
+//!   [`RowAccess`] so the scalar expression evaluator runs unchanged over
+//!   both layouts; [`JoinRow`] concatenates two cursors for join
+//!   predicates without materializing the combined row.
+//!
+//! Row-oriented `Tuple`s survive only at the API boundary:
+//! [`DocResult`](super::DocResult) converts lazily on first access.
+
+use std::cell::RefCell;
+use std::cmp::Ordering;
+use std::sync::Arc;
+
+use crate::aog::expr::RowAccess;
+use crate::aog::{FieldType, Schema, Tuple, Value};
+use crate::text::Span;
+
+/// Typed storage for one column of a [`TupleBatch`].
+#[derive(Debug, Clone)]
+pub enum ColumnData {
+    Spans(Vec<Span>),
+    Ints(Vec<i64>),
+    Floats(Vec<f64>),
+    Bools(Vec<bool>),
+    Strs(Vec<Arc<str>>),
+}
+
+impl ColumnData {
+    /// Number of cells.
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::Spans(v) => v.len(),
+            ColumnData::Ints(v) => v.len(),
+            ColumnData::Floats(v) => v.len(),
+            ColumnData::Bools(v) => v.len(),
+            ColumnData::Strs(v) => v.len(),
+        }
+    }
+
+    /// True when the column holds no cells.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The column's declared type.
+    pub fn field_type(&self) -> FieldType {
+        match self {
+            ColumnData::Spans(_) => FieldType::Span,
+            ColumnData::Ints(_) => FieldType::Int,
+            ColumnData::Floats(_) => FieldType::Float,
+            ColumnData::Bools(_) => FieldType::Bool,
+            ColumnData::Strs(_) => FieldType::Str,
+        }
+    }
+
+    fn clear(&mut self) {
+        match self {
+            ColumnData::Spans(v) => v.clear(),
+            ColumnData::Ints(v) => v.clear(),
+            ColumnData::Floats(v) => v.clear(),
+            ColumnData::Bools(v) => v.clear(),
+            ColumnData::Strs(v) => v.clear(),
+        }
+    }
+
+}
+
+/// The shared empty-string placeholder null cells use — a refcount bump
+/// instead of a per-null allocation.
+fn empty_str() -> Arc<str> {
+    use std::sync::OnceLock;
+    static EMPTY: OnceLock<Arc<str>> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::from("")).clone()
+}
+
+/// Per-row null flags, packed 64 rows per word. Only allocated once a null
+/// actually appears — extraction and the span algebra never produce one.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NullMask {
+    words: Vec<u64>,
+}
+
+impl NullMask {
+    fn set(&mut self, i: usize) {
+        let w = i / 64;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1u64 << (i % 64);
+    }
+
+    fn get(&self, i: usize) -> bool {
+        self.words
+            .get(i / 64)
+            .is_some_and(|w| (w >> (i % 64)) & 1 == 1)
+    }
+
+    fn any(&self) -> bool {
+        self.words.iter().any(|w| *w != 0)
+    }
+}
+
+/// One typed column plus its (usually absent) null bitmap. Data buffers
+/// come from the per-thread [`BatchArena`] and return to it on drop.
+#[derive(Debug)]
+pub struct Column {
+    data: ColumnData,
+    nulls: Option<NullMask>,
+}
+
+impl Column {
+    /// Checked-out empty column of type `ty`.
+    fn new(ty: FieldType) -> Column {
+        Column {
+            data: arena_take(ty),
+            nulls: None,
+        }
+    }
+
+    /// Number of cells.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the column holds no cells.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// The column's declared type.
+    pub fn field_type(&self) -> FieldType {
+        self.data.field_type()
+    }
+
+    /// The typed storage.
+    pub fn data(&self) -> &ColumnData {
+        &self.data
+    }
+
+    /// True when cell `i` is null.
+    #[inline]
+    pub fn is_null(&self, i: usize) -> bool {
+        self.nulls.as_ref().is_some_and(|m| m.get(i))
+    }
+
+    fn push_null(&mut self) {
+        // a placeholder keeps the typed buffer dense; the mask records it
+        match &mut self.data {
+            ColumnData::Spans(v) => v.push(Span::new(0, 0)),
+            ColumnData::Ints(v) => v.push(0),
+            ColumnData::Floats(v) => v.push(0.0),
+            ColumnData::Bools(v) => v.push(false),
+            ColumnData::Strs(v) => v.push(empty_str()),
+        }
+        let i = self.data.len() - 1;
+        self.nulls.get_or_insert_with(NullMask::default).set(i);
+    }
+
+    /// Append `v`; its kind must match the column type (or be null).
+    pub fn push_value(&mut self, v: &Value) {
+        if matches!(v, Value::Null) {
+            self.push_null();
+            return;
+        }
+        match (&mut self.data, v) {
+            (ColumnData::Spans(d), Value::Span(s)) => d.push(*s),
+            (ColumnData::Ints(d), Value::Int(x)) => d.push(*x),
+            (ColumnData::Floats(d), Value::Float(x)) => d.push(*x),
+            (ColumnData::Bools(d), Value::Bool(x)) => d.push(*x),
+            (ColumnData::Strs(d), Value::Str(s)) => d.push(s.clone()),
+            (d, v) => panic!("value {v:?} does not fit a {} column", d.field_type()),
+        }
+    }
+
+    /// Append cell `i` of `src` (same column type) without going through
+    /// `Value` — the row-copy primitive of select/consolidate/sort/limit.
+    #[inline]
+    pub fn push_cell(&mut self, src: &Column, i: usize) {
+        if src.is_null(i) {
+            self.push_null();
+            return;
+        }
+        match (&mut self.data, &src.data) {
+            (ColumnData::Spans(d), ColumnData::Spans(s)) => d.push(s[i]),
+            (ColumnData::Ints(d), ColumnData::Ints(s)) => d.push(s[i]),
+            (ColumnData::Floats(d), ColumnData::Floats(s)) => d.push(s[i]),
+            (ColumnData::Bools(d), ColumnData::Bools(s)) => d.push(s[i]),
+            (ColumnData::Strs(d), ColumnData::Strs(s)) => d.push(s[i].clone()),
+            (d, s) => panic!(
+                "column type mismatch: {} cell into {} column",
+                s.field_type(),
+                d.field_type()
+            ),
+        }
+    }
+
+    /// Append every cell of `src` (same column type) — the union primitive.
+    pub fn extend_from(&mut self, src: &Column) {
+        let base = self.data.len();
+        match (&mut self.data, &src.data) {
+            (ColumnData::Spans(d), ColumnData::Spans(s)) => d.extend_from_slice(s),
+            (ColumnData::Ints(d), ColumnData::Ints(s)) => d.extend_from_slice(s),
+            (ColumnData::Floats(d), ColumnData::Floats(s)) => d.extend_from_slice(s),
+            (ColumnData::Bools(d), ColumnData::Bools(s)) => d.extend_from_slice(s),
+            (ColumnData::Strs(d), ColumnData::Strs(s)) => d.extend_from_slice(s),
+            (d, s) => panic!(
+                "column type mismatch: extending {} column with {}",
+                d.field_type(),
+                s.field_type()
+            ),
+        }
+        if let Some(src_nulls) = &src.nulls {
+            if src_nulls.any() {
+                let dst = self.nulls.get_or_insert_with(NullMask::default);
+                for i in 0..src.data.len() {
+                    if src_nulls.get(i) {
+                        dst.set(base + i);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Cell `i` as an owned [`Value`] (the API-boundary conversion).
+    pub fn value(&self, i: usize) -> Value {
+        if self.is_null(i) {
+            return Value::Null;
+        }
+        match &self.data {
+            ColumnData::Spans(v) => Value::Span(v[i]),
+            ColumnData::Ints(v) => Value::Int(v[i]),
+            ColumnData::Floats(v) => Value::Float(v[i]),
+            ColumnData::Bools(v) => Value::Bool(v[i]),
+            ColumnData::Strs(v) => Value::Str(v[i].clone()),
+        }
+    }
+
+    /// Cell `i` as a span (panics on nulls or non-span columns, mirroring
+    /// [`Value::as_span`]).
+    #[inline]
+    pub fn span(&self, i: usize) -> Span {
+        match &self.data {
+            ColumnData::Spans(v) if !self.is_null(i) => v[i],
+            _ => panic!("expected span, got {:?}", self.value(i)),
+        }
+    }
+
+    /// Total order over two cells, mirroring
+    /// [`cmp_values`](super::operators::cmp_values): same-type natural
+    /// order, nulls last, float ties resolved as equal.
+    pub fn cmp_cells(&self, i: usize, other: &Column, j: usize) -> Ordering {
+        match (self.is_null(i), other.is_null(j)) {
+            (true, true) => return Ordering::Equal,
+            (true, false) => return Ordering::Greater,
+            (false, true) => return Ordering::Less,
+            (false, false) => {}
+        }
+        match (&self.data, &other.data) {
+            (ColumnData::Spans(a), ColumnData::Spans(b)) => a[i].cmp(&b[j]),
+            (ColumnData::Ints(a), ColumnData::Ints(b)) => a[i].cmp(&b[j]),
+            (ColumnData::Floats(a), ColumnData::Floats(b)) => {
+                a[i].partial_cmp(&b[j]).unwrap_or(Ordering::Equal)
+            }
+            (ColumnData::Bools(a), ColumnData::Bools(b)) => a[i].cmp(&b[j]),
+            (ColumnData::Strs(a), ColumnData::Strs(b)) => a[i].cmp(&b[j]),
+            _ => Ordering::Equal, // mixed types cannot occur in a typed column
+        }
+    }
+
+    /// Cell equality with [`Value`]'s `PartialEq` semantics (`NaN != NaN`,
+    /// `Null == Null`) — the difference operator's set membership.
+    pub fn eq_cells(&self, i: usize, other: &Column, j: usize) -> bool {
+        match (self.is_null(i), other.is_null(j)) {
+            (true, true) => return true,
+            (true, false) | (false, true) => return false,
+            (false, false) => {}
+        }
+        match (&self.data, &other.data) {
+            (ColumnData::Spans(a), ColumnData::Spans(b)) => a[i] == b[j],
+            (ColumnData::Ints(a), ColumnData::Ints(b)) => a[i] == b[j],
+            (ColumnData::Floats(a), ColumnData::Floats(b)) => a[i] == b[j],
+            (ColumnData::Bools(a), ColumnData::Bools(b)) => a[i] == b[j],
+            (ColumnData::Strs(a), ColumnData::Strs(b)) => a[i] == b[j],
+            _ => false,
+        }
+    }
+}
+
+impl Clone for Column {
+    fn clone(&self) -> Column {
+        // clones are arena-backed too, so results escaping into DocResults
+        // keep recycling wherever they are eventually dropped
+        let mut c = Column::new(self.data.field_type());
+        c.extend_from(self);
+        c
+    }
+}
+
+impl Drop for Column {
+    fn drop(&mut self) {
+        let data = std::mem::replace(&mut self.data, ColumnData::Bools(Vec::new()));
+        arena_recycle(data);
+    }
+}
+
+/// A columnar batch of tuples: one [`Column`] per schema field, all the
+/// same length. The executor's operators consume and produce these; rows
+/// exist only as [`TupleRef`] cursors until the API boundary converts.
+#[derive(Debug)]
+pub struct TupleBatch {
+    columns: Vec<Column>,
+    len: usize,
+}
+
+impl TupleBatch {
+    /// Empty batch with one checked-out column per field of `schema`.
+    pub fn for_schema(schema: &Schema) -> TupleBatch {
+        let mut columns = arena_take_columns();
+        columns.extend(schema.fields.iter().map(|f| Column::new(f.ty)));
+        TupleBatch { columns, len: 0 }
+    }
+
+    /// Empty batch with the same column layout as `src`.
+    pub fn like(src: &TupleBatch) -> TupleBatch {
+        let mut columns = arena_take_columns();
+        columns.extend(src.columns.iter().map(|c| Column::new(c.field_type())));
+        TupleBatch { columns, len: 0 }
+    }
+
+    /// Empty batch whose layout is `left`'s columns followed by `right`'s
+    /// — the join output shape.
+    pub fn concat_layout(left: &TupleBatch, right: &TupleBatch) -> TupleBatch {
+        let mut columns = arena_take_columns();
+        columns.extend(
+            left.columns
+                .iter()
+                .chain(&right.columns)
+                .map(|c| Column::new(c.field_type())),
+        );
+        TupleBatch { columns, len: 0 }
+    }
+
+    /// Empty single-span-column batch — the shape of every extraction
+    /// leaf, `DocScan` and `Block`.
+    pub fn single_span() -> TupleBatch {
+        let mut columns = arena_take_columns();
+        columns.push(Column::new(FieldType::Span));
+        TupleBatch { columns, len: 0 }
+    }
+
+    /// Zero-column, zero-row batch.
+    pub fn empty() -> TupleBatch {
+        TupleBatch {
+            columns: arena_take_columns(),
+            len: 0,
+        }
+    }
+
+    /// Convert a row-oriented view (the legacy layout) into a batch.
+    pub fn from_rows(schema: &Schema, rows: &[Tuple]) -> TupleBatch {
+        let mut b = TupleBatch::for_schema(schema);
+        for t in rows {
+            b.push_tuple(t);
+        }
+        b
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the batch holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of columns.
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Column `i`.
+    pub fn column(&self, i: usize) -> &Column {
+        &self.columns[i]
+    }
+
+    /// The span cells of column `col` as a plain slice — the fast path for
+    /// band joins, consolidate and block, which read a whole span column.
+    /// Panics if the column is not spans or contains a null (mirroring the
+    /// per-row [`Value::as_span`] contract).
+    pub fn spans(&self, col: usize) -> &[Span] {
+        let c = &self.columns[col];
+        assert!(
+            !c.nulls.as_ref().is_some_and(|m| m.any()),
+            "expected span, got null"
+        );
+        match &c.data {
+            ColumnData::Spans(v) => v,
+            other => panic!("expected span column, got {}", other.field_type()),
+        }
+    }
+
+    /// Span cell at (`row`, `col`).
+    #[inline]
+    pub fn span_at(&self, row: usize, col: usize) -> Span {
+        self.columns[col].span(row)
+    }
+
+    /// Owned [`Value`] at (`row`, `col`).
+    pub fn value(&self, row: usize, col: usize) -> Value {
+        self.columns[col].value(row)
+    }
+
+    /// Cursor over row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> TupleRef<'_> {
+        debug_assert!(i < self.len);
+        TupleRef { batch: self, row: i }
+    }
+
+    /// Iterate all rows as cursors.
+    pub fn rows(&self) -> impl Iterator<Item = TupleRef<'_>> {
+        (0..self.len).map(move |i| self.row(i))
+    }
+
+    /// Append one row of owned values (must match the column count).
+    pub fn push_row<I: IntoIterator<Item = Value>>(&mut self, vals: I) {
+        let mut n = 0;
+        for (i, v) in vals.into_iter().enumerate() {
+            self.columns[i].push_value(&v);
+            n += 1;
+        }
+        debug_assert_eq!(n, self.columns.len(), "row arity mismatch");
+        self.len += 1;
+    }
+
+    /// Append one legacy row.
+    pub fn push_tuple(&mut self, t: &Tuple) {
+        debug_assert_eq!(t.len(), self.columns.len(), "row arity mismatch");
+        for (c, v) in self.columns.iter_mut().zip(t) {
+            c.push_value(v);
+        }
+        self.len += 1;
+    }
+
+    /// Append row `row` of `src` (same layout).
+    #[inline]
+    pub fn push_row_from(&mut self, src: &TupleBatch, row: usize) {
+        for (dst, s) in self.columns.iter_mut().zip(&src.columns) {
+            dst.push_cell(s, row);
+        }
+        self.len += 1;
+    }
+
+    /// Append the concatenation of `left[li]` and `right[ri]` (layout from
+    /// [`TupleBatch::concat_layout`]) — the join emit primitive.
+    #[inline]
+    pub fn push_joined_row(
+        &mut self,
+        left: &TupleBatch,
+        li: usize,
+        right: &TupleBatch,
+        ri: usize,
+    ) {
+        let la = left.columns.len();
+        for (k, dst) in self.columns.iter_mut().enumerate() {
+            if k < la {
+                dst.push_cell(&left.columns[k], li);
+            } else {
+                dst.push_cell(&right.columns[k - la], ri);
+            }
+        }
+        self.len += 1;
+    }
+
+    /// Append a one-span row (single-span-column batches only).
+    #[inline]
+    pub fn push_span(&mut self, s: Span) {
+        debug_assert_eq!(self.columns.len(), 1);
+        match &mut self.columns[0].data {
+            ColumnData::Spans(v) => v.push(s),
+            other => panic!("push_span on a {} column", other.field_type()),
+        }
+        self.len += 1;
+    }
+
+    /// Append every row of `other` (same layout) — the union primitive.
+    pub fn extend_from(&mut self, other: &TupleBatch) {
+        debug_assert_eq!(self.columns.len(), other.columns.len());
+        for (dst, s) in self.columns.iter_mut().zip(&other.columns) {
+            dst.extend_from(s);
+        }
+        self.len += other.len;
+    }
+
+    /// Hand the single span column's buffer to `f` for direct filling —
+    /// how extraction leaves (and the accelerator's span reconstruction)
+    /// emit matches straight into arena-backed column storage with no
+    /// intermediate per-match values. The batch must be empty; its length
+    /// becomes whatever `f` pushed.
+    pub fn fill_spans<F: FnOnce(&mut Vec<Span>)>(&mut self, f: F) {
+        assert_eq!(self.len, 0, "fill_spans on a non-empty batch");
+        assert_eq!(self.columns.len(), 1, "fill_spans needs a single column");
+        match &mut self.columns[0].data {
+            ColumnData::Spans(v) => {
+                f(v);
+                self.len = v.len();
+            }
+            other => panic!("fill_spans on a {} column", other.field_type()),
+        }
+    }
+
+    /// Row equality across batches of the same layout (the `Difference`
+    /// operator's membership test), with [`Value`] `PartialEq` semantics.
+    pub fn rows_equal(a: &TupleBatch, ai: usize, b: &TupleBatch, bi: usize) -> bool {
+        debug_assert_eq!(a.columns.len(), b.columns.len());
+        a.columns
+            .iter()
+            .zip(&b.columns)
+            .all(|(ca, cb)| ca.eq_cells(ai, cb, bi))
+    }
+
+    /// Materialize the legacy row layout (API boundary only).
+    pub fn to_tuples(&self) -> Vec<Tuple> {
+        (0..self.len)
+            .map(|i| self.columns.iter().map(|c| c.value(i)).collect())
+            .collect()
+    }
+}
+
+impl Clone for TupleBatch {
+    fn clone(&self) -> TupleBatch {
+        let mut columns = arena_take_columns();
+        columns.extend(self.columns.iter().cloned());
+        TupleBatch {
+            columns,
+            len: self.len,
+        }
+    }
+}
+
+impl Drop for TupleBatch {
+    fn drop(&mut self) {
+        // drop the columns first (each recycles its data buffer), then
+        // pool the emptied container itself
+        self.columns.clear();
+        arena_recycle_columns(std::mem::take(&mut self.columns));
+    }
+}
+
+/// A cursor over one row of a [`TupleBatch`]. Implements [`RowAccess`], so
+/// predicates and projections evaluate against it directly.
+#[derive(Clone, Copy)]
+pub struct TupleRef<'a> {
+    batch: &'a TupleBatch,
+    row: usize,
+}
+
+impl TupleRef<'_> {
+    /// Number of columns.
+    pub fn arity(&self) -> usize {
+        self.batch.columns.len()
+    }
+
+    /// Owned value of column `col`.
+    #[inline]
+    pub fn value(&self, col: usize) -> Value {
+        self.batch.columns[col].value(self.row)
+    }
+
+    /// Span of column `col` (panics on non-span/null).
+    #[inline]
+    pub fn span(&self, col: usize) -> Span {
+        self.batch.columns[col].span(self.row)
+    }
+
+    /// Materialize the row as a legacy [`Tuple`].
+    pub fn to_tuple(&self) -> Tuple {
+        (0..self.arity()).map(|c| self.value(c)).collect()
+    }
+}
+
+impl RowAccess for TupleRef<'_> {
+    #[inline]
+    fn value_at(&self, i: usize) -> Value {
+        self.value(i)
+    }
+}
+
+/// Two row cursors seen as one concatenated row — how join predicates
+/// evaluate over a candidate pair without building the combined tuple.
+#[derive(Clone, Copy)]
+pub struct JoinRow<'a> {
+    pub left: TupleRef<'a>,
+    pub right: TupleRef<'a>,
+}
+
+impl RowAccess for JoinRow<'_> {
+    #[inline]
+    fn value_at(&self, i: usize) -> Value {
+        let la = self.left.arity();
+        if i < la {
+            self.left.value(i)
+        } else {
+            self.right.value(i - la)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The per-thread arena.
+
+/// Upper bound of pooled buffers per type per thread: enough to cover every
+/// live node slot of a large merged catalog, small enough that an idle
+/// worker pins only a bounded amount of memory.
+const MAX_POOLED: usize = 256;
+
+/// Pools of recycled column buffers, one instance per thread. Checked out
+/// by [`TupleBatch`] constructors, refilled by `Column`/`TupleBatch` drops;
+/// a buffer is cleared on return (len 0, capacity kept), so steady-state
+/// execution re-uses warm capacity instead of round-tripping the global
+/// allocator.
+///
+/// Known limitation: recycling is strictly per-thread, so batches that
+/// migrate threads (accelerator submissions built on a worker but dropped
+/// on the communication thread, and vice versa) refill the *receiving*
+/// thread's pool — the near-zero-alloc steady state is guaranteed only
+/// for the software path, where a document's batches live and die on one
+/// worker. Pools are capped ([`MAX_POOLED`] per type), so migration never
+/// grows memory unboundedly; making the accelerated path allocation-free
+/// would need a return-to-origin or global pool (ROADMAP open item).
+#[derive(Debug, Default)]
+pub struct BatchArena {
+    spans: Vec<Vec<Span>>,
+    ints: Vec<Vec<i64>>,
+    floats: Vec<Vec<f64>>,
+    bools: Vec<Vec<bool>>,
+    strs: Vec<Vec<Arc<str>>>,
+    columns: Vec<Vec<Column>>,
+    checkouts: u64,
+    fresh: u64,
+}
+
+impl BatchArena {
+    fn take(&mut self, ty: FieldType) -> ColumnData {
+        self.checkouts += 1;
+        macro_rules! pool {
+            ($pool:expr, $variant:path) => {
+                match $pool.pop() {
+                    Some(v) => $variant(v),
+                    None => {
+                        self.fresh += 1;
+                        $variant(Vec::new())
+                    }
+                }
+            };
+        }
+        match ty {
+            FieldType::Span => pool!(self.spans, ColumnData::Spans),
+            FieldType::Int => pool!(self.ints, ColumnData::Ints),
+            FieldType::Float => pool!(self.floats, ColumnData::Floats),
+            FieldType::Bool => pool!(self.bools, ColumnData::Bools),
+            FieldType::Str => pool!(self.strs, ColumnData::Strs),
+        }
+    }
+
+    fn put(&mut self, mut data: ColumnData) {
+        // pool even zero-capacity buffers: a column that stays empty all
+        // run still checks a buffer out per document, and a pool miss
+        // counts as `fresh` — supply must match demand or the
+        // steady-state invariant (fresh stops growing after warm-up)
+        // would fail on never-matching columns.
+        // clear before pooling: for string columns this releases the Arc
+        // references immediately instead of pinning document text
+        data.clear();
+        match data {
+            ColumnData::Spans(v) if self.spans.len() < MAX_POOLED => self.spans.push(v),
+            ColumnData::Ints(v) if self.ints.len() < MAX_POOLED => self.ints.push(v),
+            ColumnData::Floats(v) if self.floats.len() < MAX_POOLED => self.floats.push(v),
+            ColumnData::Bools(v) if self.bools.len() < MAX_POOLED => self.bools.push(v),
+            ColumnData::Strs(v) if self.strs.len() < MAX_POOLED => self.strs.push(v),
+            _ => {} // pool full: let the buffer free
+        }
+    }
+
+    fn take_columns(&mut self) -> Vec<Column> {
+        self.columns.pop().unwrap_or_default()
+    }
+
+    fn put_columns(&mut self, v: Vec<Column>) {
+        debug_assert!(v.is_empty());
+        if v.capacity() > 0 && self.columns.len() < MAX_POOLED {
+            self.columns.push(v);
+        }
+    }
+
+    fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            checkouts: self.checkouts,
+            fresh: self.fresh,
+            pooled: self.spans.len()
+                + self.ints.len()
+                + self.floats.len()
+                + self.bools.len()
+                + self.strs.len(),
+        }
+    }
+}
+
+/// Gauges of the calling thread's arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffer checkouts since the thread started.
+    pub checkouts: u64,
+    /// Checkouts that had to allocate a fresh buffer (pool miss). After
+    /// warm-up this stops growing — the recycling invariant the
+    /// `bench-alloc` tests pin.
+    pub fresh: u64,
+    /// Buffers currently parked in the pools.
+    pub pooled: usize,
+}
+
+thread_local! {
+    static ARENA: RefCell<BatchArena> = RefCell::new(BatchArena::default());
+}
+
+fn arena_take(ty: FieldType) -> ColumnData {
+    ARENA
+        .try_with(|a| a.borrow_mut().take(ty))
+        .unwrap_or_else(|_| match ty {
+            // thread teardown: the arena is gone, allocate plainly
+            FieldType::Span => ColumnData::Spans(Vec::new()),
+            FieldType::Int => ColumnData::Ints(Vec::new()),
+            FieldType::Float => ColumnData::Floats(Vec::new()),
+            FieldType::Bool => ColumnData::Bools(Vec::new()),
+            FieldType::Str => ColumnData::Strs(Vec::new()),
+        })
+}
+
+fn arena_recycle(data: ColumnData) {
+    let _ = ARENA.try_with(|a| a.borrow_mut().put(data));
+}
+
+fn arena_take_columns() -> Vec<Column> {
+    ARENA
+        .try_with(|a| a.borrow_mut().take_columns())
+        .unwrap_or_default()
+}
+
+fn arena_recycle_columns(v: Vec<Column>) {
+    let _ = ARENA.try_with(|a| a.borrow_mut().put_columns(v));
+}
+
+/// Snapshot the calling thread's arena gauges.
+pub fn arena_stats() -> ArenaStats {
+    ARENA
+        .try_with(|a| a.borrow().stats())
+        .unwrap_or(ArenaStats {
+            checkouts: 0,
+            fresh: 0,
+            pooled: 0,
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aog::FieldType;
+
+    fn schema() -> Schema {
+        Schema::of(&[
+            ("m", FieldType::Span),
+            ("n", FieldType::Int),
+            ("s", FieldType::Str),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_rows_to_batch_and_back() {
+        let rows: Vec<Tuple> = vec![
+            vec![
+                Value::Span(Span::new(0, 3)),
+                Value::Int(7),
+                Value::Str("a".into()),
+            ],
+            vec![Value::Span(Span::new(4, 6)), Value::Null, Value::Str("b".into())],
+        ];
+        let b = TupleBatch::from_rows(&schema(), &rows);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.num_columns(), 3);
+        assert_eq!(b.to_tuples(), rows);
+        assert!(b.column(1).is_null(1));
+        assert!(!b.column(1).is_null(0));
+        assert_eq!(b.value(0, 1), Value::Int(7));
+        assert_eq!(b.value(1, 1), Value::Null);
+    }
+
+    #[test]
+    fn row_cursor_and_join_row() {
+        let rows: Vec<Tuple> = vec![vec![Value::Span(Span::new(1, 2)), Value::Int(5), Value::Str("x".into())]];
+        let b = TupleBatch::from_rows(&schema(), &rows);
+        let r = b.row(0);
+        assert_eq!(r.arity(), 3);
+        assert_eq!(r.span(0), Span::new(1, 2));
+        assert_eq!(r.value_at(1), Value::Int(5));
+        assert_eq!(r.to_tuple(), rows[0]);
+
+        let j = JoinRow { left: b.row(0), right: b.row(0) };
+        assert_eq!(j.value_at(0), Value::Span(Span::new(1, 2)));
+        assert_eq!(j.value_at(4), Value::Int(5));
+    }
+
+    #[test]
+    fn push_joined_row_concatenates() {
+        let left = TupleBatch::from_rows(
+            &Schema::of(&[("a", FieldType::Span)]),
+            &[vec![Value::Span(Span::new(0, 1))]],
+        );
+        let right = TupleBatch::from_rows(
+            &Schema::of(&[("b", FieldType::Int)]),
+            &[vec![Value::Int(9)]],
+        );
+        let mut out = TupleBatch::concat_layout(&left, &right);
+        out.push_joined_row(&left, 0, &right, 0);
+        assert_eq!(
+            out.to_tuples(),
+            vec![vec![Value::Span(Span::new(0, 1)), Value::Int(9)]]
+        );
+    }
+
+    #[test]
+    fn fill_spans_direct_emit() {
+        let mut b = TupleBatch::single_span();
+        b.fill_spans(|out| {
+            out.push(Span::new(0, 2));
+            out.push(Span::new(3, 5));
+        });
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.spans(0), &[Span::new(0, 2), Span::new(3, 5)]);
+    }
+
+    #[test]
+    fn union_extend_preserves_nulls() {
+        let s = Schema::of(&[("n", FieldType::Int)]);
+        let a = TupleBatch::from_rows(&s, &[vec![Value::Int(1)], vec![Value::Null]]);
+        let b = TupleBatch::from_rows(&s, &[vec![Value::Null], vec![Value::Int(4)]]);
+        let mut u = TupleBatch::like(&a);
+        u.extend_from(&a);
+        u.extend_from(&b);
+        assert_eq!(
+            u.to_tuples(),
+            vec![
+                vec![Value::Int(1)],
+                vec![Value::Null],
+                vec![Value::Null],
+                vec![Value::Int(4)]
+            ]
+        );
+    }
+
+    #[test]
+    fn cell_compare_and_equality() {
+        let s = Schema::of(&[("n", FieldType::Int)]);
+        let b = TupleBatch::from_rows(
+            &s,
+            &[vec![Value::Int(2)], vec![Value::Int(1)], vec![Value::Null]],
+        );
+        let c = b.column(0);
+        assert_eq!(c.cmp_cells(1, c, 0), Ordering::Less);
+        assert_eq!(c.cmp_cells(0, c, 0), Ordering::Equal);
+        // nulls sort last, equal to each other
+        assert_eq!(c.cmp_cells(2, c, 0), Ordering::Greater);
+        assert_eq!(c.cmp_cells(2, c, 2), Ordering::Equal);
+        assert!(c.eq_cells(2, c, 2));
+        assert!(!c.eq_cells(2, c, 0));
+        assert!(TupleBatch::rows_equal(&b, 0, &b, 0));
+        assert!(!TupleBatch::rows_equal(&b, 0, &b, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn type_mismatch_panics() {
+        let mut b = TupleBatch::for_schema(&Schema::of(&[("n", FieldType::Int)]));
+        b.push_row([Value::Bool(true)]);
+    }
+
+    #[test]
+    fn arena_recycles_buffers() {
+        // warm up: create and drop a batch, then confirm that rebuilding
+        // the same shape does not take fresh allocations from the arena
+        let s = schema();
+        let rows: Vec<Tuple> = vec![vec![
+            Value::Span(Span::new(0, 1)),
+            Value::Int(1),
+            Value::Str("x".into()),
+        ]];
+        drop(TupleBatch::from_rows(&s, &rows));
+        let before = arena_stats();
+        for _ in 0..10 {
+            drop(TupleBatch::from_rows(&s, &rows));
+        }
+        let after = arena_stats();
+        assert_eq!(
+            after.fresh, before.fresh,
+            "steady-state rebuilds must be served from the pool"
+        );
+        assert!(after.checkouts > before.checkouts);
+        assert!(after.pooled >= 3);
+    }
+
+    #[test]
+    fn clone_is_arena_backed_and_deep() {
+        let s = Schema::of(&[("m", FieldType::Span)]);
+        let a = TupleBatch::from_rows(&s, &[vec![Value::Span(Span::new(2, 4))]]);
+        let b = a.clone();
+        drop(a);
+        assert_eq!(b.to_tuples(), vec![vec![Value::Span(Span::new(2, 4))]]);
+    }
+
+    #[test]
+    fn spans_slice_panics_on_null() {
+        let s = Schema::of(&[("m", FieldType::Span)]);
+        let b = TupleBatch::from_rows(&s, &[vec![Value::Null]]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b.spans(0);
+        }));
+        assert!(r.is_err());
+    }
+}

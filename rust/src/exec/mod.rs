@@ -2,19 +2,63 @@
 //! per-operator profiler that produces the paper's Fig 4 — and the typed
 //! result surface ([`ViewHandle`], [`ViewCatalog`], [`DocResult`]) that
 //! the streaming [`Session`](crate::coordinator::Session) API is built on.
+//!
+//! Execution is **columnar**: operators consume and produce
+//! [`TupleBatch`]es (one typed buffer per column, recycled through the
+//! per-thread [`batch::BatchArena`]) instead of `Vec<Tuple>` rows — see
+//! [`batch`] for the layout and arena lifecycle. The seed's row-at-a-time
+//! pipeline survives behind [`ExecStrategy::LegacyRows`] as the reference
+//! baseline for differential tests and the old-vs-new benchmark; rows
+//! themselves survive only at the API boundary, where [`DocResult`]
+//! converts lazily on first access.
 
+pub mod batch;
 pub mod operators;
 pub mod profiler;
 
+pub use batch::{ArenaStats, BatchArena, ColumnData, TupleBatch, TupleRef};
 pub use operators::{cmp_tuples, cmp_values};
 pub use profiler::{Profile, Profiler};
 
 use std::collections::HashMap;
 use std::ops::Index;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::aog::{EvalCtx, Graph, NodeId, OpKind, Schema, Tuple};
 use crate::text::{Document, TokenIndex, Tokenizer};
+
+/// Which executor pipeline evaluates the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecStrategy {
+    /// Columnar [`TupleBatch`] execution over per-thread arenas — the
+    /// production hot path (default).
+    #[default]
+    Columnar,
+    /// The seed's row-at-a-time `Vec<Tuple>` pipeline (one heap
+    /// allocation per tuple per operator). Kept as the reference baseline
+    /// for the columnar differential suite and `repro bench`'s old-vs-new
+    /// measurement.
+    LegacyRows,
+}
+
+impl ExecStrategy {
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecStrategy::Columnar => "columnar",
+            ExecStrategy::LegacyRows => "legacy-rows",
+        }
+    }
+
+    /// Parse a CLI-style name.
+    pub fn parse(s: &str) -> Option<ExecStrategy> {
+        match s {
+            "columnar" => Some(ExecStrategy::Columnar),
+            "legacy" | "legacy-rows" | "rows" => Some(ExecStrategy::LegacyRows),
+            _ => None,
+        }
+    }
+}
 
 /// Pluggable executor for `SubgraphExec` nodes (the hardware-offloaded
 /// subgraphs in a partitioned supergraph). The software fallback
@@ -33,6 +77,25 @@ pub trait SubgraphRunner: Send + Sync {
         tokens: &TokenIndex,
         ext: &[&[Tuple]],
     ) -> Vec<Tuple>;
+
+    /// Columnar form of [`SubgraphRunner::run`]: same contract, with the
+    /// external streams and the result as [`TupleBatch`]es (`schema` is
+    /// the output's compile-time schema). The default shim round-trips
+    /// through rows, so existing implementations keep working; the
+    /// built-in runners override it to stay columnar end to end.
+    fn run_batch(
+        &self,
+        id: usize,
+        output_idx: usize,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&TupleBatch],
+        schema: &Schema,
+    ) -> TupleBatch {
+        let ext_rows: Vec<Vec<Tuple>> = ext.iter().map(|b| b.to_tuples()).collect();
+        let ext_refs: Vec<&[Tuple]> = ext_rows.iter().map(|v| v.as_slice()).collect();
+        TupleBatch::from_rows(schema, &self.run(id, output_idx, doc, tokens, &ext_refs))
+    }
 }
 
 /// A compile-time-resolved reference to one output view: stable index into
@@ -71,28 +134,36 @@ impl ViewHandle {
 #[derive(Debug)]
 pub struct ViewCatalog {
     views: Vec<ViewHandle>,
+    /// name → output index, built once so per-lookup resolution (Session
+    /// subscriptions, `Engine::view`, `DocResult::by_name`) is O(1)
+    /// instead of a linear scan over the catalog.
+    by_name: HashMap<Arc<str>, usize>,
 }
 
 impl ViewCatalog {
     /// Build the catalog from a graph's registered outputs.
     pub fn for_graph(g: &Graph) -> ViewCatalog {
-        ViewCatalog {
-            views: g
-                .outputs
-                .iter()
-                .enumerate()
-                .map(|(index, (name, node))| ViewHandle {
-                    index,
-                    name: name.as_str().into(),
-                    schema: g.nodes[*node].schema.clone(),
-                })
-                .collect(),
+        let views: Vec<ViewHandle> = g
+            .outputs
+            .iter()
+            .enumerate()
+            .map(|(index, (name, node))| ViewHandle {
+                index,
+                name: name.as_str().into(),
+                schema: g.nodes[*node].schema.clone(),
+            })
+            .collect();
+        let mut by_name = HashMap::with_capacity(views.len());
+        for (i, h) in views.iter().enumerate() {
+            // first registration wins, matching the old linear-scan find
+            by_name.entry(h.name.clone()).or_insert(i);
         }
+        ViewCatalog { views, by_name }
     }
 
-    /// Resolve a view by name.
+    /// Resolve a view by name (O(1)).
     pub fn resolve(&self, name: &str) -> Option<&ViewHandle> {
-        self.views.iter().find(|h| &*h.name == name)
+        self.by_name.get(name).map(|&i| &self.views[i])
     }
 
     /// All view handles, in output order.
@@ -120,36 +191,137 @@ impl ViewCatalog {
     }
 }
 
-/// Output of one document evaluation: tuples per output view, positionally
-/// indexed and paired with the shared [`ViewCatalog`].
+/// Output of one document evaluation: one result per output view,
+/// positionally indexed and paired with the shared [`ViewCatalog`].
 ///
-/// Access patterns, strongest first:
-/// * `result[&handle]` / [`DocResult::view`] — O(1) via a [`ViewHandle`];
-/// * `result["ViewName"]` — by name, panicking on unknown names;
-/// * [`DocResult::by_name`] — by name, `None` on unknown names.
-#[derive(Debug, Clone)]
+/// Both layouts are lazy and symmetric: the columnar executor constructs
+/// from [`TupleBatch`]es and materializes `Vec<Tuple>` rows on first
+/// row-shaped access (`result[&handle]`, `result["Name"]`,
+/// [`DocResult::views`]); the legacy pipeline constructs from rows and
+/// mirrors batches only if [`DocResult::view_batch`]/[`DocResult::batches`]
+/// are actually asked for — so neither strategy pays for the layout it
+/// doesn't use (the old-vs-new benchmark depends on this symmetry).
+/// Counting ([`DocResult::total_tuples`], [`DocResult::num_views`]) reads
+/// whichever layout exists.
+#[derive(Debug)]
 pub struct DocResult {
     doc_id: u64,
     catalog: Arc<ViewCatalog>,
-    views: Vec<Vec<Tuple>>,
+    batches: OnceLock<Vec<TupleBatch>>,
+    rows: OnceLock<Vec<Vec<Tuple>>>,
+    /// Per-view row caches for single-view access (`view`, `by_name`,
+    /// session subscriptions): converting one subscribed view must not
+    /// materialize every other view of a wide catalog result.
+    row_cells: OnceLock<Box<[OnceLock<Vec<Tuple>>]>>,
+}
+
+impl Clone for DocResult {
+    fn clone(&self) -> DocResult {
+        let batches = OnceLock::new();
+        if let Some(b) = self.batches.get() {
+            let _ = batches.set(b.clone());
+        }
+        let rows = OnceLock::new();
+        if let Some(r) = self.rows.get() {
+            let _ = rows.set(r.clone());
+        }
+        DocResult {
+            doc_id: self.doc_id,
+            catalog: self.catalog.clone(),
+            batches,
+            rows,
+            // per-view caches are cheap to rebuild; don't clone them
+            row_cells: OnceLock::new(),
+        }
+    }
 }
 
 impl DocResult {
+    /// Wrap per-view batches (the columnar executor's output path).
+    pub(crate) fn from_batches(
+        doc_id: u64,
+        catalog: Arc<ViewCatalog>,
+        views: Vec<TupleBatch>,
+    ) -> DocResult {
+        let batches = OnceLock::new();
+        let _ = batches.set(views);
+        DocResult {
+            doc_id,
+            catalog,
+            batches,
+            rows: OnceLock::new(),
+            row_cells: OnceLock::new(),
+        }
+    }
+
+    /// Wrap legacy per-view rows (the [`ExecStrategy::LegacyRows`] path).
+    pub(crate) fn from_rows(
+        doc_id: u64,
+        catalog: Arc<ViewCatalog>,
+        views: Vec<Vec<Tuple>>,
+    ) -> DocResult {
+        let rows = OnceLock::new();
+        let _ = rows.set(views);
+        DocResult {
+            doc_id,
+            catalog,
+            batches: OnceLock::new(),
+            rows,
+            row_cells: OnceLock::new(),
+        }
+    }
+
     /// Id of the document this result belongs to.
     pub fn doc_id(&self) -> u64 {
         self.doc_id
     }
 
-    /// Tuples of the view behind `handle`.
-    ///
-    /// Panics if the handle was resolved from a *different* engine whose
-    /// output list does not match — same name AND schema at the same
-    /// position (handles are engine-specific).
-    pub fn view(&self, handle: &ViewHandle) -> &Vec<Tuple> {
+    fn materialize_rows(&self) -> &Vec<Vec<Tuple>> {
+        self.rows.get_or_init(|| {
+            self.batches
+                .get()
+                .expect("one layout is always populated at construction")
+                .iter()
+                .map(|b| b.to_tuples())
+                .collect()
+        })
+    }
+
+    /// Rows of ONE view, converting only that view — the single-view
+    /// access path (subscriptions, `result[&handle]`) must not
+    /// materialize every other view of the result.
+    fn view_rows(&self, index: usize) -> &Vec<Tuple> {
+        if let Some(rows) = self.rows.get() {
+            return &rows[index];
+        }
+        let batches = self
+            .batches
+            .get()
+            .expect("one layout is always populated at construction");
+        let cells = self
+            .row_cells
+            .get_or_init(|| (0..batches.len()).map(|_| OnceLock::new()).collect());
+        cells[index].get_or_init(|| batches[index].to_tuples())
+    }
+
+    fn materialize_batches(&self) -> &Vec<TupleBatch> {
+        self.batches.get_or_init(|| {
+            let rows = self
+                .rows
+                .get()
+                .expect("one layout is always populated at construction");
+            self.catalog
+                .handles()
+                .iter()
+                .zip(rows)
+                .map(|(h, view)| TupleBatch::from_rows(h.schema(), view))
+                .collect()
+        })
+    }
+
+    fn check_handle(&self, handle: &ViewHandle) {
         match self.catalog.views.get(handle.index) {
-            Some(own) if own.name == handle.name && own.schema == handle.schema => {
-                &self.views[handle.index]
-            }
+            Some(own) if own.name == handle.name && own.schema == handle.schema => {}
             _ => panic!(
                 "view handle '{}' does not belong to this engine (outputs: {})",
                 handle.name,
@@ -158,19 +330,60 @@ impl DocResult {
         }
     }
 
+    /// Tuples of the view behind `handle` (materializes rows lazily).
+    ///
+    /// Panics if the handle was resolved from a *different* engine whose
+    /// output list does not match — same name AND schema at the same
+    /// position (handles are engine-specific).
+    pub fn view(&self, handle: &ViewHandle) -> &Vec<Tuple> {
+        self.check_handle(handle);
+        self.view_rows(handle.index)
+    }
+
+    /// Columnar batch of the view behind `handle`.
+    pub fn view_batch(&self, handle: &ViewHandle) -> &TupleBatch {
+        self.check_handle(handle);
+        &self.materialize_batches()[handle.index]
+    }
+
+    /// Tuple count of the view behind `handle` — reads whichever layout
+    /// already exists, never converts (the counting path per-query
+    /// subscriptions use).
+    pub fn view_len(&self, handle: &ViewHandle) -> usize {
+        self.check_handle(handle);
+        match self.batches.get() {
+            Some(b) => b[handle.index].len(),
+            None => self.materialize_rows()[handle.index].len(),
+        }
+    }
+
     /// Tuples of the view named `name`, if it exists.
     pub fn by_name(&self, name: &str) -> Option<&Vec<Tuple>> {
-        self.catalog.resolve(name).map(|h| &self.views[h.index])
+        self.catalog.resolve(name).map(|h| self.view_rows(h.index))
     }
 
     /// Raw per-view tuple vectors, in output (catalog) order.
     pub fn views(&self) -> &[Vec<Tuple>] {
-        &self.views
+        self.materialize_rows()
+    }
+
+    /// Raw per-view columnar batches, in output (catalog) order.
+    pub fn batches(&self) -> &[TupleBatch] {
+        self.materialize_batches()
+    }
+
+    /// Consume into the per-view batches (output order) — the accelerator
+    /// post-stage's zero-conversion path.
+    pub(crate) fn into_batches(self) -> Vec<TupleBatch> {
+        self.materialize_batches();
+        self.batches
+            .into_inner()
+            .expect("materialize_batches just populated it")
     }
 
     /// Iterate `(handle, tuples)` pairs in output order.
     pub fn iter(&self) -> impl Iterator<Item = (&ViewHandle, &Vec<Tuple>)> {
-        self.catalog.views.iter().zip(self.views.iter())
+        self.catalog.views.iter().zip(self.materialize_rows().iter())
     }
 
     /// The catalog describing the views of this result.
@@ -180,26 +393,38 @@ impl DocResult {
 
     /// Number of output views.
     pub fn num_views(&self) -> usize {
-        self.views.len()
+        match self.batches.get() {
+            Some(b) => b.len(),
+            None => self.materialize_rows().len(),
+        }
     }
 
-    /// Total tuple count across views.
+    /// Total tuple count across views — reads whichever layout already
+    /// exists, never converts.
     pub fn total_tuples(&self) -> usize {
-        self.views.iter().map(|v| v.len()).sum()
+        match self.batches.get() {
+            Some(b) => b.iter().map(|v| v.len()).sum(),
+            None => self.materialize_rows().iter().map(|v| v.len()).sum(),
+        }
     }
 
     /// Convert into the legacy stringly-typed [`DocOutput`] (allocates one
     /// `HashMap` entry per view). Migration shim only.
     #[allow(deprecated)]
     pub fn into_output(self) -> DocOutput {
-        let DocResult { catalog, views, .. } = self;
+        let names: Vec<String> = self
+            .catalog
+            .views
+            .iter()
+            .map(|h| h.name.to_string())
+            .collect();
+        self.materialize_rows();
+        let views = self
+            .rows
+            .into_inner()
+            .expect("materialize_rows just populated it");
         DocOutput {
-            views: catalog
-                .views
-                .iter()
-                .map(|h| h.name.to_string())
-                .zip(views)
-                .collect(),
+            views: names.into_iter().zip(views).collect(),
         }
     }
 }
@@ -246,27 +471,42 @@ impl DocOutput {
 }
 
 /// Evaluates a graph over documents. Stateless w.r.t. documents, so one
-/// instance is shared by all worker threads.
+/// instance is shared by all worker threads (each thread recycles its own
+/// [`batch::BatchArena`] buffers).
 pub struct Executor {
     graph: Arc<Graph>,
     profiler: Arc<Profiler>,
     subgraph_runner: Option<Arc<dyn SubgraphRunner>>,
     live: Vec<bool>,
     catalog: Arc<ViewCatalog>,
+    strategy: ExecStrategy,
+    /// `ExtInput` slot → schema, for converting row-shaped injections at
+    /// the API boundary.
+    ext_schemas: Vec<Option<Schema>>,
 }
 
 impl Executor {
-    /// Build an executor. `profiler` may be [`Profiler::disabled`].
+    /// Build an executor (columnar strategy). `profiler` may be
+    /// [`Profiler::disabled`].
     pub fn new(graph: Arc<Graph>, profiler: Arc<Profiler>) -> Executor {
         let live = graph.live_nodes();
         let catalog = Arc::new(ViewCatalog::for_graph(&graph));
+        let ext_schemas = graph.ext_input_schemas();
         Executor {
             graph,
             profiler,
             subgraph_runner: None,
             live,
             catalog,
+            strategy: ExecStrategy::Columnar,
+            ext_schemas,
         }
+    }
+
+    /// Select the executor pipeline (columnar by default).
+    pub fn with_strategy(mut self, strategy: ExecStrategy) -> Executor {
+        self.strategy = strategy;
+        self
     }
 
     /// Attach a subgraph runner (required if the graph contains
@@ -291,17 +531,197 @@ impl Executor {
         &self.catalog
     }
 
+    /// The executor pipeline in use.
+    pub fn strategy(&self) -> ExecStrategy {
+        self.strategy
+    }
+
     /// Evaluate all output views on one document.
     pub fn run_doc(&self, doc: &Document) -> DocResult {
         let tokens = Tokenizer::standard().tokenize(&doc.text);
-        self.run_doc_with(doc, &tokens, &[], &HashMap::new())
+        self.run_doc_batched(doc, &tokens, &[], &HashMap::new())
     }
 
     /// Evaluate with injected external inputs (`ExtInput` slots) and node
-    /// overrides (node id → precomputed tuples; used by the accelerator
-    /// post-stage to splice hardware extraction results into a subgraph
-    /// body).
+    /// overrides (node id → precomputed tuples), both row-shaped — the
+    /// legacy boundary. Columnar callers (the accelerator post-stage)
+    /// should use [`Executor::run_doc_batched`].
     pub fn run_doc_with(
+        &self,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&[Tuple]],
+        overrides: &HashMap<NodeId, Vec<Tuple>>,
+    ) -> DocResult {
+        match self.strategy {
+            ExecStrategy::LegacyRows => self.run_legacy(doc, tokens, ext, overrides),
+            ExecStrategy::Columnar => {
+                let ext_b: Vec<TupleBatch> = ext
+                    .iter()
+                    .enumerate()
+                    .map(|(slot, rows)| match self.ext_schemas.get(slot) {
+                        Some(Some(schema)) => TupleBatch::from_rows(schema, rows),
+                        // slot provided but referenced by no ExtInput
+                        // node: keep positions aligned with a placeholder
+                        _ => TupleBatch::empty(),
+                    })
+                    .collect();
+                let ext_refs: Vec<&TupleBatch> = ext_b.iter().collect();
+                let ov_b: HashMap<NodeId, TupleBatch> = overrides
+                    .iter()
+                    .map(|(&id, rows)| {
+                        (id, TupleBatch::from_rows(&self.graph.nodes[id].schema, rows))
+                    })
+                    .collect();
+                self.run_columnar(doc, tokens, &ext_refs, &ov_b)
+            }
+        }
+    }
+
+    /// Columnar evaluation with batch-shaped external inputs and node
+    /// overrides — the zero-conversion entry the accelerator post-stage
+    /// and the software subgraph runner use.
+    pub fn run_doc_batched(
+        &self,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&TupleBatch],
+        overrides: &HashMap<NodeId, TupleBatch>,
+    ) -> DocResult {
+        match self.strategy {
+            ExecStrategy::Columnar => self.run_columnar(doc, tokens, ext, overrides),
+            ExecStrategy::LegacyRows => {
+                let ext_rows: Vec<Vec<Tuple>> = ext.iter().map(|b| b.to_tuples()).collect();
+                let ext_refs: Vec<&[Tuple]> = ext_rows.iter().map(|v| v.as_slice()).collect();
+                let ov_rows: HashMap<NodeId, Vec<Tuple>> = overrides
+                    .iter()
+                    .map(|(&id, b)| (id, b.to_tuples()))
+                    .collect();
+                self.run_legacy(doc, tokens, &ext_refs, &ov_rows)
+            }
+        }
+    }
+
+    // -- the columnar pipeline (production hot path) --
+
+    fn run_columnar(
+        &self,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&TupleBatch],
+        overrides: &HashMap<NodeId, TupleBatch>,
+    ) -> DocResult {
+        let mut slots: Vec<Option<TupleBatch>> = Vec::with_capacity(self.graph.nodes.len());
+        slots.resize_with(self.graph.nodes.len(), || None);
+        for node in &self.graph.nodes {
+            if !self.live[node.id] {
+                continue;
+            }
+            if let Some(b) = overrides.get(&node.id) {
+                slots[node.id] = Some(b.clone());
+                continue;
+            }
+            let t0 = self.profiler.start();
+            let out = self.eval_node_batch(node.id, doc, tokens, ext, &slots);
+            self.profiler.stop(node.id, t0);
+            slots[node.id] = Some(out);
+        }
+        // move each output batch out of its slot (zero-copy); clone only
+        // when a later output references the same node again
+        let outputs = &self.graph.outputs;
+        let batches: Vec<TupleBatch> = outputs
+            .iter()
+            .enumerate()
+            .map(|(k, (_, id))| {
+                let referenced_later = outputs[k + 1..].iter().any(|(_, j)| j == id);
+                if referenced_later {
+                    slots[*id].clone()
+                } else {
+                    slots[*id].take()
+                }
+                .unwrap_or_else(TupleBatch::empty)
+            })
+            .collect();
+        DocResult::from_batches(doc.id, self.catalog.clone(), batches)
+    }
+
+    fn eval_node_batch(
+        &self,
+        id: NodeId,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&TupleBatch],
+        slots: &[Option<TupleBatch>],
+    ) -> TupleBatch {
+        let node = &self.graph.nodes[id];
+        let input = |k: usize| -> &TupleBatch {
+            slots[node.inputs[k]]
+                .as_ref()
+                .expect("topological order guarantees inputs are evaluated")
+        };
+        let ctx = EvalCtx {
+            text: &doc.text,
+            tokens,
+        };
+        match &node.kind {
+            OpKind::DocScan => operators::doc_scan_batch(doc),
+            OpKind::RegexExtract { regex, .. } => operators::regex_extract_batch(regex, doc),
+            OpKind::DictExtract { matcher, .. } => operators::dict_extract_batch(matcher, doc),
+            OpKind::Select { pred } => operators::select_batch(input(0), pred, &ctx),
+            OpKind::Project { cols } => {
+                operators::project_batch(input(0), cols, &ctx, &node.schema)
+            }
+            OpKind::Join { pred } => operators::join_batch(input(0), input(1), pred, &ctx),
+            OpKind::Union => {
+                let mut out = TupleBatch::like(input(0));
+                for k in 0..node.inputs.len() {
+                    out.extend_from(input(k));
+                }
+                out
+            }
+            OpKind::Consolidate { col, policy } => {
+                operators::consolidate_batch(input(0), *col, *policy)
+            }
+            OpKind::Difference => operators::difference_batch(input(0), input(1)),
+            OpKind::Block {
+                col,
+                max_gap,
+                min_size,
+            } => operators::block_batch(input(0), *col, *max_gap, *min_size),
+            OpKind::Sort { keys } => operators::sort_batch(input(0), keys),
+            OpKind::Limit { n } => operators::limit_batch(input(0), *n),
+            OpKind::SubgraphExec {
+                subgraph_id,
+                output_idx,
+                ..
+            } => match &self.subgraph_runner {
+                Some(r) => {
+                    // inputs 1.. are the software-computed tuple streams
+                    let streams: Vec<&TupleBatch> =
+                        (1..node.inputs.len()).map(|k| input(k)).collect();
+                    r.run_batch(
+                        *subgraph_id,
+                        *output_idx,
+                        doc,
+                        tokens,
+                        &streams,
+                        &node.schema,
+                    )
+                }
+                None => panic!(
+                    "graph contains SubgraphExec #{subgraph_id} but no runner is attached"
+                ),
+            },
+            OpKind::ExtInput { slot, .. } => ext
+                .get(*slot)
+                .map(|b| (*b).clone())
+                .unwrap_or_else(|| panic!("ExtInput slot {slot} not provided")),
+        }
+    }
+
+    // -- the legacy row pipeline (reference baseline) --
+
+    fn run_legacy(
         &self,
         doc: &Document,
         tokens: &TokenIndex,
@@ -318,7 +738,7 @@ impl Executor {
                 continue;
             }
             let t0 = self.profiler.start();
-            let out = self.eval_node(node.id, doc, tokens, ext, &slots);
+            let out = self.eval_node_rows(node.id, doc, tokens, ext, &slots);
             self.profiler.stop(node.id, t0);
             slots[node.id] = Some(out);
         }
@@ -328,14 +748,10 @@ impl Executor {
             .iter()
             .map(|(_, id)| slots[*id].clone().unwrap_or_default())
             .collect();
-        DocResult {
-            doc_id: doc.id,
-            catalog: self.catalog.clone(),
-            views,
-        }
+        DocResult::from_rows(doc.id, self.catalog.clone(), views)
     }
 
-    fn eval_node(
+    fn eval_node_rows(
         &self,
         id: NodeId,
         doc: &Document,
@@ -388,9 +804,8 @@ impl Executor {
             } => match &self.subgraph_runner {
                 Some(r) => {
                     // inputs 1.. are the software-computed tuple streams
-                    let streams: Vec<&[Tuple]> = (1..node.inputs.len())
-                        .map(|k| input(k))
-                        .collect();
+                    let streams: Vec<&[Tuple]> =
+                        (1..node.inputs.len()).map(|k| input(k)).collect();
                     r.run(*subgraph_id, *output_idx, doc, tokens, &streams)
                 }
                 None => panic!(
@@ -607,6 +1022,7 @@ mod tests {
         // handle-indexed and name-indexed access agree
         assert_eq!(out[h], out["PersonOrg"]);
         assert_eq!(out.view(h).len(), 1);
+        assert_eq!(out.view_batch(h).len(), 1);
         assert_eq!(out.doc_id(), d.id);
     }
 
@@ -664,5 +1080,52 @@ mod tests {
             .unwrap()
             .id;
         assert_eq!(per_node[dead_id], 0);
+    }
+
+    #[test]
+    fn legacy_strategy_matches_columnar_byte_for_byte() {
+        let col = engine(PERSON_ORG);
+        let leg = {
+            let g = crate::aql::compile(PERSON_ORG).unwrap();
+            Executor::new(Arc::new(g), Arc::new(Profiler::disabled()))
+                .with_strategy(ExecStrategy::LegacyRows)
+        };
+        assert_eq!(col.strategy(), ExecStrategy::Columnar);
+        assert_eq!(leg.strategy(), ExecStrategy::LegacyRows);
+        for text in [
+            "Laura Chiticariu works at IBM Research in Almaden.",
+            "Fred Reiss and Huaiyu Zhu are at IBM Research today.",
+            "nothing to see here",
+            "",
+        ] {
+            let d = doc(text);
+            assert_eq!(
+                col.run_doc(&d).views(),
+                leg.run_doc(&d).views(),
+                "strategies diverged on {text:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [ExecStrategy::Columnar, ExecStrategy::LegacyRows] {
+            assert_eq!(ExecStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(ExecStrategy::parse("bogus"), None);
+        assert_eq!(ExecStrategy::default(), ExecStrategy::Columnar);
+    }
+
+    #[test]
+    fn doc_result_counts_without_materializing() {
+        let ex = engine(PERSON_ORG);
+        let d = doc("Laura Chiticariu works at IBM Research in Almaden.");
+        let out = ex.run_doc(&d);
+        // batch accessors and counters work pre-materialization
+        assert_eq!(out.total_tuples(), 1);
+        assert_eq!(out.batches().len(), 1);
+        assert_eq!(out.batches()[0].len(), 1);
+        // then the lazy row view agrees
+        assert_eq!(out.views()[0].len(), 1);
     }
 }

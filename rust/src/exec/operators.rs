@@ -3,11 +3,26 @@
 //! These are the baselines the paper profiles (Fig 4): extraction operators
 //! scan the whole document and dominate; relational operators work on the
 //! (much smaller) extracted tuple sets.
+//!
+//! Each operator exists in two forms:
+//! * the **columnar** `*_batch` form over [`TupleBatch`] — the production
+//!   hot path (no per-tuple heap allocation, arena-recycled buffers);
+//! * the row-at-a-time `Vec<Tuple>` form — the seed's semantics, kept as
+//!   the reference baseline behind
+//!   [`ExecStrategy::LegacyRows`](super::ExecStrategy) for the
+//!   columnar-vs-legacy differential suite and the old-vs-new benchmark.
+//!
+//! The two forms must stay **byte-identical** in output content and order
+//! (`rust/tests/columnar.rs` enforces this across T1–T5 × every
+//! `PartitionMode`); in particular the band join emits candidates in
+//! original right-input order in both.
 
 use std::cmp::Ordering;
+use std::collections::HashMap;
 
-use crate::aog::{EvalCtx, Expr, Tuple, Value};
+use crate::aog::{EvalCtx, Expr, Schema, Tuple, Value};
 use crate::dict::AhoCorasick;
+use crate::exec::batch::{JoinRow, TupleBatch};
 use crate::regex::CompiledRegex;
 use crate::text::span::{consolidate as consolidate_spans, ConsolidatePolicy};
 use crate::text::{Document, Span};
@@ -269,6 +284,259 @@ pub fn sort(input: &[Tuple], keys: &[usize]) -> Vec<Tuple> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Columnar (TupleBatch) operator forms — the production hot path.
+
+/// `DocScan` (columnar): one row covering the whole document.
+pub fn doc_scan_batch(doc: &Document) -> TupleBatch {
+    let mut out = TupleBatch::single_span();
+    out.push_span(Span::new(0, doc.len() as u32));
+    out
+}
+
+/// `RegularExpression` (columnar): matches emitted straight into the
+/// arena-backed span column — no per-match tuples.
+pub fn regex_extract_batch(regex: &CompiledRegex, doc: &Document) -> TupleBatch {
+    let mut out = TupleBatch::single_span();
+    out.fill_spans(|spans| regex.find_all_spans_into(&doc.text, spans));
+    out
+}
+
+/// `Dictionary` (columnar): token-boundary matches emitted straight into
+/// the span column.
+pub fn dict_extract_batch(matcher: &AhoCorasick, doc: &Document) -> TupleBatch {
+    let mut out = TupleBatch::single_span();
+    out.fill_spans(|spans| matcher.find_token_spans_into(doc.text.as_bytes(), spans));
+    out
+}
+
+/// `Select` (columnar): predicate filter, copying surviving rows
+/// column-wise.
+pub fn select_batch(input: &TupleBatch, pred: &Expr, ctx: &EvalCtx<'_>) -> TupleBatch {
+    let mut out = TupleBatch::like(input);
+    for i in 0..input.len() {
+        if pred.eval(&input.row(i), ctx).as_bool() {
+            out.push_row_from(input, i);
+        }
+    }
+    out
+}
+
+/// `Project` (columnar): compute output columns row by row (output column
+/// types come from the node's compile-time schema).
+pub fn project_batch(
+    input: &TupleBatch,
+    cols: &[(String, Expr)],
+    ctx: &EvalCtx<'_>,
+    out_schema: &Schema,
+) -> TupleBatch {
+    let mut out = TupleBatch::for_schema(out_schema);
+    for i in 0..input.len() {
+        let row = input.row(i);
+        out.push_row(cols.iter().map(|(_, e)| e.eval(&row, ctx)));
+    }
+    out
+}
+
+/// `Join` (columnar): same plan selection as [`join`] — band join for
+/// `Follows`/`FollowsTok` conjuncts, nested loop otherwise — with
+/// predicates evaluated over [`JoinRow`] cursors and surviving pairs
+/// copied column-wise. Output order is byte-identical to the row form.
+pub fn join_batch(
+    left: &TupleBatch,
+    right: &TupleBatch,
+    pred: &Expr,
+    ctx: &EvalCtx<'_>,
+) -> TupleBatch {
+    let left_arity = left.num_columns();
+    if let Some((lcol, rcol, band)) = band_window(pred, left_arity) {
+        return band_join_batch(left, right, pred, lcol, rcol, band, ctx);
+    }
+    let mut out = TupleBatch::concat_layout(left, right);
+    for li in 0..left.len() {
+        for ri in 0..right.len() {
+            let row = JoinRow {
+                left: left.row(li),
+                right: right.row(ri),
+            };
+            if pred.eval(&row, ctx).as_bool() {
+                out.push_joined_row(left, li, right, ri);
+            }
+        }
+    }
+    out
+}
+
+fn band_join_batch(
+    left: &TupleBatch,
+    right: &TupleBatch,
+    pred: &Expr,
+    lcol: usize,
+    rcol: usize,
+    band: Band,
+    ctx: &EvalCtx<'_>,
+) -> TupleBatch {
+    let mut out = TupleBatch::concat_layout(left, right);
+    // sort right row indices by span begin at rcol — reading the span
+    // column as a plain slice, no per-row value unwrapping
+    let rspans = right.spans(rcol);
+    let mut order: Vec<usize> = (0..right.len()).collect();
+    order.sort_by_key(|&i| rspans[i].begin);
+    let begins: Vec<u32> = order.iter().map(|&i| rspans[i].begin).collect();
+
+    let mut cands: Vec<usize> = Vec::new();
+    for li in 0..left.len() {
+        let a = left.span_at(li, lcol);
+        let (lo, hi) = match band {
+            Band::Chars { min, max } => {
+                (a.end.saturating_add(min), a.end.saturating_add(max))
+            }
+            Band::Toks { max } => {
+                let idx = ctx.tokens.first_token_at_or_after(a.end);
+                let upper = idx + max as usize + 1;
+                let bound = ctx
+                    .tokens
+                    .tokens()
+                    .get(upper)
+                    .map(|t| t.span.end)
+                    .unwrap_or(u32::MAX);
+                (a.end, bound)
+            }
+        };
+        let start = begins.partition_point(|&b| b < lo);
+        // candidates in original right-input order, exactly like the row
+        // form (downstream Consolidate's first-tuple-wins rule must not
+        // depend on the join algorithm); the scratch Vec is reused across
+        // left rows
+        cands.clear();
+        cands.extend(
+            (start..begins.len())
+                .take_while(|&k| begins[k] <= hi)
+                .map(|k| order[k]),
+        );
+        cands.sort_unstable();
+        for &ri in &cands {
+            let row = JoinRow {
+                left: left.row(li),
+                right: right.row(ri),
+            };
+            if pred.eval(&row, ctx).as_bool() {
+                out.push_joined_row(left, li, right, ri);
+            }
+        }
+    }
+    out
+}
+
+/// `Consolidate` (columnar): same first-occurrence-wins rule as
+/// [`consolidate`], with the linear scan replaced by a span → first-row
+/// index map.
+pub fn consolidate_batch(
+    input: &TupleBatch,
+    col: usize,
+    policy: ConsolidatePolicy,
+) -> TupleBatch {
+    let mut out = TupleBatch::like(input);
+    if input.is_empty() {
+        return out;
+    }
+    let spans = input.spans(col);
+    let kept = consolidate_spans(spans, policy);
+    let mut first: HashMap<Span, usize> = HashMap::with_capacity(spans.len());
+    for (i, s) in spans.iter().enumerate() {
+        first.entry(*s).or_insert(i);
+    }
+    for k in kept {
+        if let Some(&i) = first.get(&k) {
+            out.push_row_from(input, i);
+        }
+    }
+    out
+}
+
+/// `Difference` (columnar): set semantics on whole rows, compared
+/// column-wise without materializing values.
+pub fn difference_batch(left: &TupleBatch, right: &TupleBatch) -> TupleBatch {
+    let mut out = TupleBatch::like(left);
+    let mut kept: Vec<usize> = Vec::new();
+    for li in 0..left.len() {
+        if (0..right.len()).any(|ri| TupleBatch::rows_equal(left, li, right, ri)) {
+            continue;
+        }
+        if kept
+            .iter()
+            .any(|&k| TupleBatch::rows_equal(left, li, left, k))
+        {
+            continue;
+        }
+        kept.push(li);
+        out.push_row_from(left, li);
+    }
+    out
+}
+
+/// `Block` (columnar): identical grouping to [`block`] over the span
+/// column slice.
+pub fn block_batch(
+    input: &TupleBatch,
+    col: usize,
+    max_gap: u32,
+    min_size: usize,
+) -> TupleBatch {
+    let mut spans: Vec<Span> = input.spans(col).to_vec();
+    spans.sort();
+    let mut out = TupleBatch::single_span();
+    let mut i = 0;
+    while i < spans.len() {
+        let mut members = 1;
+        let mut cover = spans[i];
+        let mut j = i + 1;
+        while j < spans.len() {
+            let s = spans[j];
+            if s.begin >= cover.end && s.begin - cover.end > max_gap {
+                break;
+            }
+            cover = cover.combine(&s);
+            members += 1;
+            j += 1;
+        }
+        if members >= min_size {
+            out.push_span(cover);
+        }
+        i = j;
+    }
+    out
+}
+
+/// `Sort` (columnar): stable index sort by key columns, then a column-wise
+/// gather. Ordering mirrors [`cmp_values`] (nulls last).
+pub fn sort_batch(input: &TupleBatch, keys: &[usize]) -> TupleBatch {
+    let mut idx: Vec<usize> = (0..input.len()).collect();
+    idx.sort_by(|&a, &b| {
+        for &k in keys {
+            let o = input.column(k).cmp_cells(a, input.column(k), b);
+            if o != Ordering::Equal {
+                return o;
+            }
+        }
+        Ordering::Equal
+    });
+    let mut out = TupleBatch::like(input);
+    for i in idx {
+        out.push_row_from(input, i);
+    }
+    out
+}
+
+/// `Limit` (columnar): first `n` rows, copied column-wise.
+pub fn limit_batch(input: &TupleBatch, n: usize) -> TupleBatch {
+    let mut out = TupleBatch::like(input);
+    for i in 0..n.min(input.len()) {
+        out.push_row_from(input, i);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -367,5 +635,134 @@ mod tests {
         assert_eq!(cmp_values(&Value::Null, &Value::Int(1)), Ordering::Greater);
         assert_eq!(cmp_values(&Value::Int(1), &Value::Null), Ordering::Less);
         assert_eq!(cmp_values(&Value::Null, &Value::Null), Ordering::Equal);
+    }
+
+    // -- columnar forms agree with the row forms, including output order --
+
+    use crate::aog::FieldType;
+
+    fn span_batch(pairs: &[(u32, u32)]) -> TupleBatch {
+        let mut b = TupleBatch::single_span();
+        for &(x, y) in pairs {
+            b.push_span(Span::new(x, y));
+        }
+        b
+    }
+
+    #[test]
+    fn select_batch_matches_rows() {
+        let c = ctx("aaa bb c");
+        let pairs = [(0, 3), (4, 6), (7, 8)];
+        let rows: Vec<Tuple> = pairs.iter().map(|&(b, e)| span_t(b, e)).collect();
+        let batch = span_batch(&pairs);
+        let pred = Expr::Cmp(
+            Box::new(Expr::Call(Func::GetLength, vec![Expr::Col(0)])),
+            CmpOp::Ge,
+            Box::new(Expr::LitInt(2)),
+        );
+        assert_eq!(
+            select_batch(&batch, &pred, &c).to_tuples(),
+            select(&rows, &pred, &c)
+        );
+    }
+
+    #[test]
+    fn project_batch_matches_rows() {
+        let c = ctx("hello world");
+        let rows = vec![span_t(0, 5)];
+        let batch = span_batch(&[(0, 5)]);
+        let cols = vec![
+            (
+                "len".to_string(),
+                Expr::Call(Func::GetLength, vec![Expr::Col(0)]),
+            ),
+            (
+                "txt".to_string(),
+                Expr::Call(Func::GetText, vec![Expr::Col(0)]),
+            ),
+        ];
+        let schema = Schema::of(&[("len", FieldType::Int), ("txt", FieldType::Str)]);
+        assert_eq!(
+            project_batch(&batch, &cols, &c, &schema).to_tuples(),
+            project(&rows, &cols, &c)
+        );
+    }
+
+    #[test]
+    fn join_batch_matches_rows_band_and_nested() {
+        let c = ctx("aa bb cc dd ee ff");
+        let lp = [(0, 2), (6, 8), (12, 14)];
+        let rp = [(3, 5), (9, 11), (15, 17)];
+        let lrows: Vec<Tuple> = lp.iter().map(|&(b, e)| span_t(b, e)).collect();
+        let rrows: Vec<Tuple> = rp.iter().map(|&(b, e)| span_t(b, e)).collect();
+        let (lb, rb) = (span_batch(&lp), span_batch(&rp));
+        // band-joinable predicate
+        let band = Expr::Call(
+            Func::Follows,
+            vec![Expr::Col(0), Expr::Col(1), Expr::LitInt(0), Expr::LitInt(4)],
+        );
+        assert_eq!(
+            join_batch(&lb, &rb, &band, &c).to_tuples(),
+            join(&lrows, &rrows, &band, 1, &c)
+        );
+        // non-band predicate → nested loop in both
+        let general = Expr::Call(Func::Overlaps, vec![Expr::Col(0), Expr::Col(1)]);
+        assert_eq!(
+            join_batch(&lb, &rb, &general, &c).to_tuples(),
+            join(&lrows, &rrows, &general, 1, &c)
+        );
+    }
+
+    #[test]
+    fn consolidate_batch_keeps_first_row_per_span() {
+        let rows = vec![
+            vec![Value::Span(Span::new(0, 10)), Value::Int(1)],
+            vec![Value::Span(Span::new(2, 5)), Value::Int(2)],
+            vec![Value::Span(Span::new(0, 10)), Value::Int(3)],
+        ];
+        let schema = Schema::of(&[("m", FieldType::Span), ("n", FieldType::Int)]);
+        let batch = TupleBatch::from_rows(&schema, &rows);
+        assert_eq!(
+            consolidate_batch(&batch, 0, ConsolidatePolicy::ContainedWithin).to_tuples(),
+            consolidate(&rows, 0, ConsolidatePolicy::ContainedWithin)
+        );
+    }
+
+    #[test]
+    fn difference_sort_block_limit_batch_match_rows() {
+        let schema = Schema::of(&[("m", FieldType::Span)]);
+        let lrows: Vec<Tuple> = vec![span_t(0, 2), span_t(3, 5), span_t(0, 2), span_t(6, 9)];
+        let rrows: Vec<Tuple> = vec![span_t(3, 5)];
+        let lb = TupleBatch::from_rows(&schema, &lrows);
+        let rb = TupleBatch::from_rows(&schema, &rrows);
+        assert_eq!(
+            difference_batch(&lb, &rb).to_tuples(),
+            difference(&lrows, &rrows)
+        );
+        assert_eq!(sort_batch(&lb, &[0]).to_tuples(), sort(&lrows, &[0]));
+        assert_eq!(block_batch(&lb, 0, 2, 2).to_tuples(), block(&lrows, 0, 2, 2));
+        assert_eq!(
+            limit_batch(&lb, 2).to_tuples(),
+            lrows.iter().take(2).cloned().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn extraction_batches_match_rows() {
+        let d = Document::new(0, "Alice met Bob at IBM Research today");
+        let re = crate::regex::compile("[A-Z][a-z]+", false).unwrap();
+        assert_eq!(
+            regex_extract_batch(&re, &d).to_tuples(),
+            regex_extract(&re, &d)
+        );
+        let ac = AhoCorasick::build(
+            &["IBM".to_string(), "IBM Research".to_string()],
+            crate::dict::CaseMode::Exact,
+        );
+        assert_eq!(
+            dict_extract_batch(&ac, &d).to_tuples(),
+            dict_extract(&ac, &d)
+        );
+        assert_eq!(doc_scan_batch(&d).to_tuples(), doc_scan(&d));
     }
 }

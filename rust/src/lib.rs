@@ -102,6 +102,25 @@
 //! Code that genuinely needs the old shape can call
 //! `DocResult::into_output()` during the transition.
 //!
+//! ## The `TupleBatch` boundary
+//!
+//! Internally the software executor is **columnar**: every operator
+//! consumes and produces [`exec::TupleBatch`]es — one typed buffer per
+//! column (spans/ints/floats/bools/strings + a lazily-allocated null
+//! bitmap), with buffers recycled through a per-thread arena
+//! ([`exec::batch`]) instead of allocating per tuple per operator. Rows
+//! (`Tuple = Vec<Value>`) exist only at the API boundary: a `DocResult`
+//! holds batches and materializes `Vec<Tuple>` views **lazily on first
+//! row-shaped access** (`result[&handle]`, `result.views()`, view
+//! subscriptions), while counting ([`exec::DocResult::total_tuples`]) and
+//! columnar access ([`exec::DocResult::view_batch`]) never convert. The
+//! seed's row-at-a-time pipeline survives behind
+//! [`exec::ExecStrategy::LegacyRows`] purely as the reference baseline
+//! for the columnar differential suite (`rust/tests/columnar.rs`) and
+//! `repro bench`'s old-vs-new measurement (`BENCH_4.json`); see
+//! `PERFORMANCE.md` at the repo root for the layout, the arena lifecycle
+//! and how to read the benchmark output.
+//!
 //! The "reconfigurable device" of the paper (a Stratix IV FPGA) is realised
 //! as an AOT-compiled JAX/Pallas byte-stream DFA kernel executed through the
 //! PJRT C API (`xla` crate, behind the `pjrt` cargo feature);
@@ -139,6 +158,12 @@
 //! * L1 (build time): `python/compile/kernels/dfa_scan.py` — the Pallas
 //!   multi-machine DFA scan kernel.
 
+/// Counting global allocator (see `util::alloc`): lets `repro bench` and
+/// the columnar tests report measured allocations/document.
+#[cfg(feature = "bench-alloc")]
+#[global_allocator]
+static GLOBAL_ALLOCATOR: util::alloc::CountingAllocator = util::alloc::CountingAllocator;
+
 pub mod accel;
 pub mod aog;
 pub mod aql;
@@ -166,7 +191,9 @@ pub mod prelude {
         QueryHandle, ResultSink, RunReport, Session, SessionBuilder,
     };
     pub use crate::corpus::{Corpus, CorpusSpec, Document};
-    pub use crate::exec::{DocResult, Profile, ViewCatalog, ViewHandle};
+    pub use crate::exec::{
+        DocResult, ExecStrategy, Profile, TupleBatch, ViewCatalog, ViewHandle,
+    };
     pub use crate::partition::{PartitionMode, PartitionPlan};
     pub use crate::perfmodel::FpgaModel;
     pub use crate::runtime::{EngineSpec, FaultPlan, SimSpec};

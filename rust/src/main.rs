@@ -12,7 +12,7 @@
 //! repro run       --query t1 --mode single --engine pjrt [...]     end-to-end
 //! repro run       --queries t1,t2,t3 [...]  one engine, many queries, one pass
 //! repro stream    --query t1 [--threads T --queue Q --per-doc]     stdin firehose
-//! repro bench     [--json FILE]         perf trajectory rows → BENCH_3.json
+//! repro bench     [--json FILE]         perf trajectory rows → BENCH_4.json
 //! ```
 
 use std::collections::HashMap;
@@ -78,12 +78,16 @@ const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream|
   --threads <n>          worker threads (default 8)
   --queue <n>            session queue depth (default 2x threads)
   --block <4096|16384>   package block bytes (default 16384)
+  --exec <columnar|legacy>  software executor pipeline (default columnar;
+                         legacy is the row-at-a-time Vec<Tuple> baseline)
 stream reads one document per stdin line through a Session, e.g.:
   journalctl -f | repro stream --query t2 --threads 4 --per-doc
   --per-doc              print per-document tuple counts as they complete
   --view <name>          print each match of this output view
 bench measures software vs sim-accelerated, single-query vs merged catalog,
-and always writes the machine-readable rows to BENCH_3.json:
+and columnar vs the legacy row pipeline (old-vs-new, same run); with
+--features bench-alloc it also reports measured allocations/document.
+Machine-readable rows always land in BENCH_4.json:
   --json <file>          override the output path";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -195,6 +199,10 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
     let mut cfg = EngineConfig::accelerated(mode, engine);
     if let Some(b) = flags.get("block").and_then(|s| s.parse().ok()) {
         cfg.accel.block = b;
+    }
+    if let Some(s) = flags.get("exec") {
+        cfg.strategy = boost::exec::ExecStrategy::parse(s)
+            .ok_or_else(|| format!("bad --exec '{s}' (columnar|legacy)"))?;
     }
     Ok(cfg)
 }
@@ -491,10 +499,28 @@ fn cmd_run_catalog(names: &[String], flags: &HashMap<String, String>) -> Result<
     Ok(())
 }
 
+/// Steady-state allocations per document on single-threaded `run_doc`
+/// (bench-alloc builds only) — the shared protocol in
+/// `boost::util::alloc::allocations_per_unit`.
+#[cfg(feature = "bench-alloc")]
+fn allocs_per_doc(engine: &Engine, corpus: &boost::corpus::Corpus, reps: usize) -> f64 {
+    boost::util::alloc::allocations_per_unit(
+        || {
+            for d in &corpus.docs {
+                let _ = engine.run_doc(d);
+            }
+        },
+        reps,
+        corpus.docs.len(),
+    )
+}
+
 /// `repro bench`: the perf-trajectory rows — docs/sec and MB/s for
 /// software vs sim-accelerated execution, each query alone vs the merged
-/// T1–T5 catalog — serialized to `BENCH_3.json` (override with
-/// `--json <file>`).
+/// T1–T5 catalog, and the columnar executor vs the legacy row pipeline
+/// (old-vs-new, measured in the same run) — serialized to `BENCH_4.json`
+/// (override with `--json <file>`). With `--features bench-alloc`, also
+/// reports measured steady-state allocations/document on T1.
 fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     let threads: usize = flags
         .get("threads")
@@ -509,6 +535,15 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         .collect();
     let sim_mode = PartitionMode::ExtractOnly;
 
+    // unmeasured warm-up sweep (both pipelines over the full corpus)
+    // before any measured row: the first engine to run must not absorb
+    // one-time process costs (page faults, CPU frequency ramp, allocator
+    // arena growth) that would bias the old-vs-new comparison
+    for cfg in [EngineConfig::legacy_rows(), EngineConfig::default()] {
+        let warm = build_catalog(&names, cfg)?;
+        let _ = warm.run_corpus(&corpus, threads);
+    }
+
     let mut rows: Vec<(String, &'static str, RunReport)> = Vec::new();
     for n in &names {
         let q = boost::queries::builtin(n).unwrap();
@@ -520,6 +555,14 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         hw.shutdown();
     }
     let merged_name = "merged-t1..t5".to_string();
+    // old-vs-new on the same catalog, same corpus, same process: the
+    // legacy row pipeline first, then the columnar default
+    let legacy = build_catalog(&names, EngineConfig::legacy_rows())?;
+    rows.push((
+        merged_name.clone(),
+        "sw-legacy",
+        legacy.run_corpus(&corpus, threads),
+    ));
     let sw = build_catalog(&names, EngineConfig::default())?;
     rows.push((merged_name.clone(), "software", sw.run_corpus(&corpus, threads)));
     let hw = build_catalog(&names, EngineConfig::simulated(sim_mode))?;
@@ -552,14 +595,17 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
             .map(|(_, _, r)| r.wall.as_secs_f64())
             .sum()
     };
-    let merged_wall = |eng: &str| -> f64 {
+    let merged_row = |eng: &str| -> Option<&RunReport> {
         rows.iter()
             .find(|(c, e, _)| *e == eng && c.starts_with("merged"))
-            .map(|(_, _, r)| r.wall.as_secs_f64())
-            .unwrap_or(f64::NAN)
+            .map(|(_, _, r)| r)
     };
-    let (sw_single, sw_merged) = (total_wall("software"), merged_wall("software"));
-    let (sim_single, sim_merged) = (total_wall("sim"), merged_wall("sim"));
+    let (sw_single, sim_single) = (total_wall("software"), total_wall("sim"));
+    let sw_merged = merged_row("software").map(|r| r.wall.as_secs_f64()).unwrap_or(f64::NAN);
+    let sim_merged = merged_row("sim").map(|r| r.wall.as_secs_f64()).unwrap_or(f64::NAN);
+    let columnar_dps = merged_row("software").map(|r| r.docs_per_sec()).unwrap_or(f64::NAN);
+    let legacy_dps = merged_row("sw-legacy").map(|r| r.docs_per_sec()).unwrap_or(f64::NAN);
+    let columnar_speedup = columnar_dps / legacy_dps;
     println!(
         "  five passes vs one: software {:.1} ms -> {:.1} ms ({:.2}x), sim {:.1} ms -> {:.1} ms ({:.2}x)",
         sw_single * 1e3,
@@ -569,14 +615,51 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         sim_merged * 1e3,
         sim_single / sim_merged,
     );
+    println!(
+        "  columnar vs legacy rows (merged catalog): {:.0} docs/s vs {:.0} docs/s ({:.2}x)",
+        columnar_dps, legacy_dps, columnar_speedup,
+    );
+
+    // steady-state allocations/document on T1, old vs new (measured only
+    // when the counting allocator is compiled in)
+    #[cfg(feature = "bench-alloc")]
+    let alloc_json = {
+        let q = boost::queries::builtin("t1").unwrap();
+        let alloc_docs = 16usize;
+        let alloc_doc_size = doc_size.max(256);
+        let alloc_corpus = boost::corpus::CorpusSpec::news(alloc_docs, alloc_doc_size).generate();
+        let leg = Engine::with_config(&q.aql, EngineConfig::legacy_rows())
+            .map_err(|e| e.to_string())?;
+        let col = Engine::compile_aql(&q.aql).map_err(|e| e.to_string())?;
+        let legacy_apd = allocs_per_doc(&leg, &alloc_corpus, 3);
+        let columnar_apd = allocs_per_doc(&col, &alloc_corpus, 3);
+        println!(
+            "  allocations/doc (t1, steady state): legacy {legacy_apd:.0}, \
+             columnar {columnar_apd:.0} ({:.1}x fewer)",
+            legacy_apd / columnar_apd,
+        );
+        // the alloc measurement uses its own (smaller, single-threaded)
+        // corpus — record it so the committed number documents its own
+        // conditions even after CI merges sections from separate runs
+        format!(
+            "{{\"corpus\": {{\"docs\": {alloc_docs}, \"doc_size\": {alloc_doc_size}, \
+             \"kind\": \"news\"}}, \
+             \"t1_legacy_allocs_per_doc\": {legacy_apd:.2}, \
+             \"t1_columnar_allocs_per_doc\": {columnar_apd:.2}, \
+             \"reduction\": {:.2}}}",
+            legacy_apd / columnar_apd,
+        )
+    };
+    #[cfg(not(feature = "bench-alloc"))]
+    let alloc_json = "null".to_string();
 
     // machine-readable trajectory point
     let path = match flags.get("json") {
         Some(p) if !p.is_empty() => p.as_str(),
-        _ => "BENCH_3.json",
+        _ => "BENCH_4.json",
     };
     let mut json = String::new();
-    json.push_str("{\n  \"schema\": \"boost-bench-v1\",\n");
+    json.push_str("{\n  \"schema\": \"boost-bench-v2\",\n  \"measured\": true,\n");
     json.push_str(&format!(
         "  \"corpus\": {{\"docs\": {}, \"doc_size\": {doc_size}, \"kind\": \"{kind}\"}},\n",
         corpus.docs.len(),
@@ -598,13 +681,17 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         ));
     }
     json.push_str("  ],\n");
+    json.push_str(&format!("  \"alloc\": {alloc_json},\n"));
     json.push_str(&format!(
         "  \"summary\": {{\"single_software_wall_s\": {sw_single:.6}, \
          \"merged_software_wall_s\": {sw_merged:.6}, \
          \"merged_vs_single_software_speedup\": {:.4}, \
          \"single_sim_wall_s\": {sim_single:.6}, \
          \"merged_sim_wall_s\": {sim_merged:.6}, \
-         \"merged_vs_single_sim_speedup\": {:.4}}}\n}}\n",
+         \"merged_vs_single_sim_speedup\": {:.4}, \
+         \"merged_legacy_docs_per_sec\": {legacy_dps:.3}, \
+         \"merged_columnar_docs_per_sec\": {columnar_dps:.3}, \
+         \"columnar_vs_legacy_speedup\": {columnar_speedup:.4}}}\n}}\n",
         sw_single / sw_merged,
         sim_single / sim_merged,
     ));

@@ -24,7 +24,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::aog::{Graph, NodeId, OpKind, Schema, Tuple};
-use crate::exec::{Executor, Profiler, SubgraphRunner};
+use crate::exec::{ExecStrategy, Executor, Profiler, SubgraphRunner, TupleBatch};
 use crate::text::{Document, TokenIndex};
 
 /// Offload scenario.
@@ -361,13 +361,23 @@ pub struct SoftwareSubgraphRunner {
 }
 
 impl SoftwareSubgraphRunner {
-    /// Build from a plan.
+    /// Build from a plan (columnar bodies).
     pub fn new(plan: &PartitionPlan) -> SoftwareSubgraphRunner {
+        SoftwareSubgraphRunner::with_strategy(plan, ExecStrategy::Columnar)
+    }
+
+    /// Build from a plan with an explicit body-executor strategy — the
+    /// columnar differential suite runs a fully-legacy pipeline this way.
+    pub fn with_strategy(
+        plan: &PartitionPlan,
+        strategy: ExecStrategy,
+    ) -> SoftwareSubgraphRunner {
         let executors = plan
             .subgraphs
             .iter()
             .map(|s| {
                 Executor::new(Arc::new(s.body.clone()), Arc::new(Profiler::disabled()))
+                    .with_strategy(strategy)
             })
             .collect();
         SoftwareSubgraphRunner { executors }
@@ -393,6 +403,24 @@ impl SubgraphRunner for SoftwareSubgraphRunner {
             out.num_views()
         );
         out.views()[output_idx].clone()
+    }
+
+    fn run_batch(
+        &self,
+        id: usize,
+        output_idx: usize,
+        doc: &Document,
+        tokens: &TokenIndex,
+        ext: &[&TupleBatch],
+        _schema: &Schema,
+    ) -> TupleBatch {
+        let out = self.executors[id].run_doc_batched(doc, tokens, ext, &HashMap::new());
+        assert!(
+            output_idx < out.num_views(),
+            "subgraph #{id} has {} outputs, output_idx {output_idx} is out of range",
+            out.num_views()
+        );
+        out.batches()[output_idx].clone()
     }
 }
 

@@ -60,8 +60,21 @@ impl CompiledRegex {
     /// longest match, emit it, and continue from its end (non-overlapping).
     /// Empty matches are skipped (SystemT never emits zero-length spans).
     pub fn find_all(&self, text: &str) -> Vec<Match> {
-        let bytes = text.as_bytes();
         let mut out = Vec::new();
+        self.find_all_each(text, |span| out.push(Match { span }));
+        out
+    }
+
+    /// [`CompiledRegex::find_all`] appending spans to `out` — the columnar
+    /// extraction path writes matches straight into an arena-backed span
+    /// column, with no per-match `Match`/tuple values in between.
+    pub fn find_all_spans_into(&self, text: &str, out: &mut Vec<Span>) {
+        self.find_all_each(text, |span| out.push(span));
+    }
+
+    /// The scan core shared by both emit shapes.
+    fn find_all_each(&self, text: &str, mut emit: impl FnMut(Span)) {
+        let bytes = text.as_bytes();
         let mut pos = 0usize;
         let start_bound = if self.pattern.anchored_start { 1 } else { bytes.len() + 1 };
         while pos < bytes.len() && pos < start_bound {
@@ -69,9 +82,7 @@ impl CompiledRegex {
                 Some(len) if len > 0 => {
                     let end = pos + len;
                     if !self.pattern.anchored_end || end == bytes.len() {
-                        out.push(Match {
-                            span: Span::new(pos as u32, end as u32),
-                        });
+                        emit(Span::new(pos as u32, end as u32));
                         pos = end;
                         continue;
                     }
@@ -83,7 +94,6 @@ impl CompiledRegex {
                 _ => pos += 1,
             }
         }
-        out
     }
 
     /// Hardware-path reconstruction. `ends` are exclusive end offsets where
@@ -104,13 +114,25 @@ impl CompiledRegex {
     /// end from `s*`). So "min start, then max end" over per-end bounded
     /// candidates equals the software pick, round by round.
     pub fn from_hw_ends(&self, text: &str, ends: &[usize]) -> Vec<Match> {
+        let mut out = Vec::new();
+        self.from_hw_ends_each(text, ends, |span| out.push(Match { span }));
+        out
+    }
+
+    /// [`CompiledRegex::from_hw_ends`] appending spans to `out` — the
+    /// accelerator post-stage reconstructs straight into an arena-backed
+    /// span column.
+    pub fn from_hw_ends_spans_into(&self, text: &str, ends: &[usize], out: &mut Vec<Span>) {
+        self.from_hw_ends_each(text, ends, |span| out.push(span));
+    }
+
+    fn from_hw_ends_each(&self, text: &str, ends: &[usize], mut emit: impl FnMut(Span)) {
         let bytes = text.as_bytes();
         let ends: Vec<usize> = ends
             .iter()
             .copied()
             .filter(|&e| !self.pattern.anchored_end || e == bytes.len())
             .collect();
-        let mut out: Vec<Match> = Vec::new();
         let mut cursor = 0usize;
         let mut lo = 0usize; // index of first end still usable
         loop {
@@ -136,15 +158,12 @@ impl CompiledRegex {
             }
             match best {
                 Some((s, e)) => {
-                    out.push(Match {
-                        span: Span::new(s as u32, e as u32),
-                    });
+                    emit(Span::new(s as u32, e as u32));
                     cursor = e;
                 }
                 None => break,
             }
         }
-        out
     }
 
     /// Run the Search DFA in software and reconstruct — this is the oracle
@@ -268,6 +287,29 @@ mod tests {
                 |text| re.find_all(text) == re.find_all_via_ends(text),
             );
         }
+    }
+
+    #[test]
+    fn spans_into_variants_agree_with_vec_forms() {
+        let re = compile(r"[A-Z][a-z]+", false).unwrap();
+        let text = "Alice met Bob at IBM Research";
+        let mut direct = Vec::new();
+        re.find_all_spans_into(text, &mut direct);
+        assert_eq!(
+            direct,
+            re.find_all(text).iter().map(|m| m.span).collect::<Vec<_>>()
+        );
+        let mut ends = Vec::new();
+        re.search.scan_ends(text.as_bytes(), |e| ends.push(e));
+        let mut hw = Vec::new();
+        re.from_hw_ends_spans_into(text, &ends, &mut hw);
+        assert_eq!(
+            hw,
+            re.from_hw_ends(text, &ends)
+                .iter()
+                .map(|m| m.span)
+                .collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -1,0 +1,81 @@
+//! Allocation-counting global allocator, behind the `bench-alloc` feature.
+//!
+//! `repro bench` and the columnar regression tests use it to turn
+//! "allocations per document" into a measured, CI-checkable number: the
+//! whole point of the columnar executor is that a warmed-up worker thread
+//! serves a document from recycled arena buffers, so the steady-state
+//! count must stay a small constant (and ~an order of magnitude below the
+//! legacy row pipeline's).
+//!
+//! The counter is global and monotonic; callers sample
+//! [`allocations`] before/after a measured region and difference the two.
+//! Only allocation *events* are counted (alloc, alloc_zeroed, realloc) —
+//! frees are not, since the metric of interest is allocator pressure.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// A [`System`] wrapper that counts allocation events. Installed as the
+/// crate's `#[global_allocator]` when `bench-alloc` is enabled.
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocation events (process-wide, all threads) since start.
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// The steady-state measurement protocol, shared by `repro bench` and the
+/// columnar regression tests so the committed benchmark number and the CI
+/// assertion can never drift apart: run `pass` once unmeasured (arena /
+/// cache warm-up), then `reps` more times measured, and return mean
+/// allocation events per unit (`units_per_pass` units per pass — e.g.
+/// documents per corpus sweep).
+///
+/// The counter is process-global: callers must ensure no other thread is
+/// allocating during the measured window (single-threaded `run_doc`
+/// loops, `--test-threads=1` in CI).
+pub fn allocations_per_unit(mut pass: impl FnMut(), reps: usize, units_per_pass: usize) -> f64 {
+    pass(); // warm-up, unmeasured
+    let a0 = allocations();
+    for _ in 0..reps.max(1) {
+        pass();
+    }
+    (allocations() - a0) as f64 / (reps.max(1) * units_per_pass.max(1)) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_monotonic_and_counts() {
+        let a0 = allocations();
+        let v: Vec<u64> = (0..64).collect();
+        std::hint::black_box(&v);
+        let a1 = allocations();
+        assert!(a1 > a0, "allocating a Vec must tick the counter");
+    }
+}

@@ -2,6 +2,8 @@
 //! offline vendor set), a minimal property-testing harness standing in for
 //! `proptest`, and misc helpers.
 
+#[cfg(feature = "bench-alloc")]
+pub mod alloc;
 pub mod prng;
 pub mod prop;
 

@@ -1,0 +1,226 @@
+//! Columnar-executor differential suite (ISSUE 4 tentpole).
+//!
+//! The columnar `TupleBatch` pipeline must be **byte-identical** — same
+//! tuples, same values, same order, view by view — to the seed's
+//! row-at-a-time `Vec<Tuple>` semantics, which survive behind
+//! `ExecStrategy::LegacyRows` exactly for this comparison. Coverage:
+//!
+//! * every built-in query (T1–T5) × every `PartitionMode` (software
+//!   subgraph runners on both sides, so the whole pipeline — supergraph
+//!   and subgraph bodies — runs under one strategy) on a randomized
+//!   corpus plus handcrafted edge documents;
+//! * the merged T1–T5 catalog engine, columnar vs legacy, per query;
+//! * with `--features bench-alloc`: the arena-recycling invariant — after
+//!   warm-up, steady-state allocations/document on T1 is a small constant
+//!   and ≥10× below the legacy pipeline's.
+//!
+//! The corpus seed is fixed (reproducible CI) but overridable through
+//! `BOOST_DIFF_SEED`, like `differential.rs`.
+
+use std::sync::Arc;
+
+use boost::coordinator::{Engine, EngineConfig};
+use boost::corpus::CorpusSpec;
+use boost::exec::{ExecStrategy, Executor, Profiler};
+use boost::partition::{partition, PartitionMode, SoftwareSubgraphRunner};
+use boost::text::Document;
+use boost::util::Prng;
+
+fn seed() -> u64 {
+    std::env::var("BOOST_DIFF_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC011_2026)
+}
+
+/// Randomized documents across all corpus flavours plus edge cases.
+fn docs() -> Vec<Document> {
+    let mut rng = Prng::new(seed());
+    let mut texts: Vec<String> = Vec::new();
+    for d in CorpusSpec::news(30, 512).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::tweets(15, 128).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::logs(10, 256).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for e in [
+        "",
+        " ",
+        "IBM",
+        "Laura Chiticariu works at IBM Research in Almaden.",
+        "Call (408) 555-9876 or visit http://example.org/x on 2014-06-30.",
+        "IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM",
+    ] {
+        texts.push(e.to_string());
+    }
+    texts
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| Document::new(i as u64, t))
+        .collect()
+}
+
+/// Build the full software pipeline (supergraph + software subgraph
+/// runner) for one query/mode under one strategy.
+fn pipeline(aql: &str, mode: PartitionMode, strategy: ExecStrategy) -> Executor {
+    let g = boost::optimizer::optimize(&boost::aql::compile(aql).unwrap());
+    let plan = partition(&g, mode);
+    let mut ex = Executor::new(
+        Arc::new(plan.supergraph.clone()),
+        Arc::new(Profiler::disabled()),
+    )
+    .with_strategy(strategy);
+    if !plan.subgraphs.is_empty() {
+        ex = ex.with_subgraph_runner(Arc::new(SoftwareSubgraphRunner::with_strategy(
+            &plan, strategy,
+        )));
+    }
+    ex
+}
+
+#[test]
+fn columnar_is_byte_identical_to_legacy_for_every_query_and_mode() {
+    let docs = docs();
+    for q in boost::queries::all() {
+        for mode in [
+            PartitionMode::None,
+            PartitionMode::ExtractOnly,
+            PartitionMode::SingleSubgraph,
+            PartitionMode::MultiSubgraph,
+        ] {
+            let col = pipeline(&q.aql, mode, ExecStrategy::Columnar);
+            let leg = pipeline(&q.aql, mode, ExecStrategy::LegacyRows);
+            for d in &docs {
+                let a = col.run_doc(d);
+                let b = leg.run_doc(d);
+                // views(): Vec<Tuple> per view, order-sensitive equality —
+                // byte identical content AND order
+                assert_eq!(
+                    a.views(),
+                    b.views(),
+                    "query {} mode {:?} doc {} ({:?}) diverged",
+                    q.name,
+                    mode,
+                    d.id,
+                    d.text
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn merged_catalog_columnar_matches_legacy_per_query() {
+    let names = ["t1", "t2", "t3", "t4", "t5"];
+    let build = |config: EngineConfig| -> Engine {
+        let mut b = Engine::builder().config(config);
+        for n in names {
+            b = b.register_builtin(n);
+        }
+        b.build().unwrap()
+    };
+    let col = build(EngineConfig::default());
+    let leg = build(EngineConfig::legacy_rows());
+    for d in docs().iter().take(30) {
+        let a = col.run_doc(d);
+        let b = leg.run_doc(d);
+        assert_eq!(a.views(), b.views(), "doc {} diverged", d.id);
+        for n in names {
+            let qa = col.query(n).unwrap();
+            let qb = leg.query(n).unwrap();
+            assert_eq!(
+                qa.total_tuples(&a),
+                qb.total_tuples(&b),
+                "query {n} count diverged on doc {}",
+                d.id
+            );
+        }
+    }
+}
+
+#[test]
+fn doc_result_round_trips_between_batches_and_rows() {
+    let q = boost::queries::builtin("t1").unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    let d = Document::new(0, "Laura Chiticariu works at IBM Research in Zurich.");
+    let r = engine.run_doc(&d);
+    // batch-side counts equal the materialized rows
+    let batch_total: usize = r.batches().iter().map(|b| b.len()).sum();
+    assert_eq!(batch_total, r.total_tuples());
+    let row_total: usize = r.views().iter().map(|v| v.len()).sum();
+    assert_eq!(batch_total, row_total);
+    // per-view: batch to_tuples equals the lazily materialized rows
+    for (batch, rows) in r.batches().iter().zip(r.views()) {
+        assert_eq!(&batch.to_tuples(), rows);
+    }
+    // cloning preserves both layouts
+    let c = r.clone();
+    assert_eq!(c.views(), r.views());
+}
+
+/// The arena-recycling invariant, measured with the counting allocator:
+/// once warmed up, the columnar pipeline serves a T1 document from
+/// recycled buffers — a small constant number of allocations — while the
+/// legacy row pipeline allocates per tuple per operator (≥10× more).
+#[cfg(feature = "bench-alloc")]
+#[test]
+fn steady_state_allocations_per_doc_small_and_10x_below_legacy() {
+    use boost::util::alloc;
+
+    let q = boost::queries::builtin("t1").unwrap();
+    let col = Engine::compile_aql(&q.aql).unwrap();
+    let leg = Engine::with_config(&q.aql, EngineConfig::legacy_rows()).unwrap();
+    let corpus = CorpusSpec::news(24, 2048).generate();
+
+    // single-threaded run_doc loop through the shared measurement
+    // protocol (same one `repro bench` reports): the arena lives on this
+    // thread, so warm-up and measurement see the same pools. CI runs this
+    // with --test-threads=1 because the counter is process-global.
+    let allocs_per_doc = |engine: &Engine| -> f64 {
+        alloc::allocations_per_unit(
+            || {
+                for d in &corpus.docs {
+                    let _ = engine.run_doc(d);
+                }
+            },
+            3,
+            corpus.docs.len(),
+        )
+    };
+
+    let legacy = allocs_per_doc(&leg);
+    let columnar = allocs_per_doc(&col);
+    assert!(
+        columnar <= 256.0,
+        "steady-state columnar allocations/doc must be a small constant, got {columnar:.0}"
+    );
+    assert!(
+        legacy >= 10.0 * columnar,
+        "expected ≥10x allocation reduction: legacy {legacy:.0}/doc vs columnar {columnar:.0}/doc"
+    );
+}
+
+/// Arena gauges: after warm-up, rebuilding the same shapes takes no fresh
+/// buffer allocations from this thread's pools.
+#[test]
+fn arena_fresh_allocations_stop_growing_after_warmup() {
+    let q = boost::queries::builtin("t1").unwrap();
+    let engine = Engine::compile_aql(&q.aql).unwrap();
+    let corpus = CorpusSpec::news(8, 1024).generate();
+    for d in &corpus.docs {
+        let _ = engine.run_doc(d); // warm this thread's arena
+    }
+    let before = boost::exec::batch::arena_stats();
+    for d in &corpus.docs {
+        let _ = engine.run_doc(d);
+    }
+    let after = boost::exec::batch::arena_stats();
+    assert!(after.checkouts > before.checkouts, "batches were built");
+    assert_eq!(
+        after.fresh, before.fresh,
+        "steady state must be served entirely from recycled buffers"
+    );
+}
