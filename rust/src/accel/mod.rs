@@ -18,6 +18,22 @@
 //! thread falls behind, `submit` blocks the worker (backpressure) instead
 //! of buffering unboundedly.
 //!
+//! ## Buffer ownership across the HW/SW boundary
+//!
+//! Every tuple stream crossing this interface is a [`TupleBatch`] whose
+//! column buffers are stamped with their origin arena shard
+//! ([`crate::exec::batch::ArenaId`]): submissions carry worker-origin
+//! batches that the communication thread drops after the relational body
+//! runs (routed home to the worker's shard), and replies carry
+//! comm-origin batches that workers clone out of and release (routed home
+//! to the communication shard — the thread pins [`ArenaId::comm`] at
+//! start-up). The per-(doc, subgraph) reply cache evicts an entry as soon
+//! as its last output is consumed, so reply buffers go home *within* the
+//! document that produced them and the accelerated route serves a warm
+//! document with **zero fresh arena allocations** — the same steady state
+//! as the software path (asserted in `rust/tests/columnar.rs`).
+//!
+//! [`ArenaId::comm`]: crate::exec::batch::ArenaId::comm
 //! [`Session`]: crate::coordinator::Session
 
 pub mod packing;
@@ -148,6 +164,10 @@ impl AccelService {
         let handle = std::thread::Builder::new()
             .name("accel-comm".into())
             .spawn(move || {
+                // home this thread on the reserved communication shard:
+                // post-stage batches check out of (and return to) a pool
+                // no worker contends on
+                crate::exec::batch::pin_thread(crate::exec::batch::ArenaId::comm());
                 match spec.build() {
                     Ok(engine) => {
                         comm_thread(rx, prepared, engine, opts, thread_metrics, thread_stop)
@@ -245,6 +265,10 @@ fn comm_thread(
     // pending submissions per subgraph
     let mut pending: Vec<Vec<Submission>> = (0..prepared.len()).map(|_| Vec::new()).collect();
     let mut pending_bytes: Vec<usize> = vec![0; prepared.len()];
+    // drained submissions land here first: one receiver lock per
+    // combining round instead of one per submission, and the scratch
+    // capacity is recycled across rounds
+    let mut drained: Vec<Submission> = Vec::new();
     loop {
         // Block for the first submission (or queue close), then drain
         // whatever else is queued — "collects the data submitted by some of
@@ -257,7 +281,8 @@ fn comm_thread(
             }
             None => break, // all producers gone
         }
-        while let Some(s) = rx.try_pop() {
+        rx.drain_into(&mut drained);
+        for s in drained.drain(..) {
             let gi = s.subgraph_id;
             pending_bytes[gi] += s.doc.len() + 1;
             pending[gi].push(s);
@@ -309,7 +334,7 @@ fn dispatch_group(
     options: &AccelOptions,
     metrics: &AccelMetrics,
 ) {
-    let subs = std::mem::take(group);
+    let mut subs = std::mem::take(group);
     let docs: Vec<&Document> = subs.iter().map(|s| &s.doc).collect();
     // adaptive block: smallest compiled variant that holds the batch
     let block = if options.adaptive_block {
@@ -336,13 +361,18 @@ fn dispatch_group(
     for wp in packages {
         let batch: Vec<&Submission> =
             wp.slots.iter().map(|s| &subs[s.doc_index]).collect();
-        run_package(&wp, &batch, prep, engine, options, metrics);
+        run_package(wp, &batch, prep, engine, options, metrics);
     }
+    // dropping the submissions here routes their ext batches back to the
+    // worker shards that built them; the emptied container goes back to
+    // the pending slot so steady-state combining reallocates neither
+    subs.clear();
+    *group = subs;
 }
 
 /// Execute one packed work package and wake its workers.
 fn run_package(
-    wp: &WorkPackage,
+    mut wp: WorkPackage,
     batch: &[&Submission],
     prep: &Prepared,
     engine: &dyn PackageEngine,
@@ -351,7 +381,10 @@ fn run_package(
 ) {
     let (m_pad, s_pad) = prep.config.geometry;
     let pkg = PackedPackage {
-        bytes: wp.bytes.clone(),
+        // the package owns the byte block outright — moving it out of the
+        // WorkPackage avoids re-allocating and copying STREAMS × block
+        // ints per package on the steady-state path
+        bytes: std::mem::take(&mut wp.bytes),
         block: wp.block,
         tables: prep.tables.clone(),
         accepts: prep.accepts.clone(),
@@ -462,8 +495,25 @@ fn run_package(
     }
 }
 
+/// One cached reply: a subgraph's outputs for one document, plus how many
+/// more `SubgraphExec` reads remain before the entry is evicted.
+struct CacheEntry {
+    outputs: Arc<Vec<TupleBatch>>,
+    remaining: usize,
+}
+
 /// [`SubgraphRunner`] backed by the service: submits and sleeps, with a
-/// per-(doc, subgraph) result cache so multi-output subgraphs execute once.
+/// per-(doc, subgraph) result cache so multi-output subgraphs execute
+/// once per document.
+///
+/// The cache is **self-evicting**: a subgraph with `K` outputs is read
+/// exactly `K` times per document (once per `SubgraphExec` node), so the
+/// entry is inserted with `K - 1` remaining reads and removed by the
+/// last one. Eviction is what lets the reply's comm-origin column
+/// buffers route home (the batches drop on the worker, return-to-origin
+/// sends them to the communication shard) *within* the document that
+/// produced them — parking replies indefinitely would starve the
+/// communication thread's pools and force fresh allocations per package.
 ///
 /// Construction takes the [`PartitionPlan`] the service was compiled from,
 /// so every `SubgraphExec` reference is validated against the plan's
@@ -482,7 +532,7 @@ pub struct AccelSubgraphRunner {
     /// Keyed by (doc id, doc text allocation, subgraph id): the Session
     /// API accepts arbitrary caller-built documents, so ids alone are not
     /// unique and must not alias cache entries across different texts.
-    cache: Mutex<HashMap<(u64, usize, usize), Arc<Vec<TupleBatch>>>>,
+    cache: Mutex<HashMap<(u64, usize, usize), CacheEntry>>,
 }
 
 impl AccelSubgraphRunner {
@@ -505,10 +555,10 @@ impl AccelSubgraphRunner {
         (doc.id, Arc::as_ptr(&doc.text) as *const u8 as usize, id)
     }
 
-    /// Validate the reference and consult the cache — called *before* any
-    /// ext-stream conversion, so cache hits (every output after the first
-    /// of a multi-output subgraph) do zero copying.
-    fn cached(&self, id: usize, output_idx: usize, doc: &Document) -> Option<Arc<Vec<TupleBatch>>> {
+    /// Validate a `SubgraphExec` reference against the compiled plan —
+    /// called unconditionally by both entry points so a miswired graph
+    /// fails loudly instead of yielding empty tuples.
+    fn validate(&self, id: usize, output_idx: usize) {
         assert!(
             id < self.subgraph_outputs.len(),
             "graph references subgraph #{id} but the plan compiled only {}",
@@ -519,15 +569,28 @@ impl AccelSubgraphRunner {
             "subgraph #{id} has {} outputs, output_idx {output_idx} is out of range",
             self.subgraph_outputs[id]
         );
-        self.cache
-            .lock()
-            .unwrap()
-            .get(&Self::cache_key(doc, id))
-            .cloned()
     }
 
-    /// Submit-and-sleep, filling the per-(doc, subgraph) cache — shared by
-    /// the row and batch entry points (which check [`Self::cached`] first).
+    /// Consult the cache — called *before* any ext-stream conversion, so
+    /// cache hits (every output after the first of a multi-output
+    /// subgraph) do zero copying. Each hit burns one remaining read; the
+    /// last one evicts the entry, releasing the reply batches to route
+    /// home to the communication shard.
+    fn take_cached(&self, id: usize, doc: &Document) -> Option<Arc<Vec<TupleBatch>>> {
+        let key = Self::cache_key(doc, id);
+        let mut cache = self.cache.lock().unwrap();
+        let entry = cache.get_mut(&key)?;
+        let outputs = entry.outputs.clone();
+        entry.remaining -= 1;
+        if entry.remaining == 0 {
+            cache.remove(&key);
+        }
+        Some(outputs)
+    }
+
+    /// Submit-and-sleep, filling the per-(doc, subgraph) cache — shared
+    /// by the row and batch entry points (which check
+    /// [`Self::take_cached`] first).
     fn fetch(
         &self,
         id: usize,
@@ -541,16 +604,36 @@ impl AccelSubgraphRunner {
         // document-per-thread: sleep until the package completes
         match rx.recv() {
             Ok(Ok(outputs)) => {
-                let mut cache = self.cache.lock().unwrap();
-                if cache.len() > 4096 {
-                    cache.clear(); // workers only revisit the current doc
+                // this call is the first of the subgraph's `uses` reads
+                // for this document; cache only what later reads need
+                let uses = self.subgraph_outputs[id];
+                if uses > 1 {
+                    let mut cache = self.cache.lock().unwrap();
+                    if cache.len() > 1024 {
+                        // backstop for outputs that are dead in the
+                        // supergraph and therefore never read to zero
+                        cache.clear();
+                    }
+                    cache.insert(
+                        Self::cache_key(doc, id),
+                        CacheEntry {
+                            outputs: outputs.clone(),
+                            remaining: uses - 1,
+                        },
+                    );
                 }
-                cache.insert(Self::cache_key(doc, id), outputs.clone());
                 outputs
             }
             Ok(Err(e)) => panic!("accelerator error: {e}"),
             Err(_) => panic!("accelerator service shut down while waiting"),
         }
+    }
+
+    /// Number of replies currently parked in the cache (tests assert the
+    /// self-eviction leaves nothing behind after a document completes).
+    #[cfg(test)]
+    fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
     }
 }
 
@@ -563,7 +646,8 @@ impl SubgraphRunner for AccelSubgraphRunner {
         tokens: &TokenIndex,
         ext: &[&[Tuple]],
     ) -> Vec<Tuple> {
-        if let Some(r) = self.cached(id, output_idx, doc) {
+        self.validate(id, output_idx);
+        if let Some(r) = self.take_cached(id, doc) {
             return r[output_idx].to_tuples();
         }
         let ext_batches: Vec<TupleBatch> = ext
@@ -586,11 +670,20 @@ impl SubgraphRunner for AccelSubgraphRunner {
         ext: &[&TupleBatch],
         _schema: &Schema,
     ) -> TupleBatch {
-        if let Some(r) = self.cached(id, output_idx, doc) {
+        self.validate(id, output_idx);
+        if let Some(r) = self.take_cached(id, doc) {
             return r[output_idx].clone();
         }
         let ext_batches: Vec<TupleBatch> = ext.iter().map(|b| (*b).clone()).collect();
-        self.fetch(id, doc, tokens, ext_batches)[output_idx].clone()
+        let outputs = self.fetch(id, doc, tokens, ext_batches);
+        // single-output subgraphs are not cached (fetch keeps no clone),
+        // so this Arc is the sole owner: move the reply batch out instead
+        // of deep-copying it — the reply's comm-origin buffers then flow
+        // into the document result and go home when IT drops
+        match Arc::try_unwrap(outputs) {
+            Ok(mut v) => v.swap_remove(output_idx),
+            Err(shared) => shared[output_idx].clone(),
+        }
     }
 }
 
@@ -736,6 +829,42 @@ mod tests {
             snap.packages,
             snap.docs
         );
+        service.shutdown();
+    }
+
+    #[test]
+    fn reply_cache_self_evicts_once_every_output_is_read() {
+        // ExtractOnly folds both extraction leaves into ONE subgraph with
+        // several outputs: the reply must be cached across the reads of
+        // one document and evicted by the last one, so the comm-origin
+        // batches go home instead of parking in the cache
+        let g = crate::optimizer::optimize(&crate::aql::compile(PERSON_ORG).unwrap());
+        let plan = partition(&g, PartitionMode::ExtractOnly);
+        assert!(
+            plan.subgraphs.iter().any(|s| s.outputs.len() > 1),
+            "precondition: a multi-output subgraph exercises the cache"
+        );
+        let configs: Vec<AccelConfig> = plan
+            .subgraphs
+            .iter()
+            .map(|s| compile_subgraph(s).unwrap())
+            .collect();
+        let service = AccelService::start(configs, EngineSpec::Native, AccelOptions::default());
+        let runner = Arc::new(AccelSubgraphRunner::new(service.clone(), &plan));
+        let exec = Executor::new(
+            Arc::new(plan.supergraph.clone()),
+            Arc::new(Profiler::disabled()),
+        )
+        .with_subgraph_runner(runner.clone());
+        for (i, text) in SAMPLES.iter().enumerate() {
+            let out = exec.run_doc(&Document::new(i as u64, *text));
+            let _ = out.total_tuples();
+            assert_eq!(
+                runner.cache_len(),
+                0,
+                "cache must be empty after doc {i} completes"
+            );
+        }
         service.shutdown();
     }
 

@@ -15,9 +15,11 @@ use crate::text::Document;
 pub struct DocSlot {
     /// Index into the caller's submission list.
     pub doc_index: usize,
+    /// Which of the [`STREAMS`] byte streams holds the document.
     pub stream: usize,
     /// Byte offset within the stream.
     pub offset: usize,
+    /// Document length in bytes.
     pub len: usize,
 }
 
@@ -26,6 +28,7 @@ pub struct DocSlot {
 pub struct WorkPackage {
     /// `STREAMS × block` int32 byte values, row-major.
     pub bytes: Vec<i32>,
+    /// Bytes per stream.
     pub block: usize,
     /// Slots in placement order.
     pub slots: Vec<DocSlot>,

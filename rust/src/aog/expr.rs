@@ -113,11 +113,17 @@ impl Func {
 /// Comparison operators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CmpOp {
+    /// `=`.
     Eq,
+    /// `!=`.
     Ne,
+    /// `<`.
     Lt,
+    /// `<=`.
     Le,
+    /// `>`.
     Gt,
+    /// `>=`.
     Ge,
 }
 
@@ -140,15 +146,22 @@ impl CmpOp {
 pub enum Expr {
     /// Input column by position.
     Col(usize),
+    /// Integer literal.
     LitInt(i64),
     /// String literal, interned once at compile time so evaluation is a
     /// refcount bump instead of a per-row allocation.
     LitStr(Arc<str>),
+    /// Boolean literal.
     LitBool(bool),
+    /// Binary comparison.
     Cmp(Box<Expr>, CmpOp, Box<Expr>),
+    /// Logical conjunction.
     And(Box<Expr>, Box<Expr>),
+    /// Logical disjunction.
     Or(Box<Expr>, Box<Expr>),
+    /// Logical negation.
     Not(Box<Expr>),
+    /// Built-in function call.
     Call(Func, Vec<Expr>),
 }
 
@@ -166,7 +179,9 @@ impl std::error::Error for TypeError {}
 
 /// Evaluation context: the document the tuple's spans point into.
 pub struct EvalCtx<'a> {
+    /// The document text spans point into.
     pub text: &'a str,
+    /// The document's token index (for token-distance predicates).
     pub tokens: &'a TokenIndex,
 }
 

@@ -117,9 +117,13 @@ impl OpKind {
 /// One graph node.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// Topological id (index into [`Graph::nodes`]).
     pub id: NodeId,
+    /// The operator.
     pub kind: OpKind,
+    /// Input node ids (all smaller than `id`).
     pub inputs: Vec<NodeId>,
+    /// Output tuple schema.
     pub schema: Schema,
     /// View name, if this node is a named view's root.
     pub view: Option<String>,
@@ -128,6 +132,7 @@ pub struct Node {
 /// The operator graph: a DAG with topological node ids and named outputs.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
+    /// Nodes in topological order (`nodes[i].id == i`).
     pub nodes: Vec<Node>,
     /// `output view X;` targets: (view name, node id).
     pub outputs: Vec<(String, NodeId)>,
@@ -136,10 +141,34 @@ pub struct Graph {
 /// Graph construction/validation error.
 #[derive(Debug)]
 pub enum GraphError {
-    BadInput { node: NodeId, input: NodeId },
-    Type { node: NodeId, err: TypeError },
-    SchemaMismatch { node: NodeId, detail: String },
-    BadColumn { node: NodeId, col: usize },
+    /// An input id does not precede the node (DAG order violated).
+    BadInput {
+        /// The node being added.
+        node: NodeId,
+        /// The offending input id.
+        input: NodeId,
+    },
+    /// An expression failed type checking.
+    Type {
+        /// The node being added.
+        node: NodeId,
+        /// The underlying type error.
+        err: TypeError,
+    },
+    /// Input schemas do not line up (union/difference arity, join shape).
+    SchemaMismatch {
+        /// The node being added.
+        node: NodeId,
+        /// What mismatched.
+        detail: String,
+    },
+    /// A column index is out of range for the input schema.
+    BadColumn {
+        /// The node being added.
+        node: NodeId,
+        /// The offending column index.
+        col: usize,
+    },
 }
 
 impl std::fmt::Display for GraphError {

@@ -9,11 +9,17 @@ use crate::text::Span;
 /// floats, booleans — plus strings (for `GetText` results) and null.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A byte range into the document.
     Span(Span),
+    /// 64-bit integer.
     Int(i64),
+    /// 64-bit float.
     Float(f64),
+    /// Boolean.
     Bool(bool),
+    /// Interned string (e.g. `GetText` results).
     Str(Arc<str>),
+    /// SQL-style null.
     Null,
 }
 
@@ -84,10 +90,15 @@ impl fmt::Display for Value {
 /// Column types.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FieldType {
+    /// [`Value::Span`].
     Span,
+    /// [`Value::Int`].
     Int,
+    /// [`Value::Float`].
     Float,
+    /// [`Value::Bool`].
     Bool,
+    /// [`Value::Str`].
     Str,
 }
 
@@ -107,7 +118,9 @@ impl fmt::Display for FieldType {
 /// A named, typed column.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Field {
+    /// Column name.
     pub name: String,
+    /// Column type.
     pub ty: FieldType,
 }
 
@@ -115,6 +128,7 @@ pub struct Field {
 /// at compile time (paper §3) — the hardware compiler depends on this.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct Schema {
+    /// The columns, in order.
     pub fields: Vec<Field>,
 }
 

@@ -7,27 +7,41 @@ use crate::text::span::ConsolidatePolicy;
 /// A whole program: ordered statements.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Program {
+    /// Statements in source order.
     pub statements: Vec<Statement>,
 }
 
 /// Top-level statements.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Statement {
+    /// `create dictionary <name> as ('a', 'b', ...)`.
     CreateDictionary {
+        /// Dictionary name.
         name: String,
+        /// Case-folding policy.
         case: CaseMode,
+        /// The literal entries.
         entries: Vec<String>,
     },
+    /// `create dictionary <name> from file '<path>'`.
     CreateDictionaryFromFile {
+        /// Dictionary name.
         name: String,
+        /// Case-folding policy.
         case: CaseMode,
+        /// File path as written in the program.
         path: String,
     },
+    /// `create view <name> as <body>`.
     CreateView {
+        /// View name.
         name: String,
+        /// The view's defining body.
         body: ViewBody,
     },
+    /// `output view <name>`.
     OutputView {
+        /// Name of the view to output.
         name: String,
     },
 }
@@ -35,8 +49,11 @@ pub enum Statement {
 /// View bodies: a single select/extract, or a union of them.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ViewBody {
+    /// A `select ... from ...` statement.
     Select(SelectStmt),
+    /// An `extract regex/dictionary ...` statement.
     Extract(ExtractStmt),
+    /// `(<body>) union all (<body>) ...`.
     Union(Vec<ViewBody>),
     /// `lhs minus rhs` — set difference.
     Minus(Box<ViewBody>, Box<ViewBody>),
@@ -47,31 +64,46 @@ pub enum ViewBody {
 /// `block a.col with gap <n> min <m> from Source a`
 #[derive(Debug, Clone, PartialEq)]
 pub struct BlockStmt {
+    /// Source alias.
     pub alias: String,
+    /// Span column to block on.
     pub col: String,
+    /// Maximum token gap between grouped spans.
     pub gap: u32,
+    /// Minimum spans per emitted block.
     pub min_size: usize,
+    /// The blocked source.
     pub source: SourceRef,
 }
 
 /// `extract ... on <alias>.<col> as <name> from <source> <alias>`
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExtractStmt {
+    /// Regex or dictionary extraction.
     pub kind: ExtractKind,
+    /// Alias of the input source.
     pub input_alias: String,
+    /// Input column scanned (`d.text`).
     pub input_col: String,
+    /// Output column name (`as <name>`).
     pub out_name: String,
+    /// The scanned source.
     pub source: SourceRef,
 }
 
 /// The two extraction primitives.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ExtractKind {
+    /// `extract regex /.../ ...`.
     Regex {
+        /// The pattern between the slashes.
         pattern: String,
+        /// `/.../i` flag.
         case_insensitive: bool,
     },
+    /// `extract dictionary '<name>' ...`.
     Dictionary {
+        /// The referenced dictionary's name.
         dict_name: String,
     },
 }
@@ -79,25 +111,35 @@ pub enum ExtractKind {
 /// `select items from sources [where preds] [consolidate ...] [order by] [limit]`
 #[derive(Debug, Clone, PartialEq)]
 pub struct SelectStmt {
+    /// The select list.
     pub items: Vec<SelectItem>,
-    pub sources: Vec<(SourceRef, String)>, // (source, alias)
-    pub preds: Vec<AqlExpr>,               // conjunction
-    pub consolidate: Option<(String, ConsolidatePolicy)>, // (output col name, policy)
-    pub order_by: Vec<String>,             // output col names
+    /// `from` sources as `(source, alias)` pairs.
+    pub sources: Vec<(SourceRef, String)>,
+    /// `where` predicates (implicit conjunction).
+    pub preds: Vec<AqlExpr>,
+    /// `consolidate on <output col> using '<policy>'`.
+    pub consolidate: Option<(String, ConsolidatePolicy)>,
+    /// `order by` output column names.
+    pub order_by: Vec<String>,
+    /// `limit <n>`.
     pub limit: Option<usize>,
 }
 
 /// One select-list item: an expression plus output name.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SelectItem {
+    /// The projected expression.
     pub expr: AqlExpr,
+    /// Output column name (`as <name>`).
     pub name: String,
 }
 
 /// A `from` source.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SourceRef {
+    /// The built-in `Document d` relation.
     Document,
+    /// A previously created view, by name.
     View(String),
 }
 
@@ -105,19 +147,39 @@ pub enum SourceRef {
 #[derive(Debug, Clone, PartialEq)]
 pub enum AqlExpr {
     /// `alias.column`
-    ColRef { alias: String, col: String },
+    ColRef {
+        /// Source alias.
+        alias: String,
+        /// Column name.
+        col: String,
+    },
+    /// Integer literal.
     Int(i64),
+    /// String literal.
     Str(String),
+    /// Boolean literal.
     Bool(bool),
     /// `Func(args...)`
-    Call { func: String, args: Vec<AqlExpr> },
+    Call {
+        /// Function name as written.
+        func: String,
+        /// Argument expressions.
+        args: Vec<AqlExpr>,
+    },
+    /// Binary comparison.
     Cmp {
+        /// Left operand.
         lhs: Box<AqlExpr>,
+        /// Comparison operator.
         op: crate::aog::expr::CmpOp,
+        /// Right operand.
         rhs: Box<AqlExpr>,
     },
+    /// Logical conjunction.
     And(Box<AqlExpr>, Box<AqlExpr>),
+    /// Logical disjunction.
     Or(Box<AqlExpr>, Box<AqlExpr>),
+    /// Logical negation.
     Not(Box<AqlExpr>),
 }
 

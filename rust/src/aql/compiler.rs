@@ -19,16 +19,32 @@ use super::ast::*;
 /// Compilation error.
 #[derive(Debug)]
 pub enum CompileError {
+    /// Lexing failed.
     Lex(String),
+    /// Parsing failed.
     Parse(String),
+    /// A `from` clause referenced an undefined view.
     UnknownView(String),
+    /// An extraction referenced an undefined dictionary.
     UnknownDictionary(String),
+    /// A predicate called an unknown function.
     UnknownFunction(String),
+    /// An expression referenced an unbound alias.
     UnknownAlias(String),
-    UnknownColumn { alias: String, col: String },
+    /// An expression referenced a column its alias does not have.
+    UnknownColumn {
+        /// The alias as written.
+        alias: String,
+        /// The missing column.
+        col: String,
+    },
+    /// A view or dictionary name was defined twice.
     DuplicateName(String),
+    /// The regex literal failed to compile.
     Regex(String),
+    /// Graph construction rejected the lowered operators.
     Graph(String),
+    /// Syntactically valid AQL outside the supported subset.
     Unsupported(String),
 }
 

@@ -19,31 +19,45 @@ pub enum TokenKind {
     Regex(String),
     /// Integer literal.
     Int(i64),
-    /// Punctuation / operators.
+    /// `(`.
     LParen,
+    /// `)`.
     RParen,
+    /// `,`.
     Comma,
+    /// `;`.
     Semi,
+    /// `.`.
     Dot,
+    /// `=`.
     Eq,
+    /// `!=` / `<>`.
     Ne,
+    /// `<`.
     Lt,
+    /// `<=`.
     Le,
+    /// `>`.
     Gt,
+    /// `>=`.
     Ge,
 }
 
 /// A token with its source offset (for diagnostics).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Token {
+    /// What was lexed.
     pub kind: TokenKind,
+    /// Byte offset in the source.
     pub pos: usize,
 }
 
 /// Lex error.
 #[derive(Debug, Clone)]
 pub struct LexError {
+    /// Byte offset of the offending input.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

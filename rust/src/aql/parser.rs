@@ -12,7 +12,9 @@ use super::lexer::{Token, TokenKind};
 /// Parse error with source position.
 #[derive(Debug, Clone)]
 pub struct ParseErr {
+    /// Byte offset of the offending token.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

@@ -323,6 +323,25 @@ pub struct Engine {
 impl Engine {
     /// Start a multi-query [`CatalogBuilder`] — one engine, many AQL
     /// programs, one shared accelerator image.
+    ///
+    /// ```
+    /// use boost::prelude::*;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let engine = Engine::builder()
+    ///     .register(
+    ///         "caps",
+    ///         "create view Caps as extract regex /[A-Z][a-z]+/ on d.text \
+    ///          as w from Document d; output view Caps;",
+    ///     )
+    ///     .register_builtin("t1")
+    ///     .build()?;
+    /// let caps = engine.query("caps")?.view("Caps")?;
+    /// let result = engine.run_doc(&Document::new(0, "Alice met Bob at IBM"));
+    /// assert_eq!(result[&caps].len(), 2); // Alice, Bob
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn builder() -> CatalogBuilder {
         CatalogBuilder::new()
     }
@@ -563,6 +582,32 @@ impl Engine {
     /// Open a streaming [`Session`] builder: configure worker threads,
     /// bounded queue depth, a [`ResultSink`] and per-view subscriptions,
     /// then `start()` and `push` documents with backpressure.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use boost::prelude::*;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let engine = Engine::compile_aql(
+    ///     "create view Word as extract regex /[a-z]+/ on d.text as w \
+    ///      from Document d; output view Word;",
+    /// )?;
+    /// let sink = Arc::new(CollectSink::default());
+    /// let mut session = engine
+    ///     .session()
+    ///     .threads(2)
+    ///     .queue_depth(4) // ≤ 4 queued + 2 in workers, then push blocks
+    ///     .sink(sink.clone())
+    ///     .start();
+    /// session.push(Document::new(0, "one two"))?;
+    /// session.push(Document::new(1, "three"))?;
+    /// let report = session.finish();
+    /// assert_eq!(report.docs, 2);
+    /// assert_eq!(report.tuples, 3);
+    /// assert_eq!(sink.len(), 2);
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn session(&self) -> SessionBuilder {
         SessionBuilder::new(self.executor.clone(), self.service.clone())
     }
@@ -592,6 +637,21 @@ impl Engine {
     /// this engine runs over [`EngineSpec::Sim`].
     pub fn sim_snapshot(&self) -> Option<crate::runtime::SimSnapshot> {
         self.config.engine.sim_stats().map(|s| s.snapshot())
+    }
+
+    /// Per-shard gauges of the return-to-origin buffer arena
+    /// (checkouts, fresh allocations, local and cross-thread returns).
+    /// The arena is **process-wide** — these counters cover every engine
+    /// and session in the process, not just this one.
+    pub fn arena_shards(&self) -> Vec<crate::metrics::ArenaShardSnapshot> {
+        crate::exec::batch::shard_stats()
+    }
+
+    /// Process-wide arena totals (all shards summed) — after warm-up,
+    /// `fresh` stays flat on both execution routes; `returns_cross`
+    /// counts the buffers that crossed threads and were routed home.
+    pub fn arena_snapshot(&self) -> crate::metrics::ArenaSnapshot {
+        crate::exec::batch::global_arena_stats()
     }
 
     /// Drive a fully-materialized corpus with `threads` workers — a thin
@@ -625,11 +685,17 @@ impl Engine {
 /// Result of a corpus run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// Documents processed.
     pub docs: usize,
+    /// Payload bytes processed.
     pub bytes: usize,
+    /// Total output tuples across views.
     pub tuples: usize,
+    /// Wall-clock duration of the run.
     pub wall: Duration,
+    /// Worker threads used.
     pub threads: usize,
+    /// Accelerator counters, when a service was attached.
     pub accel: Option<AccelSnapshot>,
 }
 

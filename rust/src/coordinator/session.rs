@@ -242,6 +242,12 @@ impl SessionBuilder {
             let handle = std::thread::Builder::new()
                 .name(format!("session-worker-{w}"))
                 .spawn(move || {
+                    // home this worker on the arena shard for its index:
+                    // stable across sessions, so a restarted pipeline's
+                    // worker `w` inherits the buffers its predecessor
+                    // returned (and buffers this worker ships through the
+                    // accelerator come home to the same shard)
+                    crate::exec::batch::pin_thread(crate::exec::batch::ArenaId::for_worker(w));
                     while let Some(doc) = rx.pop() {
                         let result = executor.run_doc(&doc);
                         shared.docs.fetch_add(1, Ordering::Relaxed);

@@ -27,12 +27,15 @@ pub enum CorpusKind {
 /// Generation parameters.
 #[derive(Debug, Clone)]
 pub struct CorpusSpec {
+    /// Text flavour to generate.
     pub kind: CorpusKind,
+    /// Number of documents.
     pub docs: usize,
     /// Target document size in bytes (actual sizes are exact: documents
     /// are padded/trimmed to the target so throughput numbers are
     /// directly comparable to the paper's fixed-size sweeps).
     pub doc_size: usize,
+    /// PRNG seed (fixed per flavour unless overridden).
     pub seed: u64,
 }
 
@@ -86,6 +89,7 @@ impl CorpusSpec {
 /// A generated corpus.
 #[derive(Debug, Clone)]
 pub struct Corpus {
+    /// The generated documents, in id order.
     pub docs: Vec<Document>,
 }
 

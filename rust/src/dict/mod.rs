@@ -29,15 +29,20 @@ pub enum CaseMode {
 /// A named dictionary: entries plus matching configuration.
 #[derive(Debug, Clone)]
 pub struct Dictionary {
+    /// Dictionary name (as referenced from AQL).
     pub name: String,
+    /// The entries, normalized.
     pub entries: Vec<String>,
+    /// Case-folding policy.
     pub case: CaseMode,
 }
 
 /// One dictionary match: the covered span and the entry index.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DictMatch {
+    /// Matched byte range.
     pub span: Span,
+    /// Index of the matched entry.
     pub entry: u32,
 }
 

@@ -1,5 +1,5 @@
-//! Columnar tuple batches and the per-thread buffer arena — the storage
-//! layer of the software executor's hot path.
+//! Columnar tuple batches and the **return-to-origin sharded arena** —
+//! the storage layer of both execution routes' hot paths.
 //!
 //! The seed executor materialized every operator output as `Vec<Tuple>`
 //! with `Tuple = Vec<Value>`: one heap allocation per tuple per operator
@@ -11,10 +11,21 @@
 //!   spans, ints, floats, bools, strings) plus a lazily-materialized null
 //!   bitmap ([`NullMask`], absent in the common all-valid case). A batch
 //!   of `n` span tuples is a single `Vec<Span>` instead of `n` boxed rows.
-//! * [`BatchArena`] — a per-thread pool of recycled column buffers.
-//!   Buffers are checked out when an operator builds its output batch and
-//!   returned (cleared, **not** freed) when the batch drops, so a worker
-//!   thread reaches a steady state of near-zero allocations per document.
+//! * The sharded arena — a small fixed set of process-level buffer pools
+//!   ([`NUM_SHARDS`] mutex-striped freelists) fronted by per-thread
+//!   caches. Every thread is *homed* on one shard ([`ArenaId`]; session
+//!   workers and the accelerator's communication thread pin stable
+//!   shards, everything else is assigned round-robin), checks buffers out
+//!   of its home shard, and every checked-out buffer is **stamped** with
+//!   its origin shard. On drop the buffer is routed **back to its
+//!   origin** — same shard: pushed on the thread-local cache without a
+//!   lock; different shard: one mutex push on the origin's freelist — so
+//!   batches that cross threads (worker → communication thread
+//!   submissions, reply batches, results collected elsewhere) refill the
+//!   pools their *producers* draw from. Both the software route and the
+//!   accelerated route therefore reach a steady state of **zero fresh
+//!   buffer allocations per document**; [`shard_stats`] exposes the
+//!   per-shard gauges that pin the invariant.
 //! * [`TupleRef`] — a cursor over one row of a batch, implementing
 //!   [`RowAccess`] so the scalar expression evaluator runs unchanged over
 //!   both layouts; [`JoinRow`] concatenates two cursors for join
@@ -25,19 +36,26 @@
 
 use std::cell::RefCell;
 use std::cmp::Ordering;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::aog::expr::RowAccess;
 use crate::aog::{FieldType, Schema, Tuple, Value};
+use crate::metrics::{ArenaShardSnapshot, ArenaSnapshot};
 use crate::text::Span;
 
 /// Typed storage for one column of a [`TupleBatch`].
 #[derive(Debug, Clone)]
 pub enum ColumnData {
+    /// Span cells.
     Spans(Vec<Span>),
+    /// Integer cells.
     Ints(Vec<i64>),
+    /// Float cells.
     Floats(Vec<f64>),
+    /// Boolean cells.
     Bools(Vec<bool>),
+    /// String cells (interned).
     Strs(Vec<Arc<str>>),
 }
 
@@ -84,7 +102,6 @@ impl ColumnData {
 /// The shared empty-string placeholder null cells use — a refcount bump
 /// instead of a per-null allocation.
 fn empty_str() -> Arc<str> {
-    use std::sync::OnceLock;
     static EMPTY: OnceLock<Arc<str>> = OnceLock::new();
     EMPTY.get_or_init(|| Arc::from("")).clone()
 }
@@ -116,20 +133,26 @@ impl NullMask {
     }
 }
 
-/// One typed column plus its (usually absent) null bitmap. Data buffers
-/// come from the per-thread [`BatchArena`] and return to it on drop.
+/// One typed column plus its (usually absent) null bitmap. The data
+/// buffer is checked out of the calling thread's home arena shard and is
+/// stamped with that shard's [`ArenaId`]; on drop it is routed back to
+/// its **origin** shard, wherever the drop happens.
 #[derive(Debug)]
 pub struct Column {
     data: ColumnData,
     nulls: Option<NullMask>,
+    /// The shard this column's data buffer was checked out of.
+    origin: ArenaId,
 }
 
 impl Column {
     /// Checked-out empty column of type `ty`.
     fn new(ty: FieldType) -> Column {
+        let (data, origin) = arena_take(ty);
         Column {
-            data: arena_take(ty),
+            data,
             nulls: None,
+            origin,
         }
     }
 
@@ -315,7 +338,7 @@ impl Clone for Column {
 impl Drop for Column {
     fn drop(&mut self) {
         let data = std::mem::replace(&mut self.data, ColumnData::Bools(Vec::new()));
-        arena_recycle(data);
+        arena_recycle(data, self.origin);
     }
 }
 
@@ -326,49 +349,70 @@ impl Drop for Column {
 pub struct TupleBatch {
     columns: Vec<Column>,
     len: usize,
+    /// The shard the batch's column *container* was checked out of (each
+    /// [`Column`] carries its own origin independently).
+    origin: ArenaId,
 }
 
 impl TupleBatch {
     /// Empty batch with one checked-out column per field of `schema`.
     pub fn for_schema(schema: &Schema) -> TupleBatch {
-        let mut columns = arena_take_columns();
+        let (mut columns, origin) = arena_take_columns();
         columns.extend(schema.fields.iter().map(|f| Column::new(f.ty)));
-        TupleBatch { columns, len: 0 }
+        TupleBatch {
+            columns,
+            len: 0,
+            origin,
+        }
     }
 
     /// Empty batch with the same column layout as `src`.
     pub fn like(src: &TupleBatch) -> TupleBatch {
-        let mut columns = arena_take_columns();
+        let (mut columns, origin) = arena_take_columns();
         columns.extend(src.columns.iter().map(|c| Column::new(c.field_type())));
-        TupleBatch { columns, len: 0 }
+        TupleBatch {
+            columns,
+            len: 0,
+            origin,
+        }
     }
 
     /// Empty batch whose layout is `left`'s columns followed by `right`'s
     /// — the join output shape.
     pub fn concat_layout(left: &TupleBatch, right: &TupleBatch) -> TupleBatch {
-        let mut columns = arena_take_columns();
+        let (mut columns, origin) = arena_take_columns();
         columns.extend(
             left.columns
                 .iter()
                 .chain(&right.columns)
                 .map(|c| Column::new(c.field_type())),
         );
-        TupleBatch { columns, len: 0 }
+        TupleBatch {
+            columns,
+            len: 0,
+            origin,
+        }
     }
 
     /// Empty single-span-column batch — the shape of every extraction
     /// leaf, `DocScan` and `Block`.
     pub fn single_span() -> TupleBatch {
-        let mut columns = arena_take_columns();
+        let (mut columns, origin) = arena_take_columns();
         columns.push(Column::new(FieldType::Span));
-        TupleBatch { columns, len: 0 }
+        TupleBatch {
+            columns,
+            len: 0,
+            origin,
+        }
     }
 
     /// Zero-column, zero-row batch.
     pub fn empty() -> TupleBatch {
+        let (columns, origin) = arena_take_columns();
         TupleBatch {
-            columns: arena_take_columns(),
+            columns,
             len: 0,
+            origin,
         }
     }
 
@@ -547,21 +591,25 @@ impl TupleBatch {
 
 impl Clone for TupleBatch {
     fn clone(&self) -> TupleBatch {
-        let mut columns = arena_take_columns();
+        // clones check out of the CLONING thread's home shard: a worker
+        // cloning a reply batch owns the copy outright, while the
+        // original's buffers keep their origin stamp
+        let (mut columns, origin) = arena_take_columns();
         columns.extend(self.columns.iter().cloned());
         TupleBatch {
             columns,
             len: self.len,
+            origin,
         }
     }
 }
 
 impl Drop for TupleBatch {
     fn drop(&mut self) {
-        // drop the columns first (each recycles its data buffer), then
-        // pool the emptied container itself
+        // drop the columns first (each routes its data buffer back to its
+        // origin shard), then send the emptied container home too
         self.columns.clear();
-        arena_recycle_columns(std::mem::take(&mut self.columns));
+        arena_recycle_columns(std::mem::take(&mut self.columns), self.origin);
     }
 }
 
@@ -608,7 +656,9 @@ impl RowAccess for TupleRef<'_> {
 /// evaluate over a candidate pair without building the combined tuple.
 #[derive(Clone, Copy)]
 pub struct JoinRow<'a> {
+    /// Cursor over the left input's row.
     pub left: TupleRef<'a>,
+    /// Cursor over the right input's row.
     pub right: TupleRef<'a>,
 }
 
@@ -625,158 +675,391 @@ impl RowAccess for JoinRow<'_> {
 }
 
 // ---------------------------------------------------------------------------
-// The per-thread arena.
+// The return-to-origin sharded arena.
+//
+// Ownership model: a buffer belongs to the shard it was checked out of,
+// forever. Threads check out of their HOME shard only (thread-local cache
+// first, then the shard freelist, then a fresh allocation), but may drop
+// buffers from any shard — the drop routes the buffer back to its origin.
+// Supply therefore always returns to meet demand: the communication
+// thread releasing a worker's submission batches refills that worker's
+// shard, and a worker releasing the communication thread's reply batches
+// refills the communication shard, so BOTH execution routes stop
+// allocating once warm.
 
-/// Upper bound of pooled buffers per type per thread: enough to cover every
-/// live node slot of a large merged catalog, small enough that an idle
-/// worker pins only a bounded amount of memory.
-const MAX_POOLED: usize = 256;
+/// Number of global arena shards. The last shard is reserved for
+/// accelerator communication threads ([`ArenaId::comm`]); session workers
+/// map onto the rest by worker index ([`ArenaId::for_worker`]), and
+/// unpinned threads are spread round-robin. Sharing a shard is always
+/// correct — it only adds freelist contention.
+pub const NUM_SHARDS: usize = 16;
 
-/// Pools of recycled column buffers, one instance per thread. Checked out
-/// by [`TupleBatch`] constructors, refilled by `Column`/`TupleBatch` drops;
-/// a buffer is cleared on return (len 0, capacity kept), so steady-state
-/// execution re-uses warm capacity instead of round-tripping the global
-/// allocator.
-///
-/// Known limitation: recycling is strictly per-thread, so batches that
-/// migrate threads (accelerator submissions built on a worker but dropped
-/// on the communication thread, and vice versa) refill the *receiving*
-/// thread's pool — the near-zero-alloc steady state is guaranteed only
-/// for the software path, where a document's batches live and die on one
-/// worker. Pools are capped ([`MAX_POOLED`] per type), so migration never
-/// grows memory unboundedly; making the accelerated path allocation-free
-/// would need a return-to-origin or global pool (ROADMAP open item).
+/// Worker shards (everything except the reserved communication shard).
+const WORKER_SHARDS: usize = NUM_SHARDS - 1;
+
+/// Upper bound of cached buffers per type in one thread-local cache —
+/// large enough to cover every live node slot of a big merged catalog,
+/// so a warmed worker's whole per-document working set recycles without
+/// touching the shard mutex.
+const LOCAL_MAX: usize = 256;
+
+/// Upper bound of pooled buffers per type in one shard's global
+/// freelist. Returns beyond the cap free the buffer (bounded memory).
+const SHARD_MAX: usize = 512;
+
+/// Stable identity of one arena shard — stamped into every checked-out
+/// [`TupleBatch`]/[`Column`] buffer so `Drop` can route it home.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaId(u16);
+
+impl ArenaId {
+    /// The shard session worker `w` pins ([`pin_thread`]): stable across
+    /// sessions, so a new session's worker pool re-uses the buffers the
+    /// previous session's workers returned.
+    pub fn for_worker(w: usize) -> ArenaId {
+        ArenaId((w % WORKER_SHARDS) as u16)
+    }
+
+    /// The shard reserved for accelerator communication threads, kept
+    /// apart from the worker shards so package post-processing never
+    /// contends with worker checkouts.
+    pub fn comm() -> ArenaId {
+        ArenaId((NUM_SHARDS - 1) as u16)
+    }
+
+    /// This id's shard index (`0..NUM_SHARDS`).
+    pub fn shard(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One set of typed freelists — the shape shared by the shard-global
+/// pools and the thread-local caches.
 #[derive(Debug, Default)]
-pub struct BatchArena {
+struct Pools {
     spans: Vec<Vec<Span>>,
     ints: Vec<Vec<i64>>,
     floats: Vec<Vec<f64>>,
     bools: Vec<Vec<bool>>,
     strs: Vec<Vec<Arc<str>>>,
     columns: Vec<Vec<Column>>,
+}
+
+impl Pools {
+    fn take(&mut self, ty: FieldType) -> Option<ColumnData> {
+        match ty {
+            FieldType::Span => self.spans.pop().map(ColumnData::Spans),
+            FieldType::Int => self.ints.pop().map(ColumnData::Ints),
+            FieldType::Float => self.floats.pop().map(ColumnData::Floats),
+            FieldType::Bool => self.bools.pop().map(ColumnData::Bools),
+            FieldType::Str => self.strs.pop().map(ColumnData::Strs),
+        }
+    }
+
+    /// Park `data` (already cleared) unless the per-type list is at
+    /// `cap`; a rejected buffer is handed back for the caller to free or
+    /// overflow elsewhere.
+    ///
+    /// Zero-capacity buffers are pooled too: a column that stays empty
+    /// all run still checks a buffer out per document, and a pool miss
+    /// counts as `fresh` — supply must match demand or the steady-state
+    /// invariant would fail on never-matching columns.
+    fn put(&mut self, data: ColumnData, cap: usize) -> Option<ColumnData> {
+        match data {
+            ColumnData::Spans(v) if self.spans.len() < cap => self.spans.push(v),
+            ColumnData::Ints(v) if self.ints.len() < cap => self.ints.push(v),
+            ColumnData::Floats(v) if self.floats.len() < cap => self.floats.push(v),
+            ColumnData::Bools(v) if self.bools.len() < cap => self.bools.push(v),
+            ColumnData::Strs(v) if self.strs.len() < cap => self.strs.push(v),
+            full => return Some(full),
+        }
+        None
+    }
+
+    /// Buffers parked across the five typed lists (column containers
+    /// excluded, matching the original per-thread gauge).
+    fn count(&self) -> usize {
+        self.spans.len() + self.ints.len() + self.floats.len() + self.bools.len() + self.strs.len()
+    }
+
+    /// Move everything from `src` into `self` up to `cap` per type,
+    /// freeing the overflow — how a dying thread's local cache drains
+    /// into its home shard.
+    fn absorb(&mut self, src: &mut Pools, cap: usize) {
+        fn move_up_to<T>(dst: &mut Vec<T>, src: &mut Vec<T>, cap: usize) {
+            while dst.len() < cap {
+                match src.pop() {
+                    Some(v) => dst.push(v),
+                    None => break,
+                }
+            }
+            src.clear(); // free the overflow
+        }
+        move_up_to(&mut self.spans, &mut src.spans, cap);
+        move_up_to(&mut self.ints, &mut src.ints, cap);
+        move_up_to(&mut self.floats, &mut src.floats, cap);
+        move_up_to(&mut self.bools, &mut src.bools, cap);
+        move_up_to(&mut self.strs, &mut src.strs, cap);
+        move_up_to(&mut self.columns, &mut src.columns, cap);
+    }
+}
+
+/// One global shard: a mutex-striped freelist plus its gauges. The
+/// counters are plain atomics so snapshots never take the pool lock on
+/// the hot path's behalf.
+#[derive(Debug, Default)]
+struct Shard {
+    pools: Mutex<Pools>,
+    checkouts: AtomicU64,
+    fresh: AtomicU64,
+    returns_local: AtomicU64,
+    returns_cross: AtomicU64,
+}
+
+fn shards() -> &'static [Shard] {
+    static SHARDS: OnceLock<Vec<Shard>> = OnceLock::new();
+    SHARDS.get_or_init(|| (0..NUM_SHARDS).map(|_| Shard::default()).collect())
+}
+
+/// The per-thread front of the arena: a home shard plus a lock-free cache
+/// of home-origin buffers. Checkout order is cache → home shard freelist
+/// → fresh allocation; returns of home-origin buffers go to the cache,
+/// returns of foreign buffers go straight to their origin shard.
+struct LocalArena {
+    home: ArenaId,
+    cache: Pools,
+    /// Buffer checkouts performed by this thread.
     checkouts: u64,
+    /// Checkouts by this thread that had to allocate fresh.
     fresh: u64,
 }
 
-impl BatchArena {
-    fn take(&mut self, ty: FieldType) -> ColumnData {
+impl LocalArena {
+    fn new() -> LocalArena {
+        // unpinned threads (tests, main, ad-hoc std::thread workers) are
+        // spread round-robin over the worker shards
+        static NEXT_HOME: AtomicUsize = AtomicUsize::new(0);
+        LocalArena {
+            home: ArenaId::for_worker(NEXT_HOME.fetch_add(1, AtomicOrdering::Relaxed)),
+            cache: Pools::default(),
+            checkouts: 0,
+            fresh: 0,
+        }
+    }
+
+    fn take(&mut self, ty: FieldType) -> (ColumnData, ArenaId) {
         self.checkouts += 1;
-        macro_rules! pool {
-            ($pool:expr, $variant:path) => {
-                match $pool.pop() {
-                    Some(v) => $variant(v),
-                    None => {
-                        self.fresh += 1;
-                        $variant(Vec::new())
-                    }
-                }
-            };
+        if let Some(d) = self.cache.take(ty) {
+            // the common steady-state path: no lock, no shared atomics —
+            // cache hits are visible in the per-thread ArenaStats only
+            return (d, self.home);
         }
-        match ty {
-            FieldType::Span => pool!(self.spans, ColumnData::Spans),
-            FieldType::Int => pool!(self.ints, ColumnData::Ints),
-            FieldType::Float => pool!(self.floats, ColumnData::Floats),
-            FieldType::Bool => pool!(self.bools, ColumnData::Bools),
-            FieldType::Str => pool!(self.strs, ColumnData::Strs),
+        let shard = &shards()[self.home.shard()];
+        shard.checkouts.fetch_add(1, AtomicOrdering::Relaxed);
+        if let Some(d) = shard.pools.lock().unwrap().take(ty) {
+            return (d, self.home);
         }
+        self.fresh += 1;
+        shard.fresh.fetch_add(1, AtomicOrdering::Relaxed);
+        (fresh_data(ty), self.home)
     }
 
-    fn put(&mut self, mut data: ColumnData) {
-        // pool even zero-capacity buffers: a column that stays empty all
-        // run still checks a buffer out per document, and a pool miss
-        // counts as `fresh` — supply must match demand or the
-        // steady-state invariant (fresh stops growing after warm-up)
-        // would fail on never-matching columns.
-        // clear before pooling: for string columns this releases the Arc
-        // references immediately instead of pinning document text
-        data.clear();
-        match data {
-            ColumnData::Spans(v) if self.spans.len() < MAX_POOLED => self.spans.push(v),
-            ColumnData::Ints(v) if self.ints.len() < MAX_POOLED => self.ints.push(v),
-            ColumnData::Floats(v) if self.floats.len() < MAX_POOLED => self.floats.push(v),
-            ColumnData::Bools(v) if self.bools.len() < MAX_POOLED => self.bools.push(v),
-            ColumnData::Strs(v) if self.strs.len() < MAX_POOLED => self.strs.push(v),
-            _ => {} // pool full: let the buffer free
+    fn put(&mut self, data: ColumnData, origin: ArenaId) {
+        let shard = &shards()[origin.shard()];
+        if origin == self.home {
+            shard.returns_local.fetch_add(1, AtomicOrdering::Relaxed);
+            if let Some(rejected) = self.cache.put(data, LOCAL_MAX) {
+                // local cache full: overflow into the home freelist
+                let _ = shard.pools.lock().unwrap().put(rejected, SHARD_MAX);
+            }
+        } else {
+            // return-to-origin: one mutex push on the owning shard
+            shard.returns_cross.fetch_add(1, AtomicOrdering::Relaxed);
+            let _ = shard.pools.lock().unwrap().put(data, SHARD_MAX);
         }
     }
 
-    fn take_columns(&mut self) -> Vec<Column> {
-        self.columns.pop().unwrap_or_default()
+    fn take_columns(&mut self) -> (Vec<Column>, ArenaId) {
+        if let Some(v) = self.cache.columns.pop() {
+            return (v, self.home);
+        }
+        let shard = &shards()[self.home.shard()];
+        let pooled = shard.pools.lock().unwrap().columns.pop();
+        (pooled.unwrap_or_default(), self.home)
     }
 
-    fn put_columns(&mut self, v: Vec<Column>) {
+    fn put_columns(&mut self, v: Vec<Column>, origin: ArenaId) {
         debug_assert!(v.is_empty());
-        if v.capacity() > 0 && self.columns.len() < MAX_POOLED {
-            self.columns.push(v);
+        if v.capacity() == 0 {
+            return; // nothing was ever allocated; pooling it gains nothing
         }
-    }
-
-    fn stats(&self) -> ArenaStats {
-        ArenaStats {
-            checkouts: self.checkouts,
-            fresh: self.fresh,
-            pooled: self.spans.len()
-                + self.ints.len()
-                + self.floats.len()
-                + self.bools.len()
-                + self.strs.len(),
+        if origin == self.home && self.cache.columns.len() < LOCAL_MAX {
+            self.cache.columns.push(v);
+            return;
+        }
+        let pools = &mut *shards()[origin.shard()].pools.lock().unwrap();
+        if pools.columns.len() < SHARD_MAX {
+            pools.columns.push(v);
         }
     }
 }
 
-/// Gauges of the calling thread's arena.
+impl Drop for LocalArena {
+    fn drop(&mut self) {
+        // thread exit: drain the local cache into the home shard so the
+        // next thread homed here (e.g. the same worker index of the next
+        // session) inherits the warm buffers
+        let mut cache = std::mem::take(&mut self.cache);
+        shards()[self.home.shard()]
+            .pools
+            .lock()
+            .unwrap()
+            .absorb(&mut cache, SHARD_MAX);
+    }
+}
+
+fn fresh_data(ty: FieldType) -> ColumnData {
+    match ty {
+        FieldType::Span => ColumnData::Spans(Vec::new()),
+        FieldType::Int => ColumnData::Ints(Vec::new()),
+        FieldType::Float => ColumnData::Floats(Vec::new()),
+        FieldType::Bool => ColumnData::Bools(Vec::new()),
+        FieldType::Str => ColumnData::Strs(Vec::new()),
+    }
+}
+
+/// Gauges of the calling thread's view of the arena.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ArenaStats {
-    /// Buffer checkouts since the thread started.
+    /// Buffer checkouts performed by this thread.
     pub checkouts: u64,
-    /// Checkouts that had to allocate a fresh buffer (pool miss). After
-    /// warm-up this stops growing — the recycling invariant the
+    /// Checkouts by this thread that had to allocate a fresh buffer
+    /// (both the local cache and the home shard freelist were empty).
+    /// After warm-up this stops growing — the recycling invariant the
     /// `bench-alloc` tests pin.
     pub fresh: u64,
-    /// Buffers currently parked in the pools.
+    /// Buffers currently parked in this thread's local cache plus its
+    /// home shard's freelist.
     pub pooled: usize,
 }
 
 thread_local! {
-    static ARENA: RefCell<BatchArena> = RefCell::new(BatchArena::default());
+    static ARENA: RefCell<LocalArena> = RefCell::new(LocalArena::new());
 }
 
-fn arena_take(ty: FieldType) -> ColumnData {
+/// Home the calling thread on shard `id`, flushing any previously cached
+/// buffers to the old home first. Session workers call this with
+/// [`ArenaId::for_worker`] and the accelerator communication thread with
+/// [`ArenaId::comm`], so pool placement is stable across session
+/// restarts; everything else keeps its round-robin default.
+pub fn pin_thread(id: ArenaId) {
+    let _ = ARENA.try_with(|a| {
+        let mut a = a.borrow_mut();
+        if a.home != id {
+            let mut cache = std::mem::take(&mut a.cache);
+            shards()[a.home.shard()]
+                .pools
+                .lock()
+                .unwrap()
+                .absorb(&mut cache, SHARD_MAX);
+            a.home = id;
+        }
+    });
+}
+
+fn arena_take(ty: FieldType) -> (ColumnData, ArenaId) {
     ARENA
         .try_with(|a| a.borrow_mut().take(ty))
-        .unwrap_or_else(|_| match ty {
-            // thread teardown: the arena is gone, allocate plainly
-            FieldType::Span => ColumnData::Spans(Vec::new()),
-            FieldType::Int => ColumnData::Ints(Vec::new()),
-            FieldType::Float => ColumnData::Floats(Vec::new()),
-            FieldType::Bool => ColumnData::Bools(Vec::new()),
-            FieldType::Str => ColumnData::Strs(Vec::new()),
-        })
+        // thread teardown: the local arena is gone; allocate plainly and
+        // stamp shard 0 so the eventual drop still parks the buffer
+        .unwrap_or_else(|_| (fresh_data(ty), ArenaId::for_worker(0)))
 }
 
-fn arena_recycle(data: ColumnData) {
-    let _ = ARENA.try_with(|a| a.borrow_mut().put(data));
+fn arena_recycle(mut data: ColumnData, origin: ArenaId) {
+    // clear before routing: for string columns this releases the Arc
+    // references immediately instead of pinning document text in a pool
+    data.clear();
+    let mut slot = Some(data);
+    let alive = ARENA.try_with(|a| {
+        a.borrow_mut().put(slot.take().expect("routed once"), origin);
+    });
+    if alive.is_err() {
+        // thread teardown: route straight to the origin shard (a static,
+        // still very much alive), counted as a cross-thread return
+        if let Some(data) = slot.take() {
+            let shard = &shards()[origin.shard()];
+            shard.returns_cross.fetch_add(1, AtomicOrdering::Relaxed);
+            let _ = shard.pools.lock().unwrap().put(data, SHARD_MAX);
+        }
+    }
 }
 
-fn arena_take_columns() -> Vec<Column> {
+fn arena_take_columns() -> (Vec<Column>, ArenaId) {
     ARENA
         .try_with(|a| a.borrow_mut().take_columns())
-        .unwrap_or_default()
+        .unwrap_or_else(|_| (Vec::new(), ArenaId::for_worker(0)))
 }
 
-fn arena_recycle_columns(v: Vec<Column>) {
-    let _ = ARENA.try_with(|a| a.borrow_mut().put_columns(v));
+fn arena_recycle_columns(v: Vec<Column>, origin: ArenaId) {
+    let mut slot = Some(v);
+    let alive = ARENA.try_with(|a| {
+        a.borrow_mut()
+            .put_columns(slot.take().expect("routed once"), origin);
+    });
+    if alive.is_err() {
+        if let Some(v) = slot.take() {
+            if v.capacity() > 0 {
+                let pools = &mut *shards()[origin.shard()].pools.lock().unwrap();
+                if pools.columns.len() < SHARD_MAX {
+                    pools.columns.push(v);
+                }
+            }
+        }
+    }
 }
 
-/// Snapshot the calling thread's arena gauges.
+/// Snapshot the calling thread's arena gauges ([`ArenaStats`]): its own
+/// checkout/fresh counters plus the buffers parked in its local cache and
+/// home shard.
 pub fn arena_stats() -> ArenaStats {
     ARENA
-        .try_with(|a| a.borrow().stats())
+        .try_with(|a| {
+            let a = a.borrow();
+            let shard_pooled = shards()[a.home.shard()].pools.lock().unwrap().count();
+            ArenaStats {
+                checkouts: a.checkouts,
+                fresh: a.fresh,
+                pooled: a.cache.count() + shard_pooled,
+            }
+        })
         .unwrap_or(ArenaStats {
             checkouts: 0,
             fresh: 0,
             pooled: 0,
         })
+}
+
+/// Snapshot every shard's gauges, in shard order — the process-level view
+/// of checkout/fresh/return traffic (`repro bench` reports these, and the
+/// accelerated-path steady-state tests assert on them).
+pub fn shard_stats() -> Vec<ArenaShardSnapshot> {
+    shards()
+        .iter()
+        .enumerate()
+        .map(|(i, s)| ArenaShardSnapshot {
+            shard: i,
+            checkouts: s.checkouts.load(AtomicOrdering::Relaxed),
+            fresh: s.fresh.load(AtomicOrdering::Relaxed),
+            returns_local: s.returns_local.load(AtomicOrdering::Relaxed),
+            returns_cross: s.returns_cross.load(AtomicOrdering::Relaxed),
+            pooled: s.pools.lock().unwrap().count(),
+        })
+        .collect()
+}
+
+/// Process-wide arena totals (all shards summed).
+pub fn global_arena_stats() -> ArenaSnapshot {
+    ArenaSnapshot::from_shards(&shard_stats())
 }
 
 #[cfg(test)]
@@ -932,6 +1215,82 @@ mod tests {
         let b = a.clone();
         drop(a);
         assert_eq!(b.to_tuples(), vec![vec![Value::Span(Span::new(2, 4))]]);
+    }
+
+    #[test]
+    fn arena_id_mapping() {
+        // worker ids wrap over the worker shards and never land on the
+        // reserved communication shard
+        for w in 0..3 * NUM_SHARDS {
+            let id = ArenaId::for_worker(w);
+            assert!(id.shard() < NUM_SHARDS - 1, "worker {w} on shard {}", id.shard());
+            assert_ne!(id, ArenaId::comm());
+        }
+        assert_eq!(ArenaId::for_worker(0), ArenaId::for_worker(NUM_SHARDS - 1));
+        assert_eq!(ArenaId::comm().shard(), NUM_SHARDS - 1);
+        assert_eq!(shard_stats().len(), NUM_SHARDS);
+    }
+
+    #[test]
+    fn same_thread_drop_counts_local_return() {
+        // libtest gives every #[test] its own thread, so pinning here
+        // cannot leak into other tests
+        pin_thread(ArenaId::for_worker(9));
+        let home = ArenaId::for_worker(9).shard();
+        let before = shard_stats()[home];
+        drop(TupleBatch::from_rows(
+            &Schema::of(&[("m", FieldType::Span)]),
+            &[vec![Value::Span(Span::new(0, 1))]],
+        ));
+        let after = shard_stats()[home];
+        assert!(after.checkouts > before.checkouts);
+        assert!(
+            after.returns_local > before.returns_local,
+            "a home-origin buffer dropped on its own thread is a local return"
+        );
+    }
+
+    #[test]
+    fn cross_thread_drop_routes_buffers_back_to_origin_shard() {
+        pin_thread(ArenaId::for_worker(12));
+        let origin = ArenaId::for_worker(12).shard();
+        let b = TupleBatch::from_rows(
+            &Schema::of(&[("m", FieldType::Span), ("n", FieldType::Int)]),
+            &[vec![Value::Span(Span::new(2, 4)), Value::Int(7)]],
+        );
+        let before = shard_stats()[origin];
+        std::thread::spawn(move || {
+            // a differently-homed thread (the communication shard) drops
+            // the batch: every buffer must be routed home, not absorbed
+            // into this thread's pools
+            pin_thread(ArenaId::comm());
+            drop(b);
+        })
+        .join()
+        .unwrap();
+        let after = shard_stats()[origin];
+        assert!(
+            after.returns_cross >= before.returns_cross + 2,
+            "both column buffers must come home as cross-thread returns \
+             (before {}, after {})",
+            before.returns_cross,
+            after.returns_cross
+        );
+    }
+
+    #[test]
+    fn global_stats_aggregate_shards() {
+        drop(TupleBatch::single_span());
+        // aggregate the SAME snapshot (concurrent tests keep ticking the
+        // live counters, so two reads are not comparable)
+        let shards = shard_stats();
+        let total = crate::metrics::ArenaSnapshot::from_shards(&shards);
+        assert_eq!(
+            total.checkouts,
+            shards.iter().map(|s| s.checkouts).sum::<u64>()
+        );
+        assert!(total.checkouts > 0);
+        assert!(global_arena_stats().checkouts >= total.checkouts);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //!
 //! Execution is **columnar**: operators consume and produce
 //! [`TupleBatch`]es (one typed buffer per column, recycled through the
-//! per-thread [`batch::BatchArena`]) instead of `Vec<Tuple>` rows — see
+//! return-to-origin sharded arena) instead of `Vec<Tuple>` rows — see
 //! [`batch`] for the layout and arena lifecycle. The seed's row-at-a-time
 //! pipeline survives behind [`ExecStrategy::LegacyRows`] as the reference
 //! baseline for differential tests and the old-vs-new benchmark; rows
@@ -16,7 +16,7 @@ pub mod batch;
 pub mod operators;
 pub mod profiler;
 
-pub use batch::{ArenaStats, BatchArena, ColumnData, TupleBatch, TupleRef};
+pub use batch::{ArenaId, ArenaStats, ColumnData, TupleBatch, TupleRef};
 pub use operators::{cmp_tuples, cmp_values};
 pub use profiler::{Profile, Profiler};
 
@@ -459,6 +459,7 @@ impl Index<&str> for DocResult {
 )]
 #[derive(Debug, Clone, Default)]
 pub struct DocOutput {
+    /// Tuples per output view, keyed by view name.
     pub views: HashMap<String, Vec<Tuple>>,
 }
 
@@ -471,8 +472,8 @@ impl DocOutput {
 }
 
 /// Evaluates a graph over documents. Stateless w.r.t. documents, so one
-/// instance is shared by all worker threads (each thread recycles its own
-/// [`batch::BatchArena`] buffers).
+/// instance is shared by all worker threads (each thread recycles column
+/// buffers through its home shard of the [`batch`] arena).
 pub struct Executor {
     graph: Arc<Graph>,
     profiler: Arc<Profiler>,

@@ -106,8 +106,11 @@ impl Profiler {
 /// Aggregate for one operator family.
 #[derive(Debug, Clone, Default)]
 pub struct OpProfile {
+    /// Accumulated wall nanoseconds.
     pub ns: u64,
+    /// Graph nodes in this family.
     pub nodes: usize,
+    /// Share of total recorded time (0..=1).
     pub fraction: f64,
 }
 

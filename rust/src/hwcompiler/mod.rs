@@ -54,8 +54,11 @@ pub const STREAMS: usize = 4;
 /// Identifies one compiled artifact variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ArtifactKey {
+    /// Padded machine count of the geometry.
     pub machines: usize,
+    /// Padded per-machine state count.
     pub states: usize,
+    /// Bytes per stream.
     pub block: usize,
 }
 
@@ -86,7 +89,9 @@ impl ArtifactKey {
 /// spans from reported `(offset, state)` pairs).
 #[derive(Clone)]
 pub enum MatcherRef {
+    /// Regex machine: ends are mapped back via the reverse DFA.
     Regex(Arc<CompiledRegex>),
+    /// Dictionary machine: `(end, state)` pairs map to entry matches.
     Dict(Arc<AhoCorasick>),
 }
 
@@ -104,9 +109,11 @@ impl fmt::Debug for MatcherRef {
 pub struct Machine {
     /// Node in the subgraph body whose output this machine produces.
     pub body_node: NodeId,
+    /// How the post-stage decodes this machine's hits.
     pub matcher: MatcherRef,
     /// `num_states × 256` table (state 0 dead, 1 start, NUL resets).
     pub table: Vec<u32>,
+    /// States actually used (before geometry padding).
     pub num_states: usize,
     /// Per-state accept flags.
     pub accept: Vec<bool>,
@@ -115,7 +122,9 @@ pub struct Machine {
 /// A compiled accelerator configuration for one subgraph.
 #[derive(Debug, Clone)]
 pub struct AccelConfig {
+    /// The subgraph this image serves.
     pub subgraph_id: usize,
+    /// One machine per extraction leaf.
     pub machines: Vec<Machine>,
     /// The subgraph body (extraction leaves + relational operators).
     pub body: Arc<Graph>,

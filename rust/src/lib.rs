@@ -102,13 +102,20 @@
 //! Code that genuinely needs the old shape can call
 //! `DocResult::into_output()` during the transition.
 //!
-//! ## The `TupleBatch` boundary
+//! ## The `TupleBatch` boundary and the return-to-origin arena
 //!
 //! Internally the software executor is **columnar**: every operator
 //! consumes and produces [`exec::TupleBatch`]es — one typed buffer per
 //! column (spans/ints/floats/bools/strings + a lazily-allocated null
-//! bitmap), with buffers recycled through a per-thread arena
-//! ([`exec::batch`]) instead of allocating per tuple per operator. Rows
+//! bitmap), with buffers recycled through a process-level **sharded
+//! arena** ([`exec::batch`]) instead of allocating per tuple per
+//! operator. Every thread is homed on one shard (session workers and the
+//! accelerator's communication thread pin stable shards), every
+//! checked-out buffer is stamped with its origin shard, and dropping a
+//! buffer routes it **back to its origin** — so batches that cross the
+//! HW/SW boundary (submissions, replies, collected results) refill the
+//! pools their producers draw from, and *both* execution routes serve a
+//! warm document with zero fresh buffer allocations. Rows
 //! (`Tuple = Vec<Value>`) exist only at the API boundary: a `DocResult`
 //! holds batches and materializes `Vec<Tuple>` views **lazily on first
 //! row-shaped access** (`result[&handle]`, `result.views()`, view
@@ -117,9 +124,10 @@
 //! seed's row-at-a-time pipeline survives behind
 //! [`exec::ExecStrategy::LegacyRows`] purely as the reference baseline
 //! for the columnar differential suite (`rust/tests/columnar.rs`) and
-//! `repro bench`'s old-vs-new measurement (`BENCH_4.json`); see
+//! `repro bench`'s old-vs-new measurement (`BENCH_5.json`); see
 //! `PERFORMANCE.md` at the repo root for the layout, the arena lifecycle
-//! and how to read the benchmark output.
+//! and how to read the benchmark output, and `ARCHITECTURE.md` for how
+//! the modules map onto the paper.
 //!
 //! The "reconfigurable device" of the paper (a Stratix IV FPGA) is realised
 //! as an AOT-compiled JAX/Pallas byte-stream DFA kernel executed through the
@@ -157,6 +165,8 @@
 //!   as a JAX function.
 //! * L1 (build time): `python/compile/kernels/dfa_scan.py` — the Pallas
 //!   multi-machine DFA scan kernel.
+
+#![warn(missing_docs)]
 
 /// Counting global allocator (see `util::alloc`): lets `repro bench` and
 /// the columnar tests report measured allocations/document.

@@ -12,7 +12,7 @@
 //! repro run       --query t1 --mode single --engine pjrt [...]     end-to-end
 //! repro run       --queries t1,t2,t3 [...]  one engine, many queries, one pass
 //! repro stream    --query t1 [--threads T --queue Q --per-doc]     stdin firehose
-//! repro bench     [--json FILE]         perf trajectory rows → BENCH_4.json
+//! repro bench     [--json FILE]         perf trajectory rows → BENCH_5.json
 //! ```
 
 use std::collections::HashMap;
@@ -86,8 +86,10 @@ stream reads one document per stdin line through a Session, e.g.:
   --view <name>          print each match of this output view
 bench measures software vs sim-accelerated, single-query vs merged catalog,
 and columnar vs the legacy row pipeline (old-vs-new, same run); with
---features bench-alloc it also reports measured allocations/document.
-Machine-readable rows always land in BENCH_4.json:
+--features bench-alloc it also reports measured allocations/document PER
+PATH (legacy rows, columnar software, sim-accelerated) plus the arena's
+fresh-buffer and return-to-origin gauges.
+Machine-readable rows always land in BENCH_5.json:
   --json <file>          override the output path";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -501,7 +503,9 @@ fn cmd_run_catalog(names: &[String], flags: &HashMap<String, String>) -> Result<
 
 /// Steady-state allocations per document on single-threaded `run_doc`
 /// (bench-alloc builds only) — the shared protocol in
-/// `boost::util::alloc::allocations_per_unit`.
+/// `boost::util::alloc::allocations_per_unit`. For accelerated engines
+/// the count covers the whole process, communication thread included, so
+/// the number is honest about what the path really costs.
 #[cfg(feature = "bench-alloc")]
 fn allocs_per_doc(engine: &Engine, corpus: &boost::corpus::Corpus, reps: usize) -> f64 {
     boost::util::alloc::allocations_per_unit(
@@ -515,12 +519,33 @@ fn allocs_per_doc(engine: &Engine, corpus: &boost::corpus::Corpus, reps: usize) 
     )
 }
 
+/// Steady-state fresh **arena** (column-buffer) allocations per document:
+/// warm one unmeasured pass, then difference the process-wide shard
+/// `fresh` counters over `reps` measured passes. Zero on both execution
+/// routes once the return-to-origin arena is warm.
+#[cfg(feature = "bench-alloc")]
+fn arena_fresh_per_doc(engine: &Engine, corpus: &boost::corpus::Corpus, reps: usize) -> f64 {
+    for d in &corpus.docs {
+        let _ = engine.run_doc(d); // warm-up, unmeasured
+    }
+    let before = engine.arena_snapshot().fresh;
+    for _ in 0..reps.max(1) {
+        for d in &corpus.docs {
+            let _ = engine.run_doc(d);
+        }
+    }
+    let after = engine.arena_snapshot().fresh;
+    (after - before) as f64 / (reps.max(1) * corpus.docs.len().max(1)) as f64
+}
+
 /// `repro bench`: the perf-trajectory rows — docs/sec and MB/s for
 /// software vs sim-accelerated execution, each query alone vs the merged
 /// T1–T5 catalog, and the columnar executor vs the legacy row pipeline
-/// (old-vs-new, measured in the same run) — serialized to `BENCH_4.json`
+/// (old-vs-new, measured in the same run) — serialized to `BENCH_5.json`
 /// (override with `--json <file>`). With `--features bench-alloc`, also
-/// reports measured steady-state allocations/document on T1.
+/// reports measured steady-state allocations/document on T1 for every
+/// path — legacy rows, columnar software, and the sim-accelerated route —
+/// plus the arena's fresh-buffer-per-doc and return-to-origin gauges.
 fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     let threads: usize = flags
         .get("threads")
@@ -620,8 +645,10 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         columnar_dps, legacy_dps, columnar_speedup,
     );
 
-    // steady-state allocations/document on T1, old vs new (measured only
-    // when the counting allocator is compiled in)
+    // steady-state allocations/document on T1, per path (measured only
+    // when the counting allocator is compiled in): legacy rows vs the
+    // columnar software route vs the sim-accelerated route, plus the
+    // arena's own fresh-buffer and return-to-origin gauges
     #[cfg(feature = "bench-alloc")]
     let alloc_json = {
         let q = boost::queries::builtin("t1").unwrap();
@@ -631,12 +658,24 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         let leg = Engine::with_config(&q.aql, EngineConfig::legacy_rows())
             .map_err(|e| e.to_string())?;
         let col = Engine::compile_aql(&q.aql).map_err(|e| e.to_string())?;
+        let sim = Engine::with_config(&q.aql, EngineConfig::simulated(sim_mode))
+            .map_err(|e| e.to_string())?;
         let legacy_apd = allocs_per_doc(&leg, &alloc_corpus, 3);
         let columnar_apd = allocs_per_doc(&col, &alloc_corpus, 3);
+        let sim_apd = allocs_per_doc(&sim, &alloc_corpus, 3);
+        let columnar_afd = arena_fresh_per_doc(&col, &alloc_corpus, 3);
+        let sim_afd = arena_fresh_per_doc(&sim, &alloc_corpus, 3);
+        let arena = sim.arena_snapshot();
+        sim.shutdown();
         println!(
             "  allocations/doc (t1, steady state): legacy {legacy_apd:.0}, \
-             columnar {columnar_apd:.0} ({:.1}x fewer)",
+             columnar {columnar_apd:.0} ({:.1}x fewer), sim-accel {sim_apd:.0}",
             legacy_apd / columnar_apd,
+        );
+        println!(
+            "  arena fresh buffers/doc: columnar {columnar_afd:.2}, \
+             sim-accel {sim_afd:.2} (cross-thread returns routed home: {})",
+            arena.returns_cross,
         );
         // the alloc measurement uses its own (smaller, single-threaded)
         // corpus — record it so the committed number documents its own
@@ -646,7 +685,12 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
              \"kind\": \"news\"}}, \
              \"t1_legacy_allocs_per_doc\": {legacy_apd:.2}, \
              \"t1_columnar_allocs_per_doc\": {columnar_apd:.2}, \
+             \"t1_sim_allocs_per_doc\": {sim_apd:.2}, \
+             \"t1_columnar_arena_fresh_per_doc\": {columnar_afd:.4}, \
+             \"t1_sim_arena_fresh_per_doc\": {sim_afd:.4}, \
+             \"arena_returns_cross\": {}, \
              \"reduction\": {:.2}}}",
+            arena.returns_cross,
             legacy_apd / columnar_apd,
         )
     };
@@ -656,10 +700,10 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     // machine-readable trajectory point
     let path = match flags.get("json") {
         Some(p) if !p.is_empty() => p.as_str(),
-        _ => "BENCH_4.json",
+        _ => "BENCH_5.json",
     };
     let mut json = String::new();
-    json.push_str("{\n  \"schema\": \"boost-bench-v2\",\n  \"measured\": true,\n");
+    json.push_str("{\n  \"schema\": \"boost-bench-v3\",\n  \"measured\": true,\n");
     json.push_str(&format!(
         "  \"corpus\": {{\"docs\": {}, \"doc_size\": {doc_size}, \"kind\": \"{kind}\"}},\n",
         corpus.docs.len(),

@@ -1,5 +1,5 @@
-//! Lightweight counters for the accelerator service, bounded queues, and
-//! end-to-end runs.
+//! Lightweight counters for the accelerator service, bounded queues,
+//! arena shards, and end-to-end runs.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
@@ -62,11 +62,15 @@ impl QueueStats {
 /// A point-in-time copy of [`QueueStats`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct QueueSnapshot {
+    /// Items accepted over the queue's lifetime.
     pub pushed: u64,
+    /// Producer stalls (pushes that found the queue full).
     pub stalls: u64,
     /// Total producer-blocked wall time, ns.
     pub blocked_ns: u64,
+    /// Items currently queued.
     pub depth: u64,
+    /// Maximum observed depth.
     pub high_water: u64,
 }
 
@@ -96,13 +100,21 @@ pub struct AccelMetrics {
 /// A point-in-time copy of [`AccelMetrics`].
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct AccelSnapshot {
+    /// Work packages dispatched.
     pub packages: u64,
+    /// Documents processed.
     pub docs: u64,
+    /// Payload bytes shipped.
     pub bytes: u64,
+    /// Hit events returned.
     pub hits: u64,
+    /// Wall nanoseconds in engine execution.
     pub engine_wall_ns: u64,
+    /// Wall nanoseconds in the post-stage.
     pub post_wall_ns: u64,
+    /// Modeled FPGA nanoseconds.
     pub modeled_ns: u64,
+    /// Simulated device cycles.
     pub cycles: u64,
 }
 
@@ -164,6 +176,68 @@ impl AccelSnapshot {
     }
 }
 
+/// Point-in-time gauges of ONE global arena shard (see
+/// [`crate::exec::batch`] for the sharded return-to-origin arena these
+/// describe). Produced by [`crate::exec::batch::shard_stats`]; one entry
+/// per shard, in shard order.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaShardSnapshot {
+    /// Shard index (stable for the life of the process).
+    pub shard: usize,
+    /// Buffer checkouts that reached this shard — freelist hits plus
+    /// fresh allocations. Thread-local cache hits never touch the shard
+    /// (no lock, no shared atomics) and are tracked per thread in
+    /// [`crate::exec::batch::ArenaStats`] instead.
+    pub checkouts: u64,
+    /// Checkouts that had to allocate a fresh buffer (both the local
+    /// cache and the shard freelist were empty). After warm-up this stops
+    /// growing on BOTH execution routes — the invariant the steady-state
+    /// tests pin.
+    pub fresh: u64,
+    /// Buffers returned by a thread homed on this shard (the fast,
+    /// lock-free path through the thread-local cache).
+    pub returns_local: u64,
+    /// Buffers returned **home** by a thread homed on a *different* shard
+    /// — the return-to-origin traffic: accelerator submissions dropped on
+    /// the communication thread, reply batches released by workers,
+    /// results collected on consumer threads.
+    pub returns_cross: u64,
+    /// Buffers currently parked in this shard's global freelists (the
+    /// thread-local caches of threads homed here are not included).
+    pub pooled: usize,
+}
+
+/// Process-wide totals across every arena shard.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaSnapshot {
+    /// Total shard-reaching checkouts (freelist hits + fresh; local
+    /// cache hits are per-thread, see [`ArenaShardSnapshot::checkouts`]).
+    pub checkouts: u64,
+    /// Total fresh (pool-miss) allocations.
+    pub fresh: u64,
+    /// Total same-shard returns.
+    pub returns_local: u64,
+    /// Total cross-shard (return-to-origin) returns.
+    pub returns_cross: u64,
+    /// Total buffers parked across all shard freelists.
+    pub pooled: usize,
+}
+
+impl ArenaSnapshot {
+    /// Sum per-shard gauges into process-wide totals.
+    pub fn from_shards(shards: &[ArenaShardSnapshot]) -> ArenaSnapshot {
+        let mut t = ArenaSnapshot::default();
+        for s in shards {
+            t.checkouts += s.checkouts;
+            t.fresh += s.fresh;
+            t.returns_local += s.returns_local;
+            t.returns_cross += s.returns_cross;
+            t.pooled += s.pooled;
+        }
+        t
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +281,35 @@ mod tests {
         assert_eq!(s.high_water, 3);
         assert_eq!(s.stalls, 1);
         assert_eq!(s.blocked_ns, 2_000);
+    }
+
+    #[test]
+    fn arena_snapshot_aggregates_shards() {
+        let shards = [
+            ArenaShardSnapshot {
+                shard: 0,
+                checkouts: 10,
+                fresh: 2,
+                returns_local: 7,
+                returns_cross: 1,
+                pooled: 4,
+            },
+            ArenaShardSnapshot {
+                shard: 1,
+                checkouts: 5,
+                fresh: 1,
+                returns_local: 3,
+                returns_cross: 2,
+                pooled: 6,
+            },
+        ];
+        let t = ArenaSnapshot::from_shards(&shards);
+        assert_eq!(t.checkouts, 15);
+        assert_eq!(t.fresh, 3);
+        assert_eq!(t.returns_local, 10);
+        assert_eq!(t.returns_cross, 3);
+        assert_eq!(t.pooled, 10);
+        assert_eq!(ArenaSnapshot::from_shards(&[]), ArenaSnapshot::default());
     }
 
     #[test]

@@ -21,7 +21,9 @@ pub struct NodeCost {
 /// Whole-graph estimate.
 #[derive(Debug, Clone)]
 pub struct CostReport {
+    /// Per-node estimates, indexed by node id.
     pub per_node: Vec<NodeCost>,
+    /// Sum of per-node costs.
     pub total_cost: f64,
 }
 

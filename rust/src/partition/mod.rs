@@ -66,6 +66,7 @@ impl PartitionMode {
 /// One offloaded subgraph, in standalone executable form.
 #[derive(Debug, Clone)]
 pub struct SubgraphSpec {
+    /// Subgraph id (index into [`PartitionPlan::subgraphs`]).
     pub id: usize,
     /// Standalone body: `DocScan` + `ExtInput` leaves + the member
     /// operators; outputs registered as `out0`, `out1`, ...
@@ -81,9 +82,11 @@ pub struct SubgraphSpec {
 /// The partition result.
 #[derive(Debug, Clone)]
 pub struct PartitionPlan {
+    /// The offload scenario this plan was built for.
     pub mode: PartitionMode,
     /// The software supergraph (with `SubgraphExec` placeholders).
     pub supergraph: Graph,
+    /// The offloaded subgraphs, by id.
     pub subgraphs: Vec<SubgraphSpec>,
 }
 

@@ -15,10 +15,13 @@ use crate::corpus::pools;
 /// A named built-in query.
 #[derive(Debug, Clone)]
 pub struct Query {
+    /// Short id (`t1`..`t5`).
     pub name: &'static str,
+    /// Human-readable title.
     pub title: &'static str,
     /// What the paper's profile says this query should look like.
     pub profile_hint: &'static str,
+    /// The program source.
     pub aql: String,
 }
 

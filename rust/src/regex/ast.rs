@@ -178,8 +178,11 @@ pub enum Ast {
 /// A parsed pattern: body plus top-level anchors.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Pattern {
+    /// The pattern body.
     pub ast: Ast,
+    /// Pattern begins with `^`.
     pub anchored_start: bool,
+    /// Pattern ends with `$`.
     pub anchored_end: bool,
     /// Original source, retained for diagnostics and AOG dumps.
     pub source: String,
@@ -222,7 +225,9 @@ impl Pattern {
 /// Parse failure with byte position.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
+    /// Byte offset in the pattern source.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

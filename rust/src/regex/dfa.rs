@@ -38,8 +38,11 @@ pub const MAX_DFA_STATES: usize = 1024;
 /// Which DFA flavour to build.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DfaKind {
+    /// Matches only from the scan start (software inner loop).
     Anchored,
+    /// Match-anywhere (the table that streams on the accelerator).
     Search,
+    /// Reversed pattern (match-start recovery from end reports).
     Reverse,
 }
 
@@ -59,6 +62,7 @@ pub struct Dfa {
 /// DFA construction error (state explosion).
 #[derive(Debug, Clone)]
 pub struct DfaTooLarge {
+    /// State count reached when the budget blew.
     pub states: usize,
 }
 

@@ -18,12 +18,14 @@ use super::dfa::{Dfa, DfaKind, DfaTooLarge};
 /// One regex match.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Match {
+    /// Matched byte range.
     pub span: Span,
 }
 
 /// A pattern compiled to all three DFAs.
 #[derive(Debug, Clone)]
 pub struct CompiledRegex {
+    /// The parsed source pattern.
     pub pattern: Pattern,
     /// Anchored DFA — software scan inner loop.
     pub anchored: Dfa,

@@ -24,7 +24,9 @@ pub struct NfaState {
 /// A Thompson NFA with a single start state and explicit accept flags.
 #[derive(Debug, Clone)]
 pub struct Nfa {
+    /// All states, indexed by [`StateId`].
     pub states: Vec<NfaState>,
+    /// The single start state.
     pub start: StateId,
 }
 

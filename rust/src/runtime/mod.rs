@@ -1,5 +1,8 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute work packages
-//! — plus the bounded work [`queue`] shared by the SW and HW schedulers.
+//! — plus the bounded work [`queue`] shared by the SW and HW schedulers
+//! (session ingress and accelerator submissions ride the same primitive;
+//! the communication thread drains it in combining rounds via
+//! [`queue::QueueRx::drain_into`]).
 //!
 //! This is the only place the `xla` crate is touched, and only when the
 //! `pjrt` cargo feature is enabled. Artifacts are the HLO-text files
@@ -41,13 +44,16 @@ use crate::hwcompiler::{ArtifactKey, STREAMS};
 pub struct PackedPackage {
     /// `STREAMS × block` byte values (0 = separator/padding).
     pub bytes: Vec<i32>,
+    /// Bytes per stream.
     pub block: usize,
     /// `M × S × 256` transition tables (shared across packages — up to a
     /// few MiB, so cloning per package would dominate small payloads).
     pub tables: std::sync::Arc<Vec<i32>>,
     /// `M × S` accept flags.
     pub accepts: std::sync::Arc<Vec<i32>>,
+    /// Padded machine count (`M`).
     pub machines: usize,
+    /// Padded per-machine state count (`S`).
     pub states: usize,
 }
 

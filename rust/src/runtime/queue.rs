@@ -11,7 +11,10 @@
 //! Built on [`std::sync::mpsc::sync_channel`]; the receiver half is
 //! mutex-wrapped so a pool of consumers can share it (workers queue on the
 //! mutex while one blocks in `recv`, which is equivalent to all of them
-//! blocking on the channel).
+//! blocking on the channel). Single-consumer loops that combine work —
+//! the accelerator's communication thread batching submissions into
+//! packages — use [`QueueRx::drain_into`] to sweep everything pending
+//! under one lock acquisition instead of locking per item.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -116,6 +119,22 @@ impl<T> QueueRx<T> {
         }
     }
 
+    /// Drain everything currently queued into `buf` without blocking,
+    /// taking the receiver lock **once** for the whole sweep — the
+    /// communication thread's handoff primitive (one lock per combining
+    /// round instead of one per submission). Returns how many items were
+    /// appended; `buf`'s existing contents are kept.
+    pub fn drain_into(&self, buf: &mut Vec<T>) -> usize {
+        let rx = self.rx.lock().unwrap();
+        let mut n = 0;
+        while let Ok(item) = rx.try_recv() {
+            self.stats.on_pop();
+            buf.push(item);
+            n += 1;
+        }
+        n
+    }
+
     /// The queue's gauges (shared with the producer half).
     pub fn stats(&self) -> &Arc<QueueStats> {
         &self.stats
@@ -178,6 +197,24 @@ mod tests {
             "a push that waited ~50 ms must report nonzero blocked time"
         );
         assert_eq!(snap.pushed, 2);
+    }
+
+    #[test]
+    fn drain_into_takes_everything_pending_in_order() {
+        let (tx, rx) = bounded::<u32>(8);
+        for i in 0..5 {
+            tx.push(i).unwrap();
+        }
+        let mut buf = vec![99];
+        assert_eq!(rx.drain_into(&mut buf), 5);
+        assert_eq!(buf, vec![99, 0, 1, 2, 3, 4]);
+        // empty queue: no-op, not an error
+        assert_eq!(rx.drain_into(&mut buf), 0);
+        assert_eq!(buf.len(), 6);
+        // stats saw the pops: depth back to zero
+        assert_eq!(rx.stats().snapshot().depth, 0);
+        drop(tx);
+        assert_eq!(rx.drain_into(&mut buf), 0, "closed queue drains nothing");
     }
 
     #[test]

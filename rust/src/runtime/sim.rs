@@ -97,9 +97,13 @@ impl SimStats {
 /// A point-in-time copy of [`SimStats`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SimSnapshot {
+    /// Packages scanned.
     pub packages: u64,
+    /// Device cycles modeled.
     pub cycles: u64,
+    /// Hit records emitted.
     pub hits: u64,
+    /// Faults injected (dup/reorder/fail events).
     pub faults: u64,
 }
 

@@ -9,7 +9,9 @@ use std::fmt;
 /// any realistic annotation unit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Span {
+    /// Inclusive start byte offset.
     pub begin: u32,
+    /// Exclusive end byte offset.
     pub end: u32,
 }
 

@@ -21,7 +21,9 @@ pub enum TokenKind {
 /// One token: a span plus its kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Token {
+    /// The token's byte range.
     pub span: Span,
+    /// Word or punctuation.
     pub kind: TokenKind,
 }
 

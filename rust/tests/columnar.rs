@@ -10,9 +10,14 @@
 //!   and subgraph bodies — runs under one strategy) on a randomized
 //!   corpus plus handcrafted edge documents;
 //! * the merged T1–T5 catalog engine, columnar vs legacy, per query;
-//! * with `--features bench-alloc`: the arena-recycling invariant — after
-//!   warm-up, steady-state allocations/document on T1 is a small constant
-//!   and ≥10× below the legacy pipeline's.
+//! * with `--features bench-alloc`: the arena-recycling invariants —
+//!   after warm-up, steady-state allocations/document on T1 is a small
+//!   constant and ≥10× below the legacy pipeline's, and the
+//!   **accelerated (sim) route allocates zero fresh column buffers per
+//!   document** (ISSUE 5: batches crossing the worker ↔
+//!   communication-thread boundary are routed back to their origin arena
+//!   shard, with the per-shard cross-return counters proving the
+//!   round-trip).
 //!
 //! The corpus seed is fixed (reproducible CI) but overridable through
 //! `BOOST_DIFF_SEED`, like `differential.rs`.
@@ -201,6 +206,78 @@ fn steady_state_allocations_per_doc_small_and_10x_below_legacy() {
         legacy >= 10.0 * columnar,
         "expected ≥10x allocation reduction: legacy {legacy:.0}/doc vs columnar {columnar:.0}/doc"
     );
+}
+
+/// ISSUE 5 tentpole: the accelerated (sim) route must serve warm
+/// documents with **zero fresh arena allocations**, matching the software
+/// path. Session workers pin stable shards (worker `w` of every session
+/// homes on the same shard) and the communication thread pins the
+/// reserved comm shard, so buffers that cross the boundary — submission
+/// ext streams dropped by the communication thread, reply batches
+/// released by workers — are routed back to their origin shard and are
+/// available to the next session's checkout. Runs under `bench-alloc`
+/// with `--test-threads=1` in CI: the gauges are process-global, so a
+/// concurrently allocating test would pollute the measured window.
+#[cfg(feature = "bench-alloc")]
+#[test]
+fn accel_steady_state_zero_fresh_arena_allocs_and_returns_home() {
+    let q = boost::queries::builtin("t1").unwrap();
+    let engine = Engine::with_config(
+        &q.aql,
+        EngineConfig::simulated(PartitionMode::SingleSubgraph),
+    )
+    .unwrap();
+    let corpus = CorpusSpec::news(24, 1024).generate();
+
+    let run_session = |engine: &Engine| {
+        let mut session = engine.session().threads(2).queue_depth(4).start();
+        for d in corpus.docs.iter().cloned() {
+            session.push(d).unwrap();
+        }
+        session.finish()
+    };
+
+    // warm-up: two full Session passes. Worker threads die with each
+    // session, flushing their local caches to their (stable) shards, so
+    // the measured session's checkouts prove the shards really do carry
+    // the working set across restarts.
+    run_session(&engine);
+    run_session(&engine);
+
+    let before = engine.arena_snapshot();
+    let before_shards = engine.arena_shards();
+    let report = run_session(&engine);
+    let after = engine.arena_snapshot();
+    let after_shards = engine.arena_shards();
+
+    assert_eq!(report.docs, corpus.docs.len());
+    assert!(
+        engine.accel_snapshot().unwrap().packages > 0,
+        "the accelerated route must actually have run"
+    );
+    assert!(after.checkouts > before.checkouts, "batches were built");
+    assert_eq!(
+        after.fresh, before.fresh,
+        "accelerated route: warm documents must be served entirely from \
+         recycled buffers — zero fresh column allocations per doc \
+         (before {before:?}, after {after:?})"
+    );
+    assert!(
+        after.returns_cross > before.returns_cross,
+        "batches crossing the worker <-> communication-thread boundary \
+         must be routed home, not absorbed by the receiving thread"
+    );
+    // the communication shard specifically must see its reply batches
+    // come home from the workers that released them
+    let comm = boost::exec::batch::ArenaId::comm().shard();
+    assert!(
+        after_shards[comm].returns_cross > before_shards[comm].returns_cross,
+        "reply batches (comm-origin) must return to the comm shard: \
+         before {:?}, after {:?}",
+        before_shards[comm],
+        after_shards[comm]
+    );
+    engine.shutdown();
 }
 
 /// Arena gauges: after warm-up, rebuilding the same shapes takes no fresh
