@@ -380,7 +380,7 @@ fn run_package(
     metrics: &AccelMetrics,
 ) {
     let (m_pad, s_pad) = prep.config.geometry;
-    let pkg = PackedPackage {
+    let mut pkg = PackedPackage {
         // the package owns the byte block outright — moving it out of the
         // WorkPackage avoids re-allocating and copying STREAMS × block
         // ints per package on the steady-state path
@@ -395,6 +395,12 @@ fn run_package(
     let t0 = Instant::now();
     let result = engine.run(key, &pkg);
     let engine_ns = t0.elapsed().as_nanos() as u64;
+    // the scan is done with the byte block: return it to the arena's
+    // block pool so the next `pack_group` round checks it back out
+    // instead of allocating (satisfies the zero-fresh invariant for
+    // package assembly; see `exec::batch::take_block`). Recycled on the
+    // error path too — a failing package must not drain the pool.
+    crate::exec::batch::recycle_block(std::mem::take(&mut pkg.bytes));
 
     let hits = match result {
         Ok(h) => h,

@@ -7,6 +7,7 @@
 //! the byte every transition table maps back to START, so no match can
 //! cross a document boundary. Stream padding is also NUL.
 
+use crate::exec::batch::{recycle_block, take_block};
 use crate::hwcompiler::STREAMS;
 use crate::text::Document;
 
@@ -52,11 +53,17 @@ impl WorkPackage {
 /// Pack documents (in order) into as few packages as possible.
 /// Returns the packages plus the indices of documents too large for a
 /// single stream (those are not packed; the caller must fail them).
+///
+/// Byte blocks come from the arena's block pool
+/// ([`crate::exec::batch::take_block`], zeroed on checkout) and the
+/// consumer returns each package's block via
+/// [`crate::exec::batch::recycle_block`] once the scan is done, so
+/// steady-state package assembly allocates nothing.
 pub fn pack_group(docs: &[&Document], block: usize) -> (Vec<WorkPackage>, Vec<usize>) {
     let mut packages = Vec::new();
     let mut oversized = Vec::new();
 
-    let mut bytes = vec![0i32; STREAMS * block];
+    let mut bytes = take_block(STREAMS * block);
     let mut cursors = [0usize; STREAMS];
     let mut slots: Vec<DocSlot> = Vec::new();
 
@@ -66,7 +73,7 @@ pub fn pack_group(docs: &[&Document], block: usize) -> (Vec<WorkPackage>, Vec<us
                  packages: &mut Vec<WorkPackage>| {
         if !slots.is_empty() {
             packages.push(WorkPackage {
-                bytes: std::mem::replace(bytes, vec![0i32; STREAMS * block]),
+                bytes: std::mem::replace(bytes, take_block(STREAMS * block)),
                 block,
                 slots: std::mem::take(slots),
             });
@@ -105,6 +112,10 @@ pub fn pack_group(docs: &[&Document], block: usize) -> (Vec<WorkPackage>, Vec<us
         cursors[stream] = (offset + len + 1).min(block);
     }
     flush(&mut bytes, &mut cursors, &mut slots, &mut packages);
+    // the final replacement block (or the original, when nothing was
+    // packed) goes straight back — losing it here would leak one pooled
+    // block per combining round and re-introduce a steady-state alloc
+    recycle_block(bytes);
     (packages, oversized)
 }
 

@@ -13,6 +13,63 @@ pub use crate::text::Document;
 
 use crate::util::Prng;
 
+/// Shared document framing for the two streaming ingestion paths.
+///
+/// `repro stream` frames documents as newline-delimited stdin lines and
+/// the serving tier (`serve::protocol`) frames them as length-prefixed
+/// `Doc{id, bytes}` frames — but both must construct [`Document`]s the
+/// same way (same ids-as-given, same UTF-8 validation) or the two paths
+/// drift. Both decoders go through this module.
+pub mod framing {
+    use std::io::{self, BufRead};
+
+    use super::Document;
+
+    /// Why a payload could not become a [`Document`].
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum FramingError {
+        /// The payload is not valid UTF-8 (documents are text; spans are
+        /// byte offsets into a `str`).
+        NotUtf8,
+    }
+
+    impl std::fmt::Display for FramingError {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            match self {
+                FramingError::NotUtf8 => write!(f, "document bytes are not valid UTF-8"),
+            }
+        }
+    }
+
+    impl std::error::Error for FramingError {}
+
+    /// Build a document from a raw byte payload with a caller-supplied
+    /// id — the serving tier's `Doc` frame decoder. Empty documents are
+    /// legal (the engine produces empty views for them); invalid UTF-8
+    /// is a framing error, never a panic.
+    pub fn doc_from_bytes(id: u64, bytes: Vec<u8>) -> Result<Document, FramingError> {
+        let text = String::from_utf8(bytes).map_err(|_| FramingError::NotUtf8)?;
+        Ok(Document::new(id, text))
+    }
+
+    /// Frame a line-oriented reader as documents — `repro stream`'s
+    /// stdin protocol: one document per line, blank lines skipped, the
+    /// document id is the **line number** (so ids stay stable whether or
+    /// not blank lines are present).
+    pub fn docs_from_lines<B: BufRead>(
+        reader: B,
+    ) -> impl Iterator<Item = io::Result<Document>> {
+        reader
+            .lines()
+            .enumerate()
+            .filter_map(|(i, line)| match line {
+                Ok(l) if l.trim().is_empty() => None,
+                Ok(l) => Some(Ok(Document::new(i as u64, l))),
+                Err(e) => Some(Err(e)),
+            })
+    }
+}
+
 /// Corpus flavour.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CorpusKind {
@@ -304,5 +361,28 @@ mod tests {
     fn logs_look_like_logs() {
         let c = CorpusSpec::logs(4, 512).generate();
         assert!(c.docs[0].text.contains("svc="));
+    }
+
+    #[test]
+    fn framing_lines_number_by_line_and_skip_blanks() {
+        let input = "first doc\n\nsecond doc\n   \nthird\n";
+        let docs: Vec<_> = framing::docs_from_lines(std::io::Cursor::new(input))
+            .collect::<std::io::Result<_>>()
+            .unwrap();
+        assert_eq!(docs.len(), 3);
+        assert_eq!((docs[0].id, &*docs[0].text), (0, "first doc"));
+        assert_eq!((docs[1].id, &*docs[1].text), (2, "second doc"));
+        assert_eq!((docs[2].id, &*docs[2].text), (4, "third"));
+    }
+
+    #[test]
+    fn framing_bytes_validates_utf8() {
+        let d = framing::doc_from_bytes(9, b"ok text".to_vec()).unwrap();
+        assert_eq!((d.id, &*d.text), (9, "ok text"));
+        assert!(framing::doc_from_bytes(0, Vec::new()).unwrap().is_empty());
+        assert_eq!(
+            framing::doc_from_bytes(1, vec![0xff, 0xfe]).unwrap_err(),
+            framing::FramingError::NotUtf8
+        );
     }
 }

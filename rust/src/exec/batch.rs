@@ -41,7 +41,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::aog::expr::RowAccess;
 use crate::aog::{FieldType, Schema, Tuple, Value};
-use crate::metrics::{ArenaShardSnapshot, ArenaSnapshot};
+use crate::metrics::{ArenaShardSnapshot, ArenaSnapshot, BlockPoolSnapshot};
 use crate::text::Span;
 
 /// Typed storage for one column of a [`TupleBatch`].
@@ -707,6 +707,15 @@ const LOCAL_MAX: usize = 256;
 /// freelist. Returns beyond the cap free the buffer (bounded memory).
 const SHARD_MAX: usize = 512;
 
+/// Package byte blocks are `STREAMS × block` i32 buffers — 256 KiB each
+/// at the default block size, so they get far smaller caps than column
+/// buffers: steady state needs two per communication thread (one being
+/// filled, one in flight).
+const BLOCK_LOCAL_MAX: usize = 4;
+
+/// Shard-freelist cap for package byte blocks (see [`BLOCK_LOCAL_MAX`]).
+const BLOCK_SHARD_MAX: usize = 8;
+
 /// Stable identity of one arena shard — stamped into every checked-out
 /// [`TupleBatch`]/[`Column`] buffer so `Drop` can route it home.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -743,6 +752,12 @@ struct Pools {
     bools: Vec<Vec<bool>>,
     strs: Vec<Vec<Arc<str>>>,
     columns: Vec<Vec<Column>>,
+    /// Package byte blocks (`accel::packing`): a different currency from
+    /// the column buffers, pooled beside them so the communication
+    /// thread's whole working set rides one arena. Excluded from
+    /// [`Pools::count`] (which feeds the column-buffer gauges);
+    /// [`block_pool_stats`] reports these separately.
+    blocks: Vec<Vec<i32>>,
 }
 
 impl Pools {
@@ -801,6 +816,7 @@ impl Pools {
         move_up_to(&mut self.bools, &mut src.bools, cap);
         move_up_to(&mut self.strs, &mut src.strs, cap);
         move_up_to(&mut self.columns, &mut src.columns, cap);
+        move_up_to(&mut self.blocks, &mut src.blocks, BLOCK_SHARD_MAX);
     }
 }
 
@@ -814,6 +830,11 @@ struct Shard {
     fresh: AtomicU64,
     returns_local: AtomicU64,
     returns_cross: AtomicU64,
+    // package byte-block traffic, kept off the column gauges (and off
+    // ArenaShardSnapshot, whose shape existing tests pin)
+    block_checkouts: AtomicU64,
+    block_fresh: AtomicU64,
+    block_returns: AtomicU64,
 }
 
 fn shards() -> &'static [Shard] {
@@ -886,6 +907,45 @@ impl LocalArena {
         let shard = &shards()[self.home.shard()];
         let pooled = shard.pools.lock().unwrap().columns.pop();
         (pooled.unwrap_or_default(), self.home)
+    }
+
+    fn take_block(&mut self, len: usize) -> Vec<i32> {
+        let shard = &shards()[self.home.shard()];
+        shard.block_checkouts.fetch_add(1, AtomicOrdering::Relaxed);
+        let mut b = match self.cache.blocks.pop() {
+            Some(b) => b,
+            None => match shard.pools.lock().unwrap().blocks.pop() {
+                Some(b) => b,
+                None => {
+                    shard.block_fresh.fetch_add(1, AtomicOrdering::Relaxed);
+                    Vec::new()
+                }
+            },
+        };
+        // packing relies on zero-initialization for the NUL document
+        // separators and tail padding, so a recycled block is re-zeroed:
+        // a memset when its capacity suffices, one realloc when the
+        // adaptive block size outgrew it
+        b.clear();
+        b.resize(len, 0);
+        b
+    }
+
+    fn put_block(&mut self, mut b: Vec<i32>) {
+        if b.capacity() == 0 {
+            return; // nothing was ever allocated; pooling it gains nothing
+        }
+        b.clear();
+        let shard = &shards()[self.home.shard()];
+        shard.block_returns.fetch_add(1, AtomicOrdering::Relaxed);
+        if self.cache.blocks.len() < BLOCK_LOCAL_MAX {
+            self.cache.blocks.push(b);
+            return;
+        }
+        let mut pools = shard.pools.lock().unwrap();
+        if pools.blocks.len() < BLOCK_SHARD_MAX {
+            pools.blocks.push(b);
+        }
     }
 
     fn put_columns(&mut self, v: Vec<Column>, origin: ArenaId) {
@@ -1016,6 +1076,61 @@ fn arena_recycle_columns(v: Vec<Column>, origin: ArenaId) {
             }
         }
     }
+}
+
+/// Check a zeroed `len`-element package byte block out of the calling
+/// thread's arena (cache → home shard pool → fresh allocation). Blocks
+/// carry no origin stamp: checkout and return both happen on the
+/// accelerator's communication thread in steady state, so returns go to
+/// the *caller's* home shard — supply still meets demand, and a block
+/// released on a foreign thread just warms that thread's pool instead.
+pub fn take_block(len: usize) -> Vec<i32> {
+    ARENA
+        .try_with(|a| a.borrow_mut().take_block(len))
+        .unwrap_or_else(|_| {
+            // thread teardown: the local arena is gone; allocate plainly
+            let shard = &shards()[ArenaId::comm().shard()];
+            shard.block_checkouts.fetch_add(1, AtomicOrdering::Relaxed);
+            shard.block_fresh.fetch_add(1, AtomicOrdering::Relaxed);
+            vec![0i32; len]
+        })
+}
+
+/// Return a package byte block to the calling thread's arena (see
+/// [`take_block`]). Contents are discarded; the next checkout re-zeroes.
+pub fn recycle_block(b: Vec<i32>) {
+    let mut slot = Some(b);
+    let alive = ARENA.try_with(|a| {
+        a.borrow_mut().put_block(slot.take().expect("routed once"));
+    });
+    if alive.is_err() {
+        if let Some(mut b) = slot.take() {
+            if b.capacity() == 0 {
+                return;
+            }
+            b.clear();
+            let shard = &shards()[ArenaId::comm().shard()];
+            shard.block_returns.fetch_add(1, AtomicOrdering::Relaxed);
+            let mut pools = shard.pools.lock().unwrap();
+            if pools.blocks.len() < BLOCK_SHARD_MAX {
+                pools.blocks.push(b);
+            }
+        }
+    }
+}
+
+/// Process-wide package byte-block pool totals (all shards summed) —
+/// the `bench-alloc` gauge proving package assembly stops allocating
+/// after warm-up, reported beside the column-buffer [`ArenaSnapshot`].
+pub fn block_pool_stats() -> BlockPoolSnapshot {
+    let mut t = BlockPoolSnapshot::default();
+    for s in shards() {
+        t.checkouts += s.block_checkouts.load(AtomicOrdering::Relaxed);
+        t.fresh += s.block_fresh.load(AtomicOrdering::Relaxed);
+        t.returns += s.block_returns.load(AtomicOrdering::Relaxed);
+        t.pooled += s.pools.lock().unwrap().blocks.len();
+    }
+    t
 }
 
 /// Snapshot the calling thread's arena gauges ([`ArenaStats`]): its own
@@ -1206,6 +1321,28 @@ mod tests {
         );
         assert!(after.checkouts > before.checkouts);
         assert!(after.pooled >= 3);
+    }
+
+    #[test]
+    fn block_pool_rezeroes_recycled_blocks() {
+        let mut b = take_block(16);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|&x| x == 0));
+        b[0] = 77;
+        b[15] = -1;
+        recycle_block(b);
+        // same-thread retake must come from the local cache, re-zeroed,
+        // even when the requested length grows (adaptive block sizes)
+        let b2 = take_block(32);
+        assert_eq!(b2.len(), 32);
+        assert!(
+            b2.iter().all(|&x| x == 0),
+            "recycled blocks must be re-zeroed (NUL separators rely on it)"
+        );
+        recycle_block(b2);
+        let s = block_pool_stats();
+        assert!(s.checkouts >= 2);
+        assert!(s.returns >= 2);
     }
 
     #[test]

@@ -149,6 +149,23 @@
 //! and deterministic fault injection (duplicated/reordered hit records,
 //! failing packages) to drive the robustness path.
 //!
+//! ## The serving tier: many clients, one engine
+//!
+//! `repro serve` ([`serve`]) exposes the engine over TCP: a
+//! thread-per-connection server (std only, no async runtime) where each
+//! accepted connection gets its own bounded-queue `Session` onto the
+//! **shared** engine, so N clients multiplex onto one supergraph, one
+//! accelerator service, one arena. The wire protocol is length-prefixed
+//! binary frames; result batches cross the wire **columnar** (spans as
+//! i32 pairs, mirroring `accel/packing`) without re-materializing rows.
+//! Backpressure is per-connection — a slow reader blocks only its own
+//! connection's pipeline, accounted in `blocked_ns` — admission control
+//! answers `Busy` past a connection cap, and a second port serves
+//! `GET /metrics` (hand-rolled HTTP/1.0) with JSON gauges.
+//! `repro serve --selftest` spins the server on an ephemeral port,
+//! drives it with K concurrent clients over a randomized corpus, and
+//! verifies the results byte-identical to `run_doc` (`BENCH_6.json`).
+//!
 //! Correctness rests on a three-route differential harness
 //! (`rust/tests/differential.rs`): pure-software execution, the full
 //! `Session` + `AccelService` pipeline over the simulator, and
@@ -190,6 +207,7 @@ pub mod perfmodel;
 pub mod queries;
 pub mod regex;
 pub mod runtime;
+pub mod serve;
 pub mod text;
 pub mod util;
 

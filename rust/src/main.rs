@@ -13,10 +13,11 @@
 //! repro run       --queries t1,t2,t3 [...]  one engine, many queries, one pass
 //! repro stream    --query t1 [--threads T --queue Q --per-doc]     stdin firehose
 //! repro bench     [--json FILE]         perf trajectory rows → BENCH_5.json
+//! repro serve     [--addr H:P --admin H:P --max-conns N]  TCP serving tier
+//! repro serve     --selftest [--clients K]  loopback load run → BENCH_6.json
 //! ```
 
 use std::collections::HashMap;
-use std::io::BufRead;
 use std::process::ExitCode;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -44,6 +45,7 @@ fn main() -> ExitCode {
         "run" => cmd_run(&flags),
         "stream" => cmd_stream(&flags),
         "bench" => cmd_bench(&flags),
+        "serve" => cmd_serve(&flags),
         "-h" | "--help" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -59,7 +61,7 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream|bench> [flags]
+const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream|bench|serve> [flags]
   --query <t1..t5>       built-in query (default t1)
   --queries <t1,t2,...>  register several built-ins in ONE catalog engine
                          (merged supergraph, one partition plan, one
@@ -90,7 +92,16 @@ and columnar vs the legacy row pipeline (old-vs-new, same run); with
 PATH (legacy rows, columnar software, sim-accelerated) plus the arena's
 fresh-buffer and return-to-origin gauges.
 Machine-readable rows always land in BENCH_5.json:
-  --json <file>          override the output path";
+  --json <file>          override the output path
+serve exposes the engine over TCP — many clients, ONE shared engine:
+  --addr <host:port>     protocol address (default 127.0.0.1:7171; port 0
+                         picks an ephemeral port)
+  --admin <host:port>    also serve GET /metrics (HTTP/1.0 JSON) here
+  --max-conns <n>        admission cap; extra connections get Busy (default 64)
+  --selftest             loopback self-test: ephemeral server + K concurrent
+                         clients over a randomized corpus, results verified
+                         byte-identical to run_doc, row written to BENCH_6.json
+  --clients <k>          selftest client connections (default 8)";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
@@ -538,6 +549,25 @@ fn arena_fresh_per_doc(engine: &Engine, corpus: &boost::corpus::Corpus, reps: us
     (after - before) as f64 / (reps.max(1) * corpus.docs.len().max(1)) as f64
 }
 
+/// Steady-state fresh **package-block** allocations over `reps` measured
+/// passes (absolute count, not per-doc — the gate is that it stays 0):
+/// the byte-block half of the allocation-free package-assembly claim.
+/// Counters are process-global, so this runs right after
+/// [`arena_fresh_per_doc`] left the pool warm.
+#[cfg(feature = "bench-alloc")]
+fn block_fresh_delta(engine: &Engine, corpus: &boost::corpus::Corpus, reps: usize) -> u64 {
+    for d in &corpus.docs {
+        let _ = engine.run_doc(d); // warm-up, unmeasured
+    }
+    let before = boost::exec::batch::block_pool_stats().fresh;
+    for _ in 0..reps.max(1) {
+        for d in &corpus.docs {
+            let _ = engine.run_doc(d);
+        }
+    }
+    boost::exec::batch::block_pool_stats().fresh - before
+}
+
 /// `repro bench`: the perf-trajectory rows — docs/sec and MB/s for
 /// software vs sim-accelerated execution, each query alone vs the merged
 /// T1–T5 catalog, and the columnar executor vs the legacy row pipeline
@@ -665,6 +695,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         let sim_apd = allocs_per_doc(&sim, &alloc_corpus, 3);
         let columnar_afd = arena_fresh_per_doc(&col, &alloc_corpus, 3);
         let sim_afd = arena_fresh_per_doc(&sim, &alloc_corpus, 3);
+        let sim_bfd = block_fresh_delta(&sim, &alloc_corpus, 3);
         let arena = sim.arena_snapshot();
         sim.shutdown();
         println!(
@@ -677,6 +708,11 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
              sim-accel {sim_afd:.2} (cross-thread returns routed home: {})",
             arena.returns_cross,
         );
+        println!(
+            "  package byte-block fresh allocs (steady state): {sim_bfd} \
+             (pool {} blocks)",
+            boost::exec::batch::block_pool_stats().pooled,
+        );
         // the alloc measurement uses its own (smaller, single-threaded)
         // corpus — record it so the committed number documents its own
         // conditions even after CI merges sections from separate runs
@@ -688,6 +724,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
              \"t1_sim_allocs_per_doc\": {sim_apd:.2}, \
              \"t1_columnar_arena_fresh_per_doc\": {columnar_afd:.4}, \
              \"t1_sim_arena_fresh_per_doc\": {sim_afd:.4}, \
+             \"t1_sim_block_fresh_delta\": {sim_bfd}, \
              \"arena_returns_cross\": {}, \
              \"reduction\": {:.2}}}",
             arena.returns_cross,
@@ -796,13 +833,12 @@ fn cmd_stream(flags: &HashMap<String, String>) -> Result<(), String> {
         mode.name()
     );
     let stdin = std::io::stdin();
-    for (i, line) in stdin.lock().lines().enumerate() {
-        let line = line.map_err(|e| format!("stdin read failed: {e}"))?;
-        if line.trim().is_empty() {
-            continue;
-        }
+    // line → Document framing is shared with the server's frame decoder
+    // (boost::corpus::framing): one doc per non-blank line, ids = line index
+    for doc in boost::corpus::framing::docs_from_lines(stdin.lock()) {
+        let doc = doc.map_err(|e| format!("stdin read failed: {e}"))?;
         session
-            .push(Document::new(i as u64, line))
+            .push(doc)
             .map_err(|e| format!("session push failed: {e}"))?;
     }
     let queue_snap = session.queue_snapshot();
@@ -828,5 +864,231 @@ fn cmd_stream(flags: &HashMap<String, String>) -> Result<(), String> {
         );
     }
     engine.shutdown();
+    Ok(())
+}
+
+/// `repro serve`: expose one catalog engine over TCP — N concurrent
+/// client connections, each with its own bounded-queue [`Session`] onto
+/// the shared engine; per-connection backpressure, admission control,
+/// and an optional `GET /metrics` admin port. `--selftest` instead runs
+/// the loopback load harness (see [`cmd_serve_selftest`]).
+///
+/// [`Session`]: boost::coordinator::Session
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<(), String> {
+    if flags.contains_key("selftest") {
+        return cmd_serve_selftest(flags);
+    }
+    let names = catalog_names(flags).unwrap_or_else(|| {
+        boost::queries::all()
+            .iter()
+            .map(|q| q.name.to_string())
+            .collect()
+    });
+    let engine = Arc::new(build_catalog(&names, engine_config(flags)?)?);
+    let mut cfg = boost::serve::ServeConfig::default();
+    if let Some(a) = flags.get("addr") {
+        cfg.addr = a.clone();
+    }
+    cfg.admin_addr = flags.get("admin").cloned();
+    if let Some(n) = flags.get("max-conns").and_then(|s| s.parse().ok()) {
+        cfg.max_connections = n;
+    }
+    if let Some(q) = flags.get("queue").and_then(|s| s.parse().ok()) {
+        cfg.queue_depth = q;
+    }
+    if let Some(t) = flags.get("threads").and_then(|s| s.parse().ok()) {
+        cfg.threads_per_connection = t;
+    }
+    let max_conns = cfg.max_connections;
+    let server = boost::serve::Server::start(engine, cfg).map_err(|e| e.to_string())?;
+    eprintln!(
+        "serving {} on {} ({max_conns} max connections)",
+        names.join(","),
+        server.local_addr(),
+    );
+    if let Some(admin) = server.admin_addr() {
+        eprintln!("admin: GET http://{admin}/metrics");
+    }
+    server.wait();
+    Ok(())
+}
+
+/// `repro serve --selftest`: spin the server on an ephemeral loopback
+/// port, drive it with K concurrent clients over the randomized corpus,
+/// verify every result frame byte-identical to synchronous
+/// [`Engine::run_doc`] on the same engine, survive a mid-stream
+/// disconnect, probe `GET /metrics`, and write the throughput row to
+/// `BENCH_6.json`. Any check failing is an `Err` (nonzero exit) — CI's
+/// result-equivalence gate is this command's exit code.
+fn cmd_serve_selftest(flags: &HashMap<String, String>) -> Result<(), String> {
+    use boost::serve::{run_load, Client, ServeConfig, Server};
+
+    let clients: usize = flags
+        .get("clients")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8)
+        .max(1);
+    let corpus = corpus_for(flags).generate();
+    let doc_size = corpus.docs.first().map(|d| d.len()).unwrap_or(0);
+    let kind = corpus_kind(flags);
+    let names = catalog_names(flags).unwrap_or_else(|| {
+        boost::queries::all()
+            .iter()
+            .map(|q| q.name.to_string())
+            .collect()
+    });
+    let engine = Arc::new(build_catalog(&names, engine_config(flags)?)?);
+
+    // the reference: synchronous run_doc over the same engine, encoded
+    // with the same wire encoder, over the same view table the server
+    // builds for an empty Hello (all queries, all views, query order)
+    let table: Vec<boost::exec::ViewHandle> = engine
+        .queries()
+        .iter()
+        .flat_map(|q| q.views().iter().cloned())
+        .collect();
+    let mut reference: HashMap<u64, Vec<(u16, Vec<u8>)>> =
+        HashMap::with_capacity(corpus.docs.len());
+    for doc in &corpus.docs {
+        let result = engine.run_doc(doc);
+        let mut views = Vec::with_capacity(table.len());
+        for (vi, h) in table.iter().enumerate() {
+            let mut buf = Vec::new();
+            boost::serve::protocol::encode_batch(result.view_batch(h), &mut buf);
+            views.push((vi as u16, buf));
+        }
+        reference.insert(doc.id, views);
+    }
+
+    let server = Server::start(
+        engine.clone(),
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            admin_addr: Some("127.0.0.1:0".into()),
+            max_connections: (clients + 2).max(16),
+            ..ServeConfig::default()
+        },
+    )
+    .map_err(|e| e.to_string())?;
+    let addr = server.local_addr();
+    let admin = server.admin_addr().expect("admin addr configured");
+    eprintln!("selftest: server on {addr}, admin on {admin}, {clients} clients");
+
+    // mid-stream disconnect: one doc, no Finish, dropped socket — the
+    // server must account a disconnect and keep serving
+    {
+        let mut rogue =
+            Client::connect(addr, &[], &[]).map_err(|e| format!("rogue connect: {e}"))?;
+        rogue
+            .send(u64::MAX, "rogue client leaves mid-stream")
+            .map_err(|e| format!("rogue send: {e}"))?;
+        drop(rogue);
+    }
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while server.stats().disconnects == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let disconnect_survived = server.stats().disconnects >= 1;
+
+    // the load run: K concurrent clients partition the corpus
+    let report =
+        run_load(addr, &corpus.docs, clients, &[]).map_err(|e| format!("load run: {e}"))?;
+
+    // verify: every document answered exactly once, byte-identical
+    let expect_names: Vec<&str> = table.iter().map(|h| h.name()).collect();
+    if report.view_table != expect_names {
+        return Err(format!(
+            "view table mismatch: server {:?} vs run_doc {:?}",
+            report.view_table, expect_names
+        ));
+    }
+    let mut checked = 0usize;
+    for rf in &report.results {
+        let want = reference
+            .remove(&rf.doc_id)
+            .ok_or_else(|| format!("doc {} answered twice or unknown", rf.doc_id))?;
+        if rf.views != want {
+            return Err(format!(
+                "results for doc {} are not byte-identical to run_doc",
+                rf.doc_id
+            ));
+        }
+        checked += 1;
+    }
+    if checked != corpus.docs.len() {
+        return Err(format!(
+            "only {checked}/{} documents answered",
+            corpus.docs.len()
+        ));
+    }
+    if !disconnect_survived {
+        return Err("server never accounted the mid-stream disconnect".into());
+    }
+
+    // admin probe: GET /metrics must answer 200 with a serve section
+    let admin_ok = {
+        use std::io::{Read as _, Write as _};
+        let probe = || -> std::io::Result<String> {
+            let mut s = std::net::TcpStream::connect(admin)?;
+            s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n")?;
+            let mut body = String::new();
+            s.read_to_string(&mut body)?;
+            Ok(body)
+        };
+        match probe() {
+            Ok(resp) => resp.starts_with("HTTP/1.0 200") && resp.contains("\"serve\""),
+            Err(_) => false,
+        }
+    };
+    if !admin_ok {
+        return Err("admin GET /metrics probe failed".into());
+    }
+
+    let stats = server.stats();
+    println!(
+        "selftest: {} docs x {doc_size} B over {clients} clients: \
+         {:.0} docs/s, {:.2} MB/s ({:.1} ms wall)",
+        report.docs,
+        report.docs_per_sec(),
+        report.mb_per_sec(),
+        report.wall.as_secs_f64() * 1e3,
+    );
+    println!(
+        "  byte-identical to run_doc: yes ({checked} docs, {} views) | \
+         disconnect survived: yes | admin metrics: ok",
+        table.len(),
+    );
+    println!(
+        "  server: {} accepted, {} results, {} bytes out, result-queue stalls {}",
+        stats.accepted, stats.results, stats.bytes_out, stats.result_stalls,
+    );
+
+    let path = match flags.get("json") {
+        Some(p) if !p.is_empty() => p.as_str(),
+        _ => "BENCH_6.json",
+    };
+    let json = format!(
+        "{{\n  \"schema\": \"boost-serve-bench-v1\",\n  \"measured\": true,\n  \
+         \"corpus\": {{\"docs\": {}, \"doc_size\": {doc_size}, \"kind\": \"{kind}\"}},\n  \
+         \"clients\": {clients},\n  \"queries\": [{}],\n  \
+         \"row\": {{\"wall_s\": {:.6}, \"docs_per_sec\": {:.3}, \"mb_per_sec\": {:.6}, \
+         \"results\": {}, \"bytes_out\": {}}},\n  \
+         \"checks\": {{\"byte_identical\": true, \"docs_checked\": {checked}, \
+         \"views\": {}, \"disconnect_survived\": true, \"admin_metrics_ok\": true}}\n}}\n",
+        corpus.docs.len(),
+        names
+            .iter()
+            .map(|n| format!("\"{n}\""))
+            .collect::<Vec<_>>()
+            .join(", "),
+        report.wall.as_secs_f64(),
+        report.docs_per_sec(),
+        report.mb_per_sec(),
+        stats.results,
+        stats.bytes_out,
+        table.len(),
+    );
+    std::fs::write(path, json).map_err(|e| format!("write {path}: {e}"))?;
+    println!("  wrote {path}");
     Ok(())
 }

@@ -176,6 +176,116 @@ impl AccelSnapshot {
     }
 }
 
+/// Counters for the serving tier (`crate::serve`). The server keeps one
+/// aggregate instance for its whole lifetime plus one per live
+/// connection; both are plain relaxed atomics, updated from the
+/// connection's reader/writer threads and the session workers encoding
+/// results.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Connections accepted past admission control.
+    pub accepted: AtomicU64,
+    /// Connections rejected with a `Busy` frame (over the cap).
+    pub rejected: AtomicU64,
+    /// Connections currently being served (gauge; aggregate only).
+    pub active: AtomicI64,
+    /// `Doc` frames accepted into a session.
+    pub docs: AtomicU64,
+    /// Document payload bytes received.
+    pub bytes_in: AtomicU64,
+    /// `Result` frames produced.
+    pub results: AtomicU64,
+    /// Bytes written to clients (frames, including prefixes).
+    pub bytes_out: AtomicU64,
+    /// Connections torn down on a malformed/unexpected frame.
+    pub protocol_errors: AtomicU64,
+    /// Connections that vanished mid-stream (EOF or socket error before
+    /// `Finish`). The server survives these by design.
+    pub disconnects: AtomicU64,
+    /// Producer stalls accumulated from closed connections' result
+    /// queues (live queues are visible per connection).
+    pub result_stalls: AtomicU64,
+    /// Producer blocked-time accumulated from closed connections'
+    /// result queues, ns — the backpressure evidence.
+    pub result_blocked_ns: AtomicU64,
+}
+
+impl ServeStats {
+    /// Point-in-time copy.
+    pub fn snapshot(&self) -> ServeSnapshot {
+        ServeSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed).max(0) as u64,
+            docs: self.docs.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            results: self.results.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+            result_stalls: self.result_stalls.load(Ordering::Relaxed),
+            result_blocked_ns: self.result_blocked_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold a closed connection's result-queue gauges into the
+    /// aggregate, so backpressure evidence survives the connection.
+    pub fn absorb_queue(&self, q: &QueueSnapshot) {
+        self.result_stalls.fetch_add(q.stalls, Ordering::Relaxed);
+        self.result_blocked_ns
+            .fetch_add(q.blocked_ns, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time copy of [`ServeStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeSnapshot {
+    /// Connections accepted.
+    pub accepted: u64,
+    /// Connections rejected with `Busy`.
+    pub rejected: u64,
+    /// Connections currently active.
+    pub active: u64,
+    /// Documents accepted.
+    pub docs: u64,
+    /// Document payload bytes received.
+    pub bytes_in: u64,
+    /// Result frames produced.
+    pub results: u64,
+    /// Bytes written to clients.
+    pub bytes_out: u64,
+    /// Connections torn down on protocol errors.
+    pub protocol_errors: u64,
+    /// Mid-stream disconnects survived.
+    pub disconnects: u64,
+    /// Result-queue producer stalls (closed connections).
+    pub result_stalls: u64,
+    /// Result-queue producer blocked time, ns (closed connections).
+    pub result_blocked_ns: u64,
+}
+
+/// Process-wide gauges of the package byte-block pool (see
+/// [`crate::exec::batch::take_block`]): the `STREAMS × block` `Vec<i32>`
+/// buffers work packages are assembled into. Kept separate from
+/// [`ArenaShardSnapshot`] — blocks live beside the five typed column
+/// freelists but are a different currency (i32 byte-stream blocks, one
+/// per in-flight package, checked out and returned on the communication
+/// thread).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BlockPoolSnapshot {
+    /// Block checkouts (pool hits + fresh allocations).
+    pub checkouts: u64,
+    /// Checkouts that had to allocate because every pool was empty.
+    /// Flat after warm-up — the package-assembly half of the
+    /// zero-fresh-allocation invariant.
+    pub fresh: u64,
+    /// Blocks returned to a pool.
+    pub returns: u64,
+    /// Blocks currently parked across all shard pools (thread-local
+    /// caches excluded).
+    pub pooled: usize,
+}
+
 /// Point-in-time gauges of ONE global arena shard (see
 /// [`crate::exec::batch`] for the sharded return-to-origin arena these
 /// describe). Produced by [`crate::exec::batch::shard_stats`]; one entry

@@ -1,0 +1,186 @@
+//! Hand-rolled HTTP/1.0 admin endpoint: `GET /metrics` returns one JSON
+//! snapshot of the serving tier plus the engine's queue, arena,
+//! block-pool, and accelerator gauges. No HTTP library — request-line
+//! parse, fixed headers, `Connection: close` — because the only client
+//! is `curl`/a CI probe and the only route is `/metrics`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::exec::batch;
+use crate::metrics::{AccelSnapshot, QueueSnapshot, ServeSnapshot};
+use crate::serve::server::ServerShared;
+
+/// Accept loop for the admin listener; one short-lived thread per
+/// request. Exits when the listener errors (shutdown closes it via a
+/// throwaway connect + the stopping flag).
+pub(crate) fn run(listener: TcpListener, shared: Arc<ServerShared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shared.stopping() {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stopping() {
+            return;
+        }
+        let shared = shared.clone();
+        let _ = std::thread::Builder::new()
+            .name("serve-admin-req".into())
+            .spawn(move || handle_request(stream, &shared));
+    }
+}
+
+fn handle_request(stream: TcpStream, shared: &ServerShared) {
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut request_line = String::new();
+    if reader.read_line(&mut request_line).is_err() {
+        return;
+    }
+    // drain headers (bounded — a peer streaming garbage can't pin us)
+    for _ in 0..64 {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) if line == "\r\n" || line == "\n" => break,
+            Ok(_) => continue,
+            Err(_) => return,
+        }
+    }
+
+    let mut w = stream;
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method == "GET" && (path == "/metrics" || path == "/metrics/") {
+        let body = metrics_json(shared);
+        let _ = write!(
+            w,
+            "HTTP/1.0 200 OK\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+    } else {
+        let body = "{\"error\":\"not found; try GET /metrics\"}";
+        let _ = write!(
+            w,
+            "HTTP/1.0 404 Not Found\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+    }
+    let _ = w.flush();
+    // half-close politely; ignore whatever else the peer sent
+    let _ = w.shutdown(std::net::Shutdown::Write);
+    let mut sink = [0u8; 256];
+    let _ = reader.read(&mut sink);
+}
+
+// --- JSON rendering (hand-built, same idiom as cmd_bench) ---
+
+fn serve_json(s: &ServeSnapshot) -> String {
+    format!(
+        "{{\"accepted\":{},\"rejected\":{},\"active\":{},\"docs\":{},\"bytes_in\":{},\"results\":{},\"bytes_out\":{},\"protocol_errors\":{},\"disconnects\":{},\"result_stalls\":{},\"result_blocked_ns\":{}}}",
+        s.accepted,
+        s.rejected,
+        s.active,
+        s.docs,
+        s.bytes_in,
+        s.results,
+        s.bytes_out,
+        s.protocol_errors,
+        s.disconnects,
+        s.result_stalls,
+        s.result_blocked_ns
+    )
+}
+
+fn queue_json(q: &QueueSnapshot) -> String {
+    format!(
+        "{{\"pushed\":{},\"stalls\":{},\"blocked_ns\":{},\"depth\":{},\"high_water\":{}}}",
+        q.pushed, q.stalls, q.blocked_ns, q.depth, q.high_water
+    )
+}
+
+fn accel_json(a: &AccelSnapshot) -> String {
+    format!(
+        "{{\"packages\":{},\"docs\":{},\"bytes\":{},\"hits\":{},\"engine_wall_ns\":{},\"post_wall_ns\":{},\"modeled_ns\":{},\"cycles\":{}}}",
+        a.packages,
+        a.docs,
+        a.bytes,
+        a.hits,
+        a.engine_wall_ns,
+        a.post_wall_ns,
+        a.modeled_ns,
+        a.cycles
+    )
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The whole `/metrics` document: serving aggregate + live connections,
+/// then the engine-side gauges every other CLI mode also reports.
+pub(crate) fn metrics_json(shared: &ServerShared) -> String {
+    let agg = shared.stats.snapshot();
+    let mut out = String::with_capacity(1024);
+    out.push_str("{\"serve\":{\"aggregate\":");
+    out.push_str(&serve_json(&agg));
+    out.push_str(",\"connections\":[");
+    let conns = shared.conns.lock().unwrap();
+    for (i, c) in conns.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let s = c.stats.snapshot();
+        out.push_str(&format!(
+            "{{\"id\":{},\"peer\":\"{}\",\"docs\":{},\"bytes_in\":{},\"results\":{},\"queue\":{}}}",
+            c.id,
+            json_escape(&c.peer),
+            s.docs,
+            s.bytes_in,
+            s.results,
+            queue_json(&c.queue.snapshot())
+        ));
+    }
+    drop(conns);
+    out.push_str("]},\"accel\":");
+    match shared.engine.accel_snapshot() {
+        Some(a) => out.push_str(&accel_json(&a)),
+        None => out.push_str("null"),
+    }
+    out.push_str(",\"accel_queue\":");
+    match shared.engine.accel_queue_snapshot() {
+        Some(q) => out.push_str(&queue_json(&q)),
+        None => out.push_str("null"),
+    }
+    let arena = shared.engine.arena_snapshot();
+    out.push_str(&format!(
+        ",\"arena\":{{\"checkouts\":{},\"fresh\":{},\"returns_local\":{},\"returns_cross\":{},\"pooled\":{}}}",
+        arena.checkouts, arena.fresh, arena.returns_local, arena.returns_cross, arena.pooled
+    ));
+    let blocks = batch::block_pool_stats();
+    out.push_str(&format!(
+        ",\"blocks\":{{\"checkouts\":{},\"fresh\":{},\"returns\":{},\"pooled\":{}}}",
+        blocks.checkouts, blocks.fresh, blocks.returns, blocks.pooled
+    ));
+    out.push('}');
+    out
+}

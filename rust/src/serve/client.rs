@@ -1,0 +1,356 @@
+//! Built-in protocol client and multi-connection load generator.
+//!
+//! [`Client`] speaks the wire protocol over one connection: handshake,
+//! pipelined `Doc` frames, a background reader collecting `Result`
+//! frames, and a `finish` that waits for `Done`. [`run_load`] fans a
+//! document set across K concurrent clients and measures throughput —
+//! the driver behind `repro serve --selftest` and the loopback tests.
+
+use std::fmt;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::serve::protocol::{self, Frame, ProtocolError};
+use crate::text::Document;
+
+/// Why a client operation failed.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The server is at its admission cap.
+    Busy {
+        /// Connections the server reported as active.
+        active: u32,
+        /// The server's configured cap.
+        cap: u32,
+    },
+    /// The server sent a terminal `Error` frame.
+    Rejected {
+        /// The server's `ERR_*` code.
+        code: u16,
+        /// The server's description.
+        message: String,
+    },
+    /// A wire-protocol violation on the receive path.
+    Protocol(ProtocolError),
+    /// A socket error on the send path.
+    Io(io::Error),
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Busy { active, cap } => {
+                write!(f, "server busy ({active}/{cap} connections)")
+            }
+            ClientError::Rejected { code, message } => {
+                write!(f, "server error {code}: {message}")
+            }
+            ClientError::Protocol(e) => write!(f, "protocol error: {e}"),
+            ClientError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<ProtocolError> for ClientError {
+    fn from(e: ProtocolError) -> Self {
+        match e {
+            ProtocolError::Io(io) => ClientError::Io(io),
+            other => ClientError::Protocol(other),
+        }
+    }
+}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// One `Result` frame as received: the document id plus each subscribed
+/// view's encoded batch, in view-table order. Payloads stay encoded so
+/// callers can byte-compare against a reference encoding; decode with
+/// [`protocol::decode_batch`] when rows are wanted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultFrame {
+    /// Echo of the submitted document id.
+    pub doc_id: u64,
+    /// `(view-table index, encoded batch)` pairs.
+    pub views: Vec<(u16, Vec<u8>)>,
+}
+
+/// What the background reader hands back when the connection ends.
+struct ReaderOutcome {
+    results: Vec<ResultFrame>,
+    done_docs: Option<u64>,
+    error: Option<ClientError>,
+}
+
+/// A connected protocol client. Documents are pipelined: `send` does
+/// not wait for results — a background thread collects them until the
+/// server's `Done` arrives in [`Client::finish`].
+pub struct Client {
+    writer: BufWriter<TcpStream>,
+    view_table: Vec<String>,
+    reader: Option<JoinHandle<ReaderOutcome>>,
+    sent: u64,
+}
+
+impl Client {
+    /// Connect, send `Hello{queries, views}`, and wait for the server's
+    /// verdict: `Welcome` yields a client, `Busy`/`Error` become the
+    /// matching [`ClientError`].
+    pub fn connect<A: ToSocketAddrs>(
+        addr: A,
+        queries: &[String],
+        views: &[String],
+    ) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        protocol::write_frame(
+            &mut writer,
+            &Frame::Hello {
+                queries: queries.to_vec(),
+                views: views.to_vec(),
+            },
+        )?;
+        writer.flush()?;
+        let view_table = match protocol::read_frame(&mut reader)? {
+            Some(Frame::Welcome { views }) => views,
+            Some(Frame::Busy { active, cap }) => {
+                return Err(ClientError::Busy { active, cap })
+            }
+            Some(Frame::Error { code, message }) => {
+                return Err(ClientError::Rejected { code, message })
+            }
+            Some(_) => {
+                return Err(ClientError::Protocol(ProtocolError::Malformed(
+                    "expected Welcome, Busy, or Error after Hello",
+                )))
+            }
+            None => return Err(ClientError::Protocol(ProtocolError::Truncated)),
+        };
+        let handle = std::thread::Builder::new()
+            .name("serve-client-read".into())
+            .spawn(move || read_results(reader))?;
+        Ok(Client {
+            writer,
+            view_table,
+            reader: Some(handle),
+            sent: 0,
+        })
+    }
+
+    /// The server's view table from `Welcome` — the order `Result`
+    /// frames index their payloads.
+    pub fn view_table(&self) -> &[String] {
+        &self.view_table
+    }
+
+    /// Submit one document. Blocks only when the socket's send buffer is
+    /// full (the server's per-connection backpressure reaching us).
+    pub fn send(&mut self, id: u64, text: &str) -> io::Result<()> {
+        protocol::write_frame(
+            &mut self.writer,
+            &Frame::Doc {
+                id,
+                bytes: text.as_bytes().to_vec(),
+            },
+        )?;
+        self.writer.flush()?;
+        self.sent += 1;
+        Ok(())
+    }
+
+    /// Send `Finish` and wait for the server to drain: every pending
+    /// `Result`, then `Done`. Returns all collected results.
+    pub fn finish(mut self) -> Result<ClientReport, ClientError> {
+        protocol::write_frame(&mut self.writer, &Frame::Finish)?;
+        self.writer.flush()?;
+        let handle = self.reader.take().expect("reader thread");
+        let outcome = handle
+            .join()
+            .map_err(|_| ClientError::Protocol(ProtocolError::Truncated))?;
+        if let Some(e) = outcome.error {
+            return Err(e);
+        }
+        match outcome.done_docs {
+            Some(done) => Ok(ClientReport {
+                sent: self.sent,
+                done,
+                results: outcome.results,
+                view_table: self.view_table.clone(),
+            }),
+            None => Err(ClientError::Protocol(ProtocolError::Truncated)),
+        }
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        // abandoned client (no finish): let the reader thread end on the
+        // server's close rather than block forever on a live socket
+        if let Some(h) = self.reader.take() {
+            drop(self.writer.get_ref().shutdown(std::net::Shutdown::Both));
+            let _ = h.join();
+        }
+    }
+}
+
+/// One finished connection's tally.
+#[derive(Debug)]
+pub struct ClientReport {
+    /// Documents this client submitted.
+    pub sent: u64,
+    /// Documents the server reported in `Done`.
+    pub done: u64,
+    /// Every `Result` frame received, in arrival order.
+    pub results: Vec<ResultFrame>,
+    /// The server's view table from `Welcome`.
+    pub view_table: Vec<String>,
+}
+
+fn read_results(mut reader: BufReader<TcpStream>) -> ReaderOutcome {
+    let mut results = Vec::new();
+    loop {
+        match protocol::read_frame(&mut reader) {
+            Ok(Some(Frame::Result { doc_id, views })) => {
+                results.push(ResultFrame { doc_id, views });
+            }
+            Ok(Some(Frame::Done { docs })) => {
+                return ReaderOutcome {
+                    results,
+                    done_docs: Some(docs),
+                    error: None,
+                }
+            }
+            Ok(Some(Frame::Error { code, message })) => {
+                return ReaderOutcome {
+                    results,
+                    done_docs: None,
+                    error: Some(ClientError::Rejected { code, message }),
+                }
+            }
+            Ok(Some(_)) => {
+                return ReaderOutcome {
+                    results,
+                    done_docs: None,
+                    error: Some(ClientError::Protocol(ProtocolError::Malformed(
+                        "unexpected frame from server",
+                    ))),
+                }
+            }
+            Ok(None) => {
+                return ReaderOutcome {
+                    results,
+                    done_docs: None,
+                    error: Some(ClientError::Protocol(ProtocolError::Truncated)),
+                }
+            }
+            Err(e) => {
+                return ReaderOutcome {
+                    results,
+                    done_docs: None,
+                    error: Some(e.into()),
+                }
+            }
+        }
+    }
+}
+
+/// One load-generation run's tally (see [`run_load`]).
+#[derive(Debug)]
+pub struct LoadReport {
+    /// Concurrent client connections driven.
+    pub clients: usize,
+    /// Documents submitted across all clients.
+    pub docs: usize,
+    /// Payload bytes submitted across all clients.
+    pub bytes: usize,
+    /// Wall time from first connect to last `Done`.
+    pub wall: Duration,
+    /// Every client's results, merged; `(doc_id, views)` per document.
+    pub results: Vec<ResultFrame>,
+    /// The server's view table (identical across clients by protocol).
+    pub view_table: Vec<String>,
+}
+
+impl LoadReport {
+    /// Documents per second over the whole run.
+    pub fn docs_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.docs as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Submitted megabytes per second over the whole run.
+    pub fn mb_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            (self.bytes as f64 / 1.0e6) / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Drive `docs` through the server at `addr` over `clients` concurrent
+/// connections (client *k* takes documents *k, k+clients, k+2·clients …*,
+/// so every document is submitted exactly once). Returns the merged
+/// results and throughput; any client's failure fails the run.
+pub fn run_load(
+    addr: std::net::SocketAddr,
+    docs: &[Document],
+    clients: usize,
+    queries: &[String],
+) -> Result<LoadReport, ClientError> {
+    let clients = clients.max(1);
+    let start = Instant::now();
+    let reports: Vec<Result<ClientReport, ClientError>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|k| {
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr, queries, &[])?;
+                    for doc in docs.iter().skip(k).step_by(clients) {
+                        client.send(doc.id, &doc.text)?;
+                    }
+                    client.finish()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(ClientError::Protocol(ProtocolError::Truncated)),
+            })
+            .collect()
+    });
+    let wall = start.elapsed();
+
+    let mut results = Vec::with_capacity(docs.len());
+    let mut view_table = Vec::new();
+    for report in reports {
+        let report = report?;
+        if view_table.is_empty() {
+            view_table = report.view_table;
+        }
+        results.extend(report.results);
+    }
+    Ok(LoadReport {
+        clients,
+        docs: docs.len(),
+        bytes: docs.iter().map(|d| d.len()).sum(),
+        wall,
+        results,
+        view_table,
+    })
+}

@@ -1,0 +1,40 @@
+//! `repro serve` — the network serving tier.
+//!
+//! The paper's operating point is many analytics queries multiplexed
+//! onto one accelerated engine; this module lifts that one layer up the
+//! stack: many *network clients* multiplexed onto one [`Engine`]
+//! (`crate::coordinator::Engine`). A thread-per-connection TCP server
+//! (std only — no async runtime) accepts length-prefixed binary frames,
+//! runs each connection's documents through its own bounded-queue
+//! [`Session`](crate::coordinator::Session) over the shared engine, and
+//! streams per-view [`TupleBatch`](crate::exec::TupleBatch) results
+//! back in the same columnar shape they have in memory — spans as i32
+//! pairs, mirroring `accel/packing` — so results cross the wire without
+//! re-materializing rows.
+//!
+//! The pieces:
+//!
+//! - [`protocol`] — frame layout, encode/decode, the columnar batch
+//!   wire encoding, and the error taxonomy.
+//! - [`server`] — listener, admission control (`Busy` past the cap),
+//!   per-connection sessions, writer threads, per-connection
+//!   backpressure over [`runtime::queue`](crate::runtime::queue).
+//! - [`client`] — built-in protocol client and the K-connection load
+//!   generator behind `repro serve --selftest`.
+//! - [`admin`] — `GET /metrics` over hand-rolled HTTP/1.0 on a second
+//!   port: serving, queue, arena, block-pool, and accelerator gauges as
+//!   one JSON snapshot.
+//!
+//! Per-tenant catalogs ride the supergraph: a client's `Hello` names
+//! which registered queries (namespaces) it wants and optionally which
+//! views; the server resolves them against the engine's catalog and the
+//! connection only ever sees those views.
+
+pub(crate) mod admin;
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{run_load, Client, ClientError, ClientReport, LoadReport, ResultFrame};
+pub use protocol::{Frame, ProtocolError};
+pub use server::{ConnSnapshot, ServeConfig, Server};

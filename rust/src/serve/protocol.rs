@@ -1,0 +1,735 @@
+//! The length-prefixed binary wire protocol of the serving tier.
+//!
+//! Every frame on the wire is `[u32 LE length][u8 type][payload]`, where
+//! `length` counts the type byte plus the payload. The protocol is
+//! deliberately dumb: no compression, no negotiation beyond a version
+//! byte in `Hello`, no partial frames — a reader either gets a whole
+//! frame or a clean [`ProtocolError`].
+//!
+//! | frame | dir | type | payload |
+//! |-------|-----|------|---------|
+//! | `Hello` | c→s | `0x01` | version u8, query names (u16 count × str16), view subscriptions (u16 count × str16) |
+//! | `Doc` | c→s | `0x02` | doc id u64, UTF-8 text (rest of frame) |
+//! | `Finish` | c→s | `0x03` | empty |
+//! | `Welcome` | s→c | `0x81` | view table (u16 count × str16 qualified names) |
+//! | `Result` | s→c | `0x82` | doc id u64, u16 count × (view-table index u16, batch length u32, encoded [`TupleBatch`]) |
+//! | `Busy` | s→c | `0x83` | active u32, cap u32 |
+//! | `Error` | s→c | `0x84` | code u16, message str16 |
+//! | `Done` | s→c | `0x85` | docs processed u64 |
+//!
+//! (`str16` = u16 length + UTF-8 bytes; `str32` the same with a u32.)
+//!
+//! Result payloads serialize [`TupleBatch`] **columns**, not rows: per
+//! column a type tag, an optional null bitmap (u64 words, same packing
+//! as the in-memory `NullMask`), then the dense buffer — spans as
+//! `(i32, i32)` pairs exactly like the accelerator's packed streams
+//! (`accel::packing`), ints/float-bits as u64, bools as bytes, strings
+//! as str32. Results therefore cross the wire without ever
+//! re-materializing `Vec<Tuple>` rows on the server; the encoding is
+//! canonical (no padding, fixed field order), so "byte-identical
+//! results" can be asserted by comparing encoded payloads.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::sync::Arc;
+
+use crate::aog::{Tuple, Value};
+use crate::exec::{ColumnData, TupleBatch};
+use crate::text::Span;
+
+/// Protocol version carried in `Hello`. Bump on any wire change.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Upper bound on a single frame's length field (type byte + payload).
+/// Anything larger is rejected before buffering — a garbage length
+/// prefix must not turn into a multi-gigabyte allocation.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// `Hello` frame type byte (client → server).
+pub const FRAME_HELLO: u8 = 0x01;
+/// `Doc` frame type byte (client → server).
+pub const FRAME_DOC: u8 = 0x02;
+/// `Finish` frame type byte (client → server).
+pub const FRAME_FINISH: u8 = 0x03;
+/// `Welcome` frame type byte (server → client).
+pub const FRAME_WELCOME: u8 = 0x81;
+/// `Result` frame type byte (server → client).
+pub const FRAME_RESULT: u8 = 0x82;
+/// `Busy` frame type byte (server → client).
+pub const FRAME_BUSY: u8 = 0x83;
+/// `Error` frame type byte (server → client).
+pub const FRAME_ERROR: u8 = 0x84;
+/// `Done` frame type byte (server → client).
+pub const FRAME_DONE: u8 = 0x85;
+
+/// `Error` code: the frame stream itself was malformed.
+pub const ERR_PROTOCOL: u16 = 1;
+/// `Error` code: the `Hello` handshake was missing or invalid.
+pub const ERR_BAD_HELLO: u16 = 2;
+/// `Error` code: `Hello` named a query the catalog doesn't register.
+pub const ERR_UNKNOWN_QUERY: u16 = 3;
+/// `Error` code: `Hello` subscribed to a view outside its namespaces.
+pub const ERR_UNKNOWN_VIEW: u16 = 4;
+/// `Error` code: a `Doc` frame carried invalid (non-UTF-8) text.
+pub const ERR_BAD_DOC: u16 = 5;
+/// `Error` code: the server failed internally while processing.
+pub const ERR_SERVER: u16 = 6;
+
+/// Everything that can go wrong reading or decoding a frame.
+#[derive(Debug)]
+pub enum ProtocolError {
+    /// Underlying socket error.
+    Io(io::Error),
+    /// A length prefix of zero or larger than [`MAX_FRAME`].
+    BadLength(usize),
+    /// The peer closed the connection in the middle of a frame.
+    Truncated,
+    /// An unrecognized frame type byte.
+    UnknownFrame(u8),
+    /// A structurally invalid payload (what, in the message).
+    Malformed(&'static str),
+    /// The peer sent an `Error` frame; carried through so callers can
+    /// surface the remote code + message.
+    Remote {
+        /// One of the `ERR_*` codes.
+        code: u16,
+        /// Human-readable description from the peer.
+        message: String,
+    },
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::Io(e) => write!(f, "i/o error: {e}"),
+            ProtocolError::BadLength(n) => {
+                write!(f, "frame length {n} outside 1..={MAX_FRAME}")
+            }
+            ProtocolError::Truncated => write!(f, "connection closed mid-frame"),
+            ProtocolError::UnknownFrame(t) => write!(f, "unknown frame type 0x{t:02x}"),
+            ProtocolError::Malformed(what) => write!(f, "malformed frame: {what}"),
+            ProtocolError::Remote { code, message } => {
+                write!(f, "peer reported error {code}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+impl From<io::Error> for ProtocolError {
+    fn from(e: io::Error) -> Self {
+        ProtocolError::Io(e)
+    }
+}
+
+/// A decoded wire frame. See the module docs for the layout table.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Connection handshake: which catalog namespaces this client wants
+    /// (empty = all registered queries) and which views it subscribes to
+    /// (empty = every view of the selected queries).
+    Hello {
+        /// Registered query (namespace) names, e.g. `["t1", "t3"]`.
+        queries: Vec<String>,
+        /// View subscriptions, qualified (`"t1.Entities"`) or bare.
+        views: Vec<String>,
+    },
+    /// One document to analyze.
+    Doc {
+        /// Client-chosen stable id, echoed back in `Result`.
+        id: u64,
+        /// Raw document text; must be valid UTF-8.
+        bytes: Vec<u8>,
+    },
+    /// End of the client's stream: process everything queued, send the
+    /// remaining `Result` frames, then `Done`.
+    Finish,
+    /// Handshake accepted; the per-connection view table, in the order
+    /// `Result` frames index it.
+    Welcome {
+        /// Fully qualified view names.
+        views: Vec<String>,
+    },
+    /// All subscribed views for one document.
+    Result {
+        /// The id from the matching `Doc` frame.
+        doc_id: u64,
+        /// `(view-table index, encoded batch)` per subscribed view, in
+        /// view-table order. Payloads come from [`encode_batch`].
+        views: Vec<(u16, Vec<u8>)>,
+    },
+    /// Admission control: the server is at its connection cap.
+    Busy {
+        /// Connections currently being served.
+        active: u32,
+        /// The configured cap.
+        cap: u32,
+    },
+    /// Terminal error; the server closes the connection after sending it.
+    Error {
+        /// One of the `ERR_*` codes.
+        code: u16,
+        /// Human-readable description.
+        message: String,
+    },
+    /// Clean end of stream after `Finish`.
+    Done {
+        /// Documents processed on this connection.
+        docs: u64,
+    },
+}
+
+// ---------------------------------------------------------------------------
+// little-endian put/get helpers
+// ---------------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize);
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_str32(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked sequential reader over one frame payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        if self.buf.len() - self.pos < n {
+            return Err(ProtocolError::Malformed("payload shorter than declared"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtocolError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtocolError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtocolError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtocolError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, ProtocolError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn str16(&mut self) -> Result<String, ProtocolError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ProtocolError::Malformed("string is not UTF-8"))
+    }
+
+    fn str32(&mut self) -> Result<String, ProtocolError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ProtocolError::Malformed("string is not UTF-8"))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    fn done(&self) -> Result<(), ProtocolError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(ProtocolError::Malformed("trailing bytes after payload"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frame encode / decode
+// ---------------------------------------------------------------------------
+
+fn encode_payload(frame: &Frame, out: &mut Vec<u8>) {
+    match frame {
+        Frame::Hello { queries, views } => {
+            out.push(FRAME_HELLO);
+            out.push(PROTOCOL_VERSION);
+            put_u16(out, queries.len() as u16);
+            for q in queries {
+                put_str16(out, q);
+            }
+            put_u16(out, views.len() as u16);
+            for v in views {
+                put_str16(out, v);
+            }
+        }
+        Frame::Doc { id, bytes } => {
+            out.push(FRAME_DOC);
+            put_u64(out, *id);
+            out.extend_from_slice(bytes);
+        }
+        Frame::Finish => out.push(FRAME_FINISH),
+        Frame::Welcome { views } => {
+            out.push(FRAME_WELCOME);
+            put_u16(out, views.len() as u16);
+            for v in views {
+                put_str16(out, v);
+            }
+        }
+        Frame::Result { doc_id, views } => {
+            out.push(FRAME_RESULT);
+            put_u64(out, *doc_id);
+            put_u16(out, views.len() as u16);
+            for (idx, batch) in views {
+                put_u16(out, *idx);
+                put_u32(out, batch.len() as u32);
+                out.extend_from_slice(batch);
+            }
+        }
+        Frame::Busy { active, cap } => {
+            out.push(FRAME_BUSY);
+            put_u32(out, *active);
+            put_u32(out, *cap);
+        }
+        Frame::Error { code, message } => {
+            out.push(FRAME_ERROR);
+            put_u16(out, *code);
+            put_str16(out, message);
+        }
+        Frame::Done { docs } => {
+            out.push(FRAME_DONE);
+            put_u64(out, *docs);
+        }
+    }
+}
+
+/// Write one frame (length prefix + type + payload) and return how many
+/// bytes hit the wire. The caller flushes.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> io::Result<usize> {
+    let mut body = Vec::with_capacity(64);
+    encode_payload(frame, &mut body);
+    debug_assert!(body.len() <= MAX_FRAME);
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    Ok(4 + body.len())
+}
+
+fn decode_frame(body: &[u8]) -> Result<Frame, ProtocolError> {
+    let mut c = Cursor::new(body);
+    let ty = c.u8()?;
+    let frame = match ty {
+        FRAME_HELLO => {
+            let version = c.u8()?;
+            if version != PROTOCOL_VERSION {
+                return Err(ProtocolError::Malformed("unsupported protocol version"));
+            }
+            let nq = c.u16()? as usize;
+            let mut queries = Vec::with_capacity(nq);
+            for _ in 0..nq {
+                queries.push(c.str16()?);
+            }
+            let nv = c.u16()? as usize;
+            let mut views = Vec::with_capacity(nv);
+            for _ in 0..nv {
+                views.push(c.str16()?);
+            }
+            Frame::Hello { queries, views }
+        }
+        FRAME_DOC => {
+            let id = c.u64()?;
+            let bytes = c.rest().to_vec();
+            Frame::Doc { id, bytes }
+        }
+        FRAME_FINISH => Frame::Finish,
+        FRAME_WELCOME => {
+            let n = c.u16()? as usize;
+            let mut views = Vec::with_capacity(n);
+            for _ in 0..n {
+                views.push(c.str16()?);
+            }
+            Frame::Welcome { views }
+        }
+        FRAME_RESULT => {
+            let doc_id = c.u64()?;
+            let n = c.u16()? as usize;
+            let mut views = Vec::with_capacity(n);
+            for _ in 0..n {
+                let idx = c.u16()?;
+                let len = c.u32()? as usize;
+                views.push((idx, c.take(len)?.to_vec()));
+            }
+            Frame::Result { doc_id, views }
+        }
+        FRAME_BUSY => Frame::Busy {
+            active: c.u32()?,
+            cap: c.u32()?,
+        },
+        FRAME_ERROR => Frame::Error {
+            code: c.u16()?,
+            message: c.str16()?,
+        },
+        FRAME_DONE => Frame::Done { docs: c.u64()? },
+        other => return Err(ProtocolError::UnknownFrame(other)),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Read one frame, blocking until it is complete. `Ok(None)` means the
+/// peer closed the connection **cleanly at a frame boundary**; closing
+/// mid-frame is [`ProtocolError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, ProtocolError> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut prefix[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(ProtocolError::Truncated)
+                };
+            }
+            Ok(n) => got += n,
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtocolError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(ProtocolError::BadLength(len));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            ProtocolError::Truncated
+        } else {
+            ProtocolError::Io(e)
+        }
+    })?;
+    decode_frame(&body)
+}
+
+// ---------------------------------------------------------------------------
+// TupleBatch wire encoding
+// ---------------------------------------------------------------------------
+
+const TAG_SPANS: u8 = 0;
+const TAG_INTS: u8 = 1;
+const TAG_FLOATS: u8 = 2;
+const TAG_BOOLS: u8 = 3;
+const TAG_STRS: u8 = 4;
+
+/// Serialize one columnar batch: `rows u32, cols u16`, then per column
+/// `tag u8, has_nulls u8, [null words u64 × ceil(rows/64)], data`. Spans
+/// go out as `(i32, i32)` pairs — the same shape the accelerator's
+/// packed streams use — so the hot span case is a flat memcpy-ish loop
+/// and the encoding is canonical: identical batches encode to identical
+/// bytes, which is what the selftest's byte-equality check relies on.
+pub fn encode_batch(batch: &TupleBatch, out: &mut Vec<u8>) {
+    let rows = batch.len();
+    put_u32(out, rows as u32);
+    put_u16(out, batch.num_columns() as u16);
+    for ci in 0..batch.num_columns() {
+        let col = batch.column(ci);
+        let (tag, _) = tag_of(col.data());
+        out.push(tag);
+        let has_nulls = (0..rows).any(|i| col.is_null(i));
+        out.push(has_nulls as u8);
+        if has_nulls {
+            for w in 0..rows.div_ceil(64) {
+                let mut word = 0u64;
+                for b in 0..64 {
+                    let i = w * 64 + b;
+                    if i < rows && col.is_null(i) {
+                        word |= 1 << b;
+                    }
+                }
+                put_u64(out, word);
+            }
+        }
+        match col.data() {
+            ColumnData::Spans(v) => {
+                for s in v {
+                    put_i32(out, s.begin as i32);
+                    put_i32(out, s.end as i32);
+                }
+            }
+            ColumnData::Ints(v) => {
+                for x in v {
+                    put_u64(out, *x as u64);
+                }
+            }
+            ColumnData::Floats(v) => {
+                for x in v {
+                    put_u64(out, x.to_bits());
+                }
+            }
+            ColumnData::Bools(v) => {
+                for x in v {
+                    out.push(*x as u8);
+                }
+            }
+            ColumnData::Strs(v) => {
+                for s in v {
+                    put_str32(out, s);
+                }
+            }
+        }
+    }
+}
+
+fn tag_of(data: &ColumnData) -> (u8, &'static str) {
+    match data {
+        ColumnData::Spans(_) => (TAG_SPANS, "spans"),
+        ColumnData::Ints(_) => (TAG_INTS, "ints"),
+        ColumnData::Floats(_) => (TAG_FLOATS, "floats"),
+        ColumnData::Bools(_) => (TAG_BOOLS, "bools"),
+        ColumnData::Strs(_) => (TAG_STRS, "strs"),
+    }
+}
+
+/// Decode an [`encode_batch`] payload into row-shaped tuples (the
+/// client-side convenience — servers never materialize rows). Rejects
+/// structurally invalid input with a clean error; adversarial payloads
+/// must not panic or over-allocate.
+pub fn decode_batch(buf: &[u8]) -> Result<Vec<Tuple>, ProtocolError> {
+    let mut c = Cursor::new(buf);
+    let rows = c.u32()? as usize;
+    let cols = c.u16()? as usize;
+    // A row costs ≥ 1 byte per column on the wire; anything claiming
+    // more rows than the payload could hold is garbage.
+    if rows > buf.len().max(1) * 64 {
+        return Err(ProtocolError::Malformed("row count exceeds payload"));
+    }
+    let mut columns: Vec<Vec<Value>> = Vec::with_capacity(cols);
+    for _ in 0..cols {
+        let tag = c.u8()?;
+        let has_nulls = c.u8()? != 0;
+        let mut nulls = vec![false; if has_nulls { rows } else { 0 }];
+        if has_nulls {
+            for w in 0..rows.div_ceil(64) {
+                let word = c.u64()?;
+                for (b, slot) in nulls.iter_mut().skip(w * 64).take(64).enumerate() {
+                    *slot = (word >> b) & 1 == 1;
+                }
+            }
+        }
+        let mut vals = Vec::with_capacity(rows.min(4096));
+        for i in 0..rows {
+            let v = match tag {
+                TAG_SPANS => {
+                    let begin = c.i32()? as u32;
+                    let end = c.i32()? as u32;
+                    if begin > end {
+                        return Err(ProtocolError::Malformed("span begin after end"));
+                    }
+                    Value::Span(Span::new(begin, end))
+                }
+                TAG_INTS => Value::Int(c.u64()? as i64),
+                TAG_FLOATS => Value::Float(f64::from_bits(c.u64()?)),
+                TAG_BOOLS => Value::Bool(c.u8()? != 0),
+                TAG_STRS => Value::Str(Arc::from(c.str32()?)),
+                _ => return Err(ProtocolError::Malformed("unknown column tag")),
+            };
+            vals.push(if has_nulls && nulls[i] { Value::Null } else { v });
+        }
+        columns.push(vals);
+    }
+    c.done()?;
+    Ok((0..rows)
+        .map(|i| columns.iter().map(|col| col[i].clone()).collect())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aog::{Field, FieldType, Schema};
+
+    fn roundtrip(frame: Frame) {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &frame).unwrap();
+        let mut r = &wire[..];
+        let back = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(back, frame);
+        assert_eq!(read_frame(&mut r).unwrap(), None, "no trailing frame");
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        roundtrip(Frame::Hello {
+            queries: vec!["t1".into(), "t3".into()],
+            views: vec!["t1.Entities".into()],
+        });
+        roundtrip(Frame::Doc {
+            id: 42,
+            bytes: b"Alice visited Paris.".to_vec(),
+        });
+        roundtrip(Frame::Finish);
+        roundtrip(Frame::Welcome {
+            views: vec!["t1.Entities".into(), "t3.Mentions".into()],
+        });
+        roundtrip(Frame::Result {
+            doc_id: 7,
+            views: vec![(0, vec![1, 2, 3]), (1, vec![])],
+        });
+        roundtrip(Frame::Busy { active: 8, cap: 8 });
+        roundtrip(Frame::Error {
+            code: ERR_BAD_DOC,
+            message: "document 3 is not UTF-8".into(),
+        });
+        roundtrip(Frame::Done { docs: 1000 });
+    }
+
+    #[test]
+    fn eof_at_boundary_is_none_mid_frame_is_truncated() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Frame::Finish).unwrap();
+        // clean boundary
+        let mut r = &wire[..];
+        assert!(read_frame(&mut r).unwrap().is_some());
+        assert!(read_frame(&mut r).unwrap().is_none());
+        // cut inside the prefix and inside the body
+        for cut in [1, 2, 4] {
+            let mut r = &wire[..cut.min(wire.len() - 1)];
+            assert!(matches!(
+                read_frame(&mut r),
+                Err(ProtocolError::Truncated)
+            ));
+        }
+    }
+
+    #[test]
+    fn garbage_length_and_type_rejected_cleanly() {
+        // length 0
+        let mut r = &[0u8, 0, 0, 0][..];
+        assert!(matches!(read_frame(&mut r), Err(ProtocolError::BadLength(0))));
+        // absurd length
+        let mut r = &[0xff, 0xff, 0xff, 0xff][..];
+        assert!(matches!(read_frame(&mut r), Err(ProtocolError::BadLength(_))));
+        // unknown type byte
+        let mut wire = vec![1, 0, 0, 0, 0x7f];
+        let mut r = &wire[..];
+        assert!(matches!(
+            read_frame(&mut r),
+            Err(ProtocolError::UnknownFrame(0x7f))
+        ));
+        // trailing junk after a valid Finish payload
+        wire = vec![3, 0, 0, 0, FRAME_FINISH, 9, 9];
+        let mut r = &wire[..];
+        assert!(matches!(read_frame(&mut r), Err(ProtocolError::Malformed(_))));
+    }
+
+    #[test]
+    fn batch_roundtrips_with_nulls() {
+        let schema = Schema {
+            fields: vec![
+                Field {
+                    name: "m".into(),
+                    ty: FieldType::Span,
+                },
+                Field {
+                    name: "n".into(),
+                    ty: FieldType::Int,
+                },
+                Field {
+                    name: "w".into(),
+                    ty: FieldType::Str,
+                },
+            ],
+        };
+        let rows: Vec<Tuple> = vec![
+            vec![
+                Value::Span(Span::new(0, 5)),
+                Value::Int(3),
+                Value::Str(Arc::from("abc")),
+            ],
+            vec![Value::Span(Span::new(7, 12)), Value::Null, Value::Null],
+        ];
+        let batch = TupleBatch::from_rows(&schema, &rows);
+        let mut wire = Vec::new();
+        encode_batch(&batch, &mut wire);
+        assert_eq!(decode_batch(&wire).unwrap(), rows);
+        // canonical: same batch encodes to the same bytes
+        let mut again = Vec::new();
+        encode_batch(&batch, &mut again);
+        assert_eq!(wire, again);
+    }
+
+    #[test]
+    fn empty_batch_roundtrips() {
+        let schema = Schema {
+            fields: vec![Field {
+                name: "m".into(),
+                ty: FieldType::Span,
+            }],
+        };
+        let batch = TupleBatch::for_schema(&schema);
+        let mut wire = Vec::new();
+        encode_batch(&batch, &mut wire);
+        assert_eq!(decode_batch(&wire).unwrap(), Vec::<Tuple>::new());
+    }
+
+    #[test]
+    fn adversarial_batch_payloads_error_not_panic() {
+        // claims 2^32-1 rows in a 6-byte payload
+        let mut bad = Vec::new();
+        put_u32(&mut bad, u32::MAX);
+        put_u16(&mut bad, 1);
+        assert!(decode_batch(&bad).is_err());
+        // span with begin > end must not hit Span::new's invariant
+        let mut bad = Vec::new();
+        put_u32(&mut bad, 1);
+        put_u16(&mut bad, 1);
+        bad.push(TAG_SPANS);
+        bad.push(0);
+        put_i32(&mut bad, 9);
+        put_i32(&mut bad, 3);
+        assert!(decode_batch(&bad).is_err());
+        // truncated in the middle of a column
+        let mut ok = Vec::new();
+        put_u32(&mut ok, 1);
+        put_u16(&mut ok, 1);
+        ok.push(TAG_INTS);
+        ok.push(0);
+        put_u64(&mut ok, 77);
+        assert!(decode_batch(&ok).is_ok());
+        assert!(decode_batch(&ok[..ok.len() - 3]).is_err());
+    }
+}

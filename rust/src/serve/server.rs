@@ -1,0 +1,620 @@
+//! The thread-per-connection TCP server multiplexing many client
+//! streams onto ONE shared [`Engine`].
+//!
+//! Each accepted connection gets its own [`Session`] over the shared
+//! engine — the paper's multi-threaded communication interface lifted
+//! one layer up: N connections × `threads_per_connection` workers all
+//! feed the same supergraph, the same accelerator service, the same
+//! arena. Backpressure composes end to end, per connection:
+//!
+//! ```text
+//! slow client socket → writer thread blocks → bounded result queue
+//! fills (blocked_ns accounted) → session workers block in the sink →
+//! session ingress queue fills → reader stops reading the socket →
+//! TCP receive window closes → the client's sends block
+//! ```
+//!
+//! Only that connection's reader is affected; every queue is
+//! per-connection, so one slow consumer cannot stall its neighbours.
+//! Admission control caps concurrent connections with a clean `Busy`
+//! frame, and a mid-stream disconnect tears down one session while the
+//! server keeps serving.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{CallbackSink, Engine, QueryHandle};
+use crate::corpus::framing;
+use crate::exec::ViewHandle;
+use crate::metrics::{QueueSnapshot, QueueStats, ServeSnapshot, ServeStats};
+use crate::runtime::queue;
+use crate::serve::admin;
+use crate::serve::protocol::{
+    self, Frame, ProtocolError, ERR_BAD_DOC, ERR_BAD_HELLO, ERR_PROTOCOL, ERR_SERVER,
+    ERR_UNKNOWN_QUERY, ERR_UNKNOWN_VIEW,
+};
+
+/// Server configuration. All knobs have serving-appropriate defaults;
+/// the selftest and the loopback tests bind port 0 for an ephemeral
+/// address.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Address to bind for the document protocol (`host:port`; port 0
+    /// picks an ephemeral port).
+    pub addr: String,
+    /// Optional address for the HTTP/1.0 `GET /metrics` admin endpoint.
+    pub admin_addr: Option<String>,
+    /// Admission-control cap: connections past this count get a `Busy`
+    /// frame and are closed.
+    pub max_connections: usize,
+    /// Depth of each connection's bounded result queue (frames encoded
+    /// but not yet written).
+    pub queue_depth: usize,
+    /// Session worker threads per connection.
+    pub threads_per_connection: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7171".to_string(),
+            admin_addr: None,
+            max_connections: 64,
+            queue_depth: 32,
+            threads_per_connection: 2,
+        }
+    }
+}
+
+/// Live gauges of one active connection (see [`Server::connections`]).
+#[derive(Debug, Clone)]
+pub struct ConnSnapshot {
+    /// Server-assigned connection id (monotonic).
+    pub id: u64,
+    /// Peer address.
+    pub peer: String,
+    /// This connection's counters.
+    pub stats: ServeSnapshot,
+    /// This connection's result-queue gauges (`blocked_ns` is the
+    /// backpressure evidence).
+    pub queue: QueueSnapshot,
+}
+
+/// One registered live connection: per-connection stats plus the result
+/// queue's gauges, visible to the admin endpoint while the connection
+/// lives and folded into the aggregate when it closes.
+pub(crate) struct ConnEntry {
+    pub(crate) id: u64,
+    pub(crate) peer: String,
+    pub(crate) stats: Arc<ServeStats>,
+    pub(crate) queue: Arc<QueueStats>,
+}
+
+/// State shared by the accept loop, connection handlers, and the admin
+/// endpoint.
+pub(crate) struct ServerShared {
+    pub(crate) engine: Arc<Engine>,
+    pub(crate) config: ServeConfig,
+    pub(crate) stats: ServeStats,
+    pub(crate) conns: Mutex<Vec<Arc<ConnEntry>>>,
+    next_conn_id: AtomicU64,
+    stopping: AtomicBool,
+}
+
+impl ServerShared {
+    /// Whether shutdown has been requested (accept loops poll this after
+    /// every accept).
+    pub(crate) fn stopping(&self) -> bool {
+        self.stopping.load(Ordering::SeqCst)
+    }
+}
+
+/// A running serving tier: accept loop + admin endpoint + one handler
+/// thread per connection, all over one shared engine. Dropping the
+/// server shuts it down (idempotent with [`Server::shutdown`]).
+pub struct Server {
+    shared: Arc<ServerShared>,
+    local_addr: SocketAddr,
+    admin_addr: Option<SocketAddr>,
+    accept: Option<JoinHandle<()>>,
+    admin: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind the configured addresses and start accepting connections.
+    pub fn start(engine: Arc<Engine>, config: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&config.addr)
+            .with_context(|| format!("binding serve address {}", config.addr))?;
+        let local_addr = listener.local_addr()?;
+        let admin_listener = match &config.admin_addr {
+            Some(addr) => Some(
+                TcpListener::bind(addr)
+                    .with_context(|| format!("binding admin address {addr}"))?,
+            ),
+            None => None,
+        };
+        let admin_addr = match &admin_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
+
+        let shared = Arc::new(ServerShared {
+            engine,
+            config,
+            stats: ServeStats::default(),
+            conns: Mutex::new(Vec::new()),
+            next_conn_id: AtomicU64::new(0),
+            stopping: AtomicBool::new(false),
+        });
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let shared = shared.clone();
+            let handlers = handlers.clone();
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(listener, shared, handlers))?
+        };
+        let admin = match admin_listener {
+            Some(l) => {
+                let shared = shared.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("serve-admin".into())
+                        .spawn(move || admin::run(l, shared))?,
+                )
+            }
+            None => None,
+        };
+
+        Ok(Server {
+            shared,
+            local_addr,
+            admin_addr,
+            accept: Some(accept),
+            admin: Some(admin_handle_or_none(admin)),
+            handlers,
+        })
+    }
+
+    /// The bound protocol address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The bound admin address, when an admin endpoint was configured.
+    pub fn admin_addr(&self) -> Option<SocketAddr> {
+        self.admin_addr
+    }
+
+    /// Aggregate serving counters.
+    pub fn stats(&self) -> ServeSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    /// Gauges of every currently active connection.
+    pub fn connections(&self) -> Vec<ConnSnapshot> {
+        self.shared
+            .conns
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|c| ConnSnapshot {
+                id: c.id,
+                peer: c.peer.clone(),
+                stats: c.stats.snapshot(),
+                queue: c.queue.snapshot(),
+            })
+            .collect()
+    }
+
+    /// Block on the accept loop — `repro serve`'s foreground mode. The
+    /// loop only exits on [`Server::shutdown`] (from another thread) or
+    /// a listener error.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, then join the accept loop, every connection
+    /// handler, and the admin thread. Active connections are joined, not
+    /// killed — callers in tests disconnect their clients first.
+    pub fn shutdown(&mut self) {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        // unblock the accept loops with one throwaway connection each
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(addr) = self.admin_addr {
+            let _ = TcpStream::connect(addr);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.admin.take() {
+            let _ = h.join();
+        }
+        let handlers: Vec<_> = std::mem::take(&mut *self.handlers.lock().unwrap());
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// `Option<Option<JoinHandle>>` flattening without pulling in a helper
+// trait; keeps Server::start readable.
+fn admin_handle_or_none(h: Option<JoinHandle<()>>) -> JoinHandle<()> {
+    match h {
+        Some(h) => h,
+        None => std::thread::spawn(|| {}),
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<ServerShared>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(_) => {
+                if shared.stopping.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        // admission control: reject past the cap with a clean Busy frame
+        let active = shared.stats.active.load(Ordering::SeqCst);
+        let cap = shared.config.max_connections;
+        if active >= cap as i64 {
+            shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            let mut w = BufWriter::new(stream);
+            let _ = protocol::write_frame(
+                &mut w,
+                &Frame::Busy {
+                    active: active.max(0) as u32,
+                    cap: cap as u32,
+                },
+            );
+            let _ = w.flush();
+            continue; // dropping the stream closes it
+        }
+        shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
+        shared.stats.active.fetch_add(1, Ordering::SeqCst);
+        let id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+        let shared2 = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("serve-conn-{id}"))
+            .spawn(move || handle_connection(stream, peer.to_string(), shared2, id));
+        match handle {
+            Ok(h) => handlers.lock().unwrap().push(h),
+            Err(_) => {
+                // could not spawn: undo the admission
+                shared.stats.active.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Decrements the active gauge and unregisters the connection however
+/// the handler exits (clean finish, protocol error, panic).
+struct ActiveGuard {
+    shared: Arc<ServerShared>,
+    id: u64,
+}
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.shared.stats.active.fetch_sub(1, Ordering::SeqCst);
+        let mut conns = self.shared.conns.lock().unwrap();
+        if let Some(pos) = conns.iter().position(|c| c.id == self.id) {
+            let entry = conns.swap_remove(pos);
+            // fold the dying connection's backpressure evidence into the
+            // aggregate so tests and the admin endpoint still see it
+            self.shared.stats.absorb_queue(&entry.queue.snapshot());
+        }
+    }
+}
+
+/// What the writer thread pumps: encoded frames in order, then `Done`
+/// or a terminal `Error`.
+enum Out {
+    Result(Frame),
+    Done(u64),
+    Error(u16, String),
+}
+
+fn handle_connection(stream: TcpStream, peer: String, shared: Arc<ServerShared>, id: u64) {
+    let _guard = ActiveGuard {
+        shared: shared.clone(),
+        id,
+    };
+    let _ = stream.set_nodelay(true);
+    serve_connection(stream, peer, &shared, id);
+}
+
+/// Everything after accept: handshake, session, read loop, teardown.
+/// Errors are per-connection — this function never panics the server.
+fn serve_connection(stream: TcpStream, peer: String, shared: &Arc<ServerShared>, id: u64) {
+    let agg = &shared.stats;
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+
+    // --- handshake: Hello must be the first frame ---
+    let (queries, views) = match protocol::read_frame(&mut reader) {
+        Ok(Some(Frame::Hello { queries, views })) => (queries, views),
+        Ok(Some(_)) => {
+            agg.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            send_error_now(&stream, ERR_BAD_HELLO, "expected Hello as the first frame");
+            return;
+        }
+        Ok(None) => return, // connected and left; not an error
+        Err(_) => {
+            agg.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            send_error_now(&stream, ERR_PROTOCOL, "malformed handshake frame");
+            return;
+        }
+    };
+    let table = match resolve_views(&shared.engine, &queries, &views) {
+        Ok(t) => t,
+        Err((code, msg)) => {
+            agg.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            send_error_now(&stream, code, &msg);
+            return;
+        }
+    };
+
+    // --- Welcome (written before the writer thread exists) ---
+    let mut write_half = match stream.try_clone() {
+        Ok(s) => BufWriter::new(s),
+        Err(_) => return,
+    };
+    let names: Vec<String> = table.iter().map(|h| h.name().to_string()).collect();
+    if protocol::write_frame(&mut write_half, &Frame::Welcome { views: names })
+        .and_then(|_| write_half.flush())
+        .is_err()
+    {
+        return;
+    }
+
+    // --- per-connection plumbing: result queue, writer thread, session ---
+    let conn_stats = Arc::new(ServeStats::default());
+    let (tx, rx) = queue::bounded::<Out>(shared.config.queue_depth.max(1));
+    let entry = Arc::new(ConnEntry {
+        id,
+        peer,
+        stats: conn_stats.clone(),
+        queue: tx.stats().clone(),
+    });
+    shared.conns.lock().unwrap().push(entry);
+
+    let writer = {
+        let agg_bytes = shared.clone();
+        std::thread::Builder::new()
+            .name(format!("serve-write-{id}"))
+            .spawn(move || writer_loop(write_half, rx, agg_bytes))
+    };
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+
+    // The sink runs on session workers (Sync required); QueueTx wraps a
+    // SyncSender (not Sync), so the sink keeps it under a mutex and
+    // clones a handle out per push — the established pattern from the
+    // accelerator's submission path.
+    let abort = Arc::new(AtomicBool::new(false));
+    let sink_tx = Mutex::new(tx.clone());
+    let sink_table: Arc<[ViewHandle]> = table.clone().into();
+    let sink_stats = conn_stats.clone();
+    let sink_abort = abort.clone();
+    let sink_agg = shared.clone();
+    let sink = CallbackSink::new(move |doc: &crate::text::Document, result| {
+        if sink_abort.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut views = Vec::with_capacity(sink_table.len());
+        for (vi, h) in sink_table.iter().enumerate() {
+            let mut buf = Vec::new();
+            protocol::encode_batch(result.view_batch(h), &mut buf);
+            views.push((vi as u16, buf));
+        }
+        sink_stats.results.fetch_add(1, Ordering::Relaxed);
+        sink_agg.stats.results.fetch_add(1, Ordering::Relaxed);
+        let tx = sink_tx.lock().unwrap().clone();
+        // a failed push means the connection is tearing down; results
+        // for a dead client are dropped by design
+        let _ = tx.push(Out::Result(Frame::Result {
+            doc_id: doc.id,
+            views,
+        }));
+    });
+    let mut session = shared
+        .engine
+        .session()
+        .threads(shared.config.threads_per_connection.max(1))
+        .queue_depth(shared.config.queue_depth.max(1))
+        .sink(Arc::new(sink))
+        .start();
+
+    // --- read loop ---
+    enum Ended {
+        Finished,
+        Disconnected,
+        Protocol(u16, String),
+    }
+    let mut ended = loop {
+        match protocol::read_frame(&mut reader) {
+            Ok(Some(Frame::Doc { id: doc_id, bytes })) => {
+                let len = bytes.len() as u64;
+                match framing::doc_from_bytes(doc_id, bytes) {
+                    Ok(doc) => {
+                        conn_stats.docs.fetch_add(1, Ordering::Relaxed);
+                        conn_stats.bytes_in.fetch_add(len, Ordering::Relaxed);
+                        agg.docs.fetch_add(1, Ordering::Relaxed);
+                        agg.bytes_in.fetch_add(len, Ordering::Relaxed);
+                        // blocks when the session queue is full — the
+                        // last link of the backpressure chain
+                        if session.push(doc).is_err() {
+                            break Ended::Protocol(
+                                ERR_SERVER,
+                                "session workers unavailable".to_string(),
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        break Ended::Protocol(ERR_BAD_DOC, format!("doc {doc_id}: {e}"))
+                    }
+                }
+            }
+            Ok(Some(Frame::Finish)) => break Ended::Finished,
+            Ok(Some(_)) => {
+                break Ended::Protocol(ERR_PROTOCOL, "unexpected frame type".to_string())
+            }
+            Ok(None) => break Ended::Disconnected,
+            Err(ProtocolError::Io(_)) => break Ended::Disconnected,
+            Err(e) => break Ended::Protocol(ERR_PROTOCOL, e.to_string()),
+        }
+    };
+
+    // --- teardown ---
+    if let Ended::Finished = ended {
+        // drain every queued document; the sink pushes the remaining
+        // results before finish() returns
+        let report = session.finish();
+        let _ = tx.push(Out::Done(report.docs as u64));
+    } else {
+        // disconnect or protocol error: stop producing results, drain
+        // the session without writing, then (on protocol errors) tell
+        // the client what happened
+        abort.store(true, Ordering::Relaxed);
+        drop(session);
+        match &mut ended {
+            Ended::Protocol(code, msg) => {
+                agg.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                conn_stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.push(Out::Error(*code, std::mem::take(msg)));
+            }
+            Ended::Disconnected => {
+                agg.disconnects.fetch_add(1, Ordering::Relaxed);
+                conn_stats.disconnects.fetch_add(1, Ordering::Relaxed);
+            }
+            Ended::Finished => unreachable!(),
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+}
+
+/// The per-connection writer: pops encoded frames and writes them. On a
+/// write error it keeps draining (so blocked producers unblock) but
+/// stops writing — the queue closes once the sink and reader drop their
+/// producer handles.
+fn writer_loop(mut w: BufWriter<TcpStream>, rx: queue::QueueRx<Out>, shared: Arc<ServerShared>) {
+    let mut dead = false;
+    while let Some(out) = rx.pop() {
+        if dead {
+            continue;
+        }
+        let frame = match out {
+            Out::Result(f) => f,
+            Out::Done(docs) => Frame::Done { docs },
+            Out::Error(code, message) => Frame::Error { code, message },
+        };
+        match protocol::write_frame(&mut w, &frame).and_then(|n| w.flush().map(|_| n)) {
+            Ok(n) => {
+                shared.stats.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+            }
+            Err(_) => dead = true,
+        }
+    }
+}
+
+/// Best-effort terminal error before the writer thread exists (handshake
+/// failures write directly; there is no concurrent writer yet).
+fn send_error_now(stream: &TcpStream, code: u16, message: &str) {
+    if let Ok(s) = stream.try_clone() {
+        let mut w = BufWriter::new(s);
+        let _ = protocol::write_frame(
+            &mut w,
+            &Frame::Error {
+                code,
+                message: message.to_string(),
+            },
+        );
+        let _ = w.flush();
+    }
+}
+
+/// Resolve the Hello's namespaces + view subscriptions against the
+/// engine's catalog: empty query list = every registered query, empty
+/// view list = every view of the selected queries. A subscribed view
+/// must live inside the selected namespaces — per-tenant isolation, not
+/// just name resolution.
+fn resolve_views(
+    engine: &Engine,
+    queries: &[String],
+    views: &[String],
+) -> Result<Vec<ViewHandle>, (u16, String)> {
+    let selected: Vec<QueryHandle> = if queries.is_empty() {
+        engine.queries().to_vec()
+    } else {
+        let mut qs = Vec::with_capacity(queries.len());
+        for name in queries {
+            match engine.query(name) {
+                Ok(q) => qs.push(q),
+                Err(_) => {
+                    return Err((
+                        ERR_UNKNOWN_QUERY,
+                        format!("no query '{name}' in the catalog"),
+                    ))
+                }
+            }
+        }
+        qs
+    };
+    if views.is_empty() {
+        return Ok(selected
+            .iter()
+            .flat_map(|q| q.views().iter().cloned())
+            .collect());
+    }
+    let mut table = Vec::with_capacity(views.len());
+    for name in views {
+        let found = selected.iter().find_map(|q| {
+            q.views()
+                .iter()
+                .find(|h| h.name() == name)
+                .cloned()
+                .or_else(|| q.view(name).ok())
+        });
+        match found {
+            Some(h) => table.push(h),
+            None => {
+                return Err((
+                    ERR_UNKNOWN_VIEW,
+                    format!("no view '{name}' in the subscribed namespaces"),
+                ))
+            }
+        }
+    }
+    Ok(table)
+}

@@ -1,0 +1,387 @@
+//! Serving-tier integration tests (ISSUE 6 satellite): loopback
+//! correctness under concurrency, slow-client backpressure, mid-stream
+//! disconnects, malformed frames, and admission control — all against a
+//! real TCP server on an ephemeral loopback port.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use boost::coordinator::{Engine, EngineConfig};
+use boost::corpus::CorpusSpec;
+use boost::exec::ViewHandle;
+use boost::partition::PartitionMode;
+use boost::serve::protocol::{self, Frame};
+use boost::serve::{run_load, Client, ClientError, ServeConfig, Server};
+use boost::text::Document;
+
+fn catalog(config: EngineConfig) -> Arc<Engine> {
+    Arc::new(
+        Engine::builder()
+            .register_builtin("t1")
+            .register_builtin("t3")
+            .config(config)
+            .build()
+            .expect("catalog builds"),
+    )
+}
+
+fn start(engine: Arc<Engine>, max_connections: usize, queue_depth: usize) -> Server {
+    Server::start(
+        engine,
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            admin_addr: Some("127.0.0.1:0".into()),
+            max_connections,
+            queue_depth,
+            threads_per_connection: 2,
+        },
+    )
+    .expect("server starts")
+}
+
+/// The server's view table for an empty Hello: every query's views, in
+/// catalog order — the order the selftest and these tests must mirror
+/// when building the run_doc reference.
+fn full_table(engine: &Engine) -> Vec<ViewHandle> {
+    engine
+        .queries()
+        .iter()
+        .flat_map(|q| q.views().iter().cloned())
+        .collect()
+}
+
+fn reference_views(engine: &Engine, table: &[ViewHandle], doc: &Document) -> Vec<(u16, Vec<u8>)> {
+    let result = engine.run_doc(doc);
+    table
+        .iter()
+        .enumerate()
+        .map(|(vi, h)| {
+            let mut buf = Vec::new();
+            protocol::encode_batch(result.view_batch(h), &mut buf);
+            (vi as u16, buf)
+        })
+        .collect()
+}
+
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+/// 8 concurrent clients over a randomized corpus: every per-view result
+/// byte-identical to synchronous `run_doc` on the same engine.
+#[test]
+fn loopback_concurrent_clients_byte_identical() {
+    let engine = catalog(EngineConfig::default());
+    let corpus = CorpusSpec::news(48, 384).with_seed(0x5E7E_0001).generate();
+    let table = full_table(&engine);
+    let server = start(engine.clone(), 16, 32);
+
+    let report = run_load(server.local_addr(), &corpus.docs, 8, &[]).expect("load run");
+    assert_eq!(report.docs, corpus.docs.len());
+    assert_eq!(report.results.len(), corpus.docs.len());
+
+    let mut seen = vec![false; corpus.docs.len()];
+    for rf in &report.results {
+        let doc = &corpus.docs[rf.doc_id as usize];
+        assert!(!std::mem::replace(&mut seen[rf.doc_id as usize], true));
+        assert_eq!(
+            rf.views,
+            reference_views(&engine, &table, doc),
+            "doc {} not byte-identical to run_doc",
+            rf.doc_id
+        );
+    }
+    assert!(seen.iter().all(|&s| s), "every document answered");
+    assert_eq!(server.stats().docs, corpus.docs.len() as u64);
+}
+
+/// Same equivalence over the simulated-accelerator engine: the serving
+/// tier composes with the accelerated path, not just pure software.
+#[test]
+fn loopback_simulated_engine_byte_identical() {
+    let engine = catalog(EngineConfig::simulated(PartitionMode::ExtractOnly));
+    let corpus = CorpusSpec::tweets(24, 256).with_seed(0x5E7E_0002).generate();
+    let table = full_table(&engine);
+    let server = start(engine.clone(), 16, 32);
+
+    let report = run_load(server.local_addr(), &corpus.docs, 4, &[]).expect("load run");
+    assert_eq!(report.results.len(), corpus.docs.len());
+    for rf in &report.results {
+        let doc = &corpus.docs[rf.doc_id as usize];
+        assert_eq!(rf.views, reference_views(&engine, &table, doc));
+    }
+    drop(server); // joins connection handlers before the engine drops
+}
+
+/// A client that sends documents but never reads results: the writer
+/// blocks on the socket, the depth-1 result queue fills, the sink blocks
+/// (accounted as `blocked_ns`), and only THIS connection's pipeline
+/// stalls — the reader thread still serves other clients.
+#[test]
+fn slow_client_backpressure_is_accounted_and_isolated() {
+    let engine = catalog(EngineConfig::default());
+    let server = start(engine, 16, 1);
+    let addr = server.local_addr();
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = BufWriter::new(stream.try_clone().expect("clone"));
+    protocol::write_frame(
+        &mut writer,
+        &Frame::Hello {
+            queries: vec![],
+            views: vec![],
+        },
+    )
+    .expect("hello");
+    writer.flush().expect("flush");
+    match protocol::read_frame(&mut reader).expect("welcome") {
+        Some(Frame::Welcome { .. }) => {}
+        other => panic!("expected Welcome, got {other:?}"),
+    }
+
+    // sender thread: pump documents WITHOUT reading results, until the
+    // main thread has observed backpressure (or a generous cap)
+    let observed = Arc::new(AtomicBool::new(false));
+    let sender = {
+        let observed = observed.clone();
+        let text = "Alice Smith met Bob Jones at IBM Research in New York. ".repeat(8);
+        std::thread::spawn(move || {
+            for i in 0..20_000u64 {
+                if observed.load(Ordering::Relaxed) {
+                    break;
+                }
+                protocol::write_frame(
+                    &mut writer,
+                    &Frame::Doc {
+                        id: i,
+                        bytes: text.as_bytes().to_vec(),
+                    },
+                )
+                .expect("doc frame");
+                writer.flush().expect("doc flush");
+            }
+            protocol::write_frame(&mut writer, &Frame::Finish).expect("finish");
+            writer.flush().expect("finish flush");
+        })
+    };
+
+    // a live connection's queue gauges show the blocked producer
+    let saw_block = wait_until(Duration::from_secs(30), || {
+        server
+            .connections()
+            .iter()
+            .any(|c| c.queue.blocked_ns > 0 && c.queue.stalls > 0)
+    });
+    observed.store(true, Ordering::Relaxed);
+
+    // while the slow client is stalled, a well-behaved client on the SAME
+    // server completes promptly — the stall is per-connection
+    let mut neighbour = Client::connect(addr, &[], &[]).expect("neighbour connect");
+    neighbour.send(0, "Carol visited Paris.").expect("send");
+    let neighbour_report = neighbour.finish().expect("neighbour finish");
+    assert_eq!(neighbour_report.results.len(), 1);
+
+    // unblock: drain the slow client's results to Done
+    let mut done = false;
+    while let Some(frame) = protocol::read_frame(&mut reader).expect("drain") {
+        if let Frame::Done { .. } = frame {
+            done = true;
+            break;
+        }
+    }
+    assert!(done, "slow client drained to Done");
+    sender.join().expect("sender joins");
+    assert!(saw_block, "expected blocked_ns > 0 on the slow connection");
+
+    // after teardown the evidence survives in the aggregate
+    assert!(wait_until(Duration::from_secs(5), || {
+        server.stats().result_blocked_ns > 0
+    }));
+}
+
+/// A client that vanishes mid-stream tears down one session; the server
+/// accounts the disconnect and keeps serving new connections.
+#[test]
+fn mid_stream_disconnect_is_survived() {
+    let engine = catalog(EngineConfig::default());
+    let server = start(engine, 16, 8);
+    let addr = server.local_addr();
+
+    {
+        let mut rogue = Client::connect(addr, &[], &[]).expect("rogue connect");
+        rogue.send(7, "Dave left without saying goodbye").expect("send");
+        // dropped without finish: socket shut down mid-stream
+    }
+    assert!(
+        wait_until(Duration::from_secs(5), || server.stats().disconnects >= 1),
+        "server accounts the disconnect"
+    );
+
+    let mut after = Client::connect(addr, &[], &[]).expect("post-disconnect connect");
+    after.send(8, "Erin met Frank at MIT.").expect("send");
+    let report = after.finish().expect("finish");
+    assert_eq!(report.results.len(), 1);
+    assert_eq!(report.results[0].doc_id, 8);
+}
+
+/// Unknown frame types and truncated frames produce a clean protocol
+/// error (an `Error` frame where the socket still works, a counted
+/// teardown where it doesn't) — never a panic, and never a wedged server.
+#[test]
+fn malformed_and_truncated_frames_fail_cleanly() {
+    let engine = catalog(EngineConfig::default());
+    let server = start(engine, 16, 8);
+    let addr = server.local_addr();
+
+    // unknown frame type after a valid handshake → Error frame back
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = BufWriter::new(stream.try_clone().expect("clone"));
+    protocol::write_frame(
+        &mut writer,
+        &Frame::Hello {
+            queries: vec![],
+            views: vec![],
+        },
+    )
+    .expect("hello");
+    writer.flush().expect("flush");
+    assert!(matches!(
+        protocol::read_frame(&mut reader).expect("welcome"),
+        Some(Frame::Welcome { .. })
+    ));
+    writer.write_all(&[5, 0, 0, 0, 0x7F, 1, 2, 3, 4]).expect("garbage frame");
+    writer.flush().expect("flush");
+    let mut got_error = false;
+    while let Ok(Some(frame)) = protocol::read_frame(&mut reader) {
+        if let Frame::Error { code, .. } = frame {
+            assert_eq!(code, protocol::ERR_PROTOCOL);
+            got_error = true;
+            break;
+        }
+    }
+    assert!(got_error, "expected an Error frame for the unknown type");
+    drop((reader, writer, stream));
+
+    // truncated frame: a length prefix promising more than arrives
+    let mut stream = TcpStream::connect(addr).expect("connect 2");
+    stream.write_all(&[100, 0, 0, 0, 0x01, 0x01]).expect("partial frame");
+    drop(stream);
+
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            server.stats().protocol_errors >= 2
+        }),
+        "both violations counted"
+    );
+
+    // the server still serves
+    let mut after = Client::connect(addr, &[], &[]).expect("post-error connect");
+    after.send(1, "Grace phoned Heidi.").expect("send");
+    assert_eq!(after.finish().expect("finish").results.len(), 1);
+}
+
+/// Past the connection cap the server answers `Busy` and closes; once a
+/// slot frees, new connections are admitted again.
+#[test]
+fn admission_control_rejects_past_cap_with_busy() {
+    let engine = catalog(EngineConfig::default());
+    let server = start(engine, 1, 8);
+    let addr = server.local_addr();
+
+    let first = Client::connect(addr, &[], &[]).expect("first connect");
+    match Client::connect(addr, &[], &[]) {
+        Err(ClientError::Busy { cap, .. }) => assert_eq!(cap, 1),
+        other => panic!("expected Busy, got {other:?}"),
+    }
+    assert!(server.stats().rejected >= 1);
+
+    drop(first); // frees the slot (mid-stream disconnect path)
+    assert!(
+        wait_until(Duration::from_secs(5), || server.stats().active == 0),
+        "slot freed"
+    );
+    let mut third = Client::connect(addr, &[], &[]).expect("post-release connect");
+    third.send(1, "Ivan texted Judy.").expect("send");
+    assert_eq!(third.finish().expect("finish").results.len(), 1);
+}
+
+/// The Hello's namespaces really scope the connection: a subscription to
+/// a view outside the selected queries is rejected with a clean error.
+#[test]
+fn hello_namespaces_scope_the_view_table() {
+    let engine = catalog(EngineConfig::default());
+    let server = start(engine.clone(), 16, 8);
+    let addr = server.local_addr();
+
+    // t1-only connection sees exactly t1's views
+    let t1 = Client::connect(addr, &["t1".to_string()], &[]).expect("t1 connect");
+    let t1_names: Vec<String> = engine
+        .query("t1")
+        .expect("t1 registered")
+        .views()
+        .iter()
+        .map(|h| h.name().to_string())
+        .collect();
+    assert_eq!(t1.view_table(), &t1_names[..]);
+    drop(t1);
+
+    // a t3 view is not visible from a t1-only connection
+    match Client::connect(addr, &["t1".to_string()], &["t3.Phones".to_string()]) {
+        Err(ClientError::Rejected { code, .. }) => {
+            assert_eq!(code, protocol::ERR_UNKNOWN_VIEW)
+        }
+        Ok(_) => panic!("expected the cross-namespace subscription to be rejected"),
+        Err(other) => panic!("expected Rejected, got {other}"),
+    }
+
+    // unknown query namespace → clean error too
+    match Client::connect(addr, &["nope".to_string()], &[]) {
+        Err(ClientError::Rejected { code, .. }) => {
+            assert_eq!(code, protocol::ERR_UNKNOWN_QUERY)
+        }
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+}
+
+/// `GET /metrics` on the admin port: HTTP/1.0 200, JSON, with serve,
+/// arena, and block-pool sections; other paths 404.
+#[test]
+fn admin_metrics_endpoint_serves_json() {
+    use std::io::Read;
+
+    let engine = catalog(EngineConfig::default());
+    let server = start(engine, 16, 8);
+    let admin = server.admin_addr().expect("admin configured");
+
+    // generate a little traffic first
+    let corpus = CorpusSpec::news(4, 256).with_seed(0x5E7E_0003).generate();
+    let _ = run_load(server.local_addr(), &corpus.docs, 2, &[]).expect("load");
+
+    let get = |path: &str| -> String {
+        let mut s = TcpStream::connect(admin).expect("admin connect");
+        write!(s, "GET {path} HTTP/1.0\r\nHost: x\r\n\r\n").expect("request");
+        let mut body = String::new();
+        s.read_to_string(&mut body).expect("response");
+        body
+    };
+    let resp = get("/metrics");
+    assert!(resp.starts_with("HTTP/1.0 200"), "got: {resp}");
+    assert!(resp.contains("\"serve\""));
+    assert!(resp.contains("\"arena\""));
+    assert!(resp.contains("\"blocks\""));
+    assert!(resp.contains("\"accepted\""));
+    let resp = get("/nope");
+    assert!(resp.starts_with("HTTP/1.0 404"), "got: {resp}");
+}
