@@ -1,22 +1,45 @@
-//! The multi-threaded HW/SW communication interface (paper Fig 3).
+//! The multi-threaded HW/SW communication interface (paper Fig 3),
+//! generalized to a **pool of N accelerator devices**.
 //!
 //! SystemT worker threads execute the supergraph document-per-thread; when
-//! one reaches a `SubgraphExec` operator it *submits* the document to the
-//! dedicated **communication thread** and sleeps on a reply channel. The
-//! communication thread drains pending submissions, combines them into a
-//! **work package** (four parallel byte streams, documents separated by
-//! NUL, per-document records), ships the package to the accelerator
-//! ([`crate::runtime::PackageEngine`] — the PJRT-executed Pallas kernel),
-//! reconstructs spans from the returned hit stream, evaluates the
+//! one reaches a `SubgraphExec` operator it *submits* the document to a
+//! **communication thread** and sleeps on a reply channel. Each pool
+//! device owns one communication thread, one bounded submission queue,
+//! and one [`crate::runtime::PackageEngine`] materialized from its own
+//! [`EngineSpec`]. The thread drains pending submissions, combines them
+//! into a **work package** (four parallel byte streams, documents
+//! separated by NUL, per-document records), ships the package to its
+//! device, reconstructs spans from the returned hit stream, evaluates the
 //! subgraph's relational body, and wakes the workers whose documents
 //! completed — exactly the paper's "status register + wake up the software
-//! threads that belong to this work package" protocol.
+//! threads that belong to this work package" protocol, multiplied by N.
 //!
 //! Submissions travel through the same bounded-queue machinery
 //! ([`crate::runtime::queue`]) that feeds [`Session`] worker pools, so the
-//! HW and SW paths share one scheduler primitive: when the communication
+//! HW and SW paths share one scheduler primitive: when a communication
 //! thread falls behind, `submit` blocks the worker (backpressure) instead
 //! of buffering unboundedly.
+//!
+//! ## Dispatch, failover, and adaptive routing
+//!
+//! `submit` routes each document to the device with the **smallest
+//! current queue depth**, breaking ties round-robin from a rotating start
+//! so an idle pool still interleaves. When a device errors mid-run (a
+//! bricked device is modeled by
+//! [`FaultPlan::fail_every`](crate::runtime::FaultPlan) `= 1`), its
+//! communication thread walks a failover chain instead of failing the
+//! workers: re-queue the package's documents on the least-loaded sibling
+//! (non-blocking, at most `N - 1` attempts per document), then re-scan
+//! the *same* packed package on the host CPU
+//! ([`NativePackageEngine`] shares the device's exact hit semantics), so
+//! views stay byte-identical through device failure. Single-device
+//! services keep the original contract: the error goes to the submitting
+//! workers. [`AccelSubgraphRunner`] additionally routes *new* calls
+//! straight to the software executors when every device queue is
+//! saturated and the cost model says offload would not pay
+//! ([`crate::optimizer::cost`]); per-device gauges and the routing
+//! counters surface through [`AccelService::device_snapshots`] and
+//! [`AccelService::pool_snapshot`].
 //!
 //! ## Buffer ownership across the HW/SW boundary
 //!
@@ -26,22 +49,25 @@
 //! batches that the communication thread drops after the relational body
 //! runs (routed home to the worker's shard), and replies carry
 //! comm-origin batches that workers clone out of and release (routed home
-//! to the communication shard — the thread pins [`ArenaId::comm`] at
-//! start-up). The per-(doc, subgraph) reply cache evicts an entry as soon
+//! to the communication shard — device `d`'s thread pins
+//! [`ArenaId::comm_for`]`(d)` at start-up, so each device's reply batches
+//! refill the pool that produced them, not a shared shard all devices
+//! contend on). The per-(doc, subgraph) reply cache evicts an entry as soon
 //! as its last output is consumed, so reply buffers go home *within* the
 //! document that produced them and the accelerated route serves a warm
 //! document with **zero fresh arena allocations** — the same steady state
 //! as the software path (asserted in `rust/tests/columnar.rs`).
 //!
-//! [`ArenaId::comm`]: crate::exec::batch::ArenaId::comm
+//! [`ArenaId::comm_for`]: crate::exec::batch::ArenaId::comm_for
 //! [`Session`]: crate::coordinator::Session
+//! [`NativePackageEngine`]: crate::runtime::NativePackageEngine
 
 pub mod packing;
 
-pub use packing::{pack_group, DocSlot, WorkPackage};
+pub use packing::{pack_group, DocSlot, SlotIndex, WorkPackage};
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -50,12 +76,14 @@ use anyhow::Result;
 
 use crate::aog::{Schema, Tuple};
 use crate::exec::{Executor, Profiler, SubgraphRunner, TupleBatch};
-use crate::hwcompiler::{AccelConfig, MatcherRef, BLOCK_SIZES};
-use crate::metrics::{AccelMetrics, QueueSnapshot, QueueStats};
-use crate::partition::PartitionPlan;
+use crate::hwcompiler::{AccelConfig, ArtifactKey, MatcherRef, BLOCK_SIZES};
+use crate::metrics::{
+    AccelDeviceSnapshot, AccelMetrics, PoolMetrics, PoolSnapshot, QueueSnapshot, QueueStats,
+};
+use crate::partition::{PartitionPlan, SoftwareSubgraphRunner};
 use crate::perfmodel::FpgaModel;
 use crate::runtime::queue::{self, QueueRx, QueueTx};
-use crate::runtime::{EngineSpec, PackageEngine, PackedPackage};
+use crate::runtime::{EngineSpec, NativePackageEngine, PackageEngine, PackageHits, PackedPackage};
 use crate::text::{Document, TokenIndex};
 
 /// Service configuration.
@@ -79,6 +107,11 @@ pub struct AccelOptions {
     pub queue_depth: usize,
     /// Timing model used for the modeled-throughput metrics.
     pub model: FpgaModel,
+    /// Number of accelerator devices in the pool (≥ 1). Each device gets
+    /// its own communication thread, bounded submission queue, engine,
+    /// and pinned arena shard; [`AccelService::submit`] dispatches by
+    /// least queue depth. `1` is the paper's single-device configuration.
+    pub devices: usize,
 }
 
 impl Default for AccelOptions {
@@ -89,6 +122,7 @@ impl Default for AccelOptions {
             combine_min_bytes: 1000,
             queue_depth: 256,
             model: FpgaModel::paper(),
+            devices: 1,
         }
     }
 }
@@ -101,6 +135,9 @@ struct Submission {
     doc: Document,
     tokens: Arc<TokenIndex>,
     ext: Vec<TupleBatch>,
+    /// Devices that have already failed this submission — bounds the
+    /// failover chain at `devices - 1` sibling hops.
+    attempts: u32,
     reply: Sender<Result<Arc<Vec<TupleBatch>>, String>>,
 }
 
@@ -112,82 +149,182 @@ struct Prepared {
     body_exec: Executor,
 }
 
-/// The accelerator service: owns the communication thread.
+/// State shared between the dispatcher and every communication thread:
+/// the per-device producer handles (for dispatch *and* sibling
+/// forwarding on failover) and the pool-level routing counters.
+struct PoolShared {
+    /// Producer handle per device; `None` once the service shuts down.
+    txs: Vec<Mutex<Option<QueueTx<Submission>>>>,
+    /// Per-device submission-queue gauges (shared with the queue halves).
+    queues: Vec<Arc<QueueStats>>,
+    /// Retry/failover/software-routing counters.
+    pool: Arc<PoolMetrics>,
+}
+
+impl PoolShared {
+    fn devices(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Clone out device `d`'s producer handle, if the service still runs.
+    /// Cloning out of the lock means a full queue blocks only the caller,
+    /// never everyone behind the mutex.
+    fn tx(&self, d: usize) -> Option<QueueTx<Submission>> {
+        self.txs[d].lock().unwrap().clone()
+    }
+
+    /// The least-loaded device, scanning from `start` so equal depths
+    /// break round-robin. `skip` excludes the failing device when a
+    /// communication thread forwards to a sibling; returns `None` only
+    /// when `skip` eliminates the whole pool.
+    fn pick(&self, start: usize, skip: Option<usize>) -> Option<usize> {
+        let n = self.devices();
+        let mut best: Option<(u64, usize)> = None;
+        for k in 0..n {
+            let d = (start + k) % n;
+            if Some(d) == skip {
+                continue;
+            }
+            let depth = self.queues[d].snapshot().depth;
+            if best.map_or(true, |(bd, _)| depth < bd) {
+                best = Some((depth, d));
+            }
+        }
+        best.map(|(_, d)| d)
+    }
+}
+
+/// The accelerator service: owns the pool's communication threads.
 pub struct AccelService {
-    tx: Mutex<Option<QueueTx<Submission>>>,
-    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    shared: Arc<PoolShared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Aggregate package counters across the whole pool.
     metrics: Arc<AccelMetrics>,
-    queue_stats: Arc<QueueStats>,
+    /// Per-device package counters, indexed by device.
+    device_metrics: Vec<Arc<AccelMetrics>>,
+    /// Rotating dispatch start for round-robin tie-breaks.
+    rr: AtomicUsize,
     stop: Arc<AtomicBool>,
     options: AccelOptions,
 }
 
 impl AccelService {
-    /// Start the service for a set of compiled subgraphs. The engine is
-    /// materialized from `spec` on the communication thread — the single
-    /// thread that drives the device (paper Fig 3).
+    /// Start the service for a set of compiled subgraphs.
+    /// `options.devices` sizes the pool: device 0 is materialized from
+    /// `spec` verbatim (so a simulator spec's shared stats keep feeding
+    /// [`Engine::sim_snapshot`](crate::coordinator::Engine::sim_snapshot)),
+    /// and devices `1..N` from [`EngineSpec::fork`]. Engines are built on
+    /// their own communication threads — the one thread that drives each
+    /// device (paper Fig 3).
     pub fn start(
         configs: Vec<AccelConfig>,
         spec: EngineSpec,
         options: AccelOptions,
     ) -> Arc<AccelService> {
+        let devices = options.devices.max(1);
+        let specs: Vec<EngineSpec> = (0..devices)
+            .map(|d| if d == 0 { spec.clone() } else { spec.fork(d as u64) })
+            .collect();
+        Self::start_pool(configs, specs, options)
+    }
+
+    /// Start a pool with an explicit spec per device — one communication
+    /// thread, bounded queue, engine, and pinned arena shard each. The
+    /// device-failover tests use this to brick exactly one device
+    /// (`FaultPlan::fail_every = 1`) while its siblings stay healthy;
+    /// `options.devices` is overridden by `specs.len()`.
+    pub fn start_pool(
+        configs: Vec<AccelConfig>,
+        specs: Vec<EngineSpec>,
+        mut options: AccelOptions,
+    ) -> Arc<AccelService> {
+        assert!(!specs.is_empty(), "a pool needs at least one device");
         assert!(
             BLOCK_SIZES.contains(&options.block),
             "block {} has no compiled artifact (menu: {:?})",
             options.block,
             BLOCK_SIZES
         );
-        let prepared: Vec<Prepared> = configs
-            .into_iter()
-            .map(|config| {
-                let (tables, accepts) = config.pack_tables();
-                let (tables, accepts) = (Arc::new(tables), Arc::new(accepts));
-                let body_exec = Executor::new(
-                    Arc::new((*config.body).clone()),
-                    Arc::new(Profiler::disabled()),
-                );
-                Prepared {
-                    config,
-                    tables,
-                    accepts,
-                    body_exec,
-                }
-            })
-            .collect();
-        let (tx, rx) = queue::bounded::<Submission>(options.queue_depth);
-        let queue_stats = tx.stats().clone();
+        options.devices = specs.len();
+        let mut txs = Vec::with_capacity(specs.len());
+        let mut queues = Vec::with_capacity(specs.len());
+        let mut rxs = Vec::with_capacity(specs.len());
+        for _ in 0..specs.len() {
+            let (tx, rx) = queue::bounded::<Submission>(options.queue_depth);
+            queues.push(tx.stats().clone());
+            txs.push(Mutex::new(Some(tx)));
+            rxs.push(rx);
+        }
+        let shared = Arc::new(PoolShared {
+            txs,
+            queues,
+            pool: Arc::new(PoolMetrics::default()),
+        });
         let metrics = Arc::new(AccelMetrics::default());
+        let device_metrics: Vec<Arc<AccelMetrics>> = (0..specs.len())
+            .map(|_| Arc::new(AccelMetrics::default()))
+            .collect();
         let stop = Arc::new(AtomicBool::new(false));
-        let thread_metrics = metrics.clone();
-        let thread_stop = stop.clone();
-        let opts = options.clone();
-        let handle = std::thread::Builder::new()
-            .name("accel-comm".into())
-            .spawn(move || {
-                // home this thread on the reserved communication shard:
-                // post-stage batches check out of (and return to) a pool
-                // no worker contends on
-                crate::exec::batch::pin_thread(crate::exec::batch::ArenaId::comm());
-                match spec.build() {
-                    Ok(engine) => {
-                        comm_thread(rx, prepared, engine, opts, thread_metrics, thread_stop)
+        let mut handles = Vec::with_capacity(specs.len());
+        for (d, (spec, rx)) in specs.into_iter().zip(rxs).enumerate() {
+            // each device pre-packs its own table set and body executors:
+            // Prepared is not Send-shareable (executors), and per-device
+            // copies keep every post-stage read local to its thread
+            let prepared: Vec<Prepared> = configs
+                .iter()
+                .map(|config| {
+                    let config = config.clone();
+                    let (tables, accepts) = config.pack_tables();
+                    let (tables, accepts) = (Arc::new(tables), Arc::new(accepts));
+                    let body_exec = Executor::new(
+                        Arc::new((*config.body).clone()),
+                        Arc::new(Profiler::disabled()),
+                    );
+                    Prepared {
+                        config,
+                        tables,
+                        accepts,
+                        body_exec,
                     }
-                    Err(e) => {
-                        // engine failed to materialize: fail every
-                        // submission rather than hanging the workers
-                        let msg = format!("accelerator engine init failed: {e}");
-                        while let Some(s) = rx.pop() {
-                            let _ = s.reply.send(Err(msg.clone()));
+                })
+                .collect();
+            let ctx = CommCtx {
+                device: d,
+                shared: shared.clone(),
+                aggregate: metrics.clone(),
+                device_metrics: device_metrics[d].clone(),
+            };
+            let opts = options.clone();
+            let thread_stop = stop.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("accel-comm-{d}"))
+                .spawn(move || {
+                    // home this thread on its device's reserved
+                    // communication shard: post-stage batches check out of
+                    // (and return to) a pool neither workers nor sibling
+                    // devices contend on
+                    crate::exec::batch::pin_thread(crate::exec::batch::ArenaId::comm_for(d));
+                    match spec.build() {
+                        Ok(engine) => comm_thread(rx, prepared, engine, opts, ctx, thread_stop),
+                        Err(e) => {
+                            // engine failed to materialize: fail every
+                            // submission rather than hanging the workers
+                            let msg = format!("accelerator engine init failed: {e}");
+                            while let Some(s) = rx.pop() {
+                                let _ = s.reply.send(Err(msg.clone()));
+                            }
                         }
                     }
-                }
-            })
-            .expect("spawn communication thread");
+                })
+                .expect("spawn communication thread");
+            handles.push(handle);
+        }
         Arc::new(AccelService {
-            tx: Mutex::new(Some(tx)),
-            handle: Mutex::new(Some(handle)),
+            shared,
+            handles: Mutex::new(handles),
             metrics,
-            queue_stats,
+            device_metrics,
+            rr: AtomicUsize::new(0),
             stop,
             options,
         })
@@ -195,8 +332,10 @@ impl AccelService {
 
     /// Submit one document for subgraph `id`; returns the receiver the
     /// worker blocks on (document-per-thread: the worker sleeps while the
-    /// accelerator works). Blocks while the bounded submission queue is
-    /// full — backpressure on the worker, per the shared scheduler rule.
+    /// accelerator works). The submission is dispatched to the device
+    /// with the smallest current queue depth (round-robin on ties);
+    /// blocks while that device's bounded queue is full — backpressure on
+    /// the worker, per the shared scheduler rule.
     pub fn submit(
         &self,
         subgraph_id: usize,
@@ -205,10 +344,8 @@ impl AccelService {
         ext: Vec<TupleBatch>,
     ) -> Receiver<Result<Arc<Vec<TupleBatch>>, String>> {
         let (reply, rx) = channel();
-        // clone the producer handle out of the lock so a full queue blocks
-        // only this worker, not everyone behind the mutex
-        let tx = self.tx.lock().unwrap().clone();
-        if let Some(tx) = tx {
+        let d = self.pick_device();
+        if let Some(tx) = self.shared.tx(d) {
             // a push error means the service shut down; dropping the
             // submission drops `reply`, and the worker's recv fails cleanly
             let _ = tx.push(Submission {
@@ -216,32 +353,89 @@ impl AccelService {
                 doc,
                 tokens,
                 ext,
+                attempts: 0,
                 reply,
             });
         }
         rx
     }
 
-    /// The service's metrics.
+    /// Least-queue-depth dispatch with a rotating tie-break start.
+    fn pick_device(&self) -> usize {
+        let n = self.shared.devices();
+        if n == 1 {
+            return 0;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        self.shared.pick(start, None).unwrap_or(0)
+    }
+
+    /// The service's aggregate metrics across every device.
     pub fn metrics(&self) -> &Arc<AccelMetrics> {
         &self.metrics
     }
 
-    /// Gauges of the bounded submission queue (depth, high-water, stalls).
+    /// Gauges of the bounded submission queues, merged across devices
+    /// (counters and depth sum; high-water takes the per-device max).
     pub fn queue_snapshot(&self) -> QueueSnapshot {
-        self.queue_stats.snapshot()
+        let mut merged = QueueSnapshot::default();
+        for q in &self.shared.queues {
+            merged.merge(&q.snapshot());
+        }
+        merged
     }
 
-    /// Service options (block size etc.).
+    /// Per-device gauges: each device's package counters and submission
+    /// queue, in device order.
+    pub fn device_snapshots(&self) -> Vec<AccelDeviceSnapshot> {
+        (0..self.shared.devices())
+            .map(|d| AccelDeviceSnapshot {
+                device: d,
+                accel: self.device_metrics[d].snapshot(),
+                queue: self.shared.queues[d].snapshot(),
+            })
+            .collect()
+    }
+
+    /// Pool-level routing counters (retries, failovers, software
+    /// fallbacks and software-routed calls).
+    pub fn pool_snapshot(&self) -> PoolSnapshot {
+        self.shared.pool.snapshot()
+    }
+
+    /// Number of devices in the pool.
+    pub fn devices(&self) -> usize {
+        self.shared.devices()
+    }
+
+    /// Smallest current submission-queue depth across the pool — the
+    /// adaptive router's load signal.
+    pub fn min_queue_depth(&self) -> u64 {
+        self.shared
+            .queues
+            .iter()
+            .map(|q| q.snapshot().depth)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Service options (block size, pool size etc.).
     pub fn options(&self) -> &AccelOptions {
         &self.options
     }
 
-    /// Stop the communication thread and wait for it.
+    /// Stop every communication thread and wait for them. The producer
+    /// handles in [`PoolShared`] are cleared first — communication
+    /// threads hold the shared pool state for sibling forwarding, so
+    /// leaving a handle behind would keep every channel open and the
+    /// threads waiting forever.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        self.tx.lock().unwrap().take(); // close the channel
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        for tx in &self.shared.txs {
+            tx.lock().unwrap().take(); // close this device's channel
+        }
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -253,13 +447,45 @@ impl Drop for AccelService {
     }
 }
 
-/// The communication thread main loop.
+/// One communication thread's identity and links: which device it is,
+/// the shared pool state (sibling queues, routing counters), and where
+/// its package counters go (the aggregate plus its own device row).
+struct CommCtx {
+    device: usize,
+    shared: Arc<PoolShared>,
+    aggregate: Arc<AccelMetrics>,
+    device_metrics: Arc<AccelMetrics>,
+}
+
+/// Validate and file one incoming submission. A `subgraph_id` beyond the
+/// compiled plan answers `Err` on its own reply channel — indexing with
+/// it would panic and take the whole communication thread (and every
+/// in-flight worker) down with it. Returns the group index filed into.
+fn intake(
+    s: Submission,
+    pending: &mut [Vec<Submission>],
+    pending_bytes: &mut [usize],
+) -> Option<usize> {
+    let gi = s.subgraph_id;
+    if gi >= pending.len() {
+        let _ = s.reply.send(Err(format!(
+            "invalid subgraph id {gi}: this service compiled {} subgraphs",
+            pending.len()
+        )));
+        return None;
+    }
+    pending_bytes[gi] += s.doc.len() + 1;
+    pending[gi].push(s);
+    Some(gi)
+}
+
+/// One device's communication thread main loop.
 fn comm_thread(
     rx: QueueRx<Submission>,
     prepared: Vec<Prepared>,
     engine: Box<dyn PackageEngine>,
     options: AccelOptions,
-    metrics: Arc<AccelMetrics>,
+    ctx: CommCtx,
     stop: Arc<AtomicBool>,
 ) {
     // pending submissions per subgraph
@@ -275,27 +501,19 @@ fn comm_thread(
         // the worker threads".
         match rx.pop() {
             Some(s) => {
-                let gi = s.subgraph_id;
-                pending_bytes[gi] += s.doc.len() + 1;
-                pending[gi].push(s);
+                intake(s, &mut pending, &mut pending_bytes);
             }
             None => break, // all producers gone
         }
         rx.drain_into(&mut drained);
         for s in drained.drain(..) {
-            let gi = s.subgraph_id;
-            pending_bytes[gi] += s.doc.len() + 1;
-            pending[gi].push(s);
+            let Some(gi) = intake(s, &mut pending, &mut pending_bytes) else {
+                continue;
+            };
             // don't hoard unboundedly: dispatch eagerly when a group can
             // fill a package
             if pending_bytes[gi] >= crate::hwcompiler::STREAMS * options.block {
-                dispatch_group(
-                    &mut pending[gi],
-                    &prepared[gi],
-                    engine.as_ref(),
-                    &options,
-                    &metrics,
-                );
+                dispatch_group(&mut pending[gi], &prepared[gi], engine.as_ref(), &options, &ctx);
                 pending_bytes[gi] = 0;
             }
         }
@@ -303,13 +521,7 @@ fn comm_thread(
         // data to the accelerator's work queue and starts again")
         for gi in 0..prepared.len() {
             if !pending[gi].is_empty() {
-                dispatch_group(
-                    &mut pending[gi],
-                    &prepared[gi],
-                    engine.as_ref(),
-                    &options,
-                    &metrics,
-                );
+                dispatch_group(&mut pending[gi], &prepared[gi], engine.as_ref(), &options, &ctx);
                 pending_bytes[gi] = 0;
             }
         }
@@ -320,7 +532,7 @@ fn comm_thread(
     // final flush on shutdown
     for (gi, group) in pending.iter_mut().enumerate() {
         if !group.is_empty() {
-            dispatch_group(group, &prepared[gi], engine.as_ref(), &options, &metrics);
+            dispatch_group(group, &prepared[gi], engine.as_ref(), &options, &ctx);
         }
     }
 }
@@ -332,10 +544,9 @@ fn dispatch_group(
     prep: &Prepared,
     engine: &dyn PackageEngine,
     options: &AccelOptions,
-    metrics: &AccelMetrics,
+    ctx: &CommCtx,
 ) {
-    let mut subs = std::mem::take(group);
-    let docs: Vec<&Document> = subs.iter().map(|s| &s.doc).collect();
+    let docs: Vec<&Document> = group.iter().map(|s| &s.doc).collect();
     // adaptive block: smallest compiled variant that holds the batch
     let block = if options.adaptive_block {
         let max_len = docs.iter().map(|d| d.len()).max().unwrap_or(0);
@@ -350,34 +561,112 @@ fn dispatch_group(
         options.block
     };
     let (packages, oversized) = pack_group(&docs, block);
+    drop(docs); // release the borrow of `group` before draining it
+    // move the submissions out of the group so each package can own (and,
+    // on failover, forward to a sibling device) its documents; draining
+    // keeps the group's capacity for the next combining round
+    let mut subs: Vec<Option<Submission>> = group.drain(..).map(Some).collect();
     for di in oversized {
-        let _ = subs[di].reply.send(Err(format!(
-            "document {} is {} bytes, larger than the package block ({})",
-            subs[di].doc.id,
-            subs[di].doc.len(),
-            options.block
-        )));
+        if let Some(s) = subs[di].take() {
+            let _ = s.reply.send(Err(format!(
+                "document {} is {} bytes, larger than the package block ({})",
+                s.doc.id,
+                s.doc.len(),
+                options.block
+            )));
+        }
     }
     for wp in packages {
-        let batch: Vec<&Submission> =
-            wp.slots.iter().map(|s| &subs[s.doc_index]).collect();
-        run_package(wp, &batch, prep, engine, options, metrics);
+        let batch: Vec<Submission> = wp
+            .slots
+            .iter()
+            .map(|s| {
+                subs[s.doc_index]
+                    .take()
+                    .expect("pack_group places each document in exactly one slot")
+            })
+            .collect();
+        run_package(wp, batch, prep, engine, options, ctx);
     }
-    // dropping the submissions here routes their ext batches back to the
-    // worker shards that built them; the emptied container goes back to
-    // the pending slot so steady-state combining reallocates neither
-    subs.clear();
-    *group = subs;
+    // submissions not claimed by any package (there are none today) and
+    // the processed ones alike drop on this thread, routing their ext
+    // batches back to the worker shards that built them
+}
+
+/// The failover chain for a device error. Single-device services keep
+/// the original contract — the error goes to every submission in the
+/// package. A pool first re-queues the documents on the least-loaded
+/// sibling (bounded by `attempts`, non-blocking so two failing devices
+/// can never deadlock forwarding at each other), then re-scans the SAME
+/// packed bytes on the host CPU: [`NativePackageEngine`] is the
+/// reference implementation every device is differentially tested
+/// against, so views stay byte-identical through a bricked device.
+/// Returns hits to post-process for whatever submissions remain in
+/// `batch`, or `None` when nothing is left to do here.
+fn recover_package(
+    batch: &mut [Option<Submission>],
+    pkg: &PackedPackage,
+    key: ArtifactKey,
+    ctx: &CommCtx,
+    err: &anyhow::Error,
+) -> Option<PackageHits> {
+    let devices = ctx.shared.devices();
+    if devices < 2 {
+        let msg = format!("accelerator package failed: {err}");
+        for s in batch.iter_mut().filter_map(|s| s.take()) {
+            let _ = s.reply.send(Err(msg.clone()));
+        }
+        return None;
+    }
+    // rung 1: forward to the least-loaded sibling. `try_push` only — a
+    // communication thread must never block on another communication
+    // thread's queue; a full sibling keeps the document for rung 2.
+    let max_attempts = (devices - 1) as u32;
+    if let Some(d) = ctx.shared.pick(ctx.device + 1, Some(ctx.device)) {
+        if let Some(tx) = ctx.shared.tx(d) {
+            for slot in batch.iter_mut() {
+                if !slot.as_ref().is_some_and(|s| s.attempts < max_attempts) {
+                    continue;
+                }
+                let mut s = slot.take().expect("checked is_some above");
+                s.attempts += 1;
+                match tx.try_push(s) {
+                    Ok(()) => {
+                        ctx.shared.pool.retries.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(s) => *slot = Some(s),
+                }
+            }
+        }
+    }
+    if batch.iter().all(Option::is_none) {
+        return None; // every document found a sibling
+    }
+    // rung 2: host CPU re-scan of the same package
+    match NativePackageEngine.run(key, pkg) {
+        Ok(h) => {
+            ctx.shared.pool.sw_fallbacks.fetch_add(1, Ordering::Relaxed);
+            Some(h)
+        }
+        Err(e2) => {
+            let msg =
+                format!("accelerator package failed: {err} (host fallback also failed: {e2})");
+            for s in batch.iter_mut().filter_map(|s| s.take()) {
+                let _ = s.reply.send(Err(msg.clone()));
+            }
+            None
+        }
+    }
 }
 
 /// Execute one packed work package and wake its workers.
 fn run_package(
     mut wp: WorkPackage,
-    batch: &[&Submission],
+    batch: Vec<Submission>,
     prep: &Prepared,
     engine: &dyn PackageEngine,
     options: &AccelOptions,
-    metrics: &AccelMetrics,
+    ctx: &CommCtx,
 ) {
     let (m_pad, s_pad) = prep.config.geometry;
     let mut pkg = PackedPackage {
@@ -395,23 +684,28 @@ fn run_package(
     let t0 = Instant::now();
     let result = engine.run(key, &pkg);
     let engine_ns = t0.elapsed().as_nanos() as u64;
-    // the scan is done with the byte block: return it to the arena's
-    // block pool so the next `pack_group` round checks it back out
-    // instead of allocating (satisfies the zero-fresh invariant for
-    // package assembly; see `exec::batch::take_block`). Recycled on the
-    // error path too — a failing package must not drain the pool.
-    crate::exec::batch::recycle_block(std::mem::take(&mut pkg.bytes));
 
+    // `None` slots below are documents this thread no longer owns
+    // (forwarded to a sibling on failover); index-aligned with wp.slots
+    let mut batch: Vec<Option<Submission>> = batch.into_iter().map(Some).collect();
     let hits = match result {
         Ok(h) => h,
-        Err(e) => {
-            let msg = format!("accelerator package failed: {e}");
-            for s in batch {
-                let _ = s.reply.send(Err(msg.clone()));
+        Err(e) => match recover_package(&mut batch, &pkg, key, ctx, &e) {
+            Some(h) => h,
+            None => {
+                // nothing left to post-process; the block still goes back
+                // to the pool — a failing package must not drain it
+                crate::exec::batch::recycle_block(std::mem::take(&mut pkg.bytes));
+                return;
             }
-            return;
-        }
+        },
     };
+    // the scan is done with the byte block (the host-fallback rescan
+    // included): return it to the arena's block pool so the next
+    // `pack_group` round checks it back out instead of allocating
+    // (satisfies the zero-fresh invariant for package assembly; see
+    // `exec::batch::take_block`)
+    crate::exec::batch::recycle_block(std::mem::take(&mut pkg.bytes));
 
     let t1 = Instant::now();
     // Normalize the hit stream before reconstruction: the transport layer
@@ -424,7 +718,10 @@ fn run_package(
     events.sort_unstable();
     events.dedup();
 
-    // Group hits per (doc, machine): slots are sorted by (stream, offset).
+    // Group hits per (doc, machine). The sorted per-stream offset index
+    // makes each attribution a binary search instead of the former
+    // O(slots) linear scan over every slot per hit.
+    let slot_index = SlotIndex::new(&wp);
     let mut per_doc_machine: Vec<Vec<Vec<(usize, u32)>>> =
         vec![vec![Vec::new(); prep.config.machines.len()]; batch.len()];
     for &(m, stream, pos, state) in &events {
@@ -432,7 +729,7 @@ fn run_package(
             continue; // padding machine can never hit, but be defensive
         }
         // find the doc slot containing (stream, pos)
-        if let Some(di) = wp.slot_at(stream, pos) {
+        if let Some(di) = slot_index.slot_at(stream, pos) {
             let slot = &wp.slots[di];
             let local_end = pos + 1 - slot.offset;
             per_doc_machine[di][m].push((local_end, state));
@@ -440,6 +737,8 @@ fn run_package(
     }
 
     let mut total_hits = 0u64;
+    let mut docs_done = 0u64;
+    let mut failover_done = false;
     // replies are deferred until the metrics are recorded, so a caller
     // that joins its workers observes complete counters
     let mut replies: Vec<(
@@ -447,6 +746,9 @@ fn run_package(
         Arc<Vec<TupleBatch>>,
     )> = Vec::with_capacity(batch.len());
     for (di, sub) in batch.iter().enumerate() {
+        // forwarded to a sibling device on failover — its slot's hits (if
+        // any) belong to the retry, not to this thread
+        let Some(sub) = sub else { continue };
         let mut overrides: HashMap<usize, TupleBatch> = HashMap::new();
         for (mi, machine) in prep.config.machines.iter().enumerate() {
             let events = &per_doc_machine[di][mi];
@@ -477,17 +779,29 @@ fn run_package(
         // the typed result's view order IS the output_idx order
         let mut outputs = out.into_batches();
         outputs.truncate(prep.config.outputs.len());
+        docs_done += 1;
+        if sub.attempts > 0 {
+            failover_done = true;
+        }
         replies.push((&sub.reply, Arc::new(outputs)));
     }
     let post_ns = t1.elapsed().as_nanos() as u64;
 
-    let payload: usize = wp.slots.iter().map(|s| s.len).sum();
+    // only the documents this thread actually answered count — a
+    // forwarded document is counted by the sibling that answers it
+    let payload: usize = wp
+        .slots
+        .iter()
+        .enumerate()
+        .filter(|(di, _)| batch[*di].is_some())
+        .map(|(_, s)| s.len)
+        .sum();
     // every engine reports the fixed-size block scan it performs
     // (PackageHits::cycles is always the full-block figure), so the
     // modeled time charges cycles, not payload bytes
-    let modeled = options.model.package_time_cycles(hits.cycles, wp.slots.len());
-    metrics.record_package(
-        wp.slots.len() as u64,
+    let modeled = options.model.package_time_cycles(hits.cycles, docs_done as usize);
+    ctx.aggregate.record_package(
+        docs_done,
         payload as u64,
         total_hits,
         engine_ns,
@@ -495,6 +809,20 @@ fn run_package(
         (modeled * 1e9) as u64,
         hits.cycles,
     );
+    ctx.device_metrics.record_package(
+        docs_done,
+        payload as u64,
+        total_hits,
+        engine_ns,
+        post_ns,
+        (modeled * 1e9) as u64,
+        hits.cycles,
+    );
+    if failover_done {
+        // a package that carried at least one retried document completed:
+        // that is one successful failover end to end
+        ctx.shared.pool.failovers.fetch_add(1, Ordering::Relaxed);
+    }
     // status-register signal: wake the workers of this package
     for (reply, outputs) in replies {
         let _ = reply.send(Ok(outputs));
@@ -539,6 +867,22 @@ pub struct AccelSubgraphRunner {
     /// API accepts arbitrary caller-built documents, so ids alone are not
     /// unique and must not alias cache entries across different texts.
     cache: Mutex<HashMap<(u64, usize, usize), CacheEntry>>,
+    /// Host-CPU route for subgraphs the adaptive router keeps off the
+    /// devices — stateless per call, so sharing one across workers is
+    /// free.
+    software: SoftwareSubgraphRunner,
+    /// Per-subgraph fraction of the plan's total modeled cost
+    /// ([`crate::optimizer::cost::estimate`] at a nominal document
+    /// length). Amdahl's argument: offloading a fraction `f` of the work
+    /// caps end-to-end speedup at `1/(1-f)`, so when `f < 0.5` the
+    /// subgraph cannot even double throughput and is the first to route
+    /// to the host once the devices saturate.
+    hw_fraction: Vec<f64>,
+    /// Queue depth at which the pool counts as saturated (half the
+    /// configured submission-queue bound): past this point the modeled
+    /// queue wait exceeds [`perfmodel::FpgaModel`]'s per-package fixed
+    /// cost and cheap subgraphs stop paying for the trip.
+    saturation_depth: u64,
 }
 
 impl AccelSubgraphRunner {
@@ -549,12 +893,48 @@ impl AccelSubgraphRunner {
             .iter()
             .map(|s| s.body.ext_input_schemas())
             .collect();
+        // cost shares are shape-driven; the exact document length only
+        // scales every term, so a nominal length is enough for ratios
+        const NOMINAL_DOC: usize = 2048;
+        let body_costs: Vec<f64> = plan
+            .subgraphs
+            .iter()
+            .map(|s| crate::optimizer::cost::estimate(&s.body, NOMINAL_DOC).total_cost)
+            .collect();
+        let total = crate::optimizer::cost::estimate(&plan.supergraph, NOMINAL_DOC).total_cost
+            + body_costs.iter().sum::<f64>();
+        let hw_fraction = body_costs
+            .iter()
+            .map(|&c| if total > 0.0 { c / total } else { 1.0 })
+            .collect();
+        let saturation_depth = (service.options().queue_depth as u64 / 2).max(1);
         AccelSubgraphRunner {
-            service,
             subgraph_outputs: plan.subgraphs.iter().map(|s| s.outputs.len()).collect(),
             ext_schemas,
             cache: Mutex::new(HashMap::new()),
+            software: SoftwareSubgraphRunner::new(plan),
+            hw_fraction,
+            saturation_depth,
+            service,
         }
+    }
+
+    /// Dynamic SW-vs-HW routing, decided per submission from observed
+    /// queue load rather than statically at partition time. Only active
+    /// on a multi-device pool (single-device behaviour is unchanged) and
+    /// only for single-output subgraphs — multi-output subgraphs go
+    /// through the reply cache, and splitting their reads across two
+    /// routes would leave parked entries behind. A subgraph routes to the
+    /// host when its cost share is below the Amdahl break-even (< 0.5)
+    /// AND every device queue is at least half full.
+    fn route_software(&self, id: usize) -> bool {
+        if self.service.devices() < 2 || self.subgraph_outputs[id] != 1 {
+            return false;
+        }
+        if self.hw_fraction.get(id).copied().unwrap_or(1.0) >= 0.5 {
+            return false;
+        }
+        self.service.min_queue_depth() >= self.saturation_depth
     }
 
     fn cache_key(doc: &Document, id: usize) -> (u64, usize, usize) {
@@ -656,6 +1036,10 @@ impl SubgraphRunner for AccelSubgraphRunner {
         if let Some(r) = self.take_cached(id, doc) {
             return r[output_idx].to_tuples();
         }
+        if self.route_software(id) {
+            self.service.shared.pool.sw_routed.fetch_add(1, Ordering::Relaxed);
+            return self.software.run(id, output_idx, doc, tokens, ext);
+        }
         let ext_batches: Vec<TupleBatch> = ext
             .iter()
             .enumerate()
@@ -674,11 +1058,15 @@ impl SubgraphRunner for AccelSubgraphRunner {
         doc: &Document,
         tokens: &TokenIndex,
         ext: &[&TupleBatch],
-        _schema: &Schema,
+        schema: &Schema,
     ) -> TupleBatch {
         self.validate(id, output_idx);
         if let Some(r) = self.take_cached(id, doc) {
             return r[output_idx].clone();
+        }
+        if self.route_software(id) {
+            self.service.shared.pool.sw_routed.fetch_add(1, Ordering::Relaxed);
+            return self.software.run_batch(id, output_idx, doc, tokens, ext, schema);
         }
         let ext_batches: Vec<TupleBatch> = ext.iter().map(|b| (*b).clone()).collect();
         let outputs = self.fetch(id, doc, tokens, ext_batches);

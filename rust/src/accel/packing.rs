@@ -50,6 +50,55 @@ impl WorkPackage {
     }
 }
 
+/// Per-stream sorted offset index over one package's slots — the
+/// O(log slots) replacement for [`WorkPackage::slot_at`]'s linear scan.
+///
+/// The post-stage resolves every returned hit event back to its document;
+/// doing that with the linear scan is O(events × slots), quadratic on
+/// hit-dense packages. [`pack_group`] appends slots per stream at strictly
+/// increasing offsets (each placement advances the stream cursor by at
+/// least one), so a per-stream `(offset, len, slot)` list is sorted and a
+/// binary search answers each lookup.
+#[derive(Debug)]
+pub struct SlotIndex {
+    /// `(offset, len, slot index)` per stream, sorted by offset.
+    streams: [Vec<(usize, usize, usize)>; STREAMS],
+}
+
+impl SlotIndex {
+    /// Build the index for `wp` — once per package, before the hit loop.
+    pub fn new(wp: &WorkPackage) -> SlotIndex {
+        let mut streams: [Vec<(usize, usize, usize)>; STREAMS] =
+            std::array::from_fn(|_| Vec::new());
+        for (i, s) in wp.slots.iter().enumerate() {
+            if s.stream < STREAMS {
+                streams[s.stream].push((s.offset, s.len, i));
+            }
+        }
+        for list in &mut streams {
+            // already monotone for pack_group output; sort defensively so
+            // hand-built packages index correctly too
+            list.sort_unstable();
+        }
+        SlotIndex { streams }
+    }
+
+    /// Which slot covers byte `(stream, pos)` — identical answers to
+    /// [`WorkPackage::slot_at`] (slot ranges never overlap: the stream
+    /// cursor moves past each document plus its separator).
+    pub fn slot_at(&self, stream: usize, pos: usize) -> Option<usize> {
+        let list = self.streams.get(stream)?;
+        // the last slot starting at or before `pos` is the only candidate
+        let i = list.partition_point(|&(off, _, _)| off <= pos);
+        let &(off, len, slot) = &list[i.checked_sub(1)?];
+        if pos < off + len {
+            Some(slot)
+        } else {
+            None
+        }
+    }
+}
+
 /// Pack documents (in order) into as few packages as possible.
 /// Returns the packages plus the indices of documents too large for a
 /// single stream (those are not packed; the caller must fail them).
@@ -225,6 +274,43 @@ mod tests {
         assert_eq!(wp.slot_at(s0.stream, s0.offset), Some(0));
         assert_eq!(wp.slot_at(s0.stream, s0.offset + 2), Some(0));
         assert_eq!(wp.slot_at(s0.stream, s0.offset + 3), None); // separator
+    }
+
+    #[test]
+    fn slot_index_matches_linear_scan_on_dense_multi_doc_package() {
+        // many short docs → several docs per stream, some empty, so the
+        // index sees stacked offsets, zero-length slots, and separators
+        let texts: Vec<String> = (0..12)
+            .map(|i| "abcdefg"[..i % 5].to_string())
+            .collect();
+        let ds: Vec<Document> = texts
+            .iter()
+            .enumerate()
+            .map(|(i, t)| Document::new(i as u64, t.as_str()))
+            .collect();
+        let refs: Vec<&Document> = ds.iter().collect();
+        let (pkgs, over) = pack_group(&refs, 8);
+        assert!(over.is_empty());
+        assert!(!pkgs.is_empty());
+        assert!(
+            pkgs.iter().any(|wp| wp.slots.iter().any(|s| s.offset > 0)),
+            "precondition: at least one stream holds multiple docs"
+        );
+        for wp in &pkgs {
+            let idx = SlotIndex::new(wp);
+            for stream in 0..STREAMS {
+                for pos in 0..wp.block {
+                    assert_eq!(
+                        idx.slot_at(stream, pos),
+                        wp.slot_at(stream, pos),
+                        "attribution diverged at stream {stream} pos {pos}"
+                    );
+                }
+            }
+            // out-of-range stream answers None on both paths
+            assert_eq!(idx.slot_at(STREAMS, 0), None);
+            assert_eq!(wp.slot_at(STREAMS, 0), None);
+        }
     }
 
     #[test]

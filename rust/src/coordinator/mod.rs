@@ -41,7 +41,7 @@ use crate::aog::{Graph, Tuple};
 use crate::corpus::Corpus;
 use crate::exec::{DocResult, ExecStrategy, Executor, Profile, Profiler, ViewHandle};
 use crate::hwcompiler::{compile_subgraph, AccelConfig, ArtifactKey, BLOCK_SIZES};
-use crate::metrics::{AccelSnapshot, QueueSnapshot};
+use crate::metrics::{AccelDeviceSnapshot, AccelSnapshot, PoolSnapshot, QueueSnapshot};
 use crate::partition::{partition, PartitionMode, PartitionPlan, SoftwareSubgraphRunner};
 use crate::runtime::EngineSpec;
 use crate::text::Document;
@@ -628,9 +628,25 @@ impl Engine {
     }
 
     /// Gauges of the accelerator's bounded submission queue, when a
-    /// service is attached.
+    /// service is attached. On a multi-device pool this is the merged
+    /// view across every device (see
+    /// [`AccelService::queue_snapshot`]); per-device rows come from
+    /// [`Engine::accel_device_snapshots`].
     pub fn accel_queue_snapshot(&self) -> Option<QueueSnapshot> {
         self.service.as_ref().map(|s| s.queue_snapshot())
+    }
+
+    /// Per-device accelerator gauges (package counters plus submission
+    /// queue, in device order), when a service is attached.
+    pub fn accel_device_snapshots(&self) -> Option<Vec<AccelDeviceSnapshot>> {
+        self.service.as_ref().map(|s| s.device_snapshots())
+    }
+
+    /// Pool-level routing counters (sibling retries, completed
+    /// failovers, host fallbacks, software-routed calls), when a
+    /// service is attached.
+    pub fn accel_pool_snapshot(&self) -> Option<PoolSnapshot> {
+        self.service.as_ref().map(|s| s.pool_snapshot())
     }
 
     /// The simulator's counters (packages, cycles, injected faults), when

@@ -687,15 +687,21 @@ impl RowAccess for JoinRow<'_> {
 // refills the communication shard, so BOTH execution routes stop
 // allocating once warm.
 
-/// Number of global arena shards. The last shard is reserved for
-/// accelerator communication threads ([`ArenaId::comm`]); session workers
-/// map onto the rest by worker index ([`ArenaId::for_worker`]), and
-/// unpinned threads are spread round-robin. Sharing a shard is always
-/// correct — it only adds freelist contention.
+/// Number of global arena shards. The top [`MAX_COMM_SHARDS`] shards are
+/// reserved for accelerator communication threads ([`ArenaId::comm_for`]);
+/// session workers map onto the rest by worker index
+/// ([`ArenaId::for_worker`]), and unpinned threads are spread round-robin.
+/// Sharing a shard is always correct — it only adds freelist contention.
 pub const NUM_SHARDS: usize = 16;
 
-/// Worker shards (everything except the reserved communication shard).
-const WORKER_SHARDS: usize = NUM_SHARDS - 1;
+/// Reserved communication shards — one per accelerator device, so a
+/// pool's reply batches return to the device thread that produced them.
+/// Pools larger than this wrap ([`ArenaId::comm_for`]), which is correct
+/// but shares a freelist between the wrapped devices.
+pub const MAX_COMM_SHARDS: usize = 4;
+
+/// Worker shards (everything except the reserved communication shards).
+const WORKER_SHARDS: usize = NUM_SHARDS - MAX_COMM_SHARDS;
 
 /// Upper bound of cached buffers per type in one thread-local cache —
 /// large enough to cover every live node slot of a big merged catalog,
@@ -731,9 +737,18 @@ impl ArenaId {
 
     /// The shard reserved for accelerator communication threads, kept
     /// apart from the worker shards so package post-processing never
-    /// contends with worker checkouts.
+    /// contends with worker checkouts. Equivalent to
+    /// [`ArenaId::comm_for`]`(0)` — the single-device shard.
     pub fn comm() -> ArenaId {
-        ArenaId((NUM_SHARDS - 1) as u16)
+        ArenaId::comm_for(0)
+    }
+
+    /// The communication shard for pool device `d`. Device 0 gets the
+    /// historical [`ArenaId::comm`] shard (`NUM_SHARDS - 1`); devices
+    /// beyond [`MAX_COMM_SHARDS`] wrap onto the same reserved shards,
+    /// which only shares a freelist — never a correctness hazard.
+    pub fn comm_for(d: usize) -> ArenaId {
+        ArenaId((NUM_SHARDS - 1 - (d % MAX_COMM_SHARDS)) as u16)
     }
 
     /// This id's shard index (`0..NUM_SHARDS`).
@@ -1356,15 +1371,32 @@ mod tests {
 
     #[test]
     fn arena_id_mapping() {
-        // worker ids wrap over the worker shards and never land on the
+        // worker ids wrap over the worker shards and never land on a
         // reserved communication shard
         for w in 0..3 * NUM_SHARDS {
             let id = ArenaId::for_worker(w);
-            assert!(id.shard() < NUM_SHARDS - 1, "worker {w} on shard {}", id.shard());
-            assert_ne!(id, ArenaId::comm());
+            assert!(
+                id.shard() < NUM_SHARDS - MAX_COMM_SHARDS,
+                "worker {w} on shard {}",
+                id.shard()
+            );
+            for d in 0..MAX_COMM_SHARDS {
+                assert_ne!(id, ArenaId::comm_for(d));
+            }
         }
-        assert_eq!(ArenaId::for_worker(0), ArenaId::for_worker(NUM_SHARDS - 1));
+        assert_eq!(
+            ArenaId::for_worker(0),
+            ArenaId::for_worker(NUM_SHARDS - MAX_COMM_SHARDS)
+        );
+        // device 0 keeps the historical single-device comm shard, and the
+        // pool shards are distinct until they wrap at MAX_COMM_SHARDS
+        assert_eq!(ArenaId::comm(), ArenaId::comm_for(0));
         assert_eq!(ArenaId::comm().shard(), NUM_SHARDS - 1);
+        for d in 1..MAX_COMM_SHARDS {
+            assert_ne!(ArenaId::comm_for(d), ArenaId::comm_for(d - 1));
+            assert!(ArenaId::comm_for(d).shard() >= NUM_SHARDS - MAX_COMM_SHARDS);
+        }
+        assert_eq!(ArenaId::comm_for(MAX_COMM_SHARDS), ArenaId::comm_for(0));
         assert_eq!(shard_stats().len(), NUM_SHARDS);
     }
 

@@ -80,6 +80,9 @@ const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream|
   --threads <n>          worker threads (default 8)
   --queue <n>            session queue depth (default 2x threads)
   --block <4096|16384>   package block bytes (default 16384)
+  --devices <n>          accelerator pool size (default 1); each device gets
+                         its own comm thread, queue, engine and arena shard,
+                         submissions route to the least-loaded device
   --exec <columnar|legacy>  software executor pipeline (default columnar;
                          legacy is the row-at-a-time Vec<Tuple> baseline)
 stream reads one document per stdin line through a Session, e.g.:
@@ -93,6 +96,9 @@ PATH (legacy rows, columnar software, sim-accelerated) plus the arena's
 fresh-buffer and return-to-origin gauges.
 Machine-readable rows always land in BENCH_5.json:
   --json <file>          override the output path
+with --devices N > 1, bench also measures the N-device pool against the
+single-device baseline and writes the comparison to BENCH_7.json:
+  --pool-json <file>     override the pool-comparison output path
 serve exposes the engine over TCP — many clients, ONE shared engine:
   --addr <host:port>     protocol address (default 127.0.0.1:7171; port 0
                          picks an ephemeral port)
@@ -212,6 +218,15 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
     let mut cfg = EngineConfig::accelerated(mode, engine);
     if let Some(b) = flags.get("block").and_then(|s| s.parse().ok()) {
         cfg.accel.block = b;
+    }
+    if let Some(v) = flags.get("devices") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| format!("bad --devices '{v}' (expected a pool size ≥ 1)"))?;
+        if n == 0 {
+            return Err("--devices must be at least 1".into());
+        }
+        cfg.accel.devices = n;
     }
     if let Some(s) = flags.get("exec") {
         cfg.strategy = boost::exec::ExecStrategy::parse(s)
@@ -409,6 +424,22 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
                 "  sim: {} packages, {} device cycles, {} faults injected",
                 sim.packages, sim.cycles, sim.faults
             );
+        }
+        if let Some(devices) = engine.accel_device_snapshots() {
+            if devices.len() > 1 {
+                for d in &devices {
+                    println!(
+                        "  device {}: {} packages, {} docs, queue high-water {}",
+                        d.device, d.accel.packages, d.accel.docs, d.queue.high_water
+                    );
+                }
+                if let Some(pool) = engine.accel_pool_snapshot() {
+                    println!(
+                        "  pool: {} retries, {} failovers, {} host fallbacks, {} sw-routed",
+                        pool.retries, pool.failovers, pool.sw_fallbacks, pool.sw_routed
+                    );
+                }
+            }
         }
         let doc_size = corpus.docs.first().map(|d| d.len()).unwrap_or(2048);
         let profile_frac = 0.97; // conservative hw-supported fraction
@@ -778,6 +809,83 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     ));
     std::fs::write(path, json).map_err(|e| format!("write {path}: {e}"))?;
     println!("  wrote {path}");
+
+    // pool-vs-single comparison: the same merged catalog and corpus
+    // through a single simulated device and through an N-device pool
+    // (least-queue-depth dispatch, per-device comm threads and arena
+    // shards). Only measured when the pool is actually requested.
+    let devices: usize = flags
+        .get("devices")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    if devices > 1 {
+        let single = build_catalog(&names, EngineConfig::simulated(sim_mode))?;
+        let single_report = single.run_corpus(&corpus, threads);
+        single.shutdown();
+        let mut pool_cfg = EngineConfig::simulated(sim_mode);
+        pool_cfg.accel.devices = devices;
+        let pool = build_catalog(&names, pool_cfg)?;
+        let pool_report = pool.run_corpus(&corpus, threads);
+        let device_rows = pool.accel_device_snapshots().unwrap_or_default();
+        let pool_counters = pool.accel_pool_snapshot().unwrap_or_default();
+        pool.shutdown();
+        let speedup = pool_report.docs_per_sec() / single_report.docs_per_sec();
+        println!(
+            "  pool vs single device ({devices} devices, merged catalog): \
+             {:.0} docs/s vs {:.0} docs/s ({speedup:.2}x)",
+            pool_report.docs_per_sec(),
+            single_report.docs_per_sec(),
+        );
+        let pool_path = match flags.get("pool-json") {
+            Some(p) if !p.is_empty() => p.as_str(),
+            _ => "BENCH_7.json",
+        };
+        let mut pj = String::new();
+        pj.push_str("{\n  \"schema\": \"boost-pool-bench-v1\",\n  \"measured\": true,\n");
+        pj.push_str(&format!(
+            "  \"corpus\": {{\"docs\": {}, \"doc_size\": {doc_size}, \"kind\": \"{kind}\"}},\n",
+            corpus.docs.len(),
+        ));
+        pj.push_str(&format!(
+            "  \"threads\": {threads},\n  \"sim_mode\": \"{}\",\n  \"devices\": {devices},\n",
+            sim_mode.name()
+        ));
+        pj.push_str(&format!(
+            "  \"single_docs_per_sec\": {:.3},\n  \"single_wall_s\": {:.6},\n",
+            single_report.docs_per_sec(),
+            single_report.wall.as_secs_f64(),
+        ));
+        pj.push_str(&format!(
+            "  \"pool_docs_per_sec\": {:.3},\n  \"pool_wall_s\": {:.6},\n",
+            pool_report.docs_per_sec(),
+            pool_report.wall.as_secs_f64(),
+        ));
+        pj.push_str(&format!("  \"pool_vs_single_speedup\": {speedup:.4},\n"));
+        pj.push_str(&format!(
+            "  \"pool_counters\": {{\"retries\": {}, \"failovers\": {}, \
+             \"sw_fallbacks\": {}, \"sw_routed\": {}}},\n",
+            pool_counters.retries,
+            pool_counters.failovers,
+            pool_counters.sw_fallbacks,
+            pool_counters.sw_routed,
+        ));
+        pj.push_str("  \"per_device\": [\n");
+        for (i, d) in device_rows.iter().enumerate() {
+            pj.push_str(&format!(
+                "    {{\"device\": {}, \"packages\": {}, \"docs\": {}, \
+                 \"queue_pushed\": {}, \"queue_high_water\": {}}}{}\n",
+                d.device,
+                d.accel.packages,
+                d.accel.docs,
+                d.queue.pushed,
+                d.queue.high_water,
+                if i + 1 < device_rows.len() { "," } else { "" },
+            ));
+        }
+        pj.push_str("  ]\n}\n");
+        std::fs::write(pool_path, pj).map_err(|e| format!("write {pool_path}: {e}"))?;
+        println!("  wrote {pool_path}");
+    }
     Ok(())
 }
 

@@ -74,6 +74,21 @@ pub struct QueueSnapshot {
     pub high_water: u64,
 }
 
+impl QueueSnapshot {
+    /// Fold another queue's snapshot into this one — how the accelerator
+    /// pool aggregates its per-device submission queues into the single
+    /// queue view older callers expect. Counters and depth sum;
+    /// `high_water` takes the max (per-queue peaks on different devices
+    /// are not simultaneous, so summing them would overstate pressure).
+    pub fn merge(&mut self, other: &QueueSnapshot) {
+        self.pushed += other.pushed;
+        self.stalls += other.stalls;
+        self.blocked_ns += other.blocked_ns;
+        self.depth += other.depth;
+        self.high_water = self.high_water.max(other.high_water);
+    }
+}
+
 /// Accumulated accelerator-side counters (one instance per service).
 #[derive(Debug, Default)]
 pub struct AccelMetrics {
@@ -174,6 +189,64 @@ impl AccelSnapshot {
             self.docs as f64 / self.packages as f64
         }
     }
+}
+
+/// Pool-level dispatch counters for a multi-device
+/// [`AccelService`](crate::accel::AccelService) — the failover and
+/// adaptive-routing evidence, kept apart from the per-package
+/// [`AccelMetrics`] because they count *routing decisions*, not work.
+#[derive(Debug, Default)]
+pub struct PoolMetrics {
+    /// Packages re-queued on a sibling device after a device error.
+    pub retries: AtomicU64,
+    /// Packages that ultimately succeeded on a device other than the one
+    /// that first failed them (a completed failover).
+    pub failovers: AtomicU64,
+    /// Packages re-executed on the host CPU after every eligible device
+    /// attempt failed (the last rung of the failover chain).
+    pub sw_fallbacks: AtomicU64,
+    /// Subgraph calls the adaptive router sent straight to the software
+    /// route because every device queue was saturated and the cost model
+    /// said offload would not pay.
+    pub sw_routed: AtomicU64,
+}
+
+impl PoolMetrics {
+    /// Point-in-time copy.
+    pub fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            sw_fallbacks: self.sw_fallbacks.load(Ordering::Relaxed),
+            sw_routed: self.sw_routed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of [`PoolMetrics`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolSnapshot {
+    /// Packages re-queued on a sibling after a device error.
+    pub retries: u64,
+    /// Packages completed on a device other than the first one tried.
+    pub failovers: u64,
+    /// Packages re-executed on the host CPU after device attempts failed.
+    pub sw_fallbacks: u64,
+    /// Subgraph calls routed to software by the adaptive router.
+    pub sw_routed: u64,
+}
+
+/// One pool device's gauges: its private package counters and its
+/// submission queue, labeled with the device index. The aggregate across
+/// devices remains available through the service-wide [`AccelMetrics`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AccelDeviceSnapshot {
+    /// Device index within the pool (`0..devices`).
+    pub device: usize,
+    /// This device's package counters.
+    pub accel: AccelSnapshot,
+    /// This device's submission-queue gauges.
+    pub queue: QueueSnapshot,
 }
 
 /// Counters for the serving tier (`crate::serve`). The server keeps one
@@ -420,6 +493,54 @@ mod tests {
         assert_eq!(t.returns_cross, 3);
         assert_eq!(t.pooled, 10);
         assert_eq!(ArenaSnapshot::from_shards(&[]), ArenaSnapshot::default());
+    }
+
+    #[test]
+    fn queue_snapshot_merge_sums_counters_and_maxes_high_water() {
+        let mut a = QueueSnapshot {
+            pushed: 10,
+            stalls: 2,
+            blocked_ns: 1_000,
+            depth: 3,
+            high_water: 5,
+        };
+        let b = QueueSnapshot {
+            pushed: 4,
+            stalls: 1,
+            blocked_ns: 500,
+            depth: 1,
+            high_water: 7,
+        };
+        a.merge(&b);
+        assert_eq!(a.pushed, 14);
+        assert_eq!(a.stalls, 3);
+        assert_eq!(a.blocked_ns, 1_500);
+        assert_eq!(a.depth, 4);
+        assert_eq!(a.high_water, 7, "peaks max, not sum");
+        // merging the empty snapshot is the identity
+        let before = a;
+        a.merge(&QueueSnapshot::default());
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn pool_metrics_snapshot_round_trips() {
+        let p = PoolMetrics::default();
+        p.retries.fetch_add(3, Ordering::Relaxed);
+        p.failovers.fetch_add(2, Ordering::Relaxed);
+        p.sw_fallbacks.fetch_add(1, Ordering::Relaxed);
+        p.sw_routed.fetch_add(5, Ordering::Relaxed);
+        let s = p.snapshot();
+        assert_eq!(
+            s,
+            PoolSnapshot {
+                retries: 3,
+                failovers: 2,
+                sw_fallbacks: 1,
+                sw_routed: 5
+            }
+        );
+        assert_eq!(PoolMetrics::default().snapshot(), PoolSnapshot::default());
     }
 
     #[test]

@@ -130,6 +130,24 @@ impl EngineSpec {
         })
     }
 
+    /// Derive the spec for pool device `d` from this one. Simulators get
+    /// a private [`SimStats`] instance (per-device gauges) and a
+    /// decorrelated seed; native/PJRT specs clone as-is. Device 0 of a
+    /// pool always uses the caller's spec verbatim — its shared `SimStats`
+    /// `Arc` is what `Engine::sim_snapshot` reads — so `fork` is only
+    /// called for devices `1..N`.
+    pub fn fork(&self, d: u64) -> EngineSpec {
+        match self {
+            EngineSpec::Sim(spec) => EngineSpec::Sim(SimSpec {
+                latency: spec.latency,
+                fault: spec.fault,
+                seed: spec.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(d),
+                stats: std::sync::Arc::new(SimStats::default()),
+            }),
+            other => other.clone(),
+        }
+    }
+
     /// Short name for reports.
     pub fn name(&self) -> &'static str {
         match self {

@@ -84,6 +84,22 @@ impl<T> QueueTx<T> {
         }
     }
 
+    /// Push one item only if the queue has room **right now** — never
+    /// blocks. Returns the item back when the queue is full or every
+    /// consumer is gone. The accelerator pool's failover path uses this
+    /// to forward a failed package to a sibling device: a communication
+    /// thread must never block on another communication thread's queue
+    /// (two full queues forwarding at each other would deadlock).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        match self.tx.try_send(item) {
+            Ok(()) => {
+                self.stats.on_push();
+                Ok(())
+            }
+            Err(TrySendError::Full(item)) | Err(TrySendError::Disconnected(item)) => Err(item),
+        }
+    }
+
     /// The queue's gauges (shared with the consumer half).
     pub fn stats(&self) -> &Arc<QueueStats> {
         &self.stats
@@ -197,6 +213,21 @@ mod tests {
             "a push that waited ~50 ms must report nonzero blocked time"
         );
         assert_eq!(snap.pushed, 2);
+    }
+
+    #[test]
+    fn try_push_never_blocks_on_a_full_queue() {
+        let (tx, rx) = bounded::<u32>(1);
+        assert_eq!(tx.try_push(1), Ok(()));
+        assert_eq!(tx.try_push(2), Err(2), "full queue must bounce, not block");
+        let snap = tx.snapshot();
+        assert_eq!(snap.pushed, 1, "a bounced try_push is not counted as pushed");
+        assert_eq!(snap.stalls, 0, "try_push never stalls");
+        assert_eq!(rx.pop(), Some(1));
+        assert_eq!(tx.try_push(3), Ok(()));
+        drop(rx);
+        // drain the channel is impossible now, but disconnect still bounces
+        assert_eq!(tx.try_push(4), Err(4));
     }
 
     #[test]

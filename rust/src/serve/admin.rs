@@ -171,6 +171,36 @@ pub(crate) fn metrics_json(shared: &ServerShared) -> String {
         Some(q) => out.push_str(&queue_json(&q)),
         None => out.push_str("null"),
     }
+    // per-device rows and pool-level routing counters (retries,
+    // failovers, host fallbacks, software-routed calls); both null when
+    // no accelerator service is attached
+    out.push_str(",\"accel_devices\":");
+    match shared.engine.accel_device_snapshots() {
+        Some(devices) => {
+            out.push('[');
+            for (i, d) in devices.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"device\":{},\"accel\":{},\"queue\":{}}}",
+                    d.device,
+                    accel_json(&d.accel),
+                    queue_json(&d.queue)
+                ));
+            }
+            out.push(']');
+        }
+        None => out.push_str("null"),
+    }
+    out.push_str(",\"accel_pool\":");
+    match shared.engine.accel_pool_snapshot() {
+        Some(p) => out.push_str(&format!(
+            "{{\"retries\":{},\"failovers\":{},\"sw_fallbacks\":{},\"sw_routed\":{}}}",
+            p.retries, p.failovers, p.sw_fallbacks, p.sw_routed
+        )),
+        None => out.push_str("null"),
+    }
     let arena = shared.engine.arena_snapshot();
     out.push_str(&format!(
         ",\"arena\":{{\"checkouts\":{},\"fresh\":{},\"returns_local\":{},\"returns_cross\":{},\"pooled\":{}}}",

@@ -281,6 +281,18 @@ fn accept_loop(
         }
         // admission control: reject past the cap with a clean Busy frame
         let active = shared.stats.active.load(Ordering::SeqCst);
+        let active = if active < 0 {
+            // the gauge is an invariant, not a best-effort estimate: a
+            // negative reading means an accounting bug (a decrement
+            // without its increment), so repair it instead of papering
+            // over the sign with a saturating cast every reader must
+            // remember to apply
+            debug_assert!(false, "active connection gauge underflowed: {active}");
+            shared.stats.active.store(0, Ordering::SeqCst);
+            0
+        } else {
+            active
+        };
         let cap = shared.config.max_connections;
         if active >= cap as i64 {
             shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
@@ -288,7 +300,7 @@ fn accept_loop(
             let _ = protocol::write_frame(
                 &mut w,
                 &Frame::Busy {
-                    active: active.max(0) as u32,
+                    active: active as u32,
                     cap: cap as u32,
                 },
             );
@@ -299,14 +311,29 @@ fn accept_loop(
         shared.stats.active.fetch_add(1, Ordering::SeqCst);
         let id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
         let shared2 = shared.clone();
+        // clone the stream BEFORE moving it into the handler closure: if
+        // the spawn fails, the moved-in original is already gone with the
+        // dropped closure, and the clone is the only way to tell the
+        // client anything rather than silently hanging up on an accepted
+        // connection
+        let spawn_err_stream = stream.try_clone().ok();
         let handle = std::thread::Builder::new()
             .name(format!("serve-conn-{id}"))
             .spawn(move || handle_connection(stream, peer.to_string(), shared2, id));
         match handle {
             Ok(h) => handlers.lock().unwrap().push(h),
-            Err(_) => {
-                // could not spawn: undo the admission
+            Err(e) => {
+                // could not spawn: undo the admission and give the peer a
+                // clean terminal Error frame instead of a bare hangup
                 shared.stats.active.fetch_sub(1, Ordering::SeqCst);
+                shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                if let Some(s) = spawn_err_stream {
+                    send_error_now(
+                        &s,
+                        ERR_SERVER,
+                        &format!("server cannot spawn a connection handler: {e}"),
+                    );
+                }
             }
         }
     }

@@ -24,12 +24,12 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use boost::accel::{pack_group, AccelOptions, AccelService};
+use boost::accel::{pack_group, AccelOptions, AccelService, AccelSubgraphRunner};
 use boost::coordinator::{CollectSink, Engine, EngineConfig};
 use boost::corpus::CorpusSpec;
-use boost::exec::DocResult;
+use boost::exec::{DocResult, Executor, Profiler};
 use boost::hwcompiler::{compile_subgraph, AccelConfig, MatcherRef, BLOCK_SIZES};
-use boost::partition::{partition, PartitionMode, PartitionPlan};
+use boost::partition::{partition, PartitionMode, PartitionPlan, SoftwareSubgraphRunner};
 use boost::runtime::{
     EngineSpec, FaultPlan, PackageEngine, PackedPackage, SimPackageEngine, SimSpec,
 };
@@ -355,6 +355,87 @@ fn injected_package_failures_fail_submissions_cleanly() {
     let err = res.expect_err("the injected fault must surface as an error");
     assert!(err.contains("injected device fault"), "{err}");
     assert!(spec.snapshot().faults >= 1);
+    service.shutdown();
+}
+
+#[test]
+fn bricked_device_in_a_pool_fails_over_and_stays_byte_identical() {
+    // 3-device pool where device 1 is bricked (every package errors):
+    // the dispatcher must retry its packages on the healthy siblings
+    // (or re-scan them on the host), and the views of a randomized
+    // corpus must stay byte-identical to the pure-software route —
+    // workers never see the dead device.
+    let (configs, plan) = t1_service_parts(PartitionMode::ExtractOnly);
+    let healthy_a = SimSpec::default();
+    let bricked = SimSpec::default().with_fault(FaultPlan {
+        fail_every: 1,
+        duplicate_hits: false,
+        reorder_hits: false,
+    });
+    let healthy_b = SimSpec::default();
+    let service = AccelService::start_pool(
+        configs,
+        vec![
+            EngineSpec::Sim(healthy_a.clone()),
+            EngineSpec::Sim(bricked.clone()),
+            EngineSpec::Sim(healthy_b.clone()),
+        ],
+        AccelOptions::default(),
+    );
+    assert_eq!(service.devices(), 3);
+
+    let accel_exec = Executor::new(
+        Arc::new(plan.supergraph.clone()),
+        Arc::new(Profiler::disabled()),
+    )
+    .with_subgraph_runner(Arc::new(AccelSubgraphRunner::new(service.clone(), &plan)));
+    let sw_exec = Executor::new(
+        Arc::new(plan.supergraph.clone()),
+        Arc::new(Profiler::disabled()),
+    )
+    .with_subgraph_runner(Arc::new(SoftwareSubgraphRunner::new(&plan)));
+
+    // randomized corpus across all three flavours, plus edge documents
+    let mut rng = Prng::new(seed() ^ 0xFA11_0BE5);
+    let mut texts: Vec<String> = Vec::new();
+    for d in CorpusSpec::news(20, 512).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::tweets(20, 200).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::logs(20, 384).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    texts.push(String::new());
+    texts.push("IBM ".repeat(200));
+
+    for (i, text) in texts.iter().enumerate() {
+        let doc = Document::new(i as u64, text.as_str());
+        assert_eq!(
+            render(&doc, &accel_exec.run_doc(&doc)),
+            render(&doc, &sw_exec.run_doc(&doc)),
+            "doc {i} diverged through the bricked-device pool"
+        );
+    }
+
+    // the bricked device must actually have been exercised and failed...
+    assert!(
+        bricked.snapshot().faults > 0,
+        "round-robin dispatch must have routed packages to the bricked device"
+    );
+    // ...and its packages must have been recovered, not errored out
+    let pool = service.pool_snapshot();
+    assert!(
+        pool.retries > 0,
+        "the dead device's documents must have been re-queued on siblings"
+    );
+    assert!(
+        pool.failovers + pool.sw_fallbacks > 0,
+        "retried documents must have completed on a sibling or the host"
+    );
+    // the healthy siblings did real scans
+    assert!(healthy_a.snapshot().packages + healthy_b.snapshot().packages > 0);
     service.shutdown();
 }
 

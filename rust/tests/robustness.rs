@@ -106,6 +106,55 @@ fn prop_engine_output_spans_in_bounds() {
 }
 
 #[test]
+fn invalid_subgraph_id_is_rejected_without_killing_the_comm_thread() {
+    // regression: the communication thread used to index its per-subgraph
+    // pending tables with the submission's unvalidated subgraph_id — an
+    // out-of-range id panicked the thread and hung every in-flight worker.
+    // It must instead answer Err on that submission's own reply channel
+    // and keep serving valid ids afterwards.
+    use boost::accel::{AccelOptions, AccelService};
+    use boost::hwcompiler::compile_subgraph;
+    use boost::partition::{partition, PartitionMode};
+    use boost::runtime::EngineSpec;
+    use boost::text::TokenIndex;
+    use std::sync::Arc;
+
+    let q = boost::queries::builtin("t1").unwrap();
+    let g = boost::optimizer::optimize(&boost::aql::compile(&q.aql).unwrap());
+    let plan = partition(&g, PartitionMode::ExtractOnly);
+    let n_subgraphs = plan.subgraphs.len();
+    let configs = plan
+        .subgraphs
+        .iter()
+        .map(|s| compile_subgraph(s).unwrap())
+        .collect();
+    let service = AccelService::start(
+        configs,
+        EngineSpec::Sim(boost::runtime::SimSpec::default()),
+        AccelOptions::default(),
+    );
+
+    let doc = Document::new(0, "Laura Chiticariu works at IBM Research.");
+    let rx = service.submit(
+        n_subgraphs + 1,
+        doc.clone(),
+        Arc::new(TokenIndex::default()),
+        vec![],
+    );
+    let res = rx.recv().expect("an invalid id must still get a reply");
+    let err = res.expect_err("an out-of-range subgraph id must be an error");
+    assert!(err.contains("invalid subgraph"), "{err}");
+
+    // the communication thread must have survived: a valid submission
+    // afterwards still completes
+    let rx = service.submit(0, doc, Arc::new(TokenIndex::default()), vec![]);
+    rx.recv()
+        .expect("the comm thread must still be alive after the bad id")
+        .expect("a valid submission must still succeed");
+    service.shutdown();
+}
+
+#[test]
 fn tokenizer_never_panics_on_any_bytes() {
     let mut rng = Prng::new(7);
     for _ in 0..300 {

@@ -382,6 +382,44 @@ fn admin_metrics_endpoint_serves_json() {
     assert!(resp.contains("\"arena\""));
     assert!(resp.contains("\"blocks\""));
     assert!(resp.contains("\"accepted\""));
+    // a software-only engine has no accelerator service attached: the
+    // pool sections must be present but null, not missing
+    assert!(resp.contains("\"accel_devices\":null"), "got: {resp}");
+    assert!(resp.contains("\"accel_pool\":null"), "got: {resp}");
     let resp = get("/nope");
     assert!(resp.starts_with("HTTP/1.0 404"), "got: {resp}");
+}
+
+/// With a multi-device accelerated engine behind the server, `/metrics`
+/// carries one row per device (its package counters + submission queue)
+/// and the pool-level routing counters.
+#[test]
+fn admin_metrics_reports_per_device_accel_sections() {
+    use std::io::Read;
+
+    let mut config = EngineConfig::simulated(PartitionMode::ExtractOnly);
+    config.accel.devices = 2;
+    let engine = catalog(config);
+    let server = start(engine, 16, 8);
+    let admin = server.admin_addr().expect("admin configured");
+
+    // traffic through the accelerated path so the per-device counters move
+    let corpus = CorpusSpec::news(8, 256).with_seed(0x5E7E_0004).generate();
+    let _ = run_load(server.local_addr(), &corpus.docs, 2, &[]).expect("load");
+
+    let mut s = TcpStream::connect(admin).expect("admin connect");
+    write!(s, "GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").expect("request");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("response");
+    assert!(resp.starts_with("HTTP/1.0 200"), "got: {resp}");
+    assert!(
+        resp.contains("\"accel_devices\":[{\"device\":0,"),
+        "per-device rows missing: {resp}"
+    );
+    assert!(resp.contains("\"device\":1,"), "second device missing: {resp}");
+    assert!(
+        resp.contains("\"accel_pool\":{\"retries\":"),
+        "pool counters missing: {resp}"
+    );
+    assert!(resp.contains("\"sw_routed\":"), "routing counter missing: {resp}");
 }
