@@ -1,0 +1,811 @@
+//! Compile-time plan verifier: a multi-pass static analyzer over the
+//! AQL → AOG → optimizer → partition → hwcompile pipeline.
+//!
+//! The paper's core claim is that SystemT's *compile-time* analysis of
+//! AQL — deciding statically what is safe and profitable to offload — is
+//! what makes hardware acceleration deployable. This module is that
+//! checking layer: it turns what used to be `expect()` panics deep inside
+//! graph rebuilds into stable, coded diagnostics, surfaced at build time
+//! ([`crate::coordinator::CatalogBuilder::build`] runs it, strict by
+//! default) and standalone through the `repro check` CLI.
+//!
+//! # Passes
+//!
+//! 1. **Schema inference & type checking** — [`check_graph`] re-derives
+//!    every node's schema through [`Graph::validate_node`] and compares it
+//!    against the stored schema, so operator arity/type rules hold for
+//!    graphs produced by rebuilds, not just by [`Graph::add`].
+//! 2. **Graph invariants** — [`check_graph`] also enforces topological
+//!    ids (`nodes[i].id == i`, inputs strictly smaller — together these
+//!    imply acyclicity), in-range output references, and span provenance
+//!    (every node whose schema carries a `Span` column must be reachable
+//!    from a `DocScan` or `ExtInput` leaf).
+//! 3. **Pass verification** — [`verify_rewrite`] re-runs the invariant and
+//!    schema checks after each optimizer rewrite and asserts the output
+//!    views survive with identical names and schemas; [`check_plan`] does
+//!    the same across the partitioner's supergraph + subgraph split.
+//! 4. **Hardware-feasibility lint** — [`lint_hardware`] checks each
+//!    offloaded subgraph against the compiled artifact
+//!    [`GEOMETRIES`](crate::hwcompiler::GEOMETRIES) (machine count and
+//!    state budget) and warns when the cost model says the offloaded
+//!    fraction is too small to pay for the round-trip, *before*
+//!    [`crate::hwcompiler::compile_subgraph`] can fail.
+//!
+//! # Diagnostic codes
+//!
+//! | Code | Meaning |
+//! |------|---------|
+//! | E001 | AQL lex error |
+//! | E002 | AQL parse error |
+//! | E010 | unknown view |
+//! | E011 | unknown dictionary |
+//! | E012 | unknown function |
+//! | E013 | unknown alias |
+//! | E014 | unknown column |
+//! | E015 | duplicate definition |
+//! | E016 | regex literal failed to compile |
+//! | E017 | unsupported AQL construct |
+//! | E101 | non-topological or dangling node input |
+//! | E102 | expression type error |
+//! | E103 | operator schema mismatch (arity, incompatible inputs, non-Boolean predicate) |
+//! | E104 | column index out of range |
+//! | E105 | output references a node outside the graph |
+//! | E106 | span column without `DocScan`/`ExtInput` provenance |
+//! | E107 | span-consuming operator over a non-span column |
+//! | E201 | optimizer rewrite failed structurally |
+//! | E202 | rewrite changed an output view's schema |
+//! | E203 | rewrite dropped or renamed an output view |
+//! | E204 | partition wiring error (supergraph/subgraph split inconsistent) |
+//! | E301 | more extraction machines than any artifact geometry provides |
+//! | E302 | DFA state count exceeds every artifact geometry |
+//! | W310 | estimated hardware fraction below the offload threshold |
+//! | W311 | estimated kernel VMEM footprint exceeds the device budget |
+//!
+//! Codes are stable: tests and external tooling match on them, so a code
+//! is never reused for a different condition.
+
+use std::fmt;
+
+use crate::aog::{FieldType, Graph, GraphError, OpKind};
+use crate::aql::{CompileError, TokenKind};
+use crate::hwcompiler::{BLOCK_SIZES, GEOMETRIES, MAX_HW_STATES, STREAMS};
+use crate::optimizer::RewriteError;
+use crate::partition::{partition, PartitionMode, PartitionPlan};
+
+/// Below this estimated cost fraction, offloading a plan is unlikely to
+/// pay for the package round-trip — [`lint_hardware`] warns (`W310`).
+/// Deliberately low: extraction-heavy plans (the paper's workload, and
+/// T1–T5) sit far above it.
+pub const MIN_HW_FRACTION: f64 = 0.25;
+
+/// Device VMEM budget the kernel working set must fit
+/// ([`crate::hwcompiler::AccelConfig::vmem_estimate`]); the largest
+/// shipped geometry stays under it, so `W311` fires only if the artifact
+/// menu ever outgrows the device.
+pub const VMEM_BUDGET_BYTES: usize = 64 * 1024 * 1024;
+
+/// Diagnostic severity. Strict builds fail on any [`Severity::Error`];
+/// warnings are reported but never block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Advisory: the plan runs, but something is off.
+    Warning,
+    /// The program or plan is invalid.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// A resolved source position inside an AQL program (byte offset plus the
+/// 1-based line/column and the line's text, for rustc-style rendering).
+#[derive(Debug, Clone)]
+pub struct SourceLoc {
+    /// Byte offset into the source.
+    pub byte: usize,
+    /// 1-based line number.
+    pub line: usize,
+    /// 1-based column (in bytes).
+    pub col: usize,
+    /// The full text of that line.
+    pub line_text: String,
+}
+
+impl SourceLoc {
+    /// Resolve a byte offset against `src`.
+    pub fn at(src: &str, byte: usize) -> SourceLoc {
+        let byte = byte.min(src.len());
+        let before = &src[..byte];
+        let line = before.matches('\n').count() + 1;
+        let line_start = before.rfind('\n').map(|i| i + 1).unwrap_or(0);
+        let col = byte - line_start + 1;
+        let line_text = src[line_start..]
+            .split('\n')
+            .next()
+            .unwrap_or("")
+            .to_string();
+        SourceLoc {
+            byte,
+            line,
+            col,
+            line_text,
+        }
+    }
+}
+
+/// One coded diagnostic — the unit everything in this module produces.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable code (`E###` / `W###`, see the module table).
+    pub code: &'static str,
+    /// Error or warning.
+    pub severity: Severity,
+    /// Human-readable description.
+    pub message: String,
+    /// The catalog query this diagnostic belongs to, when known.
+    pub query: Option<String>,
+    /// Source position, when the diagnostic maps back to AQL text.
+    pub loc: Option<SourceLoc>,
+}
+
+impl Diagnostic {
+    /// A located or unlocated error with the given code.
+    pub fn error(code: &'static str, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: Severity::Error,
+            message: message.into(),
+            query: None,
+            loc: None,
+        }
+    }
+
+    /// A warning with the given code.
+    pub fn warning(code: &'static str, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: Severity::Warning,
+            message: message.into(),
+            query: None,
+            loc: None,
+        }
+    }
+
+    /// Attach the owning query's name.
+    pub fn for_query(mut self, name: &str) -> Diagnostic {
+        self.query = Some(name.to_string());
+        self
+    }
+
+    /// Attach a source location.
+    pub fn at(mut self, loc: SourceLoc) -> Diagnostic {
+        self.loc = Some(loc);
+        self
+    }
+
+    /// Render rustc-style: severity, code, message, then the source line
+    /// with a caret when a location is known.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = write!(s, "{}[{}]: {}", self.severity, self.code, self.message);
+        if let Some(q) = &self.query {
+            let _ = write!(s, " (query '{q}')");
+        }
+        if let Some(loc) = &self.loc {
+            let _ = write!(s, "\n  --> {}:{}", loc.line, loc.col);
+            let _ = write!(s, "\n   | {}", loc.line_text);
+            let _ = write!(s, "\n   | {}^", " ".repeat(loc.col.saturating_sub(1)));
+        }
+        s
+    }
+}
+
+/// The result of an analysis pass: an ordered list of diagnostics.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Diagnostics in emission order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    /// An empty (clean) report.
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    /// Append one diagnostic.
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    /// Append every diagnostic of `other`.
+    pub fn merge(&mut self, other: Report) {
+        self.diagnostics.extend(other.diagnostics);
+    }
+
+    /// True when no diagnostics at all were produced.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// True when at least one [`Severity::Error`] diagnostic is present.
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics
+            .iter()
+            .any(|d| d.severity == Severity::Error)
+    }
+
+    /// True when a diagnostic with this code is present.
+    pub fn has_code(&self, code: &str) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// Render all diagnostics, one block per line group.
+    pub fn render(&self) -> String {
+        self.diagnostics
+            .iter()
+            .map(Diagnostic::render)
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Map a [`GraphError`] to its stable diagnostic code.
+pub fn graph_error_code(e: &GraphError) -> &'static str {
+    match e {
+        GraphError::BadInput { .. } => "E101",
+        GraphError::Type { .. } => "E102",
+        GraphError::SchemaMismatch { .. } => "E103",
+        GraphError::BadColumn { .. } => "E104",
+        GraphError::DanglingOutput { .. } => "E105",
+        GraphError::SpanRequired { .. } => "E107",
+    }
+}
+
+/// Map a [`CompileError`] to its stable diagnostic code.
+pub fn compile_error_code(e: &CompileError) -> &'static str {
+    match e {
+        CompileError::Lex(_) => "E001",
+        CompileError::Parse(_) => "E002",
+        CompileError::UnknownView(_) => "E010",
+        CompileError::UnknownDictionary(_) => "E011",
+        CompileError::UnknownFunction(_) => "E012",
+        CompileError::UnknownAlias(_) => "E013",
+        CompileError::UnknownColumn { .. } => "E014",
+        CompileError::DuplicateName(_) => "E015",
+        CompileError::Regex(_) => "E016",
+        CompileError::Graph(ge) => graph_error_code(ge),
+        CompileError::Unsupported(_) => "E017",
+    }
+}
+
+/// Best-effort source location for a semantic compile error: the AST does
+/// not carry positions, so re-lex the source and point at the first
+/// identifier or string literal that names the offending entity.
+fn locate_name(src: &str, name: &str) -> Option<SourceLoc> {
+    let tokens = crate::aql::lex(src).ok()?;
+    tokens
+        .iter()
+        .find(|t| match &t.kind {
+            TokenKind::Ident(s) | TokenKind::Str(s) => s == name,
+            _ => false,
+        })
+        .map(|t| SourceLoc::at(src, t.pos))
+}
+
+/// Turn a [`CompileError`] for query `name` over `src` into a located
+/// diagnostic.
+pub fn diagnostic_from_compile(name: &str, src: &str, e: &CompileError) -> Diagnostic {
+    let d = Diagnostic::error(compile_error_code(e), e.to_string()).for_query(name);
+    let loc = match e {
+        CompileError::UnknownView(n)
+        | CompileError::UnknownDictionary(n)
+        | CompileError::UnknownFunction(n)
+        | CompileError::UnknownAlias(n)
+        | CompileError::DuplicateName(n) => locate_name(src, n),
+        CompileError::UnknownColumn { col, .. } => locate_name(src, col),
+        _ => None,
+    };
+    match loc {
+        Some(l) => d.at(l),
+        None => d,
+    }
+}
+
+/// Turn a [`RewriteError`] into an `E201` diagnostic.
+pub fn diagnostic_from_rewrite(e: &RewriteError) -> Diagnostic {
+    Diagnostic::error("E201", e.to_string())
+}
+
+/// Lex + parse + compile `src`, producing either the graph or a report
+/// with located `E0##` diagnostics — the compile-front entry the
+/// `repro check` CLI and the engine builder share.
+pub fn check_source(name: &str, src: &str) -> Result<Graph, Report> {
+    let mut report = Report::new();
+    let tokens = match crate::aql::lex(src) {
+        Ok(t) => t,
+        Err(e) => {
+            report.push(
+                Diagnostic::error("E001", e.to_string())
+                    .for_query(name)
+                    .at(SourceLoc::at(src, e.pos)),
+            );
+            return Err(report);
+        }
+    };
+    let program = match crate::aql::parse_program(&tokens) {
+        Ok(p) => p,
+        Err(e) => {
+            report.push(
+                Diagnostic::error("E002", e.to_string())
+                    .for_query(name)
+                    .at(SourceLoc::at(src, e.pos)),
+            );
+            return Err(report);
+        }
+    };
+    match crate::aql::compile_program(&program) {
+        Ok(g) => Ok(g),
+        Err(e) => {
+            report.push(diagnostic_from_compile(name, src, &e));
+            Err(report)
+        }
+    }
+}
+
+/// Passes 1–2: schema re-derivation plus structural invariants over one
+/// graph. Clean on every graph [`Graph::add`] built — its value is
+/// checking graphs produced by *rebuilds* (merge, optimizer, partitioner),
+/// where a wiring bug historically died as an `expect()` panic mid-query.
+pub fn check_graph(g: &Graph) -> Report {
+    let mut report = Report::new();
+    // ids must be their own index and inputs strictly smaller: together
+    // this is the topological invariant, which implies acyclicity.
+    for (i, n) in g.nodes.iter().enumerate() {
+        if n.id != i {
+            report.push(Diagnostic::error(
+                "E101",
+                format!("node at index {i} carries id {} (ids must be dense)", n.id),
+            ));
+            // downstream checks index by id; bail before they misfire
+            return report;
+        }
+        for &inp in &n.inputs {
+            if inp >= i {
+                report.push(Diagnostic::error(
+                    "E101",
+                    format!(
+                        "node {i} ({}): input {inp} is not an earlier node",
+                        n.kind.name()
+                    ),
+                ));
+            }
+        }
+    }
+    // schema re-derivation: every operator rule must hold for the stored
+    // wiring, and the stored schema must equal the derived one.
+    for n in &g.nodes {
+        if n.inputs.iter().any(|&i| i >= n.id) {
+            continue; // already reported above; validate_node would panic
+        }
+        match g.validate_node(n.id) {
+            Ok(derived) => {
+                if derived != n.schema {
+                    report.push(Diagnostic::error(
+                        "E103",
+                        format!(
+                            "node {} ({}): stored schema {} differs from derived {}",
+                            n.id,
+                            n.kind.name(),
+                            n.schema,
+                            derived
+                        ),
+                    ));
+                }
+            }
+            Err(e) => report.push(Diagnostic::error(graph_error_code(&e), e.to_string())),
+        }
+    }
+    // outputs must reference in-range nodes
+    for (name, target) in &g.outputs {
+        if *target >= g.nodes.len() {
+            report.push(Diagnostic::error(
+                "E105",
+                format!(
+                    "output '{name}' references node {target}, but the graph has {} nodes",
+                    g.nodes.len()
+                ),
+            ));
+        }
+    }
+    // span provenance: a span column means document text flows through
+    // this node, so it must be reachable from a DocScan (or an ExtInput,
+    // which injects tuples the supergraph already traced).
+    let mut doc_derived = vec![false; g.nodes.len()];
+    for n in &g.nodes {
+        doc_derived[n.id] = matches!(n.kind, OpKind::DocScan | OpKind::ExtInput { .. })
+            || n.inputs.iter().any(|&i| doc_derived[i]);
+        let has_span = n.schema.fields.iter().any(|f| f.ty == FieldType::Span);
+        if has_span && !doc_derived[n.id] {
+            report.push(Diagnostic::error(
+                "E106",
+                format!(
+                    "node {} ({}): span column without DocScan/ExtInput provenance",
+                    n.id,
+                    n.kind.name()
+                ),
+            ));
+        }
+    }
+    report
+}
+
+/// Pass 3: verify one rewrite step. Checks the rewritten graph's
+/// invariants and asserts every output view of `before` survives in
+/// `after` with the same name (E203) and schema (E202). `stage` labels
+/// the rewrite in messages (`"dedup"`, `"pushdown"`, `"prune"`, ...).
+pub fn verify_rewrite(stage: &str, before: &Graph, after: &Graph) -> Report {
+    let mut report = check_graph(after);
+    if before.outputs.len() != after.outputs.len() {
+        report.push(Diagnostic::error(
+            "E203",
+            format!(
+                "rewrite '{stage}' changed the output count: {} -> {}",
+                before.outputs.len(),
+                after.outputs.len()
+            ),
+        ));
+        return report;
+    }
+    for ((bn, bt), (an, at)) in before.outputs.iter().zip(&after.outputs) {
+        if bn != an {
+            report.push(Diagnostic::error(
+                "E203",
+                format!("rewrite '{stage}' renamed output '{bn}' to '{an}'"),
+            ));
+            continue;
+        }
+        let (bs, as_) = match (before.nodes.get(*bt), after.nodes.get(*at)) {
+            (Some(b), Some(a)) => (&b.schema, &a.schema),
+            _ => continue, // dangling targets already reported as E105
+        };
+        if bs != as_ {
+            report.push(Diagnostic::error(
+                "E202",
+                format!(
+                    "rewrite '{stage}' changed the schema of output '{bn}': {bs} -> {as_}"
+                ),
+            ));
+        }
+    }
+    report
+}
+
+/// Pass 3, partition edition: verify the supergraph + subgraph split
+/// against the graph it was derived from. Structural problems in the
+/// split itself are `E204`; the component graphs are also re-checked
+/// (passes 1–2).
+pub fn check_plan(g: &Graph, plan: &PartitionPlan) -> Report {
+    let mut report = verify_rewrite("partition", g, &plan.supergraph);
+    for spec in &plan.subgraphs {
+        let body_report = check_graph(&spec.body);
+        report.merge(body_report);
+        if spec.outputs.len() != spec.body.outputs.len() {
+            report.push(Diagnostic::error(
+                "E204",
+                format!(
+                    "subgraph {}: {} output ids but {} registered body outputs",
+                    spec.id,
+                    spec.outputs.len(),
+                    spec.body.outputs.len()
+                ),
+            ));
+        }
+        for (k, &out) in spec.outputs.iter().enumerate() {
+            if out >= spec.body.nodes.len() {
+                report.push(Diagnostic::error(
+                    "E204",
+                    format!(
+                        "subgraph {}: output {k} references body node {out} of {}",
+                        spec.id,
+                        spec.body.nodes.len()
+                    ),
+                ));
+            }
+        }
+        // ExtInput slots must be dense in [0, ext_inputs)
+        for n in &spec.body.nodes {
+            if let OpKind::ExtInput { slot, .. } = &n.kind {
+                if *slot >= spec.ext_inputs {
+                    report.push(Diagnostic::error(
+                        "E204",
+                        format!(
+                            "subgraph {}: ExtInput slot {slot} outside declared {} slots",
+                            spec.id, spec.ext_inputs
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    // every SubgraphExec in the supergraph must point at a real subgraph
+    // output and carry that output's schema
+    for n in &plan.supergraph.nodes {
+        if let OpKind::SubgraphExec {
+            subgraph_id,
+            output_idx,
+            schema,
+        } = &n.kind
+        {
+            let Some(spec) = plan.subgraphs.get(*subgraph_id) else {
+                report.push(Diagnostic::error(
+                    "E204",
+                    format!(
+                        "supergraph node {}: SubgraphExec references subgraph {subgraph_id} of {}",
+                        n.id,
+                        plan.subgraphs.len()
+                    ),
+                ));
+                continue;
+            };
+            let Some(&body_out) = spec.outputs.get(*output_idx) else {
+                report.push(Diagnostic::error(
+                    "E204",
+                    format!(
+                        "supergraph node {}: SubgraphExec output {output_idx} outside subgraph {}'s {} outputs",
+                        n.id,
+                        subgraph_id,
+                        spec.outputs.len()
+                    ),
+                ));
+                continue;
+            };
+            if let Some(body_node) = spec.body.nodes.get(body_out) {
+                if &body_node.schema != schema {
+                    report.push(Diagnostic::error(
+                        "E204",
+                        format!(
+                            "supergraph node {}: SubgraphExec schema {} differs from subgraph {}.{}'s {}",
+                            n.id, schema, subgraph_id, output_idx, body_node.schema
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Pass 4: hardware-feasibility lint. Mirrors the geometry selection of
+/// [`crate::hwcompiler::compile_subgraph`] — machine count and DFA state
+/// budget against the artifact menu — *without* its expensive randomized
+/// semantics validation, and adds the cost model's estimated hardware
+/// fraction so an unprofitable offload warns before any compile fails.
+/// `g` is the (optimized) graph the plan was derived from; `doc_len` the
+/// assumed document size for the cost model.
+pub fn lint_hardware(g: &Graph, plan: &PartitionPlan, doc_len: usize) -> Report {
+    let mut report = Report::new();
+    if plan.mode == PartitionMode::None {
+        return report;
+    }
+    for spec in &plan.subgraphs {
+        let mut machines = 0usize;
+        let mut max_states = 2usize;
+        for n in &spec.body.nodes {
+            match &n.kind {
+                OpKind::RegexExtract { regex, .. } => {
+                    machines += 1;
+                    max_states = max_states.max(regex.search.num_states as usize);
+                }
+                OpKind::DictExtract { matcher, .. } => {
+                    machines += 1;
+                    max_states = max_states.max(matcher.num_states as usize);
+                }
+                _ => {}
+            }
+        }
+        let geometry = GEOMETRIES
+            .iter()
+            .copied()
+            .filter(|&(m, s)| m >= machines.max(1) && s >= max_states)
+            .min_by_key(|&(m, s)| m * s);
+        match geometry {
+            None if max_states > MAX_HW_STATES => report.push(Diagnostic::error(
+                "E302",
+                format!(
+                    "subgraph {}: {max_states} DFA states exceed every artifact geometry (max {MAX_HW_STATES})",
+                    spec.id
+                ),
+            )),
+            None => report.push(Diagnostic::error(
+                "E301",
+                format!(
+                    "subgraph {}: {machines} extraction machines exceed every artifact geometry (max {})",
+                    spec.id,
+                    GEOMETRIES.iter().map(|&(m, _)| m).max().unwrap_or(0)
+                ),
+            )),
+            Some((m, s)) => {
+                // VMEM working-set estimate at the chosen geometry for the
+                // largest block size (AccelConfig::vmem_estimate's formula)
+                let block = BLOCK_SIZES.iter().copied().max().unwrap_or(0);
+                let vmem = m * s * 256 * 4 + m * s * 4 + STREAMS * block * 4 + m * STREAMS * block * 4;
+                if vmem > VMEM_BUDGET_BYTES {
+                    report.push(Diagnostic::warning(
+                        "W311",
+                        format!(
+                            "subgraph {}: estimated VMEM working set {} MiB exceeds the {} MiB device budget at geometry ({m}, {s})",
+                            spec.id,
+                            vmem >> 20,
+                            VMEM_BUDGET_BYTES >> 20
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    // profitability: the fraction of estimated software cost the plan
+    // offloads, summed over all subgraphs
+    if !plan.subgraphs.is_empty() {
+        let cost = crate::optimizer::estimate(g, doc_len);
+        let frac: f64 = plan
+            .subgraphs
+            .iter()
+            .map(|s| cost.fraction_of(&s.orig_nodes))
+            .sum();
+        if frac < MIN_HW_FRACTION {
+            report.push(Diagnostic::warning(
+                "W310",
+                format!(
+                    "estimated hardware fraction {frac:.2} is below the {MIN_HW_FRACTION} offload threshold — the round-trip likely costs more than it saves"
+                ),
+            ));
+        }
+    }
+    report
+}
+
+/// Full-pipeline check of one AQL program: compile front (E0##), graph
+/// invariants (E1##), every optimizer rewrite stage (E2##), the partition
+/// split (E204), and the hardware lint (E3##/W3##) under `mode` and an
+/// assumed `doc_len`. This is what `repro check` runs per query.
+pub fn check_query(name: &str, src: &str, mode: PartitionMode, doc_len: usize) -> Report {
+    let g = match check_source(name, src) {
+        Ok(g) => g,
+        Err(report) => return report,
+    };
+    let mut report = check_graph(&g);
+    if report.has_errors() {
+        return report;
+    }
+    // optimizer stages, each verified before the next runs
+    let mut cur = g;
+    type Stage = (
+        &'static str,
+        fn(&Graph) -> Result<Graph, RewriteError>,
+    );
+    let stages: [Stage; 3] = [
+        ("dedup", crate::optimizer::try_dedup_extractions),
+        ("pushdown", crate::optimizer::try_push_predicates),
+        ("prune", crate::optimizer::try_prune_dead),
+    ];
+    for (stage, run) in stages {
+        match run(&cur) {
+            Ok(next) => {
+                report.merge(verify_rewrite(stage, &cur, &next));
+                cur = next;
+            }
+            Err(e) => {
+                report.push(diagnostic_from_rewrite(&e).for_query(name));
+                return report;
+            }
+        }
+        if report.has_errors() {
+            return report;
+        }
+    }
+    // partition + hardware lint
+    let plan = partition(&cur, mode);
+    report.merge(check_plan(&cur, &plan));
+    if report.has_errors() {
+        return report;
+    }
+    report.merge(lint_hardware(&cur, &plan, doc_len));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLEAN: &str = "
+        create view Person as extract regex /[A-Z][a-z]+/ on d.text as name from Document d;
+        output view Person;
+    ";
+
+    #[test]
+    fn clean_program_is_clean() {
+        let r = check_query("q", CLEAN, PartitionMode::ExtractOnly, 2048);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn lex_error_is_e001_with_location() {
+        let r = check_query("q", "create view V as @@;", PartitionMode::None, 2048);
+        assert!(r.has_code("E001"), "{}", r.render());
+        let d = &r.diagnostics[0];
+        assert!(d.loc.is_some());
+        assert!(d.render().contains("E001"));
+    }
+
+    #[test]
+    fn unknown_view_is_e010_and_points_at_the_name() {
+        let r = check_query("q", "output view Nope;", PartitionMode::None, 2048);
+        assert!(r.has_code("E010"), "{}", r.render());
+        let loc = r.diagnostics[0].loc.as_ref().expect("located");
+        assert_eq!(loc.line, 1);
+        assert!(loc.line_text.contains("Nope"));
+    }
+
+    #[test]
+    fn check_graph_catches_corrupt_rebuild() {
+        let mut g = crate::aql::compile(CLEAN).unwrap();
+        assert!(check_graph(&g).is_clean());
+        // simulate a buggy rebuild: dangling output
+        g.outputs.push(("Ghost".into(), 99));
+        let r = check_graph(&g);
+        assert!(r.has_code("E105"), "{}", r.render());
+    }
+
+    #[test]
+    fn verify_rewrite_catches_dropped_output() {
+        let g = crate::aql::compile(CLEAN).unwrap();
+        let mut after = g.clone();
+        after.outputs.clear();
+        let r = verify_rewrite("test", &g, &after);
+        assert!(r.has_code("E203"), "{}", r.render());
+    }
+
+    #[test]
+    fn verify_rewrite_catches_schema_change() {
+        let g = crate::aql::compile(
+            "create view A as extract regex /a/ on d.text as m from Document d;
+             create view B as select a.m as m from A a;
+             output view A; output view B;",
+        )
+        .unwrap();
+        let mut after = g.clone();
+        // point output 1 at a node with a different schema (the DocScan)
+        after.outputs[1].1 = 0;
+        let r = verify_rewrite("test", &g, &after);
+        assert!(r.has_code("E202"), "{}", r.render());
+    }
+
+    #[test]
+    fn source_loc_resolves_lines_and_columns() {
+        let src = "abc\ndef\nghi";
+        let l = SourceLoc::at(src, 5);
+        assert_eq!((l.line, l.col), (2, 2));
+        assert_eq!(l.line_text, "def");
+        // clamped past the end
+        let l = SourceLoc::at(src, 500);
+        assert_eq!(l.line, 3);
+    }
+
+    #[test]
+    fn severity_gating() {
+        let mut r = Report::new();
+        r.push(Diagnostic::warning("W310", "x"));
+        assert!(!r.has_errors());
+        assert!(!r.is_clean());
+        r.push(Diagnostic::error("E101", "y"));
+        assert!(r.has_errors());
+    }
+}

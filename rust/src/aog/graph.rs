@@ -138,13 +138,18 @@ pub struct Graph {
     pub outputs: Vec<(String, NodeId)>,
 }
 
-/// Graph construction/validation error.
-#[derive(Debug)]
+/// Graph construction/validation error. Every variant carries the node
+/// id and (where one exists) the operator name ([`OpKind::name`]), so
+/// callers — in particular [`crate::analysis`] diagnostics — can report
+/// *which* operator failed, not just a bare message.
+#[derive(Debug, Clone)]
 pub enum GraphError {
     /// An input id does not precede the node (DAG order violated).
     BadInput {
         /// The node being added.
         node: NodeId,
+        /// Operator name of the node being added.
+        op: &'static str,
         /// The offending input id.
         input: NodeId,
     },
@@ -152,6 +157,8 @@ pub enum GraphError {
     Type {
         /// The node being added.
         node: NodeId,
+        /// Operator name of the node being added.
+        op: &'static str,
         /// The underlying type error.
         err: TypeError,
     },
@@ -159,6 +166,8 @@ pub enum GraphError {
     SchemaMismatch {
         /// The node being added.
         node: NodeId,
+        /// Operator name of the node being added.
+        op: &'static str,
         /// What mismatched.
         detail: String,
     },
@@ -166,23 +175,53 @@ pub enum GraphError {
     BadColumn {
         /// The node being added.
         node: NodeId,
+        /// Operator name of the node being added.
+        op: &'static str,
         /// The offending column index.
         col: usize,
+    },
+    /// A span-consuming operator (block, consolidate) was pointed at a
+    /// non-span column.
+    SpanRequired {
+        /// The node being added.
+        node: NodeId,
+        /// Operator name of the node being added.
+        op: &'static str,
+        /// The column that should have been a span.
+        col: usize,
+    },
+    /// An output registration names a node the graph does not contain.
+    DanglingOutput {
+        /// The output view name.
+        name: String,
+        /// The referenced (missing) node id.
+        node: NodeId,
+        /// Number of nodes actually in the graph.
+        len: usize,
     },
 }
 
 impl std::fmt::Display for GraphError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            GraphError::BadInput { node, input } => {
-                write!(f, "node {node}: input {input} is not an earlier node")
+            GraphError::BadInput { node, op, input } => {
+                write!(f, "node {node} ({op}): input {input} is not an earlier node")
             }
-            GraphError::Type { node, err } => write!(f, "node {node}: {err}"),
-            GraphError::SchemaMismatch { node, detail } => {
-                write!(f, "node {node}: schema mismatch: {detail}")
+            GraphError::Type { node, op, err } => write!(f, "node {node} ({op}): {err}"),
+            GraphError::SchemaMismatch { node, op, detail } => {
+                write!(f, "node {node} ({op}): schema mismatch: {detail}")
             }
-            GraphError::BadColumn { node, col } => {
-                write!(f, "node {node}: column {col} out of range")
+            GraphError::BadColumn { node, op, col } => {
+                write!(f, "node {node} ({op}): column {col} out of range")
+            }
+            GraphError::SpanRequired { node, op, col } => {
+                write!(f, "node {node} ({op}): column {col} must be a span")
+            }
+            GraphError::DanglingOutput { name, node, len } => {
+                write!(
+                    f,
+                    "output '{name}' references node {node}, but the graph has {len} nodes"
+                )
             }
         }
     }
@@ -202,7 +241,11 @@ impl Graph {
         let id = self.nodes.len();
         for &i in &inputs {
             if i >= id {
-                return Err(GraphError::BadInput { node: id, input: i });
+                return Err(GraphError::BadInput {
+                    node: id,
+                    op: kind.name(),
+                    input: i,
+                });
             }
         }
         let schema = self.derive_schema(id, &kind, &inputs)?;
@@ -221,11 +264,40 @@ impl Graph {
         self.nodes[node].view = Some(name.into());
     }
 
-    /// Register an output view.
-    pub fn add_output(&mut self, name: impl Into<String>, node: NodeId) {
+    /// Register an output view. Fails with
+    /// [`GraphError::DanglingOutput`] if `node` is not in the graph, so a
+    /// caller wiring outputs from a remap table gets the view name and
+    /// the bad id back instead of an index panic.
+    pub fn add_output(&mut self, name: impl Into<String>, node: NodeId) -> Result<(), GraphError> {
         let name = name.into();
+        if node >= self.nodes.len() {
+            return Err(GraphError::DanglingOutput {
+                name,
+                node,
+                len: self.nodes.len(),
+            });
+        }
         self.nodes[node].view.get_or_insert_with(|| name.clone());
         self.outputs.push((name, node));
+        Ok(())
+    }
+
+    /// Re-derive the schema of an existing node from its inputs,
+    /// re-running every operator arity/type rule — the validation hook
+    /// [`crate::analysis::check_graph`] uses to verify graphs produced by
+    /// rebuilds (optimizer, partitioner, merges) rather than by [`Graph::add`].
+    pub fn validate_node(&self, id: NodeId) -> Result<Schema, GraphError> {
+        let n = &self.nodes[id];
+        for &i in &n.inputs {
+            if i >= id {
+                return Err(GraphError::BadInput {
+                    node: id,
+                    op: n.kind.name(),
+                    input: i,
+                });
+            }
+        }
+        self.derive_schema(id, &n.kind, &n.inputs)
     }
 
     /// Schema derivation (also the validator for operator/arity/type rules).
@@ -235,11 +307,13 @@ impl Graph {
         kind: &OpKind,
         inputs: &[NodeId],
     ) -> Result<Schema, GraphError> {
+        let op = kind.name();
         let input_schema = |k: usize| -> &Schema { &self.nodes[inputs[k]].schema };
         let expect_inputs = |n: usize| -> Result<(), GraphError> {
             if inputs.len() != n {
                 Err(GraphError::SchemaMismatch {
                     node: id,
+                    op,
                     detail: format!("expected {n} inputs, got {}", inputs.len()),
                 })
             } else {
@@ -258,6 +332,7 @@ impl Graph {
                 if input_schema(0).fields.is_empty() {
                     return Err(GraphError::SchemaMismatch {
                         node: id,
+                        op,
                         detail: "extraction over empty schema".into(),
                     });
                 }
@@ -275,9 +350,10 @@ impl Graph {
                     Ok(FieldType::Bool) => Ok(schema.clone()),
                     Ok(t) => Err(GraphError::SchemaMismatch {
                         node: id,
+                        op,
                         detail: format!("select predicate has type {t}, want Boolean"),
                     }),
-                    Err(err) => Err(GraphError::Type { node: id, err }),
+                    Err(err) => Err(GraphError::Type { node: id, op, err }),
                 }
             }
             OpKind::Project { cols } => {
@@ -287,7 +363,7 @@ impl Graph {
                 for (name, e) in cols {
                     let ty = e
                         .infer_type(schema)
-                        .map_err(|err| GraphError::Type { node: id, err })?;
+                        .map_err(|err| GraphError::Type { node: id, op, err })?;
                     fields.push(Field {
                         name: name.clone(),
                         ty,
@@ -302,15 +378,17 @@ impl Graph {
                     Ok(FieldType::Bool) => Ok(joined),
                     Ok(t) => Err(GraphError::SchemaMismatch {
                         node: id,
+                        op,
                         detail: format!("join predicate has type {t}, want Boolean"),
                     }),
-                    Err(err) => Err(GraphError::Type { node: id, err }),
+                    Err(err) => Err(GraphError::Type { node: id, op, err }),
                 }
             }
             OpKind::Union => {
                 if inputs.is_empty() {
                     return Err(GraphError::SchemaMismatch {
                         node: id,
+                        op,
                         detail: "union needs at least one input".into(),
                     });
                 }
@@ -325,6 +403,7 @@ impl Graph {
                     {
                         return Err(GraphError::SchemaMismatch {
                             node: id,
+                            op,
                             detail: format!(
                                 "union input {k} schema {s} incompatible with {first}"
                             ),
@@ -341,6 +420,7 @@ impl Graph {
                 {
                     return Err(GraphError::SchemaMismatch {
                         node: id,
+                        op,
                         detail: format!("minus inputs {a} vs {b}"),
                     });
                 }
@@ -350,12 +430,17 @@ impl Graph {
                 expect_inputs(1)?;
                 let schema = input_schema(0);
                 if *col >= schema.arity() {
-                    return Err(GraphError::BadColumn { node: id, col: *col });
+                    return Err(GraphError::BadColumn {
+                        node: id,
+                        op,
+                        col: *col,
+                    });
                 }
                 if schema.type_at(*col) != FieldType::Span {
-                    return Err(GraphError::SchemaMismatch {
+                    return Err(GraphError::SpanRequired {
                         node: id,
-                        detail: format!("block column {col} is not a span"),
+                        op,
+                        col: *col,
                     });
                 }
                 Ok(Schema::of(&[("block", FieldType::Span)]))
@@ -364,12 +449,17 @@ impl Graph {
                 expect_inputs(1)?;
                 let schema = input_schema(0);
                 if *col >= schema.arity() {
-                    return Err(GraphError::BadColumn { node: id, col: *col });
+                    return Err(GraphError::BadColumn {
+                        node: id,
+                        op,
+                        col: *col,
+                    });
                 }
                 if schema.type_at(*col) != FieldType::Span {
-                    return Err(GraphError::SchemaMismatch {
+                    return Err(GraphError::SpanRequired {
                         node: id,
-                        detail: format!("consolidate column {col} is not a span"),
+                        op,
+                        col: *col,
                     });
                 }
                 Ok(schema.clone())
@@ -379,7 +469,7 @@ impl Graph {
                 let schema = input_schema(0);
                 for &k in keys {
                     if k >= schema.arity() {
-                        return Err(GraphError::BadColumn { node: id, col: k });
+                        return Err(GraphError::BadColumn { node: id, op, col: k });
                     }
                 }
                 Ok(schema.clone())
@@ -392,6 +482,7 @@ impl Graph {
                 if inputs.is_empty() {
                     return Err(GraphError::SchemaMismatch {
                         node: id,
+                        op,
                         detail: "SubgraphExec needs the DocScan as input 0".into(),
                     });
                 }
@@ -440,7 +531,8 @@ impl Graph {
             remap.push(id);
         }
         for (name, target) in &other.outputs {
-            self.add_output(name.clone(), remap[*target]);
+            self.add_output(name.clone(), remap[*target])
+                .expect("remapped output targets a merged node");
         }
         remap
     }
@@ -629,7 +721,7 @@ mod tests {
                 vec![re],
             )
             .unwrap();
-        g.add_output("Numbers", sel);
+        g.add_output("Numbers", sel).unwrap();
         assert_eq!(g.nodes.len(), 3);
         assert_eq!(g.nodes[sel].schema.arity(), 1);
         assert!(g.dump().contains("RegularExpression"));
@@ -742,12 +834,58 @@ mod tests {
     }
 
     #[test]
+    fn add_output_rejects_dangling_node() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(regex_node("a"), vec![doc]).unwrap();
+        g.add_output("A", a).unwrap();
+        let err = g.add_output("B", 99).unwrap_err();
+        assert!(matches!(err, GraphError::DanglingOutput { node: 99, .. }));
+        assert!(err.to_string().contains("'B'"), "{err}");
+        // the failed registration must not leave a partial output behind
+        assert_eq!(g.outputs.len(), 1);
+    }
+
+    #[test]
+    fn errors_name_the_operator() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(regex_node("a"), vec![doc]).unwrap();
+        let err = g
+            .add(
+                OpKind::Select {
+                    pred: Expr::LitInt(1),
+                },
+                vec![a],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("(Select)"), "{err}");
+    }
+
+    #[test]
+    fn validate_node_rederives_schemas() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(regex_node("a"), vec![doc]).unwrap();
+        for n in 0..g.nodes.len() {
+            let s = g.validate_node(n).unwrap();
+            assert_eq!(s.arity(), g.nodes[n].schema.arity());
+        }
+        // corrupt the graph the way a buggy rebuild would: a forward input
+        g.nodes[a].inputs = vec![a + 7];
+        assert!(matches!(
+            g.validate_node(a),
+            Err(GraphError::BadInput { .. })
+        ));
+    }
+
+    #[test]
     fn live_nodes_and_consumers() {
         let mut g = Graph::new();
         let doc = g.add(OpKind::DocScan, vec![]).unwrap();
         let a = g.add(regex_node("a"), vec![doc]).unwrap();
         let _dead = g.add(regex_node("b"), vec![doc]).unwrap();
-        g.add_output("A", a);
+        g.add_output("A", a).unwrap();
         let live = g.live_nodes();
         assert_eq!(live, vec![true, true, false]);
         let cons = g.consumers();
@@ -760,12 +898,12 @@ mod tests {
         let mut a = Graph::new();
         let doc_a = a.add(OpKind::DocScan, vec![]).unwrap();
         let ra = a.add(regex_node("a+"), vec![doc_a]).unwrap();
-        a.add_output("A", ra);
+        a.add_output("A", ra).unwrap();
 
         let mut b = Graph::new();
         let doc_b = b.add(OpKind::DocScan, vec![]).unwrap();
         let rb = b.add(regex_node("b+"), vec![doc_b]).unwrap();
-        b.add_output("B", rb);
+        b.add_output("B", rb).unwrap();
 
         let remap = a.merge_from(&b);
         // exactly one DocScan survives; b's maps onto a's
@@ -784,7 +922,7 @@ mod tests {
         let mut b = Graph::new();
         let doc_b = b.add(OpKind::DocScan, vec![]).unwrap();
         let rb = b.add(regex_node("x"), vec![doc_b]).unwrap();
-        b.add_output("X", rb);
+        b.add_output("X", rb).unwrap();
 
         let mut a = Graph::new();
         let remap = a.merge_from(&b);
@@ -798,7 +936,7 @@ mod tests {
         let mut g = Graph::new();
         let doc = g.add(OpKind::DocScan, vec![]).unwrap();
         let a = g.add(dict_node(&["ibm", "research"]), vec![doc]).unwrap();
-        g.add_output("Orgs", a);
+        g.add_output("Orgs", a).unwrap();
         let d = g.dump();
         assert!(d.contains("Dictionary"), "{d}");
         assert!(d.contains("output Orgs"), "{d}");

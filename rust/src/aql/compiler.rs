@@ -11,7 +11,7 @@ use std::fmt;
 use std::sync::Arc;
 
 use crate::aog::expr::{CmpOp, Expr, Func};
-use crate::aog::{Graph, NodeId, OpKind, Schema};
+use crate::aog::{Graph, GraphError, NodeId, OpKind, Schema};
 use crate::dict::{AhoCorasick, Dictionary};
 
 use super::ast::*;
@@ -42,8 +42,10 @@ pub enum CompileError {
     DuplicateName(String),
     /// The regex literal failed to compile.
     Regex(String),
-    /// Graph construction rejected the lowered operators.
-    Graph(String),
+    /// Graph construction rejected the lowered operators. Carries the
+    /// structured [`GraphError`] so callers see the node id and operator
+    /// kind, not a flattened message.
+    Graph(GraphError),
     /// Syntactically valid AQL outside the supported subset.
     Unsupported(String),
 }
@@ -62,7 +64,7 @@ impl fmt::Display for CompileError {
             }
             CompileError::DuplicateName(n) => write!(f, "duplicate definition of '{n}'"),
             CompileError::Regex(m) => write!(f, "{m}"),
-            CompileError::Graph(m) => write!(f, "{m}"),
+            CompileError::Graph(e) => write!(f, "{e}"),
             CompileError::Unsupported(m) => write!(f, "unsupported: {m}"),
         }
     }
@@ -176,7 +178,8 @@ pub fn compile_program_ns(
                     .views
                     .get(name)
                     .ok_or_else(|| CompileError::UnknownView(name.clone()))?;
-                g.add_output(qualify(name), node);
+                g.add_output(qualify(name), node)
+                    .map_err(CompileError::Graph)?;
             }
         }
     }
@@ -197,13 +200,13 @@ fn compile_body(
                 .map(|p| compile_body(p, g, cat))
                 .collect::<Result<Vec<_>, _>>()?;
             g.add(OpKind::Union, nodes)
-                .map_err(|e| CompileError::Graph(e.to_string()))
+                .map_err(CompileError::Graph)
         }
         ViewBody::Minus(lhs, rhs) => {
             let l = compile_body(lhs, g, cat)?;
             let r = compile_body(rhs, g, cat)?;
             g.add(OpKind::Difference, vec![l, r])
-                .map_err(|e| CompileError::Graph(e.to_string()))
+                .map_err(CompileError::Graph)
         }
         ViewBody::Block(b) => {
             let node = match &b.source {
@@ -232,7 +235,7 @@ fn compile_body(
                 },
                 vec![node],
             )
-            .map_err(|e| CompileError::Graph(e.to_string()))
+            .map_err(CompileError::Graph)
         }
     }
 }
@@ -282,8 +285,7 @@ fn compile_extract(
             }
         }
     };
-    g.add(kind, vec![doc])
-        .map_err(|err| CompileError::Graph(err.to_string()))
+    g.add(kind, vec![doc]).map_err(CompileError::Graph)
 }
 
 /// Alias resolution table: alias → (column offset, schema).
@@ -347,7 +349,7 @@ fn compile_select(
                 },
                 vec![cur, n],
             )
-            .map_err(|e| CompileError::Graph(e.to_string()))?;
+            .map_err(CompileError::Graph)?;
     }
 
     // Conjoin predicates into one Select.
@@ -367,7 +369,7 @@ fn compile_select(
                 },
                 vec![cur],
             )
-            .map_err(|e| CompileError::Graph(e.to_string()))?;
+            .map_err(CompileError::Graph)?;
     }
 
     // Projection.
@@ -377,7 +379,7 @@ fn compile_select(
     }
     cur = g
         .add(OpKind::Project { cols }, vec![cur])
-        .map_err(|e| CompileError::Graph(e.to_string()))?;
+        .map_err(CompileError::Graph)?;
 
     // Consolidation over an output column.
     if let Some((col_name, policy)) = &s.consolidate {
@@ -396,7 +398,7 @@ fn compile_select(
                 },
                 vec![cur],
             )
-            .map_err(|e| CompileError::Graph(e.to_string()))?;
+            .map_err(CompileError::Graph)?;
     }
 
     // Order by / limit.
@@ -414,12 +416,12 @@ fn compile_select(
             .collect::<Result<Vec<_>, _>>()?;
         cur = g
             .add(OpKind::Sort { keys }, vec![cur])
-            .map_err(|e| CompileError::Graph(e.to_string()))?;
+            .map_err(CompileError::Graph)?;
     }
     if let Some(n) = s.limit {
         cur = g
             .add(OpKind::Limit { n }, vec![cur])
-            .map_err(|e| CompileError::Graph(e.to_string()))?;
+            .map_err(CompileError::Graph)?;
     }
     Ok(cur)
 }

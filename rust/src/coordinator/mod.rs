@@ -218,6 +218,7 @@ enum EntrySource {
 pub struct CatalogBuilder {
     entries: Vec<(String, EntrySource)>,
     config: EngineConfig,
+    lenient: bool,
 }
 
 impl CatalogBuilder {
@@ -226,6 +227,7 @@ impl CatalogBuilder {
         CatalogBuilder {
             entries: Vec::new(),
             config: EngineConfig::default(),
+            lenient: false,
         }
     }
 
@@ -252,16 +254,32 @@ impl CatalogBuilder {
         self
     }
 
-    /// Parse every registered program, merge them into one shared
-    /// supergraph (common `DocScan`, interned extraction leaves), and run
-    /// the optimizer, partitioner and hardware compiler **once** over the
-    /// merged graph.
+    /// Quarantine entries whose AQL fails static analysis instead of
+    /// failing the whole build. Strict (the default) errors on the first
+    /// rejected entry; lenient excludes rejected entries from the merged
+    /// graph and surfaces them through [`Engine::rejected_queries`] — the
+    /// serve tier answers a Hello naming one with a structured Error
+    /// frame. Registration mistakes (bad or duplicate names, unknown
+    /// builtins) stay fatal either way, as do analysis failures of the
+    /// *merged* graph.
+    pub fn lenient(mut self) -> CatalogBuilder {
+        self.lenient = true;
+        self
+    }
+
+    /// Parse every registered program, run the static analyzer over each
+    /// entry (strict by default, see [`CatalogBuilder::lenient`]), merge
+    /// the survivors into one shared supergraph (common `DocScan`,
+    /// interned extraction leaves), and run the optimizer, partitioner
+    /// and hardware compiler **once** over the merged graph — with the
+    /// analyzer re-verifying the plan after every rewrite.
     pub fn build(self) -> Result<Engine> {
         if self.entries.is_empty() {
             return Err(anyhow!("catalog is empty — register at least one query"));
         }
         let mut merged = Graph::new();
         let mut specs: Vec<QuerySpec> = Vec::new();
+        let mut rejected: Vec<RejectedQuery> = Vec::new();
         for (name, source) in &self.entries {
             if name.is_empty()
                 || !name
@@ -273,7 +291,9 @@ impl CatalogBuilder {
                      (the name becomes the view namespace '<name>.<View>')"
                 ));
             }
-            if specs.iter().any(|s| s.name == *name) {
+            if specs.iter().any(|s| s.name == *name)
+                || rejected.iter().any(|r| r.name == *name)
+            {
                 return Err(anyhow!("duplicate query name '{name}' in catalog"));
             }
             let aql = match source {
@@ -286,8 +306,33 @@ impl CatalogBuilder {
                         .aql
                 }
             };
-            let g = crate::aql::compile_ns(&aql, name)
-                .map_err(|e| anyhow!("query '{name}': {e}"))?;
+            let mut report = crate::analysis::Report::new();
+            let g = match crate::aql::compile_ns(&aql, name) {
+                Ok(g) => {
+                    // per-entry graph invariants (passes 1–2); compile
+                    // output is expected clean — this guards the compiler
+                    report.merge(crate::analysis::check_graph(&g));
+                    if report.has_errors() {
+                        None
+                    } else {
+                        Some(g)
+                    }
+                }
+                Err(e) => {
+                    report.push(crate::analysis::diagnostic_from_compile(name, &aql, &e));
+                    None
+                }
+            };
+            let Some(g) = g else {
+                if self.lenient {
+                    rejected.push(RejectedQuery {
+                        name: name.clone(),
+                        report,
+                    });
+                    continue;
+                }
+                return Err(anyhow!("query '{name}' rejected:\n{}", report.render()));
+            };
             let start = merged.outputs.len();
             merged.merge_from(&g);
             specs.push(QuerySpec {
@@ -296,7 +341,28 @@ impl CatalogBuilder {
                 outputs: start..merged.outputs.len(),
             });
         }
-        Engine::from_parts(merged, specs, self.config)
+        if specs.is_empty() {
+            return Err(anyhow!(
+                "all {} catalog entries were rejected:\n{}",
+                rejected.len(),
+                rejected
+                    .iter()
+                    .map(|r| r.report.render())
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            ));
+        }
+        // the merge itself is a rebuild: verify it (fatal in both modes)
+        let merged_report = crate::analysis::check_graph(&merged);
+        if merged_report.has_errors() {
+            return Err(anyhow!(
+                "merged catalog graph failed verification:\n{}",
+                merged_report.render()
+            ));
+        }
+        let mut engine = Engine::from_parts(merged, specs, self.config)?;
+        engine.rejected = rejected;
+        Ok(engine)
     }
 }
 
@@ -304,6 +370,16 @@ impl Default for CatalogBuilder {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// A catalog entry quarantined by a lenient build: its registered name
+/// and the diagnostics that rejected it (see [`CatalogBuilder::lenient`]).
+#[derive(Debug, Clone)]
+pub struct RejectedQuery {
+    /// The name the entry was registered under.
+    pub name: String,
+    /// The static-analysis diagnostics that rejected it.
+    pub report: crate::analysis::Report,
 }
 
 /// A compiled, ready-to-run engine.
@@ -318,6 +394,10 @@ pub struct Engine {
     /// Deduplicated artifact variants the hardware compiler selected for
     /// this engine (empty for software-only engines).
     artifacts: Vec<ArtifactKey>,
+    /// Entries a lenient build quarantined (always empty under strict).
+    rejected: Vec<RejectedQuery>,
+    /// Non-fatal diagnostics (W###) the build-time analyzer produced.
+    analysis: crate::analysis::Report,
 }
 
 impl Engine {
@@ -364,12 +444,33 @@ impl Engine {
         Engine::from_parts(g, specs, config)
     }
 
-    /// Shared construction path: optimize the (merged) graph, partition
-    /// it, compile the hardware subgraphs, start the one [`AccelService`],
-    /// and resolve the per-query handle table.
+    /// Shared construction path: optimize the (merged) graph — verifying
+    /// every rewrite stage — partition it (verifying the split), compile
+    /// the hardware subgraphs, start the one [`AccelService`], and
+    /// resolve the per-query handle table.
     fn from_parts(g: Graph, specs: Vec<QuerySpec>, config: EngineConfig) -> Result<Engine> {
+        let mut analysis = crate::analysis::Report::new();
         let g = if config.optimize {
-            crate::optimizer::optimize(&g)
+            let stages: [(&str, fn(&Graph) -> Result<Graph, crate::optimizer::RewriteError>); 3] = [
+                ("dedup", crate::optimizer::try_dedup_extractions),
+                ("pushdown", crate::optimizer::try_push_predicates),
+                ("prune", crate::optimizer::try_prune_dead),
+            ];
+            let mut cur = g;
+            for (stage, run) in stages {
+                let next = run(&cur).map_err(|e| {
+                    anyhow!("{}", crate::analysis::diagnostic_from_rewrite(&e).render())
+                })?;
+                let verdict = crate::analysis::verify_rewrite(stage, &cur, &next);
+                if verdict.has_errors() {
+                    return Err(anyhow!(
+                        "optimizer pass '{stage}' broke the plan:\n{}",
+                        verdict.render()
+                    ));
+                }
+                cur = next;
+            }
+            cur
         } else {
             g
         };
@@ -383,6 +484,16 @@ impl Engine {
             (g.clone(), None, None, Vec::new())
         } else {
             let plan = partition(&g, config.mode);
+            let plan_report = crate::analysis::check_plan(&g, &plan);
+            if plan_report.has_errors() {
+                return Err(anyhow!(
+                    "partition verification failed:\n{}",
+                    plan_report.render()
+                ));
+            }
+            // feasibility/profitability lint at the cost model's standard
+            // document size; warnings land in Engine::analysis_report
+            analysis.merge(crate::analysis::lint_hardware(&g, &plan, 2048));
             let configs: Vec<AccelConfig> = plan
                 .subgraphs
                 .iter()
@@ -424,6 +535,8 @@ impl Engine {
             config,
             queries,
             artifacts,
+            rejected: Vec::new(),
+            analysis,
         })
     }
 
@@ -480,6 +593,8 @@ impl Engine {
             },
             queries,
             artifacts: Vec::new(),
+            rejected: Vec::new(),
+            analysis: crate::analysis::Report::new(),
         })
     }
 
@@ -560,6 +675,24 @@ impl Engine {
     /// `default` with an empty namespace.
     pub fn queries(&self) -> &[QueryHandle] {
         &self.queries
+    }
+
+    /// Catalog entries a [`CatalogBuilder::lenient`] build quarantined,
+    /// with the diagnostics that rejected them. Always empty for strict
+    /// (default) builds — those fail instead.
+    pub fn rejected_queries(&self) -> &[RejectedQuery] {
+        &self.rejected
+    }
+
+    /// Look up one quarantined entry by registered name.
+    pub fn rejected_query(&self, name: &str) -> Option<&RejectedQuery> {
+        self.rejected.iter().find(|r| r.name == name)
+    }
+
+    /// Non-fatal diagnostics (warnings such as `W310`/`W311`) the
+    /// build-time static analyzer produced for this engine's plan.
+    pub fn analysis_report(&self) -> &crate::analysis::Report {
+        &self.analysis
     }
 
     /// The deduplicated artifact variants this engine's hardware compiler
@@ -833,6 +966,65 @@ mod tests {
     #[test]
     fn bad_aql_is_an_error() {
         assert!(Engine::compile_aql("create banana;").is_err());
+    }
+
+    #[test]
+    fn lenient_build_quarantines_bad_entries() {
+        let engine = Engine::builder()
+            .register_builtin("t1")
+            .register("broken", "output view Nope;")
+            .lenient()
+            .build()
+            .unwrap();
+        // the good entry runs…
+        assert_eq!(engine.queries().len(), 1);
+        assert!(engine.query("t1").is_ok());
+        // …the bad one is quarantined with its diagnostic, not silently gone
+        assert!(engine.query("broken").is_err());
+        let r = engine.rejected_query("broken").expect("quarantined");
+        assert!(r.report.has_code("E010"), "{}", r.report.render());
+        assert_eq!(engine.rejected_queries().len(), 1);
+        let d = Document::new(0, "Alice met Bob at IBM");
+        assert!(engine.run_doc(&d).total_tuples() > 0);
+    }
+
+    #[test]
+    fn lenient_build_with_no_survivors_is_an_error() {
+        assert!(Engine::builder()
+            .register("only", "output view Nope;")
+            .lenient()
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn strict_build_renders_coded_diagnostics() {
+        let err = Engine::builder()
+            .register("q", "output view Nope;")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("E010"), "{err}");
+        assert!(err.contains("Nope"), "{err}");
+    }
+
+    #[test]
+    fn strict_accelerated_build_is_warning_free_for_builtins() {
+        let engine = Engine::builder()
+            .register_builtin("t1")
+            .register_builtin("t2")
+            .register_builtin("t3")
+            .register_builtin("t4")
+            .register_builtin("t5")
+            .config(EngineConfig::simulated(PartitionMode::ExtractOnly))
+            .build()
+            .unwrap();
+        assert!(
+            engine.analysis_report().is_clean(),
+            "{}",
+            engine.analysis_report().render()
+        );
+        engine.shutdown();
     }
 
     #[test]

@@ -700,8 +700,25 @@ pub const NUM_SHARDS: usize = 16;
 /// but shares a freelist between the wrapped devices.
 pub const MAX_COMM_SHARDS: usize = 4;
 
-/// Worker shards (everything except the reserved communication shards).
-const WORKER_SHARDS: usize = NUM_SHARDS - MAX_COMM_SHARDS;
+/// Worker shards — everything below the reserved communication shards.
+/// [`ArenaId::for_worker`] maps worker `w` to shard `w % WORKER_SHARDS`,
+/// so worker shards occupy `0..WORKER_SHARDS` and communication shards
+/// occupy `WORKER_SHARDS..NUM_SHARDS` — disjoint by construction,
+/// asserted below.
+pub const WORKER_SHARDS: usize = NUM_SHARDS - MAX_COMM_SHARDS;
+
+// The shard map only works if the reserved communication range is
+// non-empty and leaves room for workers; comm_for(d) descends from
+// NUM_SHARDS - 1 and must never reach a worker shard.
+const _: () = assert!(MAX_COMM_SHARDS > 0, "need at least one comm shard");
+const _: () = assert!(
+    NUM_SHARDS > MAX_COMM_SHARDS,
+    "workers need at least one shard"
+);
+const _: () = assert!(
+    NUM_SHARDS - 1 - (MAX_COMM_SHARDS - 1) >= WORKER_SHARDS,
+    "comm shards must not collide with worker shards"
+);
 
 /// Upper bound of cached buffers per type in one thread-local cache —
 /// large enough to cover every live node slot of a big merged catalog,
@@ -1376,7 +1393,7 @@ mod tests {
         for w in 0..3 * NUM_SHARDS {
             let id = ArenaId::for_worker(w);
             assert!(
-                id.shard() < NUM_SHARDS - MAX_COMM_SHARDS,
+                id.shard() < WORKER_SHARDS,
                 "worker {w} on shard {}",
                 id.shard()
             );
@@ -1384,17 +1401,14 @@ mod tests {
                 assert_ne!(id, ArenaId::comm_for(d));
             }
         }
-        assert_eq!(
-            ArenaId::for_worker(0),
-            ArenaId::for_worker(NUM_SHARDS - MAX_COMM_SHARDS)
-        );
+        assert_eq!(ArenaId::for_worker(0), ArenaId::for_worker(WORKER_SHARDS));
         // device 0 keeps the historical single-device comm shard, and the
         // pool shards are distinct until they wrap at MAX_COMM_SHARDS
         assert_eq!(ArenaId::comm(), ArenaId::comm_for(0));
         assert_eq!(ArenaId::comm().shard(), NUM_SHARDS - 1);
         for d in 1..MAX_COMM_SHARDS {
             assert_ne!(ArenaId::comm_for(d), ArenaId::comm_for(d - 1));
-            assert!(ArenaId::comm_for(d).shard() >= NUM_SHARDS - MAX_COMM_SHARDS);
+            assert!(ArenaId::comm_for(d).shard() >= WORKER_SHARDS);
         }
         assert_eq!(ArenaId::comm_for(MAX_COMM_SHARDS), ArenaId::comm_for(0));
         assert_eq!(shard_stats().len(), NUM_SHARDS);

@@ -962,7 +962,7 @@ mod tests {
                 vec![doc_n],
             )
             .unwrap();
-        g.add_output("V", sg);
+        g.add_output("V", sg).unwrap();
         let ex = Executor::new(Arc::new(g), Arc::new(Profiler::disabled()));
         ex.run_doc(&doc("x"));
     }
@@ -981,7 +981,7 @@ mod tests {
                 vec![],
             )
             .unwrap();
-        g.add_output("V", e);
+        g.add_output("V", e).unwrap();
         let ex = Executor::new(Arc::new(g), Arc::new(Profiler::disabled()));
         let d = doc("hello");
         let tokens = d.token_index();

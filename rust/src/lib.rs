@@ -192,6 +192,7 @@
 static GLOBAL_ALLOCATOR: util::alloc::CountingAllocator = util::alloc::CountingAllocator;
 
 pub mod accel;
+pub mod analysis;
 pub mod aog;
 pub mod aql;
 pub mod bench;
@@ -213,10 +214,11 @@ pub mod util;
 
 /// Convenience re-exports for the common user-facing API surface.
 pub mod prelude {
+    pub use crate::analysis::{Diagnostic, Report, Severity};
     pub use crate::aog::{Graph, Schema, Tuple, Value};
     pub use crate::coordinator::{
         CallbackSink, CatalogBuilder, CollectSink, CountingSink, Engine, EngineConfig,
-        QueryHandle, ResultSink, RunReport, Session, SessionBuilder,
+        QueryHandle, RejectedQuery, ResultSink, RunReport, Session, SessionBuilder,
     };
     pub use crate::corpus::{Corpus, CorpusSpec, Document};
     pub use crate::exec::{

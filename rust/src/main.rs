@@ -5,6 +5,7 @@
 //!
 //! ```text
 //! repro queries                         list built-in queries T1–T5
+//! repro check     --queries t1,t2 | --aql f.aql   static plan verifier (E###/W###)
 //! repro explain   --query t1            dump the optimized operator graph + costs
 //! repro explain   --merged [--queries t1,t2]  dump the merged catalog supergraph
 //! repro partition --query t1 --mode multi   show supergraph + subgraphs (Fig 1)
@@ -39,6 +40,7 @@ fn main() -> ExitCode {
     let flags = parse_flags(&args[1..]);
     let result = match cmd.as_str() {
         "queries" => cmd_queries(),
+        "check" => cmd_check(&flags),
         "explain" => cmd_explain(&flags),
         "partition" => cmd_partition(&flags),
         "profile" => cmd_profile(&flags),
@@ -61,7 +63,7 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream|bench|serve> [flags]
+const USAGE: &str = "usage: repro <queries|check|explain|partition|profile|run|stream|bench|serve> [flags]
   --query <t1..t5>       built-in query (default t1)
   --queries <t1,t2,...>  register several built-ins in ONE catalog engine
                          (merged supergraph, one partition plan, one
@@ -85,6 +87,11 @@ const USAGE: &str = "usage: repro <queries|explain|partition|profile|run|stream|
                          submissions route to the least-loaded device
   --exec <columnar|legacy>  software executor pipeline (default columnar;
                          legacy is the row-at-a-time Vec<Tuple> baseline)
+check runs the static plan verifier over each program — compile front,
+graph invariants, per-rewrite verification, partition check, hardware
+lint — printing coded diagnostics (E###/W###); nonzero exit on errors.
+Defaults to mode extract so the hardware lint runs; --doc-size sets the
+cost model's assumed document length.
 stream reads one document per stdin line through a Session, e.g.:
   journalctl -f | repro stream --query t2 --threads 4 --per-doc
   --per-doc              print per-document tuple counts as they complete
@@ -238,6 +245,60 @@ fn engine_config(flags: &HashMap<String, String>) -> Result<EngineConfig, String
 fn cmd_queries() -> Result<(), String> {
     for q in boost::queries::all() {
         println!("{:4}  {:26}  {}", q.name, q.title, q.profile_hint);
+    }
+    Ok(())
+}
+
+/// `repro check`: the static plan verifier as a standalone gate. Runs
+/// [`boost::analysis::check_query`] — compile front, graph invariants,
+/// per-rewrite verification, partition check, hardware-feasibility lint —
+/// over each named built-in (`--queries t1,t2,...`) or one `--aql` file,
+/// printing coded diagnostics. Exit is nonzero when any program has an
+/// error-severity diagnostic, so CI can gate on it.
+fn cmd_check(flags: &HashMap<String, String>) -> Result<(), String> {
+    // default to extract-only offload so the hardware lint actually runs
+    let mode = PartitionMode::parse(flags.get("mode").map(|s| s.as_str()).unwrap_or("extract"))
+        .ok_or("bad --mode")?;
+    let doc_len: usize = flags
+        .get("doc-size")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2048);
+    let programs: Vec<(String, String)> = if let Some(names) = catalog_names(flags) {
+        let mut v = Vec::with_capacity(names.len());
+        for n in &names {
+            let q = boost::queries::builtin(n)
+                .ok_or_else(|| format!("unknown query '{n}' (try `repro queries`)"))?;
+            v.push((q.name.to_string(), q.aql));
+        }
+        v
+    } else {
+        vec![load_aql(flags)?]
+    };
+    let mut failed = 0usize;
+    let mut warnings = 0usize;
+    for (name, src) in &programs {
+        let report = boost::analysis::check_query(name, src, mode, doc_len);
+        if report.is_clean() {
+            println!("{name}: ok");
+            continue;
+        }
+        println!("{name}:");
+        println!("{}", report.render());
+        if report.has_errors() {
+            failed += 1;
+        } else {
+            warnings += 1;
+        }
+    }
+    println!(
+        "checked {} program(s) under mode {}: {} rejected, {} with warnings",
+        programs.len(),
+        mode.name(),
+        failed,
+        warnings,
+    );
+    if failed > 0 {
+        return Err(format!("{failed} program(s) rejected by static analysis"));
     }
     Ok(())
 }

@@ -181,7 +181,7 @@ mod tests {
                 vec![d],
             )
             .unwrap();
-        g.add_output("V", s);
+        g.add_output("V", s).unwrap();
         let r = estimate(&g, 2048);
         assert_eq!(r.per_node[s].cost, 0.0);
     }

@@ -23,16 +23,55 @@ pub use cost::{estimate, CostReport, NodeCost};
 
 use crate::aog::{Expr, Graph, Node, NodeId, OpKind};
 
-/// Run all optimization passes.
+/// Structured failure of an optimizer rewrite: which pass broke and what
+/// it found. Historically these were `expect()` panics inside the
+/// rebuild loops ("topological order", "output node dropped", ...); the
+/// fallible `try_*` entry points surface them instead, and
+/// [`crate::analysis`] turns them into `E201` diagnostics.
+#[derive(Debug, Clone)]
+pub struct RewriteError {
+    /// The pass that failed (`"dedup"`, `"pushdown"`, `"prune"`).
+    pub stage: &'static str,
+    /// What the pass found wrong.
+    pub detail: String,
+}
+
+impl std::fmt::Display for RewriteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "optimizer pass '{}' failed: {}", self.stage, self.detail)
+    }
+}
+
+impl std::error::Error for RewriteError {}
+
+fn rewrite_err(stage: &'static str, detail: impl Into<String>) -> RewriteError {
+    RewriteError {
+        stage,
+        detail: detail.into(),
+    }
+}
+
+/// Run all optimization passes, panicking on internal rewrite bugs — the
+/// historical interface. [`try_optimize`] is the fallible equivalent the
+/// engine builder uses so a rewrite bug becomes a diagnostic, not an abort.
 pub fn optimize(g: &Graph) -> Graph {
-    let g = dedup_extractions(g);
-    let g = push_predicates(&g);
-    prune_dead(&g)
+    try_optimize(g).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Run all optimization passes, surfacing rewrite bugs as [`RewriteError`].
+pub fn try_optimize(g: &Graph) -> Result<Graph, RewriteError> {
+    let g = try_dedup_extractions(g)?;
+    let g = try_push_predicates(&g)?;
+    try_prune_dead(&g)
 }
 
 /// Rebuild a graph keeping only nodes satisfying `keep`, remapping inputs.
-/// Panics if a kept node depends on a dropped one.
-fn rebuild_filtered(g: &Graph, keep: &[bool]) -> Graph {
+/// Fails if a kept node depends on a dropped one.
+fn rebuild_filtered(
+    g: &Graph,
+    keep: &[bool],
+    stage: &'static str,
+) -> Result<Graph, RewriteError> {
     let mut out = Graph::new();
     let mut remap: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
     for node in &g.nodes {
@@ -42,31 +81,50 @@ fn rebuild_filtered(g: &Graph, keep: &[bool]) -> Graph {
         let inputs: Vec<NodeId> = node
             .inputs
             .iter()
-            .map(|&i| remap[i].expect("kept node depends on dropped node"))
-            .collect();
+            .map(|&i| {
+                remap[i].ok_or_else(|| {
+                    rewrite_err(stage, format!("kept node {} depends on dropped node {i}", node.id))
+                })
+            })
+            .collect::<Result<_, _>>()?;
         let id = out
             .add(node.kind.clone(), inputs)
-            .expect("rebuild preserves validity");
+            .map_err(|e| rewrite_err(stage, format!("rebuild rejected: {e}")))?;
         if let Some(v) = &node.view {
             out.name_view(id, v.clone());
         }
         remap[node.id] = Some(id);
     }
     for (name, target) in &g.outputs {
-        out.add_output(name.clone(), remap[*target].expect("output node dropped"));
+        let t = remap[*target].ok_or_else(|| {
+            rewrite_err(stage, format!("output '{name}' targets dropped node {target}"))
+        })?;
+        out.add_output(name.clone(), t)
+            .map_err(|e| rewrite_err(stage, format!("output rewire: {e}")))?;
     }
-    out
+    Ok(out)
 }
 
-/// Pass 3: drop nodes not reachable from any output.
+/// Pass 3: drop nodes not reachable from any output (panicking wrapper).
 pub fn prune_dead(g: &Graph) -> Graph {
-    let live = g.live_nodes();
-    rebuild_filtered(g, &live)
+    try_prune_dead(g).unwrap_or_else(|e| panic!("{e}"))
 }
 
-/// Pass 1: merge identical extraction leaves.
+/// Pass 3, fallible: drop nodes not reachable from any output.
+pub fn try_prune_dead(g: &Graph) -> Result<Graph, RewriteError> {
+    let live = g.live_nodes();
+    rebuild_filtered(g, &live, "prune")
+}
+
+/// Pass 1: merge identical extraction leaves (panicking wrapper).
 pub fn dedup_extractions(g: &Graph) -> Graph {
+    try_dedup_extractions(g).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Pass 1, fallible: merge identical extraction leaves.
+pub fn try_dedup_extractions(g: &Graph) -> Result<Graph, RewriteError> {
     use std::collections::HashMap;
+    const STAGE: &str = "dedup";
     // identity key for extraction nodes
     fn key(node: &Node) -> Option<String> {
         match &node.kind {
@@ -126,26 +184,39 @@ pub fn dedup_extractions(g: &Graph) -> Graph {
     let mut renames: HashMap<(NodeId, String), NodeId> = HashMap::new();
     for node in &g.nodes {
         if alias[node.id] != node.id {
-            let rep = remap[alias[node.id]].expect("representative emitted first");
+            let rep = remap[alias[node.id]].ok_or_else(|| {
+                rewrite_err(
+                    STAGE,
+                    format!("representative {} of node {} not emitted first", alias[node.id], node.id),
+                )
+            })?;
             if out_of(&node.kind) == out_of(&g.nodes[alias[node.id]].kind) {
                 remap[node.id] = Some(rep);
             } else {
                 // same scan, different column name: share the machine,
                 // rename on top
                 let my_out = out_of(&node.kind)
-                    .expect("only extraction nodes are aliased")
+                    .ok_or_else(|| {
+                        rewrite_err(STAGE, format!("non-extraction node {} was aliased", node.id))
+                    })?
                     .clone();
-                let id = *renames
-                    .entry((rep, my_out.clone()))
-                    .or_insert_with(|| {
-                        out.add(
-                            OpKind::Project {
-                                cols: vec![(my_out, Expr::Col(0))],
-                            },
-                            vec![rep],
-                        )
-                        .expect("rename projection over a span column")
-                    });
+                let id = match renames.get(&(rep, my_out.clone())) {
+                    Some(&id) => id,
+                    None => {
+                        let id = out
+                            .add(
+                                OpKind::Project {
+                                    cols: vec![(my_out.clone(), Expr::Col(0))],
+                                },
+                                vec![rep],
+                            )
+                            .map_err(|e| {
+                                rewrite_err(STAGE, format!("rename projection rejected: {e}"))
+                            })?;
+                        renames.insert((rep, my_out), id);
+                        id
+                    }
+                };
                 if let Some(v) = &node.view {
                     out.name_view(id, v.clone());
                 }
@@ -160,18 +231,28 @@ pub fn dedup_extractions(g: &Graph) -> Graph {
         let inputs: Vec<NodeId> = node
             .inputs
             .iter()
-            .map(|&i| remap[i].expect("topological order"))
-            .collect();
-        let id = out.add(node.kind.clone(), inputs).expect("valid rebuild");
+            .map(|&i| {
+                remap[i].ok_or_else(|| {
+                    rewrite_err(STAGE, format!("node {i} consumed before emission"))
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        let id = out
+            .add(node.kind.clone(), inputs)
+            .map_err(|e| rewrite_err(STAGE, format!("rebuild rejected: {e}")))?;
         if let Some(v) = &node.view {
             out.name_view(id, v.clone());
         }
         remap[node.id] = Some(id);
     }
     for (name, target) in &g.outputs {
-        out.add_output(name.clone(), remap[*target].expect("output"));
+        let t = remap[*target].ok_or_else(|| {
+            rewrite_err(STAGE, format!("output '{name}' targets dropped node {target}"))
+        })?;
+        out.add_output(name.clone(), t)
+            .map_err(|e| rewrite_err(STAGE, format!("output rewire: {e}")))?;
     }
-    out
+    Ok(out)
 }
 
 /// Flatten a conjunction into conjuncts.
@@ -198,13 +279,20 @@ fn conjoin(mut es: Vec<Expr>) -> Expr {
     }
 }
 
-/// Pass 2: predicate pushdown and join-predicate formation.
+/// Pass 2: predicate pushdown and join-predicate formation (panicking
+/// wrapper).
+pub fn push_predicates(g: &Graph) -> Graph {
+    try_push_predicates(g).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Pass 2, fallible: predicate pushdown and join-predicate formation.
 ///
 /// Rewrites `Select(pred) ∘ Join(true)` trees: conjuncts that reference
 /// only left (resp. right) columns are pushed below the join as selects
 /// (recursively through left-deep cross-join chains); conjuncts spanning
 /// both sides become the join predicate.
-pub fn push_predicates(g: &Graph) -> Graph {
+pub fn try_push_predicates(g: &Graph) -> Result<Graph, RewriteError> {
+    const STAGE: &str = "pushdown";
     let consumers = g.consumers();
     // joins that will be rewritten at their consuming Select
     let mut deferred = vec![false; g.nodes.len()];
@@ -233,7 +321,7 @@ pub fn push_predicates(g: &Graph) -> Graph {
                 let mut cs = Vec::new();
                 conjuncts(pred, &mut cs);
                 let (new_id, residual) =
-                    emit_join_tree(g, node.inputs[0], cs, &mut out, &remap);
+                    emit_join_tree(g, node.inputs[0], cs, &mut out, &remap)?;
                 let final_id = if residual.is_empty() {
                     new_id
                 } else {
@@ -243,7 +331,7 @@ pub fn push_predicates(g: &Graph) -> Graph {
                         },
                         vec![new_id],
                     )
-                    .expect("residual select")
+                    .map_err(|e| rewrite_err(STAGE, format!("residual select rejected: {e}")))?
                 };
                 if let Some(v) = &node.view {
                     out.name_view(final_id, v.clone());
@@ -254,9 +342,15 @@ pub fn push_predicates(g: &Graph) -> Graph {
                 let inputs: Vec<NodeId> = node
                     .inputs
                     .iter()
-                    .map(|&i| remap[i].expect("topological order"))
-                    .collect();
-                let id = out.add(node.kind.clone(), inputs).expect("valid rebuild");
+                    .map(|&i| {
+                        remap[i].ok_or_else(|| {
+                            rewrite_err(STAGE, format!("node {i} consumed before emission"))
+                        })
+                    })
+                    .collect::<Result<_, _>>()?;
+                let id = out
+                    .add(node.kind.clone(), inputs)
+                    .map_err(|e| rewrite_err(STAGE, format!("rebuild rejected: {e}")))?;
                 if let Some(v) = &node.view {
                     out.name_view(id, v.clone());
                 }
@@ -265,9 +359,13 @@ pub fn push_predicates(g: &Graph) -> Graph {
         }
     }
     for (name, target) in &g.outputs {
-        out.add_output(name.clone(), remap[*target].expect("output"));
+        let t = remap[*target].ok_or_else(|| {
+            rewrite_err(STAGE, format!("output '{name}' targets dropped node {target}"))
+        })?;
+        out.add_output(name.clone(), t)
+            .map_err(|e| rewrite_err(STAGE, format!("output rewire: {e}")))?;
     }
-    out
+    Ok(out)
 }
 
 fn is_cross_join(g: &Graph, id: NodeId) -> bool {
@@ -297,7 +395,8 @@ fn emit_join_tree(
     conj: Vec<Expr>,
     out: &mut Graph,
     remap: &[Option<NodeId>],
-) -> (NodeId, Vec<Expr>) {
+) -> Result<(NodeId, Vec<Expr>), RewriteError> {
+    const STAGE: &str = "pushdown";
     debug_assert!(is_cross_join(g, id));
     let node = &g.nodes[id];
     let (l, r) = (node.inputs[0], node.inputs[1]);
@@ -325,9 +424,11 @@ fn emit_join_tree(
 
     // left subtree: recurse through deferred chains, else plain select
     let (new_l, mut leftover) = if is_cross_join(g, l) && remap[l].is_none() {
-        emit_join_tree(g, l, left_only, out, remap)
+        emit_join_tree(g, l, left_only, out, remap)?
     } else {
-        let base = remap[l].expect("left input emitted");
+        let base = remap[l].ok_or_else(|| {
+            rewrite_err(STAGE, format!("left join input {l} not emitted"))
+        })?;
         let id = if left_only.is_empty() {
             base
         } else {
@@ -337,13 +438,15 @@ fn emit_join_tree(
                 },
                 vec![base],
             )
-            .expect("left select")
+            .map_err(|e| rewrite_err(STAGE, format!("left select rejected: {e}")))?
         };
         (id, Vec::new())
     };
 
     // right subtree (always a plain node: compiler builds left-deep chains)
-    let base_r = remap[r].expect("right input emitted");
+    let base_r = remap[r].ok_or_else(|| {
+        rewrite_err(STAGE, format!("right join input {r} not emitted"))
+    })?;
     let new_r = if right_only.is_empty() {
         base_r
     } else {
@@ -353,7 +456,7 @@ fn emit_join_tree(
             },
             vec![base_r],
         )
-        .expect("right select")
+        .map_err(|e| rewrite_err(STAGE, format!("right select rejected: {e}")))?
     };
 
     // leftover conjuncts from the left recursion re-enter at this level as
@@ -367,8 +470,8 @@ fn emit_join_tree(
             },
             vec![new_l, new_r],
         )
-        .expect("join emit");
-    (join_id, floating)
+        .map_err(|e| rewrite_err(STAGE, format!("join emit rejected: {e}")))?;
+    Ok((join_id, floating))
 }
 
 #[cfg(test)]

@@ -233,7 +233,8 @@ fn build_plan(g: &Graph, mode: PartitionMode, groups: Vec<Vec<NodeId>>) -> Parti
         outputs_orig.sort_unstable();
         let outputs: Vec<NodeId> = outputs_orig.iter().map(|n| local[n]).collect();
         for (k, &l) in outputs.iter().enumerate() {
-            body.add_output(format!("out{k}"), l);
+            body.add_output(format!("out{k}"), l)
+                .expect("subgraph outputs target body nodes");
         }
         specs.push(SubgraphSpec {
             id: gi,
@@ -345,7 +346,8 @@ fn build_plan(g: &Graph, mode: PartitionMode, groups: Vec<Vec<NodeId>>) -> Parti
         sup.add_output(
             name.clone(),
             remap[*target].expect("output view must be an external output"),
-        );
+        )
+        .expect("remapped output targets a supergraph node");
     }
 
     PartitionPlan {

@@ -74,6 +74,10 @@ pub const ERR_UNKNOWN_VIEW: u16 = 4;
 pub const ERR_BAD_DOC: u16 = 5;
 /// `Error` code: the server failed internally while processing.
 pub const ERR_SERVER: u16 = 6;
+/// `Error` code: `Hello` named a query the static analyzer rejected at
+/// build time (lenient catalogs quarantine bad entries instead of
+/// failing); the message carries the first diagnostic's code and text.
+pub const ERR_QUERY_REJECTED: u16 = 7;
 
 /// Everything that can go wrong reading or decoding a frame.
 #[derive(Debug)]

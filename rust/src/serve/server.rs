@@ -35,8 +35,8 @@ use crate::metrics::{QueueSnapshot, QueueStats, ServeSnapshot, ServeStats};
 use crate::runtime::queue;
 use crate::serve::admin;
 use crate::serve::protocol::{
-    self, Frame, ProtocolError, ERR_BAD_DOC, ERR_BAD_HELLO, ERR_PROTOCOL, ERR_SERVER,
-    ERR_UNKNOWN_QUERY, ERR_UNKNOWN_VIEW,
+    self, Frame, ProtocolError, ERR_BAD_DOC, ERR_BAD_HELLO, ERR_PROTOCOL, ERR_QUERY_REJECTED,
+    ERR_SERVER, ERR_UNKNOWN_QUERY, ERR_UNKNOWN_VIEW,
 };
 
 /// Server configuration. All knobs have serving-appropriate defaults;
@@ -609,10 +609,24 @@ fn resolve_views(
             match engine.query(name) {
                 Ok(q) => qs.push(q),
                 Err(_) => {
+                    // a quarantined entry gets a structured rejection
+                    // carrying its first diagnostic, not "unknown query"
+                    if let Some(r) = engine.rejected_query(name) {
+                        let detail = r
+                            .report
+                            .diagnostics
+                            .first()
+                            .map(|d| format!("{}: {}", d.code, d.message))
+                            .unwrap_or_else(|| "rejected by static analysis".into());
+                        return Err((
+                            ERR_QUERY_REJECTED,
+                            format!("query '{name}' was rejected at build time ({detail})"),
+                        ));
+                    }
                     return Err((
                         ERR_UNKNOWN_QUERY,
                         format!("no query '{name}' in the catalog"),
-                    ))
+                    ));
                 }
             }
         }

@@ -1,0 +1,255 @@
+//! Adversarial corpus for the static plan verifier (ISSUE 8 satellite).
+//!
+//! Each program below is wrong in exactly one way and must be rejected
+//! with its *specific* stable diagnostic code — not a panic, not a
+//! different code, not a silent pass. The flip side is the
+//! zero-false-positive suite at the bottom: every built-in query must
+//! come through `check_query` without a single diagnostic in every
+//! partition mode, and a strict (default) engine build over T1–T5 must
+//! still execute a randomized corpus.
+
+use boost::analysis::{check_query, Report};
+use boost::coordinator::Engine;
+use boost::corpus::CorpusSpec;
+use boost::partition::PartitionMode;
+
+/// Check one adversarial program under the default accelerated mode and
+/// document size `repro check` uses.
+fn check(src: &str) -> Report {
+    check_query("adv", src, PartitionMode::ExtractOnly, 2048)
+}
+
+/// Assert the program is rejected with `code` (and nothing weaker than
+/// an error).
+fn assert_rejected(src: &str, code: &str) -> Report {
+    let r = check(src);
+    assert!(r.has_code(code), "expected {code}, got:\n{}", r.render());
+    assert!(r.has_errors(), "{code} must be an error:\n{}", r.render());
+    r
+}
+
+// ---------------------------------------------------------------- E0##
+
+#[test]
+fn lex_error_is_e001() {
+    let r = assert_rejected("create view V as @@;", "E001");
+    // lex errors carry an exact byte position
+    assert!(r.diagnostics[0].loc.is_some(), "{}", r.render());
+}
+
+#[test]
+fn parse_error_is_e002() {
+    assert_rejected("create view V;", "E002");
+}
+
+#[test]
+fn unknown_view_is_e010() {
+    let r = assert_rejected("output view Nope;", "E010");
+    let loc = r.diagnostics[0].loc.as_ref().expect("located");
+    assert_eq!(loc.line, 1);
+}
+
+#[test]
+fn unknown_dictionary_is_e011() {
+    assert_rejected(
+        "create view X as extract dictionary 'NoSuchDict' on d.text as m from Document d;
+         output view X;",
+        "E011",
+    );
+}
+
+#[test]
+fn unknown_function_is_e012() {
+    assert_rejected(
+        "create view A as extract regex /a/ on d.text as m from Document d;
+         create view V as select Zap(a.m) as z from A a;
+         output view V;",
+        "E012",
+    );
+}
+
+#[test]
+fn unknown_alias_is_e013() {
+    assert_rejected(
+        "create view A as extract regex /a/ on d.text as m from Document d;
+         create view V as select q.m from A a;
+         output view V;",
+        "E013",
+    );
+}
+
+#[test]
+fn unknown_column_is_e014() {
+    assert_rejected(
+        "create view A as extract regex /a/ on d.text as m from Document d;
+         create view V as select a.zzz from A a;
+         output view V;",
+        "E014",
+    );
+}
+
+#[test]
+fn duplicate_view_is_e015() {
+    assert_rejected(
+        "create view A as extract regex /a/ on d.text as m from Document d;
+         create view A as extract regex /b/ on d.text as m from Document d;
+         output view A;",
+        "E015",
+    );
+}
+
+#[test]
+fn bad_regex_is_e016() {
+    assert_rejected(
+        "create view A as extract regex /a{5,2}/ on d.text as m from Document d;
+         output view A;",
+        "E016",
+    );
+}
+
+#[test]
+fn extraction_over_a_view_is_e017() {
+    assert_rejected(
+        "create view A as extract regex /a/ on d.text as m from Document d;
+         create view B as extract regex /b/ on a.m as m from A a;
+         output view B;",
+        "E017",
+    );
+}
+
+// ---------------------------------------------------------------- E1##
+
+#[test]
+fn ill_typed_comparison_is_e102() {
+    // GetText yields Str; comparing it against an Int literal cannot type
+    assert_rejected(
+        "create view A as extract regex /a/ on d.text as m from Document d;
+         create view V as select a.m as m from A a where GetText(a.m) > 3;
+         output view V;",
+        "E102",
+    );
+}
+
+#[test]
+fn non_boolean_predicate_is_e103() {
+    // the predicate types fine (Int) but a Select wants Boolean
+    assert_rejected(
+        "create view A as extract regex /a/ on d.text as m from Document d;
+         create view V as select a.m as m from A a where GetLength(a.m);
+         output view V;",
+        "E103",
+    );
+}
+
+#[test]
+fn consolidate_on_non_span_column_is_e107() {
+    // 'n' is an Integer output column; consolidation is span-order based
+    assert_rejected(
+        "create view A as extract regex /a/ on d.text as m from Document d;
+         create view V as select GetLength(a.m) as n from A a
+           consolidate on n using 'ContainedWithin';
+         output view V;",
+        "E107",
+    );
+}
+
+// ---------------------------------------------------------------- E3## / W3##
+
+#[test]
+fn too_many_extraction_machines_is_e301() {
+    // extract-only partitioning runs every extraction as one parallel-
+    // machine pass; 33 distinct regexes exceed the widest (32, _)
+    // artifact geometry
+    let mut src = String::new();
+    for i in 1..=33 {
+        src.push_str(&format!(
+            "create view V{i} as extract regex /x{{{i}}}y/ on d.text as m from Document d;\n\
+             output view V{i};\n"
+        ));
+    }
+    let r = assert_rejected(&src, "E301");
+    assert!(r.render().contains("33 extraction machines"), "{}", r.render());
+}
+
+#[test]
+fn geometry_overflow_is_mode_dependent() {
+    // the same 33-regex program is perfectly valid AQL — running it in
+    // pure software must produce zero diagnostics; only offloading it
+    // hits the geometry wall
+    let mut src = String::new();
+    for i in 1..=33 {
+        src.push_str(&format!(
+            "create view V{i} as extract regex /x{{{i}}}y/ on d.text as m from Document d;\n\
+             output view V{i};\n"
+        ));
+    }
+    let r = check_query("adv", &src, PartitionMode::None, 2048);
+    assert!(r.is_clean(), "{}", r.render());
+}
+
+#[test]
+fn unprofitable_offload_is_w310() {
+    // at 64 KiB documents the chained nested-loop joins dwarf the three
+    // extractions; offloading <25% of estimated cost draws the warning
+    let src = "
+        create view A as extract regex /alpha/ on d.text as m from Document d;
+        create view B as extract regex /beta/ on d.text as m from Document d;
+        create view E as extract regex /gamma/ on d.text as m from Document d;
+        create view C as select a.m as m, b.m as n from A a, B b
+          where Follows(a.m, b.m, 0, 50);
+        create view D as select c.m as m from C c, E e
+          where Follows(c.m, e.m, 0, 50);
+        output view D;
+    ";
+    let r = check_query("adv", src, PartitionMode::ExtractOnly, 65536);
+    assert!(r.has_code("W310"), "{}", r.render());
+    // a lint, not a rejection
+    assert!(!r.has_errors(), "{}", r.render());
+}
+
+// ------------------------------------------------- zero false positives
+
+#[test]
+fn builtins_are_clean_in_every_mode() {
+    for q in boost::queries::all() {
+        for mode in [
+            PartitionMode::None,
+            PartitionMode::ExtractOnly,
+            PartitionMode::SingleSubgraph,
+            PartitionMode::MultiSubgraph,
+        ] {
+            let r = check_query(q.name, &q.aql, mode, 2048);
+            assert!(
+                r.is_clean(),
+                "builtin {} under {mode:?} is not clean:\n{}",
+                q.name,
+                r.render()
+            );
+        }
+    }
+}
+
+#[test]
+fn strict_build_runs_a_randomized_corpus() {
+    // strict mode is the default; all five builtins must build and then
+    // survive the same randomized-document treatment the differential
+    // suite applies (seed overridable via BOOST_DIFF_SEED)
+    let seed = std::env::var("BOOST_DIFF_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1FF_2026u64);
+    let mut b = Engine::builder();
+    for q in boost::queries::all() {
+        b = b.register_builtin(q.name);
+    }
+    let engine = b.build().expect("strict build of all builtins");
+    assert!(engine.rejected_queries().is_empty());
+    let mut tuples = 0usize;
+    for d in CorpusSpec::news(30, 256).with_seed(seed).generate().docs {
+        let result = engine.run_doc(&d);
+        tuples += result.iter().map(|(_, rows)| rows.len()).sum::<usize>();
+    }
+    // the news corpus plants entities the builtins extract — a run that
+    // finds nothing means the plan was mangled, not that analysis passed
+    assert!(tuples > 0);
+}

@@ -355,6 +355,37 @@ fn hello_namespaces_scope_the_view_table() {
     }
 }
 
+/// A lenient catalog quarantines an entry the static analyzer rejects;
+/// a Hello naming it gets a structured `ERR_QUERY_REJECTED` Error frame
+/// carrying the diagnostic code — not "unknown query" — and healthy
+/// queries on the same server are unaffected.
+#[test]
+fn hello_naming_a_rejected_query_gets_a_structured_error() {
+    let engine = Arc::new(
+        Engine::builder()
+            .register_builtin("t1")
+            .register("broken", "output view Nope;")
+            .lenient()
+            .build()
+            .expect("lenient catalog builds"),
+    );
+    let server = start(engine, 4, 8);
+    let addr = server.local_addr();
+
+    match Client::connect(addr, &["broken".to_string()], &[]) {
+        Err(ClientError::Rejected { code, message }) => {
+            assert_eq!(code, protocol::ERR_QUERY_REJECTED);
+            assert!(message.contains("E010"), "{message}");
+            assert!(message.contains("broken"), "{message}");
+        }
+        other => panic!("expected ERR_QUERY_REJECTED, got {other:?}"),
+    }
+
+    let mut healthy = Client::connect(addr, &["t1".to_string()], &[]).expect("t1 connect");
+    healthy.send(0, "Alice met Bob at IBM.").expect("send");
+    assert_eq!(healthy.finish().expect("finish").results.len(), 1);
+}
+
 /// `GET /metrics` on the admin port: HTTP/1.0 200, JSON, with serve,
 /// arena, and block-pool sections; other paths 404.
 #[test]
