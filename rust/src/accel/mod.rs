@@ -70,7 +70,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -82,6 +82,7 @@ use crate::metrics::{
 };
 use crate::partition::{PartitionPlan, SoftwareSubgraphRunner};
 use crate::perfmodel::FpgaModel;
+use crate::runtime::fault::{self, BreakerSnapshot, CircuitBreaker, DeadlinePanic, Watchdog};
 use crate::runtime::queue::{self, QueueRx, QueueTx};
 use crate::runtime::{EngineSpec, NativePackageEngine, PackageEngine, PackageHits, PackedPackage};
 use crate::text::{Document, TokenIndex};
@@ -112,6 +113,16 @@ pub struct AccelOptions {
     /// and pinned arena shard; [`AccelService::submit`] dispatches by
     /// least queue depth. `1` is the paper's single-device configuration.
     pub devices: usize,
+    /// Consecutive device errors before that device's circuit breaker
+    /// trips `Open` and dispatch stops routing to it.
+    pub breaker_threshold: u32,
+    /// How long a tripped breaker stays `Open` before it admits one
+    /// half-open probe package.
+    pub breaker_cooldown: Duration,
+    /// Register each communication thread's heartbeat here, when set —
+    /// [`Engine`](crate::coordinator::Engine) wires its own watchdog in so
+    /// `GET /healthz` covers the comm threads alongside session workers.
+    pub watchdog: Option<Arc<Watchdog>>,
 }
 
 impl Default for AccelOptions {
@@ -123,9 +134,43 @@ impl Default for AccelOptions {
             queue_depth: 256,
             model: FpgaModel::paper(),
             devices: 1,
+            breaker_threshold: fault::DEFAULT_BREAKER_THRESHOLD,
+            breaker_cooldown: fault::DEFAULT_BREAKER_COOLDOWN,
+            watchdog: None,
         }
     }
 }
+
+/// Why the service answered a submission with an error instead of views.
+#[derive(Debug, Clone)]
+pub enum SubmitError {
+    /// The document's deadline expired while it moved through the
+    /// accelerator path — the work was shed (at comm-thread dequeue or
+    /// after the post-stage), not attempted further.
+    Deadline {
+        /// Time since the submission was created when it was shed.
+        waited: Duration,
+    },
+    /// The device (and every failover rung behind it) failed the package.
+    Failed(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Deadline { waited } => write!(
+                f,
+                "submission deadline expired after {:.1} ms",
+                waited.as_secs_f64() * 1e3
+            ),
+            SubmitError::Failed(msg) => f.write_str(msg),
+        }
+    }
+}
+
+/// What a worker's reply channel delivers: the subgraph's output batches
+/// or a structured [`SubmitError`].
+pub type SubmitResult = Result<Arc<Vec<TupleBatch>>, SubmitError>;
 
 /// One queued request. External tuple streams travel columnar end to end
 /// ([`TupleBatch`]), so the communication thread never touches row-shaped
@@ -138,7 +183,26 @@ struct Submission {
     /// Devices that have already failed this submission — bounds the
     /// failover chain at `devices - 1` sibling hops.
     attempts: u32,
-    reply: Sender<Result<Arc<Vec<TupleBatch>>, String>>,
+    /// When the submission was created (for deadline-expiry reporting).
+    submitted: Instant,
+    /// Absolute deadline captured from the worker's thread-local at
+    /// submit time; expired submissions are shed, not run.
+    deadline: Option<Instant>,
+    reply: Sender<SubmitResult>,
+}
+
+impl Submission {
+    /// True when this submission's deadline has passed.
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|dl| Instant::now() > dl)
+    }
+
+    /// Answer the worker with a deadline error.
+    fn shed(self) {
+        let _ = self.reply.send(Err(SubmitError::Deadline {
+            waited: self.submitted.elapsed(),
+        }));
+    }
 }
 
 /// A subgraph's pre-packed state, built once at service start.
@@ -159,6 +223,10 @@ struct PoolShared {
     queues: Vec<Arc<QueueStats>>,
     /// Retry/failover/software-routing counters.
     pool: Arc<PoolMetrics>,
+    /// One circuit breaker per device: K consecutive package errors trip
+    /// it `Open`, dispatch skips it, and after the cooldown one probe
+    /// package decides whether the device is re-admitted.
+    breakers: Vec<Arc<CircuitBreaker>>,
 }
 
 impl PoolShared {
@@ -173,24 +241,47 @@ impl PoolShared {
         self.txs[d].lock().unwrap().clone()
     }
 
-    /// The least-loaded device, scanning from `start` so equal depths
-    /// break round-robin. `skip` excludes the failing device when a
-    /// communication thread forwards to a sibling; returns `None` only
-    /// when `skip` eliminates the whole pool.
+    /// The least-loaded device whose breaker admits work, scanning from
+    /// `start` so equal depths break round-robin. Candidates are tried in
+    /// depth order and `admit()` is only called on a device we would
+    /// actually pick, so half-open probe slots are never burned on
+    /// devices that lose the depth comparison anyway. `skip` excludes the
+    /// failing device when a communication thread forwards to a sibling.
+    /// Returns `None` when no breaker admits (or `skip` eliminates the
+    /// pool) — callers fall back to the host CPU or to
+    /// [`PoolShared::pick_any`].
     fn pick(&self, start: usize, skip: Option<usize>) -> Option<usize> {
         let n = self.devices();
-        let mut best: Option<(u64, usize)> = None;
+        let mut order: Vec<(u64, usize)> = Vec::with_capacity(n);
         for k in 0..n {
             let d = (start + k) % n;
             if Some(d) == skip {
                 continue;
             }
+            order.push((self.queues[d].snapshot().depth, d));
+        }
+        // stable sort: the rotated scan order above is the tie-break
+        order.sort_by_key(|&(depth, _)| depth);
+        order
+            .into_iter()
+            .find(|&(_, d)| self.breakers[d].admit())
+            .map(|(_, d)| d)
+    }
+
+    /// The least-loaded device regardless of breaker state — the
+    /// dispatcher's last resort when every breaker rejects, so work still
+    /// flows (and fails over) rather than erroring at submit.
+    fn pick_any(&self, start: usize) -> usize {
+        let n = self.devices();
+        let mut best: Option<(u64, usize)> = None;
+        for k in 0..n {
+            let d = (start + k) % n;
             let depth = self.queues[d].snapshot().depth;
             if best.map_or(true, |(bd, _)| depth < bd) {
                 best = Some((depth, d));
             }
         }
-        best.map(|(_, d)| d)
+        best.map(|(_, d)| d).unwrap_or(0)
     }
 }
 
@@ -255,10 +346,19 @@ impl AccelService {
             txs.push(Mutex::new(Some(tx)));
             rxs.push(rx);
         }
+        let breakers: Vec<Arc<CircuitBreaker>> = (0..specs.len())
+            .map(|_| {
+                Arc::new(CircuitBreaker::new(
+                    options.breaker_threshold,
+                    options.breaker_cooldown,
+                ))
+            })
+            .collect();
         let shared = Arc::new(PoolShared {
             txs,
             queues,
             pool: Arc::new(PoolMetrics::default()),
+            breakers,
         });
         let metrics = Arc::new(AccelMetrics::default());
         let device_metrics: Vec<Arc<AccelMetrics>> = (0..specs.len())
@@ -296,6 +396,10 @@ impl AccelService {
             };
             let opts = options.clone();
             let thread_stop = stop.clone();
+            let heartbeat = options
+                .watchdog
+                .as_ref()
+                .map(|wd| wd.register(format!("accel-comm-{d}")));
             let handle = std::thread::Builder::new()
                 .name(format!("accel-comm-{d}"))
                 .spawn(move || {
@@ -305,15 +409,20 @@ impl AccelService {
                     // devices contend on
                     crate::exec::batch::pin_thread(crate::exec::batch::ArenaId::comm_for(d));
                     match spec.build() {
-                        Ok(engine) => comm_thread(rx, prepared, engine, opts, ctx, thread_stop),
+                        Ok(engine) => {
+                            comm_thread(rx, prepared, engine, opts, ctx, thread_stop, heartbeat.as_deref())
+                        }
                         Err(e) => {
                             // engine failed to materialize: fail every
                             // submission rather than hanging the workers
                             let msg = format!("accelerator engine init failed: {e}");
                             while let Some(s) = rx.pop() {
-                                let _ = s.reply.send(Err(msg.clone()));
+                                let _ = s.reply.send(Err(SubmitError::Failed(msg.clone())));
                             }
                         }
+                    }
+                    if let Some(hb) = &heartbeat {
+                        hb.retire();
                     }
                 })
                 .expect("spawn communication thread");
@@ -342,7 +451,7 @@ impl AccelService {
         doc: Document,
         tokens: Arc<TokenIndex>,
         ext: Vec<TupleBatch>,
-    ) -> Receiver<Result<Arc<Vec<TupleBatch>>, String>> {
+    ) -> Receiver<SubmitResult> {
         let (reply, rx) = channel();
         let d = self.pick_device();
         if let Some(tx) = self.shared.tx(d) {
@@ -354,20 +463,33 @@ impl AccelService {
                 tokens,
                 ext,
                 attempts: 0,
+                submitted: Instant::now(),
+                // the session worker installed the document's deadline in
+                // its thread-local before reaching the SubgraphExec node
+                deadline: fault::doc_deadline(),
                 reply,
             });
         }
         rx
     }
 
-    /// Least-queue-depth dispatch with a rotating tie-break start.
+    /// Least-queue-depth dispatch with a rotating tie-break start,
+    /// honoring the per-device circuit breakers. When every breaker
+    /// rejects, falls back to the least-loaded device regardless — the
+    /// failover chain (sibling, then host CPU) still answers the work,
+    /// and [`AccelSubgraphRunner`] routes around a fully-dark pool before
+    /// it ever gets here.
     fn pick_device(&self) -> usize {
         let n = self.shared.devices();
         if n == 1 {
+            // single device: the breaker still gates probes vs. storms on
+            // the failover-less path, but dispatch has nowhere else to go
             return 0;
         }
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
-        self.shared.pick(start, None).unwrap_or(0)
+        self.shared
+            .pick(start, None)
+            .unwrap_or_else(|| self.shared.pick_any(start))
     }
 
     /// The service's aggregate metrics across every device.
@@ -398,9 +520,32 @@ impl AccelService {
     }
 
     /// Pool-level routing counters (retries, failovers, software
-    /// fallbacks and software-routed calls).
+    /// fallbacks, software-routed calls, deadline sheds) plus the
+    /// summed circuit-breaker counters — the breakers themselves are
+    /// authoritative, so the sum is taken at snapshot time instead of
+    /// double-booked into [`PoolMetrics`].
     pub fn pool_snapshot(&self) -> PoolSnapshot {
-        self.shared.pool.snapshot()
+        let mut snap = self.shared.pool.snapshot();
+        for b in &self.shared.breakers {
+            let s = b.snapshot();
+            snap.breaker_trips += s.trips;
+            snap.breaker_probes += s.probes;
+            snap.breaker_readmits += s.readmits;
+        }
+        snap
+    }
+
+    /// Per-device circuit-breaker counters, in device order.
+    pub fn breaker_snapshots(&self) -> Vec<BreakerSnapshot> {
+        self.shared.breakers.iter().map(|b| b.snapshot()).collect()
+    }
+
+    /// True when no device would currently admit work (every breaker is
+    /// `Open` inside its cooldown, or holding a half-open probe) — the
+    /// adaptive router's signal to run subgraphs on the host instead of
+    /// queueing onto dark devices.
+    pub fn all_dark(&self) -> bool {
+        !self.shared.breakers.iter().any(|b| b.would_admit())
     }
 
     /// Number of devices in the pool.
@@ -460,18 +605,27 @@ struct CommCtx {
 /// Validate and file one incoming submission. A `subgraph_id` beyond the
 /// compiled plan answers `Err` on its own reply channel — indexing with
 /// it would panic and take the whole communication thread (and every
-/// in-flight worker) down with it. Returns the group index filed into.
+/// in-flight worker) down with it. A submission whose deadline already
+/// expired while queued is shed here (dequeue-time check): answered with
+/// a deadline error instead of burning device time on a result nobody
+/// will wait for. Returns the group index filed into.
 fn intake(
     s: Submission,
     pending: &mut [Vec<Submission>],
     pending_bytes: &mut [usize],
+    pool: &PoolMetrics,
 ) -> Option<usize> {
     let gi = s.subgraph_id;
     if gi >= pending.len() {
-        let _ = s.reply.send(Err(format!(
+        let _ = s.reply.send(Err(SubmitError::Failed(format!(
             "invalid subgraph id {gi}: this service compiled {} subgraphs",
             pending.len()
-        )));
+        ))));
+        return None;
+    }
+    if s.expired() {
+        pool.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        s.shed();
         return None;
     }
     pending_bytes[gi] += s.doc.len() + 1;
@@ -487,6 +641,7 @@ fn comm_thread(
     options: AccelOptions,
     ctx: CommCtx,
     stop: Arc<AtomicBool>,
+    heartbeat: Option<&fault::Heartbeat>,
 ) {
     // pending submissions per subgraph
     let mut pending: Vec<Vec<Submission>> = (0..prepared.len()).map(|_| Vec::new()).collect();
@@ -499,15 +654,21 @@ fn comm_thread(
         // Block for the first submission (or queue close), then drain
         // whatever else is queued — "collects the data submitted by some of
         // the worker threads".
+        if let Some(hb) = heartbeat {
+            hb.idle(); // blocking on an empty submission queue is healthy
+        }
         match rx.pop() {
             Some(s) => {
-                intake(s, &mut pending, &mut pending_bytes);
+                if let Some(hb) = heartbeat {
+                    hb.beat();
+                }
+                intake(s, &mut pending, &mut pending_bytes, &ctx.shared.pool);
             }
             None => break, // all producers gone
         }
         rx.drain_into(&mut drained);
         for s in drained.drain(..) {
-            let Some(gi) = intake(s, &mut pending, &mut pending_bytes) else {
+            let Some(gi) = intake(s, &mut pending, &mut pending_bytes, &ctx.shared.pool) else {
                 continue;
             };
             // don't hoard unboundedly: dispatch eagerly when a group can
@@ -614,7 +775,7 @@ fn recover_package(
     if devices < 2 {
         let msg = format!("accelerator package failed: {err}");
         for s in batch.iter_mut().filter_map(|s| s.take()) {
-            let _ = s.reply.send(Err(msg.clone()));
+            let _ = s.reply.send(Err(SubmitError::Failed(msg.clone())));
         }
         return None;
     }
@@ -652,7 +813,7 @@ fn recover_package(
             let msg =
                 format!("accelerator package failed: {err} (host fallback also failed: {e2})");
             for s in batch.iter_mut().filter_map(|s| s.take()) {
-                let _ = s.reply.send(Err(msg.clone()));
+                let _ = s.reply.send(Err(SubmitError::Failed(msg.clone())));
             }
             None
         }
@@ -684,6 +845,16 @@ fn run_package(
     let t0 = Instant::now();
     let result = engine.run(key, &pkg);
     let engine_ns = t0.elapsed().as_nanos() as u64;
+
+    // the device's breaker sees every package verdict — success resets
+    // the error run (and re-admits a half-open device), an error extends
+    // it (and re-opens a failed probe). Recovery rungs below answer the
+    // *work*; the breaker tracks the *device*.
+    let breaker = &ctx.shared.breakers[ctx.device];
+    match &result {
+        Ok(_) => breaker.record_success(),
+        Err(_) => breaker.record_error(),
+    }
 
     // `None` slots below are documents this thread no longer owns
     // (forwarded to a sibling on failover); index-aligned with wp.slots
@@ -741,14 +912,29 @@ fn run_package(
     let mut failover_done = false;
     // replies are deferred until the metrics are recorded, so a caller
     // that joins its workers observes complete counters
-    let mut replies: Vec<(
-        &Sender<Result<Arc<Vec<TupleBatch>>, String>>,
-        Arc<Vec<TupleBatch>>,
-    )> = Vec::with_capacity(batch.len());
+    let mut replies: Vec<(&Sender<SubmitResult>, SubmitResult)> =
+        Vec::with_capacity(batch.len());
     for (di, sub) in batch.iter().enumerate() {
         // forwarded to a sibling device on failover — its slot's hits (if
         // any) belong to the retry, not to this thread
         let Some(sub) = sub else { continue };
+        // post-stage deadline check: the scan happened, but a document
+        // whose budget expired mid-package is still answered as an
+        // expiry — running the relational body for it would only delay
+        // the rest of the package's workers further
+        if sub.expired() {
+            ctx.shared
+                .pool
+                .deadline_expired
+                .fetch_add(1, Ordering::Relaxed);
+            replies.push((
+                &sub.reply,
+                Err(SubmitError::Deadline {
+                    waited: sub.submitted.elapsed(),
+                }),
+            ));
+            continue;
+        }
         let mut overrides: HashMap<usize, TupleBatch> = HashMap::new();
         for (mi, machine) in prep.config.machines.iter().enumerate() {
             let events = &per_doc_machine[di][mi];
@@ -783,7 +969,7 @@ fn run_package(
         if sub.attempts > 0 {
             failover_done = true;
         }
-        replies.push((&sub.reply, Arc::new(outputs)));
+        replies.push((&sub.reply, Ok(Arc::new(outputs))));
     }
     let post_ns = t1.elapsed().as_nanos() as u64;
 
@@ -824,8 +1010,8 @@ fn run_package(
         ctx.shared.pool.failovers.fetch_add(1, Ordering::Relaxed);
     }
     // status-register signal: wake the workers of this package
-    for (reply, outputs) in replies {
-        let _ = reply.send(Ok(outputs));
+    for (reply, outcome) in replies {
+        let _ = reply.send(outcome);
     }
 }
 
@@ -928,6 +1114,15 @@ impl AccelSubgraphRunner {
     /// host when its cost share is below the Amdahl break-even (< 0.5)
     /// AND every device queue is at least half full.
     fn route_software(&self, id: usize) -> bool {
+        // a fully-dark pool (every circuit breaker rejecting) routes ALL
+        // subgraphs to the host until a breaker's cooldown elapses and a
+        // probe can go out — queueing onto dark devices would only feed
+        // the failover chain. Safe for multi-output subgraphs too: the
+        // software route recomputes per output read and never touches
+        // the reply cache.
+        if self.service.all_dark() {
+            return true;
+        }
         if self.service.devices() < 2 || self.subgraph_outputs[id] != 1 {
             return false;
         }
@@ -1009,6 +1204,15 @@ impl AccelSubgraphRunner {
                     );
                 }
                 outputs
+            }
+            Ok(Err(SubmitError::Deadline { waited })) => {
+                // typed unwind: the session worker's catch_unwind
+                // classifies this as DocError::DeadlineExceeded instead
+                // of a poison-document panic
+                std::panic::panic_any(DeadlinePanic {
+                    budget: fault::doc_budget().unwrap_or_default(),
+                    waited,
+                })
             }
             Ok(Err(e)) => panic!("accelerator error: {e}"),
             Err(_) => panic!("accelerator service shut down while waiting"),

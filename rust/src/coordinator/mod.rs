@@ -43,6 +43,10 @@ use crate::exec::{DocResult, ExecStrategy, Executor, Profile, Profiler, ViewHand
 use crate::hwcompiler::{compile_subgraph, AccelConfig, ArtifactKey, BLOCK_SIZES};
 use crate::metrics::{AccelDeviceSnapshot, AccelSnapshot, PoolSnapshot, QueueSnapshot};
 use crate::partition::{partition, PartitionMode, PartitionPlan, SoftwareSubgraphRunner};
+use crate::runtime::fault::{
+    BreakerSnapshot, HealthReport, Quarantine, Watchdog, DEFAULT_QUARANTINE_CAP,
+    DEFAULT_STALL_AFTER,
+};
 use crate::runtime::EngineSpec;
 use crate::text::Document;
 
@@ -398,6 +402,12 @@ pub struct Engine {
     rejected: Vec<RejectedQuery>,
     /// Non-fatal diagnostics (W###) the build-time analyzer produced.
     analysis: crate::analysis::Report,
+    /// Poison-document registry: panics contained by session workers land
+    /// here (bounded; see [`Engine::quarantine`]).
+    quarantine: Arc<Quarantine>,
+    /// Liveness registry for this engine's worker threads (see
+    /// [`Engine::health`]).
+    watchdog: Arc<Watchdog>,
 }
 
 impl Engine {
@@ -450,6 +460,10 @@ impl Engine {
     /// resolve the per-query handle table.
     fn from_parts(g: Graph, specs: Vec<QuerySpec>, config: EngineConfig) -> Result<Engine> {
         let mut analysis = crate::analysis::Report::new();
+        // created before the accelerator service so its communication
+        // threads can register heartbeats alongside the session workers
+        let quarantine = Arc::new(Quarantine::new(DEFAULT_QUARANTINE_CAP));
+        let watchdog = Arc::new(Watchdog::new(DEFAULT_STALL_AFTER));
         let g = if config.optimize {
             let stages: [(&str, fn(&Graph) -> Result<Graph, crate::optimizer::RewriteError>); 3] = [
                 ("dedup", crate::optimizer::try_dedup_extractions),
@@ -506,8 +520,9 @@ impl Engine {
                 .collect();
             artifacts.sort_by_key(|k| (k.machines, k.states, k.block));
             artifacts.dedup();
-            let service =
-                AccelService::start(configs, config.engine.clone(), config.accel.clone());
+            let mut accel_opts = config.accel.clone();
+            accel_opts.watchdog = Some(watchdog.clone());
+            let service = AccelService::start(configs, config.engine.clone(), accel_opts);
             (plan.supergraph.clone(), Some(plan), Some(service), artifacts)
         };
 
@@ -537,6 +552,8 @@ impl Engine {
             artifacts,
             rejected: Vec::new(),
             analysis,
+            quarantine,
+            watchdog,
         })
     }
 
@@ -595,6 +612,8 @@ impl Engine {
             artifacts: Vec::new(),
             rejected: Vec::new(),
             analysis: crate::analysis::Report::new(),
+            quarantine: Arc::new(Quarantine::new(DEFAULT_QUARANTINE_CAP)),
+            watchdog: Arc::new(Watchdog::new(DEFAULT_STALL_AFTER)),
         })
     }
 
@@ -743,6 +762,29 @@ impl Engine {
     /// ```
     pub fn session(&self) -> SessionBuilder {
         SessionBuilder::new(self.executor.clone(), self.service.clone())
+            .quarantine(self.quarantine.clone())
+            .watchdog(self.watchdog.clone())
+    }
+
+    /// The engine's poison-document quarantine: every panic contained by
+    /// a session worker is recorded here (bounded ring; total count keeps
+    /// climbing past the cap). Shared by every session of this engine.
+    pub fn quarantine(&self) -> &Arc<Quarantine> {
+        &self.quarantine
+    }
+
+    /// Liveness report over this engine's registered worker threads:
+    /// healthy when no *busy* thread has gone silent past the stall
+    /// window (idle workers blocked on an empty queue are healthy). The
+    /// serving tier's `GET /healthz` is a thin view over this.
+    pub fn health(&self) -> HealthReport {
+        self.watchdog.report()
+    }
+
+    /// The engine's watchdog registry — the serving tier registers its
+    /// own comm/writer threads here so `/healthz` covers them too.
+    pub fn watchdog(&self) -> &Arc<Watchdog> {
+        &self.watchdog
     }
 
     /// Snapshot the per-operator profile (over everything run so far).
@@ -780,6 +822,12 @@ impl Engine {
     /// service is attached.
     pub fn accel_pool_snapshot(&self) -> Option<PoolSnapshot> {
         self.service.as_ref().map(|s| s.pool_snapshot())
+    }
+
+    /// Per-device circuit-breaker snapshots (state + trip/probe/re-admit
+    /// counters, in device order), when a service is attached.
+    pub fn accel_breaker_snapshots(&self) -> Option<Vec<BreakerSnapshot>> {
+        self.service.as_ref().map(|s| s.breaker_snapshots())
     }
 
     /// The simulator's counters (packages, cycles, injected faults), when
@@ -840,6 +888,11 @@ pub struct RunReport {
     pub bytes: usize,
     /// Total output tuples across views.
     pub tuples: usize,
+    /// Documents answered with a structured error (quarantined panic or
+    /// deadline expiry) instead of a result. Not counted in `docs`.
+    pub errors: usize,
+    /// The subset of `errors` that were deadline expiries.
+    pub expired: usize,
     /// Wall-clock duration of the run.
     pub wall: Duration,
     /// Worker threads used.
@@ -1263,6 +1316,8 @@ mod tests {
             docs: 10,
             bytes: 1_000_000,
             tuples: 5,
+            errors: 0,
+            expired: 0,
             wall: Duration::from_millis(100),
             threads: 2,
             accel: None,

@@ -23,16 +23,19 @@
 //!
 //! [`Engine::run_corpus`]: super::Engine::run_corpus
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::accel::AccelService;
 use crate::exec::{DocResult, Executor, ViewHandle};
 use crate::metrics::QueueSnapshot;
+use crate::runtime::chaos::{ChaosAction, ChaosPlan};
+use crate::runtime::fault::{self, DocError, Quarantine, Watchdog};
 use crate::runtime::queue::{self, QueueTx};
 use crate::text::Document;
 
@@ -40,14 +43,21 @@ use super::{QueryHandle, RunReport};
 
 /// Receives per-document results from a [`Session`]'s worker threads.
 ///
-/// `on_result` is called exactly once per pushed document, from whichever
-/// worker finished it (so implementations must be thread-safe); with one
-/// worker thread, calls arrive in push order. `on_finish` is called
-/// exactly once, after the last `on_result`, from the thread that calls
-/// [`Session::finish`].
+/// Exactly one of `on_result` / `on_error` is called per pushed document,
+/// from whichever worker finished it (so implementations must be
+/// thread-safe); with one worker thread, calls arrive in push order.
+/// `on_finish` is called exactly once, after the last per-document call,
+/// from the thread that calls [`Session::finish`].
 pub trait ResultSink: Send + Sync {
     /// One document completed.
     fn on_result(&self, doc: &Document, result: &DocResult);
+
+    /// One document failed with a contained, structured error (deadline
+    /// expiry or a quarantined panic). Default: ignore — sinks that only
+    /// care about successes keep working unchanged.
+    fn on_error(&self, doc: &Document, error: &DocError) {
+        let _ = (doc, error);
+    }
 
     /// The session drained and is shutting down.
     fn on_finish(&self, report: &RunReport) {
@@ -130,6 +140,10 @@ pub struct SessionBuilder {
     sink: Arc<dyn ResultSink>,
     subscriptions: Vec<(ViewHandle, ViewCallback)>,
     query_subscriptions: Vec<(QueryHandle, QueryCallback)>,
+    deadline: Option<Duration>,
+    quarantine: Option<Arc<Quarantine>>,
+    watchdog: Option<Arc<Watchdog>>,
+    chaos: Option<Arc<ChaosPlan>>,
 }
 
 impl SessionBuilder {
@@ -147,6 +161,10 @@ impl SessionBuilder {
             sink: Arc::new(CountingSink),
             subscriptions: Vec::new(),
             query_subscriptions: Vec::new(),
+            deadline: None,
+            quarantine: None,
+            watchdog: None,
+            chaos: None,
         }
     }
 
@@ -167,6 +185,42 @@ impl SessionBuilder {
     /// Replace the default [`CountingSink`].
     pub fn sink(mut self, sink: Arc<dyn ResultSink>) -> SessionBuilder {
         self.sink = sink;
+        self
+    }
+
+    /// Default per-document deadline budget, measured from `push`. An
+    /// expired document (checked at dequeue and again after execution) is
+    /// answered with [`DocError::DeadlineExceeded`] through
+    /// [`ResultSink::on_error`] instead of a result — it never hangs the
+    /// pipeline. [`Session::push_with_deadline`] overrides per document.
+    pub fn deadline(mut self, budget: Duration) -> SessionBuilder {
+        self.deadline = Some(budget);
+        self
+    }
+
+    /// Attach a poison-document quarantine registry: worker panics are
+    /// contained (`catch_unwind`), recorded here, and surfaced as
+    /// [`DocError::Panicked`]. [`Engine::session`](super::Engine::session)
+    /// attaches the engine's own registry automatically.
+    pub fn quarantine(mut self, quarantine: Arc<Quarantine>) -> SessionBuilder {
+        self.quarantine = Some(quarantine);
+        self
+    }
+
+    /// Register the session's workers with a liveness watchdog (each
+    /// worker publishes idle/busy heartbeats for `GET /healthz`).
+    /// [`Engine::session`](super::Engine::session) attaches the engine's
+    /// watchdog automatically.
+    pub fn watchdog(mut self, watchdog: Arc<Watchdog>) -> SessionBuilder {
+        self.watchdog = Some(watchdog);
+        self
+    }
+
+    /// Install a seeded chaos plan: workers consult it per document and
+    /// inject panics/delays (inside the containment boundary) — the test
+    /// harness behind `repro chaos`.
+    pub fn chaos(mut self, plan: Arc<ChaosPlan>) -> SessionBuilder {
+        self.chaos = Some(plan);
         self
     }
 
@@ -226,7 +280,7 @@ impl SessionBuilder {
     pub fn start(self) -> Session {
         let threads = self.threads;
         let depth = self.queue_depth.unwrap_or(2 * threads).max(1);
-        let (tx, rx) = queue::bounded::<Document>(depth);
+        let (tx, rx) = queue::bounded::<Job>(depth);
         let rx = Arc::new(rx);
         let shared = Arc::new(Shared::default());
         let subscriptions = Arc::new(self.subscriptions);
@@ -239,6 +293,12 @@ impl SessionBuilder {
             let executor = self.executor.clone();
             let subscriptions = subscriptions.clone();
             let query_subscriptions = query_subscriptions.clone();
+            let quarantine = self.quarantine.clone();
+            let chaos = self.chaos.clone();
+            let heartbeat = self
+                .watchdog
+                .as_ref()
+                .map(|wd| wd.register(format!("session-worker-{w}")));
             let handle = std::thread::Builder::new()
                 .name(format!("session-worker-{w}"))
                 .spawn(move || {
@@ -248,21 +308,27 @@ impl SessionBuilder {
                     // returned (and buffers this worker ships through the
                     // accelerator come home to the same shard)
                     crate::exec::batch::pin_thread(crate::exec::batch::ArenaId::for_worker(w));
-                    while let Some(doc) = rx.pop() {
-                        let result = executor.run_doc(&doc);
-                        shared.docs.fetch_add(1, Ordering::Relaxed);
-                        shared.bytes.fetch_add(doc.len() as u64, Ordering::Relaxed);
-                        shared
-                            .tuples
-                            .fetch_add(result.total_tuples() as u64, Ordering::Relaxed);
-                        for (view, f) in subscriptions.iter() {
-                            f(&doc, result.view(view));
+                    loop {
+                        if let Some(hb) = &heartbeat {
+                            hb.idle(); // blocking on an empty queue is healthy
                         }
-                        for (query, f) in query_subscriptions.iter() {
-                            f(&doc, query, &result);
+                        let Some(job) = rx.pop() else { break };
+                        if let Some(hb) = &heartbeat {
+                            hb.beat();
                         }
-                        sink.on_result(&doc, &result);
-                        shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+                        run_job(
+                            job,
+                            &executor,
+                            &shared,
+                            &*sink,
+                            &subscriptions,
+                            &query_subscriptions,
+                            quarantine.as_deref(),
+                            chaos.as_deref(),
+                        );
+                    }
+                    if let Some(hb) = &heartbeat {
+                        hb.retire();
                     }
                 })
                 .expect("spawn session worker");
@@ -278,6 +344,103 @@ impl SessionBuilder {
             queue_depth: depth,
             started: Instant::now(),
             pushed: 0,
+            default_budget: self.deadline,
+        }
+    }
+}
+
+/// One queued document plus its deadline bookkeeping.
+struct Job {
+    doc: Document,
+    enqueued: Instant,
+    budget: Option<Duration>,
+}
+
+/// The per-document body of a session worker: deadline check at dequeue,
+/// chaos injection, contained (`catch_unwind`) execution, deadline
+/// re-check after execution, and exactly one sink delivery.
+#[allow(clippy::too_many_arguments)]
+fn run_job(
+    job: Job,
+    executor: &Arc<Executor>,
+    shared: &Shared,
+    sink: &dyn ResultSink,
+    subscriptions: &[(ViewHandle, ViewCallback)],
+    query_subscriptions: &[(QueryHandle, QueryCallback)],
+    quarantine: Option<&Quarantine>,
+    chaos: Option<&ChaosPlan>,
+) {
+    let Job {
+        doc,
+        enqueued,
+        budget,
+    } = job;
+    let deliver_error = |err: DocError| {
+        shared.errors.fetch_add(1, Ordering::Relaxed);
+        if err.is_deadline() {
+            shared.expired.fetch_add(1, Ordering::Relaxed);
+        }
+        shared.bytes.fetch_add(doc.len() as u64, Ordering::Relaxed);
+        sink.on_error(&doc, &err);
+        shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+    };
+    // deadline check at dequeue: work that expired while queued is
+    // answered immediately, without burning a worker on it
+    if let Some(b) = budget {
+        let waited = enqueued.elapsed();
+        if waited > b {
+            deliver_error(DocError::DeadlineExceeded { budget: b, waited });
+            return;
+        }
+    }
+    let deadline = budget.map(|b| enqueued + b);
+    let outcome = {
+        // the guard clears the thread-local even if run_doc panics
+        let _g = fault::set_doc_deadline(deadline, budget);
+        catch_unwind(AssertUnwindSafe(|| {
+            if let Some(plan) = chaos {
+                match plan.doc_action(doc.id) {
+                    ChaosAction::Panic => {
+                        panic!("chaos: injected panic on doc {}", doc.id)
+                    }
+                    ChaosAction::Delay(d) => std::thread::sleep(d),
+                    ChaosAction::None => {}
+                }
+            }
+            executor.run_doc(&doc)
+        }))
+    };
+    match outcome {
+        Ok(result) => {
+            // post-stage check: the result exists, but an expired budget
+            // is still answered as an expiry so clients see one taxonomy
+            if let Some(b) = budget {
+                let waited = enqueued.elapsed();
+                if waited > b {
+                    deliver_error(DocError::DeadlineExceeded { budget: b, waited });
+                    return;
+                }
+            }
+            shared.docs.fetch_add(1, Ordering::Relaxed);
+            shared.bytes.fetch_add(doc.len() as u64, Ordering::Relaxed);
+            shared
+                .tuples
+                .fetch_add(result.total_tuples() as u64, Ordering::Relaxed);
+            for (view, f) in subscriptions.iter() {
+                f(&doc, result.view(view));
+            }
+            for (query, f) in query_subscriptions.iter() {
+                f(&doc, query, &result);
+            }
+            sink.on_result(&doc, &result);
+            shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
+        Err(payload) => {
+            let err = DocError::from_panic(payload);
+            if let (DocError::Panicked { message }, Some(q)) = (&err, quarantine) {
+                q.record(doc.id, "session worker", message.clone());
+            }
+            deliver_error(err);
         }
     }
 }
@@ -288,6 +451,10 @@ struct Shared {
     docs: AtomicU64,
     bytes: AtomicU64,
     tuples: AtomicU64,
+    /// Documents answered with a structured [`DocError`].
+    errors: AtomicU64,
+    /// The subset of `errors` that were deadline expiries.
+    expired: AtomicU64,
     /// Documents inside the pipeline (queued or being processed).
     in_flight: AtomicI64,
     max_in_flight: AtomicI64,
@@ -297,7 +464,7 @@ struct Shared {
 /// [`Session::push_batch`]; close it with [`Session::finish`] to join the
 /// workers and collect the [`RunReport`].
 pub struct Session {
-    tx: Option<QueueTx<Document>>,
+    tx: Option<QueueTx<Job>>,
     workers: Vec<JoinHandle<()>>,
     shared: Arc<Shared>,
     sink: Arc<dyn ResultSink>,
@@ -306,19 +473,38 @@ pub struct Session {
     queue_depth: usize,
     started: Instant,
     pushed: u64,
+    default_budget: Option<Duration>,
 }
 
 impl Session {
     /// Push one document, blocking while the pipeline is full
-    /// (backpressure). Fails only if the worker pool died (a worker
-    /// panicked on a poisoned document).
+    /// (backpressure). Uses the builder's default deadline, if any.
+    /// Fails only if the worker pool died (a worker panicked on a
+    /// poisoned document).
     pub fn push(&mut self, doc: Document) -> Result<()> {
+        let budget = self.default_budget;
+        self.push_job(doc, budget)
+    }
+
+    /// Push one document with an explicit deadline budget, overriding the
+    /// builder default. The budget is measured from this call; if it
+    /// expires before the document finishes (queueing counts), the sink
+    /// receives [`DocError::DeadlineExceeded`] instead of a result.
+    pub fn push_with_deadline(&mut self, doc: Document, budget: Duration) -> Result<()> {
+        self.push_job(doc, Some(budget))
+    }
+
+    fn push_job(&mut self, doc: Document, budget: Option<Duration>) -> Result<()> {
         let tx = self
             .tx
             .as_ref()
             .expect("push after finish — the session is closed");
-        tx.push(doc)
-            .map_err(|_| anyhow!("session worker pool shut down (worker panic?)"))?;
+        tx.push(Job {
+            doc,
+            enqueued: Instant::now(),
+            budget,
+        })
+        .map_err(|_| anyhow!("session worker pool shut down (worker panic?)"))?;
         self.pushed += 1;
         // counted after the queue accepts it: a blocked push is NOT in
         // flight, so the Q + T bound is exact
@@ -401,6 +587,8 @@ impl Session {
             docs: self.shared.docs.load(Ordering::Relaxed) as usize,
             bytes: self.shared.bytes.load(Ordering::Relaxed) as usize,
             tuples: self.shared.tuples.load(Ordering::Relaxed) as usize,
+            errors: self.shared.errors.load(Ordering::Relaxed) as usize,
+            expired: self.shared.expired.load(Ordering::Relaxed) as usize,
             wall: self.started.elapsed(),
             threads: self.threads,
             accel: self.service.as_ref().map(|s| s.metrics().snapshot()),

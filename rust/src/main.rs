@@ -16,6 +16,7 @@
 //! repro bench     [--json FILE]         perf trajectory rows → BENCH_5.json
 //! repro serve     [--addr H:P --admin H:P --max-conns N]  TCP serving tier
 //! repro serve     --selftest [--clients K]  loopback load run → BENCH_6.json
+//! repro chaos     [--seed N --duration S]   seeded fault-injection harness
 //! ```
 
 use std::collections::HashMap;
@@ -48,6 +49,7 @@ fn main() -> ExitCode {
         "stream" => cmd_stream(&flags),
         "bench" => cmd_bench(&flags),
         "serve" => cmd_serve(&flags),
+        "chaos" => cmd_chaos(&flags),
         "-h" | "--help" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -63,7 +65,7 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: repro <queries|check|explain|partition|profile|run|stream|bench|serve> [flags]
+const USAGE: &str = "usage: repro <queries|check|explain|partition|profile|run|stream|bench|serve|chaos> [flags]
   --query <t1..t5>       built-in query (default t1)
   --queries <t1,t2,...>  register several built-ins in ONE catalog engine
                          (merged supergraph, one partition plan, one
@@ -114,7 +116,14 @@ serve exposes the engine over TCP — many clients, ONE shared engine:
   --selftest             loopback self-test: ephemeral server + K concurrent
                          clients over a randomized corpus, results verified
                          byte-identical to run_doc, row written to BENCH_6.json
-  --clients <k>          selftest client connections (default 8)";
+  --clients <k>          selftest client connections (default 8)
+chaos drives the loopback server through seeded fault injection — poison
+documents (injected panics), zero-budget deadlines, and a bricked device
+window exercising the circuit breakers — and fails (nonzero exit) on any
+hang, wrong error code, or survivor that is not byte-identical to the
+pure-software reference:
+  --seed <n>             fault-selection seed (default 42)
+  --duration <s>         keep cycling rounds for at least this long (default 20)";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
@@ -1259,5 +1268,304 @@ fn cmd_serve_selftest(flags: &HashMap<String, String>) -> Result<(), String> {
     );
     std::fs::write(path, json).map_err(|e| format!("write {path}: {e}"))?;
     println!("  wrote {path}");
+    Ok(())
+}
+
+/// `repro chaos --seed N --duration S`: the seeded fault-containment
+/// harness. Each round drives the loopback server through three phases —
+/// injected poison documents, zero-budget deadlines, and a bricked
+/// accelerator window that must trip, probe, and re-admit the circuit
+/// breakers — then verifies no document hangs, every affected document
+/// carries the right error-taxonomy code, every survivor is
+/// byte-identical to a pure-software reference engine, and the breaker
+/// counters are visible through both `GET /metrics` and `GET /healthz`.
+/// Rounds repeat (with a derived seed) until `--duration` elapses.
+fn cmd_chaos(flags: &HashMap<String, String>) -> Result<(), String> {
+    use boost::runtime::{ChaosPlan, FaultPlan, SimSpec};
+    use boost::serve::protocol::{ERR_DEADLINE, ERR_DOC_PANIC};
+    use boost::serve::{run_load, run_load_with_budget, ServeConfig, Server};
+    use std::time::{Duration, Instant};
+
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let duration = Duration::from_secs(
+        flags
+            .get("duration")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(20),
+    );
+    let clients: usize = flags
+        .get("clients")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4)
+        .max(1);
+    let names = catalog_names(flags).unwrap_or_else(|| vec!["t1".into(), "t3".into()]);
+    let corpus = corpus_for(flags).generate();
+    if corpus.docs.is_empty() {
+        return Err("chaos needs a non-empty corpus".into());
+    }
+
+    // the reference: a pure-software engine over the same catalog; every
+    // surviving document must match these bytes exactly, no matter which
+    // faults fired around it
+    let reference_engine = build_catalog(&names, EngineConfig::default())?;
+    let table: Vec<boost::exec::ViewHandle> = reference_engine
+        .queries()
+        .iter()
+        .flat_map(|q| q.views().iter().cloned())
+        .collect();
+    let mut reference: HashMap<u64, Vec<(u16, Vec<u8>)>> =
+        HashMap::with_capacity(corpus.docs.len());
+    for doc in &corpus.docs {
+        let result = reference_engine.run_doc(doc);
+        let mut views = Vec::with_capacity(table.len());
+        for (vi, h) in table.iter().enumerate() {
+            let mut buf = Vec::new();
+            boost::serve::protocol::encode_batch(result.view_batch(h), &mut buf);
+            views.push((vi as u16, buf));
+        }
+        reference.insert(doc.id, views);
+    }
+    let verify_survivors = |results: &[boost::serve::ResultFrame]| -> Result<(), String> {
+        for rf in results {
+            let want = reference
+                .get(&rf.doc_id)
+                .ok_or_else(|| format!("doc {} answered but never submitted", rf.doc_id))?;
+            if &rf.views != want {
+                return Err(format!(
+                    "survivor doc {} is not byte-identical to the software reference",
+                    rf.doc_id
+                ));
+            }
+        }
+        Ok(())
+    };
+
+    let start = Instant::now();
+    let mut rounds = 0u64;
+    let (mut panics_total, mut deadlines_total) = (0u64, 0u64);
+    let (mut trips_total, mut readmits_total) = (0u64, 0u64);
+    loop {
+        rounds += 1;
+        let round_seed = seed.wrapping_add(rounds - 1);
+
+        // --- phase 1: poison documents -------------------------------
+        // a seeded ~1/13 of the corpus panics inside the session worker;
+        // each must come back as a doc-panic DocErr (and land in the
+        // quarantine) while every other document survives byte-identical
+        let plan = Arc::new(ChaosPlan::new(round_seed).panic_every(13));
+        let engine = Arc::new(build_catalog(
+            &names,
+            EngineConfig::accelerated(PartitionMode::ExtractOnly, EngineSpec::Sim(SimSpec::default())),
+        )?);
+        let server = Server::start(
+            engine.clone(),
+            ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                chaos: Some(plan.clone()),
+                ..ServeConfig::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        let report = run_load(server.local_addr(), &corpus.docs, clients, &[])
+            .map_err(|e| format!("round {rounds} poison phase: {e}"))?;
+        let answered = report.results.len() + report.doc_errors.len();
+        if answered != corpus.docs.len() {
+            return Err(format!(
+                "round {rounds} poison phase: {answered}/{} documents answered",
+                corpus.docs.len()
+            ));
+        }
+        for e in &report.doc_errors {
+            if e.code != ERR_DOC_PANIC {
+                return Err(format!(
+                    "round {rounds} poison phase: doc {} got code {} ({}), expected doc-panic",
+                    e.doc_id,
+                    e.code,
+                    boost::serve::protocol::error_code_name(e.code)
+                ));
+            }
+            if !plan.panics(e.doc_id) {
+                return Err(format!(
+                    "round {rounds} poison phase: doc {} failed without a planned fault",
+                    e.doc_id
+                ));
+            }
+        }
+        let planned = corpus.docs.iter().filter(|d| plan.panics(d.id)).count();
+        if report.doc_errors.len() != planned {
+            return Err(format!(
+                "round {rounds} poison phase: {} doc errors vs {planned} planned panics",
+                report.doc_errors.len()
+            ));
+        }
+        verify_survivors(&report.results)?;
+        if engine.quarantine().total() < planned as u64 {
+            return Err(format!(
+                "round {rounds} poison phase: quarantine holds {} < {planned} planned panics",
+                engine.quarantine().total()
+            ));
+        }
+        panics_total += planned as u64;
+        drop(server);
+
+        // --- phase 2: deadlines --------------------------------------
+        // a zero budget expires every document at dequeue; each must be
+        // shed with a deadline DocErr — never a hang, never a result
+        let engine = Arc::new(build_catalog(&names, EngineConfig::default())?);
+        let server = Server::start(
+            engine.clone(),
+            ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                ..ServeConfig::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        let report = run_load_with_budget(server.local_addr(), &corpus.docs, clients, &[], Some(0))
+            .map_err(|e| format!("round {rounds} deadline phase: {e}"))?;
+        if !report.results.is_empty() {
+            return Err(format!(
+                "round {rounds} deadline phase: {} documents beat a zero budget",
+                report.results.len()
+            ));
+        }
+        if report.doc_errors.len() != corpus.docs.len() {
+            return Err(format!(
+                "round {rounds} deadline phase: {}/{} documents shed",
+                report.doc_errors.len(),
+                corpus.docs.len()
+            ));
+        }
+        for e in &report.doc_errors {
+            if e.code != ERR_DEADLINE {
+                return Err(format!(
+                    "round {rounds} deadline phase: doc {} got code {} ({}), expected deadline",
+                    e.doc_id,
+                    e.code,
+                    boost::serve::protocol::error_code_name(e.code)
+                ));
+            }
+        }
+        deadlines_total += report.doc_errors.len() as u64;
+        drop(server);
+
+        // --- phase 3: bricked device + circuit breakers --------------
+        // every pool engine's packages 1..=3 fail (a device dark at
+        // startup, then recovered); the breakers must trip, the pool must
+        // keep answering via failover/software, and after the cooldown a
+        // half-open probe must re-admit the device — all visible in
+        // /metrics and /healthz
+        let mut cfg = EngineConfig::accelerated(
+            PartitionMode::ExtractOnly,
+            EngineSpec::Sim(SimSpec::default().with_seed(round_seed).with_fault(FaultPlan {
+                brick_from: 1,
+                brick_until: 3,
+                ..FaultPlan::none()
+            })),
+        );
+        cfg.accel.devices = 2;
+        cfg.accel.breaker_threshold = 2;
+        cfg.accel.breaker_cooldown = Duration::from_millis(20);
+        let engine = Arc::new(build_catalog(&names, cfg)?);
+        let server = Server::start(
+            engine.clone(),
+            ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                admin_addr: Some("127.0.0.1:0".into()),
+                ..ServeConfig::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        let admin = server.admin_addr().expect("admin addr configured");
+        // repeated passes with a cooldown-sized pause between them: early
+        // passes trip the breakers inside the brick window, later passes
+        // give the half-open probes packages past the window to succeed
+        // on. Bounded — a harness about hangs must not hang itself.
+        let mut brick_results = Vec::new();
+        let mut pool = engine
+            .accel_pool_snapshot()
+            .ok_or_else(|| format!("round {rounds} brick phase: no pool snapshot"))?;
+        for pass in 0..8 {
+            let report = run_load(server.local_addr(), &corpus.docs, clients, &[])
+                .map_err(|e| format!("round {rounds} brick phase pass {pass}: {e}"))?;
+            if !report.doc_errors.is_empty() {
+                return Err(format!(
+                    "round {rounds} brick phase pass {pass}: {} doc errors — device faults \
+                     must be absorbed by failover, not surfaced",
+                    report.doc_errors.len()
+                ));
+            }
+            if report.results.len() != corpus.docs.len() {
+                return Err(format!(
+                    "round {rounds} brick phase pass {pass}: {}/{} documents answered",
+                    report.results.len(),
+                    corpus.docs.len()
+                ));
+            }
+            brick_results.extend(report.results);
+            pool = engine
+                .accel_pool_snapshot()
+                .ok_or_else(|| format!("round {rounds} brick phase: no pool snapshot"))?;
+            if pool.breaker_trips > 0 && pool.breaker_readmits > 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(40));
+        }
+        verify_survivors(&brick_results)?;
+        if pool.breaker_trips == 0 {
+            return Err(format!(
+                "round {rounds} brick phase: breakers never tripped on a bricked window"
+            ));
+        }
+        if pool.breaker_readmits == 0 {
+            return Err(format!(
+                "round {rounds} brick phase: no half-open probe ever re-admitted a device"
+            ));
+        }
+        trips_total += pool.breaker_trips;
+        readmits_total += pool.breaker_readmits;
+
+        // the operator's view of the same story: breaker counters in
+        // /metrics, liveness + breaker states in /healthz (200 == healthy)
+        let probe = |path: &str| -> std::io::Result<String> {
+            use std::io::{Read as _, Write as _};
+            let mut s = std::net::TcpStream::connect(admin)?;
+            s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())?;
+            let mut body = String::new();
+            s.read_to_string(&mut body)?;
+            Ok(body)
+        };
+        let metrics = probe("/metrics").map_err(|e| format!("GET /metrics: {e}"))?;
+        if !(metrics.starts_with("HTTP/1.0 200") && metrics.contains("\"breaker_trips\"")) {
+            return Err("GET /metrics is missing the breaker counters".into());
+        }
+        let healthz = probe("/healthz").map_err(|e| format!("GET /healthz: {e}"))?;
+        if !(healthz.starts_with("HTTP/1.0 200")
+            && healthz.contains("\"healthy\":true")
+            && healthz.contains("\"breakers\""))
+        {
+            return Err("GET /healthz did not report healthy with breaker states".into());
+        }
+        drop(server);
+
+        eprintln!(
+            "chaos round {rounds} (seed {round_seed}): {planned} poisoned, {} shed on deadline, \
+             {} trips / {} readmits",
+            corpus.docs.len(),
+            pool.breaker_trips,
+            pool.breaker_readmits,
+        );
+        if start.elapsed() >= duration {
+            break;
+        }
+    }
+
+    println!(
+        "chaos: {rounds} rounds over {:.1}s (seed {seed}) — {} docs/round, \
+         {panics_total} panics contained, {deadlines_total} deadline sheds, \
+         {trips_total} breaker trips, {readmits_total} re-admissions; \
+         all survivors byte-identical to the software reference",
+        start.elapsed().as_secs_f64(),
+        corpus.docs.len(),
+    );
     Ok(())
 }

@@ -209,16 +209,26 @@ pub struct PoolMetrics {
     /// route because every device queue was saturated and the cost model
     /// said offload would not pay.
     pub sw_routed: AtomicU64,
+    /// Submissions answered with a deadline error instead of being run
+    /// (expired at dequeue or after the post-stage).
+    pub deadline_expired: AtomicU64,
 }
 
 impl PoolMetrics {
-    /// Point-in-time copy.
+    /// Point-in-time copy. The three `breaker_*` fields are zero here —
+    /// the breakers themselves are authoritative for those counts, and
+    /// [`AccelService::pool_snapshot`](crate::accel::AccelService::pool_snapshot)
+    /// sums them in on top of this.
     pub fn snapshot(&self) -> PoolSnapshot {
         PoolSnapshot {
             retries: self.retries.load(Ordering::Relaxed),
             failovers: self.failovers.load(Ordering::Relaxed),
             sw_fallbacks: self.sw_fallbacks.load(Ordering::Relaxed),
             sw_routed: self.sw_routed.load(Ordering::Relaxed),
+            breaker_trips: 0,
+            breaker_probes: 0,
+            breaker_readmits: 0,
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
         }
     }
 }
@@ -234,6 +244,14 @@ pub struct PoolSnapshot {
     pub sw_fallbacks: u64,
     /// Subgraph calls routed to software by the adaptive router.
     pub sw_routed: u64,
+    /// Circuit-breaker trips across all devices.
+    pub breaker_trips: u64,
+    /// Half-open probe packages dispatched.
+    pub breaker_probes: u64,
+    /// Devices re-admitted after a successful probe.
+    pub breaker_readmits: u64,
+    /// Submissions answered with a deadline error instead of being run.
+    pub deadline_expired: u64,
 }
 
 /// One pool device's gauges: its private package counters and its
@@ -281,6 +299,12 @@ pub struct ServeStats {
     /// Producer blocked-time accumulated from closed connections'
     /// result queues, ns — the backpressure evidence.
     pub result_blocked_ns: AtomicU64,
+    /// `DocErr` frames produced: documents answered with a structured
+    /// per-document error (deadline expiry, quarantined panic) instead of
+    /// a `Result` frame.
+    pub doc_errors: AtomicU64,
+    /// The subset of `doc_errors` that were deadline expiries.
+    pub deadline_expired: AtomicU64,
 }
 
 impl ServeStats {
@@ -298,6 +322,8 @@ impl ServeStats {
             disconnects: self.disconnects.load(Ordering::Relaxed),
             result_stalls: self.result_stalls.load(Ordering::Relaxed),
             result_blocked_ns: self.result_blocked_ns.load(Ordering::Relaxed),
+            doc_errors: self.doc_errors.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
         }
     }
 
@@ -335,6 +361,10 @@ pub struct ServeSnapshot {
     pub result_stalls: u64,
     /// Result-queue producer blocked time, ns (closed connections).
     pub result_blocked_ns: u64,
+    /// Documents answered with a structured `DocErr` frame.
+    pub doc_errors: u64,
+    /// The subset of `doc_errors` that were deadline expiries.
+    pub deadline_expired: u64,
 }
 
 /// Process-wide gauges of the package byte-block pool (see
@@ -537,7 +567,8 @@ mod tests {
                 retries: 3,
                 failovers: 2,
                 sw_fallbacks: 1,
-                sw_routed: 5
+                sw_routed: 5,
+                ..PoolSnapshot::default()
             }
         );
         assert_eq!(PoolMetrics::default().snapshot(), PoolSnapshot::default());

@@ -21,6 +21,7 @@ pub mod convex;
 pub use convex::{is_convex, maximal_convex_components};
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use crate::aog::{Graph, NodeId, OpKind, Schema, Tuple};
@@ -387,6 +388,29 @@ impl SoftwareSubgraphRunner {
             .collect();
         SoftwareSubgraphRunner { executors }
     }
+
+    /// Run one subgraph body with panic containment: a panic inside the
+    /// body is re-raised enriched with the subgraph id and document id,
+    /// so the session worker's quarantine records *where* the poison
+    /// document blew up, not just that it did. Typed
+    /// [`DeadlinePanic`](crate::runtime::fault::DeadlinePanic) payloads
+    /// pass through untouched — stringifying them would turn a deadline
+    /// expiry into a generic panic in the error taxonomy.
+    fn contain<T>(&self, id: usize, doc: &Document, f: impl FnOnce() -> T) -> T {
+        match catch_unwind(AssertUnwindSafe(f)) {
+            Ok(v) => v,
+            Err(payload) => {
+                if payload.is::<crate::runtime::fault::DeadlinePanic>() {
+                    resume_unwind(payload);
+                }
+                panic!(
+                    "subgraph #{id} panicked on doc {}: {}",
+                    doc.id,
+                    crate::runtime::fault::panic_message(payload.as_ref())
+                );
+            }
+        }
+    }
 }
 
 impl SubgraphRunner for SoftwareSubgraphRunner {
@@ -398,7 +422,9 @@ impl SubgraphRunner for SoftwareSubgraphRunner {
         tokens: &TokenIndex,
         ext: &[&[Tuple]],
     ) -> Vec<Tuple> {
-        let out = self.executors[id].run_doc_with(doc, tokens, ext, &HashMap::new());
+        let out = self.contain(id, doc, || {
+            self.executors[id].run_doc_with(doc, tokens, ext, &HashMap::new())
+        });
         // body outputs are registered positionally (`out0`, `out1`, …), so
         // output_idx indexes the typed result directly; a miswired graph
         // must fail loudly here, matching AccelSubgraphRunner
@@ -419,7 +445,9 @@ impl SubgraphRunner for SoftwareSubgraphRunner {
         ext: &[&TupleBatch],
         _schema: &Schema,
     ) -> TupleBatch {
-        let out = self.executors[id].run_doc_batched(doc, tokens, ext, &HashMap::new());
+        let out = self.contain(id, doc, || {
+            self.executors[id].run_doc_batched(doc, tokens, ext, &HashMap::new())
+        });
         assert!(
             output_idx < out.num_views(),
             "subgraph #{id} has {} outputs, output_idx {output_idx} is out of range",

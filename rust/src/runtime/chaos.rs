@@ -1,0 +1,176 @@
+//! Seeded chaos plans: deterministic per-document fault injection.
+//!
+//! A [`ChaosPlan`] decides — from the seed and the document id alone —
+//! whether a document gets an injected panic, an injected delay, or runs
+//! clean. Because the decision is a pure hash of `(seed, doc_id)`, the
+//! faulted set is identical across runs and *independent of thread
+//! scheduling*: a chaos test can assert that every unaffected document
+//! produced byte-identical views, not just that "most things worked".
+//!
+//! The plan is consulted by session workers *inside* their containment
+//! boundary (`catch_unwind` + deadline guard), so an injected panic
+//! exercises exactly the same quarantine path a real poison document
+//! would. The `repro chaos` CLI and `tests/chaos.rs` both drive their
+//! runs through this type; the serve layer accepts one via
+//! `ServeConfig` so the loopback server can be subjected to the same
+//! schedule.
+
+use std::time::Duration;
+
+/// What the chaos plan wants done to one document.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// Run the document normally.
+    None,
+    /// Panic inside the worker's containment boundary — the document
+    /// must surface as a quarantined `DocError::Panicked`, never as a
+    /// crashed worker.
+    Panic,
+    /// Sleep for the given duration before executing — under a deadline
+    /// this forces a `DocError::DeadlineExceeded` without any panic.
+    Delay(Duration),
+}
+
+/// A seeded, deterministic fault-injection schedule.
+///
+/// `panic_mod` / `delay_mod` are selection moduli: a document is picked
+/// when its per-plan hash is divisible by the modulus, so roughly one in
+/// `m` documents is affected. `0` disables that fault class entirely.
+/// Panic selection wins over delay selection when both match.
+#[derive(Debug, Clone)]
+pub struct ChaosPlan {
+    /// Seed mixed into every per-document decision.
+    pub seed: u64,
+    /// Inject a panic on ~1/`panic_mod` documents (0 = never).
+    pub panic_mod: u64,
+    /// Inject a delay on ~1/`delay_mod` documents (0 = never).
+    pub delay_mod: u64,
+    /// How long an injected delay sleeps.
+    pub delay: Duration,
+}
+
+impl ChaosPlan {
+    /// A plan with the given seed and no faults enabled.
+    pub fn new(seed: u64) -> ChaosPlan {
+        ChaosPlan {
+            seed,
+            panic_mod: 0,
+            delay_mod: 0,
+            delay: Duration::ZERO,
+        }
+    }
+
+    /// Enable injected panics on roughly one in `m` documents.
+    pub fn panic_every(mut self, m: u64) -> ChaosPlan {
+        self.panic_mod = m;
+        self
+    }
+
+    /// Enable injected delays of `delay` on roughly one in `m` documents.
+    pub fn delay_every(mut self, m: u64, delay: Duration) -> ChaosPlan {
+        self.delay_mod = m;
+        self.delay = delay;
+        self
+    }
+
+    /// The action for one document — a pure function of `(seed, doc_id)`.
+    pub fn doc_action(&self, doc_id: u64) -> ChaosAction {
+        let h = mix(self.seed ^ doc_id.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        if self.panic_mod != 0 && h % self.panic_mod == 0 {
+            return ChaosAction::Panic;
+        }
+        // decorrelate the delay draw from the panic draw so the two
+        // fault sets are independent samples, not nested ones
+        let h2 = mix(h ^ 0xd1b5_4a32_d192_ed03);
+        if self.delay_mod != 0 && h2 % self.delay_mod == 0 {
+            return ChaosAction::Delay(self.delay);
+        }
+        ChaosAction::None
+    }
+
+    /// True when `doc_action` would inject a panic for this document.
+    pub fn panics(&self, doc_id: u64) -> bool {
+        matches!(self.doc_action(doc_id), ChaosAction::Panic)
+    }
+
+    /// True when `doc_action` would inject a delay for this document.
+    pub fn delays(&self, doc_id: u64) -> bool {
+        matches!(self.doc_action(doc_id), ChaosAction::Delay(_))
+    }
+
+    /// True when the plan can affect any document at all.
+    pub fn is_active(&self) -> bool {
+        self.panic_mod != 0 || self.delay_mod != 0
+    }
+}
+
+/// 64-bit finalizer (murmur3-style): avalanche so consecutive doc ids
+/// land on unrelated residues.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    x ^= x >> 33;
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_plan_never_faults() {
+        let plan = ChaosPlan::new(42);
+        assert!(!plan.is_active());
+        for id in 0..1000 {
+            assert_eq!(plan.doc_action(id), ChaosAction::None);
+        }
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let a = ChaosPlan::new(7).panic_every(5);
+        let b = ChaosPlan::new(7).panic_every(5);
+        for id in 0..1000 {
+            assert_eq!(a.doc_action(id), b.doc_action(id));
+        }
+    }
+
+    #[test]
+    fn panic_rate_is_roughly_one_in_m() {
+        let plan = ChaosPlan::new(42).panic_every(10);
+        let hits = (0..10_000u64).filter(|&id| plan.panics(id)).count();
+        // 1/10 of 10k = 1000 expected; allow generous slack, the point
+        // is "not zero, not everything"
+        assert!((500..2000).contains(&hits), "panic hits: {hits}");
+    }
+
+    #[test]
+    fn different_seeds_pick_different_docs() {
+        let a = ChaosPlan::new(1).panic_every(4);
+        let b = ChaosPlan::new(2).panic_every(4);
+        let same = (0..4096u64)
+            .filter(|&id| a.panics(id) == b.panics(id))
+            .count();
+        assert!(same < 4096, "seeds produced identical fault sets");
+    }
+
+    #[test]
+    fn panic_wins_over_delay() {
+        let plan = ChaosPlan::new(9)
+            .panic_every(1)
+            .delay_every(1, Duration::from_millis(1));
+        for id in 0..100 {
+            assert_eq!(plan.doc_action(id), ChaosAction::Panic);
+        }
+    }
+
+    #[test]
+    fn delay_carries_configured_duration() {
+        let d = Duration::from_millis(17);
+        let plan = ChaosPlan::new(3).delay_every(1, d);
+        assert_eq!(plan.doc_action(0), ChaosAction::Delay(d));
+        assert!(plan.delays(1));
+    }
+}

@@ -1,0 +1,707 @@
+//! Fault-containment primitives shared by the session, accelerator and
+//! serving layers: structured per-document errors, the poison-document
+//! [`Quarantine`] registry, per-device [`CircuitBreaker`]s, and the
+//! liveness [`Watchdog`] that `GET /healthz` reports.
+//!
+//! The design rule across all four: **one bad document, one flapping
+//! device or one stalled thread must never take the process with it.**
+//! Workers convert panics into [`DocError`]s instead of dying, devices
+//! that error repeatedly are circuit-broken out of dispatch instead of
+//! feeding retry storms, and every long-lived thread publishes a
+//! heartbeat so a wedged pipeline is *visible* (503) instead of silent.
+//!
+//! See ARCHITECTURE.md § "Fault containment" for the end-to-end picture
+//! and [`crate::runtime::chaos`] for the seeded harness that drives all
+//! of it at once.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// structured per-document errors
+// ---------------------------------------------------------------------------
+
+/// Why a document failed instead of producing a
+/// [`DocResult`](crate::exec::DocResult). Delivered through
+/// [`ResultSink::on_error`](crate::coordinator::ResultSink::on_error) and,
+/// over the wire, as a `DocErr` frame with the matching
+/// [`error code`](crate::serve::protocol::ERROR_TAXONOMY).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DocError {
+    /// The document's deadline budget expired — either while it was still
+    /// queued (checked at dequeue) or during execution (checked after the
+    /// accelerator post-stage and after the software run).
+    DeadlineExceeded {
+        /// The budget the request carried.
+        budget: Duration,
+        /// How long the document had actually been in the pipeline when
+        /// the expiry was detected.
+        waited: Duration,
+    },
+    /// Execution panicked on this document; the panic was contained in
+    /// the worker, the document was quarantined, and the worker kept
+    /// going.
+    Panicked {
+        /// Rendered panic payload.
+        message: String,
+    },
+}
+
+impl DocError {
+    /// Classify a payload caught by `catch_unwind` around per-document
+    /// execution: a [`DeadlinePanic`] marker (raised by the accelerator
+    /// path when a submission expired) becomes `DeadlineExceeded`;
+    /// anything else is a genuine poison-document panic.
+    pub fn from_panic(payload: Box<dyn Any + Send>) -> DocError {
+        match payload.downcast::<DeadlinePanic>() {
+            Ok(d) => DocError::DeadlineExceeded {
+                budget: d.budget,
+                waited: d.waited,
+            },
+            Err(other) => DocError::Panicked {
+                message: panic_message(&other),
+            },
+        }
+    }
+
+    /// True for the deadline variant.
+    pub fn is_deadline(&self) -> bool {
+        matches!(self, DocError::DeadlineExceeded { .. })
+    }
+}
+
+impl std::fmt::Display for DocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DocError::DeadlineExceeded { budget, waited } => write!(
+                f,
+                "deadline exceeded: budget {:.1} ms, waited {:.1} ms",
+                budget.as_secs_f64() * 1e3,
+                waited.as_secs_f64() * 1e3
+            ),
+            DocError::Panicked { message } => write!(f, "execution panicked: {message}"),
+        }
+    }
+}
+
+/// Typed panic payload the accelerator fetch path raises (via
+/// `std::panic::panic_any`) when a submission came back
+/// deadline-expired, so the session worker's `catch_unwind` can classify
+/// the failure as [`DocError::DeadlineExceeded`] rather than a poison
+/// document.
+#[derive(Debug, Clone, Copy)]
+pub struct DeadlinePanic {
+    /// The budget the request carried.
+    pub budget: Duration,
+    /// Time spent before the expiry was detected.
+    pub waited: Duration,
+}
+
+/// Render a `catch_unwind` payload: `&str` and `String` panics (the
+/// overwhelmingly common cases) come through verbatim, anything else gets
+/// a stable placeholder.
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-document deadline propagation (worker thread → accel submission)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static DOC_DEADLINE: std::cell::Cell<Option<Instant>> = const { std::cell::Cell::new(None) };
+    static DOC_BUDGET: std::cell::Cell<Option<Duration>> = const { std::cell::Cell::new(None) };
+}
+
+/// Install the current document's absolute deadline on this worker thread
+/// (the accelerator runner picks it up when building a `Submission`,
+/// without widening the `SubgraphRunner` trait). Returns a guard that
+/// clears it on drop, so a panicking run cannot leak the deadline onto
+/// the next document.
+pub fn set_doc_deadline(deadline: Option<Instant>, budget: Option<Duration>) -> DeadlineGuard {
+    DOC_DEADLINE.with(|c| c.set(deadline));
+    DOC_BUDGET.with(|c| c.set(budget));
+    DeadlineGuard
+}
+
+/// The absolute deadline of the document currently executing on this
+/// thread, if any.
+pub fn doc_deadline() -> Option<Instant> {
+    DOC_DEADLINE.with(|c| c.get())
+}
+
+/// The budget (relative form of [`doc_deadline`]) of the current
+/// document, for error reporting.
+pub fn doc_budget() -> Option<Duration> {
+    DOC_BUDGET.with(|c| c.get())
+}
+
+/// Clears the thread-local deadline on drop — see [`set_doc_deadline`].
+pub struct DeadlineGuard;
+
+impl Drop for DeadlineGuard {
+    fn drop(&mut self) {
+        DOC_DEADLINE.with(|c| c.set(None));
+        DOC_BUDGET.with(|c| c.set(None));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// poison-document quarantine
+// ---------------------------------------------------------------------------
+
+/// One quarantined document: enough to reproduce and debug the poison
+/// without holding the document body alive.
+#[derive(Debug, Clone)]
+pub struct QuarantineEntry {
+    /// Id of the document that killed its worker attempt.
+    pub doc_id: u64,
+    /// Where execution died (e.g. `session worker` or `subgraph #2`).
+    pub context: String,
+    /// Rendered panic payload.
+    pub payload: String,
+}
+
+/// Bounded registry of poison documents. Recording is lock-light (one
+/// short mutex hold), the ring keeps only the most recent `cap` entries,
+/// and `total` counts every quarantine ever recorded so `/metrics` sees
+/// the true rate even after eviction.
+#[derive(Debug)]
+pub struct Quarantine {
+    cap: usize,
+    total: AtomicU64,
+    entries: Mutex<VecDeque<QuarantineEntry>>,
+}
+
+/// Default retained-entry cap for [`Quarantine::new`] callers.
+pub const DEFAULT_QUARANTINE_CAP: usize = 64;
+
+impl Default for Quarantine {
+    fn default() -> Self {
+        Quarantine::new(DEFAULT_QUARANTINE_CAP)
+    }
+}
+
+impl Quarantine {
+    /// A registry retaining at most `cap` entries (older entries evict).
+    pub fn new(cap: usize) -> Quarantine {
+        Quarantine {
+            cap: cap.max(1),
+            total: AtomicU64::new(0),
+            entries: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Record a poison document.
+    pub fn record(&self, doc_id: u64, context: &str, payload: String) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut q = self.entries.lock().unwrap();
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(QuarantineEntry {
+            doc_id,
+            context: context.to_string(),
+            payload,
+        });
+    }
+
+    /// Every quarantine ever recorded (monotonic, survives eviction).
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Currently retained entries (most recent last).
+    pub fn entries(&self) -> Vec<QuarantineEntry> {
+        self.entries.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Number of retained entries.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// True when nothing is quarantined.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-device circuit breaker
+// ---------------------------------------------------------------------------
+
+/// Breaker states, the classic three-state machine:
+///
+/// ```text
+///            K consecutive errors
+///   Closed ──────────────────────▶ Open
+///      ▲                            │ cooldown elapsed
+///      │ probe succeeds             ▼
+///      └──────────────────────── HalfOpen ──▶ (probe fails) back to Open
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: dispatch freely.
+    Closed,
+    /// Tripped: no dispatch until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: exactly one probe package is in flight.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable lowercase name (used in `/healthz` JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+const STATE_CLOSED: u8 = 0;
+const STATE_OPEN: u8 = 1;
+const STATE_HALF_OPEN: u8 = 2;
+
+/// Per-device circuit breaker. All methods are lock-free and callable
+/// from any thread (the dispatching session workers and the device's
+/// communication thread share one instance).
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    epoch: Instant,
+    state: AtomicU8,
+    consecutive: AtomicU32,
+    /// Milliseconds since `epoch` at which the breaker last opened.
+    opened_at_ms: AtomicU64,
+    trips: AtomicU64,
+    probes: AtomicU64,
+    readmits: AtomicU64,
+}
+
+/// Default consecutive-error threshold before a device trips Open.
+pub const DEFAULT_BREAKER_THRESHOLD: u32 = 3;
+/// Default Open→HalfOpen cooldown.
+pub const DEFAULT_BREAKER_COOLDOWN: Duration = Duration::from_millis(50);
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        CircuitBreaker::new(DEFAULT_BREAKER_THRESHOLD, DEFAULT_BREAKER_COOLDOWN)
+    }
+}
+
+impl CircuitBreaker {
+    /// A closed breaker tripping after `threshold` consecutive errors and
+    /// probing again `cooldown` after opening.
+    pub fn new(threshold: u32, cooldown: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooldown,
+            epoch: Instant::now(),
+            state: AtomicU8::new(STATE_CLOSED),
+            consecutive: AtomicU32::new(0),
+            opened_at_ms: AtomicU64::new(0),
+            trips: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            readmits: AtomicU64::new(0),
+        }
+    }
+
+    /// May work be dispatched to this device right now?
+    ///
+    /// * `Closed` — yes.
+    /// * `Open` — no, unless the cooldown elapsed, in which case exactly
+    ///   one caller wins the transition to `HalfOpen` and its package
+    ///   becomes the probe.
+    /// * `HalfOpen` — no (one probe at a time).
+    pub fn admit(&self) -> bool {
+        match self.state.load(Ordering::Acquire) {
+            STATE_CLOSED => true,
+            STATE_HALF_OPEN => false,
+            _ => {
+                let opened = self.opened_at_ms.load(Ordering::Acquire);
+                let now_ms = self.epoch.elapsed().as_millis() as u64;
+                if now_ms.saturating_sub(opened) < self.cooldown.as_millis() as u64 {
+                    return false;
+                }
+                // cooldown elapsed: one caller wins the probe slot
+                if self
+                    .state
+                    .compare_exchange(
+                        STATE_OPEN,
+                        STATE_HALF_OPEN,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    self.probes.fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The device answered a package successfully: reset the error run;
+    /// a successful half-open probe re-admits the device (→ `Closed`).
+    pub fn record_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        if self
+            .state
+            .compare_exchange(
+                STATE_HALF_OPEN,
+                STATE_CLOSED,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+        {
+            self.readmits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The device errored on a package: extend the error run; trip to
+    /// `Open` at the threshold, and re-open immediately on a failed
+    /// half-open probe.
+    pub fn record_error(&self) {
+        let run = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        let state = self.state.load(Ordering::Acquire);
+        let should_open = state == STATE_HALF_OPEN || (state == STATE_CLOSED && run >= self.threshold);
+        if should_open {
+            self.opened_at_ms
+                .store(self.epoch.elapsed().as_millis() as u64, Ordering::Release);
+            if self.state.swap(STATE_OPEN, Ordering::AcqRel) != STATE_OPEN {
+                self.trips.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Non-mutating preview of [`CircuitBreaker::admit`]: would a
+    /// dispatch be admitted right now? Unlike `admit` this never claims
+    /// the half-open probe slot, so routers can test "is any device
+    /// available at all?" without burning probes on devices they won't
+    /// pick.
+    pub fn would_admit(&self) -> bool {
+        match self.state.load(Ordering::Acquire) {
+            STATE_CLOSED => true,
+            STATE_HALF_OPEN => false,
+            _ => {
+                let opened = self.opened_at_ms.load(Ordering::Acquire);
+                let now_ms = self.epoch.elapsed().as_millis() as u64;
+                now_ms.saturating_sub(opened) >= self.cooldown.as_millis() as u64
+            }
+        }
+    }
+
+    /// Current state.
+    pub fn state(&self) -> BreakerState {
+        match self.state.load(Ordering::Acquire) {
+            STATE_HALF_OPEN => BreakerState::HalfOpen,
+            STATE_OPEN => BreakerState::Open,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    /// Point-in-time counters.
+    pub fn snapshot(&self) -> BreakerSnapshot {
+        BreakerSnapshot {
+            state: self.state(),
+            consecutive_errors: self.consecutive.load(Ordering::Relaxed),
+            trips: self.trips.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+            readmits: self.readmits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of one [`CircuitBreaker`]'s counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerSnapshot {
+    /// Current state.
+    pub state: BreakerState,
+    /// Length of the current consecutive-error run.
+    pub consecutive_errors: u32,
+    /// Closed→Open (or HalfOpen→Open) transitions.
+    pub trips: u64,
+    /// Open→HalfOpen probe dispatches.
+    pub probes: u64,
+    /// HalfOpen→Closed re-admissions.
+    pub readmits: u64,
+}
+
+// ---------------------------------------------------------------------------
+// liveness watchdog
+// ---------------------------------------------------------------------------
+
+/// One long-lived thread's liveness record. Threads call
+/// [`Heartbeat::beat`] at the top of every work loop iteration,
+/// [`Heartbeat::idle`] right before blocking on an empty queue (an idle
+/// thread is healthy no matter how long it blocks), and
+/// [`Heartbeat::retire`] on clean exit.
+#[derive(Debug)]
+pub struct Heartbeat {
+    name: String,
+    /// Milliseconds since the owning watchdog's epoch at the last beat.
+    last_ms: AtomicU64,
+    beats: AtomicU64,
+    idle: AtomicBool,
+    retired: AtomicBool,
+    epoch: Instant,
+}
+
+impl Heartbeat {
+    /// Mark the thread alive and busy.
+    pub fn beat(&self) {
+        self.last_ms
+            .store(self.epoch.elapsed().as_millis() as u64, Ordering::Release);
+        self.beats.fetch_add(1, Ordering::Relaxed);
+        self.idle.store(false, Ordering::Release);
+    }
+
+    /// Mark the thread idle (about to block waiting for work). Idle
+    /// threads never count as stalled.
+    pub fn idle(&self) {
+        self.last_ms
+            .store(self.epoch.elapsed().as_millis() as u64, Ordering::Release);
+        self.idle.store(true, Ordering::Release);
+    }
+
+    /// Mark the thread cleanly exited (it stops being watched).
+    pub fn retire(&self) {
+        self.retired.store(true, Ordering::Release);
+    }
+}
+
+/// Watches a registry of [`Heartbeat`]s and reports which threads look
+/// stalled: busy (not idle, not retired) with no beat for longer than
+/// `stall_after`. `GET /healthz` renders the report (503 when any thread
+/// stalls).
+#[derive(Debug)]
+pub struct Watchdog {
+    epoch: Instant,
+    stall_after: Duration,
+    threads: Mutex<Vec<Arc<Heartbeat>>>,
+}
+
+/// Default busy-with-no-beat window before a thread is flagged stalled.
+pub const DEFAULT_STALL_AFTER: Duration = Duration::from_secs(10);
+
+impl Default for Watchdog {
+    fn default() -> Self {
+        Watchdog::new(DEFAULT_STALL_AFTER)
+    }
+}
+
+impl Watchdog {
+    /// A watchdog flagging busy threads silent for `stall_after`.
+    pub fn new(stall_after: Duration) -> Watchdog {
+        Watchdog {
+            epoch: Instant::now(),
+            stall_after,
+            threads: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Register a thread; it starts idle (healthy) until its first beat.
+    pub fn register(&self, name: impl Into<String>) -> Arc<Heartbeat> {
+        let hb = Arc::new(Heartbeat {
+            name: name.into(),
+            last_ms: AtomicU64::new(self.epoch.elapsed().as_millis() as u64),
+            beats: AtomicU64::new(0),
+            idle: AtomicBool::new(true),
+            retired: AtomicBool::new(false),
+            epoch: self.epoch,
+        });
+        self.threads.lock().unwrap().push(hb.clone());
+        hb
+    }
+
+    /// Per-thread liveness right now. Retired threads are dropped from
+    /// the registry as a side effect (a finished session's workers don't
+    /// linger in `/healthz`).
+    pub fn report(&self) -> HealthReport {
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        let stall_ms = self.stall_after.as_millis() as u64;
+        let mut threads = self.threads.lock().unwrap();
+        threads.retain(|hb| !hb.retired.load(Ordering::Acquire));
+        let rows: Vec<ThreadHealth> = threads
+            .iter()
+            .map(|hb| {
+                let idle = hb.idle.load(Ordering::Acquire);
+                let age_ms = now_ms.saturating_sub(hb.last_ms.load(Ordering::Acquire));
+                ThreadHealth {
+                    name: hb.name.clone(),
+                    beats: hb.beats.load(Ordering::Relaxed),
+                    idle,
+                    age_ms,
+                    stalled: !idle && age_ms > stall_ms,
+                }
+            })
+            .collect();
+        let healthy = rows.iter().all(|t| !t.stalled);
+        HealthReport {
+            healthy,
+            threads: rows,
+        }
+    }
+}
+
+/// One thread's row in a [`HealthReport`].
+#[derive(Debug, Clone)]
+pub struct ThreadHealth {
+    /// Thread name (e.g. `session-worker-0`, `accel-comm-1`).
+    pub name: String,
+    /// Total beats.
+    pub beats: u64,
+    /// Currently blocked waiting for work (healthy by definition).
+    pub idle: bool,
+    /// Milliseconds since the last beat (or idle transition).
+    pub age_ms: u64,
+    /// Busy and silent past the stall window.
+    pub stalled: bool,
+}
+
+/// The watchdog's verdict: healthy (200) unless any busy thread stalled
+/// (503), with the per-thread detail.
+#[derive(Debug, Clone)]
+pub struct HealthReport {
+    /// No thread is stalled.
+    pub healthy: bool,
+    /// Per-thread rows.
+    pub threads: Vec<ThreadHealth>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quarantine_is_bounded_and_counts_total() {
+        let q = Quarantine::new(2);
+        q.record(1, "worker", "a".into());
+        q.record(2, "worker", "b".into());
+        q.record(3, "worker", "c".into());
+        assert_eq!(q.total(), 3);
+        let e = q.entries();
+        assert_eq!(e.len(), 2);
+        assert_eq!(e[0].doc_id, 2, "oldest entry evicted");
+        assert_eq!(e[1].doc_id, 3);
+    }
+
+    #[test]
+    fn breaker_trips_probes_and_readmits() {
+        let b = CircuitBreaker::new(3, Duration::from_millis(10));
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_error();
+        b.record_error();
+        assert!(b.admit(), "below threshold stays closed");
+        b.record_error();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(), "open rejects before cooldown");
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.admit(), "cooldown elapsed: probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.admit(), "one probe at a time");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        let s = b.snapshot();
+        assert_eq!(s.trips, 1);
+        assert_eq!(s.probes, 1);
+        assert_eq!(s.readmits, 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let b = CircuitBreaker::new(1, Duration::from_millis(5));
+        b.record_error();
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(b.admit());
+        b.record_error();
+        assert_eq!(b.state(), BreakerState::Open, "failed probe re-opens");
+        assert_eq!(b.snapshot().trips, 2);
+    }
+
+    #[test]
+    fn success_resets_consecutive_run() {
+        let b = CircuitBreaker::new(3, Duration::from_millis(5));
+        b.record_error();
+        b.record_error();
+        b.record_success();
+        b.record_error();
+        b.record_error();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn watchdog_flags_busy_silence_not_idle() {
+        let w = Watchdog::new(Duration::from_millis(20));
+        let busy = w.register("busy");
+        let idle = w.register("idle");
+        busy.beat();
+        idle.idle();
+        std::thread::sleep(Duration::from_millis(35));
+        let r = w.report();
+        assert!(!r.healthy);
+        let busy_row = r.threads.iter().find(|t| t.name == "busy").unwrap();
+        let idle_row = r.threads.iter().find(|t| t.name == "idle").unwrap();
+        assert!(busy_row.stalled);
+        assert!(!idle_row.stalled, "idle threads are healthy");
+    }
+
+    #[test]
+    fn retired_threads_leave_the_report() {
+        let w = Watchdog::new(Duration::from_millis(1));
+        let hb = w.register("worker");
+        hb.beat();
+        hb.retire();
+        std::thread::sleep(Duration::from_millis(5));
+        let r = w.report();
+        assert!(r.healthy);
+        assert!(r.threads.is_empty());
+    }
+
+    #[test]
+    fn doc_error_classifies_deadline_panics() {
+        let e = DocError::from_panic(Box::new(DeadlinePanic {
+            budget: Duration::from_millis(5),
+            waited: Duration::from_millis(9),
+        }));
+        assert!(e.is_deadline());
+        let e = DocError::from_panic(Box::new("boom".to_string()));
+        assert_eq!(
+            e,
+            DocError::Panicked {
+                message: "boom".into()
+            }
+        );
+    }
+
+    #[test]
+    fn deadline_guard_clears_thread_local() {
+        {
+            let _g = set_doc_deadline(
+                Some(Instant::now()),
+                Some(Duration::from_millis(1)),
+            );
+            assert!(doc_deadline().is_some());
+            assert!(doc_budget().is_some());
+        }
+        assert!(doc_deadline().is_none());
+        assert!(doc_budget().is_none());
+    }
+}

@@ -23,9 +23,16 @@
 //!   identical semantics, kept as an independent reference implementation
 //!   the simulator is differentially tested against.
 
+pub mod chaos;
+pub mod fault;
 pub mod queue;
 pub mod sim;
 
+pub use chaos::{ChaosAction, ChaosPlan};
+pub use fault::{
+    BreakerSnapshot, BreakerState, CircuitBreaker, DocError, HealthReport, Quarantine,
+    QuarantineEntry, Watchdog,
+};
 pub use sim::{FaultPlan, SimPackageEngine, SimSnapshot, SimSpec, SimStats};
 
 #[cfg(feature = "pjrt")]

@@ -53,6 +53,14 @@ pub struct FaultPlan {
     /// Shuffle the hit-record stream (records may arrive out of
     /// `(machine, stream, position)` order; the post-stage must sort).
     pub reorder_hits: bool,
+    /// Brick window start: packages numbered `brick_from..brick_until`
+    /// (1-based per-engine sequence) all fail. Models a device going dark
+    /// for a while and then recovering — the schedule the circuit-breaker
+    /// trip→probe→re-admit path is tested against. Window is active only
+    /// when `brick_until > brick_from`.
+    pub brick_from: u64,
+    /// Brick window end (exclusive). See [`FaultPlan::brick_from`].
+    pub brick_until: u64,
 }
 
 impl FaultPlan {
@@ -246,6 +254,12 @@ impl PackageEngine for SimPackageEngine {
             self.spec.stats.faults.fetch_add(1, Ordering::Relaxed);
             bail!("injected device fault on package #{n}");
         }
+        if fault.brick_until > fault.brick_from && n >= fault.brick_from && n < fault.brick_until
+        {
+            self.spec.stats.faults.fetch_add(1, Ordering::Relaxed);
+            bail!("injected brick fault on package #{n} (device dark until package {})",
+                fault.brick_until);
+        }
 
         // The kernel's two-phase output: a dense [M, STREAMS, block] tensor
         // holding the accepting state id at each position (0 elsewhere),
@@ -416,15 +430,30 @@ mod tests {
     }
 
     #[test]
+    fn brick_window_fails_then_recovers() {
+        let (key, pkg) = packed(&["ab"], 4096);
+        let sim = SimPackageEngine::new(SimSpec::default().with_fault(FaultPlan {
+            brick_from: 2,
+            brick_until: 4,
+            ..FaultPlan::none()
+        }));
+        assert!(sim.run(key, &pkg).is_ok(), "before the window");
+        assert!(sim.run(key, &pkg).is_err(), "package 2 bricked");
+        assert!(sim.run(key, &pkg).is_err(), "package 3 bricked");
+        assert!(sim.run(key, &pkg).is_ok(), "device recovered");
+        assert_eq!(sim.stats().snapshot().faults, 2);
+    }
+
+    #[test]
     fn duplicate_and_reorder_faults_mutate_only_the_stream() {
         let (key, pkg) = packed(&["xxabbby", "ab", "abab", ""], 4096);
         let clean = SimPackageEngine::new(SimSpec::default())
             .run(key, &pkg)
             .unwrap();
         let faulty = SimPackageEngine::new(SimSpec::default().with_fault(FaultPlan {
-            fail_every: 0,
             duplicate_hits: true,
             reorder_hits: true,
+            ..FaultPlan::none()
         }))
         .run(key, &pkg)
         .unwrap();
@@ -441,9 +470,8 @@ mod tests {
     fn deterministic_across_runs() {
         let (key, pkg) = packed(&["xxabbby", "ab", "abab", "bbb"], 4096);
         let spec = SimSpec::default().with_fault(FaultPlan {
-            fail_every: 0,
-            duplicate_hits: false,
             reorder_hits: true,
+            ..FaultPlan::none()
         });
         let a = SimPackageEngine::new(spec.clone()).run(key, &pkg).unwrap();
         let b = SimPackageEngine::new(SimSpec {

@@ -1,8 +1,11 @@
-//! Hand-rolled HTTP/1.0 admin endpoint: `GET /metrics` returns one JSON
+//! Hand-rolled HTTP/1.0 admin endpoint. `GET /metrics` returns one JSON
 //! snapshot of the serving tier plus the engine's queue, arena,
-//! block-pool, and accelerator gauges. No HTTP library — request-line
-//! parse, fixed headers, `Connection: close` — because the only client
-//! is `curl`/a CI probe and the only route is `/metrics`.
+//! block-pool, accelerator, circuit-breaker, and quarantine gauges.
+//! `GET /healthz` is the liveness probe: 200 with per-thread heartbeat
+//! detail when every busy worker is beating, 503 when any has stalled
+//! past the watchdog window. No HTTP library — request-line parse, fixed
+//! headers, `Connection: close` — because the only client is `curl`/a CI
+//! probe.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -67,8 +70,22 @@ fn handle_request(stream: TcpStream, shared: &ServerShared) {
             body.len(),
             body
         );
+    } else if method == "GET" && (path == "/healthz" || path == "/healthz/") {
+        let (healthy, body) = healthz_json(shared);
+        let status = if healthy {
+            "200 OK"
+        } else {
+            "503 Service Unavailable"
+        };
+        let _ = write!(
+            w,
+            "HTTP/1.0 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            status,
+            body.len(),
+            body
+        );
     } else {
-        let body = "{\"error\":\"not found; try GET /metrics\"}";
+        let body = "{\"error\":\"not found; try GET /metrics or GET /healthz\"}";
         let _ = write!(
             w,
             "HTTP/1.0 404 Not Found\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
@@ -87,7 +104,7 @@ fn handle_request(stream: TcpStream, shared: &ServerShared) {
 
 fn serve_json(s: &ServeSnapshot) -> String {
     format!(
-        "{{\"accepted\":{},\"rejected\":{},\"active\":{},\"docs\":{},\"bytes_in\":{},\"results\":{},\"bytes_out\":{},\"protocol_errors\":{},\"disconnects\":{},\"result_stalls\":{},\"result_blocked_ns\":{}}}",
+        "{{\"accepted\":{},\"rejected\":{},\"active\":{},\"docs\":{},\"bytes_in\":{},\"results\":{},\"bytes_out\":{},\"protocol_errors\":{},\"disconnects\":{},\"doc_errors\":{},\"deadline_expired\":{},\"result_stalls\":{},\"result_blocked_ns\":{}}}",
         s.accepted,
         s.rejected,
         s.active,
@@ -97,6 +114,8 @@ fn serve_json(s: &ServeSnapshot) -> String {
         s.bytes_out,
         s.protocol_errors,
         s.disconnects,
+        s.doc_errors,
+        s.deadline_expired,
         s.result_stalls,
         s.result_blocked_ns
     )
@@ -196,11 +215,48 @@ pub(crate) fn metrics_json(shared: &ServerShared) -> String {
     out.push_str(",\"accel_pool\":");
     match shared.engine.accel_pool_snapshot() {
         Some(p) => out.push_str(&format!(
-            "{{\"retries\":{},\"failovers\":{},\"sw_fallbacks\":{},\"sw_routed\":{}}}",
-            p.retries, p.failovers, p.sw_fallbacks, p.sw_routed
+            "{{\"retries\":{},\"failovers\":{},\"sw_fallbacks\":{},\"sw_routed\":{},\"breaker_trips\":{},\"breaker_probes\":{},\"breaker_readmits\":{},\"deadline_expired\":{}}}",
+            p.retries,
+            p.failovers,
+            p.sw_fallbacks,
+            p.sw_routed,
+            p.breaker_trips,
+            p.breaker_probes,
+            p.breaker_readmits,
+            p.deadline_expired
         )),
         None => out.push_str("null"),
     }
+    // per-device breaker states (null without an accelerator service)
+    out.push_str(",\"breakers\":");
+    match shared.engine.accel_breaker_snapshots() {
+        Some(breakers) => {
+            out.push('[');
+            for (i, b) in breakers.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"device\":{},\"state\":\"{}\",\"consecutive_errors\":{},\"trips\":{},\"probes\":{},\"readmits\":{}}}",
+                    i,
+                    b.state.name(),
+                    b.consecutive_errors,
+                    b.trips,
+                    b.probes,
+                    b.readmits
+                ));
+            }
+            out.push(']');
+        }
+        None => out.push_str("null"),
+    }
+    // poison-document quarantine (bounded registry; total ≥ held)
+    let quarantine = shared.engine.quarantine();
+    out.push_str(&format!(
+        ",\"quarantine\":{{\"total\":{},\"held\":{}}}",
+        quarantine.total(),
+        quarantine.len()
+    ));
     let arena = shared.engine.arena_snapshot();
     out.push_str(&format!(
         ",\"arena\":{{\"checkouts\":{},\"fresh\":{},\"returns_local\":{},\"returns_cross\":{},\"pooled\":{}}}",
@@ -213,4 +269,58 @@ pub(crate) fn metrics_json(shared: &ServerShared) -> String {
     ));
     out.push('}');
     out
+}
+
+/// The `/healthz` document plus the verdict that picks the HTTP status:
+/// per-thread heartbeat detail from the engine watchdog, breaker states,
+/// and the quarantine gauges — everything an operator needs to tell a
+/// wedged worker from a dark device from a poison document.
+pub(crate) fn healthz_json(shared: &ServerShared) -> (bool, String) {
+    let report = shared.engine.health();
+    let mut out = String::with_capacity(512);
+    out.push_str(&format!(
+        "{{\"healthy\":{},\"threads\":[",
+        report.healthy
+    ));
+    for (i, t) in report.threads.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"beats\":{},\"idle\":{},\"age_ms\":{},\"stalled\":{}}}",
+            json_escape(&t.name),
+            t.beats,
+            t.idle,
+            t.age_ms,
+            t.stalled
+        ));
+    }
+    out.push(']');
+    out.push_str(",\"breakers\":");
+    match shared.engine.accel_breaker_snapshots() {
+        Some(breakers) => {
+            out.push('[');
+            for (i, b) in breakers.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"device\":{},\"state\":\"{}\",\"trips\":{},\"readmits\":{}}}",
+                    i,
+                    b.state.name(),
+                    b.trips,
+                    b.readmits
+                ));
+            }
+            out.push(']');
+        }
+        None => out.push_str("null"),
+    }
+    let quarantine = shared.engine.quarantine();
+    out.push_str(&format!(
+        ",\"quarantine\":{{\"total\":{},\"held\":{}}}}}",
+        quarantine.total(),
+        quarantine.len()
+    ));
+    (report.healthy, out)
 }

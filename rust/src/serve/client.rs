@@ -82,9 +82,23 @@ pub struct ResultFrame {
     pub views: Vec<(u16, Vec<u8>)>,
 }
 
+/// One `DocErr` frame as received: a per-document failure the server
+/// contained (deadline expiry or quarantined panic) while the
+/// connection kept serving. See `ERROR_TAXONOMY` in [`protocol`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DocErrFrame {
+    /// Echo of the submitted document id.
+    pub doc_id: u64,
+    /// `ERR_DEADLINE` or `ERR_DOC_PANIC`.
+    pub code: u16,
+    /// The server's description of the failure.
+    pub message: String,
+}
+
 /// What the background reader hands back when the connection ends.
 struct ReaderOutcome {
     results: Vec<ResultFrame>,
+    doc_errors: Vec<DocErrFrame>,
     done_docs: Option<u64>,
     error: Option<ClientError>,
 }
@@ -108,6 +122,19 @@ impl Client {
         queries: &[String],
         views: &[String],
     ) -> Result<Client, ClientError> {
+        Client::connect_with_budget(addr, queries, views, None)
+    }
+
+    /// [`Client::connect`] with a default per-document deadline budget in
+    /// milliseconds for every doc on this connection (`None` = no
+    /// deadline). Expired documents come back as `DocErr` frames in
+    /// [`ClientReport::doc_errors`], not results.
+    pub fn connect_with_budget<A: ToSocketAddrs>(
+        addr: A,
+        queries: &[String],
+        views: &[String],
+        budget_ms: Option<u64>,
+    ) -> Result<Client, ClientError> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
         let mut reader = BufReader::new(stream.try_clone()?);
@@ -117,6 +144,7 @@ impl Client {
             &Frame::Hello {
                 queries: queries.to_vec(),
                 views: views.to_vec(),
+                budget_ms,
             },
         )?;
         writer.flush()?;
@@ -155,10 +183,21 @@ impl Client {
     /// Submit one document. Blocks only when the socket's send buffer is
     /// full (the server's per-connection backpressure reaching us).
     pub fn send(&mut self, id: u64, text: &str) -> io::Result<()> {
+        self.send_frame(id, text, None)
+    }
+
+    /// [`Client::send`] with a per-document deadline budget in
+    /// milliseconds, overriding the connection default for this doc.
+    pub fn send_with_budget(&mut self, id: u64, text: &str, budget_ms: u64) -> io::Result<()> {
+        self.send_frame(id, text, Some(budget_ms))
+    }
+
+    fn send_frame(&mut self, id: u64, text: &str, budget_ms: Option<u64>) -> io::Result<()> {
         protocol::write_frame(
             &mut self.writer,
             &Frame::Doc {
                 id,
+                budget_ms,
                 bytes: text.as_bytes().to_vec(),
             },
         )?;
@@ -184,6 +223,7 @@ impl Client {
                 sent: self.sent,
                 done,
                 results: outcome.results,
+                doc_errors: outcome.doc_errors,
                 view_table: self.view_table.clone(),
             }),
             None => Err(ClientError::Protocol(ProtocolError::Truncated)),
@@ -193,11 +233,21 @@ impl Client {
 
 impl Drop for Client {
     fn drop(&mut self) {
-        // abandoned client (no finish): let the reader thread end on the
-        // server's close rather than block forever on a live socket
+        // abandoned client (no finish): shut the socket down so the
+        // reader's blocking read fails, then give it a bounded window to
+        // exit. If it still hasn't (a platform where shutdown doesn't
+        // interrupt an in-flight read, or a wedged peer), detach it
+        // rather than hang the dropping thread forever — the reader dies
+        // with the process.
         if let Some(h) = self.reader.take() {
             drop(self.writer.get_ref().shutdown(std::net::Shutdown::Both));
-            let _ = h.join();
+            let deadline = Instant::now() + Duration::from_secs(2);
+            while !h.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            if h.is_finished() {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -207,58 +257,73 @@ impl Drop for Client {
 pub struct ClientReport {
     /// Documents this client submitted.
     pub sent: u64,
-    /// Documents the server reported in `Done`.
+    /// Documents the server reported in `Done` (successes + per-doc
+    /// errors: every answered document).
     pub done: u64,
     /// Every `Result` frame received, in arrival order.
     pub results: Vec<ResultFrame>,
+    /// Every `DocErr` frame received (shed/quarantined documents), in
+    /// arrival order.
+    pub doc_errors: Vec<DocErrFrame>,
     /// The server's view table from `Welcome`.
     pub view_table: Vec<String>,
 }
 
 fn read_results(mut reader: BufReader<TcpStream>) -> ReaderOutcome {
     let mut results = Vec::new();
+    let mut doc_errors = Vec::new();
+    let finish = |results, doc_errors, done_docs, error| ReaderOutcome {
+        results,
+        doc_errors,
+        done_docs,
+        error,
+    };
     loop {
         match protocol::read_frame(&mut reader) {
             Ok(Some(Frame::Result { doc_id, views })) => {
                 results.push(ResultFrame { doc_id, views });
             }
+            Ok(Some(Frame::DocErr {
+                doc_id,
+                code,
+                message,
+            })) => {
+                doc_errors.push(DocErrFrame {
+                    doc_id,
+                    code,
+                    message,
+                });
+            }
             Ok(Some(Frame::Done { docs })) => {
-                return ReaderOutcome {
-                    results,
-                    done_docs: Some(docs),
-                    error: None,
-                }
+                return finish(results, doc_errors, Some(docs), None)
             }
             Ok(Some(Frame::Error { code, message })) => {
-                return ReaderOutcome {
+                return finish(
                     results,
-                    done_docs: None,
-                    error: Some(ClientError::Rejected { code, message }),
-                }
+                    doc_errors,
+                    None,
+                    Some(ClientError::Rejected { code, message }),
+                )
             }
             Ok(Some(_)) => {
-                return ReaderOutcome {
+                return finish(
                     results,
-                    done_docs: None,
-                    error: Some(ClientError::Protocol(ProtocolError::Malformed(
+                    doc_errors,
+                    None,
+                    Some(ClientError::Protocol(ProtocolError::Malformed(
                         "unexpected frame from server",
                     ))),
-                }
+                )
             }
             Ok(None) => {
-                return ReaderOutcome {
+                return finish(
                     results,
-                    done_docs: None,
-                    error: Some(ClientError::Protocol(ProtocolError::Truncated)),
-                }
+                    doc_errors,
+                    None,
+                    Some(ClientError::Protocol(ProtocolError::Truncated)),
+                )
             }
-            Err(e) => {
-                return ReaderOutcome {
-                    results,
-                    done_docs: None,
-                    error: Some(e.into()),
-                }
-            }
+            Err(e) => return finish(results, doc_errors, None, Some(e.into())),
         }
     }
 }
@@ -276,6 +341,8 @@ pub struct LoadReport {
     pub wall: Duration,
     /// Every client's results, merged; `(doc_id, views)` per document.
     pub results: Vec<ResultFrame>,
+    /// Every client's `DocErr` frames, merged (shed/quarantined docs).
+    pub doc_errors: Vec<DocErrFrame>,
     /// The server's view table (identical across clients by protocol).
     pub view_table: Vec<String>,
 }
@@ -312,13 +379,26 @@ pub fn run_load(
     clients: usize,
     queries: &[String],
 ) -> Result<LoadReport, ClientError> {
+    run_load_with_budget(addr, docs, clients, queries, None)
+}
+
+/// [`run_load`] with a per-document deadline budget in milliseconds sent
+/// in every client's `Hello` (`None` = no deadline).
+pub fn run_load_with_budget(
+    addr: std::net::SocketAddr,
+    docs: &[Document],
+    clients: usize,
+    queries: &[String],
+    budget_ms: Option<u64>,
+) -> Result<LoadReport, ClientError> {
     let clients = clients.max(1);
     let start = Instant::now();
     let reports: Vec<Result<ClientReport, ClientError>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..clients)
             .map(|k| {
                 scope.spawn(move || {
-                    let mut client = Client::connect(addr, queries, &[])?;
+                    let mut client =
+                        Client::connect_with_budget(addr, queries, &[], budget_ms)?;
                     for doc in docs.iter().skip(k).step_by(clients) {
                         client.send(doc.id, &doc.text)?;
                     }
@@ -337,6 +417,7 @@ pub fn run_load(
     let wall = start.elapsed();
 
     let mut results = Vec::with_capacity(docs.len());
+    let mut doc_errors = Vec::new();
     let mut view_table = Vec::new();
     for report in reports {
         let report = report?;
@@ -344,6 +425,7 @@ pub fn run_load(
             view_table = report.view_table;
         }
         results.extend(report.results);
+        doc_errors.extend(report.doc_errors);
     }
     Ok(LoadReport {
         clients,
@@ -351,6 +433,7 @@ pub fn run_load(
         bytes: docs.iter().map(|d| d.len()).sum(),
         wall,
         results,
+        doc_errors,
         view_table,
     })
 }

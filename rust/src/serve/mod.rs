@@ -21,9 +21,10 @@
 //!   backpressure over [`runtime::queue`](crate::runtime::queue).
 //! - [`client`] — built-in protocol client and the K-connection load
 //!   generator behind `repro serve --selftest`.
-//! - [`admin`] — `GET /metrics` over hand-rolled HTTP/1.0 on a second
-//!   port: serving, queue, arena, block-pool, and accelerator gauges as
-//!   one JSON snapshot.
+//! - [`admin`] — `GET /metrics` and `GET /healthz` over hand-rolled
+//!   HTTP/1.0 on a second port: serving, queue, arena, block-pool,
+//!   accelerator, breaker, and quarantine gauges as one JSON snapshot,
+//!   plus a liveness verdict (200/503) from the engine watchdog.
 //!
 //! Per-tenant catalogs ride the supergraph: a client's `Hello` names
 //! which registered queries (namespaces) it wants and optionally which
@@ -35,6 +36,9 @@ pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use client::{run_load, Client, ClientError, ClientReport, LoadReport, ResultFrame};
+pub use client::{
+    run_load, run_load_with_budget, Client, ClientError, ClientReport, DocErrFrame, LoadReport,
+    ResultFrame,
+};
 pub use protocol::{Frame, ProtocolError};
 pub use server::{ConnSnapshot, ServeConfig, Server};

@@ -8,16 +8,36 @@
 //!
 //! | frame | dir | type | payload |
 //! |-------|-----|------|---------|
-//! | `Hello` | c→s | `0x01` | version u8, query names (u16 count × str16), view subscriptions (u16 count × str16) |
-//! | `Doc` | c→s | `0x02` | doc id u64, UTF-8 text (rest of frame) |
+//! | `Hello` | c→s | `0x01` | version u8, query names (u16 count × str16), view subscriptions (u16 count × str16), deadline flag u8 (`1` ⇒ default budget ms u64 follows) |
+//! | `Doc` | c→s | `0x02` | doc id u64, deadline flag u8 (`1` ⇒ budget ms u64 follows), UTF-8 text (rest of frame) |
 //! | `Finish` | c→s | `0x03` | empty |
 //! | `Welcome` | s→c | `0x81` | view table (u16 count × str16 qualified names) |
 //! | `Result` | s→c | `0x82` | doc id u64, u16 count × (view-table index u16, batch length u32, encoded [`TupleBatch`]) |
 //! | `Busy` | s→c | `0x83` | active u32, cap u32 |
 //! | `Error` | s→c | `0x84` | code u16, message str16 |
 //! | `Done` | s→c | `0x85` | docs processed u64 |
+//! | `DocErr` | s→c | `0x86` | doc id u64, code u16, message str16 |
 //!
 //! (`str16` = u16 length + UTF-8 bytes; `str32` the same with a u32.)
+//!
+//! ## Error taxonomy
+//!
+//! Two error surfaces share one code space ([`ERROR_TAXONOMY`]): the
+//! connection-terminal `Error` frame and the per-document `DocErr` frame
+//! (after which the connection keeps serving). Codes are **stable wire
+//! contract** — never renumber, only append (asserted by a test).
+//!
+//! | code | name | frame | meaning |
+//! |------|------|-------|---------|
+//! | 1 | `protocol` | `Error` | the frame stream itself was malformed |
+//! | 2 | `bad-hello` | `Error` | the `Hello` handshake was missing or invalid |
+//! | 3 | `unknown-query` | `Error` | `Hello` named a query the catalog doesn't register |
+//! | 4 | `unknown-view` | `Error` | `Hello` subscribed to a view outside its namespaces |
+//! | 5 | `bad-doc` | `Error` | a `Doc` frame carried invalid (non-UTF-8) text |
+//! | 6 | `server` | `Error` | the server failed internally while processing |
+//! | 7 | `query-rejected` | `Error` | `Hello` named a query the build-time analyzer quarantined |
+//! | 8 | `deadline` | `DocErr` | the document's deadline budget expired; the doc was shed |
+//! | 9 | `doc-panic` | `DocErr` | execution panicked on the document; it was quarantined |
 //!
 //! Result payloads serialize [`TupleBatch`] **columns**, not rows: per
 //! column a type tag, an optional null bitmap (u64 words, same packing
@@ -38,7 +58,8 @@ use crate::exec::{ColumnData, TupleBatch};
 use crate::text::Span;
 
 /// Protocol version carried in `Hello`. Bump on any wire change.
-pub const PROTOCOL_VERSION: u8 = 1;
+/// (v2: deadline fields on `Hello`/`Doc`, per-document `DocErr` frames.)
+pub const PROTOCOL_VERSION: u8 = 2;
 
 /// Upper bound on a single frame's length field (type byte + payload).
 /// Anything larger is rejected before buffering — a garbage length
@@ -61,6 +82,8 @@ pub const FRAME_BUSY: u8 = 0x83;
 pub const FRAME_ERROR: u8 = 0x84;
 /// `Done` frame type byte (server → client).
 pub const FRAME_DONE: u8 = 0x85;
+/// `DocErr` frame type byte (server → client).
+pub const FRAME_DOC_ERR: u8 = 0x86;
 
 /// `Error` code: the frame stream itself was malformed.
 pub const ERR_PROTOCOL: u16 = 1;
@@ -78,6 +101,58 @@ pub const ERR_SERVER: u16 = 6;
 /// build time (lenient catalogs quarantine bad entries instead of
 /// failing); the message carries the first diagnostic's code and text.
 pub const ERR_QUERY_REJECTED: u16 = 7;
+/// `DocErr` code: the document's deadline budget expired — checked at
+/// dequeue and after the post-stage — and the document was shed. The
+/// connection keeps serving.
+pub const ERR_DEADLINE: u16 = 8;
+/// `DocErr` code: execution panicked on the document; the panic was
+/// contained, the document quarantined, and the connection keeps serving.
+pub const ERR_DOC_PANIC: u16 = 9;
+
+/// The full error-code space: `(code, stable name, description)` per
+/// entry, in code order. One table for both the `Error` and `DocErr`
+/// frames — see the module docs for which codes ride which frame.
+pub const ERROR_TAXONOMY: &[(u16, &str, &str)] = &[
+    (ERR_PROTOCOL, "protocol", "the frame stream itself was malformed"),
+    (ERR_BAD_HELLO, "bad-hello", "the Hello handshake was missing or invalid"),
+    (
+        ERR_UNKNOWN_QUERY,
+        "unknown-query",
+        "Hello named a query the catalog doesn't register",
+    ),
+    (
+        ERR_UNKNOWN_VIEW,
+        "unknown-view",
+        "Hello subscribed to a view outside its namespaces",
+    ),
+    (ERR_BAD_DOC, "bad-doc", "a Doc frame carried invalid (non-UTF-8) text"),
+    (ERR_SERVER, "server", "the server failed internally while processing"),
+    (
+        ERR_QUERY_REJECTED,
+        "query-rejected",
+        "Hello named a query the build-time analyzer quarantined",
+    ),
+    (
+        ERR_DEADLINE,
+        "deadline",
+        "the document's deadline budget expired; the document was shed",
+    ),
+    (
+        ERR_DOC_PANIC,
+        "doc-panic",
+        "execution panicked on the document; it was quarantined",
+    ),
+];
+
+/// The stable name of an error code (`"deadline"`, `"doc-panic"`, …), or
+/// `"unknown"` for a code outside the taxonomy.
+pub fn error_code_name(code: u16) -> &'static str {
+    ERROR_TAXONOMY
+        .iter()
+        .find(|(c, _, _)| *c == code)
+        .map(|(_, name, _)| *name)
+        .unwrap_or("unknown")
+}
 
 /// Everything that can go wrong reading or decoding a frame.
 #[derive(Debug)]
@@ -138,11 +213,17 @@ pub enum Frame {
         queries: Vec<String>,
         /// View subscriptions, qualified (`"t1.Entities"`) or bare.
         views: Vec<String>,
+        /// Default per-document deadline budget in milliseconds for every
+        /// doc on this connection; `None` = no deadline.
+        budget_ms: Option<u64>,
     },
     /// One document to analyze.
     Doc {
         /// Client-chosen stable id, echoed back in `Result`.
         id: u64,
+        /// Per-document deadline budget in milliseconds, overriding the
+        /// `Hello`-level default for this doc; `None` = use the default.
+        budget_ms: Option<u64>,
         /// Raw document text; must be valid UTF-8.
         bytes: Vec<u8>,
     },
@@ -181,6 +262,16 @@ pub enum Frame {
     Done {
         /// Documents processed on this connection.
         docs: u64,
+    },
+    /// Per-document failure: this one document was shed or quarantined;
+    /// the connection keeps serving the rest of the stream.
+    DocErr {
+        /// The id from the matching `Doc` frame.
+        doc_id: u64,
+        /// [`ERR_DEADLINE`] or [`ERR_DOC_PANIC`] (see [`ERROR_TAXONOMY`]).
+        code: u16,
+        /// Human-readable description of the failure.
+        message: String,
     },
 }
 
@@ -290,7 +381,7 @@ impl<'a> Cursor<'a> {
 
 fn encode_payload(frame: &Frame, out: &mut Vec<u8>) {
     match frame {
-        Frame::Hello { queries, views } => {
+        Frame::Hello { queries, views, budget_ms } => {
             out.push(FRAME_HELLO);
             out.push(PROTOCOL_VERSION);
             put_u16(out, queries.len() as u16);
@@ -301,10 +392,12 @@ fn encode_payload(frame: &Frame, out: &mut Vec<u8>) {
             for v in views {
                 put_str16(out, v);
             }
+            put_budget(out, *budget_ms);
         }
-        Frame::Doc { id, bytes } => {
+        Frame::Doc { id, budget_ms, bytes } => {
             out.push(FRAME_DOC);
             put_u64(out, *id);
+            put_budget(out, *budget_ms);
             out.extend_from_slice(bytes);
         }
         Frame::Finish => out.push(FRAME_FINISH),
@@ -339,6 +432,25 @@ fn encode_payload(frame: &Frame, out: &mut Vec<u8>) {
             out.push(FRAME_DONE);
             put_u64(out, *docs);
         }
+        Frame::DocErr { doc_id, code, message } => {
+            out.push(FRAME_DOC_ERR);
+            put_u64(out, *doc_id);
+            put_u16(out, *code);
+            put_str16(out, message);
+        }
+    }
+}
+
+/// Deadline budget field: a flag byte, then the budget in ms when set.
+/// The flag keeps `Doc` decodable even though its text consumes the rest
+/// of the frame.
+fn put_budget(out: &mut Vec<u8>, budget_ms: Option<u64>) {
+    match budget_ms {
+        Some(ms) => {
+            out.push(1);
+            put_u64(out, ms);
+        }
+        None => out.push(0),
     }
 }
 
@@ -372,12 +484,14 @@ fn decode_frame(body: &[u8]) -> Result<Frame, ProtocolError> {
             for _ in 0..nv {
                 views.push(c.str16()?);
             }
-            Frame::Hello { queries, views }
+            let budget_ms = read_budget(&mut c)?;
+            Frame::Hello { queries, views, budget_ms }
         }
         FRAME_DOC => {
             let id = c.u64()?;
+            let budget_ms = read_budget(&mut c)?;
             let bytes = c.rest().to_vec();
-            Frame::Doc { id, bytes }
+            Frame::Doc { id, budget_ms, bytes }
         }
         FRAME_FINISH => Frame::Finish,
         FRAME_WELCOME => {
@@ -408,10 +522,24 @@ fn decode_frame(body: &[u8]) -> Result<Frame, ProtocolError> {
             message: c.str16()?,
         },
         FRAME_DONE => Frame::Done { docs: c.u64()? },
+        FRAME_DOC_ERR => Frame::DocErr {
+            doc_id: c.u64()?,
+            code: c.u16()?,
+            message: c.str16()?,
+        },
         other => return Err(ProtocolError::UnknownFrame(other)),
     };
     c.done()?;
     Ok(frame)
+}
+
+/// Decode counterpart of [`put_budget`].
+fn read_budget(c: &mut Cursor<'_>) -> Result<Option<u64>, ProtocolError> {
+    match c.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(c.u64()?)),
+        _ => Err(ProtocolError::Malformed("bad deadline flag")),
+    }
 }
 
 /// Read one frame, blocking until it is complete. `Ok(None)` means the
@@ -600,10 +728,22 @@ mod tests {
         roundtrip(Frame::Hello {
             queries: vec!["t1".into(), "t3".into()],
             views: vec!["t1.Entities".into()],
+            budget_ms: None,
+        });
+        roundtrip(Frame::Hello {
+            queries: vec![],
+            views: vec![],
+            budget_ms: Some(250),
         });
         roundtrip(Frame::Doc {
             id: 42,
+            budget_ms: None,
             bytes: b"Alice visited Paris.".to_vec(),
+        });
+        roundtrip(Frame::Doc {
+            id: 43,
+            budget_ms: Some(10),
+            bytes: b"Bob visited Rome.".to_vec(),
         });
         roundtrip(Frame::Finish);
         roundtrip(Frame::Welcome {
@@ -619,6 +759,52 @@ mod tests {
             message: "document 3 is not UTF-8".into(),
         });
         roundtrip(Frame::Done { docs: 1000 });
+        roundtrip(Frame::DocErr {
+            doc_id: 9,
+            code: ERR_DEADLINE,
+            message: "deadline exceeded after 31ms (budget 10ms)".into(),
+        });
+    }
+
+    #[test]
+    fn error_taxonomy_is_unique_and_stable() {
+        // every declared ERR_* constant appears exactly once
+        let codes: Vec<u16> = ERROR_TAXONOMY.iter().map(|(c, _, _)| *c).collect();
+        let mut sorted = codes.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), codes.len(), "duplicate error codes");
+        // codes are a stable wire contract: dense 1..=N, in order
+        assert_eq!(codes, (1..=codes.len() as u16).collect::<Vec<_>>());
+        // name assignments must never change once shipped
+        assert_eq!(error_code_name(ERR_PROTOCOL), "protocol");
+        assert_eq!(error_code_name(ERR_BAD_HELLO), "bad-hello");
+        assert_eq!(error_code_name(ERR_UNKNOWN_QUERY), "unknown-query");
+        assert_eq!(error_code_name(ERR_UNKNOWN_VIEW), "unknown-view");
+        assert_eq!(error_code_name(ERR_BAD_DOC), "bad-doc");
+        assert_eq!(error_code_name(ERR_SERVER), "server");
+        assert_eq!(error_code_name(ERR_QUERY_REJECTED), "query-rejected");
+        assert_eq!(error_code_name(ERR_DEADLINE), "deadline");
+        assert_eq!(error_code_name(ERR_DOC_PANIC), "doc-panic");
+        assert_eq!(error_code_name(0xffff), "unknown");
+        // names are unique too
+        let mut names: Vec<&str> = ERROR_TAXONOMY.iter().map(|(_, n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), codes.len(), "duplicate error names");
+    }
+
+    #[test]
+    fn bad_deadline_flag_rejected() {
+        // a Doc frame whose deadline flag byte is neither 0 nor 1
+        let mut body = vec![FRAME_DOC];
+        put_u64(&mut body, 7);
+        body.push(2); // bad flag
+        body.extend_from_slice(b"text");
+        let mut wire = (body.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&body);
+        let mut r = &wire[..];
+        assert!(matches!(read_frame(&mut r), Err(ProtocolError::Malformed(_))));
     }
 
     #[test]

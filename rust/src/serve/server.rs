@@ -25,19 +25,23 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{CallbackSink, Engine, QueryHandle};
+use crate::coordinator::{Engine, QueryHandle, ResultSink};
 use crate::corpus::framing;
-use crate::exec::ViewHandle;
+use crate::exec::{DocResult, ViewHandle};
 use crate::metrics::{QueueSnapshot, QueueStats, ServeSnapshot, ServeStats};
+use crate::runtime::chaos::ChaosPlan;
+use crate::runtime::fault::DocError;
 use crate::runtime::queue;
 use crate::serve::admin;
 use crate::serve::protocol::{
-    self, Frame, ProtocolError, ERR_BAD_DOC, ERR_BAD_HELLO, ERR_PROTOCOL, ERR_QUERY_REJECTED,
-    ERR_SERVER, ERR_UNKNOWN_QUERY, ERR_UNKNOWN_VIEW,
+    self, Frame, ProtocolError, ERR_BAD_DOC, ERR_BAD_HELLO, ERR_DEADLINE, ERR_DOC_PANIC,
+    ERR_PROTOCOL, ERR_QUERY_REJECTED, ERR_SERVER, ERR_UNKNOWN_QUERY, ERR_UNKNOWN_VIEW,
 };
+use crate::text::Document;
 
 /// Server configuration. All knobs have serving-appropriate defaults;
 /// the selftest and the loopback tests bind port 0 for an ephemeral
@@ -57,6 +61,12 @@ pub struct ServeConfig {
     pub queue_depth: usize,
     /// Session worker threads per connection.
     pub threads_per_connection: usize,
+    /// Server-side default per-document deadline budget, applied when the
+    /// client's `Hello` doesn't set one. `None` = no deadline.
+    pub default_budget: Option<Duration>,
+    /// Seeded fault-injection plan applied to every connection's session —
+    /// the chaos harness behind `repro chaos`. `None` in production.
+    pub chaos: Option<Arc<ChaosPlan>>,
 }
 
 impl Default for ServeConfig {
@@ -67,6 +77,8 @@ impl Default for ServeConfig {
             max_connections: 64,
             queue_depth: 32,
             threads_per_connection: 2,
+            default_budget: None,
+            chaos: None,
         }
     }
 }
@@ -363,8 +375,65 @@ impl Drop for ActiveGuard {
 /// or a terminal `Error`.
 enum Out {
     Result(Frame),
+    DocErr(u64, u16, String),
     Done(u64),
     Error(u16, String),
+}
+
+/// The per-connection [`ResultSink`]: successes become `Result` frames,
+/// contained per-document failures become `DocErr` frames — the
+/// connection keeps serving after either. Runs on session workers.
+struct ConnSink {
+    tx: Mutex<queue::QueueTx<Out>>,
+    table: Arc<[ViewHandle]>,
+    conn: Arc<ServeStats>,
+    agg: Arc<ServerShared>,
+    abort: Arc<AtomicBool>,
+}
+
+impl ConnSink {
+    fn push(&self, out: Out) {
+        let tx = self.tx.lock().unwrap().clone();
+        // a failed push means the connection is tearing down; frames for
+        // a dead client are dropped by design
+        let _ = tx.push(out);
+    }
+}
+
+impl ResultSink for ConnSink {
+    fn on_result(&self, doc: &Document, result: &DocResult) {
+        if self.abort.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut views = Vec::with_capacity(self.table.len());
+        for (vi, h) in self.table.iter().enumerate() {
+            let mut buf = Vec::new();
+            protocol::encode_batch(result.view_batch(h), &mut buf);
+            views.push((vi as u16, buf));
+        }
+        self.conn.results.fetch_add(1, Ordering::Relaxed);
+        self.agg.stats.results.fetch_add(1, Ordering::Relaxed);
+        self.push(Out::Result(Frame::Result {
+            doc_id: doc.id,
+            views,
+        }));
+    }
+
+    fn on_error(&self, doc: &Document, error: &DocError) {
+        self.conn.doc_errors.fetch_add(1, Ordering::Relaxed);
+        self.agg.stats.doc_errors.fetch_add(1, Ordering::Relaxed);
+        let code = if error.is_deadline() {
+            self.conn.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            self.agg.stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            ERR_DEADLINE
+        } else {
+            ERR_DOC_PANIC
+        };
+        if self.abort.load(Ordering::Relaxed) {
+            return;
+        }
+        self.push(Out::DocErr(doc.id, code, error.to_string()));
+    }
 }
 
 fn handle_connection(stream: TcpStream, peer: String, shared: Arc<ServerShared>, id: u64) {
@@ -386,8 +455,12 @@ fn serve_connection(stream: TcpStream, peer: String, shared: &Arc<ServerShared>,
     };
 
     // --- handshake: Hello must be the first frame ---
-    let (queries, views) = match protocol::read_frame(&mut reader) {
-        Ok(Some(Frame::Hello { queries, views })) => (queries, views),
+    let (queries, views, hello_budget) = match protocol::read_frame(&mut reader) {
+        Ok(Some(Frame::Hello {
+            queries,
+            views,
+            budget_ms,
+        })) => (queries, views, budget_ms),
         Ok(Some(_)) => {
             agg.protocol_errors.fetch_add(1, Ordering::Relaxed);
             send_error_now(&stream, ERR_BAD_HELLO, "expected Hello as the first frame");
@@ -449,38 +522,31 @@ fn serve_connection(stream: TcpStream, peer: String, shared: &Arc<ServerShared>,
     // clones a handle out per push — the established pattern from the
     // accelerator's submission path.
     let abort = Arc::new(AtomicBool::new(false));
-    let sink_tx = Mutex::new(tx.clone());
-    let sink_table: Arc<[ViewHandle]> = table.clone().into();
-    let sink_stats = conn_stats.clone();
-    let sink_abort = abort.clone();
-    let sink_agg = shared.clone();
-    let sink = CallbackSink::new(move |doc: &crate::text::Document, result| {
-        if sink_abort.load(Ordering::Relaxed) {
-            return;
-        }
-        let mut views = Vec::with_capacity(sink_table.len());
-        for (vi, h) in sink_table.iter().enumerate() {
-            let mut buf = Vec::new();
-            protocol::encode_batch(result.view_batch(h), &mut buf);
-            views.push((vi as u16, buf));
-        }
-        sink_stats.results.fetch_add(1, Ordering::Relaxed);
-        sink_agg.stats.results.fetch_add(1, Ordering::Relaxed);
-        let tx = sink_tx.lock().unwrap().clone();
-        // a failed push means the connection is tearing down; results
-        // for a dead client are dropped by design
-        let _ = tx.push(Out::Result(Frame::Result {
-            doc_id: doc.id,
-            views,
-        }));
-    });
-    let mut session = shared
+    let sink = ConnSink {
+        tx: Mutex::new(tx.clone()),
+        table: table.clone().into(),
+        conn: conn_stats.clone(),
+        agg: shared.clone(),
+        abort: abort.clone(),
+    };
+    // Hello's budget overrides the server-side default for the whole
+    // connection; a Doc frame can still override per document.
+    let conn_budget = hello_budget
+        .map(Duration::from_millis)
+        .or(shared.config.default_budget);
+    let mut builder = shared
         .engine
         .session()
         .threads(shared.config.threads_per_connection.max(1))
         .queue_depth(shared.config.queue_depth.max(1))
-        .sink(Arc::new(sink))
-        .start();
+        .sink(Arc::new(sink));
+    if let Some(budget) = conn_budget {
+        builder = builder.deadline(budget);
+    }
+    if let Some(plan) = &shared.config.chaos {
+        builder = builder.chaos(plan.clone());
+    }
+    let mut session = builder.start();
 
     // --- read loop ---
     enum Ended {
@@ -490,7 +556,11 @@ fn serve_connection(stream: TcpStream, peer: String, shared: &Arc<ServerShared>,
     }
     let mut ended = loop {
         match protocol::read_frame(&mut reader) {
-            Ok(Some(Frame::Doc { id: doc_id, bytes })) => {
+            Ok(Some(Frame::Doc {
+                id: doc_id,
+                budget_ms,
+                bytes,
+            })) => {
                 let len = bytes.len() as u64;
                 match framing::doc_from_bytes(doc_id, bytes) {
                     Ok(doc) => {
@@ -500,7 +570,12 @@ fn serve_connection(stream: TcpStream, peer: String, shared: &Arc<ServerShared>,
                         agg.bytes_in.fetch_add(len, Ordering::Relaxed);
                         // blocks when the session queue is full — the
                         // last link of the backpressure chain
-                        if session.push(doc).is_err() {
+                        let pushed = match budget_ms {
+                            Some(ms) => session
+                                .push_with_deadline(doc, Duration::from_millis(ms)),
+                            None => session.push(doc),
+                        };
+                        if pushed.is_err() {
                             break Ended::Protocol(
                                 ERR_SERVER,
                                 "session workers unavailable".to_string(),
@@ -525,9 +600,11 @@ fn serve_connection(stream: TcpStream, peer: String, shared: &Arc<ServerShared>,
     // --- teardown ---
     if let Ended::Finished = ended {
         // drain every queued document; the sink pushes the remaining
-        // results before finish() returns
+        // results before finish() returns. Done counts every answered
+        // document — successes plus per-doc errors (a DocErr is an
+        // answer, not a dropped doc).
         let report = session.finish();
-        let _ = tx.push(Out::Done(report.docs as u64));
+        let _ = tx.push(Out::Done((report.docs + report.errors) as u64));
     } else {
         // disconnect or protocol error: stop producing results, drain
         // the session without writing, then (on protocol errors) tell
@@ -563,6 +640,11 @@ fn writer_loop(mut w: BufWriter<TcpStream>, rx: queue::QueueRx<Out>, shared: Arc
         }
         let frame = match out {
             Out::Result(f) => f,
+            Out::DocErr(doc_id, code, message) => Frame::DocErr {
+                doc_id,
+                code,
+                message,
+            },
             Out::Done(docs) => Frame::Done { docs },
             Out::Error(code, message) => Frame::Error { code, message },
         };

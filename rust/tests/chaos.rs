@@ -1,0 +1,360 @@
+//! Fault-containment regression suite (ISSUE 9): poison-document
+//! quarantine, deadline expiry, circuit-breaker trip → probe → re-admit
+//! on a bricked device window, and the serving tier's `DocErr` taxonomy —
+//! everything `repro chaos` exercises, pinned down as deterministic
+//! tests.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use boost::coordinator::{Engine, EngineConfig, ResultSink};
+use boost::corpus::CorpusSpec;
+use boost::exec::{DocResult, ViewHandle};
+use boost::partition::PartitionMode;
+use boost::runtime::{ChaosPlan, DocError, EngineSpec, FaultPlan, SimSpec};
+use boost::serve::protocol::{self, ERR_DEADLINE, ERR_DOC_PANIC};
+use boost::serve::{Client, ServeConfig, Server};
+use boost::text::Document;
+
+fn catalog(config: EngineConfig) -> Arc<Engine> {
+    Arc::new(
+        Engine::builder()
+            .register_builtin("t1")
+            .register_builtin("t3")
+            .config(config)
+            .build()
+            .expect("catalog builds"),
+    )
+}
+
+fn full_table(engine: &Engine) -> Vec<ViewHandle> {
+    engine
+        .queries()
+        .iter()
+        .flat_map(|q| q.views().iter().cloned())
+        .collect()
+}
+
+fn encode_views(table: &[ViewHandle], result: &DocResult) -> Vec<(u16, Vec<u8>)> {
+    table
+        .iter()
+        .enumerate()
+        .map(|(vi, h)| {
+            let mut buf = Vec::new();
+            protocol::encode_batch(result.view_batch(h), &mut buf);
+            (vi as u16, buf)
+        })
+        .collect()
+}
+
+/// Captures both sides of the sink: per-doc encoded results and per-doc
+/// structured errors, keyed by document id.
+struct ChaosSink {
+    table: Vec<ViewHandle>,
+    results: Mutex<HashMap<u64, Vec<(u16, Vec<u8>)>>>,
+    errors: Mutex<Vec<(u64, bool, String)>>,
+}
+
+impl ChaosSink {
+    fn new(table: Vec<ViewHandle>) -> ChaosSink {
+        ChaosSink {
+            table,
+            results: Mutex::new(HashMap::new()),
+            errors: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl ResultSink for ChaosSink {
+    fn on_result(&self, doc: &Document, result: &DocResult) {
+        let views = encode_views(&self.table, result);
+        let prev = self.results.lock().unwrap().insert(doc.id, views);
+        assert!(prev.is_none(), "doc {} answered twice", doc.id);
+    }
+
+    fn on_error(&self, doc: &Document, error: &DocError) {
+        self.errors
+            .lock()
+            .unwrap()
+            .push((doc.id, error.is_deadline(), error.to_string()));
+    }
+}
+
+/// Injected panics mid-corpus: each poisoned document becomes one
+/// structured `DocError::Panicked` and one quarantine entry; every other
+/// document's results are byte-identical to a clean engine's.
+#[test]
+fn injected_panics_are_contained_and_quarantined() {
+    let corpus = CorpusSpec::news(60, 384).with_seed(0xC4A0_0001).generate();
+    let plan = Arc::new(ChaosPlan::new(7).panic_every(5));
+    let planned: Vec<u64> = corpus
+        .docs
+        .iter()
+        .filter(|d| plan.panics(d.id))
+        .map(|d| d.id)
+        .collect();
+    assert!(!planned.is_empty(), "seed must poison at least one doc");
+
+    let engine = catalog(EngineConfig::default());
+    let sink = Arc::new(ChaosSink::new(full_table(&engine)));
+    let mut session = engine
+        .session()
+        .threads(4)
+        .sink(sink.clone())
+        .chaos(plan.clone())
+        .start();
+    for doc in &corpus.docs {
+        session.push(doc.clone()).expect("push");
+    }
+    let report = session.finish();
+
+    assert_eq!(report.errors, planned.len(), "one error per poisoned doc");
+    assert_eq!(report.expired, 0, "panics are not deadline expiries");
+    assert_eq!(report.docs, corpus.docs.len() - planned.len());
+
+    let errors = sink.errors.lock().unwrap();
+    assert_eq!(errors.len(), planned.len());
+    for (id, is_deadline, message) in errors.iter() {
+        assert!(!is_deadline, "doc {id} must be Panicked, not deadline");
+        assert!(plan.panics(*id), "doc {id} failed without a planned fault");
+        assert!(
+            message.contains("chaos"),
+            "panic message should carry the injected payload: {message}"
+        );
+    }
+    drop(errors);
+
+    // quarantine: one entry per poison doc (cap permitting), total exact
+    assert_eq!(engine.quarantine().total(), planned.len() as u64);
+    assert!(!engine.quarantine().is_empty());
+
+    // survivors byte-identical to a clean engine over the same catalog
+    let clean = catalog(EngineConfig::default());
+    let clean_table = full_table(&clean);
+    let results = sink.results.lock().unwrap();
+    assert_eq!(results.len(), corpus.docs.len() - planned.len());
+    for doc in &corpus.docs {
+        if plan.panics(doc.id) {
+            assert!(!results.contains_key(&doc.id), "poisoned doc {} has a result", doc.id);
+        } else {
+            let want = encode_views(&clean_table, &clean.run_doc(doc));
+            assert_eq!(results[&doc.id], want, "survivor doc {} diverged", doc.id);
+        }
+    }
+}
+
+/// A device dark for its first packages then recovered: the breakers must
+/// trip after the threshold, go half-open after the cooldown, and re-admit
+/// the device on the first healthy probe — with every document still
+/// answered byte-identically via failover in the meantime.
+#[test]
+fn brick_window_trips_probes_and_readmits_breakers() {
+    let corpus = CorpusSpec::news(40, 512).with_seed(0xC4A0_0002).generate();
+    let mut cfg = EngineConfig::accelerated(
+        PartitionMode::ExtractOnly,
+        EngineSpec::Sim(SimSpec::default().with_fault(FaultPlan {
+            brick_from: 1,
+            brick_until: 3,
+            ..FaultPlan::none()
+        })),
+    );
+    cfg.accel.devices = 2;
+    cfg.accel.breaker_threshold = 2;
+    cfg.accel.breaker_cooldown = Duration::from_millis(10);
+    let engine = catalog(cfg);
+    let clean = catalog(EngineConfig::default());
+    let clean_table = full_table(&clean);
+
+    // repeated passes: early ones trip the breakers inside the brick
+    // window, later ones hand the half-open probes packages past the
+    // window. Bounded so a regression fails instead of spinning.
+    let mut readmitted = false;
+    for _pass in 0..40 {
+        let sink = Arc::new(ChaosSink::new(full_table(&engine)));
+        let mut session = engine.session().threads(2).sink(sink.clone()).start();
+        for doc in &corpus.docs {
+            session.push(doc.clone()).expect("push");
+        }
+        let report = session.finish();
+        assert_eq!(report.errors, 0, "device faults must never surface as doc errors");
+        assert_eq!(report.docs, corpus.docs.len());
+
+        let results = sink.results.lock().unwrap();
+        for doc in &corpus.docs {
+            let want = encode_views(&clean_table, &clean.run_doc(doc));
+            assert_eq!(results[&doc.id], want, "doc {} diverged under faults", doc.id);
+        }
+        drop(results);
+
+        let pool = engine.accel_pool_snapshot().expect("pool snapshot");
+        if pool.breaker_trips > 0 && pool.breaker_readmits > 0 {
+            readmitted = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    }
+    assert!(readmitted, "expected trip → half-open probe → re-admit within the pass budget");
+
+    let pool = engine.accel_pool_snapshot().expect("pool snapshot");
+    assert!(pool.breaker_trips >= 1, "breakers never tripped: {pool:?}");
+    assert!(pool.breaker_probes >= 1, "no half-open probe went out: {pool:?}");
+    assert!(pool.breaker_readmits >= 1, "no device was re-admitted: {pool:?}");
+    let breakers = engine.accel_breaker_snapshots().expect("breaker snapshots");
+    assert_eq!(breakers.len(), 2);
+}
+
+/// Deadline expiry in both directions: a zero budget sheds every document
+/// (checked at dequeue — nothing hangs, nothing executes to completion),
+/// a generous budget passes every document untouched.
+#[test]
+fn zero_budget_sheds_and_generous_budget_passes() {
+    let corpus = CorpusSpec::news(24, 256).with_seed(0xC4A0_0003).generate();
+    let engine = catalog(EngineConfig::default());
+
+    // zero budget: every document expires before (or at) dequeue
+    let sink = Arc::new(ChaosSink::new(full_table(&engine)));
+    let mut session = engine
+        .session()
+        .threads(2)
+        .sink(sink.clone())
+        .deadline(Duration::ZERO)
+        .start();
+    for doc in &corpus.docs {
+        session.push(doc.clone()).expect("push");
+    }
+    let report = session.finish();
+    assert_eq!(report.docs, 0, "no document beats a zero budget");
+    assert_eq!(report.errors, corpus.docs.len());
+    assert_eq!(report.expired, corpus.docs.len(), "every error is a deadline expiry");
+    let errors = sink.errors.lock().unwrap();
+    assert!(errors.iter().all(|(_, is_deadline, _)| *is_deadline));
+    drop(errors);
+
+    // generous budget: deadline plumbing must not perturb a healthy run
+    let sink = Arc::new(ChaosSink::new(full_table(&engine)));
+    let mut session = engine
+        .session()
+        .threads(2)
+        .sink(sink.clone())
+        .deadline(Duration::from_secs(60))
+        .start();
+    for doc in &corpus.docs {
+        session.push(doc.clone()).expect("push");
+    }
+    let report = session.finish();
+    assert_eq!(report.docs, corpus.docs.len());
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.expired, 0);
+}
+
+/// A slow simulated device vs a small budget: accelerator-routed work
+/// expires inside the accel path (post-stage shed / typed submit error)
+/// and surfaces as the same `DocError::DeadlineExceeded` — never a hang,
+/// never a partial result.
+#[test]
+fn slow_sim_device_expires_small_budgets() {
+    let corpus = CorpusSpec::news(16, 512).with_seed(0xC4A0_0004).generate();
+    // a single device is never adaptively routed to software, so every
+    // offloaded subgraph must cross the slow simulator
+    let cfg = EngineConfig::accelerated(
+        PartitionMode::ExtractOnly,
+        EngineSpec::Sim(SimSpec::default().with_latency(Duration::from_millis(30))),
+    );
+    let engine = catalog(cfg);
+
+    let sink = Arc::new(ChaosSink::new(full_table(&engine)));
+    let mut session = engine
+        .session()
+        .threads(2)
+        .sink(sink.clone())
+        .deadline(Duration::from_millis(2))
+        .start();
+    for doc in &corpus.docs {
+        session.push(doc.clone()).expect("push");
+    }
+    let report = session.finish();
+    assert_eq!(
+        report.docs + report.errors,
+        corpus.docs.len(),
+        "every document answered exactly once"
+    );
+    assert!(report.errors > 0, "a 2ms budget cannot survive a 30ms device");
+    assert_eq!(report.expired, report.errors, "all errors are deadline expiries");
+    let errors = sink.errors.lock().unwrap();
+    assert!(errors.iter().all(|(_, is_deadline, _)| *is_deadline));
+}
+
+/// The serving tier's view of containment: poisoned documents come back
+/// as `DocErr(doc-panic)` frames, a per-document zero budget comes back
+/// as `DocErr(deadline)`, the connection keeps streaming results for
+/// everything else, and `Done` counts every answered document.
+#[test]
+fn serve_doc_err_frames_carry_the_taxonomy() {
+    let corpus = CorpusSpec::news(30, 256).with_seed(0xC4A0_0005).generate();
+    let plan = Arc::new(ChaosPlan::new(11).panic_every(6));
+    let planned: Vec<u64> = corpus
+        .docs
+        .iter()
+        .filter(|d| plan.panics(d.id))
+        .map(|d| d.id)
+        .collect();
+    assert!(!planned.is_empty(), "seed must poison at least one doc");
+
+    let engine = catalog(EngineConfig::default());
+    let server = Server::start(
+        engine.clone(),
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            chaos: Some(plan.clone()),
+            ..ServeConfig::default()
+        },
+    )
+    .expect("server starts");
+
+    // one extra poison-free doc pinned to a zero budget: it must expire
+    // even though the connection itself has no default deadline
+    let deadline_doc = corpus
+        .docs
+        .iter()
+        .find(|d| !plan.panics(d.id))
+        .expect("a clean doc exists");
+    let mut client = Client::connect(server.local_addr(), &[], &[]).expect("connect");
+    for doc in &corpus.docs {
+        if doc.id == deadline_doc.id {
+            client
+                .send_with_budget(doc.id, &doc.text, 0)
+                .expect("send with budget");
+        } else {
+            client.send(doc.id, &doc.text).expect("send");
+        }
+    }
+    let report = client.finish().expect("finish");
+
+    assert_eq!(
+        report.done,
+        corpus.docs.len() as u64,
+        "Done counts successes plus per-doc errors"
+    );
+    assert_eq!(
+        report.results.len() + report.doc_errors.len(),
+        corpus.docs.len()
+    );
+    let mut saw_deadline = false;
+    for e in &report.doc_errors {
+        if e.doc_id == deadline_doc.id {
+            assert_eq!(e.code, ERR_DEADLINE, "zero-budget doc: {e:?}");
+            saw_deadline = true;
+        } else {
+            assert_eq!(e.code, ERR_DOC_PANIC, "poisoned doc: {e:?}");
+            assert!(plan.panics(e.doc_id), "doc {} failed without a fault", e.doc_id);
+        }
+    }
+    assert!(saw_deadline, "the zero-budget doc must come back as DocErr(deadline)");
+    assert_eq!(report.doc_errors.len(), planned.len() + 1);
+
+    // server-side gauges agree with the frames on the wire
+    assert_eq!(server.stats().doc_errors, (planned.len() + 1) as u64);
+    assert_eq!(server.stats().deadline_expired, 1);
+    assert!(engine.quarantine().total() >= planned.len() as u64);
+}

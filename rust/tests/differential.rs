@@ -311,9 +311,9 @@ fn duplicated_and_reordered_hit_records_are_normalized_by_the_post_stage() {
     let q = boost::queries::builtin("t1").unwrap();
     let sw = Engine::compile_aql(&q.aql).unwrap();
     let spec = SimSpec::default().with_fault(FaultPlan {
-        fail_every: 0,
         duplicate_hits: true,
         reorder_hits: true,
+        ..FaultPlan::none()
     });
     let hw = Engine::with_config(
         &q.aql,
@@ -341,8 +341,7 @@ fn injected_package_failures_fail_submissions_cleanly() {
     let (configs, _plan) = t1_service_parts(PartitionMode::ExtractOnly);
     let spec = SimSpec::default().with_fault(FaultPlan {
         fail_every: 1,
-        duplicate_hits: false,
-        reorder_hits: false,
+        ..FaultPlan::none()
     });
     let service = AccelService::start(
         configs,
@@ -353,7 +352,7 @@ fn injected_package_failures_fail_submissions_cleanly() {
     let rx = service.submit(0, doc, Arc::new(TokenIndex::default()), vec![]);
     let res = rx.recv().expect("a reply must arrive even on device failure");
     let err = res.expect_err("the injected fault must surface as an error");
-    assert!(err.contains("injected device fault"), "{err}");
+    assert!(err.to_string().contains("injected device fault"), "{err}");
     assert!(spec.snapshot().faults >= 1);
     service.shutdown();
 }
@@ -369,8 +368,7 @@ fn bricked_device_in_a_pool_fails_over_and_stays_byte_identical() {
     let healthy_a = SimSpec::default();
     let bricked = SimSpec::default().with_fault(FaultPlan {
         fail_every: 1,
-        duplicate_hits: false,
-        reorder_hits: false,
+        ..FaultPlan::none()
     });
     let healthy_b = SimSpec::default();
     let service = AccelService::start_pool(
@@ -446,8 +444,7 @@ fn bricked_simulator_surfaces_as_panic_not_hang() {
     let q = boost::queries::builtin("t1").unwrap();
     let spec = SimSpec::default().with_fault(FaultPlan {
         fail_every: 1,
-        duplicate_hits: false,
-        reorder_hits: false,
+        ..FaultPlan::none()
     });
     let hw = Engine::with_config(
         &q.aql,

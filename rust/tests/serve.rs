@@ -37,6 +37,7 @@ fn start(engine: Arc<Engine>, max_connections: usize, queue_depth: usize) -> Ser
             max_connections,
             queue_depth,
             threads_per_connection: 2,
+            ..ServeConfig::default()
         },
     )
     .expect("server starts")
@@ -141,6 +142,7 @@ fn slow_client_backpressure_is_accounted_and_isolated() {
         &Frame::Hello {
             queries: vec![],
             views: vec![],
+            budget_ms: None,
         },
     )
     .expect("hello");
@@ -165,6 +167,7 @@ fn slow_client_backpressure_is_accounted_and_isolated() {
                     &mut writer,
                     &Frame::Doc {
                         id: i,
+                        budget_ms: None,
                         bytes: text.as_bytes().to_vec(),
                     },
                 )
@@ -253,6 +256,7 @@ fn malformed_and_truncated_frames_fail_cleanly() {
         &Frame::Hello {
             queries: vec![],
             views: vec![],
+            budget_ms: None,
         },
     )
     .expect("hello");
