@@ -45,6 +45,11 @@
 //! | E015 | duplicate definition |
 //! | E016 | regex literal failed to compile |
 //! | E017 | unsupported AQL construct |
+//! | E018 | `group by` references an unknown output column |
+//! | E019 | `group by` key has a non-groupable type (e.g. raw span) |
+//! | E020 | `top k` with k = 0 |
+//! | E021 | `score` expression is not numeric |
+//! | E022 | aggregate misuse (Count/CountDocs outside `group by`, aggregate view in a per-document context, …) |
 //! | E101 | non-topological or dangling node input |
 //! | E102 | expression type error |
 //! | E103 | operator schema mismatch (arity, incompatible inputs, non-Boolean predicate) |
@@ -283,6 +288,11 @@ pub fn compile_error_code(e: &CompileError) -> &'static str {
         CompileError::Regex(_) => "E016",
         CompileError::Graph(ge) => graph_error_code(ge),
         CompileError::Unsupported(_) => "E017",
+        CompileError::GroupByUnknownColumn(_) => "E018",
+        CompileError::GroupByBadType { .. } => "E019",
+        CompileError::TopKZero => "E020",
+        CompileError::ScoreNotNumeric(_) => "E021",
+        CompileError::AggregateContext(_) => "E022",
     }
 }
 
@@ -311,6 +321,8 @@ pub fn diagnostic_from_compile(name: &str, src: &str, e: &CompileError) -> Diagn
         | CompileError::UnknownAlias(n)
         | CompileError::DuplicateName(n) => locate_name(src, n),
         CompileError::UnknownColumn { col, .. } => locate_name(src, col),
+        CompileError::GroupByUnknownColumn(col)
+        | CompileError::GroupByBadType { col, .. } => locate_name(src, col),
         _ => None,
     };
     match loc {

@@ -16,6 +16,22 @@ use super::types::{Field, FieldType, Schema};
 /// partitioner and hardware compiler all rely on.
 pub type NodeId = usize;
 
+/// One output column of a [`OpKind::GroupAgg`] node, in select-list
+/// order. `Key(j)` carries input column `j` through as a group key;
+/// `Count` counts input rows per group; `CountDocs` counts the number of
+/// *documents* that contributed at least one row to the group (the
+/// document-frequency aggregate — per partial it advances at most once
+/// per absorbed document, and partials add when merged).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AggCol {
+    /// Pass input column `j` through as a group key.
+    Key(usize),
+    /// `Count()` — number of input rows in the group.
+    Count,
+    /// `CountDocs()` — number of documents with ≥1 row in the group.
+    CountDocs,
+}
+
 /// Operator kinds. Extraction operators read the document; relational
 /// operators transform tuple streams. `SubgraphExec` appears only after
 /// partitioning: it stands for a hardware-offloaded subgraph in the
@@ -65,6 +81,19 @@ pub enum OpKind {
     Sort { keys: Vec<usize> },
     /// First n tuples.
     Limit { n: usize },
+    /// Corpus-level hash aggregate (AQL `group by` + `Count()` /
+    /// `CountDocs()`). Per document it behaves as a corpus of one (the
+    /// full partial + finish over that document's rows); the executor
+    /// additionally exports the per-document partial so the session can
+    /// merge worker partials at finish time. Output columns follow the
+    /// select-list order in `cols`; rows come out sorted by group key.
+    GroupAgg { cols: Vec<(String, AggCol)> },
+    /// Bounded top-k over an aggregate: score each input row with `score`
+    /// (evaluated over the input schema, which carries no spans), keep the
+    /// `k` best by score descending with ties broken by the group-key
+    /// cells ascending (byte order for text). Output schema: input schema
+    /// plus a trailing numeric `score` column.
+    TopK { k: usize, score: Expr },
     /// Post-partition placeholder in the *supergraph*: run accelerator
     /// subgraph `subgraph_id` and emit the tuples of its `output_idx`-th
     /// output. Input 0 is always the DocScan (the document stream the
@@ -99,6 +128,8 @@ impl OpKind {
             OpKind::Block { .. } => "Block",
             OpKind::Sort { .. } => "Sort",
             OpKind::Limit { .. } => "Limit",
+            OpKind::GroupAgg { .. } => "GroupAgg",
+            OpKind::TopK { .. } => "TopK",
             OpKind::SubgraphExec { .. } => "SubgraphExec",
             OpKind::ExtInput { .. } => "ExtInput",
         }
@@ -478,6 +509,74 @@ impl Graph {
                 expect_inputs(1)?;
                 Ok(input_schema(0).clone())
             }
+            OpKind::GroupAgg { cols } => {
+                expect_inputs(1)?;
+                let schema = input_schema(0);
+                if !cols.iter().any(|(_, c)| matches!(c, AggCol::Key(_))) {
+                    return Err(GraphError::SchemaMismatch {
+                        node: id,
+                        op,
+                        detail: "group by needs at least one key column".into(),
+                    });
+                }
+                let mut fields = Vec::with_capacity(cols.len());
+                for (name, c) in cols {
+                    let ty = match c {
+                        AggCol::Key(j) => {
+                            if *j >= schema.arity() {
+                                return Err(GraphError::BadColumn { node: id, op, col: *j });
+                            }
+                            let t = schema.type_at(*j);
+                            match t {
+                                FieldType::Str | FieldType::Int | FieldType::Bool => t,
+                                other => {
+                                    return Err(GraphError::SchemaMismatch {
+                                        node: id,
+                                        op,
+                                        detail: format!(
+                                            "group key '{name}' has type {other}; keys must \
+                                             be Text, Integer or Boolean (use GetText on spans)"
+                                        ),
+                                    })
+                                }
+                            }
+                        }
+                        AggCol::Count | AggCol::CountDocs => FieldType::Int,
+                    };
+                    fields.push(Field {
+                        name: name.clone(),
+                        ty,
+                    });
+                }
+                Ok(Schema { fields })
+            }
+            OpKind::TopK { k, score } => {
+                expect_inputs(1)?;
+                let schema = input_schema(0);
+                if *k == 0 {
+                    return Err(GraphError::SchemaMismatch {
+                        node: id,
+                        op,
+                        detail: "top k requires k >= 1".into(),
+                    });
+                }
+                let ty = score
+                    .infer_type(schema)
+                    .map_err(|err| GraphError::Type { node: id, op, err })?;
+                if !matches!(ty, FieldType::Int | FieldType::Float) {
+                    return Err(GraphError::SchemaMismatch {
+                        node: id,
+                        op,
+                        detail: format!("score expression has type {ty}, want Integer or Float"),
+                    });
+                }
+                let mut out = schema.clone();
+                out.fields.push(Field {
+                    name: "score".into(),
+                    ty,
+                });
+                Ok(out)
+            }
             OpKind::SubgraphExec { schema, .. } => {
                 if inputs.is_empty() {
                     return Err(GraphError::SchemaMismatch {
@@ -630,6 +729,27 @@ impl Graph {
                 }
                 OpKind::Limit { n: k } => {
                     let _ = write!(s, "{k}");
+                }
+                OpKind::GroupAgg { cols } => {
+                    for (i, (name, c)) in cols.iter().enumerate() {
+                        if i > 0 {
+                            let _ = write!(s, ", ");
+                        }
+                        match c {
+                            AggCol::Key(j) => {
+                                let _ = write!(s, "{name}=${j}");
+                            }
+                            AggCol::Count => {
+                                let _ = write!(s, "{name}=Count()");
+                            }
+                            AggCol::CountDocs => {
+                                let _ = write!(s, "{name}=CountDocs()");
+                            }
+                        }
+                    }
+                }
+                OpKind::TopK { k, score } => {
+                    let _ = write!(s, "k={k} score={score}");
                 }
                 OpKind::SubgraphExec {
                     subgraph_id,
@@ -929,6 +1049,101 @@ mod tests {
         assert_eq!(a.op_counts()["DocScan"], 1);
         assert_eq!(a.outputs.len(), 1);
         assert_eq!(a.nodes[remap[rb]].schema.arity(), 1);
+    }
+
+    #[test]
+    fn group_agg_and_top_k_schemas() {
+        let mut g = Graph::new();
+        let doc = g.add(OpKind::DocScan, vec![]).unwrap();
+        let a = g.add(regex_node("[A-Z][a-z]+"), vec![doc]).unwrap();
+        // keys must come in as Text/Int/Bool — project span -> text first
+        let p = g
+            .add(
+                OpKind::Project {
+                    cols: vec![(
+                        "term".into(),
+                        Expr::Call(Func::GetText, vec![Expr::Col(0)]),
+                    )],
+                },
+                vec![a],
+            )
+            .unwrap();
+        let agg = g
+            .add(
+                OpKind::GroupAgg {
+                    cols: vec![
+                        ("term".into(), AggCol::Key(0)),
+                        ("n".into(), AggCol::Count),
+                        ("docs".into(), AggCol::CountDocs),
+                    ],
+                },
+                vec![p],
+            )
+            .unwrap();
+        let s = &g.nodes[agg].schema;
+        assert_eq!(s.arity(), 3);
+        assert_eq!(s.type_at(0), FieldType::Str);
+        assert_eq!(s.type_at(1), FieldType::Int);
+        assert_eq!(s.type_at(2), FieldType::Int);
+
+        let top = g
+            .add(
+                OpKind::TopK {
+                    k: 5,
+                    score: Expr::Col(1),
+                },
+                vec![agg],
+            )
+            .unwrap();
+        let ts = &g.nodes[top].schema;
+        assert_eq!(ts.arity(), 4);
+        assert_eq!(ts.fields[3].name, "score");
+        assert_eq!(ts.type_at(3), FieldType::Int);
+
+        // validate_node re-derives the new kinds too
+        for n in 0..g.nodes.len() {
+            assert_eq!(g.validate_node(n).unwrap().arity(), g.nodes[n].schema.arity());
+        }
+
+        // rejected shapes: span group key, no keys, k = 0, non-numeric score
+        assert!(g
+            .add(
+                OpKind::GroupAgg {
+                    cols: vec![("m".into(), AggCol::Key(0)), ("n".into(), AggCol::Count)],
+                },
+                vec![a],
+            )
+            .is_err());
+        assert!(g
+            .add(
+                OpKind::GroupAgg {
+                    cols: vec![("n".into(), AggCol::Count)],
+                },
+                vec![p],
+            )
+            .is_err());
+        assert!(g
+            .add(
+                OpKind::TopK {
+                    k: 0,
+                    score: Expr::Col(1),
+                },
+                vec![agg],
+            )
+            .is_err());
+        assert!(g
+            .add(
+                OpKind::TopK {
+                    k: 3,
+                    score: Expr::Col(0),
+                },
+                vec![agg],
+            )
+            .is_err());
+
+        let d = g.dump();
+        assert!(d.contains("GroupAgg"), "{d}");
+        assert!(d.contains("k=5"), "{d}");
     }
 
     #[test]

@@ -16,5 +16,5 @@ pub mod graph;
 pub mod types;
 
 pub use expr::{EvalCtx, Expr, Func};
-pub use graph::{Graph, GraphError, Node, NodeId, OpKind};
+pub use graph::{AggCol, Graph, GraphError, Node, NodeId, OpKind};
 pub use types::{Field, FieldType, Schema, Tuple, Value};

@@ -108,7 +108,8 @@ pub enum ExtractKind {
     },
 }
 
-/// `select items from sources [where preds] [consolidate ...] [order by] [limit]`
+/// `select items from sources [where preds] [consolidate ...]
+/// [group by cols] [score expr] [top k] [order by] [limit]`
 #[derive(Debug, Clone, PartialEq)]
 pub struct SelectStmt {
     /// The select list.
@@ -119,6 +120,13 @@ pub struct SelectStmt {
     pub preds: Vec<AqlExpr>,
     /// `consolidate on <output col> using '<policy>'`.
     pub consolidate: Option<(String, ConsolidatePolicy)>,
+    /// `group by` output column names (corpus-level aggregation).
+    pub group_by: Vec<String>,
+    /// `score <expr>` over the aggregate's output columns (bare
+    /// identifiers; parsed with `alias: ""`).
+    pub score: Option<AqlExpr>,
+    /// `top <k>` — bounded top-k by score, descending.
+    pub top_k: Option<usize>,
     /// `order by` output column names.
     pub order_by: Vec<String>,
     /// `limit <n>`.

@@ -11,7 +11,7 @@ use std::fmt;
 use std::sync::Arc;
 
 use crate::aog::expr::{CmpOp, Expr, Func};
-use crate::aog::{Graph, GraphError, NodeId, OpKind, Schema};
+use crate::aog::{AggCol, FieldType, Graph, GraphError, NodeId, OpKind, Schema};
 use crate::dict::{AhoCorasick, Dictionary};
 
 use super::ast::*;
@@ -46,6 +46,25 @@ pub enum CompileError {
     /// structured [`GraphError`] so callers see the node id and operator
     /// kind, not a flattened message.
     Graph(GraphError),
+    /// `group by` named an output column the select list does not produce.
+    GroupByUnknownColumn(String),
+    /// A group key has a non-groupable type (span or float). Group keys
+    /// must be Text, Integer or Boolean — wrap spans in `GetText(...)`.
+    GroupByBadType {
+        /// The offending output column name.
+        col: String,
+        /// Its inferred type.
+        ty: String,
+    },
+    /// `top 0` — the bounded top-k needs k >= 1.
+    TopKZero,
+    /// The `score` expression does not evaluate to a number.
+    ScoreNotNumeric(String),
+    /// An aggregate was used where no aggregate may appear: `Count()` /
+    /// `CountDocs()` outside a `group by` select list, `score`/`top`
+    /// without `group by`, or a corpus-level (aggregated) view feeding a
+    /// per-document context.
+    AggregateContext(String),
     /// Syntactically valid AQL outside the supported subset.
     Unsupported(String),
 }
@@ -65,6 +84,19 @@ impl fmt::Display for CompileError {
             CompileError::DuplicateName(n) => write!(f, "duplicate definition of '{n}'"),
             CompileError::Regex(m) => write!(f, "{m}"),
             CompileError::Graph(e) => write!(f, "{e}"),
+            CompileError::GroupByUnknownColumn(c) => {
+                write!(f, "group by references unknown output column '{c}'")
+            }
+            CompileError::GroupByBadType { col, ty } => write!(
+                f,
+                "group by column '{col}' has type {ty}; keys must be Text, Integer or \
+                 Boolean (wrap spans in GetText)"
+            ),
+            CompileError::TopKZero => write!(f, "top k must be at least 1"),
+            CompileError::ScoreNotNumeric(t) => {
+                write!(f, "score expression has type {t}; want Integer or Float")
+            }
+            CompileError::AggregateContext(m) => write!(f, "aggregate misuse: {m}"),
             CompileError::Unsupported(m) => write!(f, "unsupported: {m}"),
         }
     }
@@ -199,12 +231,24 @@ fn compile_body(
                 .iter()
                 .map(|p| compile_body(p, g, cat))
                 .collect::<Result<Vec<_>, _>>()?;
+            for &n in &nodes {
+                if is_corpus_level(g, n) {
+                    return Err(CompileError::AggregateContext(
+                        "a corpus-level (group by) select cannot appear under union".into(),
+                    ));
+                }
+            }
             g.add(OpKind::Union, nodes)
                 .map_err(CompileError::Graph)
         }
         ViewBody::Minus(lhs, rhs) => {
             let l = compile_body(lhs, g, cat)?;
             let r = compile_body(rhs, g, cat)?;
+            if is_corpus_level(g, l) || is_corpus_level(g, r) {
+                return Err(CompileError::AggregateContext(
+                    "a corpus-level (group by) select cannot appear under minus".into(),
+                ));
+            }
             g.add(OpKind::Difference, vec![l, r])
                 .map_err(CompileError::Graph)
         }
@@ -215,10 +259,18 @@ fn compile_body(
                         "block over Document — block a view column".into(),
                     ))
                 }
-                SourceRef::View(v) => *cat
-                    .views
-                    .get(v)
-                    .ok_or_else(|| CompileError::UnknownView(v.clone()))?,
+                SourceRef::View(v) => {
+                    let n = *cat
+                        .views
+                        .get(v)
+                        .ok_or_else(|| CompileError::UnknownView(v.clone()))?;
+                    if is_corpus_level(g, n) {
+                        return Err(CompileError::AggregateContext(format!(
+                            "view '{v}' is corpus-level and cannot feed a per-document block"
+                        )));
+                    }
+                    n
+                }
             };
             let schema = &g.nodes[node].schema;
             let col = schema.index_of(&b.col).ok_or_else(|| {
@@ -325,10 +377,18 @@ fn compile_select(
     for (src, alias) in &s.sources {
         let node = match src {
             SourceRef::Document => cat.doc_scan(g),
-            SourceRef::View(v) => *cat
-                .views
-                .get(v)
-                .ok_or_else(|| CompileError::UnknownView(v.clone()))?,
+            SourceRef::View(v) => {
+                let n = *cat
+                    .views
+                    .get(v)
+                    .ok_or_else(|| CompileError::UnknownView(v.clone()))?;
+                if is_corpus_level(g, n) {
+                    return Err(CompileError::AggregateContext(format!(
+                        "view '{v}' is corpus-level and cannot feed a per-document select"
+                    )));
+                }
+                n
+            }
         };
         let schema = g.nodes[node].schema.clone();
         if scope.entries.iter().any(|(a, _, _)| a == alias) {
@@ -372,33 +432,38 @@ fn compile_select(
             .map_err(CompileError::Graph)?;
     }
 
-    // Projection.
-    let mut cols = Vec::with_capacity(s.items.len());
-    for item in &s.items {
-        cols.push((item.name.clone(), resolve_expr(&item.expr, &scope)?));
-    }
-    cur = g
-        .add(OpKind::Project { cols }, vec![cur])
-        .map_err(CompileError::Graph)?;
-
-    // Consolidation over an output column.
-    if let Some((col_name, policy)) = &s.consolidate {
-        let schema = &g.nodes[cur].schema;
-        let col = schema.index_of(col_name).ok_or_else(|| {
-            CompileError::UnknownColumn {
-                alias: "<output>".into(),
-                col: col_name.clone(),
-            }
-        })?;
+    if !s.group_by.is_empty() || s.score.is_some() || s.top_k.is_some() {
+        // Corpus-level aggregation: keys-only Project -> GroupAgg [-> TopK].
+        cur = compile_aggregate(s, g, cur, &scope)?;
+    } else {
+        // Projection.
+        let mut cols = Vec::with_capacity(s.items.len());
+        for item in &s.items {
+            cols.push((item.name.clone(), resolve_expr(&item.expr, &scope)?));
+        }
         cur = g
-            .add(
-                OpKind::Consolidate {
-                    col,
-                    policy: *policy,
-                },
-                vec![cur],
-            )
+            .add(OpKind::Project { cols }, vec![cur])
             .map_err(CompileError::Graph)?;
+
+        // Consolidation over an output column.
+        if let Some((col_name, policy)) = &s.consolidate {
+            let schema = &g.nodes[cur].schema;
+            let col = schema.index_of(col_name).ok_or_else(|| {
+                CompileError::UnknownColumn {
+                    alias: "<output>".into(),
+                    col: col_name.clone(),
+                }
+            })?;
+            cur = g
+                .add(
+                    OpKind::Consolidate {
+                        col,
+                        policy: *policy,
+                    },
+                    vec![cur],
+                )
+                .map_err(CompileError::Graph)?;
+        }
     }
 
     // Order by / limit.
@@ -426,6 +491,156 @@ fn compile_select(
     Ok(cur)
 }
 
+/// Lower the `group by` / `score` / `top` tail of a select into a
+/// keys-only [`OpKind::Project`], an [`OpKind::GroupAgg`], and (with
+/// `top k`) an [`OpKind::TopK`]. `input` is the node after joins and
+/// `where` filtering; `scope` resolves select-list expressions against it.
+fn compile_aggregate(
+    s: &SelectStmt,
+    g: &mut Graph,
+    input: NodeId,
+    scope: &Scope,
+) -> Result<NodeId, CompileError> {
+    if s.group_by.is_empty() {
+        return Err(CompileError::AggregateContext(
+            "'score' and 'top' require a 'group by' clause".into(),
+        ));
+    }
+    if s.consolidate.is_some() {
+        return Err(CompileError::Unsupported(
+            "consolidate combined with group by (consolidate spans in an upstream view)".into(),
+        ));
+    }
+    // Classify the select list: aggregate calls vs group-key expressions.
+    let as_agg = |e: &AqlExpr| -> Option<AggCol> {
+        match e {
+            AqlExpr::Call { func, args } if args.is_empty() && func == "Count" => {
+                Some(AggCol::Count)
+            }
+            AqlExpr::Call { func, args } if args.is_empty() && func == "CountDocs" => {
+                Some(AggCol::CountDocs)
+            }
+            _ => None,
+        }
+    };
+    let mut key_cols: Vec<(String, Expr)> = Vec::new();
+    let mut cols: Vec<(String, AggCol)> = Vec::with_capacity(s.items.len());
+    for item in &s.items {
+        if let Some(a) = as_agg(&item.expr) {
+            cols.push((item.name.clone(), a));
+        } else {
+            if !s.group_by.contains(&item.name) {
+                return Err(CompileError::AggregateContext(format!(
+                    "select column '{}' is neither an aggregate nor listed in group by",
+                    item.name
+                )));
+            }
+            let e = resolve_expr(&item.expr, scope)?;
+            cols.push((item.name.clone(), AggCol::Key(key_cols.len())));
+            key_cols.push((item.name.clone(), e));
+        }
+    }
+    for gcol in &s.group_by {
+        if !s.items.iter().any(|i| &i.name == gcol) {
+            return Err(CompileError::GroupByUnknownColumn(gcol.clone()));
+        }
+    }
+    let first_agg = cols
+        .iter()
+        .position(|(_, c)| !matches!(c, AggCol::Key(_)))
+        .ok_or_else(|| {
+            CompileError::AggregateContext(
+                "group by requires at least one aggregate (Count() or CountDocs()) in the \
+                 select list"
+                    .into(),
+            )
+        })?;
+    // Key types must be groupable — checked here, before graph
+    // construction, so the diagnostic names the AQL column.
+    let in_schema = g.nodes[input].schema.clone();
+    for (name, e) in &key_cols {
+        let ty = e.infer_type(&in_schema).map_err(|err| {
+            CompileError::Graph(GraphError::Type {
+                node: g.nodes.len(),
+                op: "GroupAgg",
+                err,
+            })
+        })?;
+        if !matches!(ty, FieldType::Str | FieldType::Int | FieldType::Bool) {
+            return Err(CompileError::GroupByBadType {
+                col: name.clone(),
+                ty: ty.to_string(),
+            });
+        }
+    }
+    let proj = g
+        .add(OpKind::Project { cols: key_cols }, vec![input])
+        .map_err(CompileError::Graph)?;
+    let mut cur = g
+        .add(OpKind::GroupAgg { cols }, vec![proj])
+        .map_err(CompileError::Graph)?;
+
+    if s.top_k.is_none() && s.score.is_some() {
+        return Err(CompileError::AggregateContext(
+            "'score' without 'top k' has no effect — add 'top <k>' or drop the score".into(),
+        ));
+    }
+    if let Some(k) = s.top_k {
+        if k == 0 {
+            return Err(CompileError::TopKZero);
+        }
+        let agg_schema = g.nodes[cur].schema.clone();
+        let score = match &s.score {
+            Some(e) => {
+                // bare identifiers in the score clause resolve against the
+                // aggregate's output schema (parser emits alias "")
+                let sscope = Scope {
+                    entries: vec![(String::new(), 0, agg_schema.clone())],
+                };
+                resolve_expr(e, &sscope)?
+            }
+            None => Expr::Col(first_agg),
+        };
+        let ty = score.infer_type(&agg_schema).map_err(|err| {
+            CompileError::Graph(GraphError::Type {
+                node: g.nodes.len(),
+                op: "TopK",
+                err,
+            })
+        })?;
+        if !matches!(ty, FieldType::Int | FieldType::Float) {
+            return Err(CompileError::ScoreNotNumeric(ty.to_string()));
+        }
+        cur = g
+            .add(OpKind::TopK { k, score }, vec![cur])
+            .map_err(CompileError::Graph)?;
+    }
+    Ok(cur)
+}
+
+/// True when `node`'s subtree contains a corpus-level operator
+/// ([`OpKind::GroupAgg`] / [`OpKind::TopK`]) — such a view only exists
+/// after the whole corpus is merged at `Session::finish()`, so it cannot
+/// feed a per-document pipeline.
+fn is_corpus_level(g: &Graph, node: NodeId) -> bool {
+    let mut seen = vec![false; node + 1];
+    let mut stack = vec![node];
+    while let Some(n) = stack.pop() {
+        if seen[n] {
+            continue;
+        }
+        seen[n] = true;
+        if matches!(
+            g.nodes[n].kind,
+            OpKind::GroupAgg { .. } | OpKind::TopK { .. }
+        ) {
+            return true;
+        }
+        stack.extend(g.nodes[n].inputs.iter().copied());
+    }
+    false
+}
+
 fn resolve_expr(e: &AqlExpr, scope: &Scope) -> Result<Expr, CompileError> {
     Ok(match e {
         AqlExpr::ColRef { alias, col } => Expr::Col(scope.resolve(alias, col)?),
@@ -433,6 +648,15 @@ fn resolve_expr(e: &AqlExpr, scope: &Scope) -> Result<Expr, CompileError> {
         AqlExpr::Str(s) => Expr::LitStr(s.as_str().into()),
         AqlExpr::Bool(b) => Expr::LitBool(*b),
         AqlExpr::Call { func, args } => {
+            if func == "Count" || func == "CountDocs" {
+                // aggregates are classified out of the select list by
+                // compile_aggregate before expressions are resolved; one
+                // reaching here sits in a per-document context
+                return Err(CompileError::AggregateContext(format!(
+                    "aggregate {func}() is only valid as a top-level select item with \
+                     'group by'"
+                )));
+            }
             let f = Func::parse(func)
                 .ok_or_else(|| CompileError::UnknownFunction(func.clone()))?;
             let args = args
@@ -629,6 +853,127 @@ mod tests {
         // ...but in-program resolution stayed unqualified: the same source
         // compiles under any namespace
         assert!(compile_program_ns(&program, Some("other")).is_ok());
+    }
+
+    const AGG_PREFIX: &str = "create view E as \
+         extract regex /[A-Z][a-z]+/ on d.text as m from Document d; ";
+
+    #[test]
+    fn group_by_top_k_lowers() {
+        let g = compile(&format!(
+            "{AGG_PREFIX}\
+             create view Top as \
+             select GetText(e.m) as term, Count() as n, CountDocs() as docs \
+             from E e group by term score n top 10; \
+             output view Top;"
+        ))
+        .unwrap();
+        let counts = g.op_counts();
+        assert_eq!(counts["GroupAgg"], 1);
+        assert_eq!(counts["TopK"], 1);
+        let (_, out) = &g.outputs[0];
+        // term, n, docs, score
+        assert_eq!(g.nodes[*out].schema.arity(), 4);
+        assert_eq!(g.nodes[*out].schema.fields[3].name, "score");
+    }
+
+    #[test]
+    fn group_by_without_top_lowers_to_group_agg_only() {
+        let g = compile(&format!(
+            "{AGG_PREFIX}\
+             create view DF as select GetText(e.m) as t, CountDocs() as docs \
+             from E e group by t; \
+             output view DF;"
+        ))
+        .unwrap();
+        assert_eq!(g.op_counts()["GroupAgg"], 1);
+        assert!(!g.op_counts().contains_key("TopK"));
+    }
+
+    #[test]
+    fn top_without_score_defaults_to_first_aggregate() {
+        let g = compile(&format!(
+            "{AGG_PREFIX}\
+             create view T as select GetText(e.m) as t, Count() as n \
+             from E e group by t top 3; \
+             output view T;"
+        ))
+        .unwrap();
+        let (_, out) = &g.outputs[0];
+        assert!(matches!(
+            &g.nodes[*out].kind,
+            OpKind::TopK { k: 3, score: Expr::Col(1) }
+        ));
+    }
+
+    #[test]
+    fn error_group_by_unknown_column() {
+        let err = compile(&format!(
+            "{AGG_PREFIX}\
+             create view V as select GetText(e.m) as t, Count() as n \
+             from E e group by zzz;"
+        ))
+        .unwrap_err();
+        assert!(matches!(err, CompileError::GroupByUnknownColumn(_)), "{err}");
+    }
+
+    #[test]
+    fn error_group_by_span_column() {
+        let err = compile(&format!(
+            "{AGG_PREFIX}\
+             create view V as select e.m as t, Count() as n from E e group by t;"
+        ))
+        .unwrap_err();
+        assert!(matches!(err, CompileError::GroupByBadType { .. }), "{err}");
+    }
+
+    #[test]
+    fn error_top_k_zero() {
+        let err = compile(&format!(
+            "{AGG_PREFIX}\
+             create view V as select GetText(e.m) as t, Count() as n \
+             from E e group by t top 0;"
+        ))
+        .unwrap_err();
+        assert!(matches!(err, CompileError::TopKZero), "{err}");
+    }
+
+    #[test]
+    fn error_score_not_numeric() {
+        let err = compile(&format!(
+            "{AGG_PREFIX}\
+             create view V as select GetText(e.m) as t, Count() as n \
+             from E e group by t score t top 5;"
+        ))
+        .unwrap_err();
+        assert!(matches!(err, CompileError::ScoreNotNumeric(_)), "{err}");
+    }
+
+    #[test]
+    fn error_aggregate_in_per_doc_context() {
+        // Count() without group by
+        let err = compile(&format!(
+            "{AGG_PREFIX}create view V as select Count() as n from E e;"
+        ))
+        .unwrap_err();
+        assert!(matches!(err, CompileError::AggregateContext(_)), "{err}");
+
+        // aggregate view feeding a per-document select
+        let err = compile(&format!(
+            "{AGG_PREFIX}\
+             create view DF as select GetText(e.m) as t, Count() as n \
+             from E e group by t; \
+             create view V as select a.t as t from DF a;"
+        ))
+        .unwrap_err();
+        assert!(matches!(err, CompileError::AggregateContext(_)), "{err}");
+
+        // score/top without group by
+        let err = compile(&format!(
+            "{AGG_PREFIX}create view V as select e.m as m from E e top 5;"
+        ))
+        .unwrap_err();
+        assert!(matches!(err, CompileError::AggregateContext(_)), "{err}");
     }
 
     #[test]

@@ -73,6 +73,7 @@ const KEYWORDS: &[&str] = &[
     "create", "view", "dictionary", "as", "extract", "regex", "on", "from", "select", "where",
     "and", "or", "not", "output", "consolidate", "using", "union", "all", "with", "case",
     "exact", "insensitive", "flags", "order", "by", "limit", "document", "true", "false", "minus", "block", "gap", "min", "file",
+    "group", "top", "score",
 ];
 
 /// Tokenize an AQL source string.

@@ -29,11 +29,19 @@ impl std::error::Error for ParseErr {}
 struct P<'a> {
     toks: &'a [Token],
     i: usize,
+    /// Inside a `score` clause bare identifiers are column references
+    /// into the aggregate's output schema (there is no alias to qualify
+    /// them with); everywhere else a bare identifier is an error.
+    bare_cols: bool,
 }
 
 /// Parse a token stream into a [`Program`].
 pub fn parse_program(toks: &[Token]) -> Result<Program, ParseErr> {
-    let mut p = P { toks, i: 0 };
+    let mut p = P {
+        toks,
+        i: 0,
+        bare_cols: false,
+    };
     let mut statements = Vec::new();
     while !p.at_end() {
         statements.push(p.statement()?);
@@ -350,6 +358,36 @@ impl<'a> P<'a> {
             }
             consolidate = Some((col, policy));
         }
+        let mut group_by = Vec::new();
+        if self.eat_kw("group") {
+            self.expect_kw("by")?;
+            // targets are *output column* names (post-projection), like
+            // consolidate and order by
+            loop {
+                group_by.push(self.ident_or_text()?);
+                if !self.eat(&TokenKind::Comma) {
+                    break;
+                }
+            }
+        }
+        let mut score = None;
+        if self.eat_kw("score") {
+            self.bare_cols = true;
+            let e = self.expr();
+            self.bare_cols = false;
+            score = Some(e?);
+        }
+        let mut top_k = None;
+        if self.eat_kw("top") {
+            match self.bump() {
+                // 0 parses; the compiler rejects it with a diagnostic
+                Some(TokenKind::Int(n)) if *n >= 0 => top_k = Some(*n as usize),
+                _ => {
+                    self.i -= 1;
+                    return Err(self.err("expected non-negative integer after 'top'"));
+                }
+            }
+        }
         let mut order_by = Vec::new();
         if self.eat_kw("order") {
             self.expect_kw("by")?;
@@ -375,6 +413,9 @@ impl<'a> P<'a> {
             sources,
             preds,
             consolidate,
+            group_by,
+            score,
+            top_k,
             order_by,
             limit,
         })
@@ -507,6 +548,12 @@ impl<'a> P<'a> {
                     }
                     self.expect(&TokenKind::RParen, "')'")?;
                     return Ok(AqlExpr::Call { func: name, args });
+                }
+                if self.bare_cols {
+                    return Ok(AqlExpr::ColRef {
+                        alias: String::new(),
+                        col: name,
+                    });
                 }
                 Err(self.err(format!(
                     "bare identifier '{name}' — expected alias.column or Function(...)"
@@ -691,6 +738,80 @@ mod tests {
             "create view V as extract regex /a/ on d.text as m from Document x;"
         )
         .unwrap())
+        .is_err());
+    }
+
+    #[test]
+    fn group_by_score_top_clauses() {
+        let p = parse(
+            "create view V as \
+             select GetText(e.m) as term, Count() as n, CountDocs() as docs \
+             from E e \
+             group by term \
+             score n \
+             top 10;",
+        );
+        match &p.statements[0] {
+            Statement::CreateView {
+                body: ViewBody::Select(s),
+                ..
+            } => {
+                assert_eq!(s.group_by, vec!["term".to_string()]);
+                assert_eq!(
+                    s.score,
+                    Some(AqlExpr::ColRef {
+                        alias: String::new(),
+                        col: "n".into()
+                    })
+                );
+                assert_eq!(s.top_k, Some(10));
+                assert!(matches!(
+                    &s.items[1].expr,
+                    AqlExpr::Call { func, args } if func == "Count" && args.is_empty()
+                ));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn group_by_without_top() {
+        let p = parse(
+            "create view V as select h.d as dict, Count() as n from H h group by dict;",
+        );
+        match &p.statements[0] {
+            Statement::CreateView {
+                body: ViewBody::Select(s),
+                ..
+            } => {
+                assert_eq!(s.group_by, vec!["dict".to_string()]);
+                assert_eq!(s.score, None);
+                assert_eq!(s.top_k, None);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn top_zero_parses_bare_identifiers_do_not_leak() {
+        // `top 0` is a parse-level success (the compiler rejects it)
+        let p = parse(
+            "create view V as select GetText(e.m) as t, Count() as n from E e \
+             group by t score n top 0;",
+        );
+        match &p.statements[0] {
+            Statement::CreateView {
+                body: ViewBody::Select(s),
+                ..
+            } => assert_eq!(s.top_k, Some(0)),
+            other => panic!("{other:?}"),
+        }
+        // outside `score`, bare identifiers still error
+        assert!(parse_program(&lex("create view V as select n from P p;").unwrap()).is_err());
+        // and 'top' wants an integer
+        assert!(parse_program(
+            &lex("create view V as select Count() as n from P p group by n top x;").unwrap()
+        )
         .is_err());
     }
 

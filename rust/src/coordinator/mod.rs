@@ -39,7 +39,7 @@ use anyhow::{anyhow, Result};
 use crate::accel::{AccelOptions, AccelService, AccelSubgraphRunner};
 use crate::aog::{Graph, Tuple};
 use crate::corpus::Corpus;
-use crate::exec::{DocResult, ExecStrategy, Executor, Profile, Profiler, ViewHandle};
+use crate::exec::{CorpusResult, DocResult, ExecStrategy, Executor, Profile, Profiler, ViewHandle};
 use crate::hwcompiler::{compile_subgraph, AccelConfig, ArtifactKey, BLOCK_SIZES};
 use crate::metrics::{AccelDeviceSnapshot, AccelSnapshot, PoolSnapshot, QueueSnapshot};
 use crate::partition::{partition, PartitionMode, PartitionPlan, SoftwareSubgraphRunner};
@@ -244,7 +244,7 @@ impl CatalogBuilder {
     }
 
     /// Register one of the built-in evaluation queries
-    /// ([`crate::queries::builtin`]: `t1`‥`t5`) under its own name.
+    /// ([`crate::queries::builtin`]: `t1`‥`t7`) under its own name.
     /// Unknown names error at [`CatalogBuilder::build`].
     pub fn register_builtin(mut self, name: impl Into<String>) -> CatalogBuilder {
         self.entries.push((name.into(), EntrySource::Builtin));
@@ -899,6 +899,12 @@ pub struct RunReport {
     pub threads: usize,
     /// Accelerator counters, when a service was attached.
     pub accel: Option<AccelSnapshot>,
+    /// Finished corpus-level aggregate tables (`group by` / `top k`
+    /// views), one entry per aggregate output view, built by merging
+    /// every worker's [`crate::exec::AggPartial`]s at drain time. Empty
+    /// when the catalog has no aggregate views. Deterministic for any
+    /// worker count and document arrival order.
+    pub corpus: Vec<CorpusResult>,
 }
 
 impl RunReport {
@@ -1003,6 +1009,31 @@ mod tests {
         let r1 = engine.run_corpus(&corpus, 1);
         let r8 = engine.run_corpus(&corpus, 8);
         assert_eq!(r1.tuples, r8.tuples);
+    }
+
+    #[test]
+    fn run_report_corpus_aggregates_are_thread_invariant() {
+        let aql = "create view E as extract regex /[A-Z][a-z]+/ on d.text as m \
+                   from Document d; \
+                   create view Top as select GetText(e.m) as term, Count() as n, \
+                   CountDocs() as docs from E e group by term score n top 5; \
+                   output view Top;";
+        let engine = Engine::compile_aql(aql).unwrap();
+        let corpus = CorpusSpec::news(20, 512).generate();
+        let r1 = engine.run_corpus(&corpus, 1);
+        let r8 = engine.run_corpus(&corpus, 8);
+        assert_eq!(r1.corpus.len(), 1);
+        assert_eq!(r1.corpus[0].view, "Top");
+        assert!(!r1.corpus[0].rows.is_empty());
+        assert!(r1.corpus[0].rows.len() <= 5);
+        // byte-identical finished table regardless of worker count
+        assert_eq!(
+            format!("{:?}", r1.corpus[0].rows),
+            format!("{:?}", r8.corpus[0].rows)
+        );
+        // a catalog without aggregate views reports an empty corpus table
+        let plain = Engine::compile_aql(&t1_aql()).unwrap();
+        assert!(plain.run_corpus(&corpus, 2).corpus.is_empty());
     }
 
     #[test]
@@ -1321,6 +1352,7 @@ mod tests {
             wall: Duration::from_millis(100),
             threads: 2,
             accel: None,
+            corpus: Vec::new(),
         };
         assert!((r.throughput() - 1.0e7).abs() < 1.0);
         assert!((r.docs_per_sec() - 100.0).abs() < 1e-6);

@@ -32,7 +32,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::accel::AccelService;
-use crate::exec::{DocResult, Executor, ViewHandle};
+use crate::exec::{CorpusAgg, DocResult, Executor, ViewHandle};
 use crate::metrics::QueueSnapshot;
 use crate::runtime::chaos::{ChaosAction, ChaosPlan};
 use crate::runtime::fault::{self, DocError, Quarantine, Watchdog};
@@ -308,6 +308,11 @@ impl SessionBuilder {
                     // returned (and buffers this worker ships through the
                     // accelerator come home to the same shard)
                     crate::exec::batch::pin_thread(crate::exec::batch::ArenaId::for_worker(w));
+                    // corpus-level aggregate state accumulated by THIS
+                    // worker only; merged with the other workers' partials
+                    // at drain time (merge is commutative + associative,
+                    // so the worker count and arrival order don't matter)
+                    let mut corpus = CorpusAgg::default();
                     loop {
                         if let Some(hb) = &heartbeat {
                             hb.idle(); // blocking on an empty queue is healthy
@@ -325,7 +330,11 @@ impl SessionBuilder {
                             &query_subscriptions,
                             quarantine.as_deref(),
                             chaos.as_deref(),
+                            &mut corpus,
                         );
+                    }
+                    if !corpus.is_empty() {
+                        shared.partials.lock().unwrap().push(corpus);
                     }
                     if let Some(hb) = &heartbeat {
                         hb.retire();
@@ -338,6 +347,7 @@ impl SessionBuilder {
             tx: Some(tx),
             workers,
             shared,
+            executor: self.executor,
             sink: self.sink,
             service: self.service,
             threads,
@@ -369,6 +379,7 @@ fn run_job(
     query_subscriptions: &[(QueryHandle, QueryCallback)],
     quarantine: Option<&Quarantine>,
     chaos: Option<&ChaosPlan>,
+    corpus: &mut CorpusAgg,
 ) {
     let Job {
         doc,
@@ -407,11 +418,11 @@ fn run_job(
                     ChaosAction::None => {}
                 }
             }
-            executor.run_doc(&doc)
+            executor.run_doc_agg(&doc)
         }))
     };
     match outcome {
-        Ok(result) => {
+        Ok((result, delta)) => {
             // post-stage check: the result exists, but an expired budget
             // is still answered as an expiry so clients see one taxonomy
             if let Some(b) = budget {
@@ -421,6 +432,9 @@ fn run_job(
                     return;
                 }
             }
+            // only successful documents contribute to corpus aggregates —
+            // an expired or panicked doc is an error, not a data point
+            corpus.merge(&delta);
             shared.docs.fetch_add(1, Ordering::Relaxed);
             shared.bytes.fetch_add(doc.len() as u64, Ordering::Relaxed);
             shared
@@ -458,6 +472,9 @@ struct Shared {
     /// Documents inside the pipeline (queued or being processed).
     in_flight: AtomicI64,
     max_in_flight: AtomicI64,
+    /// One [`CorpusAgg`] per worker that absorbed at least one document
+    /// with aggregate views; merged (order-invariant) at drain time.
+    partials: Mutex<Vec<CorpusAgg>>,
 }
 
 /// A running push-based pipeline. Feed it with [`Session::push`] /
@@ -467,6 +484,7 @@ pub struct Session {
     tx: Option<QueueTx<Job>>,
     workers: Vec<JoinHandle<()>>,
     shared: Arc<Shared>,
+    executor: Arc<Executor>,
     sink: Arc<dyn ResultSink>,
     service: Option<Arc<AccelService>>,
     threads: usize,
@@ -583,6 +601,18 @@ impl Session {
         for h in self.workers.drain(..) {
             worker_panic |= h.join().is_err();
         }
+        // merge every worker's corpus partial; the merge is commutative
+        // and associative, so the fold order (= worker exit order) is
+        // irrelevant and the finished tables are byte-identical for any
+        // thread count
+        let merged = {
+            let mut partials = self.shared.partials.lock().unwrap();
+            let mut acc = CorpusAgg::default();
+            for p in partials.drain(..) {
+                acc.merge(&p);
+            }
+            acc
+        };
         let report = RunReport {
             docs: self.shared.docs.load(Ordering::Relaxed) as usize,
             bytes: self.shared.bytes.load(Ordering::Relaxed) as usize,
@@ -592,6 +622,7 @@ impl Session {
             wall: self.started.elapsed(),
             threads: self.threads,
             accel: self.service.as_ref().map(|s| s.metrics().snapshot()),
+            corpus: self.executor.corpus_results(&merged),
         };
         self.sink.on_finish(&report);
         (report, worker_panic)

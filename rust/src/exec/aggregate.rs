@@ -1,0 +1,368 @@
+//! Corpus-level aggregation: the merge-friendly partial behind
+//! [`OpKind::GroupAgg`](crate::aog::OpKind::GroupAgg) and the bounded
+//! top-k selection behind [`OpKind::TopK`](crate::aog::OpKind::TopK).
+//!
+//! Per-document execution treats each document as a **corpus of one**:
+//! the operator absorbs the document's rows into a fresh [`AggPartial`]
+//! and emits `finish()` immediately, so `run_doc` stays a pure
+//! per-document function and DocResult/serve/golden outputs remain
+//! byte-identical across execution routes. The executor additionally
+//! exports the per-document partial; the session coordinator merges one
+//! partial per worker and finishes the merged state once at
+//! `Session::finish()` — see [`AggPartial::merge`], which is associative
+//! and commutative, so worker count, partition mode and arrival order
+//! cannot change the corpus-level result.
+//!
+//! State lives in ordinary heap `HashMap`s, **not** in the columnar
+//! arena: arena buffers are per-document and return to their origin shard
+//! when a batch drops, while aggregate state must outlive every document
+//! and cross worker threads at merge time. Only the `finish()` output
+//! rematerializes as a [`TupleBatch`].
+
+use std::cmp::Ordering;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use crate::aog::{AggCol, EvalCtx, Expr, Schema, Tuple, Value};
+
+use super::batch::TupleBatch;
+use super::operators::cmp_values;
+
+/// One group-key cell, hashable and totally ordered. A group column is
+/// schema-typed (Text, Integer or Boolean — enforced by
+/// `derive_schema`), so cross-variant comparisons only arise against
+/// `Null`, which the variant order sorts last (matching
+/// [`cmp_values`]' nulls-last convention).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KeyPart {
+    /// An integer key cell.
+    Int(i64),
+    /// A boolean key cell.
+    Bool(bool),
+    /// A text key cell (`Arc<str>` hashes/orders by bytes).
+    Str(Arc<str>),
+    /// A null key cell (sorts last).
+    Null,
+}
+
+impl KeyPart {
+    fn from_value(v: &Value) -> KeyPart {
+        match v {
+            Value::Int(n) => KeyPart::Int(*n),
+            Value::Bool(b) => KeyPart::Bool(*b),
+            Value::Str(s) => KeyPart::Str(s.clone()),
+            Value::Null => KeyPart::Null,
+            other => panic!(
+                "non-groupable key value {other:?} — schema derivation admits only \
+                 Text/Integer/Boolean keys"
+            ),
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        match self {
+            KeyPart::Int(n) => Value::Int(*n),
+            KeyPart::Bool(b) => Value::Bool(*b),
+            KeyPart::Str(s) => Value::Str(s.clone()),
+            KeyPart::Null => Value::Null,
+        }
+    }
+}
+
+/// Accumulator of one group.
+#[derive(Debug, Clone, Copy, Default)]
+struct Acc {
+    /// Total matching rows (`Count()`).
+    count: u64,
+    /// Documents contributing at least one row (`CountDocs()`).
+    docs: u64,
+}
+
+/// Mergeable hash-aggregate state for one `GroupAgg` node.
+///
+/// Lifecycle: `new` → any number of [`absorb_doc`](AggPartial::absorb_doc)
+/// / [`merge`](AggPartial::merge) calls, in any order and sharding →
+/// [`finish`](AggPartial::finish). Merge is associative and commutative
+/// (both counters are sums), and `finish` sorts groups by key, so the
+/// output is a pure function of the absorbed multiset of documents.
+#[derive(Debug, Clone)]
+pub struct AggPartial {
+    /// Output column spec, in select-list order.
+    cols: Vec<(String, AggCol)>,
+    /// The `GroupAgg` node's output schema (for `finish`).
+    schema: Schema,
+    /// Input column indices of the keys, in key order.
+    key_idx: Vec<usize>,
+    groups: HashMap<Vec<KeyPart>, Acc>,
+}
+
+impl AggPartial {
+    /// Empty state for a `GroupAgg` node's column spec and output schema.
+    pub fn new(cols: &[(String, AggCol)], schema: &Schema) -> AggPartial {
+        let key_idx = cols
+            .iter()
+            .filter_map(|(_, c)| match c {
+                AggCol::Key(j) => Some(*j),
+                _ => None,
+            })
+            .collect();
+        AggPartial {
+            cols: cols.to_vec(),
+            schema: schema.clone(),
+            key_idx,
+            groups: HashMap::new(),
+        }
+    }
+
+    /// Absorb all rows of ONE document. `Count` advances per row;
+    /// `CountDocs` advances at most once per group per call, which is
+    /// what makes it the document-frequency aggregate.
+    pub fn absorb_doc(&mut self, rows: &[Tuple]) {
+        let mut seen: HashSet<Vec<KeyPart>> = HashSet::new();
+        for row in rows {
+            let key: Vec<KeyPart> = self
+                .key_idx
+                .iter()
+                .map(|&j| KeyPart::from_value(&row[j]))
+                .collect();
+            let acc = self.groups.entry(key.clone()).or_default();
+            acc.count += 1;
+            if seen.insert(key) {
+                acc.docs += 1;
+            }
+        }
+    }
+
+    /// Fold another partial into this one. Associative and commutative:
+    /// both counters are plain sums over disjoint document sets.
+    pub fn merge(&mut self, other: &AggPartial) {
+        for (key, acc) in &other.groups {
+            let mine = self.groups.entry(key.clone()).or_default();
+            mine.count += acc.count;
+            mine.docs += acc.docs;
+        }
+    }
+
+    /// Number of distinct groups seen so far.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// True when no rows were absorbed.
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Materialize the final aggregate: one row per group, sorted by key
+    /// ascending, columns in the node's select-list order.
+    pub fn finish(&self) -> TupleBatch {
+        let mut keys: Vec<&Vec<KeyPart>> = self.groups.keys().collect();
+        keys.sort();
+        let mut rows: Vec<Tuple> = Vec::with_capacity(keys.len());
+        for key in keys {
+            let acc = &self.groups[key];
+            let mut ki = 0usize;
+            let row: Tuple = self
+                .cols
+                .iter()
+                .map(|(_, c)| match c {
+                    AggCol::Key(_) => {
+                        let v = key[ki].to_value();
+                        ki += 1;
+                        v
+                    }
+                    AggCol::Count => Value::Int(acc.count as i64),
+                    AggCol::CountDocs => Value::Int(acc.docs as i64),
+                })
+                .collect();
+            rows.push(row);
+        }
+        TupleBatch::from_rows(&self.schema, &rows)
+    }
+}
+
+/// Evaluate a `GroupAgg` node on one document's input batch: absorb into
+/// a fresh partial, return the corpus-of-one `finish()` output *and* the
+/// partial itself (for the session's cross-document merge). Both
+/// execution strategies call this one implementation, so their outputs
+/// are byte-identical by construction.
+pub fn group_agg_doc(
+    cols: &[(String, AggCol)],
+    schema: &Schema,
+    input: &TupleBatch,
+) -> (TupleBatch, AggPartial) {
+    let mut partial = AggPartial::new(cols, schema);
+    partial.absorb_doc(&input.to_tuples());
+    (partial.finish(), partial)
+}
+
+/// Score descending with nulls last.
+fn cmp_score_desc(a: &Value, b: &Value) -> Ordering {
+    match (matches!(a, Value::Null), matches!(b, Value::Null)) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => cmp_values(b, a),
+    }
+}
+
+/// Bounded top-k over an aggregate batch: score every row, keep the `k`
+/// best by score descending, break ties by the input cells ascending
+/// (text keys compare by bytes) — an explicit total order, so the result
+/// does not depend on the input's arrival order. Output rows carry a
+/// trailing score column (`out_schema` is the `TopK` node's schema).
+pub fn top_k(
+    input: &TupleBatch,
+    k: usize,
+    score: &Expr,
+    out_schema: &Schema,
+    ctx: &EvalCtx<'_>,
+) -> TupleBatch {
+    let mut scored: Vec<(Value, Tuple)> = input
+        .to_tuples()
+        .into_iter()
+        .map(|row| (score.eval(&row, ctx), row))
+        .collect();
+    scored.sort_by(|(sa, ra), (sb, rb)| {
+        cmp_score_desc(sa, sb).then_with(|| {
+            for (x, y) in ra.iter().zip(rb.iter()) {
+                let o = cmp_values(x, y);
+                if o != Ordering::Equal {
+                    return o;
+                }
+            }
+            Ordering::Equal
+        })
+    });
+    scored.truncate(k);
+    let rows: Vec<Tuple> = scored
+        .into_iter()
+        .map(|(s, mut row)| {
+            row.push(s);
+            row
+        })
+        .collect();
+    TupleBatch::from_rows(out_schema, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aog::{Field, FieldType};
+    use crate::text::Tokenizer;
+
+    fn spec() -> (Vec<(String, AggCol)>, Schema) {
+        let cols = vec![
+            ("term".to_string(), AggCol::Key(0)),
+            ("n".to_string(), AggCol::Count),
+            ("docs".to_string(), AggCol::CountDocs),
+        ];
+        let schema = Schema {
+            fields: vec![
+                Field {
+                    name: "term".into(),
+                    ty: FieldType::Str,
+                },
+                Field {
+                    name: "n".into(),
+                    ty: FieldType::Int,
+                },
+                Field {
+                    name: "docs".into(),
+                    ty: FieldType::Int,
+                },
+            ],
+        };
+        (cols, schema)
+    }
+
+    fn doc_rows(terms: &[&str]) -> Vec<Tuple> {
+        terms.iter().map(|t| vec![Value::Str((*t).into())]).collect()
+    }
+
+    #[test]
+    fn count_and_count_docs_differ() {
+        let (cols, schema) = spec();
+        let mut p = AggPartial::new(&cols, &schema);
+        p.absorb_doc(&doc_rows(&["ibm", "ibm", "acme"]));
+        p.absorb_doc(&doc_rows(&["ibm"]));
+        let rows = p.finish().to_tuples();
+        // sorted by key: acme, ibm
+        assert_eq!(rows[0][0], Value::Str("acme".into()));
+        assert_eq!(rows[0][1], Value::Int(1));
+        assert_eq!(rows[0][2], Value::Int(1));
+        assert_eq!(rows[1][0], Value::Str("ibm".into()));
+        assert_eq!(rows[1][1], Value::Int(3)); // three mentions
+        assert_eq!(rows[1][2], Value::Int(2)); // two documents
+    }
+
+    #[test]
+    fn merge_matches_sequential_absorb() {
+        let (cols, schema) = spec();
+        let docs: Vec<Vec<Tuple>> = vec![
+            doc_rows(&["a", "b", "a"]),
+            doc_rows(&["b"]),
+            doc_rows(&["c", "a"]),
+            doc_rows(&[]),
+        ];
+        let mut all = AggPartial::new(&cols, &schema);
+        for d in &docs {
+            all.absorb_doc(d);
+        }
+        // shard docs 2 ways, merge in both orders
+        let mut left = AggPartial::new(&cols, &schema);
+        left.absorb_doc(&docs[0]);
+        left.absorb_doc(&docs[1]);
+        let mut right = AggPartial::new(&cols, &schema);
+        right.absorb_doc(&docs[2]);
+        right.absorb_doc(&docs[3]);
+        let mut lr = left.clone();
+        lr.merge(&right);
+        let mut rl = right.clone();
+        rl.merge(&left);
+        let want = all.finish().to_tuples();
+        assert_eq!(lr.finish().to_tuples(), want);
+        assert_eq!(rl.finish().to_tuples(), want);
+        assert_eq!(all.num_groups(), 3);
+        assert!(!all.is_empty());
+    }
+
+    #[test]
+    fn top_k_orders_by_score_then_key_bytes() {
+        let (cols, schema) = spec();
+        let mut p = AggPartial::new(&cols, &schema);
+        // zz and aa tie at 2 mentions; mid has 3
+        p.absorb_doc(&doc_rows(&["zz", "zz", "aa", "mid"]));
+        p.absorb_doc(&doc_rows(&["aa", "mid", "mid"]));
+        let agg = p.finish();
+        let mut out_schema = schema.clone();
+        out_schema.fields.push(Field {
+            name: "score".into(),
+            ty: FieldType::Int,
+        });
+        let tokens = Tokenizer::standard().tokenize("");
+        let ctx = EvalCtx {
+            text: "",
+            tokens: &tokens,
+        };
+        let rows = top_k(&agg, 2, &Expr::Col(1), &out_schema, &ctx).to_tuples();
+        assert_eq!(rows.len(), 2);
+        // mid (3) first, then the aa/zz tie resolves by term bytes: aa
+        assert_eq!(rows[0][0], Value::Str("mid".into()));
+        assert_eq!(rows[0][3], Value::Int(3));
+        assert_eq!(rows[1][0], Value::Str("aa".into()));
+        assert_eq!(rows[1][3], Value::Int(2));
+        // k larger than the group count keeps everything
+        let all = top_k(&agg, 99, &Expr::Col(1), &out_schema, &ctx);
+        assert_eq!(all.len(), 3);
+    }
+
+    #[test]
+    fn empty_partial_finishes_empty_with_schema() {
+        let (cols, schema) = spec();
+        let p = AggPartial::new(&cols, &schema);
+        let b = p.finish();
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.num_columns(), 3);
+    }
+}

@@ -12,10 +12,12 @@
 //! themselves survive only at the API boundary, where [`DocResult`]
 //! converts lazily on first access.
 
+pub mod aggregate;
 pub mod batch;
 pub mod operators;
 pub mod profiler;
 
+pub use aggregate::{group_agg_doc, top_k, AggPartial, KeyPart};
 pub use batch::{ArenaId, ArenaStats, ColumnData, TupleBatch, TupleRef};
 pub use operators::{cmp_tuples, cmp_values};
 pub use profiler::{Profile, Profiler};
@@ -471,6 +473,51 @@ impl DocOutput {
     }
 }
 
+/// Per-document corpus-aggregation deltas: one [`AggPartial`] per
+/// `GroupAgg` node, keyed by node id. A worker keeps one `CorpusAgg` and
+/// merges each successful document's delta into it; the session merges
+/// the per-worker states at finish. Merging is associative and
+/// commutative, so worker count and arrival order cannot change the
+/// final corpus-level result.
+#[derive(Debug, Clone, Default)]
+pub struct CorpusAgg {
+    partials: HashMap<NodeId, AggPartial>,
+}
+
+impl CorpusAgg {
+    /// Fold another collector into this one (per-node partial merge).
+    pub fn merge(&mut self, other: &CorpusAgg) {
+        for (id, p) in &other.partials {
+            match self.partials.get_mut(id) {
+                Some(mine) => mine.merge(p),
+                None => {
+                    self.partials.insert(*id, p.clone());
+                }
+            }
+        }
+    }
+
+    /// True when no aggregate state has been collected.
+    pub fn is_empty(&self) -> bool {
+        self.partials.is_empty()
+    }
+}
+
+/// Corpus-level result of one aggregated output view, materialized at
+/// `Session::finish()` from the merged worker partials. Row-shaped (not
+/// arena-backed) because it outlives every per-document arena scope and
+/// travels inside `RunReport`.
+#[derive(Debug, Clone)]
+pub struct CorpusResult {
+    /// Qualified output-view name (e.g. `t6.TopEntities`).
+    pub view: String,
+    /// The view's schema.
+    pub schema: Schema,
+    /// Finished aggregate rows (groups sorted by key; top-k by score
+    /// descending).
+    pub rows: Vec<Tuple>,
+}
+
 /// Evaluates a graph over documents. Stateless w.r.t. documents, so one
 /// instance is shared by all worker threads (each thread recycles column
 /// buffers through its home shard of the [`batch`] arena).
@@ -543,6 +590,73 @@ impl Executor {
         self.run_doc_batched(doc, &tokens, &[], &HashMap::new())
     }
 
+    /// Evaluate one document AND export its corpus-aggregation delta (one
+    /// [`AggPartial`] per `GroupAgg` node). The [`DocResult`] is identical
+    /// to [`Executor::run_doc`]'s — aggregated views carry the corpus-of-one
+    /// output for this document — while the returned [`CorpusAgg`] feeds
+    /// the session's cross-document merge. For graphs without aggregate
+    /// nodes the collector comes back empty.
+    pub fn run_doc_agg(&self, doc: &Document) -> (DocResult, CorpusAgg) {
+        let tokens = Tokenizer::standard().tokenize(&doc.text);
+        let mut agg = CorpusAgg::default();
+        let result = match self.strategy {
+            ExecStrategy::Columnar => {
+                self.run_columnar(doc, &tokens, &[], &HashMap::new(), Some(&mut agg))
+            }
+            ExecStrategy::LegacyRows => {
+                self.run_legacy(doc, &tokens, &[], &HashMap::new(), Some(&mut agg))
+            }
+        };
+        (result, agg)
+    }
+
+    /// Materialize every aggregated output view from merged corpus state:
+    /// `GroupAgg` outputs finish their partial; `TopK` outputs finish the
+    /// upstream `GroupAgg` partial and apply the bounded top-k selection.
+    /// Outputs whose partial is missing (e.g. zero successful documents)
+    /// come back as empty, schema-correct rows. Non-aggregated outputs are
+    /// skipped — they stream per document.
+    pub fn corpus_results(&self, agg: &CorpusAgg) -> Vec<CorpusResult> {
+        let mut out = Vec::new();
+        for (name, id) in &self.graph.outputs {
+            let node = &self.graph.nodes[*id];
+            let batch = match &node.kind {
+                OpKind::GroupAgg { cols } => match agg.partials.get(id) {
+                    Some(p) => p.finish(),
+                    None => AggPartial::new(cols, &node.schema).finish(),
+                },
+                OpKind::TopK { k, score } => {
+                    let input = &self.graph.nodes[node.inputs[0]];
+                    let finished = match (&input.kind, agg.partials.get(&input.id)) {
+                        (OpKind::GroupAgg { .. }, Some(p)) => p.finish(),
+                        (OpKind::GroupAgg { cols }, None) => {
+                            AggPartial::new(cols, &input.schema).finish()
+                        }
+                        // TopK over a non-aggregate input has no corpus
+                        // state; it streamed per document
+                        _ => continue,
+                    };
+                    // the aggregate schema carries no spans, so no
+                    // text-touching function can appear in `score` — an
+                    // empty evaluation context is safe
+                    let tokens = Tokenizer::standard().tokenize("");
+                    let ctx = EvalCtx {
+                        text: "",
+                        tokens: &tokens,
+                    };
+                    aggregate::top_k(&finished, *k, score, &node.schema, &ctx)
+                }
+                _ => continue,
+            };
+            out.push(CorpusResult {
+                view: name.clone(),
+                schema: node.schema.clone(),
+                rows: batch.to_tuples(),
+            });
+        }
+        out
+    }
+
     /// Evaluate with injected external inputs (`ExtInput` slots) and node
     /// overrides (node id → precomputed tuples), both row-shaped — the
     /// legacy boundary. Columnar callers (the accelerator post-stage)
@@ -555,7 +669,7 @@ impl Executor {
         overrides: &HashMap<NodeId, Vec<Tuple>>,
     ) -> DocResult {
         match self.strategy {
-            ExecStrategy::LegacyRows => self.run_legacy(doc, tokens, ext, overrides),
+            ExecStrategy::LegacyRows => self.run_legacy(doc, tokens, ext, overrides, None),
             ExecStrategy::Columnar => {
                 let ext_b: Vec<TupleBatch> = ext
                     .iter()
@@ -574,7 +688,7 @@ impl Executor {
                         (id, TupleBatch::from_rows(&self.graph.nodes[id].schema, rows))
                     })
                     .collect();
-                self.run_columnar(doc, tokens, &ext_refs, &ov_b)
+                self.run_columnar(doc, tokens, &ext_refs, &ov_b, None)
             }
         }
     }
@@ -590,7 +704,7 @@ impl Executor {
         overrides: &HashMap<NodeId, TupleBatch>,
     ) -> DocResult {
         match self.strategy {
-            ExecStrategy::Columnar => self.run_columnar(doc, tokens, ext, overrides),
+            ExecStrategy::Columnar => self.run_columnar(doc, tokens, ext, overrides, None),
             ExecStrategy::LegacyRows => {
                 let ext_rows: Vec<Vec<Tuple>> = ext.iter().map(|b| b.to_tuples()).collect();
                 let ext_refs: Vec<&[Tuple]> = ext_rows.iter().map(|v| v.as_slice()).collect();
@@ -598,7 +712,7 @@ impl Executor {
                     .iter()
                     .map(|(&id, b)| (id, b.to_tuples()))
                     .collect();
-                self.run_legacy(doc, tokens, &ext_refs, &ov_rows)
+                self.run_legacy(doc, tokens, &ext_refs, &ov_rows, None)
             }
         }
     }
@@ -611,6 +725,7 @@ impl Executor {
         tokens: &TokenIndex,
         ext: &[&TupleBatch],
         overrides: &HashMap<NodeId, TupleBatch>,
+        mut agg: Option<&mut CorpusAgg>,
     ) -> DocResult {
         let mut slots: Vec<Option<TupleBatch>> = Vec::with_capacity(self.graph.nodes.len());
         slots.resize_with(self.graph.nodes.len(), || None);
@@ -623,7 +738,21 @@ impl Executor {
                 continue;
             }
             let t0 = self.profiler.start();
-            let out = self.eval_node_batch(node.id, doc, tokens, ext, &slots);
+            // with a collector attached, GroupAgg additionally exports its
+            // per-document partial; the emitted batch is identical to the
+            // plain evaluation path (both run aggregate::group_agg_doc)
+            let out = if let (OpKind::GroupAgg { cols }, Some(collector)) =
+                (&node.kind, agg.as_deref_mut())
+            {
+                let input = slots[node.inputs[0]]
+                    .as_ref()
+                    .expect("topological order guarantees inputs are evaluated");
+                let (batch, partial) = aggregate::group_agg_doc(cols, &node.schema, input);
+                collector.partials.insert(node.id, partial);
+                batch
+            } else {
+                self.eval_node_batch(node.id, doc, tokens, ext, &slots)
+            };
             self.profiler.stop(node.id, t0);
             slots[node.id] = Some(out);
         }
@@ -691,6 +820,15 @@ impl Executor {
             } => operators::block_batch(input(0), *col, *max_gap, *min_size),
             OpKind::Sort { keys } => operators::sort_batch(input(0), keys),
             OpKind::Limit { n } => operators::limit_batch(input(0), *n),
+            // corpus of one: absorb this document's rows and finish
+            // immediately (the collecting path in run_columnar also keeps
+            // the partial for the session's cross-document merge)
+            OpKind::GroupAgg { cols } => {
+                aggregate::group_agg_doc(cols, &node.schema, input(0)).0
+            }
+            OpKind::TopK { k, score } => {
+                aggregate::top_k(input(0), *k, score, &node.schema, &ctx)
+            }
             OpKind::SubgraphExec {
                 subgraph_id,
                 output_idx,
@@ -728,6 +866,7 @@ impl Executor {
         tokens: &TokenIndex,
         ext: &[&[Tuple]],
         overrides: &HashMap<NodeId, Vec<Tuple>>,
+        mut agg: Option<&mut CorpusAgg>,
     ) -> DocResult {
         let mut slots: Vec<Option<Vec<Tuple>>> = vec![None; self.graph.nodes.len()];
         for node in &self.graph.nodes {
@@ -739,7 +878,20 @@ impl Executor {
                 continue;
             }
             let t0 = self.profiler.start();
-            let out = self.eval_node_rows(node.id, doc, tokens, ext, &slots);
+            let out = if let (OpKind::GroupAgg { cols }, Some(collector)) =
+                (&node.kind, agg.as_deref_mut())
+            {
+                let in_rows = slots[node.inputs[0]]
+                    .as_deref()
+                    .expect("topological order guarantees inputs are evaluated");
+                let in_schema = &self.graph.nodes[node.inputs[0]].schema;
+                let batch = TupleBatch::from_rows(in_schema, in_rows);
+                let (b, partial) = aggregate::group_agg_doc(cols, &node.schema, &batch);
+                collector.partials.insert(node.id, partial);
+                b.to_tuples()
+            } else {
+                self.eval_node_rows(node.id, doc, tokens, ext, &slots)
+            };
             self.profiler.stop(node.id, t0);
             slots[node.id] = Some(out);
         }
@@ -798,6 +950,18 @@ impl Executor {
             } => operators::block(input(0), *col, *max_gap, *min_size),
             OpKind::Sort { keys } => operators::sort(input(0), keys),
             OpKind::Limit { n } => input(0).iter().take(*n).cloned().collect(),
+            // both strategies run the same aggregate implementation, so
+            // their corpus-of-one outputs are byte-identical
+            OpKind::GroupAgg { cols } => {
+                let in_schema = &self.graph.nodes[node.inputs[0]].schema;
+                let batch = TupleBatch::from_rows(in_schema, input(0));
+                aggregate::group_agg_doc(cols, &node.schema, &batch).0.to_tuples()
+            }
+            OpKind::TopK { k, score } => {
+                let in_schema = &self.graph.nodes[node.inputs[0]].schema;
+                let batch = TupleBatch::from_rows(in_schema, input(0));
+                aggregate::top_k(&batch, *k, score, &node.schema, &ctx).to_tuples()
+            }
             OpKind::SubgraphExec {
                 subgraph_id,
                 output_idx,
@@ -1115,6 +1279,78 @@ mod tests {
         }
         assert_eq!(ExecStrategy::parse("bogus"), None);
         assert_eq!(ExecStrategy::default(), ExecStrategy::Columnar);
+    }
+
+    const TOP_TERMS: &str = "create view E as \
+         extract regex /[A-Z][a-z]+/ on d.text as m from Document d; \
+         create view Top as \
+         select GetText(e.m) as term, Count() as n, CountDocs() as docs \
+         from E e group by term score n top 2; \
+         output view Top;";
+
+    #[test]
+    fn group_agg_runs_as_corpus_of_one_per_doc() {
+        use crate::aog::Value;
+        let ex = engine(TOP_TERMS);
+        let d = doc("Alice met Bob and Alice met Carol and Alice waved");
+        let out = ex.run_doc(&d);
+        let rows = &out["Top"];
+        // top 2 by count: Alice (3), then the Bob/Carol tie resolves by
+        // term bytes -> Bob
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        assert_eq!(rows[0][0], Value::Str("Alice".into()));
+        assert_eq!(rows[0][1], Value::Int(3));
+        assert_eq!(rows[0][2], Value::Int(1));
+        assert_eq!(rows[0][3], Value::Int(3)); // score = n
+        assert_eq!(rows[1][0], Value::Str("Bob".into()));
+    }
+
+    #[test]
+    fn run_doc_agg_exports_partials_that_merge_across_docs() {
+        use crate::aog::Value;
+        let ex = engine(TOP_TERMS);
+        let (r1, mut agg) = ex.run_doc_agg(&doc("Alice met Bob"));
+        let (r2, a2) = ex.run_doc_agg(&doc("Alice met Carol and Alice"));
+        // per-doc results equal the plain run_doc output
+        assert_eq!(r1.views(), ex.run_doc(&doc("Alice met Bob")).views());
+        assert_eq!(r2.total_tuples() > 0, true);
+        assert!(!agg.is_empty());
+        agg.merge(&a2);
+        let corpus = ex.corpus_results(&agg);
+        assert_eq!(corpus.len(), 1);
+        assert_eq!(corpus[0].view, "Top");
+        let rows = &corpus[0].rows;
+        // Alice: 3 mentions across 2 docs
+        assert_eq!(rows[0][0], Value::Str("Alice".into()));
+        assert_eq!(rows[0][1], Value::Int(3));
+        assert_eq!(rows[0][2], Value::Int(2));
+    }
+
+    #[test]
+    fn corpus_results_empty_state_is_schema_correct() {
+        let ex = engine(TOP_TERMS);
+        let corpus = ex.corpus_results(&CorpusAgg::default());
+        assert_eq!(corpus.len(), 1);
+        assert!(corpus[0].rows.is_empty());
+        assert_eq!(corpus[0].schema.arity(), 4);
+    }
+
+    #[test]
+    fn agg_strategies_agree() {
+        let col = engine(TOP_TERMS);
+        let leg = {
+            let g = crate::aql::compile(TOP_TERMS).unwrap();
+            Executor::new(Arc::new(g), Arc::new(Profiler::disabled()))
+                .with_strategy(ExecStrategy::LegacyRows)
+        };
+        for text in ["Alice met Bob and Alice", "nothing lower case", ""] {
+            let d = doc(text);
+            assert_eq!(
+                col.run_doc(&d).views(),
+                leg.run_doc(&d).views(),
+                "strategies diverged on {text:?}"
+            );
+        }
     }
 
     #[test]

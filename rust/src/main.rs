@@ -4,7 +4,7 @@
 //! parsing is hand-rolled):
 //!
 //! ```text
-//! repro queries                         list built-in queries T1–T5
+//! repro queries                         list built-in queries T1–T7
 //! repro check     --queries t1,t2 | --aql f.aql   static plan verifier (E###/W###)
 //! repro explain   --query t1            dump the optimized operator graph + costs
 //! repro explain   --merged [--queries t1,t2]  dump the merged catalog supergraph
@@ -14,6 +14,7 @@
 //! repro run       --queries t1,t2,t3 [...]  one engine, many queries, one pass
 //! repro stream    --query t1 [--threads T --queue Q --per-doc]     stdin firehose
 //! repro bench     [--json FILE]         perf trajectory rows → BENCH_5.json
+//!                                       + corpus-agg row → BENCH_8.json
 //! repro serve     [--addr H:P --admin H:P --max-conns N]  TCP serving tier
 //! repro serve     --selftest [--clients K]  loopback load run → BENCH_6.json
 //! repro chaos     [--seed N --duration S]   seeded fault-injection harness
@@ -66,11 +67,11 @@ fn main() -> ExitCode {
 }
 
 const USAGE: &str = "usage: repro <queries|check|explain|partition|profile|run|stream|bench|serve|chaos> [flags]
-  --query <t1..t5>       built-in query (default t1)
+  --query <t1..t7>       built-in query (default t1)
   --queries <t1,t2,...>  register several built-ins in ONE catalog engine
                          (merged supergraph, one partition plan, one
                          accelerator image; run/explain)
-  --merged               explain: dump the merged catalog (default: all five)
+  --merged               explain: dump the merged catalog (default: all seven)
   --aql <file>           AQL file instead of a built-in
   --mode <none|extract|single|multi>   offload scenario (default none)
   --engine <sim|native|pjrt>  accelerator backend (default sim — the
@@ -105,6 +106,10 @@ PATH (legacy rows, columnar software, sim-accelerated) plus the arena's
 fresh-buffer and return-to-origin gauges.
 Machine-readable rows always land in BENCH_5.json:
   --json <file>          override the output path
+bench always ends with the TextBenDS-style corpus-aggregation row — the
+T6+T7 catalog (top-k terms, per-dictionary doc frequency) over the same
+corpus, with the merged corpus tables — written to BENCH_8.json:
+  --agg-json <file>      override the aggregation-row output path
 with --devices N > 1, bench also measures the N-device pool against the
 single-device baseline and writes the comparison to BENCH_7.json:
   --pool-json <file>     override the pool-comparison output path
@@ -671,12 +676,16 @@ fn block_fresh_delta(engine: &Engine, corpus: &boost::corpus::Corpus, reps: usiz
 
 /// `repro bench`: the perf-trajectory rows — docs/sec and MB/s for
 /// software vs sim-accelerated execution, each query alone vs the merged
-/// T1–T5 catalog, and the columnar executor vs the legacy row pipeline
+/// T1–T7 catalog, and the columnar executor vs the legacy row pipeline
 /// (old-vs-new, measured in the same run) — serialized to `BENCH_5.json`
 /// (override with `--json <file>`). With `--features bench-alloc`, also
 /// reports measured steady-state allocations/document on T1 for every
 /// path — legacy rows, columnar software, and the sim-accelerated route —
 /// plus the arena's fresh-buffer-per-doc and return-to-origin gauges.
+/// Always ends with the TextBenDS-style corpus-aggregation row — the
+/// T6+T7 catalog (top-k terms + per-dictionary document frequency) over
+/// the same corpus, reporting docs/sec and the finished corpus tables —
+/// written to `BENCH_8.json` (override with `--agg-json <file>`).
 fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
     let threads: usize = flags
         .get("threads")
@@ -710,7 +719,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         rows.push((n.clone(), "sim", hw.run_corpus(&corpus, threads)));
         hw.shutdown();
     }
-    let merged_name = "merged-t1..t5".to_string();
+    let merged_name = "merged-t1..t7".to_string();
     // old-vs-new on the same catalog, same corpus, same process: the
     // legacy row pipeline first, then the columnar default
     let legacy = build_catalog(&names, EngineConfig::legacy_rows())?;
@@ -956,6 +965,101 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<(), String> {
         std::fs::write(pool_path, pj).map_err(|e| format!("write {pool_path}: {e}"))?;
         println!("  wrote {pool_path}");
     }
+
+    // TextBenDS-style corpus-aggregation row: the T6+T7 catalog (top-k
+    // terms and per-dictionary document frequency) over the same corpus.
+    // Unlike the per-document rows above, the payload here is the merged
+    // corpus-level tables that Session::finish() folds from per-worker
+    // partials — so this row also exercises the AggPartial merge path
+    // under the bench thread count.
+    let agg_names = vec!["t6".to_string(), "t7".to_string()];
+    let agg = build_catalog(&agg_names, EngineConfig::default())?;
+    let agg_report = agg.run_corpus(&corpus, threads);
+    println!(
+        "  corpus aggregation (t6+t7): {:.0} docs/s, {} corpus tables",
+        agg_report.docs_per_sec(),
+        agg_report.corpus.len(),
+    );
+    for t in &agg_report.corpus {
+        let head: Vec<String> = t
+            .rows
+            .iter()
+            .take(3)
+            .map(|row| {
+                row.iter()
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+                    .join("|")
+            })
+            .collect();
+        println!(
+            "    {:20} {:>5} rows  top: {}",
+            t.view,
+            t.rows.len(),
+            head.join("  ")
+        );
+    }
+    let agg_path = match flags.get("agg-json") {
+        Some(p) if !p.is_empty() => p.as_str(),
+        _ => "BENCH_8.json",
+    };
+    let jstr = |s: &str| -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+        out
+    };
+    let mut aj = String::new();
+    aj.push_str("{\n  \"schema\": \"boost-agg-bench-v1\",\n  \"measured\": true,\n");
+    aj.push_str(&format!(
+        "  \"corpus\": {{\"docs\": {}, \"doc_size\": {doc_size}, \"kind\": \"{kind}\"}},\n",
+        corpus.docs.len(),
+    ));
+    aj.push_str(&format!(
+        "  \"threads\": {threads},\n  \"queries\": [\"t6\", \"t7\"],\n"
+    ));
+    aj.push_str(&format!(
+        "  \"wall_s\": {:.6},\n  \"docs_per_sec\": {:.3},\n  \"mb_per_sec\": {:.6},\n",
+        agg_report.wall.as_secs_f64(),
+        agg_report.docs_per_sec(),
+        agg_report.throughput() / 1e6,
+    ));
+    aj.push_str("  \"tables\": [\n");
+    for (i, t) in agg_report.corpus.iter().enumerate() {
+        let head: Vec<String> = t
+            .rows
+            .iter()
+            .take(5)
+            .map(|row| {
+                jstr(
+                    &row.iter()
+                        .map(|v| v.to_string())
+                        .collect::<Vec<_>>()
+                        .join("|"),
+                )
+            })
+            .collect();
+        aj.push_str(&format!(
+            "    {{\"view\": {}, \"rows\": {}, \"top\": [{}]}}{}\n",
+            jstr(&t.view),
+            t.rows.len(),
+            head.join(", "),
+            if i + 1 < agg_report.corpus.len() { "," } else { "" },
+        ));
+    }
+    aj.push_str("  ]\n}\n");
+    std::fs::write(agg_path, aj).map_err(|e| format!("write {agg_path}: {e}"))?;
+    println!("  wrote {agg_path}");
     Ok(())
 }
 

@@ -97,6 +97,15 @@ pub fn estimate(g: &Graph, doc_len: usize) -> CostReport {
                 rows: in_rows(0).min(*k as f64),
                 cost: 1.0,
             },
+            OpKind::GroupAgg { .. } => NodeCost {
+                // grouping collapses repeated terms; hash build is linear
+                rows: (in_rows(0) * 0.3).max(0.1),
+                cost: in_rows(0),
+            },
+            OpKind::TopK { k, .. } => NodeCost {
+                rows: in_rows(0).min(*k as f64),
+                cost: in_rows(0) * (in_rows(0).log2().max(1.0)),
+            },
             OpKind::SubgraphExec { .. } => NodeCost {
                 // accounted separately by the accelerator model
                 rows: (n / 120.0).max(0.5),

@@ -111,9 +111,14 @@ pub fn hw_supported(kind: &OpKind) -> bool {
         | OpKind::Consolidate { .. }
         | OpKind::Difference
         | OpKind::Block { .. } => true,
+        // aggregation is stateful across the whole corpus (worker
+        // partials merged at session drain) — like sort/limit it blocks
+        // and stays in software
         OpKind::DocScan
         | OpKind::Sort { .. }
         | OpKind::Limit { .. }
+        | OpKind::GroupAgg { .. }
+        | OpKind::TopK { .. }
         | OpKind::SubgraphExec { .. }
         | OpKind::ExtInput { .. } => false,
     }
@@ -602,6 +607,28 @@ mod tests {
         assert!(plan.supergraph.op_counts()["Limit"] == 1);
         for t in SAMPLES {
             assert_eq!(run_plan(&plan, t), run_sw(&g, t));
+        }
+    }
+
+    #[test]
+    fn aggregation_stays_in_software() {
+        let g = crate::optimizer::optimize(
+            &crate::aql::compile(
+                "create view A as extract regex /[a-z]+/ on d.text as m from Document d;
+                 create view V as select GetText(a.m) as term, Count() as n from A a
+                 group by term score n top 3;
+                 output view V;",
+            )
+            .unwrap(),
+        );
+        for mode in [PartitionMode::ExtractOnly, PartitionMode::MultiSubgraph] {
+            let plan = partition(&g, mode);
+            // the blocking aggregate operators never cross into a subgraph
+            assert_eq!(plan.supergraph.op_counts()["GroupAgg"], 1, "{mode:?}");
+            assert_eq!(plan.supergraph.op_counts()["TopK"], 1, "{mode:?}");
+            for t in SAMPLES {
+                assert_eq!(run_plan(&plan, t), run_sw(&g, t), "{mode:?} {t:?}");
+            }
         }
     }
 

@@ -1,4 +1,4 @@
-//! The five built-in evaluation queries T1–T5.
+//! The built-in evaluation queries T1–T7.
 //!
 //! The paper evaluates five proprietary customer queries; it reports only
 //! their per-operator time profiles (Fig 4): T1–T4 are dominated by
@@ -6,6 +6,14 @@
 //! 80 % in relational operators. These queries are engineered to land in
 //! the same profile bands on the synthetic news corpus — EXPERIMENTS.md E1
 //! verifies the achieved distributions.
+//!
+//! T6 and T7 extend the suite with **corpus-level** analytics in the
+//! TextBenDS style (aggregation/top-k keyword benchmarking): T6 ranks the
+//! most frequent entity mentions across the whole corpus (`group by` +
+//! `score` + `top k`), T7 computes per-dictionary document frequencies
+//! (`CountDocs()`). Their per-document output is the corpus-of-one
+//! aggregate; the cross-document tables come back through
+//! [`crate::coordinator::RunReport::corpus`].
 //!
 //! Dictionaries are generated from [`crate::corpus::pools`], the same
 //! pools the corpus generator plants, so selectivities are realistic.
@@ -15,7 +23,7 @@ use crate::corpus::pools;
 /// A named built-in query.
 #[derive(Debug, Clone)]
 pub struct Query {
-    /// Short id (`t1`..`t5`).
+    /// Short id (`t1`..`t7`).
     pub name: &'static str,
     /// Human-readable title.
     pub title: &'static str,
@@ -275,12 +283,93 @@ output view Conflicts;
     }
 }
 
-/// All built-in queries in paper order.
-pub fn all() -> Vec<Query> {
-    vec![t1(), t2(), t3(), t4(), t5()]
+fn t6() -> Query {
+    let aql = format!(
+        r#"
+-- T6: top-k entity mentions across the corpus (TextBenDS-style top-k
+-- keyword query): every capitalized word plus every organization hit,
+-- grouped by surface form, ranked by total mention count
+create dictionary OrgDict as ({orgs});
+
+create view Cap as
+  extract regex /[A-Z][a-z]+/ on d.text as w from Document d;
+create view Org as
+  extract dictionary 'OrgDict' on d.text as match from Document d;
+
+create view Mention as
+  (select c.w as span from Cap c)
+  union all
+  (select o.match as span from Org o);
+
+create view TopEntities as
+  select GetText(m.span) as term, Count() as n, CountDocs() as docs
+  from Mention m
+  group by term
+  score n
+  top 10;
+
+output view TopEntities;
+"#,
+        orgs = dict_entries(pools::ORGS),
+    );
+    Query {
+        name: "t6",
+        title: "Top-k entities",
+        profile_hint: "corpus-level aggregation (group by + top k)",
+        aql,
+    }
 }
 
-/// Look up a built-in query by name (`t1`..`t5`).
+fn t7() -> Query {
+    let aql = format!(
+        r#"
+-- T7: per-dictionary document frequency — how many mentions and how many
+-- distinct documents each deployed dictionary fires in (TextBenDS-style
+-- aggregation query over the whole corpus)
+create dictionary OrgDict as ({orgs});
+create dictionary LocDict as ({locs});
+create dictionary SentimentDict as ({sent});
+
+create view OrgHit as
+  extract dictionary 'OrgDict' on d.text as match from Document d;
+create view LocHit as
+  extract dictionary 'LocDict' on d.text as match from Document d;
+create view SentHit as
+  extract dictionary 'SentimentDict' on d.text as match from Document d;
+
+create view Tagged as
+  (select 'org' as dict from OrgHit h)
+  union all
+  (select 'loc' as dict from LocHit h)
+  union all
+  (select 'sentiment' as dict from SentHit h);
+
+create view DictDocFreq as
+  select t.dict as dict, Count() as n, CountDocs() as docs
+  from Tagged t
+  group by dict;
+
+output view DictDocFreq;
+"#,
+        orgs = dict_entries(pools::ORGS),
+        locs = dict_entries(pools::LOCATIONS),
+        sent = dict_entries(pools::SENTIMENT),
+    );
+    Query {
+        name: "t7",
+        title: "Dictionary document frequency",
+        profile_hint: "corpus-level aggregation (group by + CountDocs)",
+        aql,
+    }
+}
+
+/// All built-in queries in paper order (T6/T7 are this repo's
+/// corpus-level extensions).
+pub fn all() -> Vec<Query> {
+    vec![t1(), t2(), t3(), t4(), t5(), t6(), t7()]
+}
+
+/// Look up a built-in query by name (`t1`..`t7`).
 pub fn builtin(name: &str) -> Option<Query> {
     all().into_iter().find(|q| q.name == name)
 }
@@ -385,7 +474,57 @@ mod tests {
     #[test]
     fn builtin_lookup() {
         assert!(builtin("t3").is_some());
+        assert!(builtin("t6").is_some());
+        assert!(builtin("t7").is_some());
         assert!(builtin("t9").is_none());
-        assert_eq!(all().len(), 5);
+        assert_eq!(all().len(), 7);
+    }
+
+    #[test]
+    fn t6_t7_produce_corpus_tables() {
+        use crate::aog::Value;
+        use crate::coordinator::Engine;
+        let engine = Engine::builder()
+            .register_builtin("t6")
+            .register_builtin("t7")
+            .build()
+            .unwrap();
+        let corpus = crate::corpus::CorpusSpec::news(12, 1024).generate();
+        let report = engine.run_corpus(&corpus, 4);
+        assert_eq!(report.corpus.len(), 2);
+        let t6 = report
+            .corpus
+            .iter()
+            .find(|c| c.view == "t6.TopEntities")
+            .expect("t6 table");
+        assert!(!t6.rows.is_empty() && t6.rows.len() <= 10, "{t6:?}");
+        // ranked by score (= n) descending
+        let scores: Vec<i64> = t6
+            .rows
+            .iter()
+            .map(|r| match &r[3] {
+                Value::Int(n) => *n,
+                other => panic!("score must be Int, got {other:?}"),
+            })
+            .collect();
+        assert!(
+            scores.windows(2).all(|w| w[0] >= w[1]),
+            "top-k not sorted by score: {scores:?}"
+        );
+        let t7 = report
+            .corpus
+            .iter()
+            .find(|c| c.view == "t7.DictDocFreq")
+            .expect("t7 table");
+        // news docs plant all three pools; docs ≤ corpus size
+        assert_eq!(t7.rows.len(), 3, "{t7:?}");
+        for row in &t7.rows {
+            match (&row[1], &row[2]) {
+                (Value::Int(n), Value::Int(docs)) => {
+                    assert!(*n >= *docs && *docs >= 1 && *docs <= 12, "{row:?}");
+                }
+                other => panic!("bad count types: {other:?}"),
+            }
+        }
     }
 }

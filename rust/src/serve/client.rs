@@ -100,6 +100,7 @@ struct ReaderOutcome {
     results: Vec<ResultFrame>,
     doc_errors: Vec<DocErrFrame>,
     done_docs: Option<u64>,
+    corpus: Vec<(u16, Vec<u8>)>,
     error: Option<ClientError>,
 }
 
@@ -224,6 +225,7 @@ impl Client {
                 done,
                 results: outcome.results,
                 doc_errors: outcome.doc_errors,
+                corpus: outcome.corpus,
                 view_table: self.view_table.clone(),
             }),
             None => Err(ClientError::Protocol(ProtocolError::Truncated)),
@@ -265,6 +267,11 @@ pub struct ClientReport {
     /// Every `DocErr` frame received (shed/quarantined documents), in
     /// arrival order.
     pub doc_errors: Vec<DocErrFrame>,
+    /// Finished corpus-level aggregate tables from the `Done` frame:
+    /// `(view-table index, encoded batch)` per subscribed aggregate
+    /// view. Decode with [`protocol::decode_batch`]. Empty when no
+    /// subscribed view aggregates.
+    pub corpus: Vec<(u16, Vec<u8>)>,
     /// The server's view table from `Welcome`.
     pub view_table: Vec<String>,
 }
@@ -272,10 +279,11 @@ pub struct ClientReport {
 fn read_results(mut reader: BufReader<TcpStream>) -> ReaderOutcome {
     let mut results = Vec::new();
     let mut doc_errors = Vec::new();
-    let finish = |results, doc_errors, done_docs, error| ReaderOutcome {
+    let finish = |results, doc_errors, done_docs, corpus, error| ReaderOutcome {
         results,
         doc_errors,
         done_docs,
+        corpus,
         error,
     };
     loop {
@@ -294,14 +302,15 @@ fn read_results(mut reader: BufReader<TcpStream>) -> ReaderOutcome {
                     message,
                 });
             }
-            Ok(Some(Frame::Done { docs })) => {
-                return finish(results, doc_errors, Some(docs), None)
+            Ok(Some(Frame::Done { docs, corpus })) => {
+                return finish(results, doc_errors, Some(docs), corpus, None)
             }
             Ok(Some(Frame::Error { code, message })) => {
                 return finish(
                     results,
                     doc_errors,
                     None,
+                    Vec::new(),
                     Some(ClientError::Rejected { code, message }),
                 )
             }
@@ -310,6 +319,7 @@ fn read_results(mut reader: BufReader<TcpStream>) -> ReaderOutcome {
                     results,
                     doc_errors,
                     None,
+                    Vec::new(),
                     Some(ClientError::Protocol(ProtocolError::Malformed(
                         "unexpected frame from server",
                     ))),
@@ -320,10 +330,11 @@ fn read_results(mut reader: BufReader<TcpStream>) -> ReaderOutcome {
                     results,
                     doc_errors,
                     None,
+                    Vec::new(),
                     Some(ClientError::Protocol(ProtocolError::Truncated)),
                 )
             }
-            Err(e) => return finish(results, doc_errors, None, Some(e.into())),
+            Err(e) => return finish(results, doc_errors, None, Vec::new(), Some(e.into())),
         }
     }
 }
@@ -343,6 +354,11 @@ pub struct LoadReport {
     pub results: Vec<ResultFrame>,
     /// Every client's `DocErr` frames, merged (shed/quarantined docs).
     pub doc_errors: Vec<DocErrFrame>,
+    /// Each client's corpus-level aggregate tables from its `Done` frame,
+    /// in client order. Per-connection sessions aggregate only the
+    /// documents that connection submitted, so entries are per-client
+    /// shards, not one corpus-wide table.
+    pub corpus: Vec<Vec<(u16, Vec<u8>)>>,
     /// The server's view table (identical across clients by protocol).
     pub view_table: Vec<String>,
 }
@@ -418,6 +434,7 @@ pub fn run_load_with_budget(
 
     let mut results = Vec::with_capacity(docs.len());
     let mut doc_errors = Vec::new();
+    let mut corpus = Vec::with_capacity(clients);
     let mut view_table = Vec::new();
     for report in reports {
         let report = report?;
@@ -426,6 +443,7 @@ pub fn run_load_with_budget(
         }
         results.extend(report.results);
         doc_errors.extend(report.doc_errors);
+        corpus.push(report.corpus);
     }
     Ok(LoadReport {
         clients,
@@ -434,6 +452,7 @@ pub fn run_load_with_budget(
         wall,
         results,
         doc_errors,
+        corpus,
         view_table,
     })
 }

@@ -15,7 +15,7 @@
 //! | `Result` | s→c | `0x82` | doc id u64, u16 count × (view-table index u16, batch length u32, encoded [`TupleBatch`]) |
 //! | `Busy` | s→c | `0x83` | active u32, cap u32 |
 //! | `Error` | s→c | `0x84` | code u16, message str16 |
-//! | `Done` | s→c | `0x85` | docs processed u64 |
+//! | `Done` | s→c | `0x85` | docs processed u64, u16 count × (view-table index u16, batch length u32, encoded [`TupleBatch`]) — the finished corpus-level aggregate tables |
 //! | `DocErr` | s→c | `0x86` | doc id u64, code u16, message str16 |
 //!
 //! (`str16` = u16 length + UTF-8 bytes; `str32` the same with a u32.)
@@ -58,8 +58,9 @@ use crate::exec::{ColumnData, TupleBatch};
 use crate::text::Span;
 
 /// Protocol version carried in `Hello`. Bump on any wire change.
-/// (v2: deadline fields on `Hello`/`Doc`, per-document `DocErr` frames.)
-pub const PROTOCOL_VERSION: u8 = 2;
+/// (v2: deadline fields on `Hello`/`Doc`, per-document `DocErr` frames.
+/// v3: `Done` carries the finished corpus-level aggregate tables.)
+pub const PROTOCOL_VERSION: u8 = 3;
 
 /// Upper bound on a single frame's length field (type byte + payload).
 /// Anything larger is rejected before buffering — a garbage length
@@ -262,6 +263,11 @@ pub enum Frame {
     Done {
         /// Documents processed on this connection.
         docs: u64,
+        /// Finished corpus-level aggregate tables, one per subscribed
+        /// aggregate view: `(view-table index, encoded batch)` exactly
+        /// like `Result`, built from the merged worker partials at
+        /// session drain. Empty when no subscribed view aggregates.
+        corpus: Vec<(u16, Vec<u8>)>,
     },
     /// Per-document failure: this one document was shed or quarantined;
     /// the connection keeps serving the rest of the stream.
@@ -428,9 +434,15 @@ fn encode_payload(frame: &Frame, out: &mut Vec<u8>) {
             put_u16(out, *code);
             put_str16(out, message);
         }
-        Frame::Done { docs } => {
+        Frame::Done { docs, corpus } => {
             out.push(FRAME_DONE);
             put_u64(out, *docs);
+            put_u16(out, corpus.len() as u16);
+            for (idx, batch) in corpus {
+                put_u16(out, *idx);
+                put_u32(out, batch.len() as u32);
+                out.extend_from_slice(batch);
+            }
         }
         Frame::DocErr { doc_id, code, message } => {
             out.push(FRAME_DOC_ERR);
@@ -521,7 +533,17 @@ fn decode_frame(body: &[u8]) -> Result<Frame, ProtocolError> {
             code: c.u16()?,
             message: c.str16()?,
         },
-        FRAME_DONE => Frame::Done { docs: c.u64()? },
+        FRAME_DONE => {
+            let docs = c.u64()?;
+            let n = c.u16()? as usize;
+            let mut corpus = Vec::with_capacity(n);
+            for _ in 0..n {
+                let idx = c.u16()?;
+                let len = c.u32()? as usize;
+                corpus.push((idx, c.take(len)?.to_vec()));
+            }
+            Frame::Done { docs, corpus }
+        }
         FRAME_DOC_ERR => Frame::DocErr {
             doc_id: c.u64()?,
             code: c.u16()?,
@@ -758,7 +780,14 @@ mod tests {
             code: ERR_BAD_DOC,
             message: "document 3 is not UTF-8".into(),
         });
-        roundtrip(Frame::Done { docs: 1000 });
+        roundtrip(Frame::Done {
+            docs: 1000,
+            corpus: vec![],
+        });
+        roundtrip(Frame::Done {
+            docs: 12,
+            corpus: vec![(0, vec![4, 5, 6]), (2, vec![])],
+        });
         roundtrip(Frame::DocErr {
             doc_id: 9,
             code: ERR_DEADLINE,

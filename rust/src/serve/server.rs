@@ -372,11 +372,12 @@ impl Drop for ActiveGuard {
 }
 
 /// What the writer thread pumps: encoded frames in order, then `Done`
-/// or a terminal `Error`.
+/// (answered-doc count + finished corpus aggregate tables) or a
+/// terminal `Error`.
 enum Out {
     Result(Frame),
     DocErr(u64, u16, String),
-    Done(u64),
+    Done(u64, Vec<(u16, Vec<u8>)>),
     Error(u16, String),
 }
 
@@ -604,7 +605,19 @@ fn serve_connection(stream: TcpStream, peer: String, shared: &Arc<ServerShared>,
         // document — successes plus per-doc errors (a DocErr is an
         // answer, not a dropped doc).
         let report = session.finish();
-        let _ = tx.push(Out::Done((report.docs + report.errors) as u64));
+        // corpus-level aggregate tables ride the Done frame, addressed by
+        // this connection's view-table indices (same scheme as Result);
+        // views the client didn't subscribe to are simply not shipped
+        let mut corpus = Vec::new();
+        for (vi, h) in table.iter().enumerate() {
+            if let Some(c) = report.corpus.iter().find(|c| c.view == h.name()) {
+                let batch = crate::exec::TupleBatch::from_rows(&c.schema, &c.rows);
+                let mut buf = Vec::new();
+                protocol::encode_batch(&batch, &mut buf);
+                corpus.push((vi as u16, buf));
+            }
+        }
+        let _ = tx.push(Out::Done((report.docs + report.errors) as u64, corpus));
     } else {
         // disconnect or protocol error: stop producing results, drain
         // the session without writing, then (on protocol errors) tell
@@ -645,7 +658,7 @@ fn writer_loop(mut w: BufWriter<TcpStream>, rx: queue::QueueRx<Out>, shared: Arc
                 code,
                 message,
             },
-            Out::Done(docs) => Frame::Done { docs },
+            Out::Done(docs, corpus) => Frame::Done { docs, corpus },
             Out::Error(code, message) => Frame::Error { code, message },
         };
         match protocol::write_frame(&mut w, &frame).and_then(|n| w.flush().map(|_| n)) {

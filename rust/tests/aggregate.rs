@@ -1,0 +1,457 @@
+//! Oracle-differential and merge-property suite for corpus-level
+//! aggregation (ISSUE 10 satellites).
+//!
+//! The tentpole claim under test: T6 (top-k entities) and T7
+//! (per-dictionary document frequency) produce the SAME corpus tables no
+//! matter how the corpus is executed — partition mode, software executor
+//! strategy (columnar vs legacy rows), worker count, document arrival
+//! order, and partial sharding must all be invisible in the final
+//! `RunReport::corpus`.
+//!
+//! Two attack angles:
+//!
+//!   1. An **independent oracle**: the aggregation clauses are stripped
+//!      from the builtin AQL, the raw pre-aggregation rows are collected
+//!      per document on a single thread, and the corpus tables are
+//!      recomputed with a plain `HashMap` and a full sort — no
+//!      `AggPartial`, no merge, no bounded selection. Every engine
+//!      configuration must render byte-identically to that reference.
+//!   2. **Property tests** over `AggPartial` and `top_k` directly: merge
+//!      is associative and commutative, sharding and permutation cannot
+//!      change `finish()`, and top-k tie-breaking (score descending, then
+//!      row cells ascending by bytes) is a total order, so any input
+//!      permutation selects the same rows in the same order.
+//!
+//! The corpus seed is fixed (reproducible CI) but overridable through the
+//! `BOOST_DIFF_SEED` environment variable for fuzzing sessions.
+
+use std::collections::{HashMap, HashSet};
+
+use boost::aog::{AggCol, EvalCtx, Expr, Field, FieldType, Schema, Tuple, Value};
+use boost::coordinator::{Engine, EngineConfig};
+use boost::corpus::CorpusSpec;
+use boost::exec::{top_k, AggPartial, CorpusResult, ExecStrategy, TupleBatch};
+use boost::partition::PartitionMode;
+use boost::text::{Document, Tokenizer};
+use boost::util::{prop, Prng};
+
+/// Fixed default seed; override with BOOST_DIFF_SEED=<u64> to fuzz.
+fn seed() -> u64 {
+    std::env::var("BOOST_DIFF_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1FF_2026)
+}
+
+/// Randomized mixed-flavour corpus plus handcrafted edge documents —
+/// empty text, single entities, dense repetition, and deliberate
+/// cross-document count ties (the top-k tie-break path).
+fn mixed_docs() -> Vec<Document> {
+    let mut rng = Prng::new(seed() ^ 0xA66);
+    let mut texts: Vec<String> = Vec::new();
+    for d in CorpusSpec::news(120, 256).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::tweets(60, 128).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for d in CorpusSpec::logs(30, 320).with_seed(rng.next_u64()).generate().docs {
+        texts.push(d.text.to_string());
+    }
+    for e in [
+        "",
+        " ",
+        "IBM",
+        "Zed Aaa Zed Aaa", // tied mention counts, resolved by term bytes
+        "Aaa Zed",
+        "IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM IBM",
+    ] {
+        texts.push(e.to_string());
+    }
+    texts
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| Document::new(i as u64, t))
+        .collect()
+}
+
+/// The builtin's AQL with everything from `marker` on replaced by a plain
+/// projection of the pre-aggregation rows — same dictionaries, same
+/// extraction and union views, NO group/top clauses.
+fn pre_aggregation_aql(builtin: &str, marker: &str, tail: &str) -> String {
+    let q = boost::queries::builtin(builtin).unwrap();
+    let cut = q
+        .aql
+        .find(marker)
+        .unwrap_or_else(|| panic!("{builtin} AQL no longer contains {marker:?}"));
+    format!("{}{tail}", &q.aql[..cut])
+}
+
+/// Naive T6 reference: term -> (mentions, documents) via plain maps, then
+/// a FULL sort by (count desc, term bytes asc) truncated to k — the
+/// quadratic-memory formulation the bounded `top_k` must reproduce.
+fn naive_t6(docs: &[Document], k: usize) -> Vec<(String, i64, i64)> {
+    let oracle = pre_aggregation_aql(
+        "t6",
+        "create view TopEntities",
+        "create view Terms as select GetText(m.span) as term from Mention m;\noutput view Terms;",
+    );
+    let engine = Engine::compile_aql(&oracle).unwrap();
+    let mut counts: HashMap<String, (i64, i64)> = HashMap::new();
+    for d in docs {
+        let result = engine.run_doc(d);
+        let mut seen: HashSet<String> = HashSet::new();
+        for (h, rows) in result.iter() {
+            if h.name() != "Terms" {
+                continue;
+            }
+            for t in rows {
+                let term = match &t[0] {
+                    Value::Str(s) => s.to_string(),
+                    other => panic!("non-text term {other:?}"),
+                };
+                let e = counts.entry(term.clone()).or_default();
+                e.0 += 1;
+                if seen.insert(term) {
+                    e.1 += 1;
+                }
+            }
+        }
+    }
+    let mut rows: Vec<(String, i64, i64)> = counts
+        .into_iter()
+        .map(|(term, (n, docs))| (term, n, docs))
+        .collect();
+    rows.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    rows.truncate(k);
+    rows
+}
+
+/// Naive T7 reference: dictionary tag -> (hits, documents), groups sorted
+/// by key ascending (the `GroupAgg` finish order).
+fn naive_t7(docs: &[Document]) -> Vec<(String, i64, i64)> {
+    let oracle = pre_aggregation_aql(
+        "t7",
+        "create view DictDocFreq",
+        "create view Tags as select t.dict as dict from Tagged t;\noutput view Tags;",
+    );
+    let engine = Engine::compile_aql(&oracle).unwrap();
+    let mut counts: HashMap<String, (i64, i64)> = HashMap::new();
+    for d in docs {
+        let result = engine.run_doc(d);
+        let mut seen: HashSet<String> = HashSet::new();
+        for (h, rows) in result.iter() {
+            if h.name() != "Tags" {
+                continue;
+            }
+            for t in rows {
+                let dict = match &t[0] {
+                    Value::Str(s) => s.to_string(),
+                    other => panic!("non-text dict tag {other:?}"),
+                };
+                let e = counts.entry(dict.clone()).or_default();
+                e.0 += 1;
+                if seen.insert(dict) {
+                    e.1 += 1;
+                }
+            }
+        }
+    }
+    let mut rows: Vec<(String, i64, i64)> = counts
+        .into_iter()
+        .map(|(dict, (n, docs))| (dict, n, docs))
+        .collect();
+    rows.sort_by(|a, b| a.0.cmp(&b.0));
+    rows
+}
+
+/// Byte-exact rendering of the corpus tables. Row ORDER within a table is
+/// part of the contract (top-k ranking, group-key sort), so each line
+/// carries its row index; tables themselves sort by view name.
+fn render_tables(tables: &[CorpusResult]) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    for t in tables {
+        for (i, row) in t.rows.iter().enumerate() {
+            let mut line = format!("{}|{i:04}|", t.view);
+            for v in row {
+                line.push_str(&format!("{v};"));
+            }
+            lines.push(line);
+        }
+    }
+    lines.sort();
+    lines.join("\n")
+}
+
+/// The oracle's tables rendered in the same shape `render_tables`
+/// produces — T6 rows carry the trailing score column (= the count).
+fn render_oracle(t6: &[(String, i64, i64)], t7: &[(String, i64, i64)]) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    for (i, (term, n, docs)) in t6.iter().enumerate() {
+        lines.push(format!("t6.TopEntities|{i:04}|{term:?};{n};{docs};{n};"));
+    }
+    for (i, (dict, n, docs)) in t7.iter().enumerate() {
+        lines.push(format!("t7.DictDocFreq|{i:04}|{dict:?};{n};{docs};"));
+    }
+    lines.sort();
+    lines.join("\n")
+}
+
+#[test]
+fn t6_t7_match_the_naive_oracle_across_modes_strategies_and_workers() {
+    let docs = mixed_docs();
+    assert!(docs.len() >= 200, "acceptance floor: {} docs", docs.len());
+
+    let expected = render_oracle(&naive_t6(&docs, 10), &naive_t7(&docs));
+    assert!(
+        expected.contains("t6.TopEntities") && expected.contains("t7.DictDocFreq"),
+        "the oracle must have found mentions in the generated corpus:\n{expected}"
+    );
+
+    for mode in [
+        PartitionMode::None,
+        PartitionMode::ExtractOnly,
+        PartitionMode::SingleSubgraph,
+        PartitionMode::MultiSubgraph,
+    ] {
+        for strategy in [ExecStrategy::Columnar, ExecStrategy::LegacyRows] {
+            let mut cfg = if matches!(mode, PartitionMode::None) {
+                EngineConfig::default()
+            } else {
+                EngineConfig::simulated(mode)
+            };
+            cfg.strategy = strategy;
+            let engine = Engine::builder()
+                .register_builtin("t6")
+                .register_builtin("t7")
+                .config(cfg)
+                .build()
+                .unwrap();
+            for threads in [1usize, 4, 8] {
+                let mut session = engine
+                    .session()
+                    .threads(threads)
+                    .queue_depth(2 * threads)
+                    .start();
+                for d in &docs {
+                    session.push(d.clone()).unwrap();
+                }
+                let report = session.finish();
+                assert_eq!(report.docs, docs.len(), "mode {mode:?} lost documents");
+                assert_eq!(
+                    render_tables(&report.corpus),
+                    expected,
+                    "corpus tables diverged from the naive oracle: \
+                     mode {mode:?}, strategy {strategy:?}, {threads} workers"
+                );
+            }
+            if !matches!(mode, PartitionMode::None) {
+                engine.shutdown();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AggPartial / top_k property tests
+// ---------------------------------------------------------------------------
+
+/// The T6-shaped aggregate spec: one text key, Count, CountDocs.
+fn agg_spec() -> (Vec<(String, AggCol)>, Schema) {
+    let cols = vec![
+        ("term".to_string(), AggCol::Key(0)),
+        ("n".to_string(), AggCol::Count),
+        ("docs".to_string(), AggCol::CountDocs),
+    ];
+    let schema = Schema::of(&[
+        ("term", FieldType::Str),
+        ("n", FieldType::Int),
+        ("docs", FieldType::Int),
+    ]);
+    (cols, schema)
+}
+
+fn term_rows(terms: &[String]) -> Vec<Tuple> {
+    terms
+        .iter()
+        .map(|t| vec![Value::Str(t.as_str().into())])
+        .collect()
+}
+
+/// Documents of terms over a 3-letter alphabet with length 1–2 — small on
+/// purpose, so cross-document collisions (shared groups, tied counts) are
+/// the common case, not the rare one.
+fn gen_term_docs(r: &mut Prng) -> Vec<Vec<String>> {
+    let n = r.below(7);
+    (0..n)
+        .map(|_| {
+            let m = r.below(10);
+            (0..m)
+                .map(|_| {
+                    let len = r.range(1, 3);
+                    r.string_over(b"abc", len)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn merge_is_associative_commutative_and_sharding_invariant() {
+    let (cols, schema) = agg_spec();
+    prop::check(seed() ^ 0x4A66, 128, gen_term_docs, |docs| {
+        // reference: absorb everything, in order, into one partial
+        let mut all = AggPartial::new(&cols, &schema);
+        for d in docs {
+            all.absorb_doc(&term_rows(d));
+        }
+        let want = all.finish().to_tuples();
+
+        // document-permutation invariance
+        let mut rev = AggPartial::new(&cols, &schema);
+        for d in docs.iter().rev() {
+            rev.absorb_doc(&term_rows(d));
+        }
+        if rev.finish().to_tuples() != want {
+            return false;
+        }
+
+        // sharding invariance: round-robin over every worker count the
+        // session suite uses, merged forward and backward (commutativity)
+        for shards in [1usize, 2, 3, 4, 8] {
+            let mut parts: Vec<AggPartial> =
+                (0..shards).map(|_| AggPartial::new(&cols, &schema)).collect();
+            for (i, d) in docs.iter().enumerate() {
+                parts[i % shards].absorb_doc(&term_rows(d));
+            }
+            let mut fwd = AggPartial::new(&cols, &schema);
+            for p in &parts {
+                fwd.merge(p);
+            }
+            let mut bwd = AggPartial::new(&cols, &schema);
+            for p in parts.iter().rev() {
+                bwd.merge(p);
+            }
+            if fwd.finish().to_tuples() != want || bwd.finish().to_tuples() != want {
+                return false;
+            }
+        }
+
+        // associativity on a 3-way split: (a·b)·c == a·(b·c)
+        let third = docs.len() / 3;
+        let mut abc = [
+            AggPartial::new(&cols, &schema),
+            AggPartial::new(&cols, &schema),
+            AggPartial::new(&cols, &schema),
+        ];
+        for (i, d) in docs.iter().enumerate() {
+            let slot = if i < third {
+                0
+            } else if i < 2 * third {
+                1
+            } else {
+                2
+            };
+            abc[slot].absorb_doc(&term_rows(d));
+        }
+        let [a, b, c] = abc;
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        left.finish().to_tuples() == want && right.finish().to_tuples() == want
+    });
+}
+
+#[test]
+fn top_k_is_permutation_invariant_with_a_total_tie_order() {
+    let (cols, schema) = agg_spec();
+    let mut out_schema = schema.clone();
+    out_schema.fields.push(Field {
+        name: "score".into(),
+        ty: FieldType::Int,
+    });
+    let tokens = Tokenizer::standard().tokenize("");
+    let ctx = EvalCtx {
+        text: "",
+        tokens: &tokens,
+    };
+    let as_int = |v: &Value| -> i64 {
+        match v {
+            Value::Int(n) => *n,
+            other => panic!("non-integer score {other:?}"),
+        }
+    };
+    let as_str = |v: &Value| -> String {
+        match v {
+            Value::Str(s) => s.to_string(),
+            other => panic!("non-text term {other:?}"),
+        }
+    };
+    prop::check(seed() ^ 0x70_B1, 128, gen_term_docs, |docs| {
+        let mut p = AggPartial::new(&cols, &schema);
+        for d in docs {
+            p.absorb_doc(&term_rows(d));
+        }
+        let agg = p.finish();
+        let tuples = agg.to_tuples();
+        for k in [1usize, 2, 3, 10] {
+            let fwd = top_k(&agg, k, &Expr::Col(1), &out_schema, &ctx).to_tuples();
+            if fwd.len() != k.min(tuples.len()) {
+                return false;
+            }
+            // reversed AND rotated input orders select identical rows in
+            // an identical order — the tie-break is a total order, so
+            // arrival order has nothing left to decide
+            for split in [tuples.len(), tuples.len() / 2, 1] {
+                let mut permuted: Vec<Tuple> = tuples[split.min(tuples.len())..].to_vec();
+                permuted.extend_from_slice(&tuples[..split.min(tuples.len())]);
+                permuted.reverse();
+                let got = top_k(
+                    &TupleBatch::from_rows(&schema, &permuted),
+                    k,
+                    &Expr::Col(1),
+                    &out_schema,
+                    &ctx,
+                )
+                .to_tuples();
+                if got != fwd {
+                    return false;
+                }
+            }
+            // ranking invariant: scores non-increasing, ties strictly
+            // ascending by term bytes (no duplicate groups can exist)
+            for w in fwd.windows(2) {
+                let (s0, s1) = (as_int(&w[0][3]), as_int(&w[1][3]));
+                if s0 < s1 {
+                    return false;
+                }
+                if s0 == s1 && as_str(&w[0][0]) >= as_str(&w[1][0]) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn count_docs_is_a_document_frequency_not_a_row_count() {
+    // direct unit-shaped check through the public API: three documents,
+    // one term repeated within a document — Count sees 5 mentions,
+    // CountDocs sees 2 documents
+    let (cols, schema) = agg_spec();
+    let mut p = AggPartial::new(&cols, &schema);
+    p.absorb_doc(&term_rows(&["ibm".into(), "ibm".into(), "ibm".into(), "acme".into()]));
+    p.absorb_doc(&term_rows(&[]));
+    p.absorb_doc(&term_rows(&["ibm".into(), "ibm".into()]));
+    let rows = p.finish().to_tuples();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(
+        rows[1],
+        vec![Value::Str("ibm".into()), Value::Int(5), Value::Int(2)]
+    );
+}

@@ -5,7 +5,7 @@
 //! different code, not a silent pass. The flip side is the
 //! zero-false-positive suite at the bottom: every built-in query must
 //! come through `check_query` without a single diagnostic in every
-//! partition mode, and a strict (default) engine build over T1–T5 must
+//! partition mode, and a strict (default) engine build over T1–T7 must
 //! still execute a randomized corpus.
 
 use boost::analysis::{check_query, Report};
@@ -114,6 +114,93 @@ fn extraction_over_a_view_is_e017() {
          create view B as extract regex /b/ on a.m as m from A a;
          output view B;",
         "E017",
+    );
+}
+
+// ------------------------------------------- E018–E022 (aggregation)
+
+#[test]
+fn group_by_unknown_column_is_e018() {
+    // 'nope' is in the group-by list but not among the select items
+    let r = assert_rejected(
+        "create view A as extract regex /[A-Z][a-z]+/ on d.text as m from Document d;
+         create view V as select GetText(a.m) as term, Count() as n from A a
+           group by term, nope;
+         output view V;",
+        "E018",
+    );
+    // the diagnostic points at the offending name in the source
+    assert!(r.diagnostics.iter().any(|d| d.loc.is_some()), "{}", r.render());
+}
+
+#[test]
+fn group_by_span_column_is_e019() {
+    // grouping on a raw span: spans are per-document offsets, not
+    // corpus-mergeable keys — the fix (GetText) is named in the message
+    assert_rejected(
+        "create view A as extract regex /[A-Z][a-z]+/ on d.text as m from Document d;
+         create view V as select a.m as m, Count() as n from A a group by m;
+         output view V;",
+        "E019",
+    );
+}
+
+#[test]
+fn top_zero_is_e020() {
+    assert_rejected(
+        "create view A as extract regex /[A-Z][a-z]+/ on d.text as m from Document d;
+         create view V as select GetText(a.m) as term, Count() as n from A a
+           group by term score n top 0;
+         output view V;",
+        "E020",
+    );
+}
+
+#[test]
+fn text_valued_score_is_e021() {
+    // ranking needs a numeric score; 'term' is Text
+    assert_rejected(
+        "create view A as extract regex /[A-Z][a-z]+/ on d.text as m from Document d;
+         create view V as select GetText(a.m) as term, Count() as n from A a
+           group by term score term top 5;
+         output view V;",
+        "E021",
+    );
+}
+
+#[test]
+fn selecting_from_a_corpus_level_view_is_e022() {
+    // an aggregated view only exists after Session::finish() merges the
+    // per-worker partials — it cannot feed a per-document select
+    assert_rejected(
+        "create view A as extract regex /[A-Z][a-z]+/ on d.text as m from Document d;
+         create view Agg as select GetText(a.m) as term, Count() as n from A a
+           group by term;
+         create view V as select g.term as term from Agg g;
+         output view V;",
+        "E022",
+    );
+}
+
+#[test]
+fn bare_key_without_aggregate_is_e022() {
+    // group by with no Count()/CountDocs() in the select list
+    assert_rejected(
+        "create view A as extract regex /[A-Z][a-z]+/ on d.text as m from Document d;
+         create view V as select GetText(a.m) as term from A a group by term;
+         output view V;",
+        "E022",
+    );
+}
+
+#[test]
+fn score_without_top_is_e022() {
+    assert_rejected(
+        "create view A as extract regex /[A-Z][a-z]+/ on d.text as m from Document d;
+         create view V as select GetText(a.m) as term, Count() as n from A a
+           group by term score n;
+         output view V;",
+        "E022",
     );
 }
 
@@ -231,7 +318,7 @@ fn builtins_are_clean_in_every_mode() {
 
 #[test]
 fn strict_build_runs_a_randomized_corpus() {
-    // strict mode is the default; all five builtins must build and then
+    // strict mode is the default; all seven builtins must build and then
     // survive the same randomized-document treatment the differential
     // suite applies (seed overridable via BOOST_DIFF_SEED)
     let seed = std::env::var("BOOST_DIFF_SEED")

@@ -1,4 +1,4 @@
-//! Golden-view snapshot tests: every bundled query (T1–T5) over the
+//! Golden-view snapshot tests: every bundled query (T1–T7) over the
 //! small hand-written corpus in `tests/golden/corpus.txt`, rendered in a
 //! stable line format and compared against committed `tests/golden/
 //! <query>.golden` snapshots. A view-shape regression (different spans,
@@ -145,6 +145,19 @@ fn golden_t4() {
 #[test]
 fn golden_t5() {
     check_golden("t5");
+}
+
+#[test]
+fn golden_t6() {
+    // per-document run_doc treats each document as a corpus of one, so
+    // the aggregate views (term, n, docs, score) are still deterministic
+    // per-doc rows — pinnable exactly like the extraction queries
+    check_golden("t6");
+}
+
+#[test]
+fn golden_t7() {
+    check_golden("t7");
 }
 
 #[test]
